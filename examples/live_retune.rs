@@ -1,0 +1,168 @@
+//! END-TO-END DRIVER (DESIGN.md experiment E2E): a live slabforge
+//! server on loopback TCP, a real client driving the paper's Table-1
+//! log-normal workload through the text protocol, the size collector
+//! learning online, the optimizer running through the **AOT XLA
+//! artifacts over PJRT** (falling back to the rust backend when
+//! `artifacts/` is missing), and a live slab reconfiguration — with
+//! throughput and latency measured before and after.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example live_retune
+//! ```
+
+use slabforge::client::Client;
+use slabforge::config::settings::{Algorithm, Backend, OptimizerSettings};
+use slabforge::optimizer::autotune::AutoTuner;
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::server::Server;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use slabforge::util::fmt::{human_bytes, human_count, human_pct, human_rate};
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::gen::value_len_for_total;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ITEMS: usize = 200_000;
+const GET_PROBES: usize = 20_000;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---- launch the full server stack ----------------------------------
+    let store = Arc::new(ShardedStore::with(
+        ChunkSizePolicy::default(),
+        PAGE_SIZE,
+        256 << 20,
+        true,
+        4,
+        Clock::System,
+    )?);
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+
+    let backend = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Backend::Xla
+    } else {
+        eprintln!("note: artifacts/ missing — optimizer will use the rust backend");
+        Backend::Rust
+    };
+    let tuner = AutoTuner::new(
+        store.clone(),
+        collector.clone(),
+        OptimizerSettings {
+            enabled: true,
+            min_samples: 10_000,
+            min_improvement: 0.05,
+            algorithm: Algorithm::SteepestDescent,
+            backend,
+            ..Default::default()
+        },
+        PAGE_SIZE,
+    )
+    .map_err(|e| format!("autotuner: {e}"))?;
+
+    let handle = Server::with_control(store.clone(), tuner.clone()).start("127.0.0.1:0")?;
+    let addr = handle.addr();
+    println!("server on {addr}, optimizer backend: {backend:?}");
+
+    // ---- phase 1: drive the paper's T1 workload over TCP ---------------
+    let mut c = Client::connect(addr)?;
+    let mut rng = Pcg64::new(2020);
+    let t_load = Instant::now();
+    for i in 0..ITEMS {
+        let total = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000);
+        let vlen = value_len_for_total(total, true).unwrap();
+        c.set_noreply(&format!("k{i:08}"), &vec![b'x'; vlen], 0, 0)?;
+    }
+    c.version()?; // drain the pipeline
+    let load_elapsed = t_load.elapsed();
+    println!(
+        "loaded {} items in {:.2}s ({})",
+        human_count(ITEMS as u64),
+        load_elapsed.as_secs_f64(),
+        human_rate(ITEMS as f64 / load_elapsed.as_secs_f64()),
+    );
+
+    let (thr_before, lat_before) = measure_gets(&mut c, GET_PROBES, 11)?;
+    let stats_before = c.stats(None)?;
+    let waste_before: u64 = stats_before["bytes_wasted"].parse()?;
+    let bytes: u64 = stats_before["bytes"].parse()?;
+    println!(
+        "before retune: waste {} of {} stored ({}), GET {} p50/p99 {:.0}/{:.0} µs",
+        human_bytes(waste_before as f64),
+        human_bytes(bytes as f64),
+        human_pct(waste_before as f64 / (waste_before + bytes) as f64),
+        human_rate(thr_before),
+        lat_before.0,
+        lat_before.1,
+    );
+
+    // ---- phase 2: learned retune via the control plane ------------------
+    let t_opt = Instant::now();
+    let msg = c.slabs_optimize()?;
+    println!("slabs optimize -> {msg} ({:.2}s)", t_opt.elapsed().as_secs_f64());
+    assert!(msg.starts_with("APPLIED"), "expected retune to apply");
+
+    // ---- phase 3: verify live behaviour after migration -----------------
+    let (thr_after, lat_after) = measure_gets(&mut c, GET_PROBES, 12)?;
+    let stats_after = c.stats(None)?;
+    let waste_after: u64 = stats_after["bytes_wasted"].parse()?;
+    println!(
+        "after retune:  waste {} ({} recovered), GET {} p50/p99 {:.0}/{:.0} µs",
+        human_bytes(waste_after as f64),
+        human_pct(1.0 - waste_after as f64 / waste_before as f64),
+        human_rate(thr_after),
+        lat_after.0,
+        lat_after.1,
+    );
+    println!(
+        "slab classes now: {:?}",
+        store.chunk_sizes().iter().take(24).collect::<Vec<_>>()
+    );
+
+    // hard checks (this example doubles as an end-to-end test)
+    assert!(waste_after < waste_before / 2, "expected ≥50 % waste recovery");
+    assert!(
+        thr_after > thr_before * 0.5,
+        "throughput must not collapse after migration"
+    );
+    let v = c.get("k00000000")?.expect("first key survives");
+    assert_eq!(v.value[0], b'x');
+    assert!(c.get(&format!("k{:08}", ITEMS - 1))?.is_some());
+    println!("OK: waste halved, data intact, server responsive.");
+
+    handle.shutdown();
+    Ok(())
+}
+
+/// Random-key GET storm; returns (ops/s, (p50 µs, p99 µs)).
+fn measure_gets(
+    c: &mut Client,
+    n: usize,
+    seed: u64,
+) -> Result<(f64, (f64, f64)), Box<dyn std::error::Error>> {
+    let mut rng = Pcg64::new(seed);
+    let mut lat = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let key = format!("k{:08}", rng.gen_range(ITEMS as u64));
+        let t = Instant::now();
+        let _ = c.get(&key)?;
+        lat.push(t.elapsed());
+    }
+    let total = t0.elapsed();
+    lat.sort_unstable();
+    let pct = |p: f64| lat[((n as f64 * p) as usize).min(n - 1)];
+    Ok((
+        n as f64 / total.as_secs_f64(),
+        (
+            pct(0.50).as_secs_f64() * 1e6,
+            pct(0.99).as_secs_f64() * 1e6,
+        ),
+    ))
+}
+
+// silence the unused warning when Duration isn't referenced on some paths
+#[allow(dead_code)]
+const _: Option<Duration> = None;

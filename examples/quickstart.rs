@@ -1,0 +1,93 @@
+//! Quickstart: embed a slabforge store, watch it waste memory on
+//! skewed traffic, learn better slab classes, and apply them live.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend};
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use slabforge::util::fmt::{human_bytes, human_pct};
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::gen::value_len_for_total;
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. a cache with memcached's default slab classes (96 B × 1.25ⁿ)
+    let store = Arc::new(ShardedStore::with(
+        ChunkSizePolicy::default(),
+        PAGE_SIZE,
+        64 << 20, // 64 MiB
+        true,
+        4,
+        Clock::System,
+    )?);
+
+    // 2. hook up the size collector (the "learning" input)
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+
+    // 3. drive log-normal traffic, like the paper's Table 1 (μ = 518 B)
+    let mut rng = Pcg64::new(42);
+    for i in 0..50_000u32 {
+        let total = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000);
+        let vlen = value_len_for_total(total, true).unwrap();
+        store.set(format!("user:{i}").as_bytes(), &vec![b'x'; vlen], 0, 0)?;
+    }
+
+    let before = store.slab_stats();
+    println!(
+        "before: {} requested, {} allocated, {} holes ({})",
+        human_bytes(before.requested_bytes as f64),
+        human_bytes(before.allocated_bytes as f64),
+        human_bytes(before.hole_bytes as f64),
+        human_pct(before.hole_fraction()),
+    );
+
+    // 4. learn a better configuration from the observed sizes
+    let hist = collector.snapshot();
+    let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+    let report = optimize(
+        &backend,
+        &hist,
+        &store.chunk_sizes(),
+        &OptimizerParams {
+            algorithm: Algorithm::SteepestDescent,
+            ..Default::default()
+        },
+    );
+    println!(
+        "learned: {:?}  (predicted recovery {})",
+        report.new_span,
+        human_pct(report.recovery()),
+    );
+
+    // 5. apply it live — items migrate, keys stay readable
+    let sizes: Vec<usize> = report.new_config.iter().map(|&c| c as usize).collect();
+    store.reconfigure(ChunkSizePolicy::Explicit(sizes))?;
+
+    let after = store.slab_stats();
+    println!(
+        "after:  {} requested, {} allocated, {} holes ({})",
+        human_bytes(after.requested_bytes as f64),
+        human_bytes(after.allocated_bytes as f64),
+        human_bytes(after.hole_bytes as f64),
+        human_pct(after.hole_fraction()),
+    );
+    println!(
+        "recovered {} of wasted memory",
+        human_pct(1.0 - after.hole_bytes as f64 / before.hole_bytes as f64),
+    );
+
+    // data is intact
+    assert!(store.get(b"user:0").is_some());
+    assert!(store.get(b"user:49999").is_some());
+    println!("all keys still readable — done.");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Regenerate the paper's full evaluation: Tables 1–5 and the data
+//! behind Figures 1–10 (written to `results/`).
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper              # 200k items/table
+//! cargo run --release --example reproduce_paper -- --items 1000000  # paper scale
+//! cargo run --release --example reproduce_paper -- --algorithm paper # Algorithm 1 verbatim
+//! ```
+
+use slabforge::benchkit::paper::{
+    experiment_histogram, render_table, run_experiment_with, write_figure_csvs,
+};
+use slabforge::benchkit::CsvWriter;
+use slabforge::config::cli::Args;
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::RustBackend;
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::workload::PAPER_EXPERIMENTS;
+use std::path::Path;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let items: usize = args.flag_or("items", 200_000)?;
+    let seed: u64 = args.flag_or("seed", 2020)?;
+    let algorithm = match args.flag("algorithm") {
+        Some(a) => Algorithm::parse(a).ok_or(format!("unknown algorithm '{a}'"))?,
+        None => Algorithm::SteepestDescent,
+    };
+    let out_dir = Path::new("results");
+
+    println!("# Reproducing Jhabakh Jai & Das (2020), {items} items/table, {algorithm:?}\n");
+    let mut summary = CsvWriter::new(
+        out_dir.join("tables.csv"),
+        "table,items,old_waste,new_waste,recovery_pct,paper_recovery_pct,old_span,new_span",
+    );
+
+    for e in &PAPER_EXPERIMENTS {
+        let hist = experiment_histogram(e, items, seed + e.table as u64);
+        let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+        let row = run_experiment_with(e, &hist, &backend, algorithm, seed);
+        println!("{}", render_table(&row));
+
+        let (old_fig, new_fig) = write_figure_csvs(e, &hist, &row, out_dir)?;
+        println!(
+            "  figures: {} {}\n",
+            old_fig.display(),
+            new_fig.display()
+        );
+        summary.row(&[
+            row.table.to_string(),
+            row.items.to_string(),
+            row.old_waste.to_string(),
+            row.new_waste.to_string(),
+            format!("{:.2}", row.recovery * 100.0),
+            format!("{:.2}", row.paper_recovery * 100.0),
+            format!("{:?}", row.old_span).replace(',', ";"),
+            format!("{:?}", row.new_span).replace(',', ";"),
+        ]);
+    }
+    let path = summary.finish()?;
+    println!("summary: {}", path.display());
+    Ok(())
+}

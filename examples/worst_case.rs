@@ -1,0 +1,97 @@
+//! §6.1 of the paper: best- and worst-case scenarios for the learned
+//! slab classes.
+//!
+//! * Best case — fewer distinct sizes than classes: the algorithm
+//!   reaches 100 % storage efficiency (zero holes).
+//! * Worst case 1 — item sizes coincide exactly with the default
+//!   geometric chunk sizes: the default config is already optimal.
+//! * Worst case 2 — frequency ∝ 1.25⁻ⁿ over the default chain: again
+//!   nothing to recover.
+//!
+//! ```bash
+//! cargo run --release --example worst_case
+//! ```
+
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend};
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::slab::geometry::memcached_default_sizes;
+use slabforge::util::histogram::SizeHistogram;
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::spec::SizeDistribution;
+
+fn optimize_case(name: &str, hist: &SizeHistogram) -> (u64, u64) {
+    let backend = RustBackend::new(WasteMap::from_histogram(hist));
+    let report = optimize(
+        &backend,
+        hist,
+        &memcached_default_sizes(),
+        &OptimizerParams {
+            algorithm: Algorithm::SteepestDescent,
+            ..Default::default()
+        },
+    );
+    println!(
+        "{name:<34} old waste {:>12}  new waste {:>12}  recovered {:>7.2}%",
+        report.old_waste,
+        report.new_waste,
+        report.recovery() * 100.0
+    );
+    (report.old_waste, report.new_waste)
+}
+
+fn main() {
+    let mut rng = Pcg64::new(61);
+
+    // ---- best case: 3 distinct sizes, 6+ classes ------------------------
+    let best = SizeDistribution::Discrete {
+        sizes: vec![(333, 1.0), (777, 2.0), (1234, 0.5)],
+    };
+    let mut h = SizeHistogram::new(16384);
+    for _ in 0..100_000 {
+        h.record(best.sample(&mut rng, 70, 16384));
+    }
+    let (_, new) = optimize_case("best case (3 distinct sizes)", &h);
+    assert_eq!(new, 0, "paper §6.1: 100% storage efficiency");
+
+    // ---- worst case 1: sizes == default chunk sizes ----------------------
+    let chain: Vec<usize> = memcached_default_sizes()
+        .into_iter()
+        .filter(|&c| (304..=944).contains(&c))
+        .collect();
+    let exact = SizeDistribution::Discrete {
+        sizes: chain.iter().map(|&c| (c, 1.0)).collect(),
+    };
+    let mut h = SizeHistogram::new(16384);
+    for _ in 0..100_000 {
+        h.record(exact.sample(&mut rng, 70, 16384));
+    }
+    let (old, new) = optimize_case("worst case (sizes = default chain)", &h);
+    assert_eq!(old, 0, "exact-fit sizes waste nothing under the default");
+    assert_eq!(new, 0);
+
+    // ---- worst case 2: geometric 1.25^-n decay over the chain ------------
+    let decay = SizeDistribution::GeomDecay {
+        chunk_sizes: chain.clone(),
+    };
+    let mut h = SizeHistogram::new(16384);
+    for _ in 0..100_000 {
+        h.record(decay.sample(&mut rng, 70, 16384));
+    }
+    let (old, new) = optimize_case("worst case (1.25^-n decay)", &h);
+    assert_eq!(old, new, "default already optimal: nothing recovered");
+
+    // ---- contrast: the paper's T1 shows what a learnable pattern gives ---
+    let t1 = SizeDistribution::LogNormal {
+        median: 518.0,
+        sigma_ln: 0.126,
+    };
+    let mut h = SizeHistogram::new(16384);
+    for _ in 0..100_000 {
+        h.record(t1.sample(&mut rng, 70, 16384));
+    }
+    let (old, new) = optimize_case("contrast: T1 log-normal", &h);
+    assert!(new < old / 2);
+
+    println!("\nall §6.1 scenario assertions hold.");
+}

@@ -1,0 +1,209 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts for rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (in ``artifacts/``):
+
+  waste_eval.hlo.txt     batched_waste(hist[S], sizes[S], configs[B,K])
+  hill_step.hlo.txt      hill_step(hist[S], sizes[S], config[K], deltas[B,K])
+  fit_lognormal.hlo.txt  fit_lognormal(hist[S], sizes[S])
+  manifest.json          shapes + constants the rust runtime validates
+                         against at load time
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+``make artifacts`` wraps this and is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.waste import B_CANDIDATES, K_CLASSES, S_BUCKETS, SENTINEL  # noqa: E402
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+ENTRY_POINTS = {
+    "waste_eval": {
+        "fn": model.batched_waste,
+        "args": [
+            ("hist", (S_BUCKETS,)),
+            ("sizes", (S_BUCKETS,)),
+            ("configs", (B_CANDIDATES, K_CLASSES)),
+        ],
+        "outputs": [("waste", (B_CANDIDATES,))],
+    },
+    "hill_step": {
+        "fn": model.hill_step,
+        "args": [
+            ("hist", (S_BUCKETS,)),
+            ("sizes", (S_BUCKETS,)),
+            ("config", (K_CLASSES,)),
+            ("deltas", (B_CANDIDATES, K_CLASSES)),
+        ],
+        "outputs": [
+            ("best_config", (K_CLASSES,)),
+            ("best_waste", ()),
+            ("wastes", (B_CANDIDATES,)),
+        ],
+    },
+    "fit_lognormal": {
+        "fn": model.fit_lognormal,
+        "args": [("hist", (S_BUCKETS,)), ("sizes", (S_BUCKETS,))],
+        "outputs": [("median", ()), ("sigma_ln", ()), ("n", ())],
+    },
+}
+
+
+def lower_entry(name: str) -> str:
+    ep = ENTRY_POINTS[name]
+    args = [spec(*shape) for _, shape in ep["args"]]
+    lowered = jax.jit(ep["fn"]).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def testvector_inputs():
+    """Deterministic, formula-defined inputs for cross-language checks.
+
+    The rust integration tests regenerate these EXACT arrays from the
+    same formulas (no RNG, no serialization of 16k-element inputs) and
+    assert the artifact outputs match ``testvectors.json`` bit-for-bit.
+    Keep in sync with rust/tests/integration_optimizer.rs.
+    """
+    import numpy as np
+
+    s, b, k = S_BUCKETS, B_CANDIDATES, K_CLASSES
+    i = np.arange(s, dtype=np.uint64)
+    hist = ((i * np.uint64(2654435761)) >> np.uint64(7)) % np.uint64(97)
+    hist = hist.astype(np.float64)
+    sizes = np.arange(1.0, s + 1.0)
+    configs = np.full((b, k), SENTINEL)
+    for col in range(6):
+        configs[:, col] = 100.0 + 13.0 * np.arange(b) + 150.0 * col
+    config = np.full(k, SENTINEL)
+    config[:6] = [304.0, 384.0, 480.0, 600.0, 752.0, 944.0]
+    deltas = np.zeros((b, k))
+    for c in range(6):
+        deltas[2 * c, c] = 8.0
+        deltas[2 * c + 1, c] = -8.0
+    return hist, sizes, configs, config, deltas
+
+
+def emit_test_vectors(out_dir: str) -> None:
+    import numpy as np
+
+    hist, sizes, configs, config, deltas = testvector_inputs()
+    (waste,) = model.batched_waste(hist, sizes, configs)
+    best_cfg, best_w, wastes = model.hill_step(hist, sizes, config, deltas)
+    med, sig, n = model.fit_lognormal(hist, sizes)
+    vectors = {
+        "waste_eval": {"waste": np.asarray(waste).tolist()},
+        "hill_step": {
+            "best_config": np.asarray(best_cfg).tolist(),
+            "best_waste": float(best_w),
+            "wastes": np.asarray(wastes).tolist(),
+        },
+        "fit_lognormal": {
+            "median": float(med),
+            "sigma_ln": float(sig),
+            "n": float(n),
+        },
+    }
+    path = os.path.join(out_dir, "testvectors.json")
+    with open(path, "w") as f:
+        json.dump(vectors, f)
+        f.write("\n")
+    print(f"wrote {path}", file=sys.stderr)
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make artifacts` can no-op."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                p = os.path.join(root, f)
+                h.update(p.encode())
+                with open(p, "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of entry points to build"
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    names = ns.only or list(ENTRY_POINTS)
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "f64",
+        "fingerprint": input_fingerprint(),
+        "constants": {
+            "s_buckets": S_BUCKETS,
+            "b_candidates": B_CANDIDATES,
+            "k_classes": K_CLASSES,
+            "sentinel": SENTINEL,
+        },
+        "entry_points": {},
+    }
+    for name in names:
+        text = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(ns.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        ep = ENTRY_POINTS[name]
+        manifest["entry_points"][name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s)} for n, s in ep["args"]],
+            "outputs": [{"name": n, "shape": list(s)} for n, s in ep["outputs"]],
+        }
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {ns.out_dir}/manifest.json", file=sys.stderr)
+
+    if not ns.only:
+        emit_test_vectors(ns.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

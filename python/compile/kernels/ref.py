@@ -1,0 +1,62 @@
+"""Correctness oracles for the L1 waste kernel.
+
+Three references:
+
+* ``waste_ref_jnp`` — pure jax.numpy, vectorized; the shape/dtype twin of
+  the Pallas kernel. Used to validate the kernel under hypothesis sweeps.
+* ``waste_ref_numpy`` — host-side numpy twin for quick checks.
+* ``waste_exact`` — plain-python integer arithmetic; the ground truth
+  both the kernel and the rust evaluator must match *bit-exactly*
+  (every quantity is an integer < 2^53 held in f64).
+
+Semantics are defined in waste.py: each histogram bucket is charged the
+smallest covering chunk, uncovered buckets are charged SENTINEL.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .waste import SENTINEL
+
+
+def waste_ref_jnp(hist, sizes, configs):
+    """f64[S], f64[S], f64[B, K] -> f64[B], pure jnp (no pallas)."""
+    # [B, K, S]: chunk candidates where they cover the bucket, else SENTINEL.
+    covers = configs[:, :, None] >= sizes[None, None, :]
+    cand = jnp.where(covers, configs[:, :, None], SENTINEL)
+    chunk = jnp.min(cand, axis=1)  # [B, S]
+    return jnp.sum((chunk - sizes[None, :]) * hist[None, :], axis=1)
+
+
+def waste_ref_numpy(hist, sizes, configs):
+    """Same as waste_ref_jnp but numpy, for host-side checks."""
+    hist = np.asarray(hist, dtype=np.float64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    configs = np.asarray(configs, dtype=np.float64)
+    covers = configs[:, :, None] >= sizes[None, None, :]
+    cand = np.where(covers, configs[:, :, None], SENTINEL)
+    chunk = cand.min(axis=1)
+    return ((chunk - sizes[None, :]) * hist[None, :]).sum(axis=1)
+
+
+def waste_exact(
+    hist: Sequence[int], sizes: Sequence[int], config: Sequence[int]
+) -> int:
+    """Ground-truth waste for ONE configuration, arbitrary-precision ints."""
+    sentinel = int(SENTINEL)
+    total = 0
+    for h, s in zip(hist, sizes):
+        if h == 0:
+            continue
+        chunk = min((c for c in config if c >= s), default=sentinel)
+        total += int(h) * (chunk - int(s))
+    return total
+
+
+def waste_exact_batch(hist, sizes, configs) -> list:
+    """Ground truth for a batch of configurations."""
+    return [waste_exact(hist, sizes, row) for row in configs]

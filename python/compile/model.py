@@ -1,0 +1,99 @@
+"""L2 — JAX compute graphs for the slab-class optimizer.
+
+Three entry points, all AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust coordinator via PJRT (python never runs on the
+request path):
+
+* ``batched_waste(hist, sizes, configs) -> (waste,)``
+  Score B candidate configurations in one call (L1 Pallas kernel).
+
+* ``hill_step(hist, sizes, config, deltas) -> (best_config, best_waste, wastes)``
+  One steepest-descent step of the paper's hill climber, fused in-graph:
+  expand the current configuration into its neighbor set
+  ``config + deltas`` (the rust side supplies the move matrix — rows of
+  ±step·e_k, plus a zero row so "stay" is always a candidate), score all
+  neighbors through the kernel, and return the argmin. One PJRT call per
+  optimization step; no per-neighbor host round-trips.
+
+* ``fit_lognormal(hist, sizes) -> (mu, sigma_ln, n)``
+  Method-of-moments fit of the traffic pattern in log space — the
+  "learning" half of the paper's title. Returns the median (= e^m) and
+  the log-space standard deviation; the coordinator uses these to decide
+  when the learned pattern has drifted enough to re-run the optimizer.
+
+All f64 (see waste.py — integer quantities < 2^53 are exact, so rust,
+kernel and oracle agree bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.waste import waste_eval, waste_eval_prefix
+
+jax.config.update("jax_enable_x64", True)
+
+
+def batched_waste(hist, sizes, configs):
+    """f64[S], f64[S], f64[B,K] -> (f64[B],).
+
+    Uses the prefix-sum kernel (§Perf: ~400× faster than the dense
+    assignment kernel at identical — bit-exact — results). Requires
+    ascending candidate rows and uniform-width buckets; both are
+    guaranteed by the rust coordinator (`XlaWasteBackend` sorts rows,
+    `SizeHistogram::bucketize` emits uniform buckets). The dense kernel
+    (`waste_eval`) remains the order-independent reference, validated
+    against this one in python/tests/test_kernel.py.
+    """
+    # jnp.sort makes unsorted rows legal at negligible cost (B·K log K),
+    # preserving the dense kernel's order-independent semantics.
+    return (waste_eval_prefix(hist, sizes, jnp.sort(configs, axis=1)),)
+
+
+def batched_waste_dense(hist, sizes, configs):
+    """Reference entry point on the dense O(B·K·S) kernel."""
+    return (waste_eval(hist, sizes, configs),)
+
+
+def hill_step(hist, sizes, config, deltas):
+    """One fused steepest-descent step.
+
+    Args:
+      hist:   f64[S]    bucket counts
+      sizes:  f64[S]    bucket representative sizes
+      config: f64[K]    current chunk sizes (SENTINEL-padded)
+      deltas: f64[B,K]  move matrix; row b turns the current config into
+                        neighbor ``config + deltas[b]``. The rust side
+                        zeroes rows beyond the active neighbor count and
+                        always includes a zero row, so the step never
+                        regresses.
+
+    Returns:
+      (best_config f64[K], best_waste f64[], wastes f64[B])
+    """
+    candidates = jnp.sort(config[None, :] + deltas, axis=1)  # [B, K]
+    wastes = waste_eval_prefix(hist, sizes, candidates)  # [B]
+    best = jnp.argmin(wastes)
+    return candidates[best], wastes[best], wastes
+
+
+def fit_lognormal(hist, sizes):
+    """Method-of-moments log-normal fit over the histogram.
+
+    Returns (median = e^m, sigma_ln, n_items). Zero-count histograms
+    return (0, 0, 0) rather than NaN so the rust side can branch on n.
+    """
+    n = jnp.sum(hist)
+    safe_n = jnp.maximum(n, 1.0)
+    log_s = jnp.log(jnp.maximum(sizes, 1.0))
+    mean_ln = jnp.sum(hist * log_s) / safe_n
+    var_ln = jnp.sum(hist * (log_s - mean_ln) ** 2) / safe_n
+    sigma_ln = jnp.sqrt(jnp.maximum(var_ln, 0.0))
+    median = jnp.exp(mean_ln)
+    has_data = n > 0
+    return (
+        jnp.where(has_data, median, 0.0),
+        jnp.where(has_data, sigma_ln, 0.0),
+        n,
+    )

@@ -1,0 +1,114 @@
+"""AOT interchange path validation (python half).
+
+The full executor of the HLO-text artifacts is the rust runtime
+(xla_extension 0.5.1 — modern jaxlib dropped HLO-proto compilation from
+its python client), so the cross-language *numeric* check lives in
+rust/tests/integration_optimizer.rs against ``testvectors.json``.
+
+Here we validate everything checkable from python:
+  * the emitted HLO text re-parses (the format rust consumes),
+  * its entry computation has the manifest's parameter/result shapes,
+  * the StableHLO module it was printed from executes on the PJRT CPU
+    client with numerics identical to the direct jax call,
+  * the aot CLI writes a coherent manifest + test vectors.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+import jax
+
+from compile import aot, model
+from compile.kernels.waste import B_CANDIDATES, K_CLASSES, S_BUCKETS, SENTINEL
+
+
+def lowered_for(name):
+    ep = aot.ENTRY_POINTS[name]
+    args = [aot.spec(*shape) for _, shape in ep["args"]]
+    return jax.jit(ep["fn"]).lower(*args)
+
+
+def execute_stablehlo(lowered, args):
+    """Compile the StableHLO (the module HLO text is printed from)."""
+    client = xc.make_cpu_client()
+    exe = client.compile_and_load(
+        str(lowered.compiler_ir("stablehlo")), client.local_devices()
+    )
+    bufs = [client.buffer_from_pyval(np.ascontiguousarray(a)) for a in args]
+    return [np.asarray(o) for o in exe.execute(bufs)]
+
+
+@pytest.mark.parametrize("name", list(aot.ENTRY_POINTS))
+def test_hlo_text_reparses_with_entry_shapes(name):
+    text = aot.lower_entry(name)
+    module = xc._xla.hlo_module_from_text(text)  # what rust's parser does
+    rebuilt = module.to_string()
+    assert "ENTRY" in rebuilt
+    # every input shape appears as an f64 parameter in the text
+    for _, shape in aot.ENTRY_POINTS[name]["args"]:
+        dims = ",".join(str(d) for d in shape)
+        assert f"f64[{dims}]" in text, f"missing f64[{dims}] param in {name}"
+
+
+@pytest.mark.slow
+def test_waste_eval_stablehlo_matches_jax():
+    hist, sizes, configs, _, _ = aot.testvector_inputs()
+    got = execute_stablehlo(lowered_for("waste_eval"), [hist, sizes, configs])
+    (want,) = model.batched_waste(hist, sizes, configs)
+    np.testing.assert_array_equal(got[0], np.asarray(want))
+
+
+@pytest.mark.slow
+def test_hill_step_stablehlo_matches_jax():
+    hist, sizes, _, config, deltas = aot.testvector_inputs()
+    got = execute_stablehlo(lowered_for("hill_step"), [hist, sizes, config, deltas])
+    want = model.hill_step(hist, sizes, config, deltas)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, np.asarray(w))
+
+
+def test_fit_lognormal_stablehlo_matches_jax():
+    hist, sizes, _, _, _ = aot.testvector_inputs()
+    got = execute_stablehlo(lowered_for("fit_lognormal"), [hist, sizes])
+    want = model.fit_lognormal(hist, sizes)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, np.asarray(w), rtol=1e-12)
+
+
+def test_testvectors_self_consistent():
+    """hill_step vectors must satisfy their own argmin relation."""
+    hist, sizes, configs, config, deltas = aot.testvector_inputs()
+    (waste,) = model.batched_waste(hist, sizes, configs)
+    best_cfg, best_w, wastes = model.hill_step(hist, sizes, config, deltas)
+    wastes = np.asarray(wastes)
+    assert float(best_w) == wastes.min()
+    i = int(np.argmin(wastes))
+    np.testing.assert_array_equal(np.asarray(best_cfg), config + deltas[i])
+    assert np.asarray(waste).shape == (B_CANDIDATES,)
+    assert config.shape == (K_CLASSES,)
+    assert hist.shape == (S_BUCKETS,)
+    assert float(np.asarray(waste).min()) >= 0.0
+
+
+def test_manifest_and_vectors_written(tmp_path):
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--only", "fit_lognormal"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["constants"]["s_buckets"] == S_BUCKETS
+    assert manifest["constants"]["sentinel"] == SENTINEL
+    assert manifest["entry_points"]["fit_lognormal"]["file"] == "fit_lognormal.hlo.txt"
+    assert (out / "fit_lognormal.hlo.txt").exists()

@@ -1,0 +1,278 @@
+"""L1 kernel vs oracles — the CORE correctness signal.
+
+The Pallas kernel, the jnp reference, the numpy reference and the
+arbitrary-precision integer oracle must agree *bit-exactly* (all
+quantities are integers < 2^53 carried in f64; see kernels/waste.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    waste_exact,
+    waste_exact_batch,
+    waste_ref_jnp,
+    waste_ref_numpy,
+)
+from compile.kernels.waste import SENTINEL, waste_eval
+
+RNG = np.random.default_rng
+
+
+def as_f64(*arrays):
+    return tuple(np.asarray(a, dtype=np.float64) for a in arrays)
+
+
+def run_all(hist, sizes, configs, s_tile, b_tile):
+    """Run kernel + both vector references; return (kernel, jnp, numpy)."""
+    hist, sizes, configs = as_f64(hist, sizes, configs)
+    k = np.asarray(waste_eval(hist, sizes, configs, s_tile=s_tile, b_tile=b_tile))
+    j = np.asarray(waste_ref_jnp(hist, sizes, configs))
+    n = waste_ref_numpy(hist, sizes, configs)
+    return k, j, n
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+def test_single_bucket_single_class():
+    # one item of size 100 in a 128-byte chunk: hole = 28
+    k, j, n = run_all([1.0], [100.0], [[128.0]], s_tile=1, b_tile=1)
+    assert k.tolist() == [28.0]
+    assert j.tolist() == [28.0]
+    assert n.tolist() == [28.0]
+
+
+def test_exact_fit_has_zero_waste():
+    k, _, _ = run_all([7.0], [128.0], [[128.0]], s_tile=1, b_tile=1)
+    assert k.tolist() == [0.0]
+
+
+def test_uncovered_bucket_charged_sentinel():
+    # size 200 > only chunk 128 -> charged SENTINEL - 200
+    k, j, n = run_all([3.0], [200.0], [[128.0]], s_tile=1, b_tile=1)
+    expected = 3.0 * (SENTINEL - 200.0)
+    assert k.tolist() == [expected] == j.tolist() == n.tolist()
+
+
+def test_smallest_covering_chunk_wins_regardless_of_order():
+    # chunks unsorted + duplicated: assignment must still pick 256 for s=200
+    cfg = [[1024.0, 256.0, 256.0, 512.0]]
+    k, j, n = run_all([1.0], [200.0], cfg, s_tile=1, b_tile=1)
+    assert k.tolist() == [56.0] == j.tolist() == n.tolist()
+
+
+def test_memcached_default_geometry_t1_shape():
+    # Paper Table 1 old config over a byte-granular histogram slice:
+    # every size in (480, 600] must land in the 600 chunk, etc.
+    sizes = np.arange(1.0, 1025.0)
+    hist = np.ones_like(sizes)
+    cfg = np.array([[304.0, 384.0, 480.0, 600.0, 752.0, 944.0]])
+    k, j, n = run_all(hist, sizes, cfg, s_tile=256, b_tile=1)
+    exact = waste_exact(hist.astype(int), sizes.astype(int), [304, 384, 480, 600, 752, 944])
+    assert k.tolist() == [float(exact)]
+    assert j.tolist() == [float(exact)]
+
+
+def test_zero_histogram_zero_waste():
+    sizes = np.arange(1.0, 129.0)
+    hist = np.zeros_like(sizes)
+    cfg = np.array([[64.0, 128.0]])
+    k, _, _ = run_all(hist, sizes, cfg, s_tile=32, b_tile=1)
+    assert k.tolist() == [0.0]
+
+
+def test_batch_rows_independent():
+    sizes = np.arange(1.0, 65.0)
+    hist = RNG(0).integers(0, 50, 64).astype(np.float64)
+    cfgs = np.array([[16.0, 64.0], [32.0, 64.0], [64.0, SENTINEL], [48.0, 64.0]])
+    k, j, n = run_all(hist, sizes, cfgs, s_tile=16, b_tile=2)
+    # each row equals its own single-row evaluation
+    for i in range(4):
+        ki, _, _ = run_all(hist, sizes, cfgs[i : i + 1], s_tile=16, b_tile=1)
+        assert k[i] == ki[0]
+    assert k.tolist() == j.tolist() == n.tolist()
+
+
+def test_sentinel_padding_is_inert():
+    """Padding a config with SENTINEL slots never changes its waste."""
+    sizes = np.arange(1.0, 257.0)
+    hist = RNG(1).integers(0, 100, 256).astype(np.float64)
+    base = np.array([[96.0, 120.0, 152.0, 192.0, 240.0, 304.0]])
+    padded = np.concatenate([base, np.full((1, 10), SENTINEL)], axis=1)
+    k1, _, _ = run_all(hist, sizes, base, s_tile=64, b_tile=1)
+    k2, _, _ = run_all(hist, sizes, padded, s_tile=64, b_tile=1)
+    assert k1.tolist() == k2.tolist()
+
+
+def test_tiling_invariance():
+    """Waste must not depend on the tile decomposition."""
+    sizes = np.arange(1.0, 513.0)
+    hist = RNG(2).integers(0, 1000, 512).astype(np.float64)
+    cfgs = RNG(3).integers(1, 600, (8, 5)).astype(np.float64)
+    outs = [
+        run_all(hist, sizes, cfgs, s_tile=st_, b_tile=bt_)[0]
+        for st_, bt_ in [(512, 8), (256, 4), (128, 2), (64, 8), (512, 1)]
+    ]
+    for o in outs[1:]:
+        assert o.tolist() == outs[0].tolist()
+
+
+def test_aot_default_shapes_smoke():
+    """The exact S=16384, B=256, K=64 shapes the artifact is built with."""
+    from compile.kernels.waste import B_CANDIDATES, K_CLASSES, S_BUCKETS
+
+    rng = RNG(4)
+    sizes = np.arange(1.0, S_BUCKETS + 1.0)
+    hist = np.zeros(S_BUCKETS)
+    idx = rng.integers(200, 1200, 5000)
+    np.add.at(hist, idx, 1.0)
+    cfgs = np.full((B_CANDIDATES, K_CLASSES), SENTINEL)
+    cfgs[:, :6] = np.sort(rng.integers(100, 2000, (B_CANDIDATES, 6))).astype(float)
+    k = np.asarray(waste_eval(*as_f64(hist, sizes, cfgs)))
+    n = waste_ref_numpy(hist, sizes, cfgs)
+    assert k.tolist() == n.tolist()
+
+
+# -------------------------------------------------- prefix-sum fast kernel
+
+
+def test_prefix_kernel_bit_identical_to_dense():
+    """§Perf variant: on uniform-width buckets and sorted rows, the
+    prefix-sum kernel must match the dense kernel bit-for-bit."""
+    from compile.kernels.waste import waste_eval_prefix
+
+    rng = RNG(10)
+    for s, width in [(256, 1.0), (512, 4.0)]:
+        sizes = np.arange(1.0, s + 1.0) * width
+        hist = rng.integers(0, 10_000, s).astype(np.float64)
+        cfgs = np.sort(
+            rng.integers(1, int(s * width * 1.3), (16, 7)).astype(np.float64), axis=1
+        )
+        dense = np.asarray(waste_eval(hist, sizes, cfgs))
+        fast = np.asarray(waste_eval_prefix(hist, sizes, cfgs))
+        assert fast.tolist() == dense.tolist(), f"s={s} width={width}"
+
+
+def test_prefix_kernel_sentinel_padding_and_tail():
+    from compile.kernels.waste import waste_eval_prefix
+
+    sizes = np.arange(1.0, 129.0)
+    hist = np.ones(128)
+    # config covers only up to 64: tail charged SENTINEL
+    cfg = np.full((1, 4), SENTINEL)
+    cfg[0, 0] = 64.0
+    fast = np.asarray(waste_eval_prefix(hist, sizes, cfg))
+    dense = np.asarray(waste_eval(hist, sizes, cfg))
+    assert fast.tolist() == dense.tolist()
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_prefix_kernel_matches_exact_oracle_uniform(data):
+    """Hypothesis sweep for the fast kernel on its contract domain
+    (uniform buckets, ascending rows)."""
+    from compile.kernels.waste import waste_eval_prefix
+
+    s = data.draw(st.sampled_from([32, 64, 128]))
+    width = data.draw(st.sampled_from([1, 2, 8]))
+    b = data.draw(st.sampled_from([1, 2, 4]))
+    k = data.draw(st.integers(1, 8))
+    size_vals = [(i + 1) * width for i in range(s)]
+    hist_vals = data.draw(st.lists(count_strategy, min_size=s, max_size=s))
+    cfgs = [
+        sorted(
+            data.draw(
+                st.lists(st.integers(1, s * width * 2), min_size=k, max_size=k)
+            )
+        )
+        for _ in range(b)
+    ]
+    hist, sizes, configs = as_f64(hist_vals, size_vals, cfgs)
+    got = np.asarray(waste_eval_prefix(hist, sizes, configs))
+    want = waste_exact_batch(hist_vals, size_vals, cfgs)
+    assert got.tolist() == [float(w) for w in want]
+
+
+def test_batched_waste_handles_unsorted_rows():
+    """model.batched_waste sorts rows in-graph, so unsorted inputs keep
+    the dense kernel's order-independent semantics."""
+    from compile import model
+
+    sizes = np.arange(1.0, 257.0)
+    hist = RNG(11).integers(0, 50, 256).astype(np.float64)
+    unsorted = np.asarray([[300.0, 64.0, 128.0, SENTINEL]])
+    (fast,) = model.batched_waste(hist, sizes, unsorted)
+    dense = np.asarray(waste_eval(hist, sizes, unsorted))
+    assert np.asarray(fast).tolist() == dense.tolist()
+
+
+# ------------------------------------------------------------- hypothesis
+
+sizes_strategy = st.integers(min_value=1, max_value=4096)
+count_strategy = st.integers(min_value=0, max_value=1_000_000)
+chunk_strategy = st.integers(min_value=1, max_value=8192)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_kernel_matches_exact_oracle(data):
+    """Random shapes / histograms / configs: kernel == integer oracle."""
+    s = data.draw(st.sampled_from([16, 32, 64, 128]), label="S")
+    b = data.draw(st.sampled_from([1, 2, 4, 8]), label="B")
+    k = data.draw(st.integers(1, 9), label="K")
+    s_tile = data.draw(st.sampled_from([t for t in (8, 16, 32, 64) if s % t == 0]))
+    b_tile = data.draw(st.sampled_from([t for t in (1, 2, 4) if b % t == 0]))
+
+    size_vals = sorted(
+        data.draw(
+            st.lists(sizes_strategy, min_size=s, max_size=s, unique=True), label="sizes"
+        )
+    )
+    hist_vals = data.draw(
+        st.lists(count_strategy, min_size=s, max_size=s), label="hist"
+    )
+    cfgs = [
+        data.draw(st.lists(chunk_strategy, min_size=k, max_size=k), label=f"cfg{i}")
+        for i in range(b)
+    ]
+
+    hist, sizes, configs = as_f64(hist_vals, size_vals, cfgs)
+    got = np.asarray(waste_eval(hist, sizes, configs, s_tile=s_tile, b_tile=b_tile))
+    want = waste_exact_batch(hist_vals, size_vals, cfgs)
+    assert got.tolist() == [float(w) for w in want]
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_monotone_adding_a_class_never_hurts(data):
+    """Invariant: adding a chunk size can only reduce (or keep) waste."""
+    s = 64
+    size_vals = sorted(
+        data.draw(st.lists(sizes_strategy, min_size=s, max_size=s, unique=True))
+    )
+    hist_vals = data.draw(st.lists(count_strategy, min_size=s, max_size=s))
+    base_cfg = data.draw(st.lists(chunk_strategy, min_size=3, max_size=3))
+    extra = data.draw(chunk_strategy)
+
+    hist, sizes, _ = as_f64(hist_vals, size_vals, [[0.0]])
+    w_base = np.asarray(
+        waste_eval(hist, sizes, np.asarray([base_cfg], dtype=np.float64), s_tile=32, b_tile=1)
+    )[0]
+    w_more = np.asarray(
+        waste_eval(
+            hist,
+            sizes,
+            np.asarray([base_cfg + [extra]], dtype=np.float64),
+            s_tile=32,
+            b_tile=1,
+        )
+    )[0]
+    assert w_more <= w_base
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

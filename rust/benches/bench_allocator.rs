@@ -1,0 +1,203 @@
+//! Allocator + store hot-path benchmarks (P3 in DESIGN.md §4):
+//! slab alloc/free, store set/get/delete, histogram collection
+//! overhead, and live reconfiguration (migration) throughput.
+//!
+//! ```bash
+//! cargo bench --bench bench_allocator
+//! ```
+
+use slabforge::benchkit::{bench, table, BenchOpts};
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::{SlabAllocator, PAGE_SIZE};
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::{Clock, KvStore};
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::gen::value_len_for_total;
+use std::sync::Arc;
+
+const N: usize = 100_000;
+
+fn keys() -> Vec<String> {
+    (0..N).map(|i| format!("k{i:08}")).collect()
+}
+
+fn sizes(seed: u64) -> Vec<usize> {
+    let mut rng = Pcg64::new(seed);
+    (0..N)
+        .map(|_| (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000))
+        .collect()
+}
+
+fn main() {
+    let keys = keys();
+    let sizes = sizes(1);
+    let values: Vec<Vec<u8>> = sizes
+        .iter()
+        .map(|&t| vec![b'x'; value_len_for_total(t, true).unwrap()])
+        .collect();
+    let mut rows = Vec::new();
+
+    // ---- raw slab allocator ---------------------------------------------
+    rows.push(bench(
+        "slab alloc+free pairs",
+        &BenchOpts {
+            warmup: 2,
+            iters: 10,
+            units_per_iter: N as f64,
+        },
+        || {
+            let mut a =
+                SlabAllocator::new(&ChunkSizePolicy::default(), PAGE_SIZE, 256 << 20).unwrap();
+            let mut handles = Vec::with_capacity(N);
+            for &s in &sizes {
+                handles.push((a.alloc(s).unwrap(), s));
+            }
+            for (h, s) in handles {
+                a.free(h, s);
+            }
+        },
+    ));
+
+    // ---- single-shard store ---------------------------------------------
+    rows.push(bench(
+        "store set (fresh)",
+        &BenchOpts {
+            warmup: 1,
+            iters: 8,
+            units_per_iter: N as f64,
+        },
+        || {
+            let mut s = KvStore::new(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                256 << 20,
+                true,
+                Clock::System,
+            )
+            .unwrap();
+            for i in 0..N {
+                s.set(keys[i].as_bytes(), &values[i], 0, 0).unwrap();
+            }
+        },
+    ));
+
+    let mut warm = KvStore::new(
+        ChunkSizePolicy::default(),
+        PAGE_SIZE,
+        256 << 20,
+        true,
+        Clock::System,
+    )
+    .unwrap();
+    for i in 0..N {
+        warm.set(keys[i].as_bytes(), &values[i], 0, 0).unwrap();
+    }
+    let mut rng = Pcg64::new(2);
+    rows.push(bench(
+        "store get (warm, random)",
+        &BenchOpts {
+            warmup: 2,
+            iters: 10,
+            units_per_iter: N as f64,
+        },
+        || {
+            for _ in 0..N {
+                let i = rng.gen_range(N as u64) as usize;
+                assert!(warm.get(keys[i].as_bytes()).is_some());
+            }
+        },
+    ));
+
+    rows.push(bench(
+        "store overwrite",
+        &BenchOpts {
+            warmup: 1,
+            iters: 8,
+            units_per_iter: N as f64,
+        },
+        || {
+            for i in 0..N {
+                warm.set(keys[i].as_bytes(), &values[i], 0, 0).unwrap();
+            }
+        },
+    ));
+
+    // ---- sharded store (the serving configuration) ----------------------
+    let sharded = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            256 << 20,
+            true,
+            4,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    rows.push(bench(
+        "sharded set 4 threads",
+        &BenchOpts {
+            warmup: 1,
+            iters: 8,
+            units_per_iter: N as f64,
+        },
+        || {
+            let threads: Vec<_> = (0..4)
+                .map(|t| {
+                    let store = sharded.clone();
+                    let keys: Vec<String> =
+                        (0..N / 4).map(|i| format!("t{t}-{i:07}")).collect();
+                    let vals: Vec<usize> = sizes[t * (N / 4)..(t + 1) * (N / 4)].to_vec();
+                    std::thread::spawn(move || {
+                        for (k, &total) in keys.iter().zip(vals.iter()) {
+                            let v = vec![b'x'; value_len_for_total(total, true).unwrap()];
+                            store.set(k.as_bytes(), &v, 0, 0).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().unwrap();
+            }
+        },
+    ));
+
+    // ---- collector overhead ---------------------------------------------
+    let collector = Arc::new(SizeCollector::default());
+    rows.push(bench(
+        "collector record",
+        &BenchOpts {
+            warmup: 2,
+            iters: 10,
+            units_per_iter: N as f64,
+        },
+        || {
+            for &s in &sizes {
+                collector.record(s);
+            }
+        },
+    ));
+
+    // ---- live reconfiguration (migration) --------------------------------
+    rows.push(bench(
+        "reconfigure 100k items",
+        &BenchOpts {
+            warmup: 1,
+            iters: 5,
+            units_per_iter: N as f64,
+        },
+        || {
+            let r = warm
+                .reconfigure(ChunkSizePolicy::Explicit(vec![
+                    464, 505, 543, 584, 636, 728, 944,
+                ]))
+                .unwrap();
+            assert_eq!(r.items_dropped, 0);
+            // flip back so each iteration does the same work
+            warm.reconfigure(ChunkSizePolicy::default()).unwrap();
+        },
+    ));
+
+    println!("{}", table("allocator / store hot paths (N=100k)", &rows));
+}

@@ -1,0 +1,62 @@
+//! Regenerates the data behind the paper's **Figures 1–10** (experiments
+//! F1–F10 in DESIGN.md §4): for each of the five workloads, the
+//! size-frequency histogram plus the old/new class-boundary verticals,
+//! written as `results/fig{1..10}.csv` (`kind` column: `hist` rows are
+//! the curve, `class` rows are the vertical lines).
+//!
+//! ```bash
+//! cargo bench --bench bench_figures            # writes results/fig*.csv
+//! ```
+
+use slabforge::benchkit::paper::{
+    experiment_histogram, run_experiment_with, write_figure_csvs,
+};
+use slabforge::config::cli::Args;
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::RustBackend;
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::workload::PAPER_EXPERIMENTS;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["bench"]).unwrap();
+    let items: usize = args.flag_or("items", 200_000).unwrap();
+    let seed: u64 = args.flag_or("seed", 2020).unwrap();
+    let out = Path::new("results");
+
+    println!("# bench_figures: Figures 1-10 data at {items} items/experiment\n");
+    for e in &PAPER_EXPERIMENTS {
+        let hist = experiment_histogram(e, items, seed + e.table as u64);
+        let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+        let row = run_experiment_with(e, &hist, &backend, Algorithm::SteepestDescent, seed);
+        let (old_fig, new_fig) = write_figure_csvs(e, &hist, &row, out).unwrap();
+        println!(
+            "fig{}/fig{}: {} histogram rows, {}->{} class lines  ({}, {})",
+            2 * e.table - 1,
+            2 * e.table,
+            hist.distinct_sizes(),
+            row.old_span.len(),
+            row.new_span.len(),
+            old_fig.display(),
+            new_fig.display(),
+        );
+        // sanity: the new boundaries crowd around the median (paper §6.4)
+        let median = hist.percentile(0.5) as f64;
+        let old_spread: f64 = row
+            .old_span
+            .iter()
+            .map(|&c| (c as f64 - median).abs())
+            .sum::<f64>()
+            / row.old_span.len() as f64;
+        let new_spread: f64 = row
+            .new_span
+            .iter()
+            .map(|&c| (c as f64 - median).abs())
+            .sum::<f64>()
+            / row.new_span.len().max(1) as f64;
+        println!(
+            "  class spread around median: {old_spread:.0} -> {new_spread:.0} bytes (tighter = learned)"
+        );
+    }
+    println!("\nplot with e.g.: python3 -c \"import csv; ...\" or any CSV plotter.");
+}

@@ -1,0 +1,142 @@
+//! Optimizer micro/meso benchmarks (P1/P2 in DESIGN.md §4):
+//! * waste-evaluation throughput, rust exact vs XLA artifact (batch 256)
+//! * fused `hill_step` artifact vs unfused batched eval
+//! * end-to-end convergence cost per algorithm (paper / steepest / DP)
+//!
+//! ```bash
+//! cargo bench --bench bench_optimizer
+//! ```
+
+use slabforge::benchkit::paper::experiment_histogram;
+use slabforge::benchkit::{bench, table, BenchOpts};
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend, WasteBackend};
+use slabforge::optimizer::waste::{WasteMap, SENTINEL};
+use slabforge::runtime::{XlaService, XlaWasteBackend};
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::PAPER_EXPERIMENTS;
+use std::path::Path;
+
+fn main() {
+    let e = &PAPER_EXPERIMENTS[0]; // T1 is the reference workload
+    let hist = experiment_histogram(e, 200_000, 1);
+    let rust = RustBackend::new(WasteMap::from_histogram(&hist));
+
+    let mut rng = Pcg64::new(5);
+    let batch: Vec<Vec<u32>> = (0..256)
+        .map(|_| {
+            let mut cfg: Vec<u32> = (0..6).map(|_| 300 + rng.gen_range(700) as u32).collect();
+            cfg.sort_unstable();
+            cfg
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+
+    // ---- waste evaluation throughput -----------------------------------
+    rows.push(bench(
+        "waste eval rust x256",
+        &BenchOpts {
+            warmup: 3,
+            iters: 30,
+            units_per_iter: 256.0,
+        },
+        || {
+            let w = rust.eval_batch(&batch);
+            assert_eq!(w.len(), 256);
+        },
+    ));
+
+    let svc = if Path::new("artifacts/manifest.json").exists() {
+        Some(XlaService::start(Path::new("artifacts")).expect("artifacts"))
+    } else {
+        eprintln!("artifacts/ missing: skipping XLA rows");
+        None
+    };
+    if let Some(svc) = &svc {
+        let xla = XlaWasteBackend::new(svc, &hist);
+        rows.push(bench(
+            "waste eval xla  x256",
+            &BenchOpts {
+                warmup: 3,
+                iters: 30,
+                units_per_iter: 256.0,
+            },
+            || {
+                let w = xla.eval_batch(&batch);
+                assert_eq!(w.len(), 256);
+            },
+        ));
+
+        // fused hill_step: expand+eval+argmin in ONE artifact call
+        let man = svc.manifest().clone();
+        let k = man.k_classes;
+        let config: Vec<u32> = vec![304, 384, 480, 600, 752, 944];
+        let mut deltas = vec![0.0f64; man.b_candidates * k];
+        for c in 0..config.len() {
+            deltas[(2 * c) * k + c] = 8.0;
+            deltas[(2 * c + 1) * k + c] = -8.0;
+        }
+        rows.push(bench(
+            "hill_step fused (1 call)",
+            &BenchOpts {
+                warmup: 3,
+                iters: 30,
+                units_per_iter: 256.0,
+            },
+            || {
+                let (_, w, _) = xla.fused_hill_step(&config, &deltas).unwrap();
+                assert!(w < SENTINEL * 1_000_000);
+            },
+        ));
+    }
+
+    // ---- single waste sweep cost (the inner loop primitive) ------------
+    let map = WasteMap::from_histogram(&hist);
+    let cfg = [304u32, 384, 480, 600, 752, 944];
+    rows.push(bench(
+        "waste sweep rust x1",
+        &BenchOpts {
+            warmup: 10,
+            iters: 100,
+            units_per_iter: 1.0,
+        },
+        || {
+            std::hint::black_box(map.waste_of_sorted(&cfg));
+        },
+    ));
+
+    // ---- full algorithm convergence -------------------------------------
+    let current = slabforge::slab::geometry::memcached_default_sizes();
+    for (name, alg) in [
+        ("optimize paper-alg1", Algorithm::PaperHillClimb),
+        ("optimize steepest", Algorithm::SteepestDescent),
+        ("optimize dp-optimal", Algorithm::DpOptimal),
+    ] {
+        let mut evals = 0u64;
+        rows.push(bench(
+            name,
+            &BenchOpts {
+                warmup: 1,
+                iters: 5,
+                units_per_iter: 1.0,
+            },
+            || {
+                let r = optimize(
+                    &rust,
+                    &hist,
+                    &current,
+                    &OptimizerParams {
+                        algorithm: alg,
+                        ..Default::default()
+                    },
+                );
+                evals = r.evaluations;
+                assert!(r.new_waste <= r.old_waste);
+            },
+        ));
+        println!("{name}: {evals} evaluations/run");
+    }
+
+    println!("{}", table("optimizer benchmarks (T1, 200k items)", &rows));
+}

@@ -1,0 +1,159 @@
+//! End-to-end TCP serving benchmarks (P3 in DESIGN.md §4): pipelined
+//! set throughput, request/response get throughput and latency
+//! percentiles, multi-connection scaling — the numbers `live_retune`
+//! reports, measured rigorously.
+//!
+//! ```bash
+//! cargo bench --bench bench_server
+//! ```
+
+use slabforge::benchkit::{bench, table, BenchOpts, Summary};
+use slabforge::client::Client;
+use slabforge::server::{Server, ServerHandle};
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use slabforge::util::fmt::human_duration;
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::gen::value_len_for_total;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_SET: usize = 50_000;
+const N_GET: usize = 20_000;
+
+fn start_server() -> (ServerHandle, Arc<ShardedStore>) {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            256 << 20,
+            true,
+            4,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let h = Server::new(store.clone()).start("127.0.0.1:0").unwrap();
+    (h, store)
+}
+
+fn main() {
+    let (handle, store) = start_server();
+    let addr = handle.addr();
+    let mut rows: Vec<Summary> = Vec::new();
+
+    let mut rng = Pcg64::new(3);
+    let values: Vec<Vec<u8>> = (0..N_SET)
+        .map(|_| {
+            let t = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000);
+            vec![b'x'; value_len_for_total(t, true).unwrap()]
+        })
+        .collect();
+
+    // ---- pipelined sets (noreply) ---------------------------------------
+    let mut c = Client::connect(addr).unwrap();
+    rows.push(bench(
+        "tcp set noreply pipeline",
+        &BenchOpts {
+            warmup: 1,
+            iters: 5,
+            units_per_iter: N_SET as f64,
+        },
+        || {
+            for (i, v) in values.iter().enumerate() {
+                c.set_noreply(&format!("k{i:08}"), v, 0, 0).unwrap();
+            }
+            c.version().unwrap(); // drain
+        },
+    ));
+
+    // ---- request/response gets ------------------------------------------
+    let mut lat = Vec::with_capacity(N_GET);
+    rows.push(bench(
+        "tcp get roundtrip",
+        &BenchOpts {
+            warmup: 1,
+            iters: 5,
+            units_per_iter: N_GET as f64,
+        },
+        || {
+            lat.clear();
+            let mut rng = Pcg64::new(4);
+            for _ in 0..N_GET {
+                let key = format!("k{:08}", rng.gen_range(N_SET as u64));
+                let t = Instant::now();
+                assert!(c.get(&key).unwrap().is_some());
+                lat.push(t.elapsed());
+            }
+        },
+    ));
+    lat.sort_unstable();
+    println!(
+        "get latency: p50 {}  p95 {}  p99 {}",
+        human_duration(lat[lat.len() / 2]),
+        human_duration(lat[lat.len() * 95 / 100]),
+        human_duration(lat[lat.len() * 99 / 100]),
+    );
+
+    // ---- multi-get batches ------------------------------------------------
+    rows.push(bench(
+        "tcp multi-get x16",
+        &BenchOpts {
+            warmup: 1,
+            iters: 5,
+            units_per_iter: (N_GET / 16 * 16) as f64,
+        },
+        || {
+            let mut rng = Pcg64::new(5);
+            for _ in 0..N_GET / 16 {
+                let keys: Vec<String> = (0..16)
+                    .map(|_| format!("k{:08}", rng.gen_range(N_SET as u64)))
+                    .collect();
+                let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+                let m = c.get_multi(&refs, false).unwrap();
+                assert!(!m.is_empty());
+            }
+        },
+    ));
+
+    // ---- connection scaling -----------------------------------------------
+    for conns in [1usize, 4, 8] {
+        let per = N_GET / conns;
+        rows.push(bench(
+            &format!("tcp get {conns} conns"),
+            &BenchOpts {
+                warmup: 1,
+                iters: 3,
+                units_per_iter: (per * conns) as f64,
+            },
+            || {
+                let threads: Vec<_> = (0..conns)
+                    .map(|t| {
+                        std::thread::spawn(move || {
+                            let mut c = Client::connect(addr).unwrap();
+                            let mut rng = Pcg64::new(10 + t as u64);
+                            for _ in 0..per {
+                                let key =
+                                    format!("k{:08}", rng.gen_range(N_SET as u64));
+                                c.get(&key).unwrap();
+                            }
+                        })
+                    })
+                    .collect();
+                for t in threads {
+                    t.join().unwrap();
+                }
+            },
+        ));
+    }
+
+    println!(
+        "server saw {} commands total, {} items resident",
+        handle.metrics.snapshot().commands,
+        store.len()
+    );
+    println!("{}", table("TCP serving (loopback)", &rows));
+    handle.shutdown();
+}

@@ -1,0 +1,81 @@
+//! Regenerates the paper's **Tables 1–5** (experiments T1–T5 + claim D1
+//! in DESIGN.md §4) and times the optimization for each.
+//!
+//! ```bash
+//! cargo bench --bench bench_tables                     # 200k items/table
+//! cargo bench --bench bench_tables -- --items 1000000  # paper scale
+//! cargo bench --bench bench_tables -- --algorithm paper
+//! ```
+
+use slabforge::benchkit::paper::{experiment_histogram, run_experiment_with};
+use slabforge::benchkit::{bench, BenchOpts, Summary};
+use slabforge::config::cli::Args;
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::RustBackend;
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::workload::PAPER_EXPERIMENTS;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["bench"]).unwrap();
+    let items: usize = args.flag_or("items", 200_000).unwrap();
+    let seed: u64 = args.flag_or("seed", 2020).unwrap();
+    let algorithm = args
+        .flag("algorithm")
+        .and_then(Algorithm::parse)
+        .unwrap_or(Algorithm::SteepestDescent);
+
+    println!("# bench_tables: Tables 1-5 at {items} items/table ({algorithm:?})\n");
+    println!("| table | old waste | new waste | recovery | paper | waste/item old (paper) | optimize time |");
+    println!("|---|---|---|---|---|---|---|");
+
+    let mut hole_fracs = Vec::new();
+    let mut timings: Vec<Summary> = Vec::new();
+    for e in &PAPER_EXPERIMENTS {
+        let hist = experiment_histogram(e, items, seed + e.table as u64);
+        let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+
+        // timed: the optimization itself (the paper's algorithm run)
+        let mut row = None;
+        let t = bench(
+            &format!("T{}", e.table),
+            &BenchOpts {
+                warmup: 1,
+                iters: 5,
+                units_per_iter: 1.0,
+            },
+            || {
+                row = Some(run_experiment_with(e, &hist, &backend, algorithm, seed));
+            },
+        );
+        let row = row.unwrap();
+        let (old_per, _) = row.waste_per_item();
+        let paper_per = e.paper_old_waste as f64 / 1e6;
+        println!(
+            "| T{} | {} | {} | {:.2}% | {:.2}% | {:.1} B ({:.1} B) | {} |",
+            e.table,
+            row.old_waste,
+            row.new_waste,
+            row.recovery * 100.0,
+            row.paper_recovery * 100.0,
+            old_per,
+            paper_per,
+            slabforge::util::fmt::human_duration(t.mean),
+        );
+
+        // D1: default-config hole fraction ≈ 10 %
+        let stored = hist.total_bytes() as f64;
+        hole_fracs.push(row.old_waste as f64 / (stored + row.old_waste as f64));
+        timings.push(t);
+    }
+
+    let avg = hole_fracs.iter().sum::<f64>() / hole_fracs.len() as f64;
+    println!(
+        "\nD1 (§1 claim): default-config wastage per table: {:?} — average {:.2}% (paper: ~10%)",
+        hole_fracs
+            .iter()
+            .map(|f| format!("{:.1}%", f * 100.0))
+            .collect::<Vec<_>>(),
+        avg * 100.0
+    );
+    println!("{}", slabforge::benchkit::table("optimization timings", &timings));
+}

@@ -1,0 +1,181 @@
+//! Measurement harness for `rust/benches/*` (criterion is not vendored
+//! in this offline image — DESIGN.md §3): warmup + timed iterations,
+//! robust summary statistics, markdown/CSV table rendering.
+
+use crate::util::fmt::{human_duration, human_rate};
+use std::time::{Duration, Instant};
+
+pub mod paper;
+
+/// Summary statistics over per-iteration samples.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Work units per iteration (for rate reporting), default 1.
+    pub units_per_iter: f64,
+}
+
+impl Summary {
+    pub fn from_samples(name: &str, mut samples: Vec<Duration>, units_per_iter: f64) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        Summary {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+            units_per_iter,
+        }
+    }
+
+    /// Work units per second at the mean.
+    pub fn rate(&self) -> f64 {
+        self.units_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {} |",
+            self.name,
+            self.iters,
+            human_duration(self.mean),
+            human_duration(self.p50),
+            human_duration(self.p99),
+            human_rate(self.rate()),
+        )
+    }
+}
+
+/// Options for a timed run.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Work units one iteration performs (ops, items, evaluations).
+    pub units_per_iter: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: 3,
+            iters: 20,
+            units_per_iter: 1.0,
+        }
+    }
+}
+
+/// Time a closure: `warmup` unrecorded runs, then `iters` samples.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> Summary {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Summary::from_samples(name, samples, opts.units_per_iter)
+}
+
+/// Render a markdown table of summaries.
+pub fn table(title: &str, rows: &[Summary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n### {title}\n\n"));
+    out.push_str("| bench | iters | mean | p50 | p99 | rate |\n");
+    out.push_str("|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&r.row());
+        out.push('\n');
+    }
+    out
+}
+
+/// Simple CSV writer for results/ artifacts (figures, sweeps).
+pub struct CsvWriter {
+    path: std::path::PathBuf,
+    lines: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn new<P: Into<std::path::PathBuf>>(path: P, header: &str) -> CsvWriter {
+        CsvWriter {
+            path: path.into(),
+            lines: vec![header.to_string()],
+        }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.lines.push(fields.join(","));
+    }
+
+    pub fn finish(self) -> std::io::Result<std::path::PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&self.path, self.lines.join("\n") + "\n")?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_statistics() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = Summary::from_samples("t", samples, 10.0);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(100));
+        assert_eq!(s.p50, Duration::from_micros(51));
+        assert!(s.rate() > 0.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let opts = BenchOpts {
+            warmup: 2,
+            iters: 5,
+            units_per_iter: 1.0,
+        };
+        let s = bench("count", &opts, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let s = Summary::from_samples("x", vec![Duration::from_millis(1)], 1.0);
+        let t = table("T", &[s]);
+        assert!(t.contains("### T"));
+        assert!(t.contains("| x |"));
+    }
+
+    #[test]
+    fn csv_writer_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("slabforge-csv-{}", std::process::id()));
+        let mut w = CsvWriter::new(dir.join("t.csv"), "a,b");
+        w.row(&["1".into(), "2".into()]);
+        let path = w.finish().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

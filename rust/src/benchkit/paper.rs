@@ -1,0 +1,223 @@
+//! Paper-experiment lab: shared machinery for regenerating the paper's
+//! Tables 1–5 and Figures 1–10, used by `examples/reproduce_paper.rs`
+//! and the `bench_tables`/`bench_figures` benches.
+
+use crate::benchkit::CsvWriter;
+use crate::config::settings::Algorithm;
+use crate::optimizer::engine::{optimize, OptimizeReport, OptimizerParams, RustBackend, WasteBackend};
+use crate::optimizer::waste::WasteMap;
+use crate::slab::geometry::memcached_default_sizes;
+use crate::util::histogram::SizeHistogram;
+use crate::util::rng::Pcg64;
+use crate::workload::spec::PaperExperiment;
+use std::path::Path;
+
+/// One regenerated table row (paper vs measured).
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub table: u32,
+    pub items: usize,
+    pub old_span: Vec<u32>,
+    pub new_span: Vec<u32>,
+    pub old_waste: u64,
+    pub new_waste: u64,
+    pub recovery: f64,
+    pub paper_old_waste: u64,
+    pub paper_new_waste: u64,
+    pub paper_recovery: f64,
+    pub report: OptimizeReport,
+}
+
+impl TableRow {
+    /// Scale measured waste to the paper's 1 M items for comparison.
+    pub fn waste_per_item(&self) -> (f64, f64) {
+        (
+            self.old_waste as f64 / self.items as f64,
+            self.new_waste as f64 / self.items as f64,
+        )
+    }
+}
+
+/// Sample `items` item totals from the experiment's reconstructed
+/// log-normal into a byte-granular histogram.
+pub fn experiment_histogram(e: &PaperExperiment, items: usize, seed: u64) -> SizeHistogram {
+    let mut h = SizeHistogram::new(16384);
+    let mut rng = Pcg64::new(seed);
+    let d = e.distribution();
+    for _ in 0..items {
+        h.record(d.sample(&mut rng, 70, 16384));
+    }
+    h
+}
+
+/// Run one table experiment against a [`WasteBackend`].
+pub fn run_experiment_with<B: WasteBackend>(
+    e: &PaperExperiment,
+    hist: &SizeHistogram,
+    backend: &B,
+    algorithm: Algorithm,
+    seed: u64,
+) -> TableRow {
+    let current = memcached_default_sizes();
+    let params = OptimizerParams {
+        algorithm,
+        seed,
+        ..Default::default()
+    };
+    let report = optimize(backend, hist, &current, &params);
+    TableRow {
+        table: e.table,
+        items: hist.total_items() as usize,
+        old_span: report.old_span.clone(),
+        new_span: report.new_span.clone(),
+        old_waste: report.old_waste,
+        new_waste: report.new_waste,
+        recovery: report.recovery(),
+        paper_old_waste: e.paper_old_waste,
+        paper_new_waste: e.paper_new_waste,
+        paper_recovery: e.paper_recovery(),
+        report,
+    }
+}
+
+/// Run one table experiment on the rust backend (the default path).
+pub fn run_experiment(
+    e: &PaperExperiment,
+    items: usize,
+    seed: u64,
+    algorithm: Algorithm,
+) -> TableRow {
+    let hist = experiment_histogram(e, items, seed);
+    let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+    run_experiment_with(e, &hist, &backend, algorithm, seed)
+}
+
+/// Render a table row as the paper formats it.
+pub fn render_table(row: &TableRow) -> String {
+    let (old_per, new_per) = row.waste_per_item();
+    format!(
+        "TABLE {t}  (μ = {mu}, {n} items)\n\
+         | Measurement Metric    | Old Configuration | New Configuration |\n\
+         |-----------------------|-------------------|-------------------|\n\
+         | Available Chunk Sizes | {old:?} | {new:?} |\n\
+         | Memory wasted (bytes) | {ow} | {nw} |\n\
+         measured recovery {rec:.2}%   (paper: {prec:.2}%)\n\
+         measured waste/item {old_per:.1} -> {new_per:.1} B   (paper: {pold:.1} -> {pnew:.1} B)\n",
+        t = row.table,
+        mu = match row.table {
+            1 => 518,
+            2 => 1210,
+            3 => 2109,
+            4 => 4133,
+            _ => 8131,
+        },
+        n = row.items,
+        old = row.old_span,
+        new = row.new_span,
+        ow = row.old_waste,
+        nw = row.new_waste,
+        rec = row.recovery * 100.0,
+        prec = row.paper_recovery * 100.0,
+        old_per = old_per,
+        new_per = new_per,
+        pold = row.paper_old_waste as f64 / 1e6,
+        pnew = row.paper_new_waste as f64 / 1e6,
+    )
+}
+
+/// Write the figure pair for one experiment: the size-frequency
+/// histogram plus old/new class-boundary verticals (Figures 1–10 are
+/// five such pairs).
+pub fn write_figure_csvs(
+    e: &PaperExperiment,
+    hist: &SizeHistogram,
+    row: &TableRow,
+    out_dir: &Path,
+) -> std::io::Result<(std::path::PathBuf, std::path::PathBuf)> {
+    let fig_old = 2 * e.table - 1; // figs 1,3,5,7,9 = old config
+    let fig_new = 2 * e.table; // figs 2,4,6,8,10 = new config
+    let mut old_csv = CsvWriter::new(
+        out_dir.join(format!("fig{fig_old}.csv")),
+        "kind,size,frequency",
+    );
+    let mut new_csv = CsvWriter::new(
+        out_dir.join(format!("fig{fig_new}.csv")),
+        "kind,size,frequency",
+    );
+    for (size, count) in hist.iter() {
+        let fields = ["hist".to_string(), size.to_string(), count.to_string()];
+        old_csv.row(&fields);
+        new_csv.row(&fields);
+    }
+    for &c in &row.old_span {
+        old_csv.row(&["class".to_string(), c.to_string(), String::new()]);
+    }
+    for &c in &row.new_span {
+        new_csv.row(&["class".to_string(), c.to_string(), String::new()]);
+    }
+    Ok((old_csv.finish()?, new_csv.finish()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::PAPER_EXPERIMENTS;
+
+    #[test]
+    fn t1_reproduces_paper_shape_at_small_scale() {
+        let e = &PAPER_EXPERIMENTS[0];
+        let row = run_experiment(e, 30_000, 1, Algorithm::SteepestDescent);
+        // shape: recovery in the paper's ballpark (47 % ± 12 points)
+        assert!(
+            (0.35..0.65).contains(&row.recovery),
+            "T1 recovery {}",
+            row.recovery
+        );
+        // old span is exactly the paper's default classes
+        assert_eq!(row.old_span, &[304, 384, 480, 600, 752, 944]);
+        // old waste/item within 25 % of the paper's 62 B
+        let (old_per, _) = row.waste_per_item();
+        assert!((46.0..78.0).contains(&old_per), "waste/item {old_per}");
+    }
+
+    #[test]
+    fn all_tables_recover_waste() {
+        for e in &PAPER_EXPERIMENTS {
+            let row = run_experiment(e, 20_000, 2, Algorithm::SteepestDescent);
+            assert!(
+                row.recovery > 0.20,
+                "T{}: recovery {}",
+                e.table,
+                row.recovery
+            );
+            assert!(row.new_waste < row.old_waste);
+        }
+    }
+
+    #[test]
+    fn figure_csvs_written() {
+        let e = &PAPER_EXPERIMENTS[0];
+        let hist = experiment_histogram(e, 5_000, 3);
+        let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+        let row = run_experiment_with(e, &hist, &backend, Algorithm::SteepestDescent, 3);
+        let dir = std::env::temp_dir().join(format!("slabforge-figs-{}", std::process::id()));
+        let (old, new) = write_figure_csvs(e, &hist, &row, &dir).unwrap();
+        let old_text = std::fs::read_to_string(&old).unwrap();
+        assert!(old_text.starts_with("kind,size,frequency\n"));
+        // every old-span class marker present (span depends on sample min)
+        assert_eq!(old_text.matches("class,").count(), row.old_span.len());
+        let new_text = std::fs::read_to_string(&new).unwrap();
+        assert!(new_text.matches("class,").count() == row.new_span.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_table_contains_paper_fields() {
+        let e = &PAPER_EXPERIMENTS[4];
+        let row = run_experiment(e, 10_000, 4, Algorithm::SteepestDescent);
+        let text = render_table(&row);
+        assert!(text.contains("TABLE 5"));
+        assert!(text.contains("Available Chunk Sizes"));
+        assert!(text.contains("8880"), "{text}");
+    }
+}

@@ -1,0 +1,405 @@
+//! Blocking memcached text-protocol client — used by the examples, the
+//! end-to-end benches, and the integration tests to drive a live
+//! `slabforge` (or real memcached) server.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A fetched value with metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientValue {
+    pub value: Vec<u8>,
+    pub flags: u32,
+    pub cas: Option<u64>,
+}
+
+/// Client-side failures.
+#[derive(Debug)]
+pub enum ClientError {
+    Io(std::io::Error),
+    /// Server replied with ERROR / CLIENT_ERROR / SERVER_ERROR.
+    Server(String),
+    /// Response did not match the protocol grammar.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Server(m) => write!(f, "server: {m}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+type Result<T> = std::result::Result<T, ClientError>;
+
+/// Blocking connection to one server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(ClientError::Protocol("connection closed".into()));
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    fn check_error(line: &str) -> Result<()> {
+        if line == "ERROR"
+            || line.starts_with("CLIENT_ERROR")
+            || line.starts_with("SERVER_ERROR")
+        {
+            return Err(ClientError::Server(line.to_string()));
+        }
+        Ok(())
+    }
+
+    fn simple_command(&mut self, cmd: &str) -> Result<String> {
+        self.writer.write_all(cmd.as_bytes())?;
+        let line = self.read_line()?;
+        Self::check_error(&line)?;
+        Ok(line)
+    }
+
+    // -------------------------------------------------------------- storage
+
+    pub fn set(&mut self, key: &str, value: &[u8], flags: u32, exptime: u32) -> Result<()> {
+        let resp = self.store_command("set", key, value, flags, exptime, None)?;
+        if resp == "STORED" {
+            Ok(())
+        } else {
+            Err(ClientError::Protocol(format!("set -> {resp}")))
+        }
+    }
+
+    /// Fire-and-forget set (`noreply`): no response round-trip.
+    pub fn set_noreply(&mut self, key: &str, value: &[u8], flags: u32, exptime: u32) -> Result<()> {
+        let header = format!("set {key} {flags} {exptime} {} noreply\r\n", value.len());
+        self.writer.write_all(header.as_bytes())?;
+        self.writer.write_all(value)?;
+        self.writer.write_all(b"\r\n")?;
+        Ok(())
+    }
+
+    pub fn add(&mut self, key: &str, value: &[u8], flags: u32, exptime: u32) -> Result<bool> {
+        Ok(self.store_command("add", key, value, flags, exptime, None)? == "STORED")
+    }
+
+    pub fn replace(&mut self, key: &str, value: &[u8], flags: u32, exptime: u32) -> Result<bool> {
+        Ok(self.store_command("replace", key, value, flags, exptime, None)? == "STORED")
+    }
+
+    pub fn append(&mut self, key: &str, value: &[u8]) -> Result<bool> {
+        Ok(self.store_command("append", key, value, 0, 0, None)? == "STORED")
+    }
+
+    pub fn prepend(&mut self, key: &str, value: &[u8]) -> Result<bool> {
+        Ok(self.store_command("prepend", key, value, 0, 0, None)? == "STORED")
+    }
+
+    /// Returns the response word: STORED / EXISTS / NOT_FOUND.
+    pub fn cas(
+        &mut self,
+        key: &str,
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+        cas: u64,
+    ) -> Result<String> {
+        self.store_command("cas", key, value, flags, exptime, Some(cas))
+    }
+
+    fn store_command(
+        &mut self,
+        verb: &str,
+        key: &str,
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+        cas: Option<u64>,
+    ) -> Result<String> {
+        let header = match cas {
+            Some(c) => format!("{verb} {key} {flags} {exptime} {} {c}\r\n", value.len()),
+            None => format!("{verb} {key} {flags} {exptime} {}\r\n", value.len()),
+        };
+        self.writer.write_all(header.as_bytes())?;
+        self.writer.write_all(value)?;
+        self.writer.write_all(b"\r\n")?;
+        let line = self.read_line()?;
+        Self::check_error(&line)?;
+        Ok(line)
+    }
+
+    // ------------------------------------------------------------ retrieval
+
+    pub fn get(&mut self, key: &str) -> Result<Option<ClientValue>> {
+        let mut map = self.get_multi(&[key], false)?;
+        Ok(map.remove(key))
+    }
+
+    pub fn gets(&mut self, key: &str) -> Result<Option<ClientValue>> {
+        let mut map = self.get_multi(&[key], true)?;
+        Ok(map.remove(key))
+    }
+
+    pub fn get_multi(
+        &mut self,
+        keys: &[&str],
+        with_cas: bool,
+    ) -> Result<BTreeMap<String, ClientValue>> {
+        let verb = if with_cas { "gets" } else { "get" };
+        let cmd = format!("{verb} {}\r\n", keys.join(" "));
+        self.writer.write_all(cmd.as_bytes())?;
+        let mut found = BTreeMap::new();
+        loop {
+            let line = self.read_line()?;
+            Self::check_error(&line)?;
+            if line == "END" {
+                return Ok(found);
+            }
+            let mut parts = line.split_whitespace();
+            if parts.next() != Some("VALUE") {
+                return Err(ClientError::Protocol(format!("unexpected line '{line}'")));
+            }
+            let key = parts
+                .next()
+                .ok_or_else(|| ClientError::Protocol("missing key".into()))?
+                .to_string();
+            let flags: u32 = parse_field(parts.next(), "flags")?;
+            let nbytes: usize = parse_field(parts.next(), "bytes")?;
+            let cas = match parts.next() {
+                Some(tok) => Some(
+                    tok.parse::<u64>()
+                        .map_err(|_| ClientError::Protocol("bad cas".into()))?,
+                ),
+                None => None,
+            };
+            let mut value = vec![0u8; nbytes + 2];
+            self.reader.read_exact(&mut value)?;
+            value.truncate(nbytes);
+            found.insert(key, ClientValue { value, flags, cas });
+        }
+    }
+
+    // --------------------------------------------------------------- admin
+
+    pub fn delete(&mut self, key: &str) -> Result<bool> {
+        Ok(self.simple_command(&format!("delete {key}\r\n"))? == "DELETED")
+    }
+
+    pub fn incr(&mut self, key: &str, delta: u64) -> Result<Option<u64>> {
+        self.incr_decr("incr", key, delta)
+    }
+
+    pub fn decr(&mut self, key: &str, delta: u64) -> Result<Option<u64>> {
+        self.incr_decr("decr", key, delta)
+    }
+
+    fn incr_decr(&mut self, verb: &str, key: &str, delta: u64) -> Result<Option<u64>> {
+        let line = self.simple_command(&format!("{verb} {key} {delta}\r\n"))?;
+        if line == "NOT_FOUND" {
+            return Ok(None);
+        }
+        line.parse::<u64>()
+            .map(Some)
+            .map_err(|_| ClientError::Protocol(format!("{verb} -> {line}")))
+    }
+
+    pub fn touch(&mut self, key: &str, exptime: u32) -> Result<bool> {
+        Ok(self.simple_command(&format!("touch {key} {exptime}\r\n"))? == "TOUCHED")
+    }
+
+    pub fn flush_all(&mut self) -> Result<()> {
+        let line = self.simple_command("flush_all\r\n")?;
+        if line == "OK" {
+            Ok(())
+        } else {
+            Err(ClientError::Protocol(format!("flush_all -> {line}")))
+        }
+    }
+
+    pub fn version(&mut self) -> Result<String> {
+        let line = self.simple_command("version\r\n")?;
+        Ok(line.strip_prefix("VERSION ").unwrap_or(&line).to_string())
+    }
+
+    /// `stats [arg]` as a name → value map.
+    pub fn stats(&mut self, arg: Option<&str>) -> Result<BTreeMap<String, String>> {
+        let cmd = match arg {
+            Some(a) => format!("stats {a}\r\n"),
+            None => "stats\r\n".to_string(),
+        };
+        self.writer.write_all(cmd.as_bytes())?;
+        let mut map = BTreeMap::new();
+        loop {
+            let line = self.read_line()?;
+            Self::check_error(&line)?;
+            if line == "END" {
+                return Ok(map);
+            }
+            if let Some(rest) = line.strip_prefix("STAT ") {
+                if let Some((k, v)) = rest.split_once(' ') {
+                    map.insert(k.to_string(), v.to_string());
+                }
+            }
+        }
+    }
+
+    /// Extension: live-apply a learned chunk-size configuration.
+    pub fn slabs_reconfigure(&mut self, sizes: &[usize]) -> Result<String> {
+        let list = sizes
+            .iter()
+            .map(usize::to_string)
+            .collect::<Vec<_>>()
+            .join(",");
+        self.simple_command(&format!("slabs reconfigure {list}\r\n"))
+    }
+
+    /// Extension: trigger the optimizer now; returns its status line.
+    pub fn slabs_optimize(&mut self) -> Result<String> {
+        self.simple_command("slabs optimize\r\n")
+    }
+
+    pub fn quit(mut self) {
+        let _ = self.writer.write_all(b"quit\r\n");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Server;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::sharded::ShardedStore;
+    use crate::store::store::Clock;
+    use std::sync::Arc;
+
+    fn server() -> crate::server::ServerHandle {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        Server::new(store).start("127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn full_client_flow() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+
+        c.set("k", b"hello", 7, 0).unwrap();
+        let v = c.get("k").unwrap().unwrap();
+        assert_eq!(v.value, b"hello");
+        assert_eq!(v.flags, 7);
+        assert_eq!(v.cas, None);
+
+        let v = c.gets("k").unwrap().unwrap();
+        let cas = v.cas.unwrap();
+        assert_eq!(c.cas("k", b"world", 0, 0, cas).unwrap(), "STORED");
+        assert_eq!(c.cas("k", b"xxx", 0, 0, cas).unwrap(), "EXISTS");
+
+        assert!(!c.add("k", b"nope", 0, 0).unwrap());
+        assert!(c.replace("k", b"replaced", 0, 0).unwrap());
+        assert!(c.append("k", b"-tail").unwrap());
+        assert_eq!(c.get("k").unwrap().unwrap().value, b"replaced-tail");
+
+        c.set("n", b"41", 0, 0).unwrap();
+        assert_eq!(c.incr("n", 1).unwrap(), Some(42));
+        assert_eq!(c.decr("n", 2).unwrap(), Some(40));
+        assert_eq!(c.incr("absent", 1).unwrap(), None);
+
+        assert!(c.touch("k", 300).unwrap());
+        assert!(c.delete("k").unwrap());
+        assert!(!c.delete("k").unwrap());
+        assert!(c.get("k").unwrap().is_none());
+
+        let stats = c.stats(None).unwrap();
+        assert!(stats.contains_key("curr_items"));
+        assert!(c.version().unwrap().contains('.'));
+
+        c.flush_all().unwrap();
+        assert!(c.get("n").unwrap().is_none());
+        c.quit();
+        h.shutdown();
+    }
+
+    #[test]
+    fn multi_get() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        c.set("a", b"1", 0, 0).unwrap();
+        c.set("b", b"22", 0, 0).unwrap();
+        let m = c.get_multi(&["a", "b", "missing"], false).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"].value, b"1");
+        assert_eq!(m["b"].value, b"22");
+        h.shutdown();
+    }
+
+    #[test]
+    fn noreply_pipeline() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        for i in 0..100 {
+            c.set_noreply(&format!("k{i}"), b"v", 0, 0).unwrap();
+        }
+        // a replied command flushes the pipeline
+        assert_eq!(c.get("k99").unwrap().unwrap().value, b"v");
+        let stats = c.stats(None).unwrap();
+        assert_eq!(stats["curr_items"], "100");
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_error_surfaces() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        let err = c.slabs_optimize().unwrap_err();
+        assert!(matches!(err, ClientError::Server(_)));
+        h.shutdown();
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(
+    tok: Option<&str>,
+    what: &str,
+) -> std::result::Result<T, ClientError> {
+    tok.and_then(|t| t.parse().ok())
+        .ok_or_else(|| ClientError::Protocol(format!("bad {what}")))
+}

@@ -1,0 +1,149 @@
+//! Tiny CLI argument layer (clap is not vendored — DESIGN.md §3).
+//!
+//! Grammar: `slabforge <subcommand> [--flag value]... [--switch]...`.
+//! Flags may also be written `--flag=value`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line: subcommand + flags + positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw arguments (excluding argv[0]). `known_switches` lists
+    /// the boolean flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_switches: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err(CliError("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&flag) {
+                    args.switches.push(flag.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{flag} needs a value")))?;
+                    args.flags.insert(flag.to_string(), v);
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("bad value '{v}' for --{name}"))),
+        }
+    }
+
+    pub fn flag_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        Ok(self.flag_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated usize list (`--sizes 304,384,480`).
+    pub fn flag_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| CliError(format!("bad list value '{p}' for --{name}")))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "full"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        let a = parse("serve --listen 0.0.0.0:1121 --threads 8 --verbose extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.flag("listen"), Some("0.0.0.0:1121"));
+        assert_eq!(a.flag_or::<usize>("threads", 1).unwrap(), 8);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("full"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("optimize --seed=42 --sizes=304,384");
+        assert_eq!(a.flag_or::<u64>("seed", 0).unwrap(), 42);
+        assert_eq!(
+            a.flag_usize_list("sizes").unwrap(),
+            Some(vec![304, 384])
+        );
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(vec!["x".into(), "--flag".into()], &[]).unwrap_err();
+        assert!(e.0.contains("--flag"));
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse("x --n abc");
+        assert!(a.flag_parse::<usize>("n").is_err());
+        assert!(parse("x --l 1,2,zzz").flag_usize_list("l").is_err());
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = parse("serve");
+        assert_eq!(a.flag_or::<usize>("threads", 4).unwrap(), 4);
+        assert_eq!(a.flag_usize_list("sizes").unwrap(), None);
+    }
+}

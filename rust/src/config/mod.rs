@@ -1,0 +1,9 @@
+//! Configuration: a TOML-subset parser (serde/toml are not vendored in
+//! this offline image — DESIGN.md §3), typed [`settings::Settings`],
+//! and the CLI argument layer used by the `slabforge` launcher.
+
+pub mod cli;
+pub mod settings;
+pub mod toml;
+
+pub use settings::Settings;

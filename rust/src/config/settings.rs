@@ -1,0 +1,320 @@
+//! Typed runtime settings, loadable from `slabforge.toml` and
+//! overridable from the CLI (`config::cli`).
+
+use super::toml::{TomlDoc, TomlError};
+use crate::slab::policy::ChunkSizePolicy;
+use crate::slab::PAGE_SIZE;
+use std::fmt;
+
+/// Which optimization algorithm the auto-tuner runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's Algorithm 1: random ±1-byte moves, stop after 1000
+    /// consecutive non-improving tries.
+    PaperHillClimb,
+    /// Batched steepest descent with shrinking step sizes (one fused
+    /// PJRT call per step when the XLA backend is active).
+    SteepestDescent,
+    /// Exact optimum via divide-and-conquer DP (baseline/bound).
+    DpOptimal,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "paper" | "hillclimb" => Some(Algorithm::PaperHillClimb),
+            "steepest" => Some(Algorithm::SteepestDescent),
+            "dp" | "optimal" => Some(Algorithm::DpOptimal),
+            _ => None,
+        }
+    }
+}
+
+/// Which waste-evaluation backend scores candidate configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust exact evaluator.
+    Rust,
+    /// AOT XLA artifacts over PJRT (`artifacts/*.hlo.txt`).
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "rust" => Some(Backend::Rust),
+            "xla" | "pjrt" => Some(Backend::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Auto-tuner settings (the paper's optimizer, run online).
+#[derive(Clone, Debug)]
+pub struct OptimizerSettings {
+    pub enabled: bool,
+    /// Seconds between retune evaluations.
+    pub interval_secs: u64,
+    /// Minimum sets observed before the first retune.
+    pub min_samples: u64,
+    /// Retune when predicted savings exceed this fraction of holes.
+    pub min_improvement: f64,
+    pub algorithm: Algorithm,
+    pub backend: Backend,
+    /// Directory holding `manifest.json` + HLO artifacts.
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for OptimizerSettings {
+    fn default() -> Self {
+        OptimizerSettings {
+            enabled: false,
+            interval_secs: 60,
+            min_samples: 10_000,
+            min_improvement: 0.05,
+            algorithm: Algorithm::SteepestDescent,
+            backend: Backend::Rust,
+            artifacts_dir: "artifacts".to_string(),
+            seed: 0x51ab_f00d,
+        }
+    }
+}
+
+/// Complete server settings.
+#[derive(Clone, Debug)]
+pub struct Settings {
+    /// TCP listen address (`host:port`).
+    pub listen: String,
+    /// Worker threads accepting connections.
+    pub threads: usize,
+    /// Store shards (each shard = one mutex + one allocator).
+    pub shards: usize,
+    /// Total cache memory across shards, bytes.
+    pub mem_limit: usize,
+    pub page_size: usize,
+    pub use_cas: bool,
+    pub policy: ChunkSizePolicy,
+    pub optimizer: OptimizerSettings,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            listen: "127.0.0.1:11211".to_string(),
+            threads: 4,
+            shards: 4,
+            mem_limit: 64 << 20,
+            page_size: PAGE_SIZE,
+            use_cas: true,
+            policy: ChunkSizePolicy::default(),
+            optimizer: OptimizerSettings::default(),
+        }
+    }
+}
+
+/// Settings-load failures.
+#[derive(Debug)]
+pub enum SettingsError {
+    Io(std::io::Error),
+    Toml(TomlError),
+    Invalid(String),
+}
+
+impl fmt::Display for SettingsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SettingsError::Io(e) => write!(f, "cannot read config: {e}"),
+            SettingsError::Toml(e) => write!(f, "{e}"),
+            SettingsError::Invalid(m) => write!(f, "invalid setting: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SettingsError {}
+
+impl Settings {
+    /// Load from a TOML file, falling back to defaults per key.
+    pub fn load(path: &str) -> Result<Settings, SettingsError> {
+        let text = std::fs::read_to_string(path).map_err(SettingsError::Io)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Settings, SettingsError> {
+        let doc = TomlDoc::parse(text).map_err(SettingsError::Toml)?;
+        let mut s = Settings::default();
+        let invalid = |k: &str| SettingsError::Invalid(format!("bad value for '{k}'"));
+
+        if let Some(v) = doc.get("listen") {
+            s.listen = v.as_str().ok_or_else(|| invalid("listen"))?.to_string();
+        }
+        if let Some(v) = doc.get("threads") {
+            s.threads = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("threads"))?;
+        }
+        if let Some(v) = doc.get("shards") {
+            s.shards = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("shards"))?;
+        }
+        if let Some(v) = doc.get("memory.limit") {
+            s.mem_limit = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("memory.limit"))?;
+        }
+        if let Some(v) = doc.get("memory.page_size") {
+            s.page_size = v
+                .as_usize()
+                .filter(|&n| n >= 1024)
+                .ok_or_else(|| invalid("memory.page_size"))?;
+        }
+        if let Some(v) = doc.get("memory.use_cas") {
+            s.use_cas = v.as_bool().ok_or_else(|| invalid("memory.use_cas"))?;
+        }
+
+        // slab policy: explicit sizes win over growth factor
+        let chunk_min = match doc.get("memory.chunk_min") {
+            Some(v) => v.as_usize().ok_or_else(|| invalid("memory.chunk_min"))?,
+            None => 96,
+        };
+        let factor = match doc.get("memory.growth_factor") {
+            Some(v) => v.as_f64().ok_or_else(|| invalid("memory.growth_factor"))?,
+            None => 1.25,
+        };
+        s.policy = match doc.get("memory.slab_sizes") {
+            Some(v) => ChunkSizePolicy::Explicit(
+                v.as_usize_vec().ok_or_else(|| invalid("memory.slab_sizes"))?,
+            ),
+            None => ChunkSizePolicy::Geometric { chunk_min, factor },
+        };
+
+        let o = &mut s.optimizer;
+        if let Some(v) = doc.get("optimizer.enabled") {
+            o.enabled = v.as_bool().ok_or_else(|| invalid("optimizer.enabled"))?;
+        }
+        if let Some(v) = doc.get("optimizer.interval_secs") {
+            o.interval_secs = v.as_usize().ok_or_else(|| invalid("optimizer.interval_secs"))? as u64;
+        }
+        if let Some(v) = doc.get("optimizer.min_samples") {
+            o.min_samples = v.as_usize().ok_or_else(|| invalid("optimizer.min_samples"))? as u64;
+        }
+        if let Some(v) = doc.get("optimizer.min_improvement") {
+            o.min_improvement = v.as_f64().ok_or_else(|| invalid("optimizer.min_improvement"))?;
+        }
+        if let Some(v) = doc.get("optimizer.algorithm") {
+            let name = v.as_str().ok_or_else(|| invalid("optimizer.algorithm"))?;
+            o.algorithm = Algorithm::parse(name)
+                .ok_or_else(|| SettingsError::Invalid(format!("unknown algorithm '{name}'")))?;
+        }
+        if let Some(v) = doc.get("optimizer.backend") {
+            let name = v.as_str().ok_or_else(|| invalid("optimizer.backend"))?;
+            o.backend = Backend::parse(name)
+                .ok_or_else(|| SettingsError::Invalid(format!("unknown backend '{name}'")))?;
+        }
+        if let Some(v) = doc.get("optimizer.artifacts_dir") {
+            o.artifacts_dir = v.as_str().ok_or_else(|| invalid("optimizer.artifacts_dir"))?.to_string();
+        }
+        if let Some(v) = doc.get("optimizer.seed") {
+            o.seed = v.as_usize().ok_or_else(|| invalid("optimizer.seed"))? as u64;
+        }
+
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), SettingsError> {
+        if self.mem_limit / self.shards < self.page_size {
+            return Err(SettingsError::Invalid(format!(
+                "memory.limit {} gives each of {} shards less than one {}-byte page",
+                self.mem_limit, self.shards, self.page_size
+            )));
+        }
+        self.policy
+            .materialize(self.page_size)
+            .map_err(|e| SettingsError::Invalid(e.to_string()))?;
+        Ok(())
+    }
+
+    /// Per-shard memory budget.
+    pub fn shard_mem_limit(&self) -> usize {
+        self.mem_limit / self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Settings::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let s = Settings::from_toml(
+            r#"
+listen = "0.0.0.0:11300"
+threads = 8
+shards = 2
+
+[memory]
+limit = 134_217_728
+page_size = 1_048_576
+growth_factor = 1.08
+use_cas = false
+
+[optimizer]
+enabled = true
+interval_secs = 30
+algorithm = "paper"
+backend = "xla"
+artifacts_dir = "artifacts"
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.listen, "0.0.0.0:11300");
+        assert_eq!(s.threads, 8);
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.mem_limit, 128 << 20);
+        assert!(!s.use_cas);
+        assert!(matches!(
+            s.policy,
+            ChunkSizePolicy::Geometric { factor, .. } if (factor - 1.08).abs() < 1e-9
+        ));
+        assert!(s.optimizer.enabled);
+        assert_eq!(s.optimizer.interval_secs, 30);
+        assert_eq!(s.optimizer.algorithm, Algorithm::PaperHillClimb);
+        assert_eq!(s.optimizer.backend, Backend::Xla);
+    }
+
+    #[test]
+    fn explicit_slab_sizes_override_factor() {
+        let s = Settings::from_toml("[memory]\nslab_sizes = [304, 384, 480]\n").unwrap();
+        assert_eq!(
+            s.policy,
+            ChunkSizePolicy::Explicit(vec![304, 384, 480])
+        );
+    }
+
+    #[test]
+    fn rejects_undersized_memory() {
+        let e = Settings::from_toml("shards = 64\n[memory]\nlimit = 1_048_576\n").unwrap_err();
+        assert!(matches!(e, SettingsError::Invalid(_)));
+    }
+
+    #[test]
+    fn rejects_unknown_algorithm() {
+        let e = Settings::from_toml("[optimizer]\nalgorithm = \"magic\"\n").unwrap_err();
+        assert!(matches!(e, SettingsError::Invalid(_)));
+    }
+
+    #[test]
+    fn rejects_bad_slab_sizes() {
+        let e = Settings::from_toml("[memory]\nslab_sizes = [500, 400]\n").unwrap_err();
+        assert!(matches!(e, SettingsError::Invalid(_)));
+    }
+
+    #[test]
+    fn empty_toml_is_defaults() {
+        let s = Settings::from_toml("").unwrap();
+        assert_eq!(s.listen, Settings::default().listen);
+    }
+}

@@ -1,0 +1,331 @@
+//! A strict TOML-subset reader for `slabforge.toml`.
+//!
+//! Supported grammar (everything the config needs, nothing more):
+//! `[section]` and `[section.sub]` headers; `key = value` with string,
+//! integer (decimal, `_` separators, `0x`), float, boolean, and
+//! homogeneous arrays of those; `#` comments; blank lines. Keys are
+//! flattened to `section.sub.key` paths.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Array(xs) => xs.iter().map(TomlValue::as_usize).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A flat `section.key -> value` document.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = lineno + 1;
+            let stripped = strip_comment(raw).trim();
+            if stripped.is_empty() {
+                continue;
+            }
+            if let Some(rest) = stripped.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line,
+                    message: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+                {
+                    return Err(TomlError {
+                        line,
+                        message: format!("bad section name '{name}'"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value_text) = stripped.split_once('=').ok_or(TomlError {
+                line,
+                message: "expected 'key = value'".into(),
+            })?;
+            let key = key.trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(TomlError {
+                    line,
+                    message: format!("bad key '{key}'"),
+                });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(value_text.trim(), line)?;
+            if doc.values.insert(full_key.clone(), value).is_some() {
+                return Err(TomlError {
+                    line,
+                    message: format!("duplicate key '{full_key}'"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |m: String| TomlError { line, message: m };
+    if text.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string".into()));
+        }
+        return Ok(TomlValue::String(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, TomlError> = split_array_items(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    let clean = text.replace('_', "");
+    if let Some(hex) = clean.strip_prefix("0x") {
+        return i64::from_str_radix(hex, 16)
+            .map(TomlValue::Integer)
+            .map_err(|_| err(format!("bad hex integer '{text}'")));
+    }
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        return clean
+            .parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| err(format!("bad float '{text}'")));
+    }
+    clean
+        .parse::<i64>()
+        .map(TomlValue::Integer)
+        .map_err(|_| err(format!("bad value '{text}'")))
+}
+
+/// Split a flat (non-nested) array body on commas, respecting strings.
+fn split_array_items(inner: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = inner[start..].trim();
+    if !last.is_empty() {
+        items.push(&inner[start..]);
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+listen = "127.0.0.1:11211"   # inline comment
+threads = 4
+
+[memory]
+limit = 67_108_864
+page_size = 0x100000
+growth_factor = 1.25
+use_cas = true
+
+[optimizer]
+enabled = false
+slab_sizes = [304, 384, 480]
+names = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("listen").unwrap().as_str(), Some("127.0.0.1:11211"));
+        assert_eq!(doc.get("threads").unwrap().as_i64(), Some(4));
+        assert_eq!(doc.get("memory.limit").unwrap().as_usize(), Some(67_108_864));
+        assert_eq!(doc.get("memory.page_size").unwrap().as_usize(), Some(1 << 20));
+        assert_eq!(doc.get("memory.growth_factor").unwrap().as_f64(), Some(1.25));
+        assert_eq!(doc.get("memory.use_cas").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("optimizer.enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            doc.get("optimizer.slab_sizes").unwrap().as_usize_vec(),
+            Some(vec![304, 384, 480])
+        );
+        assert!(doc.get("missing").is_none());
+    }
+
+    #[test]
+    fn nested_sections() {
+        let doc = TomlDoc::parse("[a.b]\nc = 1\n").unwrap();
+        assert_eq!(doc.get("a.b.c").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let doc = TomlDoc::parse("x = 2\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = TomlDoc::parse("x = \"open\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+        // same key in different sections is fine
+        assert!(TomlDoc::parse("[s]\na = 1\n[t]\na = 2\n").is_ok());
+    }
+
+    #[test]
+    fn negative_and_empty_arrays() {
+        let doc = TomlDoc::parse("x = -5\ny = []\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get("y").unwrap(), &TomlValue::Array(vec![]));
+        // negative can't be usize
+        assert_eq!(doc.get("x").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_str(), Some("a#b"));
+    }
+}

@@ -1,0 +1,46 @@
+//! # slabforge
+//!
+//! A memcached-compatible cache server with **learned slab classes** — a
+//! from-scratch reproduction of *“Learning Slab Classes to Alleviate
+//! Memory Holes in Memcached”* (Jhabakh Jai & Das, CS.DC 2020).
+//!
+//! Memcached's slab allocator rounds every stored item up to the chunk
+//! size of the nearest larger slab class; the difference is a **memory
+//! hole** (internal fragmentation), ~10 % of cache memory on log-normal
+//! traffic. The paper's contribution is a greedy hill-climbing optimizer
+//! that learns the observed item-size distribution and re-derives the
+//! slab chunk sizes to minimize total holes. `slabforge` implements the
+//! full substrate (slab allocator, item store, LRU, text protocol, TCP
+//! server) plus the optimizer as a first-class online feature, with the
+//! numeric hot loop (batched waste evaluation over candidate
+//! configurations) AOT-compiled from JAX/Pallas to XLA and executed via
+//! PJRT — python never runs on the request path.
+//!
+//! ## Layout
+//!
+//! * [`slab`] — pages / chunks / classes; the allocator whose holes we fight
+//! * [`store`] — hash table, segmented LRU, eviction, expiry; the KV engine
+//! * [`protocol`] — memcached text protocol + `stats`-family introspection
+//! * [`server`] / [`client`] — threaded TCP front end and a blocking client
+//! * [`workload`] — deterministic traffic generators (the paper's
+//!   log-normals and the §6.1 adversarial patterns)
+//! * [`optimizer`] — the paper's Algorithm 1 plus batched steepest
+//!   descent and an exact DP lower bound; online histogram collection
+//!   and the auto-retuning coordinator
+//! * [`runtime`] — PJRT engine loading the AOT `artifacts/*.hlo.txt`
+//! * [`config`] — TOML-subset config + CLI
+//! * [`benchkit`] — measurement harness used by `rust/benches/*`
+//! * [`util`] — RNG, histograms, JSON, formatting
+
+pub mod benchkit;
+pub mod client;
+pub mod config;
+pub mod optimizer;
+pub mod protocol;
+pub mod runtime;
+pub mod server;
+pub mod slab;
+pub mod store;
+pub mod testutil;
+pub mod util;
+pub mod workload;

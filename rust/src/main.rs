@@ -1,0 +1,302 @@
+//! `slabforge` — memcached-compatible cache server with learned slab
+//! classes (reproduction of Jhabakh Jai & Das, 2020).
+//!
+//! ```text
+//! slabforge serve    [--config slabforge.toml] [--listen host:port]
+//!                    [--mem-limit BYTES] [--shards N] [--growth-factor F]
+//!                    [--slab-sizes a,b,c] [--optimizer] [--backend rust|xla]
+//!                    [--algorithm paper|steepest|dp] [--artifacts DIR]
+//! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
+//!                    [--backend rust|xla] [--seed N]
+//!                    # offline: emit a learned `-o slab_sizes` list
+//! slabforge replay   --trace trace.csv [--mem-limit BYTES]
+//! slabforge version
+//! ```
+
+use slabforge::config::cli::Args;
+use slabforge::config::settings::{Algorithm, Backend, Settings};
+use slabforge::optimizer::autotune::AutoTuner;
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend};
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::runtime::{XlaService, XlaWasteBackend};
+use slabforge::server::{NoControl, Server};
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::util::fmt::{human_bytes, human_count};
+use slabforge::util::histogram::SizeHistogram;
+use slabforge::workload::{Op, Trace};
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+const SWITCHES: &[&str] = &["optimizer", "help", "verbose"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw, SWITCHES) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("version") => {
+            println!("slabforge {}", env!("CARGO_PKG_VERSION"));
+            0
+        }
+        _ => {
+            eprintln!("{}", HELP);
+            if args.switch("help") {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "usage: slabforge <serve|optimize|replay|version> [--flags]\n\
+                    see rust/src/main.rs header or README.md for details";
+
+fn fail(msg: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}
+
+fn settings_from(args: &Args) -> Result<Settings, String> {
+    let mut s = match args.flag("config") {
+        Some(path) => Settings::load(path).map_err(|e| e.to_string())?,
+        None => Settings::default(),
+    };
+    if let Some(l) = args.flag("listen") {
+        s.listen = l.to_string();
+    }
+    if let Some(n) = args.flag_parse::<usize>("mem-limit").map_err(|e| e.to_string())? {
+        s.mem_limit = n;
+    }
+    if let Some(n) = args.flag_parse::<usize>("shards").map_err(|e| e.to_string())? {
+        s.shards = n;
+    }
+    if let Some(n) = args.flag_parse::<usize>("threads").map_err(|e| e.to_string())? {
+        s.threads = n;
+    }
+    if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
+        s.policy = ChunkSizePolicy::Geometric {
+            chunk_min: 96,
+            factor: f,
+        };
+    }
+    if let Some(sizes) = args.flag_usize_list("slab-sizes").map_err(|e| e.to_string())? {
+        s.policy = ChunkSizePolicy::Explicit(sizes);
+    }
+    if args.switch("optimizer") {
+        s.optimizer.enabled = true;
+    }
+    if let Some(b) = args.flag("backend") {
+        s.optimizer.backend =
+            Backend::parse(b).ok_or_else(|| format!("unknown backend '{b}'"))?;
+    }
+    if let Some(a) = args.flag("algorithm") {
+        s.optimizer.algorithm =
+            Algorithm::parse(a).ok_or_else(|| format!("unknown algorithm '{a}'"))?;
+    }
+    if let Some(d) = args.flag("artifacts") {
+        s.optimizer.artifacts_dir = d.to_string();
+    }
+    s.validate().map_err(|e| e.to_string())?;
+    Ok(s)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let settings = match settings_from(args) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let store = match ShardedStore::new(&settings) {
+        Ok(s) => Arc::new(s),
+        Err(e) => return fail(e),
+    };
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+
+    let (control, _tuner_thread): (Arc<dyn slabforge::server::Control>, _) =
+        if settings.optimizer.enabled {
+            let tuner = match AutoTuner::new(
+                store.clone(),
+                collector.clone(),
+                settings.optimizer.clone(),
+                settings.page_size,
+            ) {
+                Ok(t) => t,
+                Err(e) => return fail(e),
+            };
+            let handle = tuner.spawn(shutdown.clone());
+            eprintln!(
+                "optimizer: enabled ({:?}/{:?}, every {}s)",
+                settings.optimizer.algorithm,
+                settings.optimizer.backend,
+                settings.optimizer.interval_secs
+            );
+            (tuner, Some(handle))
+        } else {
+            (Arc::new(NoControl), None)
+        };
+
+    let server = Server::with_control(store.clone(), control);
+    let handle = match server.start(&settings.listen) {
+        Ok(h) => h,
+        Err(e) => return fail(format!("cannot bind {}: {e}", settings.listen)),
+    };
+    eprintln!(
+        "slabforge listening on {} ({} shards, {} limit, {} classes)",
+        handle.addr(),
+        settings.shards,
+        human_bytes(settings.mem_limit as f64),
+        store.chunk_sizes().len(),
+    );
+
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `optimize`: offline — learn slab sizes from a histogram CSV
+/// (`size,count` per line) and print the `-o slab_sizes`-style result.
+fn cmd_optimize(args: &Args) -> i32 {
+    let Some(path) = args.flag("histogram") else {
+        return fail("--histogram FILE required (CSV 'size,count')");
+    };
+    let hist = match load_histogram_csv(Path::new(path)) {
+        Ok(h) => h,
+        Err(e) => return fail(e),
+    };
+    let algorithm = match args.flag("algorithm") {
+        Some(a) => match Algorithm::parse(a) {
+            Some(a) => a,
+            None => return fail(format!("unknown algorithm '{a}'")),
+        },
+        None => Algorithm::SteepestDescent,
+    };
+    let seed = args.flag_or::<u64>("seed", 0x51ab_f00d).unwrap_or(0x51ab_f00d);
+    let current = match args.flag_usize_list("slab-sizes") {
+        Ok(Some(sizes)) => sizes,
+        _ => slabforge::slab::geometry::memcached_default_sizes(),
+    };
+    let params = OptimizerParams {
+        algorithm,
+        seed,
+        ..Default::default()
+    };
+
+    let use_xla = args.flag("backend") == Some("xla");
+    let report = if use_xla {
+        let dir = args.flag("artifacts").unwrap_or("artifacts");
+        let service = match XlaService::start(Path::new(dir)) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        };
+        let backend = XlaWasteBackend::new(&service, &hist);
+        optimize(&backend, &hist, &current, &params)
+    } else {
+        let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+        optimize(&backend, &hist, &current, &params)
+    };
+
+    println!("# slabforge optimize ({:?}, backend {})", report.algorithm, report.backend);
+    println!("# items:      {}", human_count(hist.total_items()));
+    println!("# old waste:  {} bytes", human_count(report.old_waste));
+    println!("# new waste:  {} bytes", human_count(report.new_waste));
+    println!("# recovered:  {:.2}%", report.recovery() * 100.0);
+    println!("# old span:   {:?}", report.old_span);
+    println!("# new span:   {:?}", report.new_span);
+    let list = report
+        .new_config
+        .iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    println!("-o slab_sizes={list}");
+    0
+}
+
+fn load_histogram_csv(path: &Path) -> Result<SizeHistogram, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut hist = SizeHistogram::new(16384);
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || (i == 0 && line.starts_with("size")) {
+            continue;
+        }
+        let (s, c) = line
+            .split_once(',')
+            .ok_or_else(|| format!("line {}: expected 'size,count'", i + 1))?;
+        let size: usize = s.trim().parse().map_err(|_| format!("line {}: bad size", i + 1))?;
+        let count: u64 = c.trim().parse().map_err(|_| format!("line {}: bad count", i + 1))?;
+        hist.record_n(size, count);
+    }
+    Ok(hist)
+}
+
+/// `replay`: run a trace file against an embedded store, print stats.
+fn cmd_replay(args: &Args) -> i32 {
+    let Some(path) = args.flag("trace") else {
+        return fail("--trace FILE required");
+    };
+    let trace = match Trace::load(Path::new(path)) {
+        Ok(t) => t,
+        Err(e) => return fail(e),
+    };
+    let settings = match settings_from(args) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let store = match ShardedStore::new(&settings) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let started = std::time::Instant::now();
+    let mut errors = 0u64;
+    for op in &trace.ops {
+        let r = match op {
+            Op::Set { key, value_len } => store
+                .set(key.as_bytes(), &vec![0u8; *value_len], 0, 0)
+                .is_ok(),
+            Op::Get { key } => {
+                store.get(key.as_bytes());
+                true
+            }
+            Op::Delete { key } => {
+                store.delete(key.as_bytes());
+                true
+            }
+        };
+        if !r {
+            errors += 1;
+        }
+    }
+    let elapsed = started.elapsed();
+    let slabs = store.slab_stats();
+    println!(
+        "replayed {} ops in {:.3}s ({:.0} ops/s), errors {}",
+        human_count(trace.ops.len() as u64),
+        elapsed.as_secs_f64(),
+        trace.ops.len() as f64 / elapsed.as_secs_f64(),
+        errors
+    );
+    println!(
+        "items {}  bytes {}  holes {} ({:.2}% of allocated)",
+        human_count(store.len() as u64),
+        human_bytes(slabs.requested_bytes as f64),
+        human_bytes(slabs.hole_bytes as f64),
+        slabs.hole_fraction() * 100.0
+    );
+    0
+}

@@ -1,0 +1,296 @@
+//! The online coordinator: watch the collector, learn the traffic
+//! pattern, optimize, and live-reconfigure the store — the paper's
+//! offline workflow (measure → run algorithm → restart with
+//! `-o slab_sizes`) turned into a background feature.
+
+use super::collector::SizeCollector;
+use super::engine::{optimize, OptimizeReport, OptimizerParams, RustBackend};
+use super::waste::WasteMap;
+use crate::config::settings::{Backend, OptimizerSettings};
+use crate::runtime::{XlaService, XlaWasteBackend};
+use crate::server::conn::Control;
+use crate::slab::policy::{validate_sizes, ChunkSizePolicy};
+use crate::store::sharded::ShardedStore;
+use crate::store::store::MigrationReport;
+use crate::util::histogram::SizeHistogram;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What one tuner pass decided.
+#[derive(Debug)]
+pub enum TuneOutcome {
+    /// Too few samples so far.
+    NotEnoughData { seen: u64, need: u64 },
+    /// Optimized but predicted savings below the apply threshold.
+    BelowThreshold(OptimizeReport),
+    /// Optimized and applied.
+    Applied(OptimizeReport, Vec<MigrationReport>),
+}
+
+/// The auto-tuner; also the server's [`Control`] implementation, so
+/// `slabs optimize` / `slabs reconfigure` act through the same object.
+pub struct AutoTuner {
+    store: Arc<ShardedStore>,
+    collector: Arc<SizeCollector>,
+    settings: OptimizerSettings,
+    engine: Option<Arc<XlaService>>,
+    page_size: usize,
+    history: Mutex<Vec<OptimizeReport>>,
+}
+
+impl AutoTuner {
+    /// Build a tuner; with `Backend::Xla` this compiles the AOT
+    /// artifacts up front (fails fast when `make artifacts` is stale).
+    pub fn new(
+        store: Arc<ShardedStore>,
+        collector: Arc<SizeCollector>,
+        settings: OptimizerSettings,
+        page_size: usize,
+    ) -> Result<Arc<Self>, String> {
+        let engine = match settings.backend {
+            Backend::Xla => Some(
+                XlaService::start(Path::new(&settings.artifacts_dir))
+                    .map_err(|e| format!("cannot load artifacts: {e}"))?,
+            ),
+            Backend::Rust => None,
+        };
+        Ok(Arc::new(AutoTuner {
+            store,
+            collector,
+            settings,
+            engine,
+            page_size,
+            history: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// Reports of every optimization run so far.
+    pub fn history(&self) -> Vec<OptimizeReport> {
+        self.history.lock().unwrap().clone()
+    }
+
+    fn params(&self) -> OptimizerParams {
+        OptimizerParams {
+            algorithm: self.settings.algorithm,
+            seed: self.settings.seed,
+            max_chunk: self.page_size as u32,
+            ..Default::default()
+        }
+    }
+
+    /// One tuner pass: snapshot → optimize → maybe apply.
+    pub fn run_once(&self) -> Result<TuneOutcome, String> {
+        let seen = self.collector.total();
+        if seen < self.settings.min_samples {
+            return Ok(TuneOutcome::NotEnoughData {
+                seen,
+                need: self.settings.min_samples,
+            });
+        }
+        let hist = self.collector.snapshot();
+        let current = self.store.chunk_sizes();
+        let report = self.optimize_against(&hist, &current);
+        self.history.lock().unwrap().push(report.clone());
+
+        let improvement = report.recovery();
+        if improvement < self.settings.min_improvement {
+            return Ok(TuneOutcome::BelowThreshold(report));
+        }
+        let sizes: Vec<usize> = report.new_config.iter().map(|&c| c as usize).collect();
+        let migrations = self
+            .store
+            .reconfigure(ChunkSizePolicy::Explicit(sizes))
+            .map_err(|e| format!("reconfigure failed: {e}"))?;
+        Ok(TuneOutcome::Applied(report, migrations))
+    }
+
+    fn optimize_against(&self, hist: &SizeHistogram, current: &[usize]) -> OptimizeReport {
+        let params = self.params();
+        match &self.engine {
+            Some(engine) => {
+                let backend = XlaWasteBackend::new(engine, hist);
+                optimize(&backend, hist, current, &params)
+            }
+            None => {
+                let backend = RustBackend::new(WasteMap::from_histogram(hist));
+                optimize(&backend, hist, current, &params)
+            }
+        }
+    }
+
+    /// Background loop every `interval_secs`; stop via the flag.
+    pub fn spawn(self: &Arc<Self>, shutdown: Arc<AtomicBool>) -> JoinHandle<()> {
+        let tuner = self.clone();
+        std::thread::Builder::new()
+            .name("slabforge-autotune".into())
+            .spawn(move || {
+                let interval = Duration::from_secs(tuner.settings.interval_secs.max(1));
+                let tick = Duration::from_millis(100);
+                let mut waited = Duration::ZERO;
+                while !shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    waited += tick;
+                    if waited < interval {
+                        continue;
+                    }
+                    waited = Duration::ZERO;
+                    let _ = tuner.run_once();
+                }
+            })
+            .expect("spawn autotune thread")
+    }
+}
+
+impl Control for AutoTuner {
+    fn optimize_now(&self) -> String {
+        match self.run_once() {
+            Ok(TuneOutcome::NotEnoughData { seen, need }) => {
+                format!("NOT_ENOUGH_DATA seen={seen} need={need}")
+            }
+            Ok(TuneOutcome::BelowThreshold(r)) => format!(
+                "BELOW_THRESHOLD recovery={:.4} old_waste={} new_waste={}",
+                r.recovery(),
+                r.old_waste,
+                r.new_waste
+            ),
+            Ok(TuneOutcome::Applied(r, migs)) => {
+                let moved: usize = migs.iter().map(|m| m.items_moved).sum();
+                format!(
+                    "APPLIED recovery={:.4} old_waste={} new_waste={} items_moved={moved}",
+                    r.recovery(),
+                    r.old_waste,
+                    r.new_waste
+                )
+            }
+            Err(e) => format!("SERVER_ERROR {e}"),
+        }
+    }
+
+    fn reconfigure(&self, sizes: Vec<usize>) -> Result<String, String> {
+        validate_sizes(&sizes, self.page_size).map_err(|e| e.to_string())?;
+        let migs = self
+            .store
+            .reconfigure(ChunkSizePolicy::Explicit(sizes))
+            .map_err(|e| e.to_string())?;
+        let moved: usize = migs.iter().map(|m| m.items_moved).sum();
+        let dropped: usize = migs.iter().map(|m| m.items_dropped).sum();
+        Ok(format!("RECONFIGURED items_moved={moved} items_dropped={dropped}"))
+    }
+
+    fn sizes_histogram(&self) -> Option<SizeHistogram> {
+        Some(self.collector.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::Algorithm;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::store::Clock;
+    use crate::util::rng::Pcg64;
+    use crate::workload::gen::value_len_for_total;
+
+    fn setup(min_samples: u64) -> (Arc<ShardedStore>, Arc<SizeCollector>, Arc<AutoTuner>) {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                64 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let collector = Arc::new(SizeCollector::default());
+        store.set_observer(collector.clone());
+        let settings = OptimizerSettings {
+            enabled: true,
+            min_samples,
+            min_improvement: 0.05,
+            algorithm: Algorithm::SteepestDescent,
+            backend: Backend::Rust,
+            ..Default::default()
+        };
+        let tuner = AutoTuner::new(store.clone(), collector.clone(), settings, PAGE_SIZE).unwrap();
+        (store, collector, tuner)
+    }
+
+    fn drive_lognormal(store: &ShardedStore, n: usize, seed: u64) {
+        let mut rng = Pcg64::new(seed);
+        for i in 0..n {
+            let total = rng.lognormal(518.0, 0.126).round().max(70.0) as usize;
+            let vlen = value_len_for_total(total.min(16000), true).unwrap();
+            store
+                .set(format!("k{i:08}").as_bytes(), &vec![b'x'; vlen], 0, 0)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn not_enough_data_short_circuits() {
+        let (_, _, tuner) = setup(1000);
+        match tuner.run_once().unwrap() {
+            TuneOutcome::NotEnoughData { seen: 0, need: 1000 } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_cycle_reduces_live_waste() {
+        let (store, _, tuner) = setup(1000);
+        drive_lognormal(&store, 20_000, 3);
+        let before = store.slab_stats().hole_bytes;
+        match tuner.run_once().unwrap() {
+            TuneOutcome::Applied(report, migs) => {
+                assert!(report.recovery() > 0.25, "recovery {}", report.recovery());
+                let after = store.slab_stats().hole_bytes;
+                assert!(after < before, "live holes {after} !< {before}");
+                assert_eq!(migs.iter().map(|m| m.items_dropped).sum::<usize>(), 0);
+                // store still serves every key
+                assert!(store.get(b"k00000000").is_some());
+                assert!(store.get(b"k00019999").is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(tuner.history().len(), 1);
+    }
+
+    #[test]
+    fn control_trait_reconfigure_validates() {
+        let (_, _, tuner) = setup(10);
+        assert!(tuner.reconfigure(vec![500, 400]).is_err());
+        let msg = tuner.reconfigure(vec![304, 600, 1024]).unwrap();
+        assert!(msg.starts_with("RECONFIGURED"), "{msg}");
+    }
+
+    #[test]
+    fn control_optimize_now_reports() {
+        let (store, _, tuner) = setup(100);
+        drive_lognormal(&store, 5000, 4);
+        let msg = tuner.optimize_now();
+        assert!(msg.starts_with("APPLIED"), "{msg}");
+    }
+
+    #[test]
+    fn sizes_histogram_exposed() {
+        let (store, _, tuner) = setup(10);
+        drive_lognormal(&store, 100, 5);
+        let h = tuner.sizes_histogram().unwrap();
+        assert_eq!(h.total_items(), 100);
+    }
+
+    #[test]
+    fn spawned_loop_stops_on_shutdown() {
+        let (_, _, tuner) = setup(u64::MAX);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = tuner.spawn(stop.clone());
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Online item-size collector — "analyses the pattern of the sizes of
+//! items previously entered into the memory" (paper §Abstract), without
+//! slowing the set path: lock-free striped atomic counters for the
+//! byte-granular head, a mutexed tail map for oversized items.
+
+use crate::store::store::SizeObserver;
+use crate::util::histogram::SizeHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default exact-head capacity: byte-granular up to 16 KiB (matches the
+/// AOT artifact's S = 16384).
+pub const DEFAULT_CAP: usize = 16384;
+
+pub struct SizeCollector {
+    /// counts[i] = items of total size i+1 (atomic, no lock).
+    counts: Vec<AtomicU64>,
+    /// Sizes above the head.
+    overflow: Mutex<BTreeMap<usize, u64>>,
+    total: AtomicU64,
+    max_size: AtomicUsize,
+}
+
+impl SizeCollector {
+    pub fn new(cap: usize) -> Self {
+        SizeCollector {
+            counts: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            overflow: Mutex::new(BTreeMap::new()),
+            total: AtomicU64::new(0),
+            max_size: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn record(&self, size: usize) {
+        if size == 0 {
+            return;
+        }
+        if size <= self.counts.len() {
+            self.counts[size - 1].fetch_add(1, Ordering::Relaxed);
+        } else {
+            *self.overflow.lock().unwrap().entry(size).or_insert(0) += 1;
+        }
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.max_size.fetch_max(size, Ordering::Relaxed);
+    }
+
+    /// Items observed since construction / last reset.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.max_size.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough snapshot for optimization (counters may lag by
+    /// in-flight sets; the optimizer tolerates that).
+    pub fn snapshot(&self) -> SizeHistogram {
+        let mut h = SizeHistogram::new(self.counts.len());
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n > 0 {
+                h.record_n(i + 1, n);
+            }
+        }
+        for (&size, &n) in self.overflow.lock().unwrap().iter() {
+            h.record_n(size, n);
+        }
+        h
+    }
+
+    /// Zero all counters (e.g. after a reconfiguration epoch).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.overflow.lock().unwrap().clear();
+        self.total.store(0, Ordering::Relaxed);
+        self.max_size.store(0, Ordering::Relaxed);
+    }
+}
+
+impl SizeObserver for SizeCollector {
+    fn observe(&self, total_size: usize) {
+        self.record(total_size);
+    }
+}
+
+impl Default for SizeCollector {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn record_and_snapshot() {
+        let c = SizeCollector::new(1024);
+        c.record(100);
+        c.record(100);
+        c.record(1024);
+        c.record(50_000); // overflow
+        let h = c.snapshot();
+        assert_eq!(h.count(100), 2);
+        assert_eq!(h.count(1024), 1);
+        assert_eq!(h.count(50_000), 1);
+        assert_eq!(c.total(), 4);
+        assert_eq!(c.max_size(), 50_000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let c = SizeCollector::new(64);
+        c.record(10);
+        c.record(100_000);
+        c.reset();
+        assert_eq!(c.total(), 0);
+        assert_eq!(c.snapshot().total_items(), 0);
+        assert_eq!(c.max_size(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let c = Arc::new(SizeCollector::new(4096));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000usize {
+                        c.record(1 + ((t * 10_000 + i) % 4096));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.total(), 80_000);
+        assert_eq!(c.snapshot().total_items(), 80_000);
+    }
+
+    #[test]
+    fn observer_trait_wires_in() {
+        let c: Arc<SizeCollector> = Arc::new(SizeCollector::default());
+        let obs: Arc<dyn crate::store::store::SizeObserver> = c.clone();
+        obs.observe(518);
+        assert_eq!(c.snapshot().count(518), 1);
+    }
+}

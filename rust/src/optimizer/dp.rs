@@ -1,0 +1,324 @@
+//! Exact optimal slab classes by dynamic programming — the lower bound
+//! the paper's greedy algorithm is judged against (ablation D4/D6).
+//!
+//! Observation: an optimal chunk value always coincides with some
+//! observed item size (lowering a chunk to the largest covered size
+//! never increases waste). So the problem reduces to choosing K
+//! boundaries over the m distinct sizes — a classic 1-D partition
+//! problem whose cost matrix satisfies the quadrangle inequality, which
+//! makes the per-layer argmin monotone. We exploit that with
+//! divide-and-conquer DP: O(K · m log m) instead of O(K · m²).
+
+use super::waste::WasteMap;
+
+/// Result of an exact optimization.
+#[derive(Clone, Debug)]
+pub struct DpResult {
+    /// Optimal chunk sizes (ascending, ≤ K values — fewer when the
+    /// histogram has fewer distinct sizes, the §6.1 best case).
+    pub config: Vec<u32>,
+    /// Total waste of `config` (0 when K ≥ distinct sizes).
+    pub waste: u64,
+    /// cost() invocations (the DP's work measure).
+    pub evaluations: u64,
+    /// DP layers solved.
+    pub iterations: u64,
+}
+
+/// Solve for the optimal ≤K-class configuration covering every size in
+/// `map` (the top class equals the maximum observed size).
+pub fn dp_optimal(map: &WasteMap, k: usize) -> DpResult {
+    dp_optimal_with_overflow(map, k, None)
+}
+
+/// Like [`dp_optimal`], but sizes above the last learned boundary are
+/// charged to a fixed `overflow` chunk (the first suffix class of the
+/// surrounding slab table) instead of being forced under the learned
+/// top class. This is the true lower bound for the engine's
+/// learn-a-span-within-a-table setting: greedy searches can shed their
+/// largest items into the suffix class, and so may the optimum.
+pub fn dp_optimal_with_overflow(map: &WasteMap, k: usize, overflow: Option<u32>) -> DpResult {
+    let sizes = map.sizes();
+    let counts = map.counts();
+    let m = sizes.len();
+    if m == 0 || k == 0 {
+        return DpResult {
+            config: Vec::new(),
+            waste: 0,
+            evaluations: 0,
+            iterations: 0,
+        };
+    }
+    if k >= m {
+        // one exact-fit class per distinct size: zero waste (§6.1 best case)
+        return DpResult {
+            config: sizes.to_vec(),
+            waste: 0,
+            evaluations: 0,
+            iterations: 0,
+        };
+    }
+
+    // prefix sums over distinct sizes
+    let mut pc = vec![0u64; m + 1]; // counts
+    let mut pb = vec![0u64; m + 1]; // bytes
+    for i in 0..m {
+        pc[i + 1] = pc[i] + counts[i];
+        pb[i + 1] = pb[i] + sizes[i] as u64 * counts[i];
+    }
+    let mut evals = 0u64;
+    // cost of one class with chunk sizes[j] covering sizes[i..=j]
+    let mut cost = |i: usize, j: usize| -> u64 {
+        evals += 1;
+        sizes[j] as u64 * (pc[j + 1] - pc[i]) - (pb[j + 1] - pb[i])
+    };
+
+    const INF: u64 = u64::MAX / 4;
+    // dp[j] = best waste covering 0..=j with the current layer count,
+    // where the last class's chunk is sizes[j].
+    let mut prev = vec![INF; m];
+    let mut cur = vec![INF; m];
+    // parents[layer][j] = index of the previous layer's last boundary
+    let mut parents: Vec<Vec<u32>> = Vec::with_capacity(k);
+
+    for (j, slot) in prev.iter_mut().enumerate() {
+        *slot = cost(0, j);
+    }
+    parents.push(vec![u32::MAX; m]); // layer 1 has no parent
+
+    for _layer in 2..=k {
+        let mut parent = vec![u32::MAX; m];
+        // D&C over j with monotone argmin.
+        // solve(j_lo..=j_hi) knowing opt(j) ∈ [i_lo, i_hi]
+        let mut stack = vec![(0usize, m - 1, 0usize, m - 1)];
+        while let Some((j_lo, j_hi, i_lo, i_hi)) = stack.pop() {
+            if j_lo > j_hi {
+                continue;
+            }
+            let j = j_lo + (j_hi - j_lo) / 2;
+            // last class covers (i..=j] with chunk sizes[j]; previous
+            // layer ends at i (so i < j).
+            let hi = i_hi.min(j.saturating_sub(1));
+            let mut best = INF;
+            let mut best_i = usize::MAX;
+            for i in i_lo..=hi {
+                if prev[i] >= INF {
+                    continue;
+                }
+                let c = prev[i] + cost(i + 1, j);
+                if c < best {
+                    best = c;
+                    best_i = i;
+                }
+            }
+            cur[j] = best;
+            parent[j] = best_i as u32;
+            if best_i != usize::MAX {
+                if j > j_lo {
+                    stack.push((j_lo, j - 1, i_lo, best_i));
+                }
+                if j < j_hi {
+                    stack.push((j + 1, j_hi, best_i, i_hi));
+                }
+            } else {
+                // no feasible split (j too small for this layer count)
+                if j > j_lo {
+                    stack.push((j_lo, j - 1, i_lo, i_hi));
+                }
+                if j < j_hi {
+                    stack.push((j + 1, j_hi, i_lo, i_hi));
+                }
+            }
+        }
+        parents.push(parent);
+        std::mem::swap(&mut prev, &mut cur);
+        cur.fill(INF);
+    }
+
+    // pick the last learned boundary: forced to m-1 without an
+    // overflow class; otherwise the tail above it is charged `overflow`
+    let (mut j, waste) = match overflow {
+        None => (m - 1, prev[m - 1]),
+        Some(ov) => {
+            assert!(
+                ov as u64 >= sizes[m - 1] as u64,
+                "overflow chunk {ov} cannot cover max size {}",
+                sizes[m - 1]
+            );
+            let mut best = (m - 1, prev[m - 1]);
+            for j in 0..m {
+                if prev[j] >= INF {
+                    continue;
+                }
+                let tail = ov as u64 * (pc[m] - pc[j + 1]) - (pb[m] - pb[j + 1]);
+                let total = prev[j] + tail;
+                if total < best.1 {
+                    best = (j, total);
+                }
+            }
+            best
+        }
+    };
+
+    // reconstruct boundaries from the chosen end
+    let mut config = Vec::with_capacity(k);
+    for layer in (0..k).rev() {
+        config.push(sizes[j]);
+        let p = parents[layer][j];
+        if p == u32::MAX {
+            break;
+        }
+        j = p as usize;
+    }
+    config.reverse();
+
+    DpResult {
+        config,
+        waste,
+        evaluations: evals,
+        iterations: k as u64,
+    }
+}
+
+/// Brute-force optimum (exponential; ≤ ~15 distinct sizes): the oracle
+/// the DP is validated against in unit, property, and ablation tests.
+pub fn brute_force_optimal(map: &WasteMap, k: usize) -> (Vec<u32>, u64) {
+    let sizes = map.sizes();
+    let m = sizes.len();
+    if m == 0 || k == 0 {
+        return (Vec::new(), 0);
+    }
+    if k >= m {
+        return (sizes.to_vec(), 0);
+    }
+    // choose k-1 boundaries from 0..m-1 (last boundary fixed at m-1)
+    let mut best = (Vec::new(), u64::MAX);
+    let mut choose = vec![0usize; k - 1];
+    fn rec(
+        map: &WasteMap,
+        sizes: &[u32],
+        choose: &mut Vec<usize>,
+        pos: usize,
+        start: usize,
+        best: &mut (Vec<u32>, u64),
+    ) {
+        let m = sizes.len();
+        if pos == choose.len() {
+            let mut cfg: Vec<u32> = choose.iter().map(|&i| sizes[i]).collect();
+            cfg.push(sizes[m - 1]);
+            let w = map.waste_of_sorted(&cfg);
+            if w < best.1 {
+                *best = (cfg, w);
+            }
+            return;
+        }
+        for i in start..m - 1 {
+            choose[pos] = i;
+            rec(map, sizes, choose, pos + 1, i + 1, best);
+        }
+    }
+    rec(map, sizes, &mut choose, 0, 0, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn map(pairs: &[(u32, u64)]) -> WasteMap {
+        WasteMap::from_pairs(pairs.iter().copied())
+    }
+
+    #[test]
+    fn trivial_cases() {
+        let m = map(&[(100, 5)]);
+        let r = dp_optimal(&m, 1);
+        assert_eq!(r.config, vec![100]);
+        assert_eq!(r.waste, 0);
+        let r = dp_optimal(&m, 3);
+        assert_eq!(r.waste, 0, "k >= m: exact fit");
+        let empty = WasteMap::from_pairs(std::iter::empty());
+        assert_eq!(dp_optimal(&empty, 4).config, Vec::<u32>::new());
+    }
+
+    #[test]
+    fn two_clusters_two_classes() {
+        // two tight clusters: optimal 2 classes sit on cluster maxima
+        let m = map(&[(100, 10), (101, 10), (500, 10), (501, 10)]);
+        let r = dp_optimal(&m, 2);
+        assert_eq!(r.config, vec![101, 501]);
+        assert_eq!(r.waste, 20); // one byte for each of the 10+10 lower items
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_inputs() {
+        let mut rng = Pcg64::new(11);
+        for trial in 0..30 {
+            let m_sizes = 3 + rng.gen_range(9) as usize;
+            let mut pairs: Vec<(u32, u64)> = Vec::new();
+            let mut s = 10u32;
+            for _ in 0..m_sizes {
+                s += 1 + rng.gen_range(400) as u32;
+                pairs.push((s, 1 + rng.gen_range(50)));
+            }
+            let wm = WasteMap::from_pairs(pairs.iter().copied());
+            for k in 1..=m_sizes.min(5) {
+                let dp = dp_optimal(&wm, k);
+                let (_, bf_waste) = brute_force_optimal(&wm, k);
+                assert_eq!(
+                    dp.waste, bf_waste,
+                    "trial {trial} k={k} pairs={pairs:?} dp={:?}",
+                    dp.config
+                );
+                // reported waste is consistent with the evaluator
+                assert_eq!(wm.waste_of_sorted(&dp.config), dp.waste);
+            }
+        }
+    }
+
+    #[test]
+    fn waste_monotone_in_k() {
+        let mut rng = Pcg64::new(12);
+        let pairs: Vec<(u32, u64)> = {
+            let mut m = std::collections::BTreeMap::new();
+            for _ in 0..5000 {
+                let s = rng.lognormal(518.0, 0.126).round().max(60.0) as u32;
+                *m.entry(s).or_insert(0u64) += 1;
+            }
+            m.into_iter().collect()
+        };
+        let wm = WasteMap::from_pairs(pairs.iter().copied());
+        let mut last = u64::MAX;
+        for k in 1..=8 {
+            let w = dp_optimal(&wm, k).waste;
+            assert!(w <= last, "k={k}: {w} > {last}");
+            last = w;
+        }
+    }
+
+    #[test]
+    fn top_class_covers_max() {
+        let m = map(&[(100, 1), (900, 1), (5000, 1)]);
+        for k in 1..=3 {
+            let r = dp_optimal(&m, k);
+            assert_eq!(*r.config.last().unwrap(), 5000, "k={k}");
+        }
+    }
+
+    #[test]
+    fn dc_efficiency() {
+        // m distinct sizes, k classes: evals should be well under m²k
+        let pairs: Vec<(u32, u64)> = (1..=2000u32).map(|s| (s * 3, 1 + (s % 7) as u64)).collect();
+        let wm = WasteMap::from_pairs(pairs.iter().copied());
+        let r = dp_optimal(&wm, 6);
+        let m = 2000u64;
+        assert!(
+            r.evaluations < m * 20 * 6,
+            "evals {} vs naive {}",
+            r.evaluations,
+            m * m * 6
+        );
+        assert!(r.waste > 0);
+    }
+}

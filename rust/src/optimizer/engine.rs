@@ -1,0 +1,339 @@
+//! Backend-pluggable optimizer front door.
+//!
+//! The algorithms ([`hillclimb`](super::hillclimb),
+//! [`steepest`](super::steepest), [`dp`](super::dp)) are generic over a
+//! [`WasteBackend`]; two implementations exist:
+//!
+//! * [`RustBackend`] — the exact prefix-sum evaluator ([`WasteMap`]).
+//! * `runtime::XlaWasteBackend` — the AOT Pallas kernel over PJRT
+//!   (bit-identical results; one `waste_eval` call scores 256
+//!   candidates).
+
+use super::hillclimb::{paper_hill_climb, HillClimbParams};
+use super::steepest::{steepest_descent, SteepestParams};
+use super::waste::WasteMap;
+use crate::config::settings::Algorithm;
+use crate::util::histogram::SizeHistogram;
+use std::time::Instant;
+
+/// Scores candidate chunk configurations against a fixed histogram.
+pub trait WasteBackend {
+    /// Wasted bytes for each configuration (rows may be unsorted and
+    /// contain duplicates; see `waste.rs` semantics).
+    fn eval_batch(&self, configs: &[Vec<u32>]) -> Vec<u64>;
+
+    fn eval_one(&self, config: &[u32]) -> u64 {
+        self.eval_batch(std::slice::from_ref(&config.to_vec()))[0]
+    }
+
+    /// Preferred number of configurations per `eval_batch` call.
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Exact in-process evaluator.
+pub struct RustBackend {
+    map: WasteMap,
+}
+
+impl RustBackend {
+    pub fn new(map: WasteMap) -> Self {
+        RustBackend { map }
+    }
+
+    pub fn map(&self) -> &WasteMap {
+        &self.map
+    }
+}
+
+impl WasteBackend for RustBackend {
+    fn eval_batch(&self, configs: &[Vec<u32>]) -> Vec<u64> {
+        configs.iter().map(|c| self.map.waste_of(c)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// What one optimization run produced.
+#[derive(Clone, Debug)]
+pub struct OptimizeReport {
+    pub algorithm: Algorithm,
+    pub backend: &'static str,
+    /// Full chunk table before / after (prefix + learned span + suffix).
+    pub old_config: Vec<u32>,
+    pub new_config: Vec<u32>,
+    /// The learned span only (what the paper's tables list).
+    pub old_span: Vec<u32>,
+    pub new_span: Vec<u32>,
+    pub old_waste: u64,
+    pub new_waste: u64,
+    pub iterations: u64,
+    pub evaluations: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl OptimizeReport {
+    /// The paper's headline: fraction of wasted memory recovered.
+    pub fn recovery(&self) -> f64 {
+        if self.old_waste == 0 {
+            0.0
+        } else {
+            1.0 - self.new_waste as f64 / self.old_waste as f64
+        }
+    }
+}
+
+/// Optimizer configuration.
+#[derive(Clone, Debug)]
+pub struct OptimizerParams {
+    pub algorithm: Algorithm,
+    pub seed: u64,
+    /// Algorithm 1's non-improving-tries budget.
+    pub max_failures: u32,
+    /// Safety cap on iterations.
+    pub max_iters: u64,
+    /// Chunk bounds (page size upper).
+    pub min_chunk: u32,
+    pub max_chunk: u32,
+}
+
+impl Default for OptimizerParams {
+    fn default() -> Self {
+        OptimizerParams {
+            algorithm: Algorithm::SteepestDescent,
+            seed: 0x51ab_f00d,
+            max_failures: 1000,
+            max_iters: 5_000_000,
+            min_chunk: crate::slab::MIN_CHUNK as u32,
+            max_chunk: crate::slab::PAGE_SIZE as u32,
+        }
+    }
+}
+
+/// Run one optimization against `current_config` (the store's full
+/// chunk table) and the observed `hist`.
+///
+/// Only the **engaged span** — the contiguous run of classes that
+/// actually received items — is learned (K stays constant, the paper's
+/// constraint); prefix and suffix classes are preserved so
+/// out-of-distribution items still have a home.
+pub fn optimize<B: WasteBackend>(
+    backend: &B,
+    hist: &SizeHistogram,
+    current_config: &[usize],
+    params: &OptimizerParams,
+) -> OptimizeReport {
+    let started = Instant::now();
+    let full: Vec<u32> = current_config.iter().map(|&c| c as u32).collect();
+    let old_waste = backend.eval_one(&full);
+
+    // engaged span: classes covering [min_seen, max_seen]
+    let (span_lo, span_hi) = engaged_span(&full, hist);
+    let old_span: Vec<u32> = full[span_lo..span_hi].to_vec();
+
+    let assemble = |span: &[u32]| -> Vec<u32> {
+        let mut cfg = Vec::with_capacity(full.len());
+        cfg.extend_from_slice(&full[..span_lo]);
+        cfg.extend_from_slice(span);
+        cfg.extend_from_slice(&full[span_hi..]);
+        cfg
+    };
+
+    let outcome = match params.algorithm {
+        Algorithm::PaperHillClimb => paper_hill_climb(
+            backend,
+            &full,
+            span_lo..span_hi,
+            &HillClimbParams {
+                seed: params.seed,
+                max_failures: params.max_failures,
+                max_iters: params.max_iters,
+                min_chunk: params.min_chunk,
+                max_chunk: params.max_chunk,
+            },
+        ),
+        Algorithm::SteepestDescent => steepest_descent(
+            backend,
+            &full,
+            span_lo..span_hi,
+            &SteepestParams {
+                max_iters: params.max_iters,
+                min_chunk: params.min_chunk,
+                max_chunk: params.max_chunk,
+                initial_step: 256,
+            },
+        ),
+        Algorithm::DpOptimal => {
+            let map = WasteMap::from_histogram(hist);
+            let k = span_hi - span_lo;
+            // items above the learned span overflow into the first
+            // suffix class (greedy searches may use it too — the bound
+            // must share the search space)
+            let overflow = full.get(span_hi).copied();
+            let dp = super::dp::dp_optimal_with_overflow(&map, k, overflow);
+            let mut cfg = assemble(&dp.config);
+            cfg.sort_unstable();
+            cfg.dedup();
+            super::hillclimb::Outcome {
+                config: cfg,
+                evaluations: dp.evaluations,
+                iterations: dp.iterations,
+            }
+        }
+    };
+
+    let new_waste = backend.eval_one(&outcome.config);
+    // never regress: keep the old table when the search failed to improve
+    let (new_config, new_waste) = if new_waste > old_waste {
+        (full.clone(), old_waste)
+    } else {
+        (outcome.config, new_waste)
+    };
+    let new_span: Vec<u32> = new_config
+        .iter()
+        .copied()
+        .filter(|c| !full[..span_lo].contains(c) && !full[span_hi..].contains(c))
+        .collect();
+
+    OptimizeReport {
+        algorithm: params.algorithm,
+        backend: backend.name(),
+        old_config: full,
+        old_span,
+        new_span,
+        new_config,
+        old_waste,
+        new_waste,
+        iterations: outcome.iterations,
+        evaluations: outcome.evaluations,
+        elapsed: started.elapsed(),
+    }
+}
+
+/// Index range (lo..hi) of classes that received items.
+fn engaged_span(full: &[u32], hist: &SizeHistogram) -> (usize, usize) {
+    if hist.total_items() == 0 {
+        return (0, full.len());
+    }
+    let min_seen = hist.iter().next().map(|(s, _)| s as u32).unwrap_or(0);
+    let max_seen = hist.max_size() as u32;
+    let lo = full.partition_point(|&c| c < min_seen);
+    let hi = full.partition_point(|&c| c < max_seen) + 1;
+    (lo.min(full.len() - 1), hi.min(full.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::geometry::memcached_default_sizes;
+    use crate::util::rng::Pcg64;
+
+    fn lognormal_hist(median: f64, sigma: f64, n: usize, seed: u64) -> SizeHistogram {
+        let mut h = SizeHistogram::new(16384);
+        let mut rng = Pcg64::new(seed);
+        for _ in 0..n {
+            let s = rng.lognormal(median, sigma).round().max(50.0) as usize;
+            h.record(s.min(16384));
+        }
+        h
+    }
+
+    #[test]
+    fn engaged_span_covers_histogram() {
+        let full: Vec<u32> = memcached_default_sizes().iter().map(|&c| c as u32).collect();
+        let h = lognormal_hist(518.0, 0.126, 10_000, 1);
+        let (lo, hi) = engaged_span(&full, &h);
+        let min_seen = h.iter().next().unwrap().0 as u32;
+        let max_seen = h.max_size() as u32;
+        assert!(full[lo] >= min_seen);
+        if lo > 0 {
+            assert!(full[lo - 1] < min_seen);
+        }
+        assert!(full[hi - 1] >= max_seen, "top class covers max");
+    }
+
+    #[test]
+    fn all_algorithms_reduce_waste_on_paper_t1() {
+        let h = lognormal_hist(518.0, 0.126, 50_000, 2);
+        let map = WasteMap::from_histogram(&h);
+        let backend = RustBackend::new(map);
+        let full = memcached_default_sizes();
+        for alg in [
+            Algorithm::PaperHillClimb,
+            Algorithm::SteepestDescent,
+            Algorithm::DpOptimal,
+        ] {
+            let params = OptimizerParams {
+                algorithm: alg,
+                max_failures: 300, // keep the paper algorithm fast in tests
+                ..Default::default()
+            };
+            let report = optimize(&backend, &h, &full, &params);
+            assert!(
+                report.new_waste < report.old_waste,
+                "{alg:?}: {} !< {}",
+                report.new_waste,
+                report.old_waste
+            );
+            assert!(
+                report.recovery() > 0.25,
+                "{alg:?}: recovery {}",
+                report.recovery()
+            );
+            // config stays valid
+            let mut sorted = report.new_config.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), report.new_config.len(), "{alg:?} emitted dup");
+        }
+    }
+
+    #[test]
+    fn dp_is_lower_bound() {
+        let h = lognormal_hist(1210.0, 0.09, 30_000, 3);
+        let backend = RustBackend::new(WasteMap::from_histogram(&h));
+        let full = memcached_default_sizes();
+        let mut wastes = std::collections::BTreeMap::new();
+        for alg in [
+            Algorithm::PaperHillClimb,
+            Algorithm::SteepestDescent,
+            Algorithm::DpOptimal,
+        ] {
+            let params = OptimizerParams {
+                algorithm: alg,
+                max_failures: 500,
+                ..Default::default()
+            };
+            wastes.insert(format!("{alg:?}"), optimize(&backend, &h, &full, &params).new_waste);
+        }
+        let dp = wastes["DpOptimal"];
+        assert!(dp <= wastes["PaperHillClimb"], "{wastes:?}");
+        assert!(dp <= wastes["SteepestDescent"], "{wastes:?}");
+    }
+
+    #[test]
+    fn never_regresses_on_degenerate_histograms() {
+        let mut h = SizeHistogram::new(1024);
+        h.record_n(600, 1000); // exactly a default class size
+        let backend = RustBackend::new(WasteMap::from_histogram(&h));
+        let full = memcached_default_sizes();
+        let report = optimize(&backend, &h, &full, &OptimizerParams::default());
+        assert_eq!(report.new_waste, 0, "exact fit is reachable");
+        assert!(report.new_waste <= report.old_waste);
+    }
+
+    #[test]
+    fn empty_histogram_keeps_config() {
+        let h = SizeHistogram::new(64);
+        let backend = RustBackend::new(WasteMap::from_histogram(&h));
+        let full = memcached_default_sizes();
+        let report = optimize(&backend, &h, &full, &OptimizerParams::default());
+        assert_eq!(report.old_waste, 0);
+        assert_eq!(report.new_waste, 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Algorithm 1 as published: greedy hill climbing by random ±1-byte
+//! moves of a randomly selected slab class, stopping after `count`
+//! consecutive non-improving tries.
+//!
+//! Two faithful-intent corrections to the paper's pseudocode (which
+//! contains an obvious transcription slip — `newwaste = oldwaste` on
+//! the accept branch — and resets the counter on *equal* waste, which
+//! would random-walk plateaus forever):
+//!
+//! * accept when `newwaste <= oldwaste` (as written), but reset the
+//!   failure counter only on **strict** improvement, so flat plateaus
+//!   terminate;
+//! * reject moves that break the strictly-ascending class invariant
+//!   (memcached refuses such `slab_sizes` lists); a rejected move
+//!   counts as a failed try.
+
+use super::engine::WasteBackend;
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// Search outcome shared by the greedy algorithms.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub config: Vec<u32>,
+    pub iterations: u64,
+    pub evaluations: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct HillClimbParams {
+    pub seed: u64,
+    /// The paper's `count <= 1000` budget of consecutive failures.
+    pub max_failures: u32,
+    pub max_iters: u64,
+    pub min_chunk: u32,
+    pub max_chunk: u32,
+}
+
+impl Default for HillClimbParams {
+    fn default() -> Self {
+        HillClimbParams {
+            seed: 0x51ab_f00d,
+            max_failures: 1000,
+            max_iters: 5_000_000,
+            min_chunk: crate::slab::MIN_CHUNK as u32,
+            max_chunk: crate::slab::PAGE_SIZE as u32,
+        }
+    }
+}
+
+/// Run Algorithm 1 over the learnable `span` of `full` (other classes
+/// stay fixed but participate in every waste evaluation).
+pub fn paper_hill_climb<B: WasteBackend>(
+    backend: &B,
+    full: &[u32],
+    span: Range<usize>,
+    params: &HillClimbParams,
+) -> Outcome {
+    let mut rng = Pcg64::new(params.seed);
+    let mut config = full.to_vec();
+    let mut old_waste = backend.eval_one(&config);
+    let mut evals = 1u64;
+    let mut iters = 0u64;
+    let mut failures = 0u32;
+
+    let k = span.len();
+    if k == 0 {
+        return Outcome {
+            config,
+            iterations: 0,
+            evaluations: evals,
+        };
+    }
+
+    while failures <= params.max_failures && iters < params.max_iters {
+        iters += 1;
+        // "Temporarily move a randomly selected slab's chunk size up or
+        // down 1 byte"
+        let idx = span.start + rng.gen_range(k as u64) as usize;
+        let up = rng.chance(0.5);
+        let old_value = config[idx];
+        let new_value = if up {
+            old_value.saturating_add(1)
+        } else {
+            old_value.saturating_sub(1)
+        };
+
+        if !move_is_valid(&config, idx, new_value, params) {
+            failures += 1;
+            continue;
+        }
+
+        config[idx] = new_value;
+        let new_waste = backend.eval_one(&config);
+        evals += 1;
+        if new_waste <= old_waste {
+            let improved = new_waste < old_waste;
+            old_waste = new_waste;
+            if improved {
+                failures = 0;
+            } else {
+                failures += 1; // plateau step: accepted but not progress
+            }
+        } else {
+            config[idx] = old_value; // "Reset the Slab chunk sizes"
+            failures += 1;
+        }
+    }
+
+    Outcome {
+        config,
+        iterations: iters,
+        evaluations: evals,
+    }
+}
+
+/// A move is valid when bounds and strict ascending order hold.
+fn move_is_valid(config: &[u32], idx: usize, new_value: u32, p: &HillClimbParams) -> bool {
+    if new_value < p.min_chunk || new_value > p.max_chunk {
+        return false;
+    }
+    if idx > 0 && config[idx - 1] >= new_value {
+        return false;
+    }
+    if idx + 1 < config.len() && config[idx + 1] <= new_value {
+        return false;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::engine::RustBackend;
+    use crate::optimizer::waste::WasteMap;
+
+    fn backend(pairs: &[(u32, u64)]) -> RustBackend {
+        RustBackend::new(WasteMap::from_pairs(pairs.iter().copied()))
+    }
+
+    #[test]
+    fn converges_to_exact_fit_single_class() {
+        // all items are 500 bytes; one learnable class starting at 600
+        let b = backend(&[(500, 1000)]);
+        let full = vec![96u32, 600, 1024];
+        let out = paper_hill_climb(&b, &full, 1..2, &HillClimbParams::default());
+        assert_eq!(out.config[1], 500, "chunk should descend to the item size");
+        assert_eq!(b.eval_one(&out.config), 0);
+    }
+
+    #[test]
+    fn respects_span_fixed_classes() {
+        let b = backend(&[(500, 10)]);
+        let full = vec![96u32, 600, 1024];
+        let out = paper_hill_climb(&b, &full, 1..2, &HillClimbParams::default());
+        assert_eq!(out.config[0], 96);
+        assert_eq!(out.config[2], 1024);
+    }
+
+    #[test]
+    fn keeps_strict_order() {
+        let b = backend(&[(100, 5), (120, 5), (140, 5)]);
+        let full = vec![96u32, 110, 130, 150];
+        let out = paper_hill_climb(&b, &full, 0..4, &HillClimbParams::default());
+        assert!(out.config.windows(2).all(|w| w[0] < w[1]), "{:?}", out.config);
+    }
+
+    #[test]
+    fn never_worse_than_start() {
+        let b = backend(&[(300, 7), (400, 3), (777, 9)]);
+        let full = vec![304u32, 480, 944];
+        let start = b.eval_one(&full);
+        let out = paper_hill_climb(&b, &full, 0..3, &HillClimbParams::default());
+        assert!(b.eval_one(&out.config) <= start);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let b = backend(&[(200, 5), (350, 5), (520, 5)]);
+        let full = vec![96u32, 240, 480, 600];
+        let p = HillClimbParams {
+            max_failures: 200,
+            ..Default::default()
+        };
+        let a = paper_hill_climb(&b, &full, 1..4, &p);
+        let c = paper_hill_climb(&b, &full, 1..4, &p);
+        assert_eq!(a.config, c.config);
+        assert_eq!(a.iterations, c.iterations);
+    }
+
+    #[test]
+    fn empty_span_is_noop() {
+        let b = backend(&[(100, 1)]);
+        let full = vec![128u32];
+        let out = paper_hill_climb(&b, &full, 0..0, &HillClimbParams::default());
+        assert_eq!(out.config, full);
+    }
+}

@@ -1,0 +1,30 @@
+//! The paper's contribution: **learning slab classes** from the
+//! observed item-size distribution to minimize memory holes.
+//!
+//! * [`collector`] — lock-striped online histogram of accounted item
+//!   sizes (wired into every `set` via `store::SizeObserver`).
+//! * [`waste`] — the objective function: exact wasted-bytes evaluation
+//!   of a candidate chunk configuration against a histogram; the pure
+//!   rust twin of the L1 Pallas kernel (bit-identical semantics).
+//! * [`hillclimb`] — Algorithm 1 as published: random ±1-byte moves,
+//!   stop after 1000 consecutive non-improving tries.
+//! * [`steepest`] — batched steepest descent with shrinking steps; maps
+//!   one optimization step onto one fused PJRT `hill_step` call.
+//! * [`dp`] — exact optimum by divide-and-conquer DP over distinct
+//!   sizes: the lower bound the greedy methods are judged against.
+//! * [`engine`] — backend-pluggable front door (`Rust` exact evaluator
+//!   or `Xla` AOT artifacts) operating on a store's live configuration.
+//! * [`autotune`] — the online coordinator: watch the collector, learn,
+//!   and live-reconfigure the store when predicted savings are large.
+
+pub mod autotune;
+pub mod collector;
+pub mod dp;
+pub mod engine;
+pub mod hillclimb;
+pub mod steepest;
+pub mod waste;
+
+pub use collector::SizeCollector;
+pub use engine::{optimize, OptimizeReport, OptimizerParams, RustBackend, WasteBackend};
+pub use waste::WasteMap;

@@ -1,0 +1,213 @@
+//! Batched steepest-descent hill climbing with shrinking step sizes.
+//!
+//! The paper's Algorithm 1 evaluates ONE random ±1-byte neighbor per
+//! iteration — thousands of tiny evaluations. This variant evaluates
+//! the complete ±δ neighbor set of the current configuration in one
+//! batch (2·K + 1 candidates including "stay"), moves to the argmin,
+//! and shrinks δ geometrically once no neighbor improves. With the XLA
+//! backend the entire batch is a single fused PJRT `hill_step` call —
+//! the L2 graph both expands and scores the neighbors, so one
+//! optimization step costs one artifact execution.
+//!
+//! Same search space and invariants as Algorithm 1 (strictly ascending
+//! spans, fixed prefix/suffix classes); converges to the same optima on
+//! unimodal landscapes in far fewer evaluations (ablation
+//! `bench_ablation --algorithms`).
+
+use super::engine::WasteBackend;
+use super::hillclimb::Outcome;
+use std::ops::Range;
+
+#[derive(Clone, Debug)]
+pub struct SteepestParams {
+    pub max_iters: u64,
+    pub min_chunk: u32,
+    pub max_chunk: u32,
+    /// Starting δ; shrinks ÷4 until 1.
+    pub initial_step: u32,
+}
+
+impl Default for SteepestParams {
+    fn default() -> Self {
+        SteepestParams {
+            max_iters: 1_000_000,
+            min_chunk: crate::slab::MIN_CHUNK as u32,
+            max_chunk: crate::slab::PAGE_SIZE as u32,
+            initial_step: 256,
+        }
+    }
+}
+
+/// Generate the valid ±δ neighbor set (plus the unchanged config).
+fn neighbors(
+    config: &[u32],
+    span: &Range<usize>,
+    step: u32,
+    p: &SteepestParams,
+) -> Vec<Vec<u32>> {
+    let mut out = Vec::with_capacity(2 * span.len() + 1);
+    out.push(config.to_vec());
+    for idx in span.clone() {
+        for up in [true, false] {
+            let cur = config[idx];
+            let cand = if up {
+                cur.saturating_add(step)
+            } else {
+                cur.saturating_sub(step)
+            };
+            // clamp into the strictly-ascending corridor
+            let lo = if idx > 0 { config[idx - 1] + 1 } else { p.min_chunk };
+            let hi = if idx + 1 < config.len() {
+                config[idx + 1] - 1
+            } else {
+                p.max_chunk
+            };
+            let cand = cand.clamp(lo.max(p.min_chunk), hi.min(p.max_chunk));
+            if cand != cur {
+                let mut c = config.to_vec();
+                c[idx] = cand;
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// Run steepest descent over the learnable `span` of `full`.
+pub fn steepest_descent<B: WasteBackend>(
+    backend: &B,
+    full: &[u32],
+    span: Range<usize>,
+    params: &SteepestParams,
+) -> Outcome {
+    let mut config = full.to_vec();
+    let mut best_waste = backend.eval_one(&config);
+    let mut evals = 1u64;
+    let mut iters = 0u64;
+    let mut step = params.initial_step.max(1);
+
+    if span.is_empty() {
+        return Outcome {
+            config,
+            iterations: 0,
+            evaluations: evals,
+        };
+    }
+
+    loop {
+        if iters >= params.max_iters {
+            break;
+        }
+        iters += 1;
+        let cands = neighbors(&config, &span, step, params);
+        let wastes = backend.eval_batch(&cands);
+        evals += cands.len() as u64;
+        let (best_idx, &w) = wastes
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, w)| *w)
+            .expect("candidates nonempty");
+        if w < best_waste {
+            best_waste = w;
+            config = cands[best_idx].clone();
+        } else if step > 1 {
+            step = (step / 4).max(1);
+        } else {
+            break; // δ = 1 and no improving neighbor: local optimum
+        }
+    }
+
+    Outcome {
+        config,
+        iterations: iters,
+        evaluations: evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::engine::{RustBackend, WasteBackend};
+    use crate::optimizer::hillclimb::{paper_hill_climb, HillClimbParams};
+    use crate::optimizer::waste::WasteMap;
+    use crate::util::rng::Pcg64;
+
+    fn backend(pairs: &[(u32, u64)]) -> RustBackend {
+        RustBackend::new(WasteMap::from_pairs(pairs.iter().copied()))
+    }
+
+    #[test]
+    fn exact_fit_single_class() {
+        let b = backend(&[(500, 1000)]);
+        let full = vec![96u32, 600, 1024];
+        let out = steepest_descent(&b, &full, 1..2, &SteepestParams::default());
+        assert_eq!(out.config[1], 500);
+        assert_eq!(b.eval_one(&out.config), 0);
+    }
+
+    #[test]
+    fn far_fewer_evaluations_than_paper_algorithm() {
+        let mut rng = Pcg64::new(5);
+        let pairs: Vec<(u32, u64)> = {
+            let mut m = std::collections::BTreeMap::new();
+            for _ in 0..20_000 {
+                let s = rng.lognormal(518.0, 0.126).round().max(60.0) as u32;
+                *m.entry(s).or_insert(0u64) += 1;
+            }
+            m.into_iter().collect()
+        };
+        let b = RustBackend::new(WasteMap::from_pairs(pairs.iter().copied()));
+        let full: Vec<u32> = crate::slab::geometry::memcached_default_sizes()
+            .iter()
+            .map(|&c| c as u32)
+            .collect();
+        let span = 5..11; // 304..944 region
+        let st = steepest_descent(&b, &full, span.clone(), &SteepestParams::default());
+        let hc = paper_hill_climb(&b, &full, span, &HillClimbParams::default());
+        let w_st = b.eval_one(&st.config);
+        let w_hc = b.eval_one(&hc.config);
+        // similar quality (within 10 %), far fewer evaluations
+        assert!(
+            (w_st as f64) < (w_hc as f64) * 1.10,
+            "steepest {w_st} vs paper {w_hc}"
+        );
+        assert!(
+            st.evaluations * 5 < hc.evaluations,
+            "steepest {} evals vs paper {}",
+            st.evaluations,
+            hc.evaluations
+        );
+    }
+
+    #[test]
+    fn maintains_ascending_invariant() {
+        let b = backend(&[(100, 5), (105, 9), (110, 2)]);
+        let full = vec![96u32, 104, 112, 200];
+        let out = steepest_descent(&b, &full, 0..3, &SteepestParams::default());
+        assert!(out.config.windows(2).all(|w| w[0] < w[1]), "{:?}", out.config);
+    }
+
+    #[test]
+    fn never_regresses() {
+        let b = backend(&[(77, 3), (900, 2), (5000, 1)]);
+        let full: Vec<u32> = crate::slab::geometry::memcached_default_sizes()
+            .iter()
+            .map(|&c| c as u32)
+            .collect();
+        let start = b.eval_one(&full);
+        let out = steepest_descent(&b, &full, 0..full.len(), &SteepestParams::default());
+        assert!(b.eval_one(&out.config) <= start);
+    }
+
+    #[test]
+    fn neighbor_generation_respects_corridor() {
+        let p = SteepestParams::default();
+        let cfg = vec![100u32, 110, 120];
+        let n = neighbors(&cfg, &(1..2), 256, &p);
+        // middle class can only move within (100, 120)
+        for cand in &n {
+            assert!(cand[1] > 100 && cand[1] < 121, "{cand:?}");
+        }
+        assert!(n.len() <= 3);
+    }
+}

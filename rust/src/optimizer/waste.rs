@@ -1,0 +1,273 @@
+//! The objective function: total memory holes for a candidate
+//! configuration over an observed size histogram.
+//!
+//! Semantics are IDENTICAL to the L1 Pallas kernel (`waste.py`) and its
+//! oracle (`ref.py`): each size is charged the smallest covering chunk;
+//! sizes no chunk covers are charged the 2 MiB `SENTINEL` so
+//! non-covering configurations always lose. All quantities are integers
+//! (the kernel carries them in f64, exact below 2^53), so the two
+//! backends agree bit-for-bit — asserted by integration tests.
+
+use crate::util::histogram::SizeHistogram;
+
+/// Must equal `kernels/waste.py::SENTINEL` (2 MiB).
+pub const SENTINEL: u64 = 2 << 20;
+
+/// A histogram compacted for repeated waste evaluation: ascending
+/// `(size, count)` pairs with prefix sums for O(K log S) evaluation.
+#[derive(Clone, Debug)]
+pub struct WasteMap {
+    sizes: Vec<u32>,
+    counts: Vec<u64>,
+    /// prefix_count[i] = Σ counts[..i]
+    prefix_count: Vec<u64>,
+    /// prefix_bytes[i] = Σ sizes[j]*counts[j] for j < i
+    prefix_bytes: Vec<u64>,
+}
+
+impl WasteMap {
+    pub fn from_histogram(hist: &SizeHistogram) -> Self {
+        Self::from_pairs(hist.iter().map(|(s, c)| (s as u32, c)))
+    }
+
+    /// Build from ascending (size, count) pairs.
+    pub fn from_pairs<I: IntoIterator<Item = (u32, u64)>>(pairs: I) -> Self {
+        let mut sizes = Vec::new();
+        let mut counts = Vec::new();
+        for (s, c) in pairs {
+            debug_assert!(sizes.last().is_none_or(|&last| last < s), "pairs ascending");
+            if c == 0 {
+                continue;
+            }
+            sizes.push(s);
+            counts.push(c);
+        }
+        let mut prefix_count = Vec::with_capacity(sizes.len() + 1);
+        let mut prefix_bytes = Vec::with_capacity(sizes.len() + 1);
+        let (mut pc, mut pb) = (0u64, 0u64);
+        prefix_count.push(0);
+        prefix_bytes.push(0);
+        for i in 0..sizes.len() {
+            pc += counts[i];
+            pb += sizes[i] as u64 * counts[i];
+            prefix_count.push(pc);
+            prefix_bytes.push(pb);
+        }
+        WasteMap {
+            sizes,
+            counts,
+            prefix_count,
+            prefix_bytes,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    /// Distinct sizes.
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn total_items(&self) -> u64 {
+        *self.prefix_count.last().unwrap()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        *self.prefix_bytes.last().unwrap()
+    }
+
+    pub fn max_size(&self) -> Option<u32> {
+        self.sizes.last().copied()
+    }
+
+    pub fn min_size(&self) -> Option<u32> {
+        self.sizes.first().copied()
+    }
+
+    /// Ascending distinct sizes.
+    pub fn sizes(&self) -> &[u32] {
+        &self.sizes
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Index of the first size > `x` (prefix boundary).
+    #[inline]
+    fn upper_bound(&self, x: u32) -> usize {
+        self.sizes.partition_point(|&s| s <= x)
+    }
+
+    /// Total waste for `config` (need not be sorted or deduplicated —
+    /// we sort a scratch copy; for the hot path use
+    /// [`WasteMap::waste_of_sorted`]).
+    pub fn waste_of(&self, config: &[u32]) -> u64 {
+        let mut sorted = config.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        self.waste_of_sorted(&sorted)
+    }
+
+    /// Total waste for an ascending, deduplicated `config`.
+    ///
+    /// For each consecutive chunk pair `(lo, hi]` the charged bytes are
+    /// `hi * items_in_range - bytes_in_range`, O(1) via prefix sums —
+    /// O(K log S) total.
+    pub fn waste_of_sorted(&self, config: &[u32]) -> u64 {
+        debug_assert!(config.windows(2).all(|w| w[0] < w[1]));
+        let mut waste = 0u64;
+        let mut lo_idx = 0usize; // first size index not yet covered
+        for &chunk in config {
+            let hi_idx = self.upper_bound(chunk);
+            if hi_idx > lo_idx {
+                let items = self.prefix_count[hi_idx] - self.prefix_count[lo_idx];
+                let bytes = self.prefix_bytes[hi_idx] - self.prefix_bytes[lo_idx];
+                waste += chunk as u64 * items - bytes;
+                lo_idx = hi_idx;
+            }
+        }
+        // sizes above every chunk: charged the sentinel
+        let n = self.sizes.len();
+        if lo_idx < n {
+            let items = self.prefix_count[n] - self.prefix_count[lo_idx];
+            let bytes = self.prefix_bytes[n] - self.prefix_bytes[lo_idx];
+            waste += SENTINEL * items - bytes;
+        }
+        waste
+    }
+
+    /// Per-class breakdown `(chunk, items, waste)` for reporting.
+    pub fn waste_breakdown(&self, config: &[u32]) -> Vec<(u32, u64, u64)> {
+        let mut sorted = config.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let mut rows = Vec::with_capacity(sorted.len());
+        let mut lo_idx = 0usize;
+        for &chunk in &sorted {
+            let hi_idx = self.upper_bound(chunk);
+            let items = self.prefix_count[hi_idx] - self.prefix_count[lo_idx];
+            let bytes = self.prefix_bytes[hi_idx] - self.prefix_bytes[lo_idx];
+            rows.push((chunk, items, chunk as u64 * items - bytes));
+            lo_idx = hi_idx;
+        }
+        rows
+    }
+
+    /// Naive O(S·K) reference used by tests to validate the prefix-sum
+    /// fast path.
+    pub fn waste_of_naive(&self, config: &[u32]) -> u64 {
+        let mut waste = 0u64;
+        for (i, &s) in self.sizes.iter().enumerate() {
+            let chunk = config
+                .iter()
+                .copied()
+                .filter(|&c| c >= s)
+                .min()
+                .map(u64::from)
+                .unwrap_or(SENTINEL);
+            waste += (chunk - s as u64) * self.counts[i];
+        }
+        waste
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn map(pairs: &[(u32, u64)]) -> WasteMap {
+        WasteMap::from_pairs(pairs.iter().copied())
+    }
+
+    #[test]
+    fn single_bucket() {
+        let m = map(&[(100, 1)]);
+        assert_eq!(m.waste_of(&[128]), 28);
+        assert_eq!(m.waste_of(&[100]), 0);
+        assert_eq!(m.waste_of(&[64]), SENTINEL - 100);
+    }
+
+    #[test]
+    fn smallest_covering_chunk() {
+        let m = map(&[(200, 1)]);
+        assert_eq!(m.waste_of(&[1024, 256, 512]), 56);
+    }
+
+    #[test]
+    fn paper_table1_shape() {
+        // uniform sizes 1..=1024, old config from Table 1
+        let m = WasteMap::from_pairs((1..=1024u32).map(|s| (s, 1)));
+        let cfg = [304u32, 384, 480, 600, 752, 944];
+        let fast = m.waste_of(&cfg);
+        assert_eq!(fast, m.waste_of_naive(&cfg));
+        // sizes 945..=1024 are uncovered -> sentinel charges dominate
+        assert!(fast > SENTINEL);
+    }
+
+    #[test]
+    fn fast_matches_naive_random() {
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            let n = 1 + rng.gen_range(200) as usize;
+            let mut sizes: Vec<u32> = (0..n)
+                .map(|_| 1 + rng.gen_range(10_000) as u32)
+                .collect();
+            sizes.sort_unstable();
+            sizes.dedup();
+            let pairs: Vec<(u32, u64)> = sizes
+                .iter()
+                .map(|&s| (s, 1 + rng.gen_range(1000)))
+                .collect();
+            let m = WasteMap::from_pairs(pairs.iter().copied());
+            let k = 1 + rng.gen_range(8) as usize;
+            let cfg: Vec<u32> = (0..k).map(|_| 1 + rng.gen_range(12_000) as u32).collect();
+            assert_eq!(m.waste_of(&cfg), m.waste_of_naive(&cfg), "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let m = WasteMap::from_pairs((50..=500u32).step_by(7).map(|s| (s, (s % 13) as u64)));
+        let cfg = [96u32, 200, 350, 512];
+        let rows = m.waste_breakdown(&cfg);
+        let total: u64 = rows.iter().map(|(_, _, w)| w).sum();
+        assert_eq!(total, m.waste_of(&cfg));
+        let items: u64 = rows.iter().map(|(_, n, _)| n).sum();
+        assert_eq!(items, m.total_items());
+    }
+
+    #[test]
+    fn empty_histogram_zero_waste() {
+        let m = WasteMap::from_pairs(std::iter::empty());
+        assert!(m.is_empty());
+        assert_eq!(m.waste_of(&[100]), 0);
+    }
+
+    #[test]
+    fn zero_counts_skipped() {
+        let m = map(&[(10, 0), (20, 5)]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.waste_of(&[30]), 50);
+    }
+
+    #[test]
+    fn duplicate_and_unsorted_configs_ok() {
+        let m = map(&[(100, 2), (300, 1)]);
+        assert_eq!(m.waste_of(&[512, 128, 128, 512]), 2 * 28 + 212);
+    }
+
+    #[test]
+    fn from_histogram_matches_pairs() {
+        let mut h = SizeHistogram::new(1000);
+        h.record_n(100, 3);
+        h.record_n(999, 2);
+        h.record_n(20_000, 1); // overflow side
+        let m = WasteMap::from_histogram(&h);
+        assert_eq!(m.total_items(), 6);
+        assert_eq!(m.max_size(), Some(20_000));
+    }
+}

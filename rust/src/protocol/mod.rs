@@ -1,0 +1,15 @@
+//! Memcached **text protocol**: command parsing, response rendering and
+//! the `stats`-family introspection the paper's measurements come from
+//! (`stats slabs` exposes per-class hole accounting), plus two
+//! slabforge extensions:
+//!
+//! * `slabs reconfigure <size,...>` — live-apply a learned chunk-size
+//!   configuration (the online analog of restarting with
+//!   `-o slab_sizes=...`).
+//! * `slabs optimize` — trigger the learned-slab-classes optimizer now.
+
+pub mod parse;
+pub mod response;
+pub mod stats;
+
+pub use parse::{parse_command, Command, ParseError, StoreOp};

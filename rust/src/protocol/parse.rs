@@ -1,0 +1,408 @@
+//! Text-protocol command parser.
+//!
+//! The connection layer feeds one `\r\n`-terminated command line at a
+//! time; storage commands additionally carry a `<bytes>\r\n` data block
+//! that the connection reads separately (`Command::data_len`).
+
+use std::fmt;
+
+/// Storage-command family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Set,
+    Add,
+    Replace,
+    Append,
+    Prepend,
+    Cas,
+}
+
+/// A parsed command line (data block, if any, arrives separately).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Get {
+        keys: Vec<Vec<u8>>,
+        with_cas: bool,
+    },
+    Store {
+        op: StoreOp,
+        key: Vec<u8>,
+        flags: u32,
+        exptime: u32,
+        nbytes: usize,
+        cas: u64,
+        noreply: bool,
+    },
+    Delete {
+        key: Vec<u8>,
+        noreply: bool,
+    },
+    IncrDecr {
+        key: Vec<u8>,
+        delta: u64,
+        incr: bool,
+        noreply: bool,
+    },
+    Touch {
+        key: Vec<u8>,
+        exptime: u32,
+        noreply: bool,
+    },
+    Stats {
+        arg: Option<Vec<u8>>,
+    },
+    FlushAll {
+        noreply: bool,
+    },
+    Version,
+    Verbosity {
+        noreply: bool,
+    },
+    Quit,
+    /// Extension: `slabs reconfigure 304,384,480 [noreply]`.
+    SlabsReconfigure {
+        sizes: Vec<usize>,
+        noreply: bool,
+    },
+    /// Extension: `slabs optimize` — run the learned optimizer now.
+    SlabsOptimize,
+}
+
+impl Command {
+    /// Bytes of data block this command expects after its line.
+    pub fn data_len(&self) -> Option<usize> {
+        match self {
+            Command::Store { nbytes, .. } => Some(*nbytes),
+            _ => None,
+        }
+    }
+
+    pub fn noreply(&self) -> bool {
+        match self {
+            Command::Store { noreply, .. }
+            | Command::Delete { noreply, .. }
+            | Command::IncrDecr { noreply, .. }
+            | Command::Touch { noreply, .. }
+            | Command::FlushAll { noreply }
+            | Command::Verbosity { noreply }
+            | Command::SlabsReconfigure { noreply, .. } => *noreply,
+            _ => false,
+        }
+    }
+}
+
+/// Client-visible parse failures (rendered as `ERROR`/`CLIENT_ERROR`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParseError {
+    /// Unknown command verb → `ERROR\r\n`.
+    UnknownCommand,
+    /// Understood verb, bad arguments → `CLIENT_ERROR <msg>\r\n`.
+    Client(&'static str),
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::UnknownCommand => write!(f, "ERROR"),
+            ParseError::Client(m) => write!(f, "CLIENT_ERROR {m}"),
+        }
+    }
+}
+
+fn tokens(line: &[u8]) -> Vec<&[u8]> {
+    line.split(|&b| b == b' ').filter(|t| !t.is_empty()).collect()
+}
+
+fn parse_u32(tok: &[u8]) -> Result<u32, ParseError> {
+    std::str::from_utf8(tok)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .ok_or(ParseError::Client("bad numeric argument"))
+}
+
+fn parse_u64(tok: &[u8]) -> Result<u64, ParseError> {
+    std::str::from_utf8(tok)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .ok_or(ParseError::Client("bad numeric argument"))
+}
+
+fn parse_usize(tok: &[u8]) -> Result<usize, ParseError> {
+    std::str::from_utf8(tok)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .ok_or(ParseError::Client("bad numeric argument"))
+}
+
+/// memcached also accepts negative exptimes (= already expired); we map
+/// them to 0xFFFFFFF0 (far past, relative cutoff keeps them absolute).
+fn parse_exptime(tok: &[u8]) -> Result<u32, ParseError> {
+    let s = std::str::from_utf8(tok).map_err(|_| ParseError::Client("bad exptime"))?;
+    if let Some(stripped) = s.strip_prefix('-') {
+        stripped
+            .parse::<u64>()
+            .map_err(|_| ParseError::Client("bad exptime"))?;
+        Ok(1) // 1 second after the epoch: always already expired
+    } else {
+        s.parse().map_err(|_| ParseError::Client("bad exptime"))
+    }
+}
+
+fn is_noreply(tok: Option<&&[u8]>) -> bool {
+    tok.is_some_and(|t| *t == b"noreply")
+}
+
+/// Parse one command line (without the trailing `\r\n`).
+pub fn parse_command(line: &[u8]) -> Result<Command, ParseError> {
+    let toks = tokens(line);
+    let Some(&verb) = toks.first() else {
+        return Err(ParseError::UnknownCommand);
+    };
+    match verb {
+        b"get" | b"gets" => {
+            if toks.len() < 2 {
+                return Err(ParseError::Client("get requires at least one key"));
+            }
+            Ok(Command::Get {
+                keys: toks[1..].iter().map(|k| k.to_vec()).collect(),
+                with_cas: verb == b"gets",
+            })
+        }
+        b"set" | b"add" | b"replace" | b"append" | b"prepend" | b"cas" => {
+            let op = match verb {
+                b"set" => StoreOp::Set,
+                b"add" => StoreOp::Add,
+                b"replace" => StoreOp::Replace,
+                b"append" => StoreOp::Append,
+                b"prepend" => StoreOp::Prepend,
+                _ => StoreOp::Cas,
+            };
+            let want = if op == StoreOp::Cas { 6 } else { 5 };
+            if toks.len() < want {
+                return Err(ParseError::Client("bad command line format"));
+            }
+            let nbytes = parse_usize(toks[4])?;
+            let cas = if op == StoreOp::Cas {
+                parse_u64(toks[5])?
+            } else {
+                0
+            };
+            Ok(Command::Store {
+                op,
+                key: toks[1].to_vec(),
+                flags: parse_u32(toks[2])?,
+                exptime: parse_exptime(toks[3])?,
+                nbytes,
+                cas,
+                noreply: is_noreply(toks.get(want)),
+            })
+        }
+        b"delete" => {
+            if toks.len() < 2 {
+                return Err(ParseError::Client("delete requires a key"));
+            }
+            Ok(Command::Delete {
+                key: toks[1].to_vec(),
+                noreply: is_noreply(toks.get(2)),
+            })
+        }
+        b"incr" | b"decr" => {
+            if toks.len() < 3 {
+                return Err(ParseError::Client("incr/decr require key and value"));
+            }
+            Ok(Command::IncrDecr {
+                key: toks[1].to_vec(),
+                delta: parse_u64(toks[2])?,
+                incr: verb == b"incr",
+                noreply: is_noreply(toks.get(3)),
+            })
+        }
+        b"touch" => {
+            if toks.len() < 3 {
+                return Err(ParseError::Client("touch requires key and exptime"));
+            }
+            Ok(Command::Touch {
+                key: toks[1].to_vec(),
+                exptime: parse_exptime(toks[2])?,
+                noreply: is_noreply(toks.get(3)),
+            })
+        }
+        b"stats" => Ok(Command::Stats {
+            arg: toks.get(1).map(|t| t.to_vec()),
+        }),
+        b"flush_all" => Ok(Command::FlushAll {
+            noreply: is_noreply(toks.get(1)),
+        }),
+        b"version" => Ok(Command::Version),
+        b"verbosity" => Ok(Command::Verbosity {
+            noreply: is_noreply(toks.get(2)),
+        }),
+        b"quit" => Ok(Command::Quit),
+        b"slabs" => match toks.get(1).copied() {
+            Some(b"reconfigure") => {
+                let Some(list) = toks.get(2) else {
+                    return Err(ParseError::Client("slabs reconfigure requires sizes"));
+                };
+                let sizes: Result<Vec<usize>, ParseError> = list
+                    .split(|&b| b == b',')
+                    .map(parse_usize)
+                    .collect();
+                Ok(Command::SlabsReconfigure {
+                    sizes: sizes?,
+                    noreply: is_noreply(toks.get(3)),
+                })
+            }
+            Some(b"optimize") => Ok(Command::SlabsOptimize),
+            _ => Err(ParseError::UnknownCommand),
+        },
+        _ => Err(ParseError::UnknownCommand),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_single_and_multi() {
+        assert_eq!(
+            parse_command(b"get foo").unwrap(),
+            Command::Get {
+                keys: vec![b"foo".to_vec()],
+                with_cas: false
+            }
+        );
+        let c = parse_command(b"gets a b c").unwrap();
+        match c {
+            Command::Get { keys, with_cas } => {
+                assert!(with_cas);
+                assert_eq!(keys.len(), 3);
+            }
+            _ => panic!(),
+        }
+        assert!(parse_command(b"get").is_err());
+    }
+
+    #[test]
+    fn set_line() {
+        let c = parse_command(b"set foo 7 60 5").unwrap();
+        match &c {
+            Command::Store {
+                op: StoreOp::Set,
+                key,
+                flags: 7,
+                exptime: 60,
+                nbytes: 5,
+                cas: 0,
+                noreply: false,
+            } => assert_eq!(key, b"foo"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.data_len(), Some(5));
+    }
+
+    #[test]
+    fn set_noreply() {
+        let c = parse_command(b"set foo 0 0 3 noreply").unwrap();
+        assert!(c.noreply());
+    }
+
+    #[test]
+    fn cas_line() {
+        let c = parse_command(b"cas k 1 0 2 99 noreply").unwrap();
+        match c {
+            Command::Store {
+                op: StoreOp::Cas,
+                cas: 99,
+                noreply: true,
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_exptime_expires_immediately() {
+        let c = parse_command(b"set k 0 -1 3").unwrap();
+        match c {
+            Command::Store { exptime: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn incr_decr_touch_delete() {
+        assert!(matches!(
+            parse_command(b"incr n 5").unwrap(),
+            Command::IncrDecr {
+                delta: 5,
+                incr: true,
+                ..
+            }
+        ));
+        assert!(matches!(
+            parse_command(b"decr n 2 noreply").unwrap(),
+            Command::IncrDecr {
+                incr: false,
+                noreply: true,
+                ..
+            }
+        ));
+        assert!(matches!(
+            parse_command(b"touch k 300").unwrap(),
+            Command::Touch { exptime: 300, .. }
+        ));
+        assert!(matches!(
+            parse_command(b"delete k").unwrap(),
+            Command::Delete { noreply: false, .. }
+        ));
+    }
+
+    #[test]
+    fn admin_commands() {
+        assert_eq!(parse_command(b"stats").unwrap(), Command::Stats { arg: None });
+        assert_eq!(
+            parse_command(b"stats slabs").unwrap(),
+            Command::Stats {
+                arg: Some(b"slabs".to_vec())
+            }
+        );
+        assert_eq!(parse_command(b"version").unwrap(), Command::Version);
+        assert_eq!(parse_command(b"quit").unwrap(), Command::Quit);
+        assert!(matches!(
+            parse_command(b"flush_all noreply").unwrap(),
+            Command::FlushAll { noreply: true }
+        ));
+    }
+
+    #[test]
+    fn slabs_extensions() {
+        assert_eq!(
+            parse_command(b"slabs reconfigure 304,384,480").unwrap(),
+            Command::SlabsReconfigure {
+                sizes: vec![304, 384, 480],
+                noreply: false
+            }
+        );
+        assert_eq!(parse_command(b"slabs optimize").unwrap(), Command::SlabsOptimize);
+        assert!(parse_command(b"slabs unknown").is_err());
+        assert!(parse_command(b"slabs reconfigure").is_err());
+        assert!(parse_command(b"slabs reconfigure 1,x").is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert_eq!(parse_command(b""), Err(ParseError::UnknownCommand));
+        assert_eq!(parse_command(b"frobnicate x"), Err(ParseError::UnknownCommand));
+        assert!(matches!(
+            parse_command(b"set k 0 0 notanumber"),
+            Err(ParseError::Client(_))
+        ));
+    }
+
+    #[test]
+    fn extra_whitespace_tolerated() {
+        let c = parse_command(b"set  foo   1  0  3").unwrap();
+        assert!(matches!(c, Command::Store { flags: 1, .. }));
+    }
+}

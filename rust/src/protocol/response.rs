@@ -1,0 +1,129 @@
+//! Response rendering: append protocol lines into the connection's
+//! write buffer (no intermediate allocations on the hot path).
+
+use crate::store::store::Value;
+
+pub fn value(out: &mut Vec<u8>, key: &[u8], v: &Value, with_cas: bool) {
+    out.extend_from_slice(b"VALUE ");
+    out.extend_from_slice(key);
+    if with_cas {
+        append_fmt(out, format_args!(" {} {} {}", v.flags, v.value.len(), v.cas));
+    } else {
+        append_fmt(out, format_args!(" {} {}", v.flags, v.value.len()));
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(&v.value);
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn end(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"END\r\n");
+}
+
+pub fn stored(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"STORED\r\n");
+}
+
+pub fn not_stored(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"NOT_STORED\r\n");
+}
+
+pub fn exists(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"EXISTS\r\n");
+}
+
+pub fn not_found(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"NOT_FOUND\r\n");
+}
+
+pub fn deleted(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"DELETED\r\n");
+}
+
+pub fn touched(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"TOUCHED\r\n");
+}
+
+pub fn ok(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"OK\r\n");
+}
+
+pub fn number(out: &mut Vec<u8>, n: u64) {
+    append_fmt(out, format_args!("{n}"));
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn version(out: &mut Vec<u8>, v: &str) {
+    append_fmt(out, format_args!("VERSION {v}"));
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn error(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"ERROR\r\n");
+}
+
+pub fn client_error(out: &mut Vec<u8>, msg: &str) {
+    append_fmt(out, format_args!("CLIENT_ERROR {msg}"));
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn server_error(out: &mut Vec<u8>, msg: &str) {
+    append_fmt(out, format_args!("SERVER_ERROR {msg}"));
+    out.extend_from_slice(b"\r\n");
+}
+
+pub fn stat(out: &mut Vec<u8>, name: &str, value: impl std::fmt::Display) {
+    append_fmt(out, format_args!("STAT {name} {value}"));
+    out.extend_from_slice(b"\r\n");
+}
+
+fn append_fmt(out: &mut Vec<u8>, args: std::fmt::Arguments<'_>) {
+    use std::io::Write;
+    out.write_fmt(args).expect("Vec write is infallible");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_line_format() {
+        let mut out = Vec::new();
+        let v = Value {
+            value: b"world".to_vec(),
+            flags: 7,
+            cas: 42,
+        };
+        value(&mut out, b"hello", &v, false);
+        assert_eq!(out, b"VALUE hello 7 5\r\nworld\r\n");
+        out.clear();
+        value(&mut out, b"hello", &v, true);
+        assert_eq!(out, b"VALUE hello 7 5 42\r\nworld\r\n");
+    }
+
+    #[test]
+    fn simple_lines() {
+        let mut out = Vec::new();
+        stored(&mut out);
+        end(&mut out);
+        number(&mut out, 15);
+        stat(&mut out, "evictions", 3);
+        client_error(&mut out, "oops");
+        assert_eq!(
+            out,
+            b"STORED\r\nEND\r\n15\r\nSTAT evictions 3\r\nCLIENT_ERROR oops\r\n"
+        );
+    }
+
+    #[test]
+    fn binary_safe_values() {
+        let mut out = Vec::new();
+        let v = Value {
+            value: vec![0, 1, 2, 255, 13, 10],
+            flags: 0,
+            cas: 0,
+        };
+        value(&mut out, b"bin", &v, false);
+        assert!(out.windows(6).any(|w| w == [0, 1, 2, 255, 13, 10]));
+    }
+}

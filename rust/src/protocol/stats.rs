@@ -1,0 +1,157 @@
+//! `stats`-family rendering — the measurement interface.
+//!
+//! * `stats`        — operation counters + item/memory totals.
+//! * `stats slabs`  — per-class chunk geometry, usage, and **hole
+//!   accounting** (`mem_requested`, `mem_wasted`): the numbers the
+//!   paper's tables report.
+//! * `stats sizes`  — the observed item-size histogram (what the
+//!   optimizer learns from), bucketed like memcached's 32-byte rows.
+
+use super::response::stat;
+use crate::slab::SlabStats;
+use crate::store::store::StoreStats;
+use crate::util::histogram::SizeHistogram;
+
+/// Render plain `stats`.
+pub fn render_general(
+    out: &mut Vec<u8>,
+    ops: &StoreStats,
+    slabs: &SlabStats,
+    items: usize,
+    uptime_secs: u64,
+) {
+    stat(out, "uptime", uptime_secs);
+    stat(out, "curr_items", items);
+    stat(out, "cmd_get", ops.cmd_get);
+    stat(out, "cmd_set", ops.cmd_set);
+    stat(out, "get_hits", ops.get_hits);
+    stat(out, "get_misses", ops.get_misses);
+    stat(out, "delete_hits", ops.delete_hits);
+    stat(out, "delete_misses", ops.delete_misses);
+    stat(out, "incr_hits", ops.incr_hits);
+    stat(out, "incr_misses", ops.incr_misses);
+    stat(out, "decr_hits", ops.decr_hits);
+    stat(out, "decr_misses", ops.decr_misses);
+    stat(out, "cas_hits", ops.cas_hits);
+    stat(out, "cas_misses", ops.cas_misses);
+    stat(out, "cas_badval", ops.cas_badval);
+    stat(out, "touch_hits", ops.touch_hits);
+    stat(out, "touch_misses", ops.touch_misses);
+    stat(out, "evictions", ops.evictions);
+    stat(out, "expired_unfetched", ops.expired_reclaims);
+    stat(out, "slab_reconfigures", ops.reconfigures);
+    stat(out, "bytes", slabs.requested_bytes);
+    stat(out, "bytes_allocated", slabs.allocated_bytes);
+    stat(out, "bytes_wasted", slabs.hole_bytes);
+    stat(out, "limit_maxbytes", slabs.page_budget * slabs.page_size);
+    stat(out, "total_pages", slabs.pages_allocated);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Render `stats slabs` (one row group per active class).
+pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats) {
+    for (i, c) in slabs.per_class.iter().enumerate() {
+        if c.pages == 0 {
+            continue; // memcached omits classes with no pages
+        }
+        let id = i + 1; // memcached class ids start at 1
+        stat(out, &format!("{id}:chunk_size"), c.chunk_size);
+        stat(out, &format!("{id}:total_pages"), c.pages);
+        stat(out, &format!("{id}:total_chunks"), c.total_chunks);
+        stat(out, &format!("{id}:used_chunks"), c.used_chunks);
+        stat(out, &format!("{id}:free_chunks"), c.free_chunks);
+        stat(out, &format!("{id}:mem_requested"), c.requested_bytes);
+        stat(out, &format!("{id}:mem_allocated"), c.allocated_bytes);
+        stat(out, &format!("{id}:mem_wasted"), c.hole_bytes);
+    }
+    stat(out, "active_slabs", slabs.per_class.iter().filter(|c| c.pages > 0).count());
+    stat(out, "total_malloced", slabs.pages_allocated * slabs.page_size);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Render `stats sizes` from the collector histogram (32-byte buckets,
+/// memcached's format: `STAT <bucket_upper> <count>`).
+pub fn render_sizes(out: &mut Vec<u8>, hist: &SizeHistogram) {
+    let mut bucket_upper = 32usize;
+    let mut in_bucket = 0u64;
+    for (size, count) in hist.iter() {
+        while size > bucket_upper {
+            if in_bucket > 0 {
+                stat(out, &bucket_upper.to_string(), in_bucket);
+            }
+            in_bucket = 0;
+            bucket_upper += 32;
+        }
+        in_bucket += count;
+    }
+    if in_bucket > 0 {
+        stat(out, &bucket_upper.to_string(), in_bucket);
+    }
+    out.extend_from_slice(b"END\r\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::SlabAllocator;
+
+    fn slab_stats_with_items() -> SlabStats {
+        let mut a = SlabAllocator::new(&ChunkSizePolicy::default(), 1 << 20, 8 << 20).unwrap();
+        a.alloc(518).unwrap();
+        a.alloc(100).unwrap();
+        a.stats()
+    }
+
+    fn text(out: &[u8]) -> String {
+        String::from_utf8(out.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn general_stats_contain_waste() {
+        let mut out = Vec::new();
+        render_general(&mut out, &StoreStats::default(), &slab_stats_with_items(), 2, 5);
+        let t = text(&out);
+        assert!(t.contains("STAT curr_items 2"));
+        assert!(t.contains("STAT bytes 618"));
+        assert!(t.contains("STAT bytes_wasted 102")); // (600-518)+(120-100)
+        assert!(t.ends_with("END\r\n"));
+    }
+
+    #[test]
+    fn slabs_stats_rows() {
+        let mut out = Vec::new();
+        render_slabs(&mut out, &slab_stats_with_items());
+        let t = text(&out);
+        // 518 -> class id 9 (600 bytes) with memcached numbering from 1
+        assert!(t.contains(":chunk_size 600"), "{t}");
+        assert!(t.contains(":mem_wasted 82"), "{t}");
+        assert!(t.contains(":chunk_size 120"), "{t}");
+        assert!(t.contains("STAT active_slabs 2"), "{t}");
+        // inactive classes omitted
+        assert!(!t.contains(":chunk_size 96\r"), "{t}");
+    }
+
+    #[test]
+    fn sizes_histogram_buckets() {
+        let mut h = SizeHistogram::new(4096);
+        h.record_n(10, 3); // bucket 32
+        h.record_n(33, 2); // bucket 64
+        h.record_n(64, 1); // bucket 64
+        h.record_n(1000, 5); // bucket 1024 (31*32=992 < 1000 <= 1024)
+        let mut out = Vec::new();
+        render_sizes(&mut out, &h);
+        let t = text(&out);
+        assert!(t.contains("STAT 32 3"), "{t}");
+        assert!(t.contains("STAT 64 3"), "{t}");
+        assert!(t.contains("STAT 1024 5"), "{t}");
+        assert!(t.ends_with("END\r\n"));
+    }
+
+    #[test]
+    fn sizes_empty() {
+        let mut out = Vec::new();
+        render_sizes(&mut out, &SizeHistogram::new(64));
+        assert_eq!(text(&out), "END\r\n");
+    }
+}

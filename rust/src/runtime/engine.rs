@@ -1,0 +1,163 @@
+//! The PJRT engine: compile the HLO-text artifacts once, then execute
+//! them with concrete inputs from the optimizer's control loop.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids — see
+//! /opt/xla-example/README.md and `python/compile/aot.py`.
+
+use super::manifest::{Manifest, ManifestError};
+use std::fmt;
+use std::path::Path;
+
+/// Runtime failures.
+#[derive(Debug)]
+pub enum RuntimeError {
+    Manifest(ManifestError),
+    Xla(xla::Error),
+    Shape(String),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Manifest(e) => write!(f, "{e}"),
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Shape(m) => write!(f, "shape mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Loaded artifacts on the PJRT CPU client.
+///
+/// NOT `Send`/`Sync` (the xla crate's wrappers hold `Rc`s): use
+/// [`super::service::XlaService`] to share across threads.
+pub struct XlaEngine {
+    man: Manifest,
+    waste_eval: xla::PjRtLoadedExecutable,
+    hill_step: xla::PjRtLoadedExecutable,
+    fit_lognormal: xla::PjRtLoadedExecutable,
+}
+
+impl XlaEngine {
+    /// Compile all artifacts under `dir` (one-time cost, then reused).
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let man = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = man.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(XlaEngine {
+            waste_eval: compile("waste_eval")?,
+            hill_step: compile("hill_step")?,
+            fit_lognormal: compile("fit_lognormal")?,
+            man,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    fn lit1(data: &[f64]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    fn lit2(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+        if data.len() != rows * cols {
+            return Err(RuntimeError::Shape(format!(
+                "{} elements != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// `waste_eval(hist[S], sizes[S], configs[B,K]) -> waste[B]`.
+    pub fn waste_eval(&self, hist: &[f64], sizes: &[f64], configs: &[f64]) -> Result<Vec<f64>> {
+        let (s, b, k) = (self.man.s_buckets, self.man.b_candidates, self.man.k_classes);
+        if hist.len() != s || sizes.len() != s {
+            return Err(RuntimeError::Shape(format!(
+                "hist/sizes len {} != S={s}",
+                hist.len()
+            )));
+        }
+        let out = self.run(
+            &self.waste_eval,
+            &[Self::lit1(hist), Self::lit1(sizes), Self::lit2(configs, b, k)?],
+        )?;
+        Ok(out[0].to_vec::<f64>()?)
+    }
+
+    /// `hill_step(hist, sizes, config[K], deltas[B,K])
+    ///  -> (best_config[K], best_waste, wastes[B])` — one fused
+    /// steepest-descent step per PJRT call.
+    pub fn hill_step(
+        &self,
+        hist: &[f64],
+        sizes: &[f64],
+        config: &[f64],
+        deltas: &[f64],
+    ) -> Result<(Vec<f64>, f64, Vec<f64>)> {
+        let (s, b, k) = (self.man.s_buckets, self.man.b_candidates, self.man.k_classes);
+        if hist.len() != s || sizes.len() != s || config.len() != k {
+            return Err(RuntimeError::Shape("hill_step input shapes".into()));
+        }
+        let out = self.run(
+            &self.hill_step,
+            &[
+                Self::lit1(hist),
+                Self::lit1(sizes),
+                Self::lit1(config),
+                Self::lit2(deltas, b, k)?,
+            ],
+        )?;
+        let best_config = out[0].to_vec::<f64>()?;
+        let best_waste = out[1].to_vec::<f64>()?[0];
+        let wastes = out[2].to_vec::<f64>()?;
+        Ok((best_config, best_waste, wastes))
+    }
+
+    /// `fit_lognormal(hist, sizes) -> (median, sigma_ln, n)` — the
+    /// learned traffic-pattern summary driving retune decisions.
+    pub fn fit_lognormal(&self, hist: &[f64], sizes: &[f64]) -> Result<(f64, f64, f64)> {
+        let out = self.run(&self.fit_lognormal, &[Self::lit1(hist), Self::lit1(sizes)])?;
+        Ok((
+            out[0].to_vec::<f64>()?[0],
+            out[1].to_vec::<f64>()?[0],
+            out[2].to_vec::<f64>()?[0],
+        ))
+    }
+}
+
+// NOTE: engine-level tests live in rust/tests/integration_optimizer.rs
+// (they need `make artifacts` to have run and a live PJRT client).

@@ -1,0 +1,255 @@
+//! `artifacts/manifest.json`: the contract between `aot.py` and the
+//! rust runtime — artifact file names, fixed shapes, and the SENTINEL
+//! constant both sides must agree on.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One entry point's shape signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntryPoint {
+    pub file: String,
+    /// (name, shape) in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub s_buckets: usize,
+    pub b_candidates: usize,
+    pub k_classes: usize,
+    pub sentinel: f64,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+}
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+    /// Manifest disagrees with what this build expects.
+    Incompatible(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Parse(m) => write!(f, "manifest parse: {m}"),
+            ManifestError::Incompatible(m) => write!(f, "manifest incompatible: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn field<'a>(v: &'a Json, path: &str) -> Result<&'a Json, ManifestError> {
+    let mut cur = v;
+    for part in path.split('.') {
+        cur = cur
+            .get(part)
+            .ok_or_else(|| ManifestError::Parse(format!("missing '{path}'")))?;
+    }
+    Ok(cur)
+}
+
+fn shapes(v: &Json, what: &str) -> Result<Vec<(String, Vec<usize>)>, ManifestError> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| ManifestError::Parse(format!("{what} not an array")))?;
+    arr.iter()
+        .map(|item| {
+            let name = field(item, "name")?
+                .as_str()
+                .ok_or_else(|| ManifestError::Parse(format!("{what}: bad name")))?
+                .to_string();
+            let shape = field(item, "shape")?
+                .as_array()
+                .ok_or_else(|| ManifestError::Parse(format!("{what}: bad shape")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| ManifestError::Parse(format!("{what}: bad dim")))
+                })
+                .collect::<Result<Vec<usize>, _>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text =
+            std::fs::read_to_string(dir.join("manifest.json")).map_err(ManifestError::Io)?;
+        let v = Json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+
+        if field(&v, "format")?.as_str() != Some("hlo-text") {
+            return Err(ManifestError::Incompatible("format != hlo-text".into()));
+        }
+        if field(&v, "dtype")?.as_str() != Some("f64") {
+            return Err(ManifestError::Incompatible("dtype != f64".into()));
+        }
+
+        let s_buckets = field(&v, "constants.s_buckets")?
+            .as_usize()
+            .ok_or_else(|| ManifestError::Parse("bad s_buckets".into()))?;
+        let b_candidates = field(&v, "constants.b_candidates")?
+            .as_usize()
+            .ok_or_else(|| ManifestError::Parse("bad b_candidates".into()))?;
+        let k_classes = field(&v, "constants.k_classes")?
+            .as_usize()
+            .ok_or_else(|| ManifestError::Parse("bad k_classes".into()))?;
+        let sentinel = field(&v, "constants.sentinel")?
+            .as_f64()
+            .ok_or_else(|| ManifestError::Parse("bad sentinel".into()))?;
+
+        if sentinel != crate::optimizer::waste::SENTINEL as f64 {
+            return Err(ManifestError::Incompatible(format!(
+                "sentinel {sentinel} != {}",
+                crate::optimizer::waste::SENTINEL
+            )));
+        }
+
+        let eps = field(&v, "entry_points")?
+            .as_object()
+            .ok_or_else(|| ManifestError::Parse("entry_points not an object".into()))?;
+        let mut entry_points = BTreeMap::new();
+        for (name, ep) in eps {
+            let file = field(ep, "file")?
+                .as_str()
+                .ok_or_else(|| ManifestError::Parse("bad file".into()))?
+                .to_string();
+            entry_points.insert(
+                name.clone(),
+                EntryPoint {
+                    file,
+                    inputs: shapes(field(ep, "inputs")?, "inputs")?,
+                    outputs: shapes(field(ep, "outputs")?, "outputs")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            s_buckets,
+            b_candidates,
+            k_classes,
+            sentinel,
+            entry_points,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint, ManifestError> {
+        self.entry_points
+            .get(name)
+            .ok_or_else(|| ManifestError::Incompatible(format!("missing entry point '{name}'")))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf, ManifestError> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("slabforge-man-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const GOOD: &str = r#"{
+        "format": "hlo-text", "dtype": "f64",
+        "fingerprint": "abc",
+        "constants": {"s_buckets": 16384, "b_candidates": 256,
+                      "k_classes": 64, "sentinel": 2097152.0},
+        "entry_points": {
+            "waste_eval": {"file": "waste_eval.hlo.txt",
+                "inputs": [{"name": "hist", "shape": [16384]},
+                            {"name": "sizes", "shape": [16384]},
+                            {"name": "configs", "shape": [256, 64]}],
+                "outputs": [{"name": "waste", "shape": [256]}]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.s_buckets, 16384);
+        assert_eq!(m.b_candidates, 256);
+        assert_eq!(m.k_classes, 64);
+        let ep = m.entry("waste_eval").unwrap();
+        assert_eq!(ep.inputs[2].1, vec![256, 64]);
+        assert_eq!(
+            m.artifact_path("waste_eval").unwrap(),
+            d.join("waste_eval.hlo.txt")
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_sentinel() {
+        let d = tmpdir("sent");
+        write_manifest(&d, &GOOD.replace("2097152.0", "123.0"));
+        assert!(matches!(
+            Manifest::load(&d),
+            Err(ManifestError::Incompatible(_))
+        ));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let d = tmpdir("fmt");
+        write_manifest(&d, &GOOD.replace("hlo-text", "proto"));
+        assert!(matches!(
+            Manifest::load(&d),
+            Err(ManifestError::Incompatible(_))
+        ));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let d = tmpdir("nofile");
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(matches!(Manifest::load(&d), Err(ManifestError::Io(_))));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_entry_reported() {
+        let d = tmpdir("noentry");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.entry("hill_step").is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // validates the actual `make artifacts` output when it exists
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.s_buckets, 16384);
+            assert!(m.entry("waste_eval").is_ok());
+            assert!(m.entry("hill_step").is_ok());
+            assert!(m.entry("fit_lognormal").is_ok());
+        }
+    }
+}

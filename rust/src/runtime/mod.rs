@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled XLA artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`)
+//! and execute them from the rust hot path. Python never runs here.
+//!
+//! * [`manifest`] — parse + validate `artifacts/manifest.json`.
+//! * [`engine`] — the PJRT CPU client, compiled executables, and typed
+//!   entry points (`waste_eval`, `hill_step`, `fit_lognormal`).
+//! * [`service`] — a `Send + Sync` handle around the engine: the xla
+//!   crate's PJRT wrappers are `!Send` (`Rc` internals), so the engine
+//!   lives on a dedicated thread behind an mpsc request channel.
+//!   [`service::XlaWasteBackend`] plugs it into the optimizer's
+//!   [`WasteBackend`](crate::optimizer::WasteBackend).
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::XlaEngine;
+pub use manifest::Manifest;
+pub use service::{XlaService, XlaWasteBackend};

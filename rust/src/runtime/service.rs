@@ -1,0 +1,265 @@
+//! Thread-safe facade over [`XlaEngine`]: the xla crate's PJRT wrappers
+//! are `!Send` (they hold `Rc`s into the C API), so the engine lives on
+//! one dedicated worker thread and callers talk to it over an mpsc
+//! request channel. Callers block on a per-request reply channel; the
+//! handle is cheap to clone and `Send + Sync`.
+
+use super::engine::XlaEngine;
+use super::manifest::Manifest;
+use crate::optimizer::engine::WasteBackend;
+use crate::optimizer::waste::SENTINEL;
+use crate::util::histogram::SizeHistogram;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+type Reply<T> = mpsc::Sender<Result<T, String>>;
+
+enum Req {
+    WasteEval {
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+        configs: Vec<f64>,
+        reply: Reply<Vec<f64>>,
+    },
+    HillStep {
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+        config: Vec<f64>,
+        deltas: Vec<f64>,
+        reply: Reply<(Vec<f64>, f64, Vec<f64>)>,
+    },
+    FitLognormal {
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+        reply: Reply<(f64, f64, f64)>,
+    },
+    Shutdown,
+}
+
+/// `Send + Sync` handle to the engine worker thread.
+pub struct XlaService {
+    tx: mpsc::Sender<Req>,
+    manifest: Manifest,
+}
+
+impl std::fmt::Debug for XlaService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaService")
+            .field("artifacts", &self.manifest.dir)
+            .finish_non_exhaustive()
+    }
+}
+
+impl XlaService {
+    /// Spawn the worker and compile the artifacts on it. Returns after
+    /// compilation finished (fails fast on stale artifacts).
+    pub fn start(artifacts_dir: &Path) -> Result<Arc<XlaService>, String> {
+        // parse the manifest on the caller to expose shapes cheaply
+        let manifest =
+            Manifest::load(artifacts_dir).map_err(|e| format!("manifest: {e}"))?;
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let dir = artifacts_dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("slabforge-xla".into())
+            .spawn(move || {
+                let engine = match XlaEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::WasteEval {
+                            hist,
+                            sizes,
+                            configs,
+                            reply,
+                        } => {
+                            let r = engine
+                                .waste_eval(&hist, &sizes, &configs)
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Req::HillStep {
+                            hist,
+                            sizes,
+                            config,
+                            deltas,
+                            reply,
+                        } => {
+                            let r = engine
+                                .hill_step(&hist, &sizes, &config, &deltas)
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Req::FitLognormal { hist, sizes, reply } => {
+                            let r = engine
+                                .fit_lognormal(&hist, &sizes)
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Req::Shutdown => return,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn xla worker: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "xla worker died during startup".to_string())??;
+        Ok(Arc::new(XlaService { tx, manifest }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call<T, F: FnOnce(Reply<T>) -> Req>(&self, make: F) -> Result<T, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| "xla worker gone".to_string())?;
+        reply_rx.recv().map_err(|_| "xla worker gone".to_string())?
+    }
+
+    pub fn waste_eval(
+        &self,
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+        configs: Vec<f64>,
+    ) -> Result<Vec<f64>, String> {
+        self.call(|reply| Req::WasteEval {
+            hist,
+            sizes,
+            configs,
+            reply,
+        })
+    }
+
+    pub fn hill_step(
+        &self,
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+        config: Vec<f64>,
+        deltas: Vec<f64>,
+    ) -> Result<(Vec<f64>, f64, Vec<f64>), String> {
+        self.call(|reply| Req::HillStep {
+            hist,
+            sizes,
+            config,
+            deltas,
+            reply,
+        })
+    }
+
+    pub fn fit_lognormal(
+        &self,
+        hist: Arc<Vec<f64>>,
+        sizes: Arc<Vec<f64>>,
+    ) -> Result<(f64, f64, f64), String> {
+        self.call(|reply| Req::FitLognormal { hist, sizes, reply })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+/// The optimizer-facing backend: a fixed (bucketized) histogram plus
+/// the service; every [`WasteBackend::eval_batch`] call scores up to
+/// B=256 candidates in one artifact execution.
+///
+/// Exactness: bucketization is byte-granular (width 1) whenever the
+/// largest observed size ≤ S=16384 — true for every paper workload —
+/// making results bit-identical to the rust evaluator (asserted in
+/// integration tests). Wider buckets degrade gracefully to a
+/// lower-bound estimate with upper-edge representative sizes.
+pub struct XlaWasteBackend {
+    service: Arc<XlaService>,
+    hist: Arc<Vec<f64>>,
+    sizes: Arc<Vec<f64>>,
+}
+
+impl XlaWasteBackend {
+    pub fn new(service: &Arc<XlaService>, hist: &SizeHistogram) -> Self {
+        let s = service.manifest.s_buckets;
+        let b = hist.bucketize(s, s);
+        XlaWasteBackend {
+            service: service.clone(),
+            hist: Arc::new(b.hist),
+            sizes: Arc::new(b.sizes),
+        }
+    }
+
+    /// The fused L2 `hill_step` over this backend's histogram.
+    pub fn fused_hill_step(
+        &self,
+        config: &[u32],
+        deltas: &[f64],
+    ) -> Result<(Vec<u32>, u64, Vec<u64>), String> {
+        let k = self.service.manifest.k_classes;
+        let mut cfg = vec![SENTINEL as f64; k];
+        for (dst, &c) in cfg.iter_mut().zip(config.iter()) {
+            *dst = c as f64;
+        }
+        let (best_cfg, best_waste, wastes) =
+            self.service
+                .hill_step(self.hist.clone(), self.sizes.clone(), cfg, deltas.to_vec())?;
+        let best: Vec<u32> = best_cfg
+            .iter()
+            .filter(|&&c| c < SENTINEL as f64)
+            .map(|&c| c as u32)
+            .collect();
+        Ok((
+            best,
+            best_waste as u64,
+            wastes.into_iter().map(|w| w as u64).collect(),
+        ))
+    }
+}
+
+impl WasteBackend for XlaWasteBackend {
+    fn eval_batch(&self, configs: &[Vec<u32>]) -> Vec<u64> {
+        let b = self.service.manifest.b_candidates;
+        let k = self.service.manifest.k_classes;
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(b) {
+            let mut flat = vec![SENTINEL as f64; b * k];
+            for (row, cfg) in chunk.iter().enumerate() {
+                assert!(cfg.len() <= k, "config with {} classes > K={k}", cfg.len());
+                for (dst, &c) in flat[row * k..(row + 1) * k].iter_mut().zip(cfg.iter()) {
+                    *dst = c as f64;
+                }
+            }
+            let wastes = self
+                .service
+                .waste_eval(self.hist.clone(), self.sizes.clone(), flat)
+                .expect("artifact execution failed");
+            out.extend(wastes[..chunk.len()].iter().map(|&w| w as u64));
+        }
+        out
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.service.manifest.b_candidates
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// Live-engine tests are in rust/tests/integration_optimizer.rs (they
+// require `make artifacts`).

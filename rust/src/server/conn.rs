@@ -1,0 +1,446 @@
+//! Per-connection protocol state machine, transport-agnostic: bytes in,
+//! bytes out. The same machine drives real sockets (`server::tcp`) and
+//! in-memory tests.
+
+use crate::protocol::parse::{parse_command, Command, ParseError, StoreOp};
+use crate::protocol::{response, stats};
+use crate::store::sharded::ShardedStore;
+use crate::store::store::{CasResult, StoreError};
+use crate::util::histogram::SizeHistogram;
+use std::sync::Arc;
+
+/// Hard cap on one command line (memcached: 2048 for key lines).
+const MAX_LINE: usize = 8192;
+
+/// Hard cap on a data block (1 MiB value + slack).
+const MAX_DATA: usize = (1 << 20) + 1024;
+
+/// Hook for the admin extensions; implemented by the optimizer
+/// coordinator and injected by the launcher.
+pub trait Control: Send + Sync {
+    /// `slabs optimize` — returns a status line (without CRLF).
+    fn optimize_now(&self) -> String;
+    /// `slabs reconfigure` — apply explicit sizes; status line.
+    fn reconfigure(&self, sizes: Vec<usize>) -> Result<String, String>;
+    /// `stats sizes` source (the learned histogram), if any.
+    fn sizes_histogram(&self) -> Option<SizeHistogram>;
+}
+
+/// No-op control for servers launched without the optimizer.
+pub struct NoControl;
+
+impl Control for NoControl {
+    fn optimize_now(&self) -> String {
+        "SERVER_ERROR optimizer not enabled".into()
+    }
+
+    fn reconfigure(&self, sizes: Vec<usize>) -> Result<String, String> {
+        let _ = sizes;
+        Err("optimizer not enabled".into())
+    }
+
+    fn sizes_histogram(&self) -> Option<SizeHistogram> {
+        None
+    }
+}
+
+enum Phase {
+    /// Waiting for a full command line.
+    Line,
+    /// Waiting for `len` data bytes + CRLF of a storage command.
+    Data { cmd: Command, len: usize },
+}
+
+/// Connection state machine.
+pub struct Conn {
+    store: Arc<ShardedStore>,
+    control: Arc<dyn Control>,
+    buf: Vec<u8>,
+    phase: Phase,
+    start: std::time::Instant,
+    pub closing: bool,
+}
+
+impl Conn {
+    pub fn new(store: Arc<ShardedStore>, control: Arc<dyn Control>) -> Self {
+        Conn {
+            store,
+            control,
+            buf: Vec::with_capacity(4096),
+            phase: Phase::Line,
+            start: std::time::Instant::now(),
+            closing: false,
+        }
+    }
+
+    /// Feed received bytes; protocol responses accumulate in `out`.
+    /// Returns the number of commands completed.
+    pub fn on_bytes(&mut self, data: &[u8], out: &mut Vec<u8>) -> usize {
+        self.buf.extend_from_slice(data);
+        let mut completed = 0;
+        loop {
+            match &self.phase {
+                Phase::Line => {
+                    let Some(eol) = find_crlf(&self.buf) else {
+                        if self.buf.len() > MAX_LINE {
+                            response::client_error(out, "line too long");
+                            self.closing = true;
+                        }
+                        return completed;
+                    };
+                    if eol > MAX_LINE {
+                        // a complete-but-oversized line is equally abusive
+                        response::client_error(out, "line too long");
+                        self.closing = true;
+                        return completed;
+                    }
+                    let line: Vec<u8> = self.buf[..eol].to_vec();
+                    self.buf.drain(..eol + 2);
+                    match parse_command(&line) {
+                        Ok(cmd) => match cmd.data_len() {
+                            Some(len) if len > MAX_DATA => {
+                                // swallow the oversized block to stay in sync
+                                response::server_error(out, "object too large for cache");
+                                self.phase = Phase::Data {
+                                    cmd: Command::Quit, // placeholder; data dropped
+                                    len,
+                                };
+                            }
+                            Some(len) => {
+                                self.phase = Phase::Data { cmd, len };
+                            }
+                            None => {
+                                self.execute(cmd, None, out);
+                                completed += 1;
+                            }
+                        },
+                        Err(ParseError::UnknownCommand) => {
+                            response::error(out);
+                        }
+                        Err(ParseError::Client(msg)) => {
+                            response::client_error(out, msg);
+                        }
+                    }
+                }
+                Phase::Data { len, .. } => {
+                    let need = *len + 2;
+                    if self.buf.len() < need {
+                        return completed;
+                    }
+                    let Phase::Data { cmd, len } =
+                        std::mem::replace(&mut self.phase, Phase::Line)
+                    else {
+                        unreachable!()
+                    };
+                    let ok_tail = &self.buf[len..len + 2] == b"\r\n";
+                    let data: Vec<u8> = self.buf[..len].to_vec();
+                    self.buf.drain(..need);
+                    if matches!(cmd, Command::Quit) {
+                        // oversized block swallowed above; error already sent
+                        continue;
+                    }
+                    if !ok_tail {
+                        response::client_error(out, "bad data chunk");
+                        continue;
+                    }
+                    self.execute(cmd, Some(data), out);
+                    completed += 1;
+                }
+            }
+            if self.closing {
+                return completed;
+            }
+        }
+    }
+
+    fn execute(&mut self, cmd: Command, data: Option<Vec<u8>>, out: &mut Vec<u8>) {
+        let quiet = cmd.noreply();
+        // `noreply` suppresses normal responses; errors still flow in
+        // memcached, so we buffer into a scratch and drop on success.
+        let mut scratch = Vec::new();
+        let sink: &mut Vec<u8> = if quiet { &mut scratch } else { out };
+        match cmd {
+            Command::Get { keys, with_cas } => {
+                for key in keys {
+                    if let Some(v) = self.store.get(&key) {
+                        response::value(sink, &key, &v, with_cas);
+                    }
+                }
+                response::end(sink);
+            }
+            Command::Store {
+                op,
+                key,
+                flags,
+                exptime,
+                cas,
+                ..
+            } => {
+                let value = data.expect("storage command carries data");
+                let outcome = match op {
+                    StoreOp::Set => self.store.set(&key, &value, flags, exptime).map(|_| true),
+                    StoreOp::Add => self.store.add(&key, &value, flags, exptime),
+                    StoreOp::Replace => self.store.replace(&key, &value, flags, exptime),
+                    StoreOp::Append => self.store.concat(&key, &value, true),
+                    StoreOp::Prepend => self.store.concat(&key, &value, false),
+                    StoreOp::Cas => match self.store.cas(&key, &value, flags, exptime, cas) {
+                        Ok(CasResult::Stored) => Ok(true),
+                        Ok(CasResult::Exists) => {
+                            response::exists(sink);
+                            return;
+                        }
+                        Ok(CasResult::NotFound) => {
+                            response::not_found(sink);
+                            return;
+                        }
+                        Err(e) => Err(e),
+                    },
+                };
+                match outcome {
+                    Ok(true) => response::stored(sink),
+                    Ok(false) => response::not_stored(sink),
+                    Err(e) => store_error(sink, &e),
+                }
+            }
+            Command::Delete { key, .. } => {
+                if self.store.delete(&key) {
+                    response::deleted(sink);
+                } else {
+                    response::not_found(sink);
+                }
+            }
+            Command::IncrDecr {
+                key, delta, incr, ..
+            } => match self.store.incr_decr(&key, delta, incr) {
+                Ok(Some(n)) => response::number(sink, n),
+                Ok(None) => response::not_found(sink),
+                Err(e) => store_error(sink, &e),
+            },
+            Command::Touch { key, exptime, .. } => {
+                if self.store.touch(&key, exptime) {
+                    response::touched(sink);
+                } else {
+                    response::not_found(sink);
+                }
+            }
+            Command::Stats { arg } => {
+                match arg.as_deref() {
+                    Some(b"slabs") => {
+                        stats::render_slabs(sink, &self.store.slab_stats());
+                    }
+                    Some(b"sizes") => match self.control.sizes_histogram() {
+                        Some(h) => stats::render_sizes(sink, &h),
+                        None => {
+                            let h = SizeHistogram::new(1);
+                            stats::render_sizes(sink, &h);
+                        }
+                    },
+                    _ => {
+                        let ops = self.store.stats();
+                        let slabs = self.store.slab_stats();
+                        let uptime = self.start.elapsed().as_secs();
+                        stats::render_general(sink, &ops, &slabs, self.store.len(), uptime);
+                    }
+                };
+            }
+            Command::FlushAll { .. } => {
+                self.store.flush_all();
+                response::ok(sink);
+            }
+            Command::Version => response::version(sink, env!("CARGO_PKG_VERSION")),
+            Command::Verbosity { .. } => response::ok(sink),
+            Command::Quit => {
+                self.closing = true;
+            }
+            Command::SlabsReconfigure { sizes, .. } => match self.control.reconfigure(sizes) {
+                Ok(msg) => {
+                    sink.extend_from_slice(msg.as_bytes());
+                    sink.extend_from_slice(b"\r\n");
+                }
+                Err(msg) => response::server_error(sink, &msg),
+            },
+            Command::SlabsOptimize => {
+                let msg = self.control.optimize_now();
+                sink.extend_from_slice(msg.as_bytes());
+                sink.extend_from_slice(b"\r\n");
+            }
+        }
+    }
+}
+
+fn store_error(out: &mut Vec<u8>, e: &StoreError) {
+    match e {
+        StoreError::BadKey => response::client_error(out, "bad key"),
+        StoreError::NonNumeric => {
+            response::client_error(out, "cannot increment or decrement non-numeric value")
+        }
+        StoreError::TooLarge { .. } => response::server_error(out, "object too large for cache"),
+        StoreError::OutOfMemory => response::server_error(out, "out of memory storing object"),
+    }
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::store::Clock;
+
+    fn conn() -> Conn {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        Conn::new(store, Arc::new(NoControl))
+    }
+
+    fn run(c: &mut Conn, input: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        c.on_bytes(input, &mut out);
+        out
+    }
+
+    #[test]
+    fn set_get_exact() {
+        let mut c = conn();
+        let out = run(&mut c, b"set foo 7 0 5\r\nhello\r\nget foo\r\n");
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "STORED\r\nVALUE foo 7 5\r\nhello\r\nEND\r\n"
+        );
+    }
+
+    #[test]
+    fn fragmented_input_reassembles() {
+        let mut c = conn();
+        let mut out = Vec::new();
+        for chunk in [
+            &b"set fr"[..],
+            &b"ag 0 0 "[..],
+            &b"4\r\nda"[..],
+            &b"ta\r"[..],
+            &b"\nget frag\r\n"[..],
+        ] {
+            c.on_bytes(chunk, &mut out);
+        }
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "STORED\r\nVALUE frag 0 4\r\ndata\r\nEND\r\n"
+        );
+    }
+
+    #[test]
+    fn pipelined_commands() {
+        let mut c = conn();
+        let out = run(
+            &mut c,
+            b"set a 0 0 1\r\nx\r\nset b 0 0 1\r\ny\r\nget a b\r\n",
+        );
+        let t = String::from_utf8_lossy(&out);
+        assert_eq!(t.matches("STORED").count(), 2);
+        assert!(t.contains("VALUE a 0 1"));
+        assert!(t.contains("VALUE b 0 1"));
+    }
+
+    #[test]
+    fn noreply_suppresses_response() {
+        let mut c = conn();
+        let out = run(&mut c, b"set q 0 0 1 noreply\r\nz\r\nget q\r\n");
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "VALUE q 0 1\r\nz\r\nEND\r\n"
+        );
+    }
+
+    #[test]
+    fn unknown_command_then_recovers() {
+        let mut c = conn();
+        let out = run(&mut c, b"bogus\r\nversion\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("ERROR\r\nVERSION"));
+    }
+
+    #[test]
+    fn bad_data_tail_flagged() {
+        let mut c = conn();
+        let out = run(&mut c, b"set k 0 0 2\r\nabXXget k\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("CLIENT_ERROR bad data chunk"), "{t}");
+    }
+
+    #[test]
+    fn delete_incr_touch_flow() {
+        let mut c = conn();
+        let out = run(
+            &mut c,
+            b"set n 0 0 2\r\n10\r\nincr n 5\r\ndecr n 100\r\ntouch n 60\r\ndelete n\r\ndelete n\r\n",
+        );
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "STORED\r\n15\r\n0\r\nTOUCHED\r\nDELETED\r\nNOT_FOUND\r\n"
+        );
+    }
+
+    #[test]
+    fn cas_mismatch_reports_exists() {
+        let mut c = conn();
+        let out = run(&mut c, b"set k 0 0 1\r\nv\r\ngets k\r\n");
+        let t = String::from_utf8_lossy(&out);
+        let cas: u64 = t
+            .split_whitespace()
+            .nth(5) // VALUE k 0 1 <cas>
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        let bad = run(&mut c, format!("cas k 0 0 1 {}\r\nw\r\n", cas + 1).as_bytes());
+        assert_eq!(String::from_utf8_lossy(&bad), "EXISTS\r\n");
+        let good = run(&mut c, format!("cas k 0 0 1 {cas}\r\nw\r\n").as_bytes());
+        assert_eq!(String::from_utf8_lossy(&good), "STORED\r\n");
+    }
+
+    #[test]
+    fn stats_render() {
+        let mut c = conn();
+        let out = run(&mut c, b"set s 0 0 3\r\nabc\r\nstats\r\nstats slabs\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("STAT curr_items 1"));
+        assert!(t.contains("chunk_size"));
+    }
+
+    #[test]
+    fn quit_closes() {
+        let mut c = conn();
+        run(&mut c, b"quit\r\n");
+        assert!(c.closing);
+    }
+
+    #[test]
+    fn multi_get_missing_keys_skipped() {
+        let mut c = conn();
+        let out = run(&mut c, b"set a 0 0 1\r\nx\r\nget a missing b\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("VALUE a"));
+        assert!(!t.contains("missing"));
+    }
+
+    #[test]
+    fn binary_value_with_embedded_crlf() {
+        let mut c = conn();
+        let out = run(&mut c, b"set bin 0 0 6\r\nab\r\ncd\r\nget bin\r\n");
+        let t = out.clone();
+        assert!(String::from_utf8_lossy(&t).contains("VALUE bin 0 6"));
+        assert!(t.windows(6).any(|w| w == b"ab\r\ncd"));
+    }
+}

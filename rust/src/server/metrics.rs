@@ -1,0 +1,67 @@
+//! Server-level counters (lock-free; sampled by `stats` and benches).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub connections_accepted: AtomicU64,
+    pub connections_closed: AtomicU64,
+    pub commands: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub protocol_errors: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_closed: self.connections_closed.load(Ordering::Relaxed),
+            commands: self.commands.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub connections_accepted: u64,
+    pub connections_closed: u64,
+    pub commands: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub protocol_errors: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        Metrics::bump(&m.commands);
+        Metrics::bump(&m.commands);
+        Metrics::add(&m.bytes_read, 100);
+        let s = m.snapshot();
+        assert_eq!(s.commands, 2);
+        assert_eq!(s.bytes_read, 100);
+        assert_eq!(s.protocol_errors, 0);
+    }
+}

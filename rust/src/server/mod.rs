@@ -1,0 +1,10 @@
+//! Threaded TCP front end (tokio is not vendored in this offline image;
+//! memcached itself is thread-per-event-loop, and a worker-thread model
+//! over `std::net` preserves the same serving semantics — DESIGN.md §3).
+
+pub mod conn;
+pub mod metrics;
+pub mod tcp;
+
+pub use conn::NoControl;
+pub use tcp::{Control, Server, ServerHandle};

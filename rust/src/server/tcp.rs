@@ -1,0 +1,220 @@
+//! TCP server: accept loop + thread-per-connection workers over the
+//! [`Conn`](super::conn::Conn) state machine.
+
+use super::conn::Conn;
+use super::metrics::Metrics;
+use crate::store::sharded::ShardedStore;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub use super::conn::{Control, NoControl};
+
+/// A running server; dropping the handle does NOT stop it — call
+/// [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServerHandle {
+    /// The bound address (useful with `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, unblock the accept loop, join it. In-flight
+    /// connection threads finish their current command and exit on the
+    /// next read (connections are closed by peers or idle-out).
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Server configuration + launch.
+pub struct Server {
+    pub store: Arc<ShardedStore>,
+    pub control: Arc<dyn Control>,
+}
+
+impl Server {
+    pub fn new(store: Arc<ShardedStore>) -> Self {
+        Server {
+            store,
+            control: Arc::new(NoControl),
+        }
+    }
+
+    pub fn with_control(store: Arc<ShardedStore>, control: Arc<dyn Control>) -> Self {
+        Server { store, control }
+    }
+
+    /// Bind and serve in background threads.
+    pub fn start(self, listen: &str) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::new());
+
+        let accept_shutdown = shutdown.clone();
+        let accept_metrics = metrics.clone();
+        let store = self.store;
+        let control = self.control;
+        let accept_thread = std::thread::Builder::new()
+            .name("slabforge-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    Metrics::bump(&accept_metrics.connections_accepted);
+                    let store = store.clone();
+                    let control = control.clone();
+                    let metrics = accept_metrics.clone();
+                    let conn_shutdown = accept_shutdown.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("slabforge-conn".into())
+                        .spawn(move || {
+                            serve_connection(stream, store, control, &metrics, &conn_shutdown);
+                            Metrics::bump(&metrics.connections_closed);
+                        });
+                }
+            })?;
+
+        Ok(ServerHandle {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            metrics,
+        })
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    store: Arc<ShardedStore>,
+    control: Arc<dyn Control>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    // periodic read timeouts let the thread observe shutdown
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
+    let mut conn = Conn::new(store, control);
+    let mut rbuf = [0u8; 16 * 1024];
+    let mut out: Vec<u8> = Vec::with_capacity(16 * 1024);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut rbuf) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                Metrics::add(&metrics.bytes_read, n as u64);
+                out.clear();
+                let done = conn.on_bytes(&rbuf[..n], &mut out);
+                Metrics::add(&metrics.commands, done as u64);
+                if !out.is_empty() {
+                    if stream.write_all(&out).is_err() {
+                        return;
+                    }
+                    Metrics::add(&metrics.bytes_written, out.len() as u64);
+                }
+                if conn.closing {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::store::Clock;
+
+    fn start_server() -> ServerHandle {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        Server::new(store).start("127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn end_to_end_set_get_over_tcp() {
+        let handle = start_server();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"set k 0 0 5\r\nhello\r\nget k\r\nquit\r\n").unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let t = String::from_utf8_lossy(&buf);
+        assert!(t.contains("STORED"));
+        assert!(t.contains("VALUE k 0 5\r\nhello"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let handle = start_server();
+        let addr = handle.addr();
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    for i in 0..50 {
+                        let key = format!("k-{t}-{i}");
+                        let cmd = format!("set {key} 0 0 3\r\nv{i:02}\r\nget {key}\r\n");
+                        s.write_all(cmd.as_bytes()).unwrap();
+                        let mut buf = [0u8; 512];
+                        let mut got = Vec::new();
+                        while !String::from_utf8_lossy(&got).contains("END\r\n") {
+                            let n = s.read(&mut buf).unwrap();
+                            assert!(n > 0);
+                            got.extend_from_slice(&buf[..n]);
+                        }
+                        let t = String::from_utf8_lossy(&got);
+                        assert!(t.contains(&format!("VALUE {key} 0 3")), "{t}");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(handle.metrics.snapshot().commands >= 800);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks() {
+        let handle = start_server();
+        handle.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,331 @@
+//! The slab allocator facade: class selection, the global page budget,
+//! and whole-cache hole accounting (the paper's measured quantity).
+
+use super::class::{ChunkLoc, ClassStats, SlabClass};
+use super::policy::{ChunkSizePolicy, PolicyError};
+use std::fmt;
+
+/// Handle to an allocated chunk. `class` indexes the allocator's class
+/// table; the location addresses the chunk within the class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkHandle {
+    pub class: u16,
+    pub loc: ChunkLoc,
+}
+
+/// Allocation failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlabError {
+    /// Item exceeds the largest chunk (memcached: SERVER_ERROR object
+    /// too large for cache).
+    TooLarge { size: usize, max: usize },
+    /// The class is full and the global page budget is exhausted; the
+    /// caller should evict from `class` and retry (memcached behaviour
+    /// with `-M` off is eviction; we surface the decision).
+    NeedEviction { class: u16 },
+    /// Invalid chunk-size configuration.
+    Policy(PolicyError),
+}
+
+impl fmt::Display for SlabError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SlabError::TooLarge { size, max } => {
+                write!(f, "object too large for cache ({size} > {max})")
+            }
+            SlabError::NeedEviction { class } => {
+                write!(f, "class {class} full and memory limit reached")
+            }
+            SlabError::Policy(e) => write!(f, "bad slab policy: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SlabError {}
+
+impl From<PolicyError> for SlabError {
+    fn from(e: PolicyError) -> Self {
+        SlabError::Policy(e)
+    }
+}
+
+/// Whole-allocator statistics (aggregated `stats slabs`).
+#[derive(Clone, Debug)]
+pub struct SlabStats {
+    pub per_class: Vec<ClassStats>,
+    pub page_size: usize,
+    pub pages_allocated: usize,
+    pub page_budget: usize,
+    pub requested_bytes: u64,
+    pub allocated_bytes: u64,
+    /// Σ per-class holes — the paper's "Memory wasted (bytes)".
+    pub hole_bytes: u64,
+    pub tail_waste_bytes: u64,
+}
+
+impl SlabStats {
+    /// Fraction of allocated chunk memory lost to holes (paper §1: ~10 %).
+    pub fn hole_fraction(&self) -> f64 {
+        if self.allocated_bytes == 0 {
+            0.0
+        } else {
+            self.hole_bytes as f64 / self.allocated_bytes as f64
+        }
+    }
+}
+
+/// The slab allocator: a class table sharing one page budget.
+pub struct SlabAllocator {
+    classes: Vec<SlabClass>,
+    /// Ascending chunk sizes, parallel to `classes` (lookup table).
+    chunk_sizes: Vec<usize>,
+    page_size: usize,
+    pages_allocated: usize,
+    page_budget: usize,
+}
+
+impl SlabAllocator {
+    /// Build an allocator from a policy, a page size, and a total
+    /// memory limit (rounded down to whole pages, ≥ 1).
+    pub fn new(
+        policy: &ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+    ) -> Result<Self, SlabError> {
+        let chunk_sizes = policy.materialize(page_size)?;
+        let classes = chunk_sizes.iter().map(|&s| SlabClass::new(s)).collect();
+        Ok(SlabAllocator {
+            classes,
+            chunk_sizes,
+            page_size,
+            pages_allocated: 0,
+            page_budget: (mem_limit / page_size).max(1),
+        })
+    }
+
+    /// The ascending chunk-size table.
+    #[inline]
+    pub fn chunk_sizes(&self) -> &[usize] {
+        &self.chunk_sizes
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    #[inline]
+    pub fn page_budget(&self) -> usize {
+        self.page_budget
+    }
+
+    #[inline]
+    pub fn pages_allocated(&self) -> usize {
+        self.pages_allocated
+    }
+
+    /// Largest storable item.
+    #[inline]
+    pub fn max_item_size(&self) -> usize {
+        *self.chunk_sizes.last().unwrap()
+    }
+
+    /// Smallest class whose chunk covers `size` (binary search).
+    #[inline]
+    pub fn class_for_size(&self, size: usize) -> Option<u16> {
+        match self.chunk_sizes.binary_search(&size) {
+            Ok(i) => Some(i as u16),
+            Err(i) if i < self.chunk_sizes.len() => Some(i as u16),
+            Err(_) => None,
+        }
+    }
+
+    /// Chunk size of a class.
+    #[inline]
+    pub fn chunk_size_of(&self, class: u16) -> usize {
+        self.chunk_sizes[class as usize]
+    }
+
+    /// Allocate a chunk for an item of `size` bytes.
+    pub fn alloc(&mut self, size: usize) -> Result<ChunkHandle, SlabError> {
+        let class = self.class_for_size(size).ok_or(SlabError::TooLarge {
+            size,
+            max: self.max_item_size(),
+        })?;
+        let ci = class as usize;
+        if !self.classes[ci].has_free_chunk() {
+            if self.pages_allocated < self.page_budget {
+                self.classes[ci].add_page(self.page_size);
+                self.pages_allocated += 1;
+            } else {
+                return Err(SlabError::NeedEviction { class });
+            }
+        }
+        let loc = self.classes[ci]
+            .alloc(size)
+            .expect("free chunk present after page add");
+        Ok(ChunkHandle { class, loc })
+    }
+
+    /// Free a chunk, un-accounting the item's requested `size`.
+    pub fn free(&mut self, handle: ChunkHandle, size: usize) {
+        self.classes[handle.class as usize].free(handle.loc, size);
+    }
+
+    /// Re-account an in-place item resize within the same chunk.
+    pub fn reaccount(&mut self, handle: ChunkHandle, old_size: usize, new_size: usize) {
+        self.classes[handle.class as usize].reaccount(old_size, new_size);
+    }
+
+    /// Read a stored chunk.
+    #[inline]
+    pub fn chunk(&self, handle: ChunkHandle) -> &[u8] {
+        self.classes[handle.class as usize].chunk(handle.loc)
+    }
+
+    /// Write into a stored chunk.
+    #[inline]
+    pub fn chunk_mut(&mut self, handle: ChunkHandle) -> &mut [u8] {
+        self.classes[handle.class as usize].chunk_mut(handle.loc)
+    }
+
+    /// Aggregate statistics (the paper's measurement instrument).
+    pub fn stats(&self) -> SlabStats {
+        let per_class: Vec<ClassStats> = self.classes.iter().map(SlabClass::stats).collect();
+        SlabStats {
+            requested_bytes: per_class.iter().map(|c| c.requested_bytes).sum(),
+            allocated_bytes: per_class.iter().map(|c| c.allocated_bytes).sum(),
+            hole_bytes: per_class.iter().map(|c| c.hole_bytes).sum(),
+            tail_waste_bytes: per_class.iter().map(|c| c.tail_waste_bytes).sum(),
+            pages_allocated: self.pages_allocated,
+            page_budget: self.page_budget,
+            page_size: self.page_size,
+            per_class,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::PAGE_SIZE;
+
+    fn small() -> SlabAllocator {
+        // classes: 96,120,152,192,240,304,384,480,600,752,944,…,4096
+        SlabAllocator::new(
+            &ChunkSizePolicy::Geometric {
+                chunk_min: 96,
+                factor: 1.25,
+            },
+            4096,
+            1 << 20,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn class_selection_smallest_covering() {
+        let a = small();
+        assert_eq!(a.chunk_size_of(a.class_for_size(1).unwrap()), 96);
+        assert_eq!(a.chunk_size_of(a.class_for_size(96).unwrap()), 96);
+        assert_eq!(a.chunk_size_of(a.class_for_size(97).unwrap()), 120);
+        assert_eq!(a.chunk_size_of(a.class_for_size(500).unwrap()), 600);
+        assert_eq!(a.class_for_size(5000), None);
+    }
+
+    #[test]
+    fn alloc_tracks_holes_like_the_paper() {
+        let mut a = small();
+        // item of 518 bytes -> 600-byte chunk -> hole of 82
+        a.alloc(518).unwrap();
+        let s = a.stats();
+        assert_eq!(s.requested_bytes, 518);
+        assert_eq!(s.allocated_bytes, 600);
+        assert_eq!(s.hole_bytes, 82);
+        assert!((s.hole_fraction() - 82.0 / 600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let mut a = small();
+        match a.alloc(4097) {
+            Err(SlabError::TooLarge { size: 4097, max: 4096 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn page_budget_enforced_then_eviction_requested() {
+        // 1 page of 4096 total budget; 96-byte chunks -> 42 chunks
+        let mut a = SlabAllocator::new(
+            &ChunkSizePolicy::Geometric {
+                chunk_min: 96,
+                factor: 1.25,
+            },
+            4096,
+            4096,
+        )
+        .unwrap();
+        let per_page = 4096 / 96;
+        for _ in 0..per_page {
+            a.alloc(50).unwrap();
+        }
+        match a.alloc(50) {
+            Err(SlabError::NeedEviction { class: 0 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(a.pages_allocated(), 1);
+    }
+
+    #[test]
+    fn free_then_realloc_reuses_chunk() {
+        let mut a = small();
+        let h = a.alloc(100).unwrap();
+        a.free(h, 100);
+        let h2 = a.alloc(110).unwrap();
+        assert_eq!(h.class, h2.class);
+        assert_eq!(a.stats().used_chunks_total(), 1);
+    }
+
+    impl SlabStats {
+        fn used_chunks_total(&self) -> usize {
+            self.per_class.iter().map(|c| c.used_chunks).sum()
+        }
+    }
+
+    #[test]
+    fn data_roundtrip_via_handle() {
+        let mut a = small();
+        let h = a.alloc(11).unwrap();
+        a.chunk_mut(h)[..11].copy_from_slice(b"hello world");
+        assert_eq!(&a.chunk(h)[..11], b"hello world");
+    }
+
+    #[test]
+    fn explicit_policy_paper_table1() {
+        let a = SlabAllocator::new(
+            &ChunkSizePolicy::Explicit(vec![461, 510, 557, 614, 702, 943]),
+            PAGE_SIZE,
+            8 << 20,
+        )
+        .unwrap();
+        // paper's learned T1 config + the implicit page class
+        assert_eq!(
+            a.chunk_sizes(),
+            &[461, 510, 557, 614, 702, 943, PAGE_SIZE]
+        );
+        assert_eq!(a.chunk_size_of(a.class_for_size(518).unwrap()), 557);
+    }
+
+    #[test]
+    fn distinct_classes_get_distinct_pages() {
+        let mut a = small();
+        a.alloc(50).unwrap(); // class 96
+        a.alloc(500).unwrap(); // class 600
+        assert_eq!(a.pages_allocated(), 2);
+        let s = a.stats();
+        assert_eq!(s.per_class[0].pages, 1);
+        let c600 = s.per_class.iter().find(|c| c.chunk_size == 600).unwrap();
+        assert_eq!(c600.pages, 1);
+    }
+}

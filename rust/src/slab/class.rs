@@ -1,0 +1,219 @@
+//! A slab class: all pages carved to one chunk size, plus the free list
+//! and the hole accounting the paper's metric is computed from.
+
+use super::page::Page;
+
+/// Location of a chunk within its class: (page index, chunk index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkLoc {
+    pub page: u32,
+    pub chunk: u32,
+}
+
+/// One slab class.
+pub struct SlabClass {
+    chunk_size: usize,
+    pages: Vec<Page>,
+    free: Vec<ChunkLoc>,
+    used_chunks: usize,
+    /// Σ of the *requested* sizes of live items — `used_chunks *
+    /// chunk_size - requested_bytes` is this class's total memory hole.
+    requested_bytes: u64,
+}
+
+/// Point-in-time statistics for one class (the `stats slabs` rows).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassStats {
+    pub chunk_size: usize,
+    pub pages: usize,
+    pub total_chunks: usize,
+    pub used_chunks: usize,
+    pub free_chunks: usize,
+    /// Σ requested bytes of live items.
+    pub requested_bytes: u64,
+    /// Σ chunk bytes of live items (`used_chunks * chunk_size`).
+    pub allocated_bytes: u64,
+    /// allocated − requested: the paper's "memory wasted" for this class.
+    pub hole_bytes: u64,
+    /// Unusable page-tail bytes (page_size % chunk_size per page).
+    pub tail_waste_bytes: u64,
+}
+
+impl SlabClass {
+    pub fn new(chunk_size: usize) -> Self {
+        SlabClass {
+            chunk_size,
+            pages: Vec::new(),
+            free: Vec::new(),
+            used_chunks: 0,
+            requested_bytes: 0,
+        }
+    }
+
+    #[inline]
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    #[inline]
+    pub fn has_free_chunk(&self) -> bool {
+        !self.free.is_empty()
+    }
+
+    #[inline]
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    #[inline]
+    pub fn used_chunks(&self) -> usize {
+        self.used_chunks
+    }
+
+    /// Grow the class by one page; its chunks join the free list.
+    pub fn add_page(&mut self, page_size: usize) {
+        let page = Page::new(page_size, self.chunk_size);
+        let page_idx = self.pages.len() as u32;
+        // Reverse order so the lowest offsets are handed out first.
+        for chunk in (0..page.chunk_count() as u32).rev() {
+            self.free.push(ChunkLoc {
+                page: page_idx,
+                chunk,
+            });
+        }
+        self.pages.push(page);
+    }
+
+    /// Take a free chunk, accounting `requested` bytes of real payload.
+    /// Returns `None` when the class has no free chunk (caller decides
+    /// whether to add a page or evict).
+    pub fn alloc(&mut self, requested: usize) -> Option<ChunkLoc> {
+        debug_assert!(requested <= self.chunk_size);
+        let loc = self.free.pop()?;
+        self.used_chunks += 1;
+        self.requested_bytes += requested as u64;
+        Some(loc)
+    }
+
+    /// Return a chunk to the free list, un-accounting its payload.
+    pub fn free(&mut self, loc: ChunkLoc, requested: usize) {
+        debug_assert!(self.used_chunks > 0);
+        debug_assert!(self.requested_bytes >= requested as u64);
+        self.used_chunks -= 1;
+        self.requested_bytes -= requested as u64;
+        self.free.push(loc);
+    }
+
+    /// Adjust accounting when an item is resized in place (append/
+    /// prepend staying within the same chunk).
+    pub fn reaccount(&mut self, old_requested: usize, new_requested: usize) {
+        debug_assert!(new_requested <= self.chunk_size);
+        self.requested_bytes = self.requested_bytes - old_requested as u64 + new_requested as u64;
+    }
+
+    #[inline]
+    pub fn chunk(&self, loc: ChunkLoc) -> &[u8] {
+        self.pages[loc.page as usize].chunk(loc.chunk as usize)
+    }
+
+    #[inline]
+    pub fn chunk_mut(&mut self, loc: ChunkLoc) -> &mut [u8] {
+        self.pages[loc.page as usize].chunk_mut(loc.chunk as usize)
+    }
+
+    pub fn stats(&self) -> ClassStats {
+        let total_chunks = self.pages.iter().map(Page::chunk_count).sum::<usize>();
+        let allocated = self.used_chunks as u64 * self.chunk_size as u64;
+        ClassStats {
+            chunk_size: self.chunk_size,
+            pages: self.pages.len(),
+            total_chunks,
+            used_chunks: self.used_chunks,
+            free_chunks: self.free.len(),
+            requested_bytes: self.requested_bytes,
+            allocated_bytes: allocated,
+            hole_bytes: allocated - self.requested_bytes,
+            tail_waste_bytes: self.pages.iter().map(|p| p.tail_waste() as u64).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_growth_and_alloc() {
+        let mut c = SlabClass::new(100);
+        assert!(c.alloc(80).is_none());
+        c.add_page(1000); // 10 chunks
+        let a = c.alloc(80).unwrap();
+        let b = c.alloc(90).unwrap();
+        assert_ne!(a, b);
+        let s = c.stats();
+        assert_eq!(s.used_chunks, 2);
+        assert_eq!(s.free_chunks, 8);
+        assert_eq!(s.requested_bytes, 170);
+        assert_eq!(s.allocated_bytes, 200);
+        assert_eq!(s.hole_bytes, 30);
+    }
+
+    #[test]
+    fn free_returns_chunk_and_accounting() {
+        let mut c = SlabClass::new(64);
+        c.add_page(256);
+        let a = c.alloc(50).unwrap();
+        c.free(a, 50);
+        let s = c.stats();
+        assert_eq!(s.used_chunks, 0);
+        assert_eq!(s.requested_bytes, 0);
+        assert_eq!(s.hole_bytes, 0);
+        assert_eq!(s.free_chunks, 4);
+        // freed chunk is reusable
+        assert!(c.alloc(10).is_some());
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut c = SlabClass::new(128);
+        c.add_page(256); // 2 chunks
+        assert!(c.alloc(1).is_some());
+        assert!(c.alloc(1).is_some());
+        assert!(c.alloc(1).is_none());
+    }
+
+    #[test]
+    fn chunks_hand_out_low_offsets_first() {
+        let mut c = SlabClass::new(100);
+        c.add_page(1000);
+        let a = c.alloc(1).unwrap();
+        assert_eq!(a, ChunkLoc { page: 0, chunk: 0 });
+    }
+
+    #[test]
+    fn data_roundtrip() {
+        let mut c = SlabClass::new(32);
+        c.add_page(128);
+        let loc = c.alloc(5).unwrap();
+        c.chunk_mut(loc)[..5].copy_from_slice(b"hello");
+        assert_eq!(&c.chunk(loc)[..5], b"hello");
+    }
+
+    #[test]
+    fn reaccount_moves_hole() {
+        let mut c = SlabClass::new(100);
+        c.add_page(1000);
+        c.alloc(40).unwrap();
+        assert_eq!(c.stats().hole_bytes, 60);
+        c.reaccount(40, 70);
+        assert_eq!(c.stats().hole_bytes, 30);
+        assert_eq!(c.stats().requested_bytes, 70);
+    }
+
+    #[test]
+    fn tail_waste_reported() {
+        let mut c = SlabClass::new(300);
+        c.add_page(1000); // 3 chunks, 100 tail
+        assert_eq!(c.stats().tail_waste_bytes, 100);
+    }
+}

@@ -1,0 +1,119 @@
+//! Memcached's default slab-class geometry.
+//!
+//! Chunk sizes start at `chunk_min` (default 96 B) and grow by `factor`
+//! (default 1.25), each size rounded **up** to an 8-byte boundary, until
+//! the half-page chunk cap; a final class of one full page closes the
+//! chain. With the defaults this reproduces memcached's canonical chain
+//!   96, 120, 152, 192, 240, 304, 384, 480, 600, 752, 944, 1184, 1480,
+//!   1856, 2320, 2904, 3632, 4544, 5680, 7104, 8880, …
+//! — exactly the class sizes quoted in the paper's Tables 1–5.
+
+use super::{MAX_CLASSES, MIN_CHUNK, PAGE_SIZE};
+
+/// Round up to the next multiple of 8 (memcached's CHUNK_ALIGN_BYTES).
+#[inline]
+pub fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+/// The default geometric chunk-size chain.
+///
+/// * `chunk_min` — first chunk size (memcached: 96).
+/// * `factor` — growth factor (memcached: 1.25; the startup option the
+///   paper §3 discusses tuning as the pre-existing mitigation).
+/// * `page_size` — page/item-size cap; the final class is one full page.
+///
+/// Returns an ascending, deduplicated, 8-byte-aligned chain capped at
+/// [`MAX_CLASSES`] entries.
+pub fn default_slab_sizes(chunk_min: usize, factor: f64, page_size: usize) -> Vec<usize> {
+    assert!(factor > 1.0, "growth factor must be > 1 (got {factor})");
+    assert!(chunk_min >= MIN_CHUNK, "chunk_min {chunk_min} < {MIN_CHUNK}");
+    assert!(page_size >= chunk_min * 2, "page too small");
+
+    let chunk_cap = page_size / 2;
+    let mut sizes = Vec::new();
+    // memcached's slabs_init loop: align the size, emit it, then grow the
+    // *aligned* size by the factor (alignment feeds back into the chain).
+    let mut size = chunk_min;
+    while sizes.len() < MAX_CLASSES - 1 {
+        let aligned = align8(size);
+        if aligned > chunk_cap {
+            break;
+        }
+        if sizes.last() != Some(&aligned) {
+            sizes.push(aligned);
+        }
+        // Guarantee forward progress even when the factor is too small to
+        // clear the 8-byte alignment step (memcached relies on its fixed
+        // 63-iteration loop; we dedup, so we must grow explicitly).
+        size = ((aligned as f64 * factor) as usize).max(aligned + 1);
+    }
+    if sizes.last() != Some(&page_size) {
+        sizes.push(page_size);
+    }
+    sizes
+}
+
+/// Convenience: the memcached defaults (96 B, 1.25×, 1 MiB page).
+pub fn memcached_default_sizes() -> Vec<usize> {
+    default_slab_sizes(96, 1.25, PAGE_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_chain_matches_memcached_and_paper() {
+        let sizes = memcached_default_sizes();
+        // The prefix quoted in the paper's tables:
+        let expected_prefix = [
+            96, 120, 152, 192, 240, 304, 384, 480, 600, 752, 944, 1184, 1480, 1856,
+            2320, 2904, 3632, 4544, 5680, 7104, 8880,
+        ];
+        assert_eq!(&sizes[..expected_prefix.len()], &expected_prefix);
+        // Final class is the full page.
+        assert_eq!(*sizes.last().unwrap(), PAGE_SIZE);
+        assert!(sizes.len() <= MAX_CLASSES);
+    }
+
+    #[test]
+    fn ascending_unique_aligned() {
+        for factor in [1.05, 1.1, 1.25, 1.5, 2.0] {
+            let sizes = default_slab_sizes(96, factor, PAGE_SIZE);
+            for w in sizes.windows(2) {
+                assert!(w[0] < w[1], "not ascending at factor {factor}: {w:?}");
+            }
+            for &s in &sizes[..sizes.len() - 1] {
+                assert_eq!(s % 8, 0, "unaligned chunk {s} at factor {factor}");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_factor_gives_more_classes() {
+        let coarse = default_slab_sizes(96, 1.5, PAGE_SIZE).len();
+        let fine = default_slab_sizes(96, 1.08, PAGE_SIZE).len();
+        assert!(fine > coarse, "fine={fine} coarse={coarse}");
+    }
+
+    #[test]
+    fn class_count_capped() {
+        let sizes = default_slab_sizes(48, 1.01, PAGE_SIZE);
+        assert!(sizes.len() <= MAX_CLASSES);
+        assert_eq!(*sizes.last().unwrap(), PAGE_SIZE);
+    }
+
+    #[test]
+    fn small_pages_work() {
+        let sizes = default_slab_sizes(48, 1.25, 4096);
+        assert_eq!(*sizes.last().unwrap(), 4096);
+        assert!(sizes.iter().all(|&s| s <= 4096));
+    }
+
+    #[test]
+    #[should_panic(expected = "growth factor")]
+    fn rejects_non_growing_factor() {
+        default_slab_sizes(96, 1.0, PAGE_SIZE);
+    }
+}

@@ -1,0 +1,34 @@
+//! The slab allocator — memcached's memory substrate, rebuilt.
+//!
+//! Memory is claimed from a global pool one **page** (default 1 MiB) at
+//! a time; each page is assigned to a **slab class** and carved into
+//! equal-size **chunks**; every stored item occupies exactly one chunk
+//! of the smallest class whose chunk size covers it. The gap between an
+//! item's true size and its chunk size is a **memory hole** — the
+//! internal fragmentation this whole project exists to minimize.
+//!
+//! * [`geometry`] — memcached's default geometric chunk-size chain
+//!   (96 B growing by 1.25×, 8-byte aligned): the paper's baseline.
+//! * [`policy`] — how chunk sizes are chosen (geometric default,
+//!   explicit `-o slab_sizes`-style lists, learned configurations).
+//! * [`page`] / [`class`] — pages, chunk carving, per-class free lists.
+//! * [`allocator`] — the allocator facade + hole accounting.
+
+pub mod allocator;
+pub mod class;
+pub mod geometry;
+pub mod page;
+pub mod policy;
+
+pub use allocator::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
+pub use geometry::default_slab_sizes;
+pub use policy::ChunkSizePolicy;
+
+/// Default page size: 1 MiB, memcached's `settings.item_size_max`.
+pub const PAGE_SIZE: usize = 1 << 20;
+
+/// Smallest legal chunk: memcached's 48-byte base chunk + item header.
+pub const MIN_CHUNK: usize = 48;
+
+/// Memcached caps its class table at 63 usable classes.
+pub const MAX_CLASSES: usize = 63;

@@ -1,0 +1,99 @@
+//! Pages: fixed-size memory arenas carved into equal chunks.
+//!
+//! Memory is allocated one page at a time (memcached: 1 MiB). A page is
+//! permanently assigned to one slab class and carved into
+//! `page_size / chunk_size` chunks; the remainder at the page tail is
+//! *page tail waste* (distinct from the per-item holes the paper
+//! targets, and tracked separately in stats).
+
+/// One page of cache memory, owned by a single slab class.
+pub struct Page {
+    data: Box<[u8]>,
+    chunk_size: usize,
+}
+
+impl Page {
+    /// Allocate a zeroed page carved into `chunk_size` chunks.
+    pub fn new(page_size: usize, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0 && chunk_size <= page_size);
+        Page {
+            data: vec![0u8; page_size].into_boxed_slice(),
+            chunk_size,
+        }
+    }
+
+    /// Number of chunks this page holds.
+    #[inline]
+    pub fn chunk_count(&self) -> usize {
+        self.data.len() / self.chunk_size
+    }
+
+    /// Bytes at the page tail not covered by any chunk.
+    #[inline]
+    pub fn tail_waste(&self) -> usize {
+        self.data.len() % self.chunk_size
+    }
+
+    #[inline]
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Read-only view of chunk `idx`.
+    #[inline]
+    pub fn chunk(&self, idx: usize) -> &[u8] {
+        let start = idx * self.chunk_size;
+        &self.data[start..start + self.chunk_size]
+    }
+
+    /// Mutable view of chunk `idx`.
+    #[inline]
+    pub fn chunk_mut(&mut self, idx: usize) -> &mut [u8] {
+        let start = idx * self.chunk_size;
+        &mut self.data[start..start + self.chunk_size]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carving() {
+        let p = Page::new(1024, 100);
+        assert_eq!(p.chunk_count(), 10);
+        assert_eq!(p.tail_waste(), 24);
+        assert_eq!(p.chunk_size(), 100);
+    }
+
+    #[test]
+    fn exact_fit_no_tail() {
+        let p = Page::new(1024, 256);
+        assert_eq!(p.chunk_count(), 4);
+        assert_eq!(p.tail_waste(), 0);
+    }
+
+    #[test]
+    fn chunk_views_are_disjoint() {
+        let mut p = Page::new(256, 64);
+        p.chunk_mut(0).fill(0xAA);
+        p.chunk_mut(1).fill(0xBB);
+        assert!(p.chunk(0).iter().all(|&b| b == 0xAA));
+        assert!(p.chunk(1).iter().all(|&b| b == 0xBB));
+        assert!(p.chunk(2).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn single_chunk_page() {
+        let p = Page::new(1 << 20, 1 << 20);
+        assert_eq!(p.chunk_count(), 1);
+        assert_eq!(p.tail_waste(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_chunk_panics() {
+        let p = Page::new(256, 64);
+        let _ = p.chunk(4);
+    }
+}

@@ -1,0 +1,174 @@
+//! Chunk-size policies: how a slab-class configuration is chosen.
+//!
+//! The paper compares memcached's **geometric default** against an
+//! **explicit learned list** (applied via the `-o slab_sizes` startup
+//! option); both are first-class here, and a running store can be
+//! re-configured from one to the other (`store::sharded::reconfigure`).
+
+use super::geometry::default_slab_sizes;
+use super::{MAX_CLASSES, MIN_CHUNK};
+use std::fmt;
+
+/// How slab chunk sizes are derived.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChunkSizePolicy {
+    /// Memcached's default: `chunk_min` growing by `factor` per class.
+    Geometric { chunk_min: usize, factor: f64 },
+    /// An explicit ascending list (the `-o slab_sizes` analog; what the
+    /// optimizer emits). The final page-size class is appended
+    /// automatically if missing, so every item ≤ page always fits.
+    Explicit(Vec<usize>),
+}
+
+impl Default for ChunkSizePolicy {
+    fn default() -> Self {
+        ChunkSizePolicy::Geometric {
+            chunk_min: 96,
+            factor: 1.25,
+        }
+    }
+}
+
+/// Why a policy failed validation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyError {
+    Empty,
+    TooManyClasses(usize),
+    ChunkTooSmall(usize),
+    ChunkTooLarge(usize),
+    NotAscending(usize, usize),
+    BadFactor(f64),
+}
+
+impl fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicyError::Empty => write!(f, "no chunk sizes"),
+            PolicyError::TooManyClasses(n) => {
+                write!(f, "{n} classes > max {MAX_CLASSES}")
+            }
+            PolicyError::ChunkTooSmall(s) => write!(f, "chunk {s} < min {MIN_CHUNK}"),
+            PolicyError::ChunkTooLarge(s) => write!(f, "chunk {s} > page size"),
+            PolicyError::NotAscending(a, b) => {
+                write!(f, "chunk sizes not strictly ascending: {a} !< {b}")
+            }
+            PolicyError::BadFactor(x) => write!(f, "growth factor {x} must be > 1"),
+        }
+    }
+}
+
+impl std::error::Error for PolicyError {}
+
+impl ChunkSizePolicy {
+    /// Materialize the policy into a validated ascending chunk-size
+    /// list for the given page size.
+    pub fn materialize(&self, page_size: usize) -> Result<Vec<usize>, PolicyError> {
+        let sizes = match self {
+            ChunkSizePolicy::Geometric { chunk_min, factor } => {
+                if *factor <= 1.0 {
+                    return Err(PolicyError::BadFactor(*factor));
+                }
+                if *chunk_min < MIN_CHUNK {
+                    return Err(PolicyError::ChunkTooSmall(*chunk_min));
+                }
+                default_slab_sizes(*chunk_min, *factor, page_size)
+            }
+            ChunkSizePolicy::Explicit(list) => {
+                let mut sizes = list.clone();
+                if sizes.last().is_some_and(|&last| last < page_size) {
+                    sizes.push(page_size);
+                }
+                sizes
+            }
+        };
+        validate_sizes(&sizes, page_size)?;
+        Ok(sizes)
+    }
+}
+
+/// Validate an ascending chunk-size list against the page size.
+pub fn validate_sizes(sizes: &[usize], page_size: usize) -> Result<(), PolicyError> {
+    if sizes.is_empty() {
+        return Err(PolicyError::Empty);
+    }
+    if sizes.len() > MAX_CLASSES {
+        return Err(PolicyError::TooManyClasses(sizes.len()));
+    }
+    for w in sizes.windows(2) {
+        if w[0] >= w[1] {
+            return Err(PolicyError::NotAscending(w[0], w[1]));
+        }
+    }
+    if sizes[0] < MIN_CHUNK {
+        return Err(PolicyError::ChunkTooSmall(sizes[0]));
+    }
+    if *sizes.last().unwrap() > page_size {
+        return Err(PolicyError::ChunkTooLarge(*sizes.last().unwrap()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::PAGE_SIZE;
+
+    #[test]
+    fn default_policy_is_memcached() {
+        let sizes = ChunkSizePolicy::default().materialize(PAGE_SIZE).unwrap();
+        assert_eq!(&sizes[..4], &[96, 120, 152, 192]);
+        assert_eq!(*sizes.last().unwrap(), PAGE_SIZE);
+    }
+
+    #[test]
+    fn explicit_appends_page_class() {
+        let p = ChunkSizePolicy::Explicit(vec![304, 384, 480, 600, 752, 944]);
+        let sizes = p.materialize(PAGE_SIZE).unwrap();
+        assert_eq!(sizes, vec![304, 384, 480, 600, 752, 944, PAGE_SIZE]);
+    }
+
+    #[test]
+    fn explicit_with_page_class_not_duplicated() {
+        let p = ChunkSizePolicy::Explicit(vec![304, PAGE_SIZE]);
+        assert_eq!(p.materialize(PAGE_SIZE).unwrap(), vec![304, PAGE_SIZE]);
+    }
+
+    #[test]
+    fn rejects_descending() {
+        let p = ChunkSizePolicy::Explicit(vec![500, 400]);
+        assert!(matches!(
+            p.materialize(PAGE_SIZE),
+            Err(PolicyError::NotAscending(500, 400))
+        ));
+    }
+
+    #[test]
+    fn rejects_tiny_and_huge() {
+        assert!(matches!(
+            ChunkSizePolicy::Explicit(vec![8]).materialize(PAGE_SIZE),
+            Err(PolicyError::ChunkTooSmall(8))
+        ));
+        assert!(matches!(
+            ChunkSizePolicy::Explicit(vec![PAGE_SIZE + 1]).materialize(PAGE_SIZE),
+            Err(PolicyError::ChunkTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_too_many_classes() {
+        let huge: Vec<usize> = (0..80).map(|i| 96 + 8 * i).collect();
+        assert!(matches!(
+            ChunkSizePolicy::Explicit(huge).materialize(PAGE_SIZE),
+            Err(PolicyError::TooManyClasses(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_factor() {
+        let p = ChunkSizePolicy::Geometric {
+            chunk_min: 96,
+            factor: 0.9,
+        };
+        assert!(matches!(p.materialize(PAGE_SIZE), Err(PolicyError::BadFactor(_))));
+    }
+}

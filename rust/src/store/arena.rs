@@ -1,0 +1,210 @@
+//! Item-metadata arena: fixed-size records addressed by `u32` ids, with
+//! intrusive links for both the hash chains and the LRU lists (the same
+//! layout trick as memcached's `_stritem`, minus the pointers).
+
+use crate::slab::ChunkHandle;
+
+/// Sentinel id for "no item".
+pub const NIL: u32 = u32::MAX;
+
+/// LRU tier (memcached 1.5 segmented LRU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Hot = 0,
+    Warm = 1,
+    Cold = 2,
+}
+
+impl Tier {
+    pub fn from_u8(v: u8) -> Tier {
+        match v {
+            0 => Tier::Hot,
+            1 => Tier::Warm,
+            _ => Tier::Cold,
+        }
+    }
+}
+
+/// Per-item metadata record (the chunk holds `[key][value]` bytes).
+#[derive(Clone, Debug)]
+pub struct ItemMeta {
+    pub hash: u64,
+    pub handle: ChunkHandle,
+    pub klen: u16,
+    pub vlen: u32,
+    pub flags: u32,
+    /// Absolute unix expiry, 0 = never.
+    pub exptime: u32,
+    /// Set/update time (drives `flush_all` and age stats).
+    pub time: u32,
+    pub cas: u64,
+    /// Accounted total size (header + key + value + tail).
+    pub total: u32,
+    /// Hash-chain next.
+    pub hnext: u32,
+    /// LRU links.
+    pub prev: u32,
+    pub next: u32,
+    pub tier: u8,
+    /// True while the record is live (guards against stale ids).
+    pub live: bool,
+}
+
+impl ItemMeta {
+    fn vacant() -> Self {
+        ItemMeta {
+            hash: 0,
+            handle: ChunkHandle {
+                class: 0,
+                loc: crate::slab::class::ChunkLoc { page: 0, chunk: 0 },
+            },
+            klen: 0,
+            vlen: 0,
+            flags: 0,
+            exptime: 0,
+            time: 0,
+            cas: 0,
+            total: 0,
+            hnext: NIL,
+            prev: NIL,
+            next: NIL,
+            tier: Tier::Hot as u8,
+            live: false,
+        }
+    }
+}
+
+/// Slab-style arena of [`ItemMeta`] with id recycling.
+pub struct Arena {
+    items: Vec<ItemMeta>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena {
+            items: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    /// Number of live records.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Insert a record, returning its id.
+    pub fn insert(&mut self, mut meta: ItemMeta) -> u32 {
+        meta.live = true;
+        match self.free.pop() {
+            Some(id) => {
+                self.items[id as usize] = meta;
+                self.live += 1;
+                id
+            }
+            None => {
+                let id = self.items.len() as u32;
+                assert!(id != NIL, "arena exhausted");
+                self.items.push(meta);
+                self.live += 1;
+                id
+            }
+        }
+    }
+
+    /// Remove a record, recycling its id.
+    pub fn remove(&mut self, id: u32) -> ItemMeta {
+        let slot = &mut self.items[id as usize];
+        assert!(slot.live, "remove of dead id {id}");
+        let meta = std::mem::replace(slot, ItemMeta::vacant());
+        self.free.push(id);
+        self.live -= 1;
+        meta
+    }
+
+    #[inline]
+    pub fn get(&self, id: u32) -> &ItemMeta {
+        let m = &self.items[id as usize];
+        debug_assert!(m.live, "access of dead id {id}");
+        m
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: u32) -> &mut ItemMeta {
+        let m = &mut self.items[id as usize];
+        debug_assert!(m.live, "access of dead id {id}");
+        m
+    }
+
+    /// Iterate live ids (arbitrary order).
+    pub fn iter_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.items
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.live)
+            .map(|(i, _)| i as u32)
+    }
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ItemMeta {
+        let mut m = ItemMeta::vacant();
+        m.klen = 3;
+        m
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let mut a = Arena::new();
+        let id = a.insert(meta());
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.get(id).klen, 3);
+        let m = a.remove(id);
+        assert_eq!(m.klen, 3);
+        assert_eq!(a.len(), 0);
+    }
+
+    #[test]
+    fn ids_recycled() {
+        let mut a = Arena::new();
+        let id1 = a.insert(meta());
+        a.remove(id1);
+        let id2 = a.insert(meta());
+        assert_eq!(id1, id2);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead id")]
+    fn double_remove_panics() {
+        let mut a = Arena::new();
+        let id = a.insert(meta());
+        a.remove(id);
+        a.remove(id);
+    }
+
+    #[test]
+    fn iter_ids_only_live() {
+        let mut a = Arena::new();
+        let i1 = a.insert(meta());
+        let i2 = a.insert(meta());
+        let i3 = a.insert(meta());
+        a.remove(i2);
+        let ids: Vec<u32> = a.iter_ids().collect();
+        assert_eq!(ids, vec![i1, i3]);
+    }
+}

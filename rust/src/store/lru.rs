@@ -1,0 +1,358 @@
+//! Segmented LRU — memcached 1.5's HOT/WARM/COLD scheme, per slab class.
+//!
+//! New items enter HOT; HOT and WARM are capped to a fraction of the
+//! class's items and overflow into COLD; a COLD item that gets accessed
+//! is promoted to WARM. Eviction for a class walks COLD tail → WARM
+//! tail → HOT tail. Lists are intrusive (`ItemMeta::{prev,next,tier}`),
+//! ids never move in memory.
+
+use super::arena::{Arena, Tier, NIL};
+
+/// Fraction caps, mirroring memcached's `hot_lru_pct`/`warm_lru_pct`
+/// defaults (percent of the class's item count).
+pub const HOT_PCT: usize = 20;
+pub const WARM_PCT: usize = 40;
+
+/// One intrusive doubly-linked list.
+#[derive(Clone, Debug)]
+pub struct LruList {
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl LruList {
+    pub fn new() -> Self {
+        LruList {
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn head(&self) -> Option<u32> {
+        (self.head != NIL).then_some(self.head)
+    }
+
+    pub fn tail(&self) -> Option<u32> {
+        (self.tail != NIL).then_some(self.tail)
+    }
+
+    /// Push an (unlinked) id at the head.
+    pub fn push_head(&mut self, id: u32, arena: &mut Arena) {
+        let m = arena.get_mut(id);
+        debug_assert!(m.prev == NIL && m.next == NIL);
+        m.next = self.head;
+        m.prev = NIL;
+        if self.head != NIL {
+            arena.get_mut(self.head).prev = id;
+        }
+        self.head = id;
+        if self.tail == NIL {
+            self.tail = id;
+        }
+        self.len += 1;
+    }
+
+    /// Unlink an id from this list.
+    pub fn unlink(&mut self, id: u32, arena: &mut Arena) {
+        let (prev, next) = {
+            let m = arena.get(id);
+            (m.prev, m.next)
+        };
+        if prev != NIL {
+            arena.get_mut(prev).next = next;
+        } else {
+            debug_assert_eq!(self.head, id);
+            self.head = next;
+        }
+        if next != NIL {
+            arena.get_mut(next).prev = prev;
+        } else {
+            debug_assert_eq!(self.tail, id);
+            self.tail = prev;
+        }
+        let m = arena.get_mut(id);
+        m.prev = NIL;
+        m.next = NIL;
+        self.len -= 1;
+    }
+
+    /// Pop the tail (the eviction candidate).
+    pub fn pop_tail(&mut self, arena: &mut Arena) -> Option<u32> {
+        let id = self.tail;
+        if id == NIL {
+            return None;
+        }
+        self.unlink(id, arena);
+        Some(id)
+    }
+
+    /// Iterate head→tail (most→least recent).
+    pub fn iter<'a>(&self, arena: &'a Arena) -> LruIter<'a> {
+        LruIter {
+            arena,
+            cur: self.head,
+        }
+    }
+}
+
+impl Default for LruList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct LruIter<'a> {
+    arena: &'a Arena,
+    cur: u32,
+}
+
+impl Iterator for LruIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        if self.cur == NIL {
+            return None;
+        }
+        let id = self.cur;
+        self.cur = self.arena.get(id).next;
+        Some(id)
+    }
+}
+
+/// The three tiers of one slab class.
+#[derive(Clone, Debug, Default)]
+pub struct ClassLru {
+    pub hot: LruList,
+    pub warm: LruList,
+    pub cold: LruList,
+}
+
+impl ClassLru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> usize {
+        self.hot.len() + self.warm.len() + self.cold.len()
+    }
+
+    fn list(&mut self, tier: Tier) -> &mut LruList {
+        match tier {
+            Tier::Hot => &mut self.hot,
+            Tier::Warm => &mut self.warm,
+            Tier::Cold => &mut self.cold,
+        }
+    }
+
+    /// Insert a new item: HOT head, then rebalance caps.
+    pub fn insert(&mut self, id: u32, arena: &mut Arena) {
+        arena.get_mut(id).tier = Tier::Hot as u8;
+        self.hot.push_head(id, arena);
+        self.rebalance(arena);
+    }
+
+    /// Remove an item from whichever tier holds it.
+    pub fn remove(&mut self, id: u32, arena: &mut Arena) {
+        let tier = Tier::from_u8(arena.get(id).tier);
+        self.list(tier).unlink(id, arena);
+    }
+
+    /// Touch on access: HOT/WARM bump to their head; COLD promotes to
+    /// WARM (memcached's ITEM_ACTIVE promotion).
+    pub fn touch(&mut self, id: u32, arena: &mut Arena) {
+        let tier = Tier::from_u8(arena.get(id).tier);
+        match tier {
+            Tier::Hot => {
+                self.hot.unlink(id, arena);
+                self.hot.push_head(id, arena);
+            }
+            Tier::Warm => {
+                self.warm.unlink(id, arena);
+                self.warm.push_head(id, arena);
+            }
+            Tier::Cold => {
+                self.cold.unlink(id, arena);
+                arena.get_mut(id).tier = Tier::Warm as u8;
+                self.warm.push_head(id, arena);
+                self.rebalance(arena);
+            }
+        }
+    }
+
+    /// Enforce HOT/WARM caps by demoting tails into COLD.
+    fn rebalance(&mut self, arena: &mut Arena) {
+        let total = self.total();
+        let hot_cap = (total * HOT_PCT / 100).max(1);
+        let warm_cap = (total * WARM_PCT / 100).max(1);
+        while self.hot.len() > hot_cap {
+            let id = self.hot.pop_tail(arena).unwrap();
+            arena.get_mut(id).tier = Tier::Cold as u8;
+            self.cold.push_head(id, arena);
+        }
+        while self.warm.len() > warm_cap {
+            let id = self.warm.pop_tail(arena).unwrap();
+            arena.get_mut(id).tier = Tier::Cold as u8;
+            self.cold.push_head(id, arena);
+        }
+    }
+
+    /// The next eviction victim: COLD tail, else WARM tail, else HOT
+    /// tail. Does not unlink.
+    pub fn eviction_candidate(&self) -> Option<u32> {
+        self.cold
+            .tail()
+            .or_else(|| self.warm.tail())
+            .or_else(|| self.hot.tail())
+    }
+
+    /// Iterate all ids most→least recent within each tier
+    /// (hot, then warm, then cold) — migration snapshot order.
+    pub fn iter_all<'a>(&'a self, arena: &'a Arena) -> impl Iterator<Item = u32> + 'a {
+        self.hot
+            .iter(arena)
+            .chain(self.warm.iter(arena))
+            .chain(self.cold.iter(arena))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::class::ChunkLoc;
+    use crate::slab::ChunkHandle;
+    use crate::store::arena::ItemMeta;
+
+    fn item() -> ItemMeta {
+        ItemMeta {
+            hash: 0,
+            handle: ChunkHandle {
+                class: 0,
+                loc: ChunkLoc { page: 0, chunk: 0 },
+            },
+            klen: 0,
+            vlen: 0,
+            flags: 0,
+            exptime: 0,
+            time: 0,
+            cas: 0,
+            total: 0,
+            hnext: NIL,
+            prev: NIL,
+            next: NIL,
+            tier: 0,
+            live: true,
+        }
+    }
+
+    #[test]
+    fn list_order_mru_first() {
+        let mut a = Arena::new();
+        let mut l = LruList::new();
+        let i1 = a.insert(item());
+        let i2 = a.insert(item());
+        let i3 = a.insert(item());
+        l.push_head(i1, &mut a);
+        l.push_head(i2, &mut a);
+        l.push_head(i3, &mut a);
+        assert_eq!(l.iter(&a).collect::<Vec<_>>(), vec![i3, i2, i1]);
+        assert_eq!(l.tail(), Some(i1));
+        assert_eq!(l.pop_tail(&mut a), Some(i1));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn unlink_middle() {
+        let mut a = Arena::new();
+        let mut l = LruList::new();
+        let ids: Vec<u32> = (0..5).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            l.push_head(id, &mut a);
+        }
+        l.unlink(ids[2], &mut a);
+        let got: Vec<u32> = l.iter(&a).collect();
+        assert_eq!(got, vec![ids[4], ids[3], ids[1], ids[0]]);
+    }
+
+    #[test]
+    fn new_items_enter_hot_then_overflow_cold() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        let ids: Vec<u32> = (0..10).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            c.insert(id, &mut a);
+        }
+        // caps: hot <= max(10*20%,1)=2, warm <= 4
+        assert!(c.hot.len() <= 2, "hot={}", c.hot.len());
+        assert_eq!(c.total(), 10);
+        assert!(c.cold.len() >= 4);
+    }
+
+    #[test]
+    fn cold_access_promotes_to_warm() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        let ids: Vec<u32> = (0..10).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            c.insert(id, &mut a);
+        }
+        let victim = c.cold.tail().unwrap();
+        c.touch(victim, &mut a);
+        assert_eq!(Tier::from_u8(a.get(victim).tier), Tier::Warm);
+    }
+
+    #[test]
+    fn eviction_prefers_cold_tail() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        let ids: Vec<u32> = (0..10).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            c.insert(id, &mut a);
+        }
+        let v = c.eviction_candidate().unwrap();
+        assert_eq!(Tier::from_u8(a.get(v).tier), Tier::Cold);
+        // empty cold+warm: falls back to hot
+        let mut solo = ClassLru::new();
+        let one = a.insert(item());
+        solo.insert(one, &mut a);
+        assert_eq!(solo.eviction_candidate(), Some(one));
+    }
+
+    #[test]
+    fn remove_from_any_tier() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        let ids: Vec<u32> = (0..10).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            c.insert(id, &mut a);
+        }
+        let total_before = c.total();
+        let cold_item = c.cold.tail().unwrap();
+        c.remove(cold_item, &mut a);
+        assert_eq!(c.total(), total_before - 1);
+    }
+
+    #[test]
+    fn iter_all_covers_everything() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        let ids: Vec<u32> = (0..25).map(|_| a.insert(item())).collect();
+        for &id in &ids {
+            c.insert(id, &mut a);
+        }
+        let mut seen: Vec<u32> = c.iter_all(&a).collect();
+        seen.sort_unstable();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+}

@@ -1,0 +1,17 @@
+//! The key-value engine on top of the slab allocator: memcached's item
+//! accounting, chained hash table with incremental expansion, segmented
+//! LRU (HOT/WARM/COLD) with per-class eviction, lazy expiry, CAS — plus
+//! the paper-specific hooks: per-set size collection and **live slab
+//! reconfiguration** (migrating every item into a new chunk geometry).
+
+pub mod arena;
+pub mod hashtable;
+pub mod item;
+pub mod lru;
+pub mod sharded;
+#[allow(clippy::module_inception)]
+pub mod store;
+
+pub use item::{total_item_size, ITEM_HEADER, TAIL_CRLF};
+pub use sharded::ShardedStore;
+pub use store::{KvStore, MigrationReport, StoreError, StoreStats, Value};

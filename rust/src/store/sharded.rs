@@ -1,0 +1,288 @@
+//! Shard router: N independent [`KvStore`]s behind per-shard mutexes
+//! (memcached's item-lock striping, coarsened to whole shards). Keys
+//! route by the top bits of their hash, disjoint from the bucket-index
+//! bits the per-shard hash tables use.
+
+use super::item::hash_key;
+use super::store::{CasResult, Clock, KvStore, MigrationReport, SizeObserver, StoreError, StoreStats, Value};
+use crate::config::Settings;
+use crate::slab::policy::ChunkSizePolicy;
+use crate::slab::{SlabError, SlabStats};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Thread-safe sharded cache — the object the TCP server serves.
+pub struct ShardedStore {
+    shards: Vec<Mutex<KvStore>>,
+}
+
+impl ShardedStore {
+    /// Build from [`Settings`] (shard count, memory split, policy).
+    pub fn new(settings: &Settings) -> Result<Self, SlabError> {
+        Self::with(
+            settings.policy.clone(),
+            settings.page_size,
+            settings.mem_limit,
+            settings.use_cas,
+            settings.shards,
+            Clock::System,
+        )
+    }
+
+    /// Fully explicit constructor (tests, benches).
+    pub fn with(
+        policy: ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+        use_cas: bool,
+        shards: usize,
+        clock: Clock,
+    ) -> Result<Self, SlabError> {
+        assert!(shards > 0);
+        let per_shard = (mem_limit / shards).max(page_size);
+        let stores: Result<Vec<_>, SlabError> = (0..shards)
+            .map(|_| {
+                KvStore::new(policy.clone(), page_size, per_shard, use_cas, clock.clone())
+                    .map(Mutex::new)
+            })
+            .collect();
+        Ok(ShardedStore { shards: stores? })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_for(&self, key: &[u8]) -> MutexGuard<'_, KvStore> {
+        // top byte of the hash — independent of the table's low bits
+        let idx = (hash_key(key) >> 56) as usize % self.shards.len();
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// Attach a size observer to every shard.
+    pub fn set_observer(&self, obs: Arc<dyn SizeObserver>) {
+        for s in &self.shards {
+            s.lock().unwrap().set_observer(obs.clone());
+        }
+    }
+
+    // ------------------------------------------------------------- ops
+
+    pub fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<(), StoreError> {
+        self.shard_for(key).set(key, value, flags, exptime)
+    }
+
+    pub fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<bool, StoreError> {
+        self.shard_for(key).add(key, value, flags, exptime)
+    }
+
+    pub fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<bool, StoreError> {
+        self.shard_for(key).replace(key, value, flags, exptime)
+    }
+
+    pub fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> Result<CasResult, StoreError> {
+        self.shard_for(key).cas(key, value, flags, exptime, cas)
+    }
+
+    pub fn concat(&self, key: &[u8], data: &[u8], append: bool) -> Result<bool, StoreError> {
+        self.shard_for(key).concat(key, data, append)
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<Value> {
+        self.shard_for(key).get(key)
+    }
+
+    pub fn delete(&self, key: &[u8]) -> bool {
+        self.shard_for(key).delete(key)
+    }
+
+    pub fn incr_decr(&self, key: &[u8], delta: u64, incr: bool) -> Result<Option<u64>, StoreError> {
+        self.shard_for(key).incr_decr(key, delta, incr)
+    }
+
+    pub fn touch(&self, key: &[u8], exptime: u32) -> bool {
+        self.shard_for(key).touch(key, exptime)
+    }
+
+    pub fn flush_all(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().flush_all();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ------------------------------------------------------------ stats
+
+    /// Aggregated slab statistics across shards (whole-cache holes).
+    pub fn slab_stats(&self) -> SlabStats {
+        let mut shard_stats: Vec<SlabStats> =
+            self.shards.iter().map(|s| s.lock().unwrap().slab_stats()).collect();
+        let mut agg = shard_stats.pop().expect("at least one shard");
+        for st in shard_stats {
+            agg.requested_bytes += st.requested_bytes;
+            agg.allocated_bytes += st.allocated_bytes;
+            agg.hole_bytes += st.hole_bytes;
+            agg.tail_waste_bytes += st.tail_waste_bytes;
+            agg.pages_allocated += st.pages_allocated;
+            agg.page_budget += st.page_budget;
+            for (a, b) in agg.per_class.iter_mut().zip(st.per_class.iter()) {
+                debug_assert_eq!(a.chunk_size, b.chunk_size, "shards share a policy");
+                a.pages += b.pages;
+                a.total_chunks += b.total_chunks;
+                a.used_chunks += b.used_chunks;
+                a.free_chunks += b.free_chunks;
+                a.requested_bytes += b.requested_bytes;
+                a.allocated_bytes += b.allocated_bytes;
+                a.hole_bytes += b.hole_bytes;
+                a.tail_waste_bytes += b.tail_waste_bytes;
+            }
+        }
+        agg
+    }
+
+    /// Aggregated operation counters.
+    pub fn stats(&self) -> StoreStats {
+        let mut agg = StoreStats::default();
+        for s in &self.shards {
+            let st = s.lock().unwrap();
+            let x = st.stats();
+            agg.cmd_get += x.cmd_get;
+            agg.cmd_set += x.cmd_set;
+            agg.get_hits += x.get_hits;
+            agg.get_misses += x.get_misses;
+            agg.delete_hits += x.delete_hits;
+            agg.delete_misses += x.delete_misses;
+            agg.incr_hits += x.incr_hits;
+            agg.incr_misses += x.incr_misses;
+            agg.decr_hits += x.decr_hits;
+            agg.decr_misses += x.decr_misses;
+            agg.cas_hits += x.cas_hits;
+            agg.cas_misses += x.cas_misses;
+            agg.cas_badval += x.cas_badval;
+            agg.touch_hits += x.touch_hits;
+            agg.touch_misses += x.touch_misses;
+            agg.evictions += x.evictions;
+            agg.expired_reclaims += x.expired_reclaims;
+            agg.flush_cmds += x.flush_cmds;
+            agg.reconfigures += x.reconfigures;
+        }
+        agg
+    }
+
+    /// Current chunk-size table (identical across shards).
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        self.shards[0].lock().unwrap().chunk_sizes().to_vec()
+    }
+
+    /// Reconfigure every shard to a new chunk geometry, shard by shard
+    /// (bounds the transient extra memory to one shard's worth).
+    pub fn reconfigure(&self, policy: ChunkSizePolicy) -> Result<Vec<MigrationReport>, StoreError> {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().reconfigure(policy.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::item::total_item_size;
+
+    fn store(shards: usize) -> ShardedStore {
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            shards,
+            Clock::System,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_consistently() {
+        let s = store(4);
+        for i in 0..500u32 {
+            let k = format!("key-{i}");
+            s.set(k.as_bytes(), k.as_bytes(), 0, 0).unwrap();
+        }
+        assert_eq!(s.len(), 500);
+        for i in 0..500u32 {
+            let k = format!("key-{i}");
+            assert_eq!(s.get(k.as_bytes()).unwrap().value, k.as_bytes());
+        }
+    }
+
+    #[test]
+    fn shards_spread_keys() {
+        let s = store(4);
+        for i in 0..2000u32 {
+            s.set(format!("k{i}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        let per: Vec<usize> = s.shards.iter().map(|x| x.lock().unwrap().len()).collect();
+        assert!(per.iter().all(|&n| n > 300), "uneven shards: {per:?}");
+    }
+
+    #[test]
+    fn aggregated_hole_accounting() {
+        let s = store(4);
+        let vlen = 455usize; // total 518 with 5-byte key
+        for i in 0..1000u32 {
+            s.set(format!("k{i:03}").as_bytes(), &vec![b'x'; vlen - 1], 0, 0)
+                .unwrap();
+        }
+        let expected_total = total_item_size(4, vlen - 1, true) as u64 * 1000;
+        let st = s.slab_stats();
+        assert_eq!(st.requested_bytes, expected_total);
+        assert!(st.hole_bytes > 0);
+        assert_eq!(
+            st.allocated_bytes - st.requested_bytes,
+            st.hole_bytes
+        );
+    }
+
+    #[test]
+    fn reconfigure_all_shards() {
+        let s = store(2);
+        for i in 0..400u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        let reports = s
+            .reconfigure(ChunkSizePolicy::Explicit(vec![518]))
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports.iter().map(|r| r.items_moved).sum::<usize>(), 400);
+        assert_eq!(s.slab_stats().hole_bytes, 0);
+        assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let s = store(3);
+        s.set(b"a", b"1", 0, 0).unwrap();
+        s.get(b"a");
+        s.get(b"missing");
+        let st = s.stats();
+        assert_eq!(st.cmd_set, 1);
+        assert_eq!(st.get_hits, 1);
+        assert_eq!(st.get_misses, 1);
+    }
+
+    #[test]
+    fn single_shard_works() {
+        let s = store(1);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        assert_eq!(s.get(b"k").unwrap().value, b"v");
+    }
+}

@@ -1,0 +1,985 @@
+//! The single-shard KV engine: memcached command semantics over the
+//! slab allocator, plus the paper's hooks (size observation on every
+//! set, live slab reconfiguration).
+
+use super::arena::{Arena, ItemMeta, NIL};
+use super::hashtable::HashTable;
+use super::item::{hash_key, key_is_valid, total_item_size};
+use super::lru::ClassLru;
+use crate::slab::policy::ChunkSizePolicy;
+use crate::slab::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Relative-vs-absolute expiry cutoff (memcached: 30 days).
+const REALTIME_MAXDELTA: u32 = 60 * 60 * 24 * 30;
+
+/// Eviction attempts per allocation before giving up (memcached tries a
+/// handful of tail items; we allow a generous walk).
+const MAX_EVICT_ATTEMPTS: usize = 64;
+
+/// Observes accounted item sizes on every successful store — the
+/// optimizer's histogram collector implements this.
+pub trait SizeObserver: Send + Sync {
+    fn observe(&self, total_size: usize);
+}
+
+/// Wall clock with a manual override for deterministic expiry tests.
+#[derive(Clone)]
+pub enum Clock {
+    System,
+    /// Fixed "now" in unix seconds, adjustable from tests.
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    pub fn manual(start: u64) -> (Clock, Arc<AtomicU64>) {
+        let cell = Arc::new(AtomicU64::new(start));
+        (Clock::Manual(cell.clone()), cell)
+    }
+
+    #[inline]
+    pub fn now(&self) -> u32 {
+        match self {
+            Clock::System => SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs() as u32)
+                .unwrap_or(0),
+            Clock::Manual(cell) => cell.load(Ordering::Relaxed) as u32,
+        }
+    }
+}
+
+/// Store-level failures (protocol maps these onto error lines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    BadKey,
+    /// Larger than the biggest chunk.
+    TooLarge { size: usize, max: usize },
+    /// Could not free space in the target class.
+    OutOfMemory,
+    /// incr/decr on a non-numeric value.
+    NonNumeric,
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::BadKey => write!(f, "bad key"),
+            StoreError::TooLarge { size, max } => {
+                write!(f, "object too large for cache ({size} > {max})")
+            }
+            StoreError::OutOfMemory => write!(f, "out of memory storing object"),
+            StoreError::NonNumeric => {
+                write!(f, "cannot increment or decrement non-numeric value")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Result of a `cas` store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CasResult {
+    Stored,
+    Exists,
+    NotFound,
+}
+
+/// A fetched value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub value: Vec<u8>,
+    pub flags: u32,
+    pub cas: u64,
+}
+
+/// Store operation counters (`stats`).
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    pub cmd_get: u64,
+    pub cmd_set: u64,
+    pub get_hits: u64,
+    pub get_misses: u64,
+    pub delete_hits: u64,
+    pub delete_misses: u64,
+    pub incr_hits: u64,
+    pub incr_misses: u64,
+    pub decr_hits: u64,
+    pub decr_misses: u64,
+    pub cas_hits: u64,
+    pub cas_misses: u64,
+    pub cas_badval: u64,
+    pub touch_hits: u64,
+    pub touch_misses: u64,
+    pub evictions: u64,
+    pub expired_reclaims: u64,
+    pub flush_cmds: u64,
+    pub reconfigures: u64,
+}
+
+/// Outcome of a live slab reconfiguration ([`KvStore::reconfigure`]).
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    pub items_moved: usize,
+    /// Items that no longer fit under the transient page budget.
+    pub items_dropped: usize,
+    pub hole_bytes_before: u64,
+    pub hole_bytes_after: u64,
+    pub pages_before: usize,
+    pub pages_after: usize,
+}
+
+impl MigrationReport {
+    /// The paper's headline metric: fraction of wasted memory recovered.
+    pub fn waste_recovered_fraction(&self) -> f64 {
+        if self.hole_bytes_before == 0 {
+            0.0
+        } else {
+            1.0 - self.hole_bytes_after as f64 / self.hole_bytes_before as f64
+        }
+    }
+}
+
+/// One shard of the cache.
+pub struct KvStore {
+    alloc: SlabAllocator,
+    arena: Arena,
+    table: HashTable,
+    lrus: Vec<ClassLru>,
+    clock: Clock,
+    use_cas: bool,
+    cas_counter: u64,
+    stats: StoreStats,
+    observer: Option<Arc<dyn SizeObserver>>,
+    policy: ChunkSizePolicy,
+    page_size: usize,
+    mem_limit: usize,
+}
+
+impl KvStore {
+    pub fn new(
+        policy: ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+        use_cas: bool,
+        clock: Clock,
+    ) -> Result<Self, SlabError> {
+        let alloc = SlabAllocator::new(&policy, page_size, mem_limit)?;
+        let lrus = (0..alloc.chunk_sizes().len())
+            .map(|_| ClassLru::new())
+            .collect();
+        Ok(KvStore {
+            alloc,
+            arena: Arena::new(),
+            table: HashTable::new(),
+            lrus,
+            clock,
+            use_cas,
+            cas_counter: 0,
+            stats: StoreStats::default(),
+            observer: None,
+            policy,
+            page_size,
+            mem_limit,
+        })
+    }
+
+    /// Attach a per-set size observer (the optimizer's collector).
+    pub fn set_observer(&mut self, obs: Arc<dyn SizeObserver>) {
+        self.observer = Some(obs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.arena.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arena.is_empty()
+    }
+
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    pub fn slab_stats(&self) -> SlabStats {
+        self.alloc.stats()
+    }
+
+    pub fn chunk_sizes(&self) -> &[usize] {
+        self.alloc.chunk_sizes()
+    }
+
+    pub fn policy(&self) -> &ChunkSizePolicy {
+        &self.policy
+    }
+
+    /// Current absolute time.
+    pub fn now(&self) -> u32 {
+        self.clock.now()
+    }
+
+    /// Memcached exptime normalization: 0 = never, ≤ 30 days = relative,
+    /// larger = absolute unix time.
+    fn normalize_exptime(&self, exptime: u32) -> u32 {
+        if exptime == 0 {
+            0
+        } else if exptime <= REALTIME_MAXDELTA {
+            self.clock.now() + exptime
+        } else {
+            exptime
+        }
+    }
+
+    fn is_expired(&self, meta: &ItemMeta) -> bool {
+        meta.exptime != 0 && meta.exptime <= self.clock.now()
+    }
+
+    // ------------------------------------------------------------ internals
+
+    fn find_live(&mut self, key: &[u8], hash: u64) -> Option<u32> {
+        let id = {
+            let arena = &self.arena;
+            let alloc = &self.alloc;
+            self.table.find(hash, arena, |id| {
+                let m = arena.get(id);
+                let chunk = alloc.chunk(m.handle);
+                &chunk[..m.klen as usize] == key
+            })?
+        };
+        if self.is_expired(self.arena.get(id)) {
+            self.unlink_and_free(id, hash);
+            self.stats.expired_reclaims += 1;
+            return None;
+        }
+        Some(id)
+    }
+
+    fn unlink_and_free(&mut self, id: u32, hash: u64) {
+        self.table.remove(id, hash, &mut self.arena);
+        let class = self.arena.get(id).handle.class as usize;
+        self.lrus[class].remove(id, &mut self.arena);
+        let meta = self.arena.remove(id);
+        self.alloc.free(meta.handle, meta.total as usize);
+    }
+
+    /// Allocate a chunk, evicting from the target class when the page
+    /// budget is exhausted (memcached's default `-M off` behaviour).
+    fn alloc_with_eviction(&mut self, total: usize) -> Result<ChunkHandle, StoreError> {
+        for _ in 0..MAX_EVICT_ATTEMPTS {
+            match self.alloc.alloc(total) {
+                Ok(h) => return Ok(h),
+                Err(SlabError::TooLarge { size, max }) => {
+                    return Err(StoreError::TooLarge { size, max })
+                }
+                Err(SlabError::NeedEviction { class }) => {
+                    let victim = self.lrus[class as usize].eviction_candidate();
+                    match victim {
+                        Some(id) => {
+                            let hash = self.arena.get(id).hash;
+                            self.unlink_and_free(id, hash);
+                            self.stats.evictions += 1;
+                        }
+                        None => return Err(StoreError::OutOfMemory),
+                    }
+                }
+                Err(SlabError::Policy(_)) => unreachable!("policy validated at build"),
+            }
+        }
+        Err(StoreError::OutOfMemory)
+    }
+
+    fn next_cas(&mut self) -> u64 {
+        self.cas_counter += 1;
+        self.cas_counter
+    }
+
+    /// Insert a brand-new item (caller ensured the key is absent).
+    fn insert_new(
+        &mut self,
+        key: &[u8],
+        hash: u64,
+        value: &[u8],
+        flags: u32,
+        exptime_abs: u32,
+    ) -> Result<(), StoreError> {
+        let total = total_item_size(key.len(), value.len(), self.use_cas);
+        let handle = self.alloc_with_eviction(total)?;
+        let chunk = self.alloc.chunk_mut(handle);
+        chunk[..key.len()].copy_from_slice(key);
+        chunk[key.len()..key.len() + value.len()].copy_from_slice(value);
+        let cas = self.next_cas();
+        let id = self.arena.insert(ItemMeta {
+            hash,
+            handle,
+            klen: key.len() as u16,
+            vlen: value.len() as u32,
+            flags,
+            exptime: exptime_abs,
+            time: self.clock.now(),
+            cas,
+            total: total as u32,
+            hnext: NIL,
+            prev: NIL,
+            next: NIL,
+            tier: 0,
+            live: true,
+        });
+        self.table.insert(id, hash, &mut self.arena);
+        self.lrus[handle.class as usize].insert(id, &mut self.arena);
+        if let Some(obs) = &self.observer {
+            obs.observe(total);
+        }
+        Ok(())
+    }
+
+    /// Replace the value bytes of an existing item, reallocating across
+    /// classes when the new total no longer fits the current chunk.
+    fn replace_value_bytes(&mut self, id: u32, new_value: &[u8]) -> Result<(), StoreError> {
+        let (handle, klen, old_total) = {
+            let m = self.arena.get(id);
+            (m.handle, m.klen as usize, m.total as usize)
+        };
+        let new_total = total_item_size(klen, new_value.len(), self.use_cas);
+        let chunk_size = self.alloc.chunk_size_of(handle.class);
+        if new_total <= chunk_size {
+            // in-place rewrite
+            let chunk = self.alloc.chunk_mut(handle);
+            chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+            self.alloc.reaccount(handle, old_total, new_total);
+        } else {
+            // move to a larger chunk; copy key + new value
+            let key: Vec<u8> = self.alloc.chunk(handle)[..klen].to_vec();
+            let new_handle = self.alloc_with_eviction(new_total)?;
+            debug_assert!(self.arena.get(id).live, "victim eviction freed self");
+            let chunk = self.alloc.chunk_mut(new_handle);
+            chunk[..klen].copy_from_slice(&key);
+            chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+            self.alloc.free(handle, old_total);
+            // move LRU membership to the new class
+            let old_class = handle.class as usize;
+            let new_class = new_handle.class as usize;
+            if old_class != new_class {
+                self.lrus[old_class].remove(id, &mut self.arena);
+                self.lrus[new_class].insert(id, &mut self.arena);
+            }
+            self.arena.get_mut(id).handle = new_handle;
+        }
+        let cas = self.next_cas();
+        let m = self.arena.get_mut(id);
+        m.vlen = new_value.len() as u32;
+        m.total = new_total as u32;
+        m.cas = cas;
+        m.time = self.clock.now();
+        if let Some(obs) = &self.observer {
+            obs.observe(new_total);
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- operations
+
+    /// `set`: unconditional store.
+    pub fn set(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+    ) -> Result<(), StoreError> {
+        if !key_is_valid(key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        let exptime = self.normalize_exptime(exptime);
+        if let Some(id) = self.find_live(key, hash) {
+            self.unlink_and_free(id, hash);
+        }
+        self.insert_new(key, hash, value, flags, exptime)
+    }
+
+    /// `add`: store only if absent. Returns false when the key exists.
+    pub fn add(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+    ) -> Result<bool, StoreError> {
+        if !key_is_valid(key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        if self.find_live(key, hash).is_some() {
+            return Ok(false);
+        }
+        let exptime = self.normalize_exptime(exptime);
+        self.insert_new(key, hash, value, flags, exptime)?;
+        Ok(true)
+    }
+
+    /// `replace`: store only if present. Returns false when absent.
+    pub fn replace(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+    ) -> Result<bool, StoreError> {
+        if !key_is_valid(key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        if self.find_live(key, hash).is_none() {
+            return Ok(false);
+        }
+        let exptime = self.normalize_exptime(exptime);
+        // full replace: drop + insert (flags/exptime reset like memcached)
+        if let Some(id) = self.find_live(key, hash) {
+            self.unlink_and_free(id, hash);
+        }
+        self.insert_new(key, hash, value, flags, exptime)?;
+        Ok(true)
+    }
+
+    /// `cas`: store if the token matches.
+    pub fn cas(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+        cas: u64,
+    ) -> Result<CasResult, StoreError> {
+        if !key_is_valid(key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        match self.find_live(key, hash) {
+            None => {
+                self.stats.cas_misses += 1;
+                Ok(CasResult::NotFound)
+            }
+            Some(id) if self.arena.get(id).cas != cas => {
+                self.stats.cas_badval += 1;
+                Ok(CasResult::Exists)
+            }
+            Some(id) => {
+                self.stats.cas_hits += 1;
+                self.unlink_and_free(id, hash);
+                let exptime = self.normalize_exptime(exptime);
+                self.insert_new(key, hash, value, flags, exptime)?;
+                Ok(CasResult::Stored)
+            }
+        }
+    }
+
+    /// `append`/`prepend`. Returns false when the key is absent.
+    pub fn concat(
+        &mut self,
+        key: &[u8],
+        data: &[u8],
+        append: bool,
+    ) -> Result<bool, StoreError> {
+        if !key_is_valid(key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        let Some(id) = self.find_live(key, hash) else {
+            return Ok(false);
+        };
+        let (handle, klen, vlen) = {
+            let m = self.arena.get(id);
+            (m.handle, m.klen as usize, m.vlen as usize)
+        };
+        let old = self.alloc.chunk(handle)[klen..klen + vlen].to_vec();
+        let mut merged = Vec::with_capacity(old.len() + data.len());
+        if append {
+            merged.extend_from_slice(&old);
+            merged.extend_from_slice(data);
+        } else {
+            merged.extend_from_slice(data);
+            merged.extend_from_slice(&old);
+        }
+        self.replace_value_bytes(id, &merged)?;
+        Ok(true)
+    }
+
+    /// `get`/`gets`.
+    pub fn get(&mut self, key: &[u8]) -> Option<Value> {
+        self.stats.cmd_get += 1;
+        let hash = hash_key(key);
+        let Some(id) = self.find_live(key, hash) else {
+            self.stats.get_misses += 1;
+            return None;
+        };
+        self.stats.get_hits += 1;
+        let class = self.arena.get(id).handle.class as usize;
+        self.lrus[class].touch(id, &mut self.arena);
+        let m = self.arena.get(id);
+        let chunk = self.alloc.chunk(m.handle);
+        Some(Value {
+            value: chunk[m.klen as usize..m.klen as usize + m.vlen as usize].to_vec(),
+            flags: m.flags,
+            cas: m.cas,
+        })
+    }
+
+    /// `delete`. Returns true when the key existed.
+    pub fn delete(&mut self, key: &[u8]) -> bool {
+        let hash = hash_key(key);
+        match self.find_live(key, hash) {
+            Some(id) => {
+                self.unlink_and_free(id, hash);
+                self.stats.delete_hits += 1;
+                true
+            }
+            None => {
+                self.stats.delete_misses += 1;
+                false
+            }
+        }
+    }
+
+    /// `incr`/`decr`. `Ok(None)` = not found.
+    pub fn incr_decr(
+        &mut self,
+        key: &[u8],
+        delta: u64,
+        incr: bool,
+    ) -> Result<Option<u64>, StoreError> {
+        let hash = hash_key(key);
+        let Some(id) = self.find_live(key, hash) else {
+            if incr {
+                self.stats.incr_misses += 1;
+            } else {
+                self.stats.decr_misses += 1;
+            }
+            return Ok(None);
+        };
+        let (handle, klen, vlen) = {
+            let m = self.arena.get(id);
+            (m.handle, m.klen as usize, m.vlen as usize)
+        };
+        let bytes = &self.alloc.chunk(handle)[klen..klen + vlen];
+        let text = std::str::from_utf8(bytes).map_err(|_| StoreError::NonNumeric)?;
+        let current: u64 = text.trim_end().parse().map_err(|_| StoreError::NonNumeric)?;
+        let next = if incr {
+            current.wrapping_add(delta)
+        } else {
+            current.saturating_sub(delta)
+        };
+        let repr = next.to_string();
+        self.replace_value_bytes(id, repr.as_bytes())?;
+        if incr {
+            self.stats.incr_hits += 1;
+        } else {
+            self.stats.decr_hits += 1;
+        }
+        Ok(Some(next))
+    }
+
+    /// `touch`: refresh expiry. Returns true when the key existed.
+    pub fn touch(&mut self, key: &[u8], exptime: u32) -> bool {
+        let hash = hash_key(key);
+        match self.find_live(key, hash) {
+            Some(id) => {
+                let exp = self.normalize_exptime(exptime);
+                let class = self.arena.get(id).handle.class as usize;
+                self.lrus[class].touch(id, &mut self.arena);
+                self.arena.get_mut(id).exptime = exp;
+                self.stats.touch_hits += 1;
+                true
+            }
+            None => {
+                self.stats.touch_misses += 1;
+                false
+            }
+        }
+    }
+
+    /// `flush_all` (eager variant: reclaims immediately).
+    pub fn flush_all(&mut self) {
+        self.stats.flush_cmds += 1;
+        let ids: Vec<u32> = self.arena.iter_ids().collect();
+        for id in ids {
+            let hash = self.arena.get(id).hash;
+            self.unlink_and_free(id, hash);
+        }
+    }
+
+    /// Visit `(key, meta_total_size)` for every live item.
+    pub fn for_each_item<F: FnMut(&[u8], usize)>(&self, mut f: F) {
+        for id in self.arena.iter_ids() {
+            let m = self.arena.get(id);
+            let chunk = self.alloc.chunk(m.handle);
+            f(&chunk[..m.klen as usize], m.total as usize);
+        }
+    }
+
+    // ------------------------------------------------- live reconfiguration
+
+    /// Migrate every item into a new chunk geometry — the online
+    /// equivalent of restarting memcached with `-o slab_sizes=...`.
+    ///
+    /// Recency is preserved within each old class (hot → cold order);
+    /// items that cannot fit under the page budget of the new layout
+    /// are dropped (counted in the report). Transiently uses up to 2×
+    /// the memory limit while both allocators are alive — the price of
+    /// not restarting (the paper restarts the server instead).
+    pub fn reconfigure(&mut self, new_policy: ChunkSizePolicy) -> Result<MigrationReport, StoreError> {
+        let before = self.alloc.stats();
+        let mut new_alloc = match SlabAllocator::new(&new_policy, self.page_size, self.mem_limit) {
+            Ok(a) => a,
+            Err(SlabError::Policy(_)) | Err(_) => {
+                return Err(StoreError::OutOfMemory) // invalid policy surfaced upstream
+            }
+        };
+        self.table.finish_expansion(&mut self.arena);
+
+        // Snapshot ids least-recent-last per old class, then re-insert in
+        // reverse so push-to-hot-head preserves relative recency.
+        let mut ordered: Vec<u32> = Vec::with_capacity(self.arena.len());
+        for lru in &self.lrus {
+            ordered.extend(lru.iter_all(&self.arena));
+        }
+
+        let mut new_lrus: Vec<ClassLru> = (0..new_alloc.chunk_sizes().len())
+            .map(|_| ClassLru::new())
+            .collect();
+
+        let mut moved = 0usize;
+        let mut dropped: Vec<u32> = Vec::new();
+        for &id in ordered.iter().rev() {
+            let (old_handle, klen, vlen, total) = {
+                let m = self.arena.get(id);
+                (m.handle, m.klen as usize, m.vlen as usize, m.total as usize)
+            };
+            match new_alloc.alloc(total) {
+                Ok(new_handle) => {
+                    let src = self.alloc.chunk(old_handle)[..klen + vlen].to_vec();
+                    new_alloc.chunk_mut(new_handle)[..klen + vlen].copy_from_slice(&src);
+                    // old LRU links are rebuilt below; clear them first
+                    let m = self.arena.get_mut(id);
+                    m.handle = new_handle;
+                    m.prev = NIL;
+                    m.next = NIL;
+                    new_lrus[new_handle.class as usize].insert(id, &mut self.arena);
+                    moved += 1;
+                }
+                Err(_) => dropped.push(id),
+            }
+        }
+
+        // Unlink dropped items from the hash table + arena (their chunks
+        // die with the old allocator).
+        for id in &dropped {
+            let hash = self.arena.get(*id).hash;
+            self.table.remove(*id, hash, &mut self.arena);
+            self.arena.remove(*id);
+        }
+
+        self.alloc = new_alloc;
+        self.lrus = new_lrus;
+        self.policy = new_policy;
+        self.stats.reconfigures += 1;
+
+        let after = self.alloc.stats();
+        Ok(MigrationReport {
+            items_moved: moved,
+            items_dropped: dropped.len(),
+            hole_bytes_before: before.hole_bytes,
+            hole_bytes_after: after.hole_bytes,
+            pages_before: before.pages_allocated,
+            pages_after: after.pages_allocated,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::PAGE_SIZE;
+
+    fn store(mem: usize) -> KvStore {
+        KvStore::new(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            mem,
+            true,
+            Clock::System,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = store(8 << 20);
+        s.set(b"hello", b"world", 7, 0).unwrap();
+        let v = s.get(b"hello").unwrap();
+        assert_eq!(v.value, b"world");
+        assert_eq!(v.flags, 7);
+        assert!(v.cas > 0);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn set_overwrites() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v1", 0, 0).unwrap();
+        s.set(b"k", b"v2-longer-value", 0, 0).unwrap();
+        assert_eq!(s.get(b"k").unwrap().value, b"v2-longer-value");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn add_replace_semantics() {
+        let mut s = store(8 << 20);
+        assert!(s.add(b"k", b"v", 0, 0).unwrap());
+        assert!(!s.add(b"k", b"v2", 0, 0).unwrap());
+        assert_eq!(s.get(b"k").unwrap().value, b"v");
+        assert!(s.replace(b"k", b"v3", 0, 0).unwrap());
+        assert_eq!(s.get(b"k").unwrap().value, b"v3");
+        assert!(!s.replace(b"absent", b"x", 0, 0).unwrap());
+    }
+
+    #[test]
+    fn cas_flow() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        let cas = s.get(b"k").unwrap().cas;
+        assert_eq!(s.cas(b"k", b"v2", 0, 0, cas).unwrap(), CasResult::Stored);
+        assert_eq!(s.cas(b"k", b"v3", 0, 0, cas).unwrap(), CasResult::Exists);
+        assert_eq!(
+            s.cas(b"nope", b"v", 0, 0, 1).unwrap(),
+            CasResult::NotFound
+        );
+        assert_eq!(s.get(b"k").unwrap().value, b"v2");
+    }
+
+    #[test]
+    fn delete_semantics() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        assert!(s.delete(b"k"));
+        assert!(!s.delete(b"k"));
+        assert!(s.get(b"k").is_none());
+        assert_eq!(s.len(), 0);
+        // slab memory fully reclaimed
+        assert_eq!(s.slab_stats().requested_bytes, 0);
+    }
+
+    #[test]
+    fn incr_decr() {
+        let mut s = store(8 << 20);
+        s.set(b"n", b"10", 0, 0).unwrap();
+        assert_eq!(s.incr_decr(b"n", 5, true).unwrap(), Some(15));
+        assert_eq!(s.incr_decr(b"n", 20, false).unwrap(), Some(0)); // floors
+        assert_eq!(s.incr_decr(b"absent", 1, true).unwrap(), None);
+        s.set(b"t", b"text", 0, 0).unwrap();
+        assert_eq!(s.incr_decr(b"t", 1, true), Err(StoreError::NonNumeric));
+    }
+
+    #[test]
+    fn incr_growing_representation() {
+        let mut s = store(8 << 20);
+        s.set(b"n", b"9", 0, 0).unwrap();
+        assert_eq!(s.incr_decr(b"n", 1, true).unwrap(), Some(10));
+        assert_eq!(s.get(b"n").unwrap().value, b"10");
+    }
+
+    #[test]
+    fn append_prepend() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"mid", 0, 0).unwrap();
+        assert!(s.concat(b"k", b"-end", true).unwrap());
+        assert!(s.concat(b"k", b"start-", false).unwrap());
+        assert_eq!(s.get(b"k").unwrap().value, b"start-mid-end");
+        assert!(!s.concat(b"absent", b"x", true).unwrap());
+    }
+
+    #[test]
+    fn append_across_class_boundary() {
+        let mut s = store(8 << 20);
+        s.set(b"k", &[b'a'; 30], 0, 0).unwrap(); // 48+8+1+30+2=89 -> class 96
+        let big = [b'b'; 200];
+        assert!(s.concat(b"k", &big, true).unwrap()); // total 289 -> class 304
+        let v = s.get(b"k").unwrap().value;
+        assert_eq!(v.len(), 230);
+        // hole accounting stays exact
+        let st = s.slab_stats();
+        assert_eq!(st.requested_bytes, total_item_size(1, 230, true) as u64);
+    }
+
+    #[test]
+    fn expiry_lazy_reclaim() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s = KvStore::new(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            8 << 20,
+            true,
+            clock,
+        )
+        .unwrap();
+        s.set(b"k", b"v", 0, 60).unwrap(); // relative 60s
+        assert!(s.get(b"k").is_some());
+        cell.store(1_000_061, Ordering::Relaxed);
+        assert!(s.get(b"k").is_none());
+        assert_eq!(s.stats().expired_reclaims, 1);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn exptime_absolute() {
+        let (clock, cell) = Clock::manual(10_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"v", 0, 10_000_005).unwrap(); // absolute
+        assert!(s.get(b"k").is_some());
+        cell.store(10_000_006, Ordering::Relaxed);
+        assert!(s.get(b"k").is_none());
+    }
+
+    #[test]
+    fn touch_extends_life() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"v", 0, 60).unwrap();
+        cell.store(1_000_050, Ordering::Relaxed);
+        assert!(s.touch(b"k", 120));
+        cell.store(1_000_100, Ordering::Relaxed);
+        assert!(s.get(b"k").is_some(), "touched item survives old expiry");
+    }
+
+    #[test]
+    fn flush_all_clears() {
+        let mut s = store(8 << 20);
+        for i in 0..100u32 {
+            s.set(format!("k{i}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        s.flush_all();
+        assert_eq!(s.len(), 0);
+        assert!(s.get(b"k5").is_none());
+        assert_eq!(s.slab_stats().requested_bytes, 0);
+    }
+
+    #[test]
+    fn eviction_under_memory_pressure() {
+        // tiny cache: 2 pages of 4096
+        let mut s = KvStore::new(
+            ChunkSizePolicy::Geometric {
+                chunk_min: 96,
+                factor: 1.25,
+            },
+            4096,
+            8192,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        // fill way beyond capacity with ~96-byte items
+        for i in 0..500u32 {
+            s.set(format!("key-{i:04}").as_bytes(), b"0123456789", 0, 0)
+                .unwrap();
+        }
+        assert!(s.stats().evictions > 0, "must have evicted");
+        // most recent items should still be present
+        assert!(s.get(b"key-0499").is_some());
+        assert!(s.get(b"key-0000").is_none(), "oldest evicted");
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let mut s = KvStore::new(
+            ChunkSizePolicy::default(),
+            4096,
+            1 << 20,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        let huge = vec![0u8; 8192];
+        match s.set(b"k", &huge, 0, 0) {
+            Err(StoreError::TooLarge { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hole_accounting_matches_item_sizes() {
+        let mut s = store(16 << 20);
+        // 518-byte total items: key "kNNNN" (5) + value padding
+        // total = 48 + 8 + 5 + vlen + 2 = 518 -> vlen = 455
+        for i in 0..1000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        let st = s.slab_stats();
+        assert_eq!(st.requested_bytes, 518 * 1000);
+        // default chain puts 518 into the 600 chunk: hole = 82/item
+        assert_eq!(st.hole_bytes, 82 * 1000);
+    }
+
+    #[test]
+    fn reconfigure_reduces_holes_and_keeps_items() {
+        let mut s = store(32 << 20);
+        for i in 0..2000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        let before = s.slab_stats().hole_bytes;
+        let report = s
+            .reconfigure(ChunkSizePolicy::Explicit(vec![518]))
+            .unwrap();
+        assert_eq!(report.items_moved, 2000);
+        assert_eq!(report.items_dropped, 0);
+        assert_eq!(report.hole_bytes_before, before);
+        assert_eq!(report.hole_bytes_after, 0, "exact-fit chunks -> no holes");
+        assert!(report.waste_recovered_fraction() > 0.999);
+        // data survives
+        assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+        assert_eq!(s.get(b"k1999").unwrap().value.len(), 455);
+        assert_eq!(s.len(), 2000);
+    }
+
+    #[test]
+    fn reconfigure_preserves_recency() {
+        let mut s = store(32 << 20);
+        for i in 0..100u32 {
+            s.set(format!("k{i:02}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        s.reconfigure(ChunkSizePolicy::Explicit(vec![96, 200]))
+            .unwrap();
+        // force eviction pressure on the new layout and confirm newest live
+        for i in 0..100u32 {
+            assert!(s.get(format!("k{i:02}").as_bytes()).is_some());
+        }
+    }
+
+    #[test]
+    fn observer_sees_set_sizes() {
+        use std::sync::Mutex;
+        struct Rec(Mutex<Vec<usize>>);
+        impl SizeObserver for Rec {
+            fn observe(&self, n: usize) {
+                self.0.lock().unwrap().push(n);
+            }
+        }
+        let rec = Arc::new(Rec(Mutex::new(Vec::new())));
+        let mut s = store(8 << 20);
+        s.set_observer(rec.clone());
+        s.set(b"abc", b"12345", 0, 0).unwrap();
+        let want = total_item_size(3, 5, true);
+        assert_eq!(*rec.0.lock().unwrap(), vec![want]);
+    }
+}

@@ -1,0 +1,111 @@
+//! In-house property-testing helper (proptest is not vendored in this
+//! offline image — DESIGN.md §3): seeded random case generation with
+//! failure reporting that prints the reproducing seed.
+
+use crate::util::rng::Pcg64;
+
+/// Run `cases` random property checks. On panic, re-raises with the
+/// failing case index and seed so the case is reproducible with
+/// `check_with_seed`.
+pub fn check<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(name: &str, cases: u64, f: F) {
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::new(seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with testutil::check_with_seed(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_with_seed<F: Fn(&mut Pcg64)>(_name: &str, seed: u64, f: F) {
+    let mut rng = Pcg64::new(seed);
+    f(&mut rng);
+}
+
+/// Generator helpers for common test inputs.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// Ascending distinct sizes in `[lo, hi]`.
+    pub fn ascending_sizes(rng: &mut Pcg64, n: usize, lo: u32, hi: u32) -> Vec<u32> {
+        assert!(hi - lo >= n as u32);
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < n {
+            set.insert(lo + rng.gen_range((hi - lo + 1) as u64) as u32);
+        }
+        set.into_iter().collect()
+    }
+
+    /// (size, count) pairs, ascending sizes, counts in `[1, cmax]`.
+    pub fn histogram_pairs(
+        rng: &mut Pcg64,
+        n: usize,
+        size_hi: u32,
+        cmax: u64,
+    ) -> Vec<(u32, u64)> {
+        ascending_sizes(rng, n, 1, size_hi)
+            .into_iter()
+            .map(|s| (s, 1 + rng.gen_range(cmax)))
+            .collect()
+    }
+
+    /// Random printable key of length `1..=max_len`.
+    pub fn key(rng: &mut Pcg64, max_len: usize) -> Vec<u8> {
+        let len = 1 + rng.gen_range(max_len as u64) as usize;
+        (0..len)
+            .map(|_| b'a' + rng.gen_range(26) as u8)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("count", 10, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails", 5, |rng| {
+                assert!(rng.gen_range(10) < 100, "always true");
+                assert!(false, "forced failure");
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("forced failure"), "{msg}");
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Pcg64::new(1);
+        let sizes = gen::ascending_sizes(&mut rng, 10, 5, 1000);
+        assert_eq!(sizes.len(), 10);
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+        let pairs = gen::histogram_pairs(&mut rng, 8, 500, 100);
+        assert!(pairs.iter().all(|&(s, c)| s >= 1 && s <= 500 && c >= 1));
+        let k = gen::key(&mut rng, 20);
+        assert!(!k.is_empty() && k.len() <= 20);
+    }
+}

@@ -1,0 +1,101 @@
+//! Human-readable formatting helpers for logs, stats output and benches.
+
+/// Format a byte count with binary units (`1.5 MiB`).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut unit = 0;
+    while v.abs() >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", v as i64, UNITS[unit])
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Format a count with thousands separators (`1,234,567`).
+pub fn human_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a duration in adaptive units.
+pub fn human_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a rate (ops/sec) in adaptive units.
+pub fn human_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} Gop/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} Mop/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} Kop/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} op/s")
+    }
+}
+
+/// Percentage with one decimal (`47.1%`).
+pub fn human_pct(fraction: f64) -> String {
+    format!("{:.2}%", fraction * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(0.0), "0 B");
+        assert_eq!(human_bytes(1023.0), "1023 B");
+        assert_eq!(human_bytes(1024.0), "1.00 KiB");
+        assert_eq!(human_bytes(1536.0), "1.50 KiB");
+        assert_eq!(human_bytes(1024.0 * 1024.0), "1.00 MiB");
+        assert_eq!(human_bytes(28.0 * 1024.0 * 1024.0 * 1024.0 * 1024.0), "28.00 TiB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(0), "0");
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(1000), "1,000");
+        assert_eq!(human_count(62_013_552), "62,013,552");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(Duration::from_nanos(10)), "10 ns");
+        assert_eq!(human_duration(Duration::from_micros(5)), "5.00 µs");
+        assert_eq!(human_duration(Duration::from_millis(125)), "125.00 ms");
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
+    }
+
+    #[test]
+    fn rates_and_pct() {
+        assert_eq!(human_rate(500.0), "500.0 op/s");
+        assert_eq!(human_rate(2_500_000.0), "2.50 Mop/s");
+        assert_eq!(human_pct(0.4709), "47.09%");
+    }
+}

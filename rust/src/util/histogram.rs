@@ -1,0 +1,276 @@
+//! Byte-granular item-size histograms — the optimizer's input.
+//!
+//! The paper's algorithm consumes "the probability distribution of the
+//! frequency of occurrence of an item for given item sizes". We keep the
+//! exact per-byte counts up to a cap, and fold anything larger into a
+//! coarse geometric tail (waste above the cap is dominated by the chunk
+//! geometry anyway). [`SizeHistogram::bucketize`] resamples into the
+//! fixed `(hist, sizes)` arrays the AOT artifact expects.
+
+use crate::util::fmt::human_bytes;
+
+/// Exact size-frequency histogram with a byte-granular head.
+#[derive(Clone, Debug)]
+pub struct SizeHistogram {
+    /// `counts[i]` = number of items of total size `i + 1` bytes.
+    counts: Vec<u64>,
+    /// Sizes above `counts.len()`: (size, count) pairs, sorted.
+    overflow: Vec<(usize, u64)>,
+    total_items: u64,
+    total_bytes: u128,
+    max_size: usize,
+}
+
+impl SizeHistogram {
+    /// A histogram tracking sizes `1..=cap` exactly.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        SizeHistogram {
+            counts: vec![0; cap],
+            overflow: Vec::new(),
+            total_items: 0,
+            total_bytes: 0,
+            max_size: 0,
+        }
+    }
+
+    /// Exact-head capacity in bytes.
+    pub fn cap(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Record `n` items of `size` bytes.
+    pub fn record_n(&mut self, size: usize, n: u64) {
+        if n == 0 {
+            return;
+        }
+        assert!(size > 0, "zero-sized item");
+        if size <= self.counts.len() {
+            self.counts[size - 1] += n;
+        } else {
+            match self.overflow.binary_search_by_key(&size, |&(s, _)| s) {
+                Ok(i) => self.overflow[i].1 += n,
+                Err(i) => self.overflow.insert(i, (size, n)),
+            }
+        }
+        self.total_items += n;
+        self.total_bytes += size as u128 * n as u128;
+        self.max_size = self.max_size.max(size);
+    }
+
+    /// Record one item.
+    #[inline]
+    pub fn record(&mut self, size: usize) {
+        self.record_n(size, 1);
+    }
+
+    pub fn total_items(&self) -> u64 {
+        self.total_items
+    }
+
+    pub fn total_bytes(&self) -> u128 {
+        self.total_bytes
+    }
+
+    /// Largest size seen (0 when empty).
+    pub fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    /// Count for an exact size.
+    pub fn count(&self, size: usize) -> u64 {
+        if size == 0 {
+            0
+        } else if size <= self.counts.len() {
+            self.counts[size - 1]
+        } else {
+            self.overflow
+                .binary_search_by_key(&size, |&(s, _)| s)
+                .map(|i| self.overflow[i].1)
+                .unwrap_or(0)
+        }
+    }
+
+    /// Iterate `(size, count)` over non-zero entries, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i + 1, c))
+            .chain(self.overflow.iter().copied())
+    }
+
+    /// Distinct sizes with non-zero count.
+    pub fn distinct_sizes(&self) -> usize {
+        self.iter().count()
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &SizeHistogram) {
+        for (size, count) in other.iter() {
+            self.record_n(size, count);
+        }
+    }
+
+    /// Percentile (0.0..=1.0) of the size distribution, by item count.
+    pub fn percentile(&self, p: f64) -> usize {
+        assert!((0.0..=1.0).contains(&p));
+        if self.total_items == 0 {
+            return 0;
+        }
+        let target = ((self.total_items as f64) * p).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (size, count) in self.iter() {
+            seen += count;
+            if seen >= target {
+                return size;
+            }
+        }
+        self.max_size
+    }
+
+    /// Resample into the fixed `(hist, sizes)` f64 arrays of the AOT
+    /// artifact: `s_buckets` buckets of equal width covering
+    /// `1..=max(cap_hint, max_size)`. Each bucket's representative size
+    /// is its **upper edge** — a conservative (never underestimating)
+    /// waste model that is *exact* when the bucket width is 1 byte,
+    /// which holds for every paper workload (sizes ≤ 16 KiB, S = 16384).
+    pub fn bucketize(&self, s_buckets: usize, cap_hint: usize) -> BucketizedHistogram {
+        let span = self.max_size.max(cap_hint).max(s_buckets);
+        let width = span.div_ceil(s_buckets);
+        let mut hist = vec![0.0f64; s_buckets];
+        let mut sizes = vec![0.0f64; s_buckets];
+        for (b, size) in sizes.iter_mut().enumerate() {
+            *size = ((b + 1) * width) as f64; // upper edge
+        }
+        for (size, count) in self.iter() {
+            let b = ((size - 1) / width).min(s_buckets - 1);
+            hist[b] += count as f64;
+        }
+        BucketizedHistogram { hist, sizes, width }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} items, {} total, sizes [{}..{}], p50={}",
+            self.total_items,
+            human_bytes(self.total_bytes as f64),
+            self.iter().next().map(|(s, _)| s).unwrap_or(0),
+            self.max_size,
+            self.percentile(0.5),
+        )
+    }
+}
+
+/// Fixed-shape resampling of a [`SizeHistogram`] (artifact input form).
+#[derive(Clone, Debug)]
+pub struct BucketizedHistogram {
+    /// Item counts per bucket (f64 for the f64 artifact ABI).
+    pub hist: Vec<f64>,
+    /// Representative (upper-edge) size per bucket.
+    pub sizes: Vec<f64>,
+    /// Bucket width in bytes (1 = exact).
+    pub width: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_count() {
+        let mut h = SizeHistogram::new(1024);
+        h.record(100);
+        h.record(100);
+        h.record(1024);
+        assert_eq!(h.count(100), 2);
+        assert_eq!(h.count(1024), 1);
+        assert_eq!(h.count(99), 0);
+        assert_eq!(h.total_items(), 3);
+        assert_eq!(h.total_bytes(), 1224);
+        assert_eq!(h.max_size(), 1024);
+    }
+
+    #[test]
+    fn overflow_sizes_tracked() {
+        let mut h = SizeHistogram::new(128);
+        h.record(1000);
+        h.record(1000);
+        h.record(5000);
+        assert_eq!(h.count(1000), 2);
+        assert_eq!(h.count(5000), 1);
+        assert_eq!(h.max_size(), 5000);
+        let all: Vec<_> = h.iter().collect();
+        assert_eq!(all, vec![(1000, 2), (5000, 1)]);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut h = SizeHistogram::new(100);
+        for s in 1..=100 {
+            h.record(s);
+        }
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(0.5), 50);
+        assert_eq!(h.percentile(1.0), 100);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = SizeHistogram::new(64);
+        let mut b = SizeHistogram::new(64);
+        a.record_n(10, 3);
+        b.record_n(10, 4);
+        b.record_n(200, 1);
+        a.merge(&b);
+        assert_eq!(a.count(10), 7);
+        assert_eq!(a.count(200), 1);
+        assert_eq!(a.total_items(), 8);
+    }
+
+    #[test]
+    fn bucketize_width_one_is_exact() {
+        let mut h = SizeHistogram::new(256);
+        h.record_n(5, 2);
+        h.record_n(256, 9);
+        let b = h.bucketize(256, 256);
+        assert_eq!(b.width, 1);
+        assert_eq!(b.hist[4], 2.0);
+        assert_eq!(b.hist[255], 9.0);
+        assert_eq!(b.sizes[4], 5.0);
+        assert_eq!(b.sizes[255], 256.0);
+        assert_eq!(b.hist.iter().sum::<f64>(), 11.0);
+    }
+
+    #[test]
+    fn bucketize_coarse_uses_upper_edge() {
+        let mut h = SizeHistogram::new(1000);
+        h.record(1); // bucket 0
+        h.record(100); // bucket (100-1)/width
+        let b = h.bucketize(10, 1000);
+        assert_eq!(b.width, 100);
+        assert_eq!(b.sizes[0], 100.0);
+        assert_eq!(b.hist[0], 2.0); // both land in the first bucket
+        assert_eq!(b.hist.iter().sum::<f64>(), 2.0);
+    }
+
+    #[test]
+    fn bucketize_overflow_clamped_to_last_bucket() {
+        let mut h = SizeHistogram::new(100);
+        h.record(10_000);
+        let b = h.bucketize(16, 100);
+        assert_eq!(b.hist[15], 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = SizeHistogram::new(16);
+        assert_eq!(h.total_items(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.distinct_sizes(), 0);
+        let b = h.bucketize(16, 16);
+        assert_eq!(b.hist.iter().sum::<f64>(), 0.0);
+    }
+}

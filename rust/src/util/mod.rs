@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic RNG, size histograms, a minimal JSON
+//! reader (the image has no network, so no serde — see DESIGN.md §3
+//! substitutions), and human-readable formatting.
+
+pub mod fmt;
+pub mod histogram;
+pub mod json;
+pub mod rng;

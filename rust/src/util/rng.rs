@@ -1,0 +1,259 @@
+//! Deterministic pseudo-random numbers for workload generation and the
+//! paper's randomized hill climber.
+//!
+//! crates.io is unreachable in this image, so instead of `rand` we ship a
+//! small, well-known generator: **PCG64 (XSL-RR 128/64)** seeded via
+//! SplitMix64, plus the distribution samplers the workloads need
+//! (uniform, normal via Box–Muller, log-normal, zipf, geometric-decay).
+//! Everything is reproducible from a single `u64` seed.
+
+/// PCG XSL-RR 128/64 — O'Neill's PCG with 128-bit state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal deviate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// SplitMix64: seed-expansion for PCG initialization.
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream derived from seed).
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let lo = splitmix64(&mut s) as u128;
+        let hi = splitmix64(&mut s) as u128;
+        let inc_lo = splitmix64(&mut s) as u128;
+        let inc_hi = splitmix64(&mut s) as u128;
+        let mut rng = Pcg64 {
+            state: (hi << 64) | lo,
+            inc: (((inc_hi << 64) | inc_lo) << 1) | 1,
+            spare_normal: None,
+        };
+        rng.next_u64(); // decorrelate the first output from the raw seed
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, n)`; unbiased via rejection (Lemire-style widening).
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        // Widening multiply with rejection of the biased zone.
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn gen_range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.gen_range(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal deviate (Box–Muller, cached pair).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            // Avoid ln(0).
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with the given mean / standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.next_normal()
+    }
+
+    /// Log-normal parameterized by its **median** and log-space sigma —
+    /// the parameterization DESIGN.md §3 reconstructs from the paper.
+    #[inline]
+    pub fn lognormal(&mut self, median: f64, sigma_ln: f64) -> f64 {
+        (median.ln() + sigma_ln * self.next_normal()).exp()
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (rejection
+    /// sampling, Jim Gray's method) — used for key popularity.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        if s <= 0.0 {
+            return self.gen_range(n);
+        }
+        // Inverse-CDF over the harmonic approximation.
+        let nf = n as f64;
+        loop {
+            let u = self.next_f64();
+            let x = if (s - 1.0).abs() < 1e-9 {
+                nf.powf(u) // H(x) ~ ln x for s = 1
+            } else {
+                let h = (nf.powf(1.0 - s) - 1.0) * u + 1.0;
+                h.powf(1.0 / (1.0 - s))
+            };
+            // x lands in [1, n+1): rank k in 1..=n maps to 0-based k-1.
+            let k = x.floor() as u64;
+            if (1..=n).contains(&k) {
+                return k - 1;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a: Vec<u64> = {
+            let mut r = Pcg64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut r = Pcg64::new(43);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Pcg64::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.gen_range(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(2);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal(10.0, 2.0);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((var.sqrt() - 2.0).abs() < 0.05, "sd {}", var.sqrt());
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Pcg64::new(4);
+        let mut xs: Vec<f64> = (0..100_001).map(|_| r.lognormal(518.0, 0.126)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        assert!(
+            (median - 518.0).abs() / 518.0 < 0.02,
+            "median {median} != 518"
+        );
+    }
+
+    #[test]
+    fn zipf_rank_zero_most_popular() {
+        let mut r = Pcg64::new(5);
+        let mut counts = [0u32; 16];
+        for _ in 0..20_000 {
+            counts[r.zipf(16, 1.1) as usize] += 1;
+        }
+        assert!(counts[0] > counts[5]);
+        assert!(counts[0] > counts[15]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

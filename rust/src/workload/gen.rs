@@ -1,0 +1,180 @@
+//! Operation-stream generator over a [`WorkloadSpec`].
+//!
+//! Keys are `k<NNNNNNNN>` (fixed 9-byte length so the key contributes a
+//! constant to the item total); value lengths are derived from the
+//! target item **total size** minus the fixed overheads, so the sizes
+//! entering the slab allocator follow the spec's distribution exactly.
+
+use super::spec::WorkloadSpec;
+use super::trace::Op;
+use crate::store::item::total_item_size;
+use crate::util::rng::Pcg64;
+
+/// Fixed generated-key length ("k" + 8 digits).
+pub const KEY_LEN: usize = 9;
+
+/// Render the i-th key.
+pub fn key_for(i: usize) -> String {
+    format!("k{:08}", i % 100_000_000)
+}
+
+/// Value length that makes an item's accounted total equal `total`.
+/// Returns `None` when `total` is too small to fit the overheads.
+pub fn value_len_for_total(total: usize, use_cas: bool) -> Option<usize> {
+    let base = total_item_size(KEY_LEN, 0, use_cas);
+    total.checked_sub(base)
+}
+
+/// Streaming generator: deterministic, no allocation of the whole trace.
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+    rng: Pcg64,
+    emitted: usize,
+    next_key: usize,
+    use_cas: bool,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: WorkloadSpec, use_cas: bool) -> Self {
+        let rng = Pcg64::new(spec.seed);
+        WorkloadGen {
+            spec,
+            rng,
+            emitted: 0,
+            next_key: 0,
+            use_cas,
+        }
+    }
+
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    /// Smallest total size this generator can emit (overhead floor).
+    pub fn min_total(&self) -> usize {
+        total_item_size(KEY_LEN, 0, self.use_cas)
+    }
+}
+
+impl Iterator for WorkloadGen {
+    type Item = Op;
+
+    fn next(&mut self) -> Option<Op> {
+        if self.emitted >= self.spec.items {
+            return None;
+        }
+        self.emitted += 1;
+        // get or set?
+        if self.next_key > 0 && self.rng.chance(self.spec.get_fraction) {
+            let keyspace = self.next_key.min(self.spec.key_space);
+            let rank = if self.spec.zipf_s > 0.0 {
+                self.rng.zipf(keyspace as u64, self.spec.zipf_s) as usize
+            } else {
+                self.rng.gen_range(keyspace as u64) as usize
+            };
+            // rank 0 = most recent key (popularity skews to recent)
+            let idx = self.next_key - 1 - rank;
+            return Some(Op::Get { key: key_for(idx) });
+        }
+        let floor = self.min_total().max(self.spec.min_size);
+        let total = self
+            .spec
+            .distribution
+            .sample(&mut self.rng, floor, self.spec.max_size);
+        let vlen = value_len_for_total(total, self.use_cas)
+            .expect("clamped total covers overheads");
+        let idx = self.next_key % self.spec.key_space;
+        self.next_key += 1;
+        Some(Op::Set {
+            key: key_for(idx),
+            value_len: vlen,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::SizeDistribution;
+
+    fn spec(items: usize, get_fraction: f64) -> WorkloadSpec {
+        WorkloadSpec {
+            distribution: SizeDistribution::LogNormal {
+                median: 518.0,
+                sigma_ln: 0.126,
+            },
+            items,
+            get_fraction,
+            key_space: 1_000_000,
+            zipf_s: 0.99,
+            min_size: 50,
+            max_size: 1 << 20,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<Op> = WorkloadGen::new(spec(100, 0.5), true).collect();
+        let b: Vec<Op> = WorkloadGen::new(spec(100, 0.5), true).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pure_insert_workload_has_no_gets() {
+        let ops: Vec<Op> = WorkloadGen::new(spec(500, 0.0), true).collect();
+        assert_eq!(ops.len(), 500);
+        assert!(ops.iter().all(|o| matches!(o, Op::Set { .. })));
+    }
+
+    #[test]
+    fn item_totals_follow_distribution() {
+        let ops: Vec<Op> = WorkloadGen::new(spec(20_000, 0.0), true).collect();
+        let mut totals: Vec<usize> = ops
+            .iter()
+            .map(|o| match o {
+                Op::Set { key, value_len } => total_item_size(key.len(), *value_len, true),
+                _ => unreachable!(),
+            })
+            .collect();
+        totals.sort_unstable();
+        let med = totals[totals.len() / 2];
+        assert!((med as f64 - 518.0).abs() < 20.0, "median total {med}");
+    }
+
+    #[test]
+    fn mixed_workload_get_fraction_respected() {
+        let ops: Vec<Op> = WorkloadGen::new(spec(20_000, 0.7), true).collect();
+        let gets = ops.iter().filter(|o| matches!(o, Op::Get { .. })).count();
+        let frac = gets as f64 / ops.len() as f64;
+        assert!((frac - 0.7).abs() < 0.02, "get fraction {frac}");
+    }
+
+    #[test]
+    fn gets_reference_existing_keys() {
+        let mut max_set_idx: i64 = -1;
+        for op in WorkloadGen::new(spec(5000, 0.5), true) {
+            match op {
+                Op::Set { key, .. } => {
+                    let idx: i64 = key[1..].parse().unwrap();
+                    max_set_idx = max_set_idx.max(idx);
+                }
+                Op::Get { key } => {
+                    let idx: i64 = key[1..].parse().unwrap();
+                    assert!(idx <= max_set_idx, "get of unseen key {key}");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn value_len_accounting_roundtrip() {
+        // overhead floor: 48 + 8 (cas) + 9 (key) + 2 = 67
+        for total in [67, 100, 518, 8192] {
+            let vlen = value_len_for_total(total, true).unwrap();
+            assert_eq!(total_item_size(KEY_LEN, vlen, true), total);
+        }
+        assert_eq!(value_len_for_total(10, true), None);
+    }
+}

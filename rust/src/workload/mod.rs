@@ -1,0 +1,12 @@
+//! Deterministic workload generation — the traffic patterns of the
+//! paper's evaluation (§5: five log-normal size distributions, 1 M items
+//! each) plus the §6.1 best/worst-case adversarial patterns and a
+//! Facebook-ETC-like mix for realism.
+
+pub mod gen;
+pub mod spec;
+pub mod trace;
+
+pub use gen::WorkloadGen;
+pub use spec::{PaperExperiment, SizeDistribution, WorkloadSpec, PAPER_EXPERIMENTS};
+pub use trace::{Op, Trace};

@@ -1,0 +1,138 @@
+//! Operation traces: record, save, replay. CSV on disk so experiment
+//! inputs can be archived and replayed byte-identically.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// One cache operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    Set { key: String, value_len: usize },
+    Get { key: String },
+    Delete { key: String },
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::Set { key, value_len } => write!(f, "set,{key},{value_len}"),
+            Op::Get { key } => write!(f, "get,{key},"),
+            Op::Delete { key } => write!(f, "del,{key},"),
+        }
+    }
+}
+
+impl Op {
+    pub fn parse(line: &str) -> Option<Op> {
+        let mut parts = line.splitn(3, ',');
+        let verb = parts.next()?;
+        let key = parts.next()?.to_string();
+        let arg = parts.next().unwrap_or("");
+        match verb {
+            "set" => Some(Op::Set {
+                key,
+                value_len: arg.parse().ok()?,
+            }),
+            "get" => Some(Op::Get { key }),
+            "del" => Some(Op::Delete { key }),
+            _ => None,
+        }
+    }
+
+    pub fn key(&self) -> &str {
+        match self {
+            Op::Set { key, .. } | Op::Get { key } | Op::Delete { key } => key,
+        }
+    }
+}
+
+/// An in-memory trace with CSV persistence.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+}
+
+impl Trace {
+    pub fn from_ops<I: IntoIterator<Item = Op>>(ops: I) -> Self {
+        Trace {
+            ops: ops.into_iter().collect(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "op,key,arg")?;
+        for op in &self.ops {
+            writeln!(w, "{op}")?;
+        }
+        w.flush()
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Trace> {
+        let r = BufReader::new(std::fs::File::open(path)?);
+        let mut ops = Vec::new();
+        for (i, line) in r.lines().enumerate() {
+            let line = line?;
+            if i == 0 && line.starts_with("op,") {
+                continue; // header
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let op = Op::parse(&line).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad trace line {}: '{line}'", i + 1),
+                )
+            })?;
+            ops.push(op);
+        }
+        Ok(Trace { ops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let ops = vec![
+            Op::Set {
+                key: "k1".into(),
+                value_len: 100,
+            },
+            Op::Get { key: "k1".into() },
+            Op::Delete { key: "k1".into() },
+        ];
+        for op in &ops {
+            assert_eq!(Op::parse(&op.to_string()).unwrap(), *op);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("slabforge-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let t = Trace::from_ops([
+            Op::Set {
+                key: "a".into(),
+                value_len: 5,
+            },
+            Op::Get { key: "a".into() },
+        ]);
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Op::parse("bogus,key,1").is_none());
+        assert!(Op::parse("set,key,notanum").is_none());
+        assert!(Op::parse("").is_none());
+    }
+}

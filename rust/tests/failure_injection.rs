@@ -1,0 +1,179 @@
+//! Failure injection: the system must surface clean errors (never
+//! panic, never serve corrupt data) when its environment breaks —
+//! stale/corrupt artifacts, malformed configs, abusive clients.
+
+use slabforge::client::Client;
+use slabforge::runtime::XlaService;
+use slabforge::server::Server;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("slabforge-fail-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ------------------------------------------------------------- artifacts
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let err = XlaService::start(Path::new("/nonexistent/artifacts")).unwrap_err();
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn truncated_hlo_artifact_fails_at_load_not_at_run() {
+    let src = Path::new("artifacts");
+    if !src.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let dir = tmpdir("trunc");
+    std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    for f in ["waste_eval.hlo.txt", "hill_step.hlo.txt", "fit_lognormal.hlo.txt"] {
+        let text = std::fs::read_to_string(src.join(f)).unwrap();
+        std::fs::write(dir.join(f), &text[..text.len() / 3]).unwrap(); // corrupt
+    }
+    let err = XlaService::start(&dir).unwrap_err();
+    assert!(!err.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sentinel_mismatch_detected_before_compile() {
+    let src = Path::new("artifacts");
+    if !src.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let dir = tmpdir("sentinel");
+    let manifest = std::fs::read_to_string(src.join("manifest.json")).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        manifest.replace("2097152", "1048576"),
+    )
+    .unwrap();
+    let err = XlaService::start(&dir).unwrap_err();
+    assert!(err.contains("sentinel") || err.contains("incompatible"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// -------------------------------------------------------------- protocol
+
+fn server() -> (slabforge::server::ServerHandle, Arc<ShardedStore>) {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            16 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let h = Server::new(store.clone()).start("127.0.0.1:0").unwrap();
+    (h, store)
+}
+
+#[test]
+fn abusive_client_random_bytes_do_not_kill_server() {
+    let (h, store) = server();
+    let mut rng = slabforge::util::rng::Pcg64::new(666);
+    for _ in 0..10 {
+        let mut s = TcpStream::connect(h.addr()).unwrap();
+        let garbage: Vec<u8> = (0..4096).map(|_| rng.gen_range(256) as u8).collect();
+        let _ = s.write_all(&garbage);
+        let _ = s.write_all(b"\r\n");
+        drop(s);
+    }
+    // server still serves a well-behaved client
+    let mut c = Client::connect(h.addr()).unwrap();
+    c.set("alive", b"yes", 0, 0).unwrap();
+    assert_eq!(c.get("alive").unwrap().unwrap().value, b"yes");
+    assert_eq!(store.get(b"alive").unwrap().value, b"yes");
+    h.shutdown();
+}
+
+#[test]
+fn oversized_line_and_data_rejected_without_desync() {
+    let (h, _) = server();
+    let mut s = TcpStream::connect(h.addr()).unwrap();
+    // huge single line (over MAX_LINE): server errors and closes
+    let long = vec![b'a'; 10_000];
+    s.write_all(b"get ").unwrap();
+    s.write_all(&long).unwrap();
+    s.write_all(b"\r\n").unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    assert!(
+        String::from_utf8_lossy(&buf).contains("CLIENT_ERROR"),
+        "{}",
+        String::from_utf8_lossy(&buf)
+    );
+
+    // oversized data block: error but connection stays in sync
+    let mut c = Client::connect(h.addr()).unwrap();
+    let err = c.set("big", &vec![0u8; (1 << 20) + 2048], 0, 0).unwrap_err();
+    assert!(format!("{err}").contains("SERVER_ERROR"), "{err}");
+    c.set("ok", b"fine", 0, 0).unwrap();
+    assert_eq!(c.get("ok").unwrap().unwrap().value, b"fine");
+    h.shutdown();
+}
+
+#[test]
+fn half_closed_mid_data_block_is_dropped() {
+    let (h, store) = server();
+    let mut s = TcpStream::connect(h.addr()).unwrap();
+    s.write_all(b"set partial 0 0 100\r\nonly-ten-b").unwrap();
+    drop(s); // connection dies mid data block
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert!(store.get(b"partial").is_none(), "partial item must not exist");
+    h.shutdown();
+}
+
+// --------------------------------------------------------------- config
+
+#[test]
+fn invalid_reconfigure_leaves_store_intact() {
+    let store = ShardedStore::with(
+        ChunkSizePolicy::default(),
+        PAGE_SIZE,
+        16 << 20,
+        true,
+        1,
+        Clock::System,
+    )
+    .unwrap();
+    store.set(b"k", &vec![b'v'; 500], 0, 0).unwrap();
+    // descending sizes -> policy error propagates as StoreError
+    let before = store.chunk_sizes();
+    assert!(store
+        .reconfigure(ChunkSizePolicy::Explicit(vec![900, 400]))
+        .is_err());
+    assert_eq!(store.chunk_sizes(), before, "config unchanged after failure");
+    assert_eq!(store.get(b"k").unwrap().value.len(), 500);
+}
+
+#[test]
+fn settings_reject_insane_configs() {
+    use slabforge::config::Settings;
+    for toml in [
+        "threads = 0\n",
+        "shards = 0\n",
+        "[memory]\nlimit = 0\n",
+        "[memory]\ngrowth_factor = 0.5\n",
+        "[memory]\nslab_sizes = [1]\n",
+        "[optimizer]\nbackend = \"gpu\"\n",
+    ] {
+        assert!(Settings::from_toml(toml).is_err(), "accepted: {toml}");
+    }
+}

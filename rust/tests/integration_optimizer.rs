@@ -1,0 +1,222 @@
+//! Cross-language integration: the AOT artifacts (L1 Pallas kernel
+//! lowered through the L2 jax graphs) executed via PJRT from rust must
+//! agree **bit-for-bit** with:
+//!
+//! 1. the python-side test vectors (`artifacts/testvectors.json`,
+//!    written by `python/compile/aot.py` from formula-defined inputs —
+//!    regenerated here from the same formulas), and
+//! 2. the pure-rust exact evaluator, on real workloads.
+//!
+//! These tests REQUIRE `make artifacts` to have run; they are skipped
+//! (with a loud message) when the artifacts are absent.
+
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend, WasteBackend};
+use slabforge::optimizer::waste::{WasteMap, SENTINEL};
+use slabforge::runtime::{XlaService, XlaWasteBackend};
+use slabforge::util::histogram::SizeHistogram;
+use slabforge::util::json::Json;
+use slabforge::util::rng::Pcg64;
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn service() -> Option<Arc<XlaService>> {
+    artifacts_dir().map(|d| XlaService::start(d).expect("artifacts load"))
+}
+
+/// The EXACT formula-defined inputs of `aot.py::testvector_inputs` —
+/// keep in sync with python/compile/aot.py.
+fn testvector_inputs(
+    s: usize,
+    b: usize,
+    k: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let hist: Vec<f64> = (0..s as u64)
+        .map(|i| ((i.wrapping_mul(2654435761) >> 7) % 97) as f64)
+        .collect();
+    let sizes: Vec<f64> = (1..=s).map(|i| i as f64).collect();
+    let mut configs = vec![SENTINEL as f64; b * k];
+    for row in 0..b {
+        for col in 0..6 {
+            configs[row * k + col] = 100.0 + 13.0 * row as f64 + 150.0 * col as f64;
+        }
+    }
+    let mut config = vec![SENTINEL as f64; k];
+    for (i, &c) in [304.0, 384.0, 480.0, 600.0, 752.0, 944.0].iter().enumerate() {
+        config[i] = c;
+    }
+    let mut deltas = vec![0.0; b * k];
+    for c in 0..6 {
+        deltas[(2 * c) * k + c] = 8.0;
+        deltas[(2 * c + 1) * k + c] = -8.0;
+    }
+    (hist, sizes, configs, config, deltas)
+}
+
+#[test]
+fn artifact_waste_eval_matches_python_testvectors() {
+    let Some(svc) = service() else { return };
+    let man = svc.manifest().clone();
+    let (hist, sizes, configs, _, _) =
+        testvector_inputs(man.s_buckets, man.b_candidates, man.k_classes);
+    let got = svc
+        .waste_eval(Arc::new(hist), Arc::new(sizes), configs)
+        .expect("waste_eval");
+
+    let vectors = Json::parse(
+        &std::fs::read_to_string(man.dir.join("testvectors.json")).expect("testvectors.json"),
+    )
+    .expect("json");
+    let want = vectors
+        .get("waste_eval")
+        .and_then(|v| v.get("waste"))
+        .and_then(Json::as_f64_vec)
+        .expect("waste vector");
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g, w, "waste[{i}]: rust-pjrt {g} != python {w}");
+    }
+}
+
+#[test]
+fn artifact_hill_step_matches_python_testvectors() {
+    let Some(svc) = service() else { return };
+    let man = svc.manifest().clone();
+    let (hist, sizes, _, config, deltas) =
+        testvector_inputs(man.s_buckets, man.b_candidates, man.k_classes);
+    let (best_cfg, best_waste, wastes) = svc
+        .hill_step(Arc::new(hist), Arc::new(sizes), config, deltas)
+        .expect("hill_step");
+
+    let vectors =
+        Json::parse(&std::fs::read_to_string(man.dir.join("testvectors.json")).unwrap()).unwrap();
+    let hs = vectors.get("hill_step").expect("hill_step section");
+    let want_cfg = hs.get("best_config").and_then(Json::as_f64_vec).unwrap();
+    let want_waste = hs.get("best_waste").and_then(Json::as_f64).unwrap();
+    let want_wastes = hs.get("wastes").and_then(Json::as_f64_vec).unwrap();
+    assert_eq!(best_cfg, want_cfg);
+    assert_eq!(best_waste, want_waste);
+    assert_eq!(wastes, want_wastes);
+}
+
+#[test]
+fn artifact_fit_lognormal_matches_python_testvectors() {
+    let Some(svc) = service() else { return };
+    let man = svc.manifest().clone();
+    let (hist, sizes, _, _, _) =
+        testvector_inputs(man.s_buckets, man.b_candidates, man.k_classes);
+    let (median, sigma, n) = svc
+        .fit_lognormal(Arc::new(hist), Arc::new(sizes))
+        .expect("fit");
+    let vectors =
+        Json::parse(&std::fs::read_to_string(man.dir.join("testvectors.json")).unwrap()).unwrap();
+    let fit = vectors.get("fit_lognormal").unwrap();
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs().max(1.0);
+    assert!(close(median, fit.get("median").unwrap().as_f64().unwrap()));
+    assert!(close(sigma, fit.get("sigma_ln").unwrap().as_f64().unwrap()));
+    assert_eq!(n, fit.get("n").unwrap().as_f64().unwrap());
+}
+
+fn lognormal_hist(median: f64, sigma: f64, n: usize, seed: u64) -> SizeHistogram {
+    let mut h = SizeHistogram::new(16384);
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..n {
+        let s = (rng.lognormal(median, sigma).round() as usize).clamp(60, 16384);
+        h.record(s);
+    }
+    h
+}
+
+#[test]
+fn xla_backend_bit_identical_to_rust_backend() {
+    let Some(svc) = service() else { return };
+    let hist = lognormal_hist(518.0, 0.126, 50_000, 42);
+    let xla = XlaWasteBackend::new(&svc, &hist);
+    let rust = RustBackend::new(WasteMap::from_histogram(&hist));
+
+    let mut rng = Pcg64::new(7);
+    // random configs of random lengths, including degenerate ones
+    let configs: Vec<Vec<u32>> = (0..300)
+        .map(|i| {
+            let k = 1 + (i % 9);
+            (0..k).map(|_| 60 + rng.gen_range(16_000) as u32).collect()
+        })
+        .collect();
+    let got = xla.eval_batch(&configs);
+    let want = rust.eval_batch(&configs);
+    assert_eq!(got, want, "XLA artifact and rust evaluator diverge");
+}
+
+#[test]
+fn optimize_with_xla_backend_matches_rust_backend() {
+    let Some(svc) = service() else { return };
+    let hist = lognormal_hist(1210.0, 0.09, 30_000, 43);
+    let current = slabforge::slab::geometry::memcached_default_sizes();
+    let params = OptimizerParams {
+        algorithm: Algorithm::SteepestDescent,
+        ..Default::default()
+    };
+    let xla_backend = XlaWasteBackend::new(&svc, &hist);
+    let rust_backend = RustBackend::new(WasteMap::from_histogram(&hist));
+    let a = optimize(&xla_backend, &hist, &current, &params);
+    let b = optimize(&rust_backend, &hist, &current, &params);
+    // deterministic algorithm + bit-identical evaluators = same trajectory
+    assert_eq!(a.new_config, b.new_config);
+    assert_eq!(a.new_waste, b.new_waste);
+    assert!(a.recovery() > 0.25, "recovery {}", a.recovery());
+}
+
+#[test]
+fn fused_hill_step_improves_waste() {
+    let Some(svc) = service() else { return };
+    let hist = lognormal_hist(518.0, 0.126, 20_000, 44);
+    let backend = XlaWasteBackend::new(&svc, &hist);
+    let man = svc.manifest().clone();
+
+    let config: Vec<u32> = vec![304, 384, 480, 600, 752, 944];
+    let current = backend.eval_batch(&[config.clone()])[0];
+
+    // one fused steepest step: ±64 on each class + implicit zero rows
+    let k = man.k_classes;
+    let mut deltas = vec![0.0f64; man.b_candidates * k];
+    for c in 0..config.len() {
+        deltas[(2 * c) * k + c] = 64.0;
+        deltas[(2 * c + 1) * k + c] = -64.0;
+    }
+    let (best, best_waste, wastes) = backend.fused_hill_step(&config, &deltas).expect("step");
+    assert_eq!(wastes.len(), man.b_candidates);
+    assert!(best_waste <= current, "fused step must never regress");
+    assert!(best_waste < current, "first step on default config improves");
+    assert_eq!(best.len(), config.len());
+    // cross-check the chosen config against the rust evaluator
+    let rust = RustBackend::new(WasteMap::from_histogram(&hist));
+    assert_eq!(rust.eval_batch(&[best.clone()])[0], best_waste);
+}
+
+#[test]
+fn service_is_shared_across_threads() {
+    let Some(svc) = service() else { return };
+    let hist = lognormal_hist(518.0, 0.126, 5000, 45);
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let svc = svc.clone();
+            let hist = hist.clone();
+            std::thread::spawn(move || {
+                let backend = XlaWasteBackend::new(&svc, &hist);
+                backend.eval_batch(&[vec![304, 600, 944]])[0]
+            })
+        })
+        .collect();
+    let results: Vec<u64> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    assert!(results.windows(2).all(|w| w[0] == w[1]));
+}

@@ -1,0 +1,166 @@
+//! Full network-path integration: TCP server + client library +
+//! optimizer control plane (`slabs optimize` / `slabs reconfigure` /
+//! `stats slabs` over the wire).
+
+use slabforge::client::Client;
+use slabforge::config::settings::{Algorithm, Backend, OptimizerSettings};
+use slabforge::optimizer::autotune::AutoTuner;
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::server::{Server, ServerHandle};
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use slabforge::util::rng::Pcg64;
+use slabforge::workload::gen::value_len_for_total;
+use std::sync::Arc;
+
+fn full_server(min_samples: u64) -> (ServerHandle, Arc<ShardedStore>) {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+    let tuner = AutoTuner::new(
+        store.clone(),
+        collector,
+        OptimizerSettings {
+            enabled: true,
+            min_samples,
+            min_improvement: 0.05,
+            algorithm: Algorithm::SteepestDescent,
+            backend: Backend::Rust,
+            ..Default::default()
+        },
+        PAGE_SIZE,
+    )
+    .unwrap();
+    let handle = Server::with_control(store.clone(), tuner)
+        .start("127.0.0.1:0")
+        .unwrap();
+    (handle, store)
+}
+
+fn drive_sets(c: &mut Client, n: usize, seed: u64) {
+    let mut rng = Pcg64::new(seed);
+    for i in 0..n {
+        let total = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16000);
+        let vlen = value_len_for_total(total, true).unwrap();
+        c.set_noreply(&format!("k{i:08}"), &vec![b'x'; vlen], 0, 0)
+            .unwrap();
+    }
+    // flush pipeline
+    let _ = c.version().unwrap();
+}
+
+#[test]
+fn optimize_over_the_wire_reduces_stats_slabs_waste() {
+    let (handle, _store) = full_server(1000);
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    drive_sets(&mut c, 20_000, 7);
+
+    let before = c.stats(None).unwrap();
+    let waste_before: u64 = before["bytes_wasted"].parse().unwrap();
+    assert!(waste_before > 0);
+
+    let msg = c.slabs_optimize().unwrap();
+    assert!(msg.starts_with("APPLIED"), "{msg}");
+
+    let after = c.stats(None).unwrap();
+    let waste_after: u64 = after["bytes_wasted"].parse().unwrap();
+    assert!(
+        (waste_after as f64) < waste_before as f64 * 0.75,
+        "waste {waste_before} -> {waste_after}"
+    );
+    assert_eq!(after["slab_reconfigures"], "2"); // 2 shards
+
+    // data survived the live migration
+    assert!(c.get("k00000000").unwrap().is_some());
+    assert!(c.get("k00019999").unwrap().is_some());
+    handle.shutdown();
+}
+
+#[test]
+fn manual_reconfigure_over_the_wire() {
+    let (handle, store) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.set("a", &vec![b'x'; 400], 0, 0).unwrap();
+
+    let msg = c.slabs_reconfigure(&[512, 1024, 8192]).unwrap();
+    assert!(msg.starts_with("RECONFIGURED items_moved=1"), "{msg}");
+    assert_eq!(store.chunk_sizes(), vec![512, 1024, 8192, PAGE_SIZE]);
+    assert_eq!(c.get("a").unwrap().unwrap().value.len(), 400);
+
+    // invalid sizes rejected, store untouched
+    let err = c.slabs_reconfigure(&[100, 50]).unwrap_err();
+    assert!(format!("{err}").contains("SERVER_ERROR"), "{err}");
+    assert_eq!(store.chunk_sizes(), vec![512, 1024, 8192, PAGE_SIZE]);
+    handle.shutdown();
+}
+
+#[test]
+fn stats_sizes_reflects_learned_histogram() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    // item total = 48+8+1+343+2 = 402 -> sizes bucket 416 (13*32)
+    c.set("k", &vec![b'x'; 343], 0, 0).unwrap();
+    let sizes = c.stats(Some("sizes")).unwrap();
+    assert_eq!(sizes.get("416").map(String::as_str), Some("1"), "{sizes:?}");
+    handle.shutdown();
+}
+
+#[test]
+fn not_enough_data_reported_over_wire() {
+    let (handle, _) = full_server(1_000_000);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.set("k", b"v", 0, 0).unwrap();
+    let msg = c.slabs_optimize().unwrap();
+    assert!(msg.starts_with("NOT_ENOUGH_DATA"), "{msg}");
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_traffic_during_optimization() {
+    let (handle, _) = full_server(500);
+    let addr = handle.addr();
+
+    let mut seeder = Client::connect(addr).unwrap();
+    drive_sets(&mut seeder, 5_000, 9);
+
+    // writers keep writing while an optimize runs
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let mut rng = Pcg64::new(100 + t);
+                for i in 0..2000 {
+                    let total = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16000);
+                    let vlen = value_len_for_total(total, true).unwrap();
+                    c.set(&format!("w{t}-{i}"), &vec![b'y'; vlen], 0, 0).unwrap();
+                }
+            })
+        })
+        .collect();
+    let mut admin = Client::connect(addr).unwrap();
+    let msg = admin.slabs_optimize().unwrap();
+    assert!(
+        msg.starts_with("APPLIED") || msg.starts_with("BELOW_THRESHOLD"),
+        "{msg}"
+    );
+    for w in writers {
+        w.join().unwrap();
+    }
+    // server still consistent
+    let mut c = Client::connect(addr).unwrap();
+    assert_eq!(c.get("w0-1999").unwrap().unwrap().value[0], b'y');
+    handle.shutdown();
+}

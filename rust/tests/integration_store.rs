@@ -1,0 +1,230 @@
+//! Whole-store integration: workload generator → sharded store →
+//! optimizer → live reconfiguration, exercising the full in-process
+//! stack the way `examples/live_retune.rs` does over TCP.
+
+use slabforge::config::settings::Algorithm;
+use slabforge::optimizer::collector::SizeCollector;
+use slabforge::optimizer::engine::{optimize, OptimizerParams, RustBackend};
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use slabforge::workload::spec::SizeDistribution;
+use slabforge::workload::{Op, WorkloadGen, WorkloadSpec};
+use std::sync::Arc;
+
+fn store(mem: usize, shards: usize) -> Arc<ShardedStore> {
+    Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            mem,
+            true,
+            shards,
+            Clock::System,
+        )
+        .unwrap(),
+    )
+}
+
+fn drive(store: &ShardedStore, spec: WorkloadSpec) -> (u64, u64) {
+    let gen = WorkloadGen::new(spec, true);
+    let (mut sets, mut gets) = (0u64, 0u64);
+    for op in gen {
+        match op {
+            Op::Set { key, value_len } => {
+                // OutOfMemory is legal under pressure (memcached returns
+                // SERVER_ERROR when a class has no page and no victims)
+                match store.set(key.as_bytes(), &vec![b'v'; value_len], 0, 0) {
+                    Ok(()) | Err(slabforge::store::store::StoreError::OutOfMemory) => {}
+                    Err(e) => panic!("set failed: {e}"),
+                }
+                sets += 1;
+            }
+            Op::Get { key } => {
+                store.get(key.as_bytes());
+                gets += 1;
+            }
+            Op::Delete { key } => {
+                store.delete(key.as_bytes());
+            }
+        }
+    }
+    (sets, gets)
+}
+
+fn t1_spec(items: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        distribution: SizeDistribution::LogNormal {
+            median: 518.0,
+            sigma_ln: 0.126,
+        },
+        items,
+        get_fraction: 0.0,
+        key_space: items,
+        zipf_s: 0.0,
+        min_size: 70,
+        max_size: 16384,
+        seed: 101,
+    }
+}
+
+#[test]
+fn paper_t1_pipeline_insert_learn_reconfigure() {
+    let store = store(128 << 20, 4);
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+
+    let (sets, _) = drive(&store, t1_spec(50_000));
+    assert_eq!(sets, 50_000);
+    assert_eq!(collector.total(), 50_000);
+
+    let slabs_before = store.slab_stats();
+    // the paper's §1 claim: ~10 % waste on log-normal traffic
+    let frac = slabs_before.hole_fraction();
+    assert!(
+        (0.05..0.20).contains(&frac),
+        "default-config hole fraction {frac}"
+    );
+
+    // learn + apply
+    let hist = collector.snapshot();
+    let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+    let report = optimize(
+        &backend,
+        &hist,
+        &store.chunk_sizes(),
+        &OptimizerParams {
+            algorithm: Algorithm::SteepestDescent,
+            ..Default::default()
+        },
+    );
+    assert!(report.recovery() > 0.3, "recovery {}", report.recovery());
+
+    let sizes: Vec<usize> = report.new_config.iter().map(|&c| c as usize).collect();
+    let migs = store
+        .reconfigure(ChunkSizePolicy::Explicit(sizes))
+        .unwrap();
+    assert_eq!(migs.iter().map(|m| m.items_dropped).sum::<usize>(), 0);
+
+    let slabs_after = store.slab_stats();
+    let live_recovery =
+        1.0 - slabs_after.hole_bytes as f64 / slabs_before.hole_bytes as f64;
+    // live migration must realize (approximately) the predicted savings
+    assert!(
+        (live_recovery - report.recovery()).abs() < 0.05,
+        "predicted {} vs live {live_recovery}",
+        report.recovery()
+    );
+
+    // all keys still readable with intact values
+    for i in (0..50_000).step_by(4999) {
+        let key = format!("k{i:08}");
+        assert!(store.get(key.as_bytes()).is_some(), "lost {key}");
+    }
+}
+
+#[test]
+fn mixed_workload_with_gets_after_reconfigure() {
+    let store = store(64 << 20, 2);
+    let spec = WorkloadSpec {
+        get_fraction: 0.5,
+        zipf_s: 0.99,
+        ..t1_spec(20_000)
+    };
+    drive(&store, spec);
+    let stats = store.stats();
+    assert!(stats.get_hits > 0, "zipf gets should hit");
+    // reconfigure mid-life and keep serving
+    store
+        .reconfigure(ChunkSizePolicy::Explicit(vec![480, 520, 560, 620, 720, 950]))
+        .unwrap();
+    let spec2 = WorkloadSpec {
+        get_fraction: 0.9,
+        seed: 202,
+        ..t1_spec(5_000)
+    };
+    drive(&store, spec2);
+    let stats2 = store.stats();
+    assert!(stats2.get_hits > stats.get_hits);
+}
+
+fn small_page_store(mem: usize, shards: usize) -> Arc<ShardedStore> {
+    // 64 KiB pages: a tight budget still leaves every engaged class a
+    // page (with 1 MiB pages and ~2 pages per shard, a fresh class has
+    // no page and nothing to evict — memcached 1.4 semantics, which we
+    // reproduce — so pressure tests use smaller pages)
+    Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            64 << 10,
+            mem,
+            true,
+            shards,
+            Clock::System,
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn eviction_pressure_with_undersized_cache() {
+    // 4 MiB cache, ~518-byte items: capacity ≈ 8k items; we insert 40k
+    let store = small_page_store(4 << 20, 2);
+    drive(&store, t1_spec(40_000));
+    let stats = store.stats();
+    assert!(stats.evictions > 10_000, "evictions {}", stats.evictions);
+    // memory stays within budget
+    let slabs = store.slab_stats();
+    assert!(slabs.pages_allocated <= slabs.page_budget);
+    // most recent keys survive
+    assert!(store.get(b"k00039999").is_some());
+}
+
+#[test]
+fn reconfigure_under_eviction_pressure_drops_nothing_vital() {
+    let store = small_page_store(4 << 20, 1);
+    drive(&store, t1_spec(20_000));
+    let live_before = store.len();
+    let migs = store
+        .reconfigure(ChunkSizePolicy::Explicit(vec![520, 620, 950]))
+        .unwrap();
+    let moved: usize = migs.iter().map(|m| m.items_moved).sum();
+    let dropped: usize = migs.iter().map(|m| m.items_dropped).sum();
+    assert_eq!(moved + dropped, live_before);
+    // tighter packing should not need to drop more than a sliver
+    assert!(
+        dropped * 20 <= live_before,
+        "dropped {dropped} of {live_before}"
+    );
+}
+
+#[test]
+fn flush_then_relearn_from_new_pattern() {
+    let store = store(64 << 20, 2);
+    let collector = Arc::new(SizeCollector::default());
+    store.set_observer(collector.clone());
+
+    drive(&store, t1_spec(10_000));
+    store.flush_all();
+    collector.reset();
+    assert_eq!(store.len(), 0);
+
+    // new pattern: fixed-size items (§6.1 best case)
+    let spec = WorkloadSpec {
+        distribution: SizeDistribution::Fixed { size: 777 },
+        ..t1_spec(5_000)
+    };
+    drive(&store, spec);
+    let hist = collector.snapshot();
+    assert_eq!(hist.distinct_sizes(), 1);
+    let backend = RustBackend::new(WasteMap::from_histogram(&hist));
+    let report = optimize(
+        &backend,
+        &hist,
+        &store.chunk_sizes(),
+        &OptimizerParams::default(),
+    );
+    assert_eq!(report.new_waste, 0, "single size -> exact fit -> zero waste");
+}

@@ -1,0 +1,319 @@
+//! Property-based invariant tests over the core subsystems, using the
+//! in-house `testutil` harness (proptest is not vendored offline).
+//! Each property runs many seeded random cases; failures print the
+//! reproducing seed.
+
+use slabforge::optimizer::dp::{brute_force_optimal, dp_optimal};
+use slabforge::optimizer::hillclimb::{paper_hill_climb, HillClimbParams};
+use slabforge::optimizer::steepest::{steepest_descent, SteepestParams};
+use slabforge::optimizer::engine::{RustBackend, WasteBackend};
+use slabforge::optimizer::waste::WasteMap;
+use slabforge::protocol::parse::parse_command;
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::{SlabAllocator, SlabError};
+use slabforge::store::store::{Clock, KvStore};
+use slabforge::testutil::{check, gen};
+use slabforge::util::rng::Pcg64;
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------- allocator
+
+#[test]
+fn prop_allocator_accounting_balances() {
+    check("allocator accounting", 40, |rng| {
+        let mut a = SlabAllocator::new(&ChunkSizePolicy::default(), 1 << 20, 32 << 20).unwrap();
+        let mut live: Vec<(slabforge::slab::ChunkHandle, usize)> = Vec::new();
+        let mut requested = 0u64;
+        for _ in 0..500 {
+            if live.is_empty() || rng.chance(0.6) {
+                let size = 50 + rng.gen_range(8000) as usize;
+                match a.alloc(size) {
+                    Ok(h) => {
+                        live.push((h, size));
+                        requested += size as u64;
+                    }
+                    Err(SlabError::NeedEviction { .. }) => {}
+                    Err(e) => panic!("unexpected {e}"),
+                }
+            } else {
+                let i = rng.gen_range(live.len() as u64) as usize;
+                let (h, size) = live.swap_remove(i);
+                a.free(h, size);
+                requested -= size as u64;
+            }
+        }
+        let st = a.stats();
+        assert_eq!(st.requested_bytes, requested, "requested mismatch");
+        let used: usize = st.per_class.iter().map(|c| c.used_chunks).sum();
+        assert_eq!(used, live.len(), "live chunk count mismatch");
+        assert_eq!(
+            st.allocated_bytes - st.requested_bytes,
+            st.hole_bytes,
+            "hole identity"
+        );
+        // every live handle's chunk covers its item
+        for (h, size) in &live {
+            assert!(a.chunk_size_of(h.class) >= *size);
+        }
+    });
+}
+
+#[test]
+fn prop_class_selection_is_smallest_covering() {
+    check("class selection", 30, |rng| {
+        let n = 2 + rng.gen_range(20) as usize;
+        let sizes = gen::ascending_sizes(rng, n, 96, 500_000)
+            .into_iter()
+            .map(|s| (s as usize + 7) & !7)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect::<Vec<_>>();
+        let a = SlabAllocator::new(
+            &ChunkSizePolicy::Explicit(sizes.clone()),
+            1 << 20,
+            1 << 20,
+        )
+        .unwrap();
+        for _ in 0..100 {
+            let want = 1 + rng.gen_range(1 << 20) as usize;
+            match a.class_for_size(want) {
+                Some(class) => {
+                    let chunk = a.chunk_size_of(class);
+                    assert!(chunk >= want);
+                    // no smaller class also covers it
+                    if class > 0 {
+                        assert!(a.chunk_size_of(class - 1) < want);
+                    }
+                }
+                None => assert!(want > a.max_item_size()),
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------------- waste
+
+#[test]
+fn prop_waste_fast_path_matches_naive() {
+    check("waste fast == naive", 60, |rng| {
+        let n = 1 + rng.gen_range(100) as usize;
+        let pairs = gen::histogram_pairs(rng, n, 20_000, 10_000);
+        let map = WasteMap::from_pairs(pairs.iter().copied());
+        let k = 1 + rng.gen_range(10) as usize;
+        let cfg: Vec<u32> = (0..k).map(|_| 1 + rng.gen_range(25_000) as u32).collect();
+        assert_eq!(map.waste_of(&cfg), map.waste_of_naive(&cfg));
+    });
+}
+
+#[test]
+fn prop_waste_monotone_in_classes() {
+    check("adding a class never hurts", 40, |rng| {
+        let pairs = gen::histogram_pairs(rng, 50, 10_000, 1000);
+        let map = WasteMap::from_pairs(pairs.iter().copied());
+        let cfg: Vec<u32> = (0..4).map(|_| 1 + rng.gen_range(12_000) as u32).collect();
+        let mut more = cfg.clone();
+        more.push(1 + rng.gen_range(12_000) as u32);
+        assert!(map.waste_of(&more) <= map.waste_of(&cfg));
+    });
+}
+
+// ---------------------------------------------------------------- optimizer
+
+#[test]
+fn prop_dp_matches_brute_force() {
+    check("dp == brute force", 25, |rng| {
+        let n = 3 + rng.gen_range(8) as usize;
+        let pairs = gen::histogram_pairs(rng, n, 3000, 100);
+        let map = WasteMap::from_pairs(pairs.iter().copied());
+        let k = 1 + rng.gen_range(n.min(4) as u64) as usize;
+        let dp = dp_optimal(&map, k);
+        let (_, bf_waste) = brute_force_optimal(&map, k);
+        assert_eq!(dp.waste, bf_waste, "k={k} pairs={pairs:?}");
+    });
+}
+
+#[test]
+fn prop_greedy_never_below_dp_bound() {
+    check("dp <= greedy", 15, |rng| {
+        let pairs = gen::histogram_pairs(rng, 60, 8000, 500);
+        let map = WasteMap::from_pairs(pairs.iter().copied());
+        let backend = RustBackend::new(WasteMap::from_pairs(pairs.iter().copied()));
+        let max = pairs.iter().map(|&(s, _)| s).max().unwrap();
+        let full = vec![96u32, max / 2, max, max + 500];
+        let span = 0..3usize;
+
+        let dp = dp_optimal(&map, 4).waste; // 4 free classes >= greedy's 3+suffix
+        let hc = paper_hill_climb(
+            &backend,
+            &full,
+            span.clone(),
+            &HillClimbParams {
+                max_failures: 200,
+                ..Default::default()
+            },
+        );
+        let st = steepest_descent(&backend, &full, span, &SteepestParams::default());
+        assert!(dp <= backend.eval_one(&hc.config), "dp bound vs hillclimb");
+        assert!(dp <= backend.eval_one(&st.config), "dp bound vs steepest");
+    });
+}
+
+#[test]
+fn prop_optimizer_outputs_valid_ascending_configs() {
+    check("optimizer output validity", 20, |rng| {
+        let pairs = gen::histogram_pairs(rng, 40, 5000, 300);
+        let backend = RustBackend::new(WasteMap::from_pairs(pairs.iter().copied()));
+        let full: Vec<u32> = slabforge::slab::geometry::memcached_default_sizes()
+            .iter()
+            .map(|&c| c as u32)
+            .collect();
+        let hi = full.len().min(12);
+        let out = steepest_descent(&backend, &full, 2..hi, &SteepestParams::default());
+        assert!(
+            out.config.windows(2).all(|w| w[0] < w[1]),
+            "not ascending: {:?}",
+            out.config
+        );
+        assert_eq!(out.config.len(), full.len());
+    });
+}
+
+// ------------------------------------------------------------------- store
+
+#[test]
+fn prop_store_matches_model_hashmap() {
+    check("store == model", 12, |rng| {
+        let mut store = KvStore::new(
+            ChunkSizePolicy::default(),
+            1 << 20,
+            64 << 20,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        let mut model: HashMap<Vec<u8>, Vec<u8>> = HashMap::new();
+        for _ in 0..400 {
+            let key = gen::key(rng, 12);
+            match rng.gen_range(4) {
+                0 | 1 => {
+                    let vlen = rng.gen_range(2000) as usize;
+                    let mut value = vec![0u8; vlen];
+                    for b in value.iter_mut() {
+                        *b = rng.gen_range(256) as u8;
+                    }
+                    store.set(&key, &value, 0, 0).unwrap();
+                    model.insert(key, value);
+                }
+                2 => {
+                    let got = store.get(&key).map(|v| v.value);
+                    assert_eq!(got, model.get(&key).cloned(), "get {key:?}");
+                }
+                _ => {
+                    let was = store.delete(&key);
+                    assert_eq!(was, model.remove(&key).is_some(), "delete {key:?}");
+                }
+            }
+        }
+        assert_eq!(store.len(), model.len());
+        // final sweep
+        for (k, v) in &model {
+            assert_eq!(store.get(k).unwrap().value, *v);
+        }
+    });
+}
+
+#[test]
+fn prop_reconfigure_preserves_model() {
+    check("reconfigure preserves data", 8, |rng| {
+        let mut store = KvStore::new(
+            ChunkSizePolicy::default(),
+            1 << 20,
+            64 << 20,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        let mut model: HashMap<Vec<u8>, usize> = HashMap::new();
+        for i in 0..300u32 {
+            let key = format!("key-{i}").into_bytes();
+            let vlen = 1 + rng.gen_range(3000) as usize;
+            store.set(&key, &vec![b'p'; vlen], 0, 0).unwrap();
+            model.insert(key, vlen);
+        }
+        // random (valid) new config
+        let sizes = gen::ascending_sizes(rng, 5, 96, 8000)
+            .into_iter()
+            .map(|s| s as usize)
+            .collect::<Vec<_>>();
+        let report = store.reconfigure(ChunkSizePolicy::Explicit(sizes)).unwrap();
+        assert_eq!(report.items_dropped, 0, "64 MiB is plenty");
+        for (k, vlen) in &model {
+            assert_eq!(store.get(k).unwrap().value.len(), *vlen);
+        }
+    });
+}
+
+// ---------------------------------------------------------------- protocol
+
+#[test]
+fn prop_parser_never_panics_on_garbage() {
+    check("parser total", 50, |rng| {
+        let len = rng.gen_range(200) as usize;
+        let line: Vec<u8> = (0..len)
+            .map(|_| {
+                // bias toward printable + protocol-ish bytes
+                match rng.gen_range(4) {
+                    0 => b' ',
+                    1 => rng.gen_range(256) as u8,
+                    _ => 33 + rng.gen_range(94) as u8,
+                }
+            })
+            .collect();
+        let _ = parse_command(&line); // must not panic
+    });
+}
+
+#[test]
+fn prop_parser_roundtrips_valid_set_lines() {
+    check("parser roundtrip", 30, |rng| {
+        let key = String::from_utf8(gen::key(rng, 30)).unwrap();
+        let flags = rng.gen_range(1 << 16) as u32;
+        let exp = rng.gen_range(1000) as u32;
+        let n = rng.gen_range(10_000) as usize;
+        let line = format!("set {key} {flags} {exp} {n}");
+        match parse_command(line.as_bytes()).unwrap() {
+            slabforge::protocol::Command::Store {
+                key: k,
+                flags: f,
+                exptime: e,
+                nbytes,
+                ..
+            } => {
+                assert_eq!(k, key.as_bytes());
+                assert_eq!(f, flags);
+                assert_eq!(e, exp);
+                assert_eq!(nbytes, n);
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+// ------------------------------------------------------------ rng sanity
+
+#[test]
+fn prop_rng_streams_independent() {
+    check("rng independence", 10, |rng| {
+        let s1 = rng.next_u64();
+        let s2 = s1.wrapping_add(1);
+        let a: Vec<u64> = {
+            let mut r = Pcg64::new(s1);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::new(s2);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b, "adjacent seeds must diverge");
+    });
+}
