@@ -7,7 +7,7 @@
 //! cargo bench --bench bench_server
 //! ```
 
-use slabforge::benchkit::{bench, table, BenchOpts, Summary};
+use slabforge::benchkit::{bench, table, write_json, BenchOpts, Summary};
 use slabforge::client::Client;
 use slabforge::server::{Server, ServerHandle};
 use slabforge::slab::policy::ChunkSizePolicy;
@@ -97,6 +97,54 @@ fn main() {
         human_duration(lat[lat.len() * 99 / 100]),
     );
 
+    // ---- deeply pipelined gets --------------------------------------------
+    // many get lines per socket write: exercises the cursor receive
+    // buffer (no per-command memmove) and the zero-copy response path
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        const DEPTH: usize = 64;
+        let mut resp = vec![0u8; 256 * 1024];
+        rows.push(bench(
+            "tcp get pipeline x64",
+            &BenchOpts {
+                warmup: 1,
+                iters: 5,
+                units_per_iter: (N_GET / DEPTH * DEPTH) as f64,
+            },
+            || {
+                let mut rng = Pcg64::new(6);
+                let mut req = Vec::with_capacity(DEPTH * 24);
+                for _ in 0..N_GET / DEPTH {
+                    req.clear();
+                    for _ in 0..DEPTH {
+                        req.extend_from_slice(
+                            format!("get k{:08}\r\n", rng.gen_range(N_SET as u64)).as_bytes(),
+                        );
+                    }
+                    s.write_all(&req).unwrap();
+                    // drain until all DEPTH responses ended; count the
+                    // "END\r\n" markers with a 4-byte chunk overlap
+                    let mut ends = 0usize;
+                    let mut carry = [0u8; 4];
+                    let mut carry_len = 0usize;
+                    while ends < DEPTH {
+                        let n = s.read(&mut resp).unwrap();
+                        assert!(n > 0, "server closed mid-pipeline");
+                        let mut window = Vec::with_capacity(carry_len + n);
+                        window.extend_from_slice(&carry[..carry_len]);
+                        window.extend_from_slice(&resp[..n]);
+                        ends += window.windows(5).filter(|w| *w == b"END\r\n").count();
+                        let keep = window.len().min(4);
+                        carry[..keep].copy_from_slice(&window[window.len() - keep..]);
+                        carry_len = keep;
+                    }
+                }
+            },
+        ));
+    }
+
     // ---- multi-get batches ------------------------------------------------
     rows.push(bench(
         "tcp multi-get x16",
@@ -155,5 +203,9 @@ fn main() {
         store.len()
     );
     println!("{}", table("TCP serving (loopback)", &rows));
+    match write_json("BENCH_server.json", "TCP serving (loopback)", &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_server.json: {e}"),
+    }
     handle.shutdown();
 }

@@ -106,6 +106,42 @@ pub fn table(title: &str, rows: &[Summary]) -> String {
     out
 }
 
+/// Write bench summaries as a `BENCH_*.json` artifact — stable keys so
+/// successive PRs can diff throughput (`scripts/bench_server_smoke.sh`
+/// consumes this).
+pub fn write_json(
+    path: impl Into<std::path::PathBuf>,
+    title: &str,
+    rows: &[Summary],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = path.into();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"title\": {title:?},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"units_per_iter\": {}, \"ops_per_sec\": {:.1}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean.as_nanos(),
+            r.p50.as_nanos(),
+            r.p99.as_nanos(),
+            r.units_per_iter,
+            r.rate(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&path, s)?;
+    Ok(path)
+}
+
 /// Simple CSV writer for results/ artifacts (figures, sweeps).
 pub struct CsvWriter {
     path: std::path::PathBuf,
@@ -167,6 +203,30 @@ mod tests {
         let t = table("T", &[s]);
         assert!(t.contains("### T"));
         assert!(t.contains("| x |"));
+    }
+
+    #[test]
+    fn json_writer_parses_back() {
+        let dir = std::env::temp_dir().join(format!("slabforge-json-{}", std::process::id()));
+        let rows = vec![
+            Summary::from_samples("a bench", vec![Duration::from_millis(2)], 100.0),
+            Summary::from_samples("b", vec![Duration::from_micros(5)], 1.0),
+        ];
+        let path = write_json(dir.join("BENCH_t.json"), "T", &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("title").and_then(|t| t.as_str()), Some("T"));
+        let parsed = doc.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(
+            parsed[0].get("name").and_then(|n| n.as_str()),
+            Some("a bench")
+        );
+        assert_eq!(
+            parsed[0].get("mean_ns").and_then(|m| m.as_usize()),
+            Some(2_000_000)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -152,6 +152,34 @@ fn is_noreply(tok: Option<&&[u8]>) -> bool {
     tok.is_some_and(|t| *t == b"noreply")
 }
 
+/// Fast-path split of a `get`/`gets` line: returns `(with_cas,
+/// keys_tail)` without tokenizing or allocating, so the connection
+/// layer can serve retrieval — by far the dominant verb — straight
+/// from its receive buffer. Any other verb, and a keyless `get`,
+/// return `None` and fall through to [`parse_command`] (which owns the
+/// error strings).
+#[inline]
+pub fn split_get(line: &[u8]) -> Option<(bool, &[u8])> {
+    let (with_cas, rest) = if let Some(r) = line.strip_prefix(b"get ") {
+        (false, r)
+    } else if let Some(r) = line.strip_prefix(b"gets ") {
+        (true, r)
+    } else {
+        return None;
+    };
+    if rest.iter().all(|&b| b == b' ') {
+        return None; // "get " with no keys -> CLIENT_ERROR via parse_command
+    }
+    Some((with_cas, rest))
+}
+
+/// Iterate the keys of a [`split_get`] tail (space-separated,
+/// empties skipped), borrowing straight from the receive buffer.
+#[inline]
+pub fn get_keys(tail: &[u8]) -> impl Iterator<Item = &[u8]> {
+    tail.split(|&b| b == b' ').filter(|t| !t.is_empty())
+}
+
 /// Parse one command line (without the trailing `\r\n`).
 pub fn parse_command(line: &[u8]) -> Result<Command, ParseError> {
     let toks = tokens(line);
@@ -398,6 +426,27 @@ mod tests {
             parse_command(b"set k 0 0 notanumber"),
             Err(ParseError::Client(_))
         ));
+    }
+
+    #[test]
+    fn split_get_fast_path() {
+        let (cas, tail) = split_get(b"get foo").unwrap();
+        assert!(!cas);
+        assert_eq!(get_keys(tail).collect::<Vec<_>>(), vec![b"foo".as_slice()]);
+
+        let (cas, tail) = split_get(b"gets a  b c").unwrap();
+        assert!(cas);
+        assert_eq!(
+            get_keys(tail).collect::<Vec<_>>(),
+            vec![b"a".as_slice(), b"b".as_slice(), b"c".as_slice()]
+        );
+
+        // non-get verbs and keyless gets fall through to parse_command
+        assert!(split_get(b"set k 0 0 1").is_none());
+        assert!(split_get(b"get").is_none());
+        assert!(split_get(b"get   ").is_none());
+        assert!(split_get(b"getter x").is_none());
+        assert!(split_get(b"").is_none());
     }
 
     #[test]

@@ -1,19 +1,44 @@
 //! Response rendering: append protocol lines into the connection's
-//! write buffer (no intermediate allocations on the hot path).
+//! write buffer. The hit path (`value_ref`) is allocation- and
+//! `fmt`-free: header integers go through [`push_u64`] and the value
+//! bytes are copied once, straight from the slab chunk the
+//! [`ValueRef`] borrows.
 
-use crate::store::store::Value;
+use crate::store::store::{Value, ValueRef};
+use crate::util::fmt::{push_u64, push_usize};
 
-pub fn value(out: &mut Vec<u8>, key: &[u8], v: &Value, with_cas: bool) {
+/// `VALUE <key> <flags> <bytes>[ <cas>]\r\n<data>\r\n` from a borrowed
+/// value — the zero-copy get path's encoder, run under the shard lock.
+pub fn value_ref(out: &mut Vec<u8>, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
+    // header ~= "VALUE " + key + 3-4 integers + separators; 48 covers
+    // the worst case (u32 + usize + u64 digits + spaces + CRLFs)
+    out.reserve(key.len() + v.data.len() + 48);
     out.extend_from_slice(b"VALUE ");
     out.extend_from_slice(key);
+    out.push(b' ');
+    push_u64(out, v.flags as u64);
+    out.push(b' ');
+    push_usize(out, v.data.len());
     if with_cas {
-        append_fmt(out, format_args!(" {} {} {}", v.flags, v.value.len(), v.cas));
-    } else {
-        append_fmt(out, format_args!(" {} {}", v.flags, v.value.len()));
+        out.push(b' ');
+        push_u64(out, v.cas);
     }
     out.extend_from_slice(b"\r\n");
-    out.extend_from_slice(&v.value);
+    out.extend_from_slice(v.data);
     out.extend_from_slice(b"\r\n");
+}
+
+pub fn value(out: &mut Vec<u8>, key: &[u8], v: &Value, with_cas: bool) {
+    value_ref(
+        out,
+        key,
+        ValueRef {
+            data: &v.value,
+            flags: v.flags,
+            cas: v.cas,
+        },
+        with_cas,
+    );
 }
 
 pub fn end(out: &mut Vec<u8>) {
@@ -49,7 +74,7 @@ pub fn ok(out: &mut Vec<u8>) {
 }
 
 pub fn number(out: &mut Vec<u8>, n: u64) {
-    append_fmt(out, format_args!("{n}"));
+    push_u64(out, n);
     out.extend_from_slice(b"\r\n");
 }
 
@@ -112,6 +137,33 @@ mod tests {
         assert_eq!(
             out,
             b"STORED\r\nEND\r\n15\r\nSTAT evictions 3\r\nCLIENT_ERROR oops\r\n"
+        );
+    }
+
+    #[test]
+    fn value_ref_matches_value() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let v = Value {
+            value: b"payload".to_vec(),
+            flags: u32::MAX,
+            cas: u64::MAX,
+        };
+        value(&mut a, b"k", &v, true);
+        value_ref(
+            &mut b,
+            b"k",
+            ValueRef {
+                data: b"payload",
+                flags: u32::MAX,
+                cas: u64::MAX,
+            },
+            true,
+        );
+        assert_eq!(a, b);
+        assert_eq!(
+            String::from_utf8_lossy(&a),
+            format!("VALUE k {} 7 {}\r\npayload\r\n", u32::MAX, u64::MAX)
         );
     }
 

@@ -1,8 +1,21 @@
 //! Per-connection protocol state machine, transport-agnostic: bytes in,
 //! bytes out. The same machine drives real sockets (`server::tcp`) and
 //! in-memory tests.
+//!
+//! ## Hot-path design
+//!
+//! The receive side is a cursor buffer ([`RecvBuf`]): completed
+//! commands advance a cursor (O(1)) instead of `Vec::drain`-shifting
+//! the buffer per command, and the unread tail is compacted at most
+//! once per socket read. Command lines are parsed **in place** — the
+//! `get`/`gets` fast path never copies the line or its keys, and
+//! storage-command data blocks flow straight from the receive buffer
+//! into the slab chunk (one copy). Responses are encoded directly into
+//! the connection's output buffer under the shard lock
+//! (`ShardedStore::get_with` / `get_batch`), so a get hit performs no
+//! heap allocation at all: socket → hash probe → chunk-to-buffer copy.
 
-use crate::protocol::parse::{parse_command, Command, ParseError, StoreOp};
+use crate::protocol::parse::{get_keys, parse_command, split_get, Command, ParseError, StoreOp};
 use crate::protocol::{response, stats};
 use crate::store::sharded::ShardedStore;
 use crate::store::store::{CasResult, StoreError};
@@ -14,6 +27,17 @@ const MAX_LINE: usize = 8192;
 
 /// Hard cap on a data block (1 MiB value + slack).
 const MAX_DATA: usize = (1 << 20) + 1024;
+
+/// Multiget keys routed from the stack; longer batches pay one
+/// transient allocation for the key-slice table.
+const INLINE_KEYS: usize = 32;
+
+/// Once the reused multiget staging buffer balloons past this, shrink
+/// it back after the request (mirrors `tcp::OUT_BUF_KEEP` so one huge
+/// multiget doesn't pin its high-water memory for the connection's
+/// lifetime).
+const SCRATCH_KEEP: usize = 256 * 1024;
+const SCRATCH_STEADY: usize = 16 * 1024;
 
 /// Hook for the admin extensions; implemented by the optimizer
 /// coordinator and injected by the launcher.
@@ -44,19 +68,82 @@ impl Control for NoControl {
     }
 }
 
+/// Receive buffer with a consume cursor. Completed commands advance
+/// `pos`; the unread tail moves to the front only when fresh bytes
+/// arrive with a non-zero cursor, so an entire pipelined batch is
+/// parsed and served without a single `memmove` (the old
+/// `Vec::drain(..n)` paid an O(buffered) shift per command).
+struct RecvBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl RecvBuf {
+    fn new() -> Self {
+        RecvBuf {
+            buf: Vec::with_capacity(4096),
+            pos: 0,
+        }
+    }
+
+    /// Unconsumed bytes.
+    #[inline]
+    fn filled(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Mark `n` unconsumed bytes as processed.
+    #[inline]
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        debug_assert!(self.pos <= self.buf.len());
+        if self.pos == self.buf.len() {
+            // cheap steady-state reset: the whole buffer was consumed
+            self.buf.clear();
+            self.pos = 0;
+        }
+    }
+
+    /// Append freshly received bytes, compacting the consumed prefix
+    /// first so offsets stay small and memory stays bounded.
+    fn extend(&mut self, data: &[u8]) {
+        if self.pos > 0 {
+            let live = self.buf.len() - self.pos;
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(live);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(data);
+    }
+}
+
 enum Phase {
     /// Waiting for a full command line.
     Line,
     /// Waiting for `len` data bytes + CRLF of a storage command.
     Data { cmd: Command, len: usize },
+    /// Swallowing the data block of a rejected storage command (the
+    /// error line is already on the wire); keeps the stream in sync
+    /// without buffering the oversized block.
+    Discard { remaining: usize },
 }
 
 /// Connection state machine.
 pub struct Conn {
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
-    buf: Vec<u8>,
+    rb: RecvBuf,
     phase: Phase,
+    /// Reused staging buffer: `noreply` sink, and out-of-order multiget
+    /// hits before they are stitched into request order.
+    scratch: Vec<u8>,
+    /// Multiget spans: (request key index, scratch start, scratch end).
+    spans: Vec<(u32, usize, usize)>,
     start: std::time::Instant,
     pub closing: bool,
 }
@@ -66,8 +153,10 @@ impl Conn {
         Conn {
             store,
             control,
-            buf: Vec::with_capacity(4096),
+            rb: RecvBuf::new(),
             phase: Phase::Line,
+            scratch: Vec::new(),
+            spans: Vec::new(),
             start: std::time::Instant::now(),
             closing: false,
         }
@@ -76,13 +165,16 @@ impl Conn {
     /// Feed received bytes; protocol responses accumulate in `out`.
     /// Returns the number of commands completed.
     pub fn on_bytes(&mut self, data: &[u8], out: &mut Vec<u8>) -> usize {
-        self.buf.extend_from_slice(data);
+        self.rb.extend(data);
         let mut completed = 0;
         loop {
+            if self.closing {
+                return completed;
+            }
             match &self.phase {
                 Phase::Line => {
-                    let Some(eol) = find_crlf(&self.buf) else {
-                        if self.buf.len() > MAX_LINE {
+                    let Some(eol) = find_crlf(self.rb.filled()) else {
+                        if self.rb.len() > MAX_LINE {
                             response::client_error(out, "line too long");
                             self.closing = true;
                         }
@@ -94,37 +186,58 @@ impl Conn {
                         self.closing = true;
                         return completed;
                     }
-                    let line: Vec<u8> = self.buf[..eol].to_vec();
-                    self.buf.drain(..eol + 2);
-                    match parse_command(&line) {
-                        Ok(cmd) => match cmd.data_len() {
-                            Some(len) if len > MAX_DATA => {
-                                // swallow the oversized block to stay in sync
-                                response::server_error(out, "object too large for cache");
-                                self.phase = Phase::Data {
-                                    cmd: Command::Quit, // placeholder; data dropped
-                                    len,
-                                };
+                    let line_total = eol + 2;
+                    let line = &self.rb.buf[self.rb.pos..self.rb.pos + eol];
+                    // Retrieval fast path: keys stay borrowed from the
+                    // receive buffer; hits stream chunk -> out.
+                    if let Some((with_cas, tail)) = split_get(line) {
+                        do_get(
+                            &self.store,
+                            &mut self.scratch,
+                            &mut self.spans,
+                            tail,
+                            with_cas,
+                            out,
+                        );
+                        self.rb.consume(line_total);
+                        completed += 1;
+                        continue;
+                    }
+                    match parse_command(line) {
+                        Ok(cmd) => {
+                            self.rb.consume(line_total);
+                            match cmd.data_len() {
+                                Some(len) if len > MAX_DATA => {
+                                    response::server_error(out, "object too large for cache");
+                                    // saturate: a client claiming ~usize::MAX
+                                    // bytes must not wrap into a tiny discard
+                                    // and smuggle its payload as commands
+                                    self.phase = Phase::Discard {
+                                        remaining: len.saturating_add(2),
+                                    };
+                                }
+                                Some(len) => {
+                                    self.phase = Phase::Data { cmd, len };
+                                }
+                                None => {
+                                    self.execute_simple(cmd, out);
+                                    completed += 1;
+                                }
                             }
-                            Some(len) => {
-                                self.phase = Phase::Data { cmd, len };
-                            }
-                            None => {
-                                self.execute(cmd, None, out);
-                                completed += 1;
-                            }
-                        },
+                        }
                         Err(ParseError::UnknownCommand) => {
+                            self.rb.consume(line_total);
                             response::error(out);
                         }
                         Err(ParseError::Client(msg)) => {
+                            self.rb.consume(line_total);
                             response::client_error(out, msg);
                         }
                     }
                 }
                 Phase::Data { len, .. } => {
                     let need = *len + 2;
-                    if self.buf.len() < need {
+                    if self.rb.len() < need {
                         return completed;
                     }
                     let Phase::Data { cmd, len } =
@@ -132,76 +245,56 @@ impl Conn {
                     else {
                         unreachable!()
                     };
-                    let ok_tail = &self.buf[len..len + 2] == b"\r\n";
-                    let data: Vec<u8> = self.buf[..len].to_vec();
-                    self.buf.drain(..need);
-                    if matches!(cmd, Command::Quit) {
-                        // oversized block swallowed above; error already sent
-                        continue;
-                    }
-                    if !ok_tail {
+                    let avail = self.rb.filled();
+                    if &avail[len..len + 2] != b"\r\n" {
+                        self.rb.consume(need);
                         response::client_error(out, "bad data chunk");
                         continue;
                     }
-                    self.execute(cmd, Some(data), out);
+                    // execute with the data block borrowed straight out
+                    // of the receive buffer: socket -> slab chunk, one copy
+                    {
+                        let data = &self.rb.buf[self.rb.pos..self.rb.pos + len];
+                        execute_store(&self.store, &mut self.scratch, cmd, data, out);
+                    }
+                    self.rb.consume(need);
                     completed += 1;
                 }
-            }
-            if self.closing {
-                return completed;
+                Phase::Discard { remaining } => {
+                    let rem = *remaining;
+                    let take = rem.min(self.rb.len());
+                    self.rb.consume(take);
+                    if take < rem {
+                        self.phase = Phase::Discard {
+                            remaining: rem - take,
+                        };
+                        return completed;
+                    }
+                    self.phase = Phase::Line;
+                }
             }
         }
     }
 
-    fn execute(&mut self, cmd: Command, data: Option<Vec<u8>>, out: &mut Vec<u8>) {
+    /// Execute a line-only (no data block) command. Storage commands go
+    /// through [`execute_store`]; `get`/`gets` normally take the
+    /// [`do_get`] fast path and only land here via [`parse_command`]
+    /// (e.g. driven directly in tests).
+    fn execute_simple(&mut self, cmd: Command, out: &mut Vec<u8>) {
         let quiet = cmd.noreply();
         // `noreply` suppresses normal responses; errors still flow in
-        // memcached, so we buffer into a scratch and drop on success.
-        let mut scratch = Vec::new();
-        let sink: &mut Vec<u8> = if quiet { &mut scratch } else { out };
+        // memcached, so we buffer into the scratch and drop on success.
+        self.scratch.clear();
+        let sink: &mut Vec<u8> = if quiet { &mut self.scratch } else { out };
         match cmd {
             Command::Get { keys, with_cas } => {
-                for key in keys {
-                    if let Some(v) = self.store.get(&key) {
-                        response::value(sink, &key, &v, with_cas);
-                    }
+                for key in &keys {
+                    self.store
+                        .get_with(key, |v| response::value_ref(sink, key, v, with_cas));
                 }
                 response::end(sink);
             }
-            Command::Store {
-                op,
-                key,
-                flags,
-                exptime,
-                cas,
-                ..
-            } => {
-                let value = data.expect("storage command carries data");
-                let outcome = match op {
-                    StoreOp::Set => self.store.set(&key, &value, flags, exptime).map(|_| true),
-                    StoreOp::Add => self.store.add(&key, &value, flags, exptime),
-                    StoreOp::Replace => self.store.replace(&key, &value, flags, exptime),
-                    StoreOp::Append => self.store.concat(&key, &value, true),
-                    StoreOp::Prepend => self.store.concat(&key, &value, false),
-                    StoreOp::Cas => match self.store.cas(&key, &value, flags, exptime, cas) {
-                        Ok(CasResult::Stored) => Ok(true),
-                        Ok(CasResult::Exists) => {
-                            response::exists(sink);
-                            return;
-                        }
-                        Ok(CasResult::NotFound) => {
-                            response::not_found(sink);
-                            return;
-                        }
-                        Err(e) => Err(e),
-                    },
-                };
-                match outcome {
-                    Ok(true) => response::stored(sink),
-                    Ok(false) => response::not_stored(sink),
-                    Err(e) => store_error(sink, &e),
-                }
-            }
+            Command::Store { .. } => unreachable!("storage commands carry a data block"),
             Command::Delete { key, .. } => {
                 if self.store.delete(&key) {
                     response::deleted(sink);
@@ -268,6 +361,130 @@ impl Conn {
     }
 }
 
+/// Serve a `get`/`gets` line straight from the shard chunks into `out`.
+///
+/// The single-key case — the dominant request shape — streams under
+/// one shard lock with no staging and no allocation. A multiget routes
+/// all keys per shard (`ShardedStore::get_batch`, each shard's lock
+/// taken once for the batch) and restores request order by staging
+/// out-of-order hits in `scratch` and stitching spans; both buffers
+/// are owned by the connection and reused across requests.
+fn do_get(
+    store: &ShardedStore,
+    scratch: &mut Vec<u8>,
+    spans: &mut Vec<(u32, usize, usize)>,
+    tail: &[u8],
+    with_cas: bool,
+    out: &mut Vec<u8>,
+) {
+    let mut iter = get_keys(tail);
+    let Some(first) = iter.next() else {
+        // split_get guarantees at least one key
+        response::end(out);
+        return;
+    };
+    let Some(second) = iter.next() else {
+        store.get_with(first, |v| response::value_ref(out, first, v, with_cas));
+        response::end(out);
+        return;
+    };
+
+    // multiget: gather the key slices (stack table for short batches)
+    let empty: &[u8] = b"";
+    let mut stack = [empty; INLINE_KEYS];
+    stack[0] = first;
+    stack[1] = second;
+    let mut n = 2usize;
+    let mut heap: Vec<&[u8]> = Vec::new();
+    for k in iter {
+        if n < INLINE_KEYS {
+            stack[n] = k;
+        } else {
+            if heap.is_empty() {
+                heap.reserve(n * 2);
+                heap.extend_from_slice(&stack[..n]);
+            }
+            heap.push(k);
+        }
+        n += 1;
+    }
+    let keys: &[&[u8]] = if heap.is_empty() { &stack[..n] } else { &heap };
+
+    scratch.clear();
+    spans.clear();
+    store.get_batch(keys, |idx, v| {
+        let s = scratch.len();
+        response::value_ref(scratch, keys[idx], v, with_cas);
+        spans.push((idx as u32, s, scratch.len()));
+    });
+    // single-shard batches (and lucky layouts) already arrive in
+    // request order — skip the sort, splice directly
+    if !spans.windows(2).all(|w| w[0].0 <= w[1].0) {
+        spans.sort_unstable_by_key(|s| s.0);
+    }
+    out.reserve(scratch.len() + 5);
+    for &(_, s, e) in spans.iter() {
+        out.extend_from_slice(&scratch[s..e]);
+    }
+    response::end(out);
+    if scratch.capacity() > SCRATCH_KEEP {
+        scratch.shrink_to(SCRATCH_STEADY);
+    }
+    if spans.capacity() > 4096 {
+        spans.shrink_to(256);
+    }
+}
+
+/// Execute a storage command whose data block just completed, with the
+/// block borrowed from the receive buffer (copied once, into the slab
+/// chunk under the shard's write lock).
+fn execute_store(
+    store: &ShardedStore,
+    scratch: &mut Vec<u8>,
+    cmd: Command,
+    data: &[u8],
+    out: &mut Vec<u8>,
+) {
+    let Command::Store {
+        op,
+        key,
+        flags,
+        exptime,
+        cas,
+        noreply,
+        ..
+    } = cmd
+    else {
+        unreachable!("only storage commands enter the data phase");
+    };
+    scratch.clear();
+    let sink: &mut Vec<u8> = if noreply { scratch } else { out };
+    let outcome = match op {
+        StoreOp::Set => store.set(&key, data, flags, exptime).map(|_| true),
+        StoreOp::Add => store.add(&key, data, flags, exptime),
+        StoreOp::Replace => store.replace(&key, data, flags, exptime),
+        StoreOp::Append => store.concat(&key, data, true),
+        StoreOp::Prepend => store.concat(&key, data, false),
+        StoreOp::Cas => match store.cas(&key, data, flags, exptime, cas) {
+            Ok(CasResult::Stored) => Ok(true),
+            Ok(CasResult::Exists) => {
+                response::exists(sink);
+                return;
+            }
+            Ok(CasResult::NotFound) => {
+                response::not_found(sink);
+                return;
+            }
+            Err(e) => Err(e),
+        },
+    };
+    match outcome {
+        Ok(true) => response::stored(sink),
+        Ok(false) => response::not_stored(sink),
+        Err(e) => store_error(sink, &e),
+    }
+}
+
 fn store_error(out: &mut Vec<u8>, e: &StoreError) {
     match e {
         StoreError::BadKey => response::client_error(out, "bad key"),
@@ -279,8 +496,19 @@ fn store_error(out: &mut Vec<u8>, e: &StoreError) {
     }
 }
 
+/// Find the first CRLF; scans for `\n` (a single-byte search the
+/// compiler vectorizes) and verifies the preceding `\r`, skipping bare
+/// newlines like the old `windows(2)` scan did.
 fn find_crlf(buf: &[u8]) -> Option<usize> {
-    buf.windows(2).position(|w| w == b"\r\n")
+    let mut from = 0;
+    while let Some(nl) = buf[from..].iter().position(|&b| b == b'\n') {
+        let i = from + nl;
+        if i > 0 && buf[i - 1] == b'\r' {
+            return Some(i - 1);
+        }
+        from = i + 1;
+    }
+    None
 }
 
 #[cfg(test)]
@@ -290,19 +518,23 @@ mod tests {
     use crate::slab::PAGE_SIZE;
     use crate::store::store::Clock;
 
-    fn conn() -> Conn {
+    fn conn_sharded(shards: usize) -> Conn {
         let store = Arc::new(
             ShardedStore::with(
                 ChunkSizePolicy::default(),
                 PAGE_SIZE,
                 16 << 20,
                 true,
-                2,
+                shards,
                 Clock::System,
             )
             .unwrap(),
         );
         Conn::new(store, Arc::new(NoControl))
+    }
+
+    fn conn() -> Conn {
+        conn_sharded(2)
     }
 
     fn run(c: &mut Conn, input: &[u8]) -> Vec<u8> {
@@ -442,5 +674,215 @@ mod tests {
         let t = out.clone();
         assert!(String::from_utf8_lossy(&t).contains("VALUE bin 0 6"));
         assert!(t.windows(6).any(|w| w == b"ab\r\ncd"));
+    }
+
+    // ------------------------------------------------ hot-path refits
+
+    /// Extract the keys of VALUE lines in on-the-wire order.
+    fn value_keys(out: &[u8]) -> Vec<String> {
+        String::from_utf8_lossy(out)
+            .lines()
+            .filter_map(|l| l.strip_prefix("VALUE ").map(|r| {
+                r.split(' ').next().unwrap().to_string()
+            }))
+            .collect()
+    }
+
+    #[test]
+    fn multiget_preserves_request_order_across_shards() {
+        let mut c = conn_sharded(8);
+        let mut setup = Vec::new();
+        for i in 0..12 {
+            setup.extend_from_slice(format!("set mk{i:02} 0 0 1\r\nx\r\n").as_bytes());
+        }
+        run(&mut c, &setup);
+        let out = run(
+            &mut c,
+            b"get mk11 mk03 mk07 mk00 mk09 mk05 mk01 mk10 mk02 mk08 mk04 mk06\r\n",
+        );
+        assert_eq!(
+            value_keys(&out),
+            vec![
+                "mk11", "mk03", "mk07", "mk00", "mk09", "mk05", "mk01", "mk10", "mk02",
+                "mk08", "mk04", "mk06"
+            ]
+        );
+        assert!(String::from_utf8_lossy(&out).ends_with("END\r\n"));
+    }
+
+    #[test]
+    fn multiget_beyond_inline_key_table() {
+        let mut c = conn_sharded(4);
+        let n = INLINE_KEYS + 9; // force the heap fallback
+        let mut setup = Vec::new();
+        for i in 0..n {
+            setup.extend_from_slice(format!("set big{i:02} 0 0 2\r\nvv\r\n").as_bytes());
+        }
+        run(&mut c, &setup);
+        let keys: Vec<String> = (0..n).map(|i| format!("big{i:02}")).collect();
+        let line = format!("get {}\r\n", keys.join(" "));
+        let out = run(&mut c, line.as_bytes());
+        assert_eq!(value_keys(&out), keys);
+    }
+
+    #[test]
+    fn oversized_data_block_discarded_and_stream_resyncs() {
+        let mut c = conn();
+        let len = MAX_DATA + 1;
+        let mut out = Vec::new();
+        c.on_bytes(format!("set huge 0 0 {len}\r\n").as_bytes(), &mut out);
+        assert!(
+            String::from_utf8_lossy(&out).contains("SERVER_ERROR object too large"),
+            "{}",
+            String::from_utf8_lossy(&out)
+        );
+        assert!(!c.closing, "connection must stay up");
+        // stream the oversized block in chunks; no extra output, no
+        // buffering of the block (the discard consumes as bytes land)
+        let chunk = vec![b'x'; 64 * 1024];
+        let mut sent = 0;
+        while sent + chunk.len() <= len {
+            let done = c.on_bytes(&chunk, &mut out);
+            assert_eq!(done, 0);
+            sent += chunk.len();
+        }
+        let mut tail = vec![b'x'; len - sent];
+        tail.extend_from_slice(b"\r\n");
+        c.on_bytes(&tail, &mut out);
+        // back in sync: the next command parses and executes
+        let done = c.on_bytes(b"set ok 0 0 2\r\nhi\r\nget ok\r\n", &mut out);
+        assert_eq!(done, 2);
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.ends_with("STORED\r\nVALUE ok 0 2\r\nhi\r\nEND\r\n"), "{t}");
+        assert_eq!(t.matches("SERVER_ERROR").count(), 1);
+    }
+
+    #[test]
+    fn oversized_discard_interleaved_with_next_command_in_one_read() {
+        let mut c = conn();
+        let len = MAX_DATA + 100;
+        let mut payload = format!("set huge 0 0 {len}\r\n").into_bytes();
+        payload.extend(std::iter::repeat(b'y').take(len));
+        payload.extend_from_slice(b"\r\nversion\r\n");
+        let out = run(&mut c, &payload);
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("SERVER_ERROR"), "{t}");
+        assert!(t.contains("VERSION"), "discard must resync mid-read: {t}");
+    }
+
+    #[test]
+    fn absurd_nbytes_cannot_smuggle_commands() {
+        // nbytes near usize::MAX must not wrap the discard length and
+        // let the "data" bytes execute as protocol commands
+        let mut c = conn();
+        let mut out = Vec::new();
+        c.on_bytes(format!("set k 0 0 {}\r\n", usize::MAX).as_bytes(), &mut out);
+        assert!(String::from_utf8_lossy(&out).contains("SERVER_ERROR"));
+        let done = c.on_bytes(b"get k\r\nversion\r\nquit\r\n", &mut out);
+        assert_eq!(done, 0, "payload bytes must be swallowed, not parsed");
+        assert!(!c.closing, "smuggled quit must not execute");
+    }
+
+    #[test]
+    fn multiget_order_preserved_with_stale_items() {
+        use std::sync::atomic::Ordering;
+        let (clock, cell) = Clock::manual(9_000_000);
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                4,
+                clock,
+            )
+            .unwrap(),
+        );
+        let mut c = Conn::new(store, Arc::new(NoControl));
+        let mut setup = Vec::new();
+        for i in 0..8 {
+            setup.extend_from_slice(format!("set sk{i} 0 0 1\r\nx\r\n").as_bytes());
+        }
+        run(&mut c, &setup);
+        // age every item past TOUCH_INTERVAL: the whole batch takes the
+        // write-retry path, whose hits arrive after read-path hits —
+        // the span sort must still restore request order on the wire
+        cell.store(9_000_000 + 120, Ordering::Relaxed);
+        let out = run(&mut c, b"get sk7 sk2 sk5 sk0 sk6 sk1 sk4 sk3\r\n");
+        assert_eq!(
+            value_keys(&out),
+            vec!["sk7", "sk2", "sk5", "sk0", "sk6", "sk1", "sk4", "sk3"]
+        );
+    }
+
+    #[test]
+    fn byte_at_a_time_equals_single_read() {
+        let script: &[u8] =
+            b"set a 0 0 3\r\nfoo\r\nget a\r\nincr a 1\r\nset n 0 0 1\r\n7\r\nincr n 3\r\nget a n\r\ndelete a\r\nbogus\r\nget a\r\nversion\r\n";
+
+        let mut whole = conn();
+        let mut out_whole = Vec::new();
+        let done_whole = whole.on_bytes(script, &mut out_whole);
+
+        let mut bytewise = conn();
+        let mut out_bytes = Vec::new();
+        let mut done_bytes = 0;
+        for &b in script {
+            done_bytes += bytewise.on_bytes(&[b], &mut out_bytes);
+        }
+
+        assert_eq!(done_whole, done_bytes);
+        // VERSION carries the crate version in both, so full equality
+        // is well-defined
+        assert_eq!(
+            String::from_utf8_lossy(&out_whole),
+            String::from_utf8_lossy(&out_bytes)
+        );
+        assert!(String::from_utf8_lossy(&out_whole).contains("CLIENT_ERROR"));
+    }
+
+    #[test]
+    fn pipelined_burst_counts_every_command() {
+        let mut c = conn();
+        let mut batch = Vec::new();
+        let n = 200;
+        for i in 0..n {
+            batch.extend_from_slice(format!("set p{i:03} 0 0 4\r\nabcd\r\n").as_bytes());
+        }
+        for i in 0..n {
+            batch.extend_from_slice(format!("get p{i:03}\r\n").as_bytes());
+        }
+        let mut out = Vec::new();
+        let done = c.on_bytes(&batch, &mut out);
+        assert_eq!(done, 2 * n);
+        let t = String::from_utf8_lossy(&out);
+        assert_eq!(t.matches("STORED").count(), n);
+        assert_eq!(t.matches("VALUE ").count(), n);
+    }
+
+    #[test]
+    fn recv_buf_cursor_and_compaction() {
+        let mut rb = RecvBuf::new();
+        rb.extend(b"hello world");
+        assert_eq!(rb.filled(), b"hello world");
+        rb.consume(6);
+        assert_eq!(rb.filled(), b"world");
+        // extend compacts: the consumed prefix is dropped
+        rb.extend(b"!");
+        assert_eq!(rb.filled(), b"world!");
+        assert_eq!(rb.pos, 0);
+        // consuming everything resets cheaply
+        rb.consume(6);
+        assert_eq!(rb.len(), 0);
+        assert_eq!(rb.buf.len(), 0);
+    }
+
+    #[test]
+    fn find_crlf_skips_bare_newlines() {
+        assert_eq!(find_crlf(b"abc\r\ndef"), Some(3));
+        assert_eq!(find_crlf(b"ab\ncd\r\n"), Some(5));
+        assert_eq!(find_crlf(b"\r\n"), Some(0));
+        assert_eq!(find_crlf(b"no newline"), None);
+        assert_eq!(find_crlf(b"\n\n\n"), None);
     }
 }

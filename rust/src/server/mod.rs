@@ -6,5 +6,5 @@ pub mod conn;
 pub mod metrics;
 pub mod tcp;
 
-pub use conn::NoControl;
+pub use conn::{Conn, NoControl};
 pub use tcp::{Control, Server, ServerHandle};

@@ -100,6 +100,12 @@ impl Server {
     }
 }
 
+/// Once the reused output buffer balloons past this (a huge multiget
+/// response), shrink it back so an idle connection doesn't pin the
+/// high-water mark forever.
+const OUT_BUF_KEEP: usize = 256 * 1024;
+const OUT_BUF_STEADY: usize = 16 * 1024;
+
 fn serve_connection(
     mut stream: TcpStream,
     store: Arc<ShardedStore>,
@@ -112,7 +118,10 @@ fn serve_connection(
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
     let mut conn = Conn::new(store, control);
     let mut rbuf = [0u8; 16 * 1024];
-    let mut out: Vec<u8> = Vec::with_capacity(16 * 1024);
+    // reused across reads: steady-state traffic costs zero buffer
+    // allocations per request (the Conn's receive cursor buffer and
+    // staging buffers are likewise retained)
+    let mut out: Vec<u8> = Vec::with_capacity(OUT_BUF_STEADY);
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
@@ -129,6 +138,9 @@ fn serve_connection(
                         return;
                     }
                     Metrics::add(&metrics.bytes_written, out.len() as u64);
+                    if out.capacity() > OUT_BUF_KEEP {
+                        out = Vec::with_capacity(OUT_BUF_STEADY);
+                    }
                 }
                 if conn.closing {
                     return;

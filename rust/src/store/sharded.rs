@@ -1,18 +1,77 @@
-//! Shard router: N independent [`KvStore`]s behind per-shard mutexes
-//! (memcached's item-lock striping, coarsened to whole shards). Keys
-//! route by the top bits of their hash, disjoint from the bucket-index
-//! bits the per-shard hash tables use.
+//! Shard router: N independent [`KvStore`]s behind per-shard
+//! reader/writer locks (memcached's item-lock striping, coarsened to
+//! whole shards).
+//!
+//! ## Lock discipline
+//!
+//! Mutating commands take the shard's write lock. `get`s first probe
+//! under the shard's **read** lock via [`KvStore::peek`] — items
+//! accessed within [`TOUCH_INTERVAL`](crate::store::store::TOUCH_INTERVAL)
+//! are served concurrently with zero store mutation (hit/miss counters
+//! live in per-shard atomics). Only expired items and items due an LRU
+//! bump fall back to the write-locked [`KvStore::get_with`] path, so a
+//! get-heavy workload on one shard no longer serializes.
+//!
+//! ## Routing
+//!
+//! Keys route by a multiplicative fold of the full 64-bit key hash
+//! (splitmix64 finalizer). The per-shard hash tables index buckets with
+//! the *raw* low bits of the same hash, so the fold also decorrelates
+//! shard choice from bucket choice. (The previous `hash >> 56` routing
+//! used only the top byte — at most 256 distinct routes, and badly
+//! skewed the moment shard counts stopped dividing 256.)
 
 use super::item::hash_key;
-use super::store::{CasResult, Clock, KvStore, MigrationReport, SizeObserver, StoreError, StoreStats, Value};
+use super::store::{
+    CasResult, Clock, KvStore, MigrationReport, PeekOutcome, SizeObserver, StoreError, StoreStats,
+    Value, ValueRef,
+};
 use crate::config::Settings;
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::{SlabError, SlabStats};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, RwLockWriteGuard};
+
+/// Keys routed on the stack per multiget batch; longer batches spill
+/// to one transient allocation.
+const INLINE_BATCH: usize = 64;
+
+/// One shard: the store behind an RwLock, plus lock-free counters for
+/// gets served on the read path (where `&mut StoreStats` is
+/// unavailable). [`ShardedStore::stats`] merges both sources.
+struct Shard {
+    store: RwLock<KvStore>,
+    read_gets: AtomicU64,
+    read_hits: AtomicU64,
+    read_misses: AtomicU64,
+}
+
+impl Shard {
+    fn new(store: KvStore) -> Self {
+        Shard {
+            store: RwLock::new(store),
+            read_gets: AtomicU64::new(0),
+            read_hits: AtomicU64::new(0),
+            read_misses: AtomicU64::new(0),
+        }
+    }
+}
 
 /// Thread-safe sharded cache — the object the TCP server serves.
 pub struct ShardedStore {
-    shards: Vec<Mutex<KvStore>>,
+    shards: Vec<Shard>,
+}
+
+/// splitmix64 finalizer: a multiplicative fold in which every input
+/// bit influences every output bit.
+#[inline]
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
 }
 
 impl ShardedStore {
@@ -42,7 +101,7 @@ impl ShardedStore {
         let stores: Result<Vec<_>, SlabError> = (0..shards)
             .map(|_| {
                 KvStore::new(policy.clone(), page_size, per_shard, use_cas, clock.clone())
-                    .map(Mutex::new)
+                    .map(Shard::new)
             })
             .collect();
         Ok(ShardedStore { shards: stores? })
@@ -52,66 +111,193 @@ impl ShardedStore {
         self.shards.len()
     }
 
+    /// Which shard a key routes to (stable for a given shard count).
     #[inline]
-    fn shard_for(&self, key: &[u8]) -> MutexGuard<'_, KvStore> {
-        // top byte of the hash — independent of the table's low bits
-        let idx = (hash_key(key) >> 56) as usize % self.shards.len();
-        self.shards[idx].lock().unwrap()
+    pub fn shard_index(&self, key: &[u8]) -> usize {
+        (mix(hash_key(key)) % self.shards.len() as u64) as usize
+    }
+
+    #[inline]
+    fn write_shard(&self, key: &[u8]) -> RwLockWriteGuard<'_, KvStore> {
+        self.shards[self.shard_index(key)].store.write().unwrap()
     }
 
     /// Attach a size observer to every shard.
     pub fn set_observer(&self, obs: Arc<dyn SizeObserver>) {
         for s in &self.shards {
-            s.lock().unwrap().set_observer(obs.clone());
+            s.store.write().unwrap().set_observer(obs.clone());
         }
     }
 
     // ------------------------------------------------------------- ops
 
     pub fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<(), StoreError> {
-        self.shard_for(key).set(key, value, flags, exptime)
+        self.write_shard(key).set(key, value, flags, exptime)
     }
 
     pub fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<bool, StoreError> {
-        self.shard_for(key).add(key, value, flags, exptime)
+        self.write_shard(key).add(key, value, flags, exptime)
     }
 
     pub fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<bool, StoreError> {
-        self.shard_for(key).replace(key, value, flags, exptime)
+        self.write_shard(key).replace(key, value, flags, exptime)
     }
 
     pub fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> Result<CasResult, StoreError> {
-        self.shard_for(key).cas(key, value, flags, exptime, cas)
+        self.write_shard(key).cas(key, value, flags, exptime, cas)
     }
 
     pub fn concat(&self, key: &[u8], data: &[u8], append: bool) -> Result<bool, StoreError> {
-        self.shard_for(key).concat(key, data, append)
+        self.write_shard(key).concat(key, data, append)
     }
 
+    /// `get` (allocating wrapper over [`get_with`]).
+    ///
+    /// [`get_with`]: ShardedStore::get_with
     pub fn get(&self, key: &[u8]) -> Option<Value> {
-        self.shard_for(key).get(key)
+        self.get_with(key, |v: ValueRef<'_>| Value {
+            value: v.data.to_vec(),
+            flags: v.flags,
+            cas: v.cas,
+        })
+    }
+
+    /// Zero-copy `get`: run `f` over the value bytes while they still
+    /// sit in the slab chunk, under the shard lock. Recently-accessed
+    /// items are served under the shard's *read* lock; expired or
+    /// recency-stale items retry once under the write lock.
+    pub fn get_with<R, F: FnMut(ValueRef<'_>) -> R>(&self, key: &[u8], mut f: F) -> Option<R> {
+        let shard = &self.shards[self.shard_index(key)];
+        {
+            let s = shard.store.read().unwrap();
+            match s.peek(key, &mut f) {
+                PeekOutcome::Hit(r) => {
+                    shard.read_gets.fetch_add(1, Ordering::Relaxed);
+                    shard.read_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(r);
+                }
+                PeekOutcome::Miss => {
+                    shard.read_gets.fetch_add(1, Ordering::Relaxed);
+                    shard.read_misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                PeekOutcome::NeedsWrite => {}
+            }
+        }
+        shard.store.write().unwrap().get_with(key, f)
+    }
+
+    /// Batched multiget: keys are grouped per shard and each shard's
+    /// lock is acquired **once** for its whole group (a read lock; plus
+    /// at most one write acquisition when some of its items need an
+    /// expiry reclaim or LRU bump). The visitor receives
+    /// `(request_index, value)` for every hit.
+    ///
+    /// Visitation order: within one shard, *read-path* hits arrive in
+    /// ascending request order, but items that needed the write-path
+    /// retry (expired / recency-stale) arrive **after** that shard's
+    /// read-path hits; shards are visited in order of their first key.
+    /// Callers that must answer in request order (the text protocol)
+    /// therefore still need an order check/sort over the indices —
+    /// `server::conn::do_get` stages spans and sorts only when needed.
+    ///
+    /// Batches of up to [`INLINE_BATCH`] keys are routed entirely on
+    /// the stack (no allocation); grouping is O(n·shards-touched),
+    /// which is the right trade for protocol-sized batches.
+    pub fn get_batch<F: FnMut(usize, ValueRef<'_>)>(&self, keys: &[&[u8]], mut visit: F) {
+        let mut route_buf = [0u32; INLINE_BATCH];
+        let mut route_vec: Vec<u32> = Vec::new();
+        let routes: &mut [u32] = if keys.len() <= INLINE_BATCH {
+            &mut route_buf[..keys.len()]
+        } else {
+            route_vec.resize(keys.len(), 0);
+            &mut route_vec
+        };
+        for (i, k) in keys.iter().enumerate() {
+            routes[i] = self.shard_index(k) as u32;
+        }
+
+        let mut retry_buf = [0u32; INLINE_BATCH];
+        let mut retry_vec: Vec<u32> = Vec::new();
+        for i in 0..keys.len() {
+            let sidx = routes[i];
+            if routes[..i].contains(&sidx) {
+                continue; // handled in this shard's earlier group pass
+            }
+            let shard = &self.shards[sidx as usize];
+            let mut gets = 0u64;
+            let mut hits = 0u64;
+            let mut misses = 0u64;
+            let mut nretry = 0usize;
+            {
+                let s = shard.store.read().unwrap();
+                for j in i..keys.len() {
+                    if routes[j] != sidx {
+                        continue;
+                    }
+                    match s.peek(keys[j], &mut |v| visit(j, v)) {
+                        PeekOutcome::Hit(_) => {
+                            gets += 1;
+                            hits += 1;
+                        }
+                        PeekOutcome::Miss => {
+                            gets += 1;
+                            misses += 1;
+                        }
+                        PeekOutcome::NeedsWrite => {
+                            if nretry < INLINE_BATCH {
+                                retry_buf[nretry] = j as u32;
+                            } else {
+                                retry_vec.push(j as u32);
+                            }
+                            nretry += 1;
+                        }
+                    }
+                }
+            }
+            if gets > 0 {
+                shard.read_gets.fetch_add(gets, Ordering::Relaxed);
+                shard.read_hits.fetch_add(hits, Ordering::Relaxed);
+                shard.read_misses.fetch_add(misses, Ordering::Relaxed);
+            }
+            if nretry > 0 {
+                let mut s = shard.store.write().unwrap();
+                for t in 0..nretry {
+                    let j = if t < INLINE_BATCH {
+                        retry_buf[t]
+                    } else {
+                        retry_vec[t - INLINE_BATCH]
+                    } as usize;
+                    s.get_with(keys[j], |v| visit(j, v));
+                }
+                retry_vec.clear();
+            }
+        }
     }
 
     pub fn delete(&self, key: &[u8]) -> bool {
-        self.shard_for(key).delete(key)
+        self.write_shard(key).delete(key)
     }
 
     pub fn incr_decr(&self, key: &[u8], delta: u64, incr: bool) -> Result<Option<u64>, StoreError> {
-        self.shard_for(key).incr_decr(key, delta, incr)
+        self.write_shard(key).incr_decr(key, delta, incr)
     }
 
     pub fn touch(&self, key: &[u8], exptime: u32) -> bool {
-        self.shard_for(key).touch(key, exptime)
+        self.write_shard(key).touch(key, exptime)
     }
 
     pub fn flush_all(&self) {
         for s in &self.shards {
-            s.lock().unwrap().flush_all();
+            s.store.write().unwrap().flush_all();
         }
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.store.read().unwrap().len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -122,8 +308,11 @@ impl ShardedStore {
 
     /// Aggregated slab statistics across shards (whole-cache holes).
     pub fn slab_stats(&self) -> SlabStats {
-        let mut shard_stats: Vec<SlabStats> =
-            self.shards.iter().map(|s| s.lock().unwrap().slab_stats()).collect();
+        let mut shard_stats: Vec<SlabStats> = self
+            .shards
+            .iter()
+            .map(|s| s.store.read().unwrap().slab_stats())
+            .collect();
         let mut agg = shard_stats.pop().expect("at least one shard");
         for st in shard_stats {
             agg.requested_bytes += st.requested_bytes;
@@ -147,11 +336,12 @@ impl ShardedStore {
         agg
     }
 
-    /// Aggregated operation counters.
+    /// Aggregated operation counters — write-path counters from each
+    /// [`KvStore`] plus the shard's read-path (lock-free) get counters.
     pub fn stats(&self) -> StoreStats {
         let mut agg = StoreStats::default();
         for s in &self.shards {
-            let st = s.lock().unwrap();
+            let st = s.store.read().unwrap();
             let x = st.stats();
             agg.cmd_get += x.cmd_get;
             agg.cmd_set += x.cmd_set;
@@ -172,13 +362,17 @@ impl ShardedStore {
             agg.expired_reclaims += x.expired_reclaims;
             agg.flush_cmds += x.flush_cmds;
             agg.reconfigures += x.reconfigures;
+            drop(st);
+            agg.cmd_get += s.read_gets.load(Ordering::Relaxed);
+            agg.get_hits += s.read_hits.load(Ordering::Relaxed);
+            agg.get_misses += s.read_misses.load(Ordering::Relaxed);
         }
         agg
     }
 
     /// Current chunk-size table (identical across shards).
     pub fn chunk_sizes(&self) -> Vec<usize> {
-        self.shards[0].lock().unwrap().chunk_sizes().to_vec()
+        self.shards[0].store.read().unwrap().chunk_sizes().to_vec()
     }
 
     /// Reconfigure every shard to a new chunk geometry, shard by shard
@@ -186,7 +380,7 @@ impl ShardedStore {
     pub fn reconfigure(&self, policy: ChunkSizePolicy) -> Result<Vec<MigrationReport>, StoreError> {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().reconfigure(policy.clone()))
+            .map(|s| s.store.write().unwrap().reconfigure(policy.clone()))
             .collect()
     }
 }
@@ -229,8 +423,36 @@ mod tests {
         for i in 0..2000u32 {
             s.set(format!("k{i}").as_bytes(), b"v", 0, 0).unwrap();
         }
-        let per: Vec<usize> = s.shards.iter().map(|x| x.lock().unwrap().len()).collect();
+        let per: Vec<usize> = s
+            .shards
+            .iter()
+            .map(|x| x.store.read().unwrap().len())
+            .collect();
         assert!(per.iter().all(|&n| n > 300), "uneven shards: {per:?}");
+    }
+
+    #[test]
+    fn shards_spread_keys_at_64_shards() {
+        // the old `hash >> 56` routing had only 256 distinct routes;
+        // at 64 shards that is 4 routes per shard on average, and any
+        // non-uniformity in the top byte lands whole key families on
+        // one shard. The fold must keep every shard near the mean.
+        let s = store(64);
+        let n = 64_000u32;
+        for i in 0..n {
+            s.set(format!("user:{i:06}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        let per: Vec<usize> = s
+            .shards
+            .iter()
+            .map(|x| x.store.read().unwrap().len())
+            .collect();
+        let mean = n as usize / 64;
+        let (lo, hi) = (mean / 2, mean * 2);
+        assert!(
+            per.iter().all(|&c| c > lo && c < hi),
+            "shard spread outside [{lo}, {hi}]: {per:?}"
+        );
     }
 
     #[test]
@@ -277,6 +499,7 @@ mod tests {
         assert_eq!(st.cmd_set, 1);
         assert_eq!(st.get_hits, 1);
         assert_eq!(st.get_misses, 1);
+        assert_eq!(st.cmd_get, 2);
     }
 
     #[test]
@@ -284,5 +507,111 @@ mod tests {
         let s = store(1);
         s.set(b"k", b"v", 0, 0).unwrap();
         assert_eq!(s.get(b"k").unwrap().value, b"v");
+    }
+
+    #[test]
+    fn get_with_zero_copy_visitor() {
+        let s = store(2);
+        s.set(b"k", b"payload", 5, 0).unwrap();
+        let got = s.get_with(b"k", |v: ValueRef<'_>| (v.data.to_vec(), v.flags));
+        let (data, flags) = got.unwrap();
+        assert_eq!(data, b"payload");
+        assert_eq!(flags, 5);
+        assert!(s.get_with(b"missing", |_: ValueRef<'_>| ()).is_none());
+    }
+
+    #[test]
+    fn get_batch_visits_hits_with_request_indices() {
+        let s = store(8);
+        let keys: Vec<String> = (0..40).map(|i| format!("batch-{i:02}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            if i % 3 != 0 {
+                s.set(k.as_bytes(), format!("v{i}").as_bytes(), 0, 0).unwrap();
+            }
+        }
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
+        let mut seen: Vec<(usize, Vec<u8>)> = Vec::new();
+        s.get_batch(&refs, |idx, v| seen.push((idx, v.data.to_vec())));
+        // every stored key visited exactly once, with the right bytes
+        let mut got: Vec<usize> = seen.iter().map(|(i, _)| *i).collect();
+        got.sort_unstable();
+        let want: Vec<usize> = (0..40).filter(|i| i % 3 != 0).collect();
+        assert_eq!(got, want);
+        for (i, data) in &seen {
+            assert_eq!(data, format!("v{i}").as_bytes());
+        }
+        // misses counted
+        assert_eq!(s.stats().get_misses, 14); // ceil(40/3)
+        assert_eq!(s.stats().get_hits, 26);
+    }
+
+    #[test]
+    fn get_batch_orders_within_shard_and_groups_across() {
+        let s = store(4);
+        let keys: Vec<String> = (0..32).map(|i| format!("ord-{i:02}")).collect();
+        for k in &keys {
+            s.set(k.as_bytes(), k.as_bytes(), 0, 0).unwrap();
+        }
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
+        let mut order: Vec<usize> = Vec::new();
+        s.get_batch(&refs, |idx, _| order.push(idx));
+        assert_eq!(order.len(), 32);
+        // hits from one shard must arrive in ascending request order
+        let shard_of: Vec<usize> = refs.iter().map(|k| s.shard_index(k)).collect();
+        for sh in 0..4 {
+            let per: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|&i| shard_of[i] == sh)
+                .collect();
+            assert!(per.windows(2).all(|w| w[0] < w[1]), "shard {sh}: {per:?}");
+        }
+    }
+
+    #[test]
+    fn get_batch_retries_stale_items_on_write_path() {
+        let (clock, cell) = Clock::manual(5_000_000);
+        let s = ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            16 << 20,
+            true,
+            2,
+            clock,
+        )
+        .unwrap();
+        s.set(b"a", b"1", 0, 0).unwrap();
+        s.set(b"b", b"2", 0, 100).unwrap();
+        // push both items past TOUCH_INTERVAL, and "b" past its expiry
+        cell.store(5_000_000 + 120, Ordering::Relaxed);
+        let mut seen = Vec::new();
+        s.get_batch(&[b"a".as_slice(), b"b".as_slice()], |idx, v| {
+            seen.push((idx, v.data.to_vec()))
+        });
+        assert_eq!(seen, vec![(0usize, b"1".to_vec())]);
+        assert_eq!(s.stats().expired_reclaims, 1);
+    }
+
+    #[test]
+    fn concurrent_reads_one_shard() {
+        let s = Arc::new(store(1));
+        s.set(b"hotkey", b"hotvalue", 0, 0).unwrap();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        let ok = s
+                            .get_with(b"hotkey", |v: ValueRef<'_>| v.data == b"hotvalue")
+                            .unwrap();
+                        assert!(ok);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(s.stats().get_hits, 16_000);
     }
 }

@@ -97,6 +97,35 @@ pub struct Value {
     pub cas: u64,
 }
 
+/// Borrowed view of a stored value: the zero-copy read path hands this
+/// to a visitor while the item's bytes still live in the slab chunk, so
+/// the visitor can copy them straight into a response buffer (one copy,
+/// chunk → wire) instead of materialising an intermediate [`Value`].
+#[derive(Debug, Clone, Copy)]
+pub struct ValueRef<'a> {
+    pub data: &'a [u8],
+    pub flags: u32,
+    pub cas: u64,
+}
+
+/// How long (seconds) an access keeps an item "recently used" before
+/// the next hit pays a write-locked LRU bump — memcached's
+/// `ITEM_UPDATE_INTERVAL`. Reads inside the window are served under a
+/// shard *read* lock with no LRU mutation at all.
+pub const TOUCH_INTERVAL: u32 = 60;
+
+/// Outcome of a read-only probe ([`KvStore::peek`]).
+pub enum PeekOutcome<R> {
+    /// Live, recently-bumped item; the visitor ran.
+    Hit(R),
+    /// Definitively absent.
+    Miss,
+    /// Present but the store must mutate to serve it correctly —
+    /// expired (lazy reclaim) or outside [`TOUCH_INTERVAL`] (LRU bump).
+    /// The caller retries on the write path.
+    NeedsWrite,
+}
+
 /// Store operation counters (`stats`).
 #[derive(Debug, Clone, Default)]
 pub struct StoreStats {
@@ -513,8 +542,21 @@ impl KvStore {
         Ok(true)
     }
 
-    /// `get`/`gets`.
+    /// `get`/`gets` (allocating convenience wrapper over [`get_with`]).
+    ///
+    /// [`get_with`]: KvStore::get_with
     pub fn get(&mut self, key: &[u8]) -> Option<Value> {
+        self.get_with(key, |v| Value {
+            value: v.data.to_vec(),
+            flags: v.flags,
+            cas: v.cas,
+        })
+    }
+
+    /// Zero-copy `get`: run `f` over the value bytes in place (in the
+    /// slab chunk) instead of copying them out. Full get semantics:
+    /// stats, lazy expiry reclaim, LRU bump, access-time refresh.
+    pub fn get_with<R, F: FnOnce(ValueRef<'_>) -> R>(&mut self, key: &[u8], f: F) -> Option<R> {
         self.stats.cmd_get += 1;
         let hash = hash_key(key);
         let Some(id) = self.find_live(key, hash) else {
@@ -524,13 +566,53 @@ impl KvStore {
         self.stats.get_hits += 1;
         let class = self.arena.get(id).handle.class as usize;
         self.lrus[class].touch(id, &mut self.arena);
+        // refresh the access time so the next TOUCH_INTERVAL seconds of
+        // hits on this key can be served by `peek` under a read lock
+        let now = self.clock.now();
+        self.arena.get_mut(id).time = now;
         let m = self.arena.get(id);
         let chunk = self.alloc.chunk(m.handle);
-        Some(Value {
-            value: chunk[m.klen as usize..m.klen as usize + m.vlen as usize].to_vec(),
+        Some(f(ValueRef {
+            data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
             flags: m.flags,
             cas: m.cas,
-        })
+        }))
+    }
+
+    /// Read-only probe for the concurrent fast path: looks the key up
+    /// and, when the item is live and was accessed within
+    /// [`TOUCH_INTERVAL`], runs `f` over its bytes without touching any
+    /// store state — callable under a shared (read) lock. Expired or
+    /// recency-stale items report [`PeekOutcome::NeedsWrite`] and the
+    /// caller falls back to [`get_with`] under an exclusive lock.
+    ///
+    /// Does NOT count stats (no `&mut`); callers account fast-path
+    /// reads themselves (see `ShardedStore`).
+    ///
+    /// [`get_with`]: KvStore::get_with
+    pub fn peek<R, F: FnMut(ValueRef<'_>) -> R>(&self, key: &[u8], f: &mut F) -> PeekOutcome<R> {
+        let hash = hash_key(key);
+        let found = self.table.find(hash, &self.arena, |id| {
+            let m = self.arena.get(id);
+            let chunk = self.alloc.chunk(m.handle);
+            &chunk[..m.klen as usize] == key
+        });
+        let Some(id) = found else {
+            return PeekOutcome::Miss;
+        };
+        let m = self.arena.get(id);
+        if self.is_expired(m) {
+            return PeekOutcome::NeedsWrite; // write path reclaims it
+        }
+        if self.clock.now().saturating_sub(m.time) >= TOUCH_INTERVAL {
+            return PeekOutcome::NeedsWrite; // write path bumps the LRU
+        }
+        let chunk = self.alloc.chunk(m.handle);
+        PeekOutcome::Hit(f(ValueRef {
+            data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
+            flags: m.flags,
+            cas: m.cas,
+        }))
     }
 
     /// `delete`. Returns true when the key existed.
@@ -964,6 +1046,78 @@ mod tests {
         for i in 0..100u32 {
             assert!(s.get(format!("k{i:02}").as_bytes()).is_some());
         }
+    }
+
+    #[test]
+    fn peek_fast_path_semantics() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"hello", 3, 0).unwrap();
+
+        // fresh item (set just now): peek serves it read-only
+        let mut seen = Vec::new();
+        match s.peek(b"k", &mut |v: ValueRef<'_>| {
+            seen.extend_from_slice(v.data);
+            v.flags
+        }) {
+            PeekOutcome::Hit(flags) => assert_eq!(flags, 3),
+            _ => panic!("expected hit"),
+        }
+        assert_eq!(seen, b"hello");
+        // peek counts nothing — it has no &mut
+        assert_eq!(s.stats().cmd_get, 0);
+
+        // absent key is a definitive miss
+        assert!(matches!(
+            s.peek(b"nope", &mut |_: ValueRef<'_>| ()),
+            PeekOutcome::Miss
+        ));
+
+        // older than TOUCH_INTERVAL: needs the write path (LRU bump)
+        cell.store(1_000_000 + TOUCH_INTERVAL as u64, Ordering::Relaxed);
+        assert!(matches!(
+            s.peek(b"k", &mut |_: ValueRef<'_>| ()),
+            PeekOutcome::NeedsWrite
+        ));
+        // a write-path get refreshes the access time...
+        assert!(s.get_with(b"k", |v| v.data.len()).is_some());
+        // ...after which peek serves again
+        assert!(matches!(
+            s.peek(b"k", &mut |_: ValueRef<'_>| ()),
+            PeekOutcome::Hit(())
+        ));
+    }
+
+    #[test]
+    fn peek_never_serves_expired() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"v", 0, 30).unwrap();
+        cell.store(1_000_031, Ordering::Relaxed);
+        // expired: peek defers to the write path, which lazily reclaims
+        assert!(matches!(
+            s.peek(b"k", &mut |_: ValueRef<'_>| ()),
+            PeekOutcome::NeedsWrite
+        ));
+        assert!(s.get(b"k").is_none());
+        assert_eq!(s.stats().expired_reclaims, 1);
+    }
+
+    #[test]
+    fn get_with_visits_in_place() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"abcdef", 9, 0).unwrap();
+        let len = s.get_with(b"k", |v| {
+            assert_eq!(v.flags, 9);
+            assert!(v.cas > 0);
+            v.data.len()
+        });
+        assert_eq!(len, Some(6));
+        assert_eq!(s.get_with(b"missing", |v| v.data.len()), None);
+        assert_eq!(s.stats().get_hits, 1);
+        assert_eq!(s.stats().get_misses, 1);
     }
 
     #[test]

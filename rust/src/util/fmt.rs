@@ -1,4 +1,33 @@
-//! Human-readable formatting helpers for logs, stats output and benches.
+//! Human-readable formatting helpers for logs, stats output and benches,
+//! plus the hot-path integer formatter the protocol encoder uses.
+
+/// Append the decimal representation of `n` to `out` (itoa-style).
+///
+/// The protocol hot path writes `VALUE <key> <flags> <len> [<cas>]`
+/// headers for every hit; going through `core::fmt` there costs a
+/// `Formatter` state machine and padding logic per integer. This digs
+/// digits into a stack buffer instead — no allocation, no `fmt`.
+#[inline]
+pub fn push_u64(out: &mut Vec<u8>, mut n: u64) {
+    // u64::MAX has 20 decimal digits
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (n % 10) as u8;
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&tmp[i..]);
+}
+
+/// [`push_u64`] for `usize` operands (lengths, counts).
+#[inline]
+pub fn push_usize(out: &mut Vec<u8>, n: usize) {
+    push_u64(out, n as u64);
+}
 
 /// Format a byte count with binary units (`1.5 MiB`).
 pub fn human_bytes(bytes: f64) -> String {
@@ -97,5 +126,29 @@ mod tests {
         assert_eq!(human_rate(500.0), "500.0 op/s");
         assert_eq!(human_rate(2_500_000.0), "2.50 Mop/s");
         assert_eq!(human_pct(0.4709), "47.09%");
+    }
+
+    #[test]
+    fn push_u64_matches_display() {
+        for n in [
+            0u64,
+            1,
+            9,
+            10,
+            99,
+            100,
+            12345,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let mut out = Vec::new();
+            push_u64(&mut out, n);
+            assert_eq!(out, n.to_string().into_bytes(), "n={n}");
+        }
+        // appends, never overwrites
+        let mut out = b"x ".to_vec();
+        push_usize(&mut out, 42);
+        assert_eq!(out, b"x 42");
     }
 }

@@ -1,0 +1,143 @@
+//! Allocation regression guard for the request hot path: after warmup
+//! (buffers sized, key present), a `get` hit and a small multiget must
+//! perform **zero** heap allocations end-to-end through the connection
+//! state machine — receive-buffer parse, shard routing, chunk→buffer
+//! copy, response encoding.
+//!
+//! Lives in its own integration-test binary because the counting
+//! `#[global_allocator]` is process-wide.
+
+use slabforge::server::{Conn, NoControl};
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn conn(shards: usize) -> Conn {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            32 << 20,
+            true,
+            shards,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    Conn::new(store, Arc::new(NoControl))
+}
+
+#[test]
+fn get_hit_path_allocates_nothing() {
+    let mut c = conn(4);
+    let mut out = Vec::with_capacity(64 * 1024);
+    c.on_bytes(b"set hot 3 0 11\r\nhello-world\r\n", &mut out);
+    assert!(String::from_utf8_lossy(&out).contains("STORED"));
+
+    // warmup: size every reused buffer, fault in the response path
+    for _ in 0..4 {
+        out.clear();
+        c.on_bytes(b"get hot\r\n", &mut out);
+        assert!(String::from_utf8_lossy(&out).contains("VALUE hot 3 11"));
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1000 {
+        out.clear();
+        let done = c.on_bytes(b"get hot\r\n", &mut out);
+        assert_eq!(done, 1);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "get hit path performed {delta} heap allocations over 1000 requests"
+    );
+    assert!(String::from_utf8_lossy(&out).contains("hello-world"));
+}
+
+#[test]
+fn multiget_steady_state_allocates_nothing() {
+    let mut c = conn(4);
+    let mut out = Vec::with_capacity(64 * 1024);
+    let mut setup = Vec::new();
+    for i in 0..16 {
+        setup.extend_from_slice(format!("set m{i:02} 0 0 5\r\nv-{i:02}\r\n").as_bytes());
+    }
+    c.on_bytes(&setup, &mut out);
+
+    let req = b"get m00 m01 m02 m03 m04 m05 m06 m07 m08 m09 m10 m11 m12 m13 m14 m15\r\n";
+    for _ in 0..4 {
+        out.clear();
+        c.on_bytes(req, &mut out);
+        assert_eq!(String::from_utf8_lossy(&out).matches("VALUE ").count(), 16);
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1000 {
+        out.clear();
+        let done = c.on_bytes(req, &mut out);
+        assert_eq!(done, 1);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "16-key multiget performed {delta} heap allocations over 1000 requests"
+    );
+}
+
+#[test]
+fn set_path_allocation_is_bounded() {
+    // sets are allowed to allocate (parsed command, arena/table growth)
+    // but must not regress into per-byte or per-token explosions: the
+    // steady-state overwrite of an existing key stays under a handful
+    // of allocations per request.
+    let mut c = conn(1);
+    let mut out = Vec::with_capacity(16 * 1024);
+    for _ in 0..8 {
+        out.clear();
+        c.on_bytes(b"set sk 0 0 6\r\nabcdef\r\n", &mut out);
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let n = 1000u64;
+    for _ in 0..n {
+        out.clear();
+        c.on_bytes(b"set sk 0 0 6\r\nabcdef\r\n", &mut out);
+    }
+    let per_req = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / n as f64;
+    assert!(
+        per_req <= 8.0,
+        "steady-state set allocates {per_req:.1} times per request"
+    );
+}

@@ -129,6 +129,40 @@ fn not_enough_data_reported_over_wire() {
 }
 
 #[test]
+fn multiget_over_the_wire_preserves_request_order() {
+    use std::io::{Read, Write};
+    let (handle, _) = full_server(u64::MAX);
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut payload = Vec::new();
+    for i in 0..10 {
+        payload.extend_from_slice(format!("set wk{i} 0 0 1 noreply\r\nx\r\n").as_bytes());
+    }
+    // shuffled request order; keys hash onto both shards
+    payload.extend_from_slice(b"get wk9 wk3 wk7 wk0 wk5 wk1 wk8 wk2 wk6 wk4\r\n");
+    s.write_all(&payload).unwrap();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 4096];
+    while !String::from_utf8_lossy(&got).contains("END\r\n") {
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "server closed early");
+        got.extend_from_slice(&buf[..n]);
+    }
+    let keys: Vec<String> = String::from_utf8_lossy(&got)
+        .lines()
+        .filter_map(|l| {
+            l.strip_prefix("VALUE ")
+                .map(|r| r.split(' ').next().unwrap().to_string())
+        })
+        .collect();
+    assert_eq!(
+        keys,
+        vec!["wk9", "wk3", "wk7", "wk0", "wk5", "wk1", "wk8", "wk2", "wk6", "wk4"],
+        "multiget must answer in request key order"
+    );
+    handle.shutdown();
+}
+
+#[test]
 fn concurrent_traffic_during_optimization() {
     let (handle, _) = full_server(500);
     let addr = handle.addr();

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Bench smoke: run the end-to-end TCP serving benchmark and publish its
+# JSON artifact at the repo root so successive PRs have a throughput
+# trajectory to diff (BENCH_server.json rows carry ops_per_sec per
+# workload: pipelined sets, roundtrip gets, pipelined gets, multigets,
+# connection scaling).
+set -euo pipefail
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root/rust"
+
+cargo bench --bench bench_server
+
+# the bench binary writes BENCH_server.json into the package root
+if [[ -f BENCH_server.json ]]; then
+    cp BENCH_server.json "$root/BENCH_server.json"
+    echo "published $root/BENCH_server.json"
+else
+    echo "error: bench did not produce BENCH_server.json" >&2
+    exit 1
+fi
