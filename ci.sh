@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, release build, full test suite.
+# CI gate: formatting, lints, release build, full test suite, bench
+# smoke (publishes BENCH_server.json with the high-connection scenario).
 # Run from anywhere; operates on the rust/ package.
 set -euo pipefail
-cd "$(dirname "$0")/rust"
+root="$(cd "$(dirname "$0")" && pwd)"
+cd "$root/rust"
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
@@ -15,5 +17,8 @@ cargo build --release
 
 echo "==> cargo test"
 cargo test -q
+
+echo "==> bench smoke (256-connection reactor sweep included)"
+"$root/scripts/bench_server_smoke.sh" --smoke
 
 echo "CI OK"

@@ -23,6 +23,12 @@ use std::time::Instant;
 const N_SET: usize = 50_000;
 const N_GET: usize = 20_000;
 
+/// `SLABFORGE_BENCH_SMOKE=1` shrinks the workload so CI can execute the
+/// full scenario matrix (including the 256-connection sweep) in seconds.
+fn smoke() -> bool {
+    std::env::var("SLABFORGE_BENCH_SMOKE").map_or(false, |v| v != "0")
+}
+
 fn start_server() -> (ServerHandle, Arc<ShardedStore>) {
     let store = Arc::new(
         ShardedStore::with(
@@ -35,17 +41,25 @@ fn start_server() -> (ServerHandle, Arc<ShardedStore>) {
         )
         .unwrap(),
     );
-    let h = Server::new(store.clone()).start("127.0.0.1:0").unwrap();
+    let h = Server::new(store.clone())
+        .max_conns(4096)
+        .start("127.0.0.1:0")
+        .unwrap();
     (h, store)
 }
 
 fn main() {
+    let (n_set, n_get, iters) = if smoke() {
+        (5_000, 2_000, 2)
+    } else {
+        (N_SET, N_GET, 5)
+    };
     let (handle, store) = start_server();
     let addr = handle.addr();
     let mut rows: Vec<Summary> = Vec::new();
 
     let mut rng = Pcg64::new(3);
-    let values: Vec<Vec<u8>> = (0..N_SET)
+    let values: Vec<Vec<u8>> = (0..n_set)
         .map(|_| {
             let t = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000);
             vec![b'x'; value_len_for_total(t, true).unwrap()]
@@ -58,8 +72,8 @@ fn main() {
         "tcp set noreply pipeline",
         &BenchOpts {
             warmup: 1,
-            iters: 5,
-            units_per_iter: N_SET as f64,
+            iters,
+            units_per_iter: n_set as f64,
         },
         || {
             for (i, v) in values.iter().enumerate() {
@@ -70,19 +84,19 @@ fn main() {
     ));
 
     // ---- request/response gets ------------------------------------------
-    let mut lat = Vec::with_capacity(N_GET);
+    let mut lat = Vec::with_capacity(n_get);
     rows.push(bench(
         "tcp get roundtrip",
         &BenchOpts {
             warmup: 1,
-            iters: 5,
-            units_per_iter: N_GET as f64,
+            iters,
+            units_per_iter: n_get as f64,
         },
         || {
             lat.clear();
             let mut rng = Pcg64::new(4);
-            for _ in 0..N_GET {
-                let key = format!("k{:08}", rng.gen_range(N_SET as u64));
+            for _ in 0..n_get {
+                let key = format!("k{:08}", rng.gen_range(n_set as u64));
                 let t = Instant::now();
                 assert!(c.get(&key).unwrap().is_some());
                 lat.push(t.elapsed());
@@ -110,17 +124,17 @@ fn main() {
             "tcp get pipeline x64",
             &BenchOpts {
                 warmup: 1,
-                iters: 5,
-                units_per_iter: (N_GET / DEPTH * DEPTH) as f64,
+                iters,
+                units_per_iter: (n_get / DEPTH * DEPTH) as f64,
             },
             || {
                 let mut rng = Pcg64::new(6);
                 let mut req = Vec::with_capacity(DEPTH * 24);
-                for _ in 0..N_GET / DEPTH {
+                for _ in 0..n_get / DEPTH {
                     req.clear();
                     for _ in 0..DEPTH {
                         req.extend_from_slice(
-                            format!("get k{:08}\r\n", rng.gen_range(N_SET as u64)).as_bytes(),
+                            format!("get k{:08}\r\n", rng.gen_range(n_set as u64)).as_bytes(),
                         );
                     }
                     s.write_all(&req).unwrap();
@@ -150,14 +164,14 @@ fn main() {
         "tcp multi-get x16",
         &BenchOpts {
             warmup: 1,
-            iters: 5,
-            units_per_iter: (N_GET / 16 * 16) as f64,
+            iters,
+            units_per_iter: (n_get / 16 * 16) as f64,
         },
         || {
             let mut rng = Pcg64::new(5);
-            for _ in 0..N_GET / 16 {
+            for _ in 0..n_get / 16 {
                 let keys: Vec<String> = (0..16)
-                    .map(|_| format!("k{:08}", rng.gen_range(N_SET as u64)))
+                    .map(|_| format!("k{:08}", rng.gen_range(n_set as u64)))
                     .collect();
                 let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
                 let m = c.get_multi(&refs, false).unwrap();
@@ -168,33 +182,100 @@ fn main() {
 
     // ---- connection scaling -----------------------------------------------
     for conns in [1usize, 4, 8] {
-        let per = N_GET / conns;
-        rows.push(bench(
-            &format!("tcp get {conns} conns"),
-            &BenchOpts {
-                warmup: 1,
-                iters: 3,
-                units_per_iter: (per * conns) as f64,
-            },
-            || {
-                let threads: Vec<_> = (0..conns)
-                    .map(|t| {
-                        std::thread::spawn(move || {
-                            let mut c = Client::connect(addr).unwrap();
-                            let mut rng = Pcg64::new(10 + t as u64);
-                            for _ in 0..per {
-                                let key =
-                                    format!("k{:08}", rng.gen_range(N_SET as u64));
-                                c.get(&key).unwrap();
-                            }
+        let per = n_get / conns;
+        rows.push(
+            bench(
+                &format!("tcp get {conns} conns"),
+                &BenchOpts {
+                    warmup: 1,
+                    iters: iters.min(3),
+                    units_per_iter: (per * conns) as f64,
+                },
+                || {
+                    let threads: Vec<_> = (0..conns)
+                        .map(|t| {
+                            std::thread::spawn(move || {
+                                let mut c = Client::connect(addr).unwrap();
+                                let mut rng = Pcg64::new(10 + t as u64);
+                                for _ in 0..per {
+                                    let key =
+                                        format!("k{:08}", rng.gen_range(n_set as u64));
+                                    c.get(&key).unwrap();
+                                }
+                            })
                         })
-                    })
-                    .collect();
-                for t in threads {
-                    t.join().unwrap();
-                }
-            },
-        ));
+                        .collect();
+                    for t in threads {
+                        t.join().unwrap();
+                    }
+                },
+            )
+            .with_dim("connections", conns as f64),
+        );
+    }
+
+    // ---- many-connection pipelined gets (reactor scaling) -----------------
+    // 256 concurrent sockets, a handful of reactor threads: each round
+    // writes a DEPTH-deep get pipeline to every socket, then drains all
+    // responses. This is the scenario thread-per-connection cannot
+    // reach (256 idle-heavy threads) and the epoll reactor is built for.
+    {
+        use std::io::{Read, Write};
+        const CONNS: usize = 256;
+        const DEPTH: usize = 8;
+        let rounds = (n_get / (CONNS * DEPTH)).max(1);
+        let mut socks: Vec<std::net::TcpStream> = (0..CONNS)
+            .map(|_| {
+                let s = std::net::TcpStream::connect(addr).unwrap();
+                s.set_nodelay(true).unwrap();
+                s
+            })
+            .collect();
+        let mut resp = vec![0u8; 64 * 1024];
+        rows.push(
+            bench(
+                &format!("tcp get pipeline {CONNS} conns"),
+                &BenchOpts {
+                    warmup: 1,
+                    iters: iters.min(3),
+                    units_per_iter: (rounds * CONNS * DEPTH) as f64,
+                },
+                || {
+                    let mut rng = Pcg64::new(12);
+                    let mut req = Vec::with_capacity(DEPTH * 24);
+                    for _ in 0..rounds {
+                        for s in socks.iter_mut() {
+                            req.clear();
+                            for _ in 0..DEPTH {
+                                req.extend_from_slice(
+                                    format!("get k{:08}\r\n", rng.gen_range(n_set as u64))
+                                        .as_bytes(),
+                                );
+                            }
+                            s.write_all(&req).unwrap();
+                        }
+                        for s in socks.iter_mut() {
+                            let mut ends = 0usize;
+                            let mut carry = [0u8; 4];
+                            let mut carry_len = 0usize;
+                            while ends < DEPTH {
+                                let n = s.read(&mut resp).unwrap();
+                                assert!(n > 0, "server closed mid-pipeline");
+                                let mut window = Vec::with_capacity(carry_len + n);
+                                window.extend_from_slice(&carry[..carry_len]);
+                                window.extend_from_slice(&resp[..n]);
+                                ends +=
+                                    window.windows(5).filter(|w| *w == b"END\r\n").count();
+                                let keep = window.len().min(4);
+                                carry[..keep].copy_from_slice(&window[window.len() - keep..]);
+                                carry_len = keep;
+                            }
+                        }
+                    }
+                },
+            )
+            .with_dim("connections", CONNS as f64),
+        );
     }
 
     println!(

@@ -20,6 +20,10 @@ pub struct Summary {
     pub max: Duration,
     /// Work units per iteration (for rate reporting), default 1.
     pub units_per_iter: f64,
+    /// Extra workload dimensions (e.g. `("connections", 256.0)`),
+    /// emitted as additional keys in the JSON artifact so trajectory
+    /// diffs can filter by scenario shape.
+    pub dims: Vec<(String, f64)>,
 }
 
 impl Summary {
@@ -39,7 +43,14 @@ impl Summary {
             min: samples[0],
             max: samples[n - 1],
             units_per_iter,
+            dims: Vec::new(),
         }
+    }
+
+    /// Attach a workload dimension (builder-style).
+    pub fn with_dim(mut self, name: &str, value: f64) -> Summary {
+        self.dims.push((name.to_string(), value));
+        self
     }
 
     /// Work units per second at the mean.
@@ -120,8 +131,12 @@ pub fn write_json(
     s.push_str(&format!("  \"title\": {title:?},\n"));
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let mut dims = String::new();
+        for (k, v) in &r.dims {
+            dims.push_str(&format!(", {k:?}: {v}"));
+        }
         s.push_str(&format!(
-            "    {{\"name\": {:?}, \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"units_per_iter\": {}, \"ops_per_sec\": {:.1}}}{}\n",
+            "    {{\"name\": {:?}, \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"units_per_iter\": {}, \"ops_per_sec\": {:.1}{}}}{}\n",
             r.name,
             r.iters,
             r.mean.as_nanos(),
@@ -129,6 +144,7 @@ pub fn write_json(
             r.p99.as_nanos(),
             r.units_per_iter,
             r.rate(),
+            dims,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -209,7 +225,8 @@ mod tests {
     fn json_writer_parses_back() {
         let dir = std::env::temp_dir().join(format!("slabforge-json-{}", std::process::id()));
         let rows = vec![
-            Summary::from_samples("a bench", vec![Duration::from_millis(2)], 100.0),
+            Summary::from_samples("a bench", vec![Duration::from_millis(2)], 100.0)
+                .with_dim("connections", 256.0),
             Summary::from_samples("b", vec![Duration::from_micros(5)], 1.0),
         ];
         let path = write_json(dir.join("BENCH_t.json"), "T", &rows).unwrap();
@@ -225,6 +242,11 @@ mod tests {
         assert_eq!(
             parsed[0].get("mean_ns").and_then(|m| m.as_usize()),
             Some(2_000_000)
+        );
+        assert_eq!(
+            parsed[0].get("connections").and_then(|c| c.as_usize()),
+            Some(256),
+            "workload dims must round-trip through the artifact"
         );
         std::fs::remove_dir_all(&dir).unwrap();
     }

@@ -86,8 +86,18 @@ impl Default for OptimizerSettings {
 pub struct Settings {
     /// TCP listen address (`host:port`).
     pub listen: String,
-    /// Worker threads accepting connections.
+    /// Reactor (event-loop) threads in event mode; worker threads in
+    /// legacy threaded mode.
     pub threads: usize,
+    /// Event-driven epoll reactor (default) vs. legacy
+    /// thread-per-connection.
+    pub event_loop: bool,
+    /// Cap on live connections; accepts beyond it are rejected
+    /// (memcached `-c`).
+    pub max_conns: usize,
+    /// Close connections idle longer than this many seconds; 0 = never
+    /// (memcached `-o idle_timeout`).
+    pub idle_timeout_secs: u64,
     /// Store shards (each shard = one mutex + one allocator).
     pub shards: usize,
     /// Total cache memory across shards, bytes.
@@ -103,6 +113,9 @@ impl Default for Settings {
         Settings {
             listen: "127.0.0.1:11211".to_string(),
             threads: 4,
+            event_loop: true,
+            max_conns: 1024,
+            idle_timeout_secs: 0,
             shards: 4,
             mem_limit: 64 << 20,
             page_size: PAGE_SIZE,
@@ -151,6 +164,18 @@ impl Settings {
         }
         if let Some(v) = doc.get("threads") {
             s.threads = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("threads"))?;
+        }
+        if let Some(v) = doc.get("event_loop") {
+            s.event_loop = v.as_bool().ok_or_else(|| invalid("event_loop"))?;
+        }
+        if let Some(v) = doc.get("max_conns") {
+            s.max_conns = v
+                .as_usize()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| invalid("max_conns"))?;
+        }
+        if let Some(v) = doc.get("idle_timeout_secs") {
+            s.idle_timeout_secs = v.as_usize().ok_or_else(|| invalid("idle_timeout_secs"))? as u64;
         }
         if let Some(v) = doc.get("shards") {
             s.shards = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("shards"))?;
@@ -316,5 +341,22 @@ artifacts_dir = "artifacts"
     fn empty_toml_is_defaults() {
         let s = Settings::from_toml("").unwrap();
         assert_eq!(s.listen, Settings::default().listen);
+        assert!(s.event_loop, "event-driven mode must be the default");
+        assert_eq!(s.max_conns, 1024);
+        assert_eq!(s.idle_timeout_secs, 0);
+    }
+
+    #[test]
+    fn server_mode_keys_parse() {
+        let s = Settings::from_toml(
+            "event_loop = false\nmax_conns = 64\nidle_timeout_secs = 30\nthreads = 2\n",
+        )
+        .unwrap();
+        assert!(!s.event_loop);
+        assert_eq!(s.max_conns, 64);
+        assert_eq!(s.idle_timeout_secs, 30);
+        assert_eq!(s.threads, 2);
+        assert!(Settings::from_toml("max_conns = 0\n").is_err());
+        assert!(Settings::from_toml("event_loop = 3\n").is_err());
     }
 }

@@ -21,7 +21,8 @@
 //! * [`slab`] — pages / chunks / classes; the allocator whose holes we fight
 //! * [`store`] — hash table, segmented LRU, eviction, expiry; the KV engine
 //! * [`protocol`] — memcached text protocol + `stats`-family introspection
-//! * [`server`] / [`client`] — threaded TCP front end and a blocking client
+//! * [`server`] / [`client`] — sharded epoll-reactor TCP front end
+//!   (legacy threaded mode behind a flag) and a blocking client
 //! * [`workload`] — deterministic traffic generators (the paper's
 //!   log-normals and the §6.1 adversarial patterns)
 //! * [`optimizer`] — the paper's Algorithm 1 plus batched steepest

@@ -6,6 +6,8 @@
 //!                    [--mem-limit BYTES] [--shards N] [--growth-factor F]
 //!                    [--slab-sizes a,b,c] [--optimizer] [--backend rust|xla]
 //!                    [--algorithm paper|steepest|dp] [--artifacts DIR]
+//!                    [--threads N] [--legacy-threads] [--max-conns N]
+//!                    [--idle-timeout SECS]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -30,7 +32,7 @@ use std::path::Path;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-const SWITCHES: &[&str] = &["optimizer", "help", "verbose"];
+const SWITCHES: &[&str] = &["optimizer", "help", "verbose", "legacy-threads"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -85,6 +87,18 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
     }
     if let Some(n) = args.flag_parse::<usize>("threads").map_err(|e| e.to_string())? {
         s.threads = n;
+    }
+    if args.switch("legacy-threads") {
+        s.event_loop = false;
+    }
+    if let Some(n) = args.flag_parse::<usize>("max-conns").map_err(|e| e.to_string())? {
+        s.max_conns = n;
+    }
+    if let Some(n) = args
+        .flag_parse::<u64>("idle-timeout")
+        .map_err(|e| e.to_string())?
+    {
+        s.idle_timeout_secs = n;
     }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {
@@ -149,20 +163,60 @@ fn cmd_serve(args: &Args) -> i32 {
             (Arc::new(NoControl), None)
         };
 
-    let server = Server::with_control(store.clone(), control);
+    let mode = if settings.event_loop {
+        slabforge::server::ServeMode::Event
+    } else {
+        slabforge::server::ServeMode::Threaded
+    };
+    let idle = (settings.idle_timeout_secs > 0)
+        .then(|| std::time::Duration::from_secs(settings.idle_timeout_secs));
+    let server = Server::with_control(store.clone(), control)
+        .mode(mode)
+        .reactor_threads(settings.threads)
+        .max_conns(settings.max_conns)
+        .idle_timeout(idle);
     let handle = match server.start(&settings.listen) {
         Ok(h) => h,
         Err(e) => return fail(format!("cannot bind {}: {e}", settings.listen)),
     };
     eprintln!(
-        "slabforge listening on {} ({} shards, {} limit, {} classes)",
+        "slabforge listening on {} ({}, {} shards, {} limit, {} classes, max {} conns)",
         handle.addr(),
+        if handle.reactors() > 0 {
+            format!("epoll reactor x{}", handle.reactors())
+        } else {
+            "threaded".to_string()
+        },
         settings.shards,
         human_bytes(settings.mem_limit as f64),
         store.chunk_sizes().len(),
+        settings.max_conns,
     );
 
-    // serve until killed
+    serve_until_signal(handle, &shutdown)
+}
+
+/// Park until SIGTERM/SIGINT, then drain connections and exit cleanly.
+#[cfg(target_os = "linux")]
+fn serve_until_signal(
+    handle: slabforge::server::ServerHandle,
+    tuner_shutdown: &AtomicBool,
+) -> i32 {
+    let term = slabforge::server::sys::install_term_flag();
+    while !term.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    eprintln!("slabforge: signal received, draining connections");
+    tuner_shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+    handle.shutdown();
+    0
+}
+
+#[cfg(not(target_os = "linux"))]
+fn serve_until_signal(
+    _handle: slabforge::server::ServerHandle,
+    _tuner_shutdown: &AtomicBool,
+) -> i32 {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -7,23 +7,32 @@
 use crate::store::store::{Value, ValueRef};
 use crate::util::fmt::{push_u64, push_usize};
 
-/// `VALUE <key> <flags> <bytes>[ <cas>]\r\n<data>\r\n` from a borrowed
-/// value — the zero-copy get path's encoder, run under the shard lock.
-pub fn value_ref(out: &mut Vec<u8>, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
+/// `VALUE <key> <flags> <bytes>[ <cas>]\r\n` — the header line alone,
+/// without the data block. The writev scatter path (`server::conn`)
+/// encodes the header into the output buffer and hands the chunk bytes
+/// to the kernel as a separate iovec, skipping the chunk→buffer copy.
+pub fn value_header(out: &mut Vec<u8>, key: &[u8], data_len: usize, flags: u32, cas: Option<u64>) {
     // header ~= "VALUE " + key + 3-4 integers + separators; 48 covers
     // the worst case (u32 + usize + u64 digits + spaces + CRLFs)
-    out.reserve(key.len() + v.data.len() + 48);
+    out.reserve(key.len() + 48);
     out.extend_from_slice(b"VALUE ");
     out.extend_from_slice(key);
     out.push(b' ');
-    push_u64(out, v.flags as u64);
+    push_u64(out, flags as u64);
     out.push(b' ');
-    push_usize(out, v.data.len());
-    if with_cas {
+    push_usize(out, data_len);
+    if let Some(cas) = cas {
         out.push(b' ');
-        push_u64(out, v.cas);
+        push_u64(out, cas);
     }
     out.extend_from_slice(b"\r\n");
+}
+
+/// `VALUE <key> <flags> <bytes>[ <cas>]\r\n<data>\r\n` from a borrowed
+/// value — the zero-copy get path's encoder, run under the shard lock.
+pub fn value_ref(out: &mut Vec<u8>, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
+    out.reserve(key.len() + v.data.len() + 48);
+    value_header(out, key, v.data.len(), v.flags, with_cas.then_some(v.cas));
     out.extend_from_slice(v.data);
     out.extend_from_slice(b"\r\n");
 }

@@ -8,6 +8,7 @@
 //!   optimizer learns from), bucketed like memcached's 32-byte rows.
 
 use super::response::stat;
+use crate::server::metrics::ConnCounters;
 use crate::slab::SlabStats;
 use crate::store::store::StoreStats;
 use crate::util::histogram::SizeHistogram;
@@ -19,8 +20,13 @@ pub fn render_general(
     slabs: &SlabStats,
     items: usize,
     uptime_secs: u64,
+    conns: &ConnCounters,
 ) {
     stat(out, "uptime", uptime_secs);
+    stat(out, "curr_connections", conns.curr);
+    stat(out, "total_connections", conns.total);
+    stat(out, "rejected_connections", conns.rejected);
+    stat(out, "conn_yields", conns.yields);
     stat(out, "curr_items", items);
     stat(out, "cmd_get", ops.cmd_get);
     stat(out, "cmd_set", ops.cmd_set);
@@ -110,11 +116,28 @@ mod tests {
     #[test]
     fn general_stats_contain_waste() {
         let mut out = Vec::new();
-        render_general(&mut out, &StoreStats::default(), &slab_stats_with_items(), 2, 5);
+        let conns = ConnCounters {
+            curr: 3,
+            total: 9,
+            rejected: 1,
+            yields: 4,
+        };
+        render_general(
+            &mut out,
+            &StoreStats::default(),
+            &slab_stats_with_items(),
+            2,
+            5,
+            &conns,
+        );
         let t = text(&out);
         assert!(t.contains("STAT curr_items 2"));
         assert!(t.contains("STAT bytes 618"));
         assert!(t.contains("STAT bytes_wasted 102")); // (600-518)+(120-100)
+        assert!(t.contains("STAT curr_connections 3"));
+        assert!(t.contains("STAT total_connections 9"));
+        assert!(t.contains("STAT rejected_connections 1"));
+        assert!(t.contains("STAT conn_yields 4"));
         assert!(t.ends_with("END\r\n"));
     }
 

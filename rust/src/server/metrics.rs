@@ -4,8 +4,17 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Lifetime accepted connections (memcached `total_connections`).
     pub connections_accepted: AtomicU64,
     pub connections_closed: AtomicU64,
+    /// Live connections right now (gauge: inc on accept, dec on close).
+    pub curr_connections: AtomicU64,
+    /// Accepts refused because `max_conns` live connections existed.
+    pub rejected_connections: AtomicU64,
+    /// Times a connection yielded the reactor mid-stream — output
+    /// backpressure (bounded write buffer full) or read-budget
+    /// exhaustion under a firehose client (memcached `conn_yields`).
+    pub conn_yields: AtomicU64,
     pub commands: AtomicU64,
     pub bytes_read: AtomicU64,
     pub bytes_written: AtomicU64,
@@ -27,10 +36,28 @@ impl Metrics {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// The connection-level gauges `stats` reports (memcached parity).
+    pub fn conn_counters(&self) -> ConnCounters {
+        ConnCounters {
+            curr: self.curr_connections.load(Ordering::Relaxed),
+            total: self.connections_accepted.load(Ordering::Relaxed),
+            rejected: self.rejected_connections.load(Ordering::Relaxed),
+            yields: self.conn_yields.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
             connections_closed: self.connections_closed.load(Ordering::Relaxed),
+            curr_connections: self.curr_connections.load(Ordering::Relaxed),
+            rejected_connections: self.rejected_connections.load(Ordering::Relaxed),
+            conn_yields: self.conn_yields.load(Ordering::Relaxed),
             commands: self.commands.load(Ordering::Relaxed),
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
@@ -39,10 +66,22 @@ impl Metrics {
     }
 }
 
+/// Snapshot of the connection gauges, consumed by `stats` rendering.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConnCounters {
+    pub curr: u64,
+    pub total: u64,
+    pub rejected: u64,
+    pub yields: u64,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub connections_accepted: u64,
     pub connections_closed: u64,
+    pub curr_connections: u64,
+    pub rejected_connections: u64,
+    pub conn_yields: u64,
     pub commands: u64,
     pub bytes_read: u64,
     pub bytes_written: u64,
@@ -63,5 +102,22 @@ mod tests {
         assert_eq!(s.commands, 2);
         assert_eq!(s.bytes_read, 100);
         assert_eq!(s.protocol_errors, 0);
+    }
+
+    #[test]
+    fn gauge_inc_dec_and_conn_counters() {
+        let m = Metrics::new();
+        Metrics::bump(&m.connections_accepted);
+        Metrics::bump(&m.connections_accepted);
+        Metrics::bump(&m.curr_connections);
+        Metrics::bump(&m.curr_connections);
+        Metrics::dec(&m.curr_connections);
+        Metrics::bump(&m.rejected_connections);
+        Metrics::bump(&m.conn_yields);
+        let c = m.conn_counters();
+        assert_eq!(c.curr, 1);
+        assert_eq!(c.total, 2);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.yields, 1);
     }
 }

@@ -1,10 +1,22 @@
-//! Threaded TCP front end (tokio is not vendored in this offline image;
-//! memcached itself is thread-per-event-loop, and a worker-thread model
-//! over `std::net` preserves the same serving semantics — DESIGN.md §3).
+//! TCP front end: a sharded **epoll reactor** (raw `libc` epoll via
+//! `server::sys` — no async runtime, nothing vendored) drives every
+//! connection's parse/respond state machine from readiness events;
+//! the legacy thread-per-connection mode survives behind
+//! [`ServeMode::Threaded`] for A/B benching and non-Linux builds.
+//!
+//! Layers: `sys` (raw epoll/eventfd/writev FFI) → `reactor` (event
+//! loops, connection slab, accept hand-off, idle sweep, drain) →
+//! `conn` (protocol state machine + `DrivenConn` readiness wrapper +
+//! bounded `OutBuf`) → `tcp` (listener bootstrap + mode dispatch) →
+//! `metrics` (gauges the `stats` command reports).
 
 pub mod conn;
 pub mod metrics;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
+#[cfg(target_os = "linux")]
+pub mod sys;
 pub mod tcp;
 
-pub use conn::{Conn, NoControl};
-pub use tcp::{Control, Server, ServerHandle};
+pub use conn::{Conn, ConnState, DrivenConn, NoControl, OutBuf, RespSink};
+pub use tcp::{Control, ServeMode, Server, ServerHandle};

@@ -1,0 +1,435 @@
+//! Sharded epoll reactor: N event-loop threads, each owning one epoll
+//! instance and a slab of [`DrivenConn`] connection state machines.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!                       accept thread (server::tcp)
+//!                     round-robin  |  max_conns gate
+//!             +-----------+-----------+-----------+
+//!             v           v           v
+//!        [inbox 0]    [inbox 1]   [inbox N-1]      (Mutex<Vec> + eventfd)
+//!             |           |           |
+//!        reactor 0    reactor 1   reactor N-1      (one epoll each)
+//!          epoll_wait -> DrivenConn::drive(readable, writable)
+//! ```
+//!
+//! Sockets are nonblocking and registered **edge-triggered**
+//! (`EPOLLIN | EPOLLRDHUP | EPOLLET`); `DrivenConn` keeps its own
+//! readiness memory so edges are never lost across yields. EPOLLOUT
+//! interest is added only while a connection has output the socket
+//! refused (`ConnState::Open { wants_write: true }`) and removed once
+//! drained — the "interest re-registration" half of backpressure.
+//! Connections that yield with buffered work (read budget, output
+//! high-water) go on a redrive list served before the next sleep, so
+//! the loop neither busy-spins nor strands an edge-triggered socket.
+//!
+//! The reactor also owns the idle sweep (close sockets quiet past
+//! `idle_timeout`) and the graceful-shutdown drain (flush in-flight
+//! responses, bounded by [`DRAIN_DEADLINE`], then close everything).
+
+#![cfg(target_os = "linux")]
+
+use super::conn::{Conn, ConnState, Control, DrivenConn};
+use super::metrics::Metrics;
+use super::sys::{
+    Epoll, EpollEvent, WakeFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use crate::store::sharded::ShardedStore;
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Event token reserved for the inbox eventfd.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Events drained per `epoll_wait`.
+const EVENTS_PER_WAIT: usize = 256;
+
+/// Wait timeout: bounds shutdown-observation and idle-sweep latency.
+const TICK_MS: i32 = 200;
+
+/// How often the idle sweep scans the connection slab.
+const SWEEP_EVERY: Duration = Duration::from_secs(1);
+
+/// Graceful shutdown: total time budget for flushing in-flight
+/// responses before connections are closed regardless.
+const DRAIN_DEADLINE: Duration = Duration::from_millis(500);
+
+/// Hand-off queue from the accept thread into one reactor.
+struct Inbox {
+    queue: Mutex<Vec<TcpStream>>,
+    wake: WakeFd,
+    /// Cleared when the owning reactor exits (including by panic) so
+    /// the accept thread stops routing sockets into a black hole.
+    alive: AtomicBool,
+}
+
+impl Inbox {
+    /// Poison-proof lock: a reactor that panicked while holding the
+    /// queue must not take the accept thread down with it.
+    fn queue(&self) -> std::sync::MutexGuard<'_, Vec<TcpStream>> {
+        match self.queue.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+/// The running reactor threads; shared between the `ServerHandle` and
+/// the accept thread (hence the interior-mutable join list).
+pub(crate) struct ReactorPool {
+    inboxes: Vec<Arc<Inbox>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl ReactorPool {
+    pub(crate) fn threads(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    /// Queue an accepted socket onto reactor `i % N` (skipping dead
+    /// reactors) and wake it. If every reactor has died the socket is
+    /// dropped and its gauge claim released.
+    pub(crate) fn dispatch(&self, i: usize, stream: TcpStream) {
+        let n = self.inboxes.len();
+        for offset in 0..n {
+            let inbox = &self.inboxes[(i + offset) % n];
+            if !inbox.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            inbox.queue().push(stream);
+            inbox.wake.wake();
+            return;
+        }
+        // no live reactor: close the socket, undo the accept gate
+        Metrics::bump(&self.metrics.connections_closed);
+        Metrics::dec(&self.metrics.curr_connections);
+    }
+
+    /// Wake every reactor so it observes the shutdown flag promptly.
+    pub(crate) fn wake_all(&self) {
+        for inbox in &self.inboxes {
+            inbox.wake.wake();
+        }
+    }
+
+    pub(crate) fn join_all(&self) {
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn `threads` reactor event loops.
+pub(crate) fn start(
+    threads: usize,
+    idle_timeout: Option<Duration>,
+    store: Arc<ShardedStore>,
+    control: Arc<dyn Control>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<Arc<ReactorPool>> {
+    let threads = threads.max(1);
+    let mut inboxes = Vec::with_capacity(threads);
+    let mut handles = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let inbox = Arc::new(Inbox {
+            queue: Mutex::new(Vec::new()),
+            wake: WakeFd::new()?,
+            alive: AtomicBool::new(true),
+        });
+        let ep = Epoll::new()?;
+        ep.add(inbox.wake.raw(), WAKE_TOKEN, EPOLLIN)?;
+        let ctx = ReactorCtx {
+            ep,
+            inbox: inbox.clone(),
+            idle_timeout,
+            store: store.clone(),
+            control: control.clone(),
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+        };
+        let thread_inbox = inbox.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("slabforge-reactor-{i}"))
+            .spawn(move || {
+                // contain panics: one reactor dying must not poison the
+                // accept thread or silently black-hole its inbox — the
+                // dispatcher fails over to the surviving reactors.
+                // Connection gauges stay correct because Entry::drop
+                // does the accounting even during unwinding.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                    ctx.run()
+                }));
+                thread_inbox.alive.store(false, Ordering::SeqCst);
+                if r.is_err() {
+                    eprintln!(
+                        "reactor-{i} panicked; its connections were closed and \
+                         new sockets fail over to the remaining reactors"
+                    );
+                }
+            })?;
+        inboxes.push(inbox);
+        handles.push(h);
+    }
+    Ok(Arc::new(ReactorPool {
+        inboxes,
+        handles: Mutex::new(handles),
+        metrics,
+    }))
+}
+
+/// One live connection slot. The connection gauges are settled in
+/// `Drop`, not at explicit close sites, so the accounting stays correct
+/// even when a reactor unwinds from a panic and its slab is dropped.
+struct Entry {
+    dc: DrivenConn<TcpStream>,
+    fd: RawFd,
+    /// EPOLLOUT currently registered.
+    interest_write: bool,
+    metrics: Arc<Metrics>,
+}
+
+impl Drop for Entry {
+    fn drop(&mut self) {
+        // the TcpStream closes with the DrivenConn, which deregisters
+        // the fd from epoll
+        Metrics::bump(&self.metrics.connections_closed);
+        Metrics::dec(&self.metrics.curr_connections);
+    }
+}
+
+/// Slab-of-connections table: slot index doubles as the epoll token, so
+/// event dispatch is a bounds-checked vector index, no hashing.
+struct Slab {
+    conns: Vec<Option<Entry>>,
+    free: Vec<usize>,
+}
+
+impl Slab {
+    fn alloc(&mut self) -> usize {
+        match self.free.pop() {
+            Some(slot) => slot,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
+            }
+        }
+    }
+
+    fn close(&mut self, slot: usize) {
+        if self.conns[slot].take().is_some() {
+            self.free.push(slot);
+        }
+    }
+}
+
+struct ReactorCtx {
+    ep: Epoll,
+    inbox: Arc<Inbox>,
+    idle_timeout: Option<Duration>,
+    store: Arc<ShardedStore>,
+    control: Arc<dyn Control>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ReactorCtx {
+    fn run(self) {
+        let mut slab = Slab {
+            conns: Vec::new(),
+            free: Vec::new(),
+        };
+        let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];
+        // redrive double-buffer, persistent across iterations so the
+        // event loop itself allocates nothing in steady state
+        let mut redrive: Vec<usize> = Vec::new();
+        let mut next: Vec<usize> = Vec::new();
+        let mut last_sweep = Instant::now();
+        loop {
+            let timeout = if redrive.is_empty() { TICK_MS } else { 0 };
+            let n = match self.ep.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("reactor: epoll_wait failed: {e}");
+                    break;
+                }
+            };
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let mut accept_new = false;
+            for ev in events.iter().take(n) {
+                // copy out of the (possibly packed) kernel struct
+                let (bits, token) = {
+                    let e = *ev;
+                    (e.events, e.data)
+                };
+                if token == WAKE_TOKEN {
+                    self.inbox.wake.drain();
+                    accept_new = true;
+                    continue;
+                }
+                let readable = bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0;
+                let writable = bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0;
+                self.drive_slot(&mut slab, token as usize, readable, writable, &mut next);
+            }
+            // new sockets register after the event batch so a freed
+            // slot can never be reused while its stale events are still
+            // in `events`
+            if accept_new {
+                let fresh: Vec<TcpStream> =
+                    std::mem::take(&mut *self.inbox.queue());
+                for stream in fresh {
+                    self.register(&mut slab, stream, &mut next);
+                }
+            }
+            // re-drive yielded connections (buffered input or lifted
+            // backpressure) before sleeping again
+            for i in 0..redrive.len() {
+                let slot = redrive[i];
+                self.drive_slot(&mut slab, slot, false, false, &mut next);
+            }
+            redrive.clear();
+            next.sort_unstable();
+            next.dedup();
+            std::mem::swap(&mut redrive, &mut next);
+
+            if self.idle_timeout.is_some() && last_sweep.elapsed() >= SWEEP_EVERY {
+                self.sweep_idle(&mut slab);
+                last_sweep = Instant::now();
+            }
+        }
+        self.drain_and_close(&mut slab);
+    }
+
+    /// Register an accepted socket: nonblocking, edge-triggered
+    /// read-interest, then an immediate drive so bytes that arrived
+    /// before registration are not stranded.
+    fn register(&self, slab: &mut Slab, stream: TcpStream, redrive: &mut Vec<usize>) {
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            Metrics::bump(&self.metrics.connections_closed);
+            Metrics::dec(&self.metrics.curr_connections);
+            return;
+        }
+        let fd = stream.as_raw_fd();
+        let slot = slab.alloc();
+        if self
+            .ep
+            .add(fd, slot as u64, EPOLLIN | EPOLLRDHUP | EPOLLET)
+            .is_err()
+        {
+            slab.free.push(slot);
+            Metrics::bump(&self.metrics.connections_closed);
+            Metrics::dec(&self.metrics.curr_connections);
+            return;
+        }
+        let conn = Conn::with_metrics(
+            self.store.clone(),
+            self.control.clone(),
+            self.metrics.clone(),
+        );
+        let dc = DrivenConn::new(stream, conn).with_direct_fd(fd);
+        slab.conns[slot] = Some(Entry {
+            dc,
+            fd,
+            interest_write: false,
+            metrics: self.metrics.clone(),
+        });
+        self.drive_slot(slab, slot, true, true, redrive);
+    }
+
+    /// Drive one connection and apply the outcome: close, EPOLLOUT
+    /// interest re-registration, or a redrive request.
+    fn drive_slot(
+        &self,
+        slab: &mut Slab,
+        slot: usize,
+        readable: bool,
+        writable: bool,
+        redrive: &mut Vec<usize>,
+    ) {
+        // (outcome computed first so the entry borrow ends before the
+        // slab is mutated)
+        let outcome = match slab.conns.get_mut(slot).and_then(Option::as_mut) {
+            None => return, // stale event for an already-closed connection
+            Some(entry) => match entry.dc.drive(readable, writable, &self.metrics) {
+                ConnState::Closed => None,
+                ConnState::Open { wants_write } => Some((
+                    wants_write,
+                    entry.interest_write,
+                    entry.fd,
+                    entry.dc.wants_redrive(),
+                )),
+            },
+        };
+        match outcome {
+            None => slab.close(slot),
+            Some((wants_write, interest_write, fd, wants_redrive)) => {
+                if wants_write != interest_write {
+                    let mut bits = EPOLLIN | EPOLLRDHUP | EPOLLET;
+                    if wants_write {
+                        bits |= EPOLLOUT;
+                    }
+                    if self.ep.modify(fd, slot as u64, bits).is_err() {
+                        slab.close(slot);
+                        return;
+                    }
+                    if let Some(entry) = slab.conns[slot].as_mut() {
+                        entry.interest_write = wants_write;
+                    }
+                }
+                if wants_redrive {
+                    redrive.push(slot);
+                }
+            }
+        }
+    }
+
+    /// Close connections with no read activity past the idle timeout —
+    /// `quit`-less load generators cannot leak fds.
+    fn sweep_idle(&self, slab: &mut Slab) {
+        let Some(timeout) = self.idle_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        for slot in 0..slab.conns.len() {
+            let idle = match &slab.conns[slot] {
+                Some(entry) => entry.dc.idle_for(now),
+                None => continue,
+            };
+            if idle > timeout {
+                slab.close(slot);
+            }
+        }
+    }
+
+    /// Graceful shutdown: flush whatever responses are already encoded
+    /// (flush-only — no further reads or command execution; bounded by
+    /// [`DRAIN_DEADLINE`]), then close every socket.
+    fn drain_and_close(&self, slab: &mut Slab) {
+        let deadline = Instant::now() + DRAIN_DEADLINE;
+        loop {
+            let mut pending = false;
+            for entry in slab.conns.iter_mut().flatten() {
+                if entry.dc.has_pending_out() {
+                    entry.dc.flush_pending(&self.metrics);
+                    pending |= entry.dc.has_pending_out();
+                }
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for slot in 0..slab.conns.len() {
+            slab.close(slot);
+        }
+    }
+}

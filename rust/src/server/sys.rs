@@ -1,0 +1,272 @@
+//! Raw Linux syscall bindings for the epoll reactor (`server::reactor`).
+//!
+//! The offline build image vendors no crates (not even `libc`), so the
+//! handful of syscalls the reactor needs — `epoll_*`, `eventfd`,
+//! `writev`, `signal` — are declared here as `extern "C"` against the
+//! system libc that `std` already links. Everything is wrapped in safe
+//! RAII types; `std::io::Error::last_os_error()` reads `errno` for us.
+
+#![cfg(target_os = "linux")]
+
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::{AsRawFd, FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+// ---------------------------------------------------------------- epoll
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+pub const EPOLLET: u32 = 1 << 31;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+#[allow(dead_code)]
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+/// Kernel `struct epoll_event`. Packed on x86_64 only (the kernel UAPI
+/// declares it `__attribute__((packed))` there and natural elsewhere).
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+#[repr(C)]
+struct IoVec {
+    base: *const c_void,
+    len: usize,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn eventfd(initval: u32, flags: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
+    fn signal(signum: c_int, handler: usize) -> usize;
+}
+
+/// An epoll instance. Registered fds deregister themselves when their
+/// owner closes them, so only `add`/`modify`/`wait` are needed.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn add(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, token, events)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, token, events)
+    }
+
+    /// Wait for events; `timeout_ms < 0` blocks forever. `EINTR` is
+    /// reported as zero events so callers just loop.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        let n = unsafe {
+            epoll_wait(
+                self.fd,
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+// -------------------------------------------------------------- eventfd
+
+/// Cross-thread reactor wakeup: an `eventfd` wrapped in a `File` (which
+/// gives us read/write/close without further FFI). Nonblocking, so
+/// `drain` can slurp until empty.
+pub struct WakeFd {
+    file: File,
+}
+
+impl WakeFd {
+    pub fn new() -> io::Result<WakeFd> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(WakeFd {
+            file: unsafe { File::from_raw_fd(fd) },
+        })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    /// Wake the owning reactor (async-safe, callable from any thread).
+    pub fn wake(&self) {
+        let _ = (&self.file).write(&1u64.to_ne_bytes());
+    }
+
+    /// Consume pending wakeups so a level-triggered registration quiesces.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        while matches!((&self.file).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+// --------------------------------------------------------------- writev
+
+/// Scatter-gather write of up to four slices (pending buffer, response
+/// header, value chunk, trailing CRLF). Returns bytes written.
+pub fn writev_slices(fd: RawFd, bufs: &[&[u8]]) -> io::Result<usize> {
+    debug_assert!(bufs.len() <= 4);
+    let mut iov = [IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    }, IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    }, IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    }, IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    }];
+    let mut n = 0;
+    for b in bufs {
+        if b.is_empty() {
+            continue;
+        }
+        iov[n] = IoVec {
+            base: b.as_ptr() as *const c_void,
+            len: b.len(),
+        };
+        n += 1;
+    }
+    if n == 0 {
+        return Ok(0);
+    }
+    let rc = unsafe { writev(fd, iov.as_ptr(), n as c_int) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(rc as usize)
+}
+
+// -------------------------------------------------------------- signals
+
+const SIGINT: c_int = 2;
+const SIGTERM: c_int = 15;
+
+static TERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_sig: c_int) {
+    TERM_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers that set a flag (the only
+/// async-signal-safe thing we do); returns the flag for the caller to
+/// poll. Used by `main` for graceful serve shutdown.
+pub fn install_term_flag() -> &'static AtomicBool {
+    let handler = on_term as extern "C" fn(c_int) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+    &TERM_FLAG
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoll_wait_times_out_empty() {
+        let ep = Epoll::new().unwrap();
+        let mut evs = vec![EpollEvent::zeroed(); 8];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wakefd_roundtrip() {
+        let ep = Epoll::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        ep.add(wake.raw(), 7, EPOLLIN).unwrap();
+        let mut evs = vec![EpollEvent::zeroed(); 8];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0, "quiet before wake");
+        wake.wake();
+        wake.wake();
+        let n = ep.wait(&mut evs, 100).unwrap();
+        assert_eq!(n, 1);
+        let token = evs[0].data;
+        assert_eq!(token, 7);
+        wake.drain();
+        // drained: level-triggered registration goes quiet again
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn writev_scatter_order() {
+        use std::io::Read;
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let tx = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        let n = writev_slices(tx.as_raw_fd(), &[b"ab", b"", b"cde", b"f"]).unwrap();
+        assert_eq!(n, 6);
+        let mut got = [0u8; 6];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"abcdef");
+    }
+}

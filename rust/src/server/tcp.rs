@@ -1,16 +1,60 @@
-//! TCP server: accept loop + thread-per-connection workers over the
-//! [`Conn`](super::conn::Conn) state machine.
+//! TCP front end: listener bootstrap + accept loop. The accept thread
+//! gates on `max_conns` and hands sockets to one of two serving
+//! back ends:
+//!
+//! * [`ServeMode::Event`] (default on Linux) — the sharded epoll
+//!   reactor (`server::reactor`): `reactor_threads` event-loop threads
+//!   drive every connection's [`Conn`](super::conn::Conn) state machine
+//!   from readiness events. Scales to thousands of sockets on a handful
+//!   of OS threads.
+//! * [`ServeMode::Threaded`] — the legacy thread-per-connection model,
+//!   kept behind a config flag for A/B benching and as the non-Linux
+//!   fallback.
 
 use super::conn::Conn;
 use super::metrics::Metrics;
+#[cfg(target_os = "linux")]
+use super::reactor::{self, ReactorPool};
 use crate::store::sharded::ShardedStore;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 pub use super::conn::{Control, NoControl};
+
+/// Which serving back end `Server::start` launches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Epoll reactor (default; falls back to `Threaded` off Linux).
+    Event,
+    /// Legacy thread-per-connection.
+    Threaded,
+}
+
+/// Default cap on live connections (memcached's `-c` default).
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+fn default_reactor_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2)
+}
+
+/// Accept-gate bookkeeping shared by both serving modes: count the
+/// accept, enforce `max_conns`, and on admission claim a
+/// `curr_connections` slot (the serving back end releases it on close).
+fn try_admit(metrics: &Metrics, max_conns: usize) -> bool {
+    Metrics::bump(&metrics.connections_accepted);
+    if metrics.curr_connections.load(Ordering::Relaxed) >= max_conns as u64 {
+        Metrics::bump(&metrics.rejected_connections);
+        return false;
+    }
+    Metrics::bump(&metrics.curr_connections);
+    true
+}
 
 /// A running server; dropping the handle does NOT stop it — call
 /// [`ServerHandle::shutdown`].
@@ -18,6 +62,10 @@ pub struct ServerHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    #[cfg(target_os = "linux")]
+    pool: Option<Arc<ReactorPool>>,
+    /// Reactor threads serving connections (0 in threaded mode).
+    reactors: usize,
     pub metrics: Arc<Metrics>,
 }
 
@@ -27,35 +75,80 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Stop accepting, unblock the accept loop, join it. In-flight
-    /// connection threads finish their current command and exit on the
-    /// next read (connections are closed by peers or idle-out).
+    /// Event-loop threads serving connections; 0 means legacy threaded
+    /// mode.
+    pub fn reactors(&self) -> usize {
+        self.reactors
+    }
+
+    /// Stop accepting, drain the reactors (in-flight responses are
+    /// flushed, bounded), close every connection, join all threads. In
+    /// threaded mode, connection threads observe the flag on their next
+    /// read-timeout tick.
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        #[cfg(target_os = "linux")]
+        if let Some(pool) = &self.pool {
+            pool.wake_all();
+        }
         // poke the listener so accept() returns
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        #[cfg(target_os = "linux")]
+        if let Some(pool) = self.pool.take() {
+            pool.join_all();
+        }
     }
 }
 
-/// Server configuration + launch.
+/// Server configuration + launch (builder-style knobs, then `start`).
 pub struct Server {
     pub store: Arc<ShardedStore>,
     pub control: Arc<dyn Control>,
+    pub mode: ServeMode,
+    pub reactor_threads: usize,
+    pub max_conns: usize,
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Server {
     pub fn new(store: Arc<ShardedStore>) -> Self {
-        Server {
-            store,
-            control: Arc::new(NoControl),
-        }
+        Server::with_control(store, Arc::new(NoControl))
     }
 
     pub fn with_control(store: Arc<ShardedStore>, control: Arc<dyn Control>) -> Self {
-        Server { store, control }
+        Server {
+            store,
+            control,
+            mode: ServeMode::Event,
+            reactor_threads: default_reactor_threads(),
+            max_conns: DEFAULT_MAX_CONNS,
+            idle_timeout: None,
+        }
+    }
+
+    pub fn mode(mut self, mode: ServeMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn reactor_threads(mut self, n: usize) -> Self {
+        self.reactor_threads = n.max(1);
+        self
+    }
+
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.max_conns = n.max(1);
+        self
+    }
+
+    /// Close connections with no read activity for this long
+    /// (`None` = never).
+    pub fn idle_timeout(mut self, t: Option<Duration>) -> Self {
+        self.idle_timeout = t;
+        self
     }
 
     /// Bind and serve in background threads.
@@ -65,10 +158,77 @@ impl Server {
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::new());
 
+        #[cfg(target_os = "linux")]
+        if self.mode == ServeMode::Event {
+            return self.start_event(listener, addr, shutdown, metrics);
+        }
+        self.start_threaded(listener, addr, shutdown, metrics)
+    }
+
+    /// Reactor mode: spawn the event loops, then a thin accept thread
+    /// that gates on `max_conns` and round-robins sockets across them.
+    #[cfg(target_os = "linux")]
+    fn start_event(
+        self,
+        listener: TcpListener,
+        addr: SocketAddr,
+        shutdown: Arc<AtomicBool>,
+        metrics: Arc<Metrics>,
+    ) -> std::io::Result<ServerHandle> {
+        let pool = reactor::start(
+            self.reactor_threads,
+            self.idle_timeout,
+            self.store,
+            self.control,
+            metrics.clone(),
+            shutdown.clone(),
+        )?;
+        let reactors = pool.threads();
+        let accept_shutdown = shutdown.clone();
+        let accept_metrics = metrics.clone();
+        let max_conns = self.max_conns;
+        let accept_pool = pool.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("slabforge-accept".into())
+            .spawn(move || {
+                let mut next = 0usize;
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if !try_admit(&accept_metrics, max_conns) {
+                        continue; // drop: close immediately
+                    }
+                    accept_pool.dispatch(next, stream);
+                    next = next.wrapping_add(1);
+                }
+            })?;
+
+        Ok(ServerHandle {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            pool: Some(pool),
+            reactors,
+            metrics,
+        })
+    }
+
+    /// Legacy mode: one OS thread per connection.
+    fn start_threaded(
+        self,
+        listener: TcpListener,
+        addr: SocketAddr,
+        shutdown: Arc<AtomicBool>,
+        metrics: Arc<Metrics>,
+    ) -> std::io::Result<ServerHandle> {
         let accept_shutdown = shutdown.clone();
         let accept_metrics = metrics.clone();
         let store = self.store;
         let control = self.control;
+        let max_conns = self.max_conns;
+        let idle_timeout = self.idle_timeout;
         let accept_thread = std::thread::Builder::new()
             .name("slabforge-accept".into())
             .spawn(move || {
@@ -77,17 +237,34 @@ impl Server {
                         break;
                     }
                     let Ok(stream) = stream else { continue };
-                    Metrics::bump(&accept_metrics.connections_accepted);
+                    if !try_admit(&accept_metrics, max_conns) {
+                        continue; // drop: close immediately
+                    }
                     let store = store.clone();
                     let control = control.clone();
                     let metrics = accept_metrics.clone();
                     let conn_shutdown = accept_shutdown.clone();
-                    let _ = std::thread::Builder::new()
+                    let spawned = std::thread::Builder::new()
                         .name("slabforge-conn".into())
                         .spawn(move || {
-                            serve_connection(stream, store, control, &metrics, &conn_shutdown);
+                            serve_connection(
+                                stream,
+                                store,
+                                control,
+                                metrics.clone(),
+                                &conn_shutdown,
+                                idle_timeout,
+                            );
                             Metrics::bump(&metrics.connections_closed);
+                            Metrics::dec(&metrics.curr_connections);
                         });
+                    if spawned.is_err() {
+                        // thread exhaustion: the socket was dropped with
+                        // the closure — undo the gauge or it drifts up
+                        // to max_conns and rejects forever
+                        Metrics::bump(&accept_metrics.connections_closed);
+                        Metrics::dec(&accept_metrics.curr_connections);
+                    }
                 }
             })?;
 
@@ -95,40 +272,52 @@ impl Server {
             addr,
             shutdown,
             accept_thread: Some(accept_thread),
+            #[cfg(target_os = "linux")]
+            pool: None,
+            reactors: 0,
             metrics,
         })
     }
 }
 
-/// Once the reused output buffer balloons past this (a huge multiget
-/// response), shrink it back so an idle connection doesn't pin the
-/// high-water mark forever.
-const OUT_BUF_KEEP: usize = 256 * 1024;
-const OUT_BUF_STEADY: usize = 16 * 1024;
+// Output-buffer shrink thresholds are shared with the reactor path
+// (`conn::OUT_KEEP`/`conn::OUT_STEADY`) so the two modes cannot
+// silently diverge when retuned.
+use super::conn::{OUT_KEEP as OUT_BUF_KEEP, OUT_STEADY as OUT_BUF_STEADY};
 
+/// Legacy thread-per-connection serving loop (blocking reads with a
+/// periodic timeout to observe shutdown and the idle deadline).
 fn serve_connection(
     mut stream: TcpStream,
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
-    metrics: &Metrics,
+    metrics: Arc<Metrics>,
     shutdown: &AtomicBool,
+    idle_timeout: Option<Duration>,
 ) {
     let _ = stream.set_nodelay(true);
-    // periodic read timeouts let the thread observe shutdown
+    // periodic read timeouts let the thread observe shutdown + idleness
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
-    let mut conn = Conn::new(store, control);
+    let mut conn = Conn::with_metrics(store, control, metrics.clone());
     let mut rbuf = [0u8; 16 * 1024];
     // reused across reads: steady-state traffic costs zero buffer
     // allocations per request (the Conn's receive cursor buffer and
     // staging buffers are likewise retained)
     let mut out: Vec<u8> = Vec::with_capacity(OUT_BUF_STEADY);
+    let mut last_activity = std::time::Instant::now();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
+        if let Some(limit) = idle_timeout {
+            if last_activity.elapsed() > limit {
+                return; // reap: same contract as the reactor's idle sweep
+            }
+        }
         match stream.read(&mut rbuf) {
             Ok(0) => return, // peer closed
             Ok(n) => {
+                last_activity = std::time::Instant::now();
                 Metrics::add(&metrics.bytes_read, n as u64);
                 out.clear();
                 let done = conn.on_bytes(&rbuf[..n], &mut out);
@@ -164,8 +353,8 @@ mod tests {
     use crate::slab::PAGE_SIZE;
     use crate::store::store::Clock;
 
-    fn start_server() -> ServerHandle {
-        let store = Arc::new(
+    fn store() -> Arc<ShardedStore> {
+        Arc::new(
             ShardedStore::with(
                 ChunkSizePolicy::default(),
                 PAGE_SIZE,
@@ -175,20 +364,45 @@ mod tests {
                 Clock::System,
             )
             .unwrap(),
-        );
-        Server::new(store).start("127.0.0.1:0").unwrap()
+        )
+    }
+
+    fn start_server() -> ServerHandle {
+        Server::new(store()).start("127.0.0.1:0").unwrap()
+    }
+
+    fn start_threaded_server() -> ServerHandle {
+        Server::new(store())
+            .mode(ServeMode::Threaded)
+            .start("127.0.0.1:0")
+            .unwrap()
+    }
+
+    fn exchange(handle: &ServerHandle) {
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"set k 0 0 5\r\nhello\r\nget k\r\nquit\r\n")
+            .unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let t = String::from_utf8_lossy(&buf);
+        assert!(t.contains("STORED"), "{t}");
+        assert!(t.contains("VALUE k 0 5\r\nhello"), "{t}");
     }
 
     #[test]
     fn end_to_end_set_get_over_tcp() {
         let handle = start_server();
-        let mut s = TcpStream::connect(handle.addr()).unwrap();
-        s.write_all(b"set k 0 0 5\r\nhello\r\nget k\r\nquit\r\n").unwrap();
-        let mut buf = Vec::new();
-        s.read_to_end(&mut buf).unwrap();
-        let t = String::from_utf8_lossy(&buf);
-        assert!(t.contains("STORED"));
-        assert!(t.contains("VALUE k 0 5\r\nhello"));
+        #[cfg(target_os = "linux")]
+        assert!(handle.reactors() >= 1, "event mode must be the default");
+        exchange(&handle);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn legacy_threaded_mode_still_serves() {
+        let handle = start_threaded_server();
+        assert_eq!(handle.reactors(), 0);
+        exchange(&handle);
         handle.shutdown();
     }
 
@@ -228,5 +442,39 @@ mod tests {
     fn shutdown_unblocks() {
         let handle = start_server();
         handle.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn shutdown_unblocks_threaded() {
+        let handle = start_threaded_server();
+        handle.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn max_conns_rejects_excess_accepts() {
+        let handle = Server::new(store())
+            .max_conns(2)
+            .start("127.0.0.1:0")
+            .unwrap();
+        let _a = TcpStream::connect(handle.addr()).unwrap();
+        let _b = TcpStream::connect(handle.addr()).unwrap();
+        // give the accept thread time to register both
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while handle.metrics.snapshot().curr_connections < 2 {
+            assert!(std::time::Instant::now() < deadline, "conns not registered");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // the third connection is accepted then dropped by the gate
+        let mut c = TcpStream::connect(handle.addr()).unwrap();
+        let mut buf = [0u8; 16];
+        let _ = c.write_all(b"version\r\n");
+        let n = c.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "rejected connection must be closed");
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while handle.metrics.snapshot().rejected_connections < 1 {
+            assert!(std::time::Instant::now() < deadline, "rejection not counted");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        handle.shutdown();
     }
 }

@@ -6,7 +6,7 @@ use slabforge::client::Client;
 use slabforge::config::settings::{Algorithm, Backend, OptimizerSettings};
 use slabforge::optimizer::autotune::AutoTuner;
 use slabforge::optimizer::collector::SizeCollector;
-use slabforge::server::{Server, ServerHandle};
+use slabforge::server::{ServeMode, Server, ServerHandle};
 use slabforge::slab::policy::ChunkSizePolicy;
 use slabforge::slab::PAGE_SIZE;
 use slabforge::store::sharded::ShardedStore;
@@ -159,6 +159,104 @@ fn multiget_over_the_wire_preserves_request_order() {
         vec!["wk9", "wk3", "wk7", "wk0", "wk5", "wk1", "wk8", "wk2", "wk6", "wk4"],
         "multiget must answer in request key order"
     );
+    handle.shutdown();
+}
+
+/// Acceptance gate for the epoll reactor: 256 concurrent sockets, all
+/// live at once, each serving a pipelined set+get — handled by at most
+/// `reactor_threads` event-loop OS threads (plus accept/tuner), not 256
+/// connection threads.
+#[test]
+fn reactor_serves_256_concurrent_sockets() {
+    use std::io::{Read, Write};
+    let (handle, _) = full_server(u64::MAX);
+    let reactors = handle.reactors();
+    assert!(
+        (1..=8).contains(&reactors),
+        "event mode must be the default, got {reactors} reactors"
+    );
+    let addr = handle.addr();
+    const CONNS: usize = 256;
+    let mut socks: Vec<std::net::TcpStream> = (0..CONNS)
+        .map(|_| std::net::TcpStream::connect(addr).unwrap())
+        .collect();
+    // every socket pipelines a noreply set + get of its own key
+    for (i, s) in socks.iter_mut().enumerate() {
+        s.write_all(
+            format!("set ck{i:03} 0 0 4 noreply\r\nv{i:03}\r\nget ck{i:03}\r\n").as_bytes(),
+        )
+        .unwrap();
+    }
+    for (i, s) in socks.iter_mut().enumerate() {
+        let mut got = Vec::new();
+        let mut buf = [0u8; 4096];
+        while !String::from_utf8_lossy(&got).contains("END\r\n") {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed socket {i} early");
+            got.extend_from_slice(&buf[..n]);
+        }
+        let t = String::from_utf8_lossy(&got);
+        assert!(t.contains(&format!("VALUE ck{i:03} 0 4\r\nv{i:03}")), "{t}");
+    }
+    // every socket answered while all 256 were still open
+    assert!(
+        handle.metrics.snapshot().curr_connections >= CONNS as u64,
+        "expected >= {CONNS} live connections, saw {}",
+        handle.metrics.snapshot().curr_connections
+    );
+    drop(socks);
+    handle.shutdown();
+}
+
+/// `stats` must report the reactor's connection gauges (memcached
+/// parity: curr/total/rejected connections).
+#[test]
+fn stats_reports_connection_gauges() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c1 = Client::connect(handle.addr()).unwrap();
+    let _c2 = Client::connect(handle.addr()).unwrap();
+    c1.set("k", b"v", 0, 0).unwrap();
+    // wait until the accept thread has registered both clients
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+    while handle.metrics.snapshot().curr_connections < 2 {
+        assert!(std::time::Instant::now() < deadline, "conns not registered");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let stats = c1.stats(None).unwrap();
+    let curr: u64 = stats["curr_connections"].parse().unwrap();
+    let total: u64 = stats["total_connections"].parse().unwrap();
+    assert!(curr >= 2, "curr_connections {curr}");
+    assert!(total >= curr, "total {total} < curr {curr}");
+    assert!(stats.contains_key("rejected_connections"), "{stats:?}");
+    assert!(stats.contains_key("conn_yields"), "{stats:?}");
+    handle.shutdown();
+}
+
+/// The legacy thread-per-connection mode stays selectable and serves
+/// the full protocol path.
+#[test]
+fn legacy_threaded_mode_over_the_wire() {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let handle = Server::new(store)
+        .mode(ServeMode::Threaded)
+        .start("127.0.0.1:0")
+        .unwrap();
+    assert_eq!(handle.reactors(), 0, "threaded mode must not spawn reactors");
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.set("lk", b"legacy", 0, 0).unwrap();
+    assert_eq!(c.get("lk").unwrap().unwrap().value, b"legacy");
+    let stats = c.stats(None).unwrap();
+    assert!(stats["curr_connections"].parse::<u64>().unwrap() >= 1);
     handle.shutdown();
 }
 

@@ -3,10 +3,20 @@
 # JSON artifact at the repo root so successive PRs have a throughput
 # trajectory to diff (BENCH_server.json rows carry ops_per_sec per
 # workload: pipelined sets, roundtrip gets, pipelined gets, multigets,
-# connection scaling).
+# connection scaling, and the 256-connection reactor sweep — rows that
+# sweep socket counts also carry a "connections" dimension).
+#
+# Usage: bench_server_smoke.sh [--smoke]
+#   --smoke   shrink the workload (SLABFORGE_BENCH_SMOKE=1) so the full
+#             scenario matrix — including 256 sockets — runs in seconds;
+#             used by ci.sh.
 set -euo pipefail
 root="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$root/rust"
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    export SLABFORGE_BENCH_SMOKE=1
+fi
 
 cargo bench --bench bench_server
 
