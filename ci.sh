@@ -18,7 +18,13 @@ cargo build --release
 echo "==> cargo test"
 cargo test -q
 
-echo "==> bench smoke (256-connection reactor sweep included)"
+echo "==> bench smoke (256-connection sweep + reconfigure-under-load)"
 "$root/scripts/bench_server_smoke.sh" --smoke
+
+echo "==> verify reconfig_stall_us landed in BENCH_server.json"
+grep -q "reconfig_stall_us" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the reconfigure-under-load row" >&2
+    exit 1
+}
 
 echo "CI OK"

@@ -278,6 +278,60 @@ fn main() {
         );
     }
 
+    // ---- reconfigure under load (incremental migration) -------------------
+    // While this connection hammers gets, a live slab migration drains
+    // every shard in bounded steps from a background thread (the same
+    // shape the auto-tuner uses). `reconfig_stall_us` records the worst
+    // response gap the client saw mid-drain — the paper's central
+    // reconfiguration operation, now bounded-pause instead of
+    // stop-the-world.
+    {
+        // kick off before spawning the driver so the measurement loop
+        // is guaranteed to observe the drain in flight
+        store.set_migrate_batch(256);
+        store
+            .begin_reconfigure(ChunkSizePolicy::Explicit(vec![
+                464, 505, 543, 584, 636, 728, 944, 1424, 2912, 5840, 11664,
+            ]))
+            .expect("kick off migration");
+        let drv = store.clone();
+        let driver = std::thread::spawn(move || {
+            while drv.migration_step_all() {
+                std::thread::yield_now();
+            }
+        });
+        let mut rng = Pcg64::new(21);
+        let t0 = Instant::now();
+        let mut last = Instant::now();
+        let mut max_gap = std::time::Duration::ZERO;
+        let mut ops = 0usize;
+        while store.migration_active() || ops == 0 {
+            let key = format!("k{:08}", rng.gen_range(n_set as u64));
+            c.get(&key).unwrap();
+            let now = Instant::now();
+            max_gap = max_gap.max(now.duration_since(last));
+            last = now;
+            ops += 1;
+        }
+        driver.join().unwrap();
+        let gauges = store.migration_gauges();
+        println!(
+            "reconfigure under load: {} gets during drain, max stall {}µs, {} items migrated",
+            ops,
+            max_gap.as_micros(),
+            gauges.moved
+        );
+        rows.push(
+            Summary::from_samples(
+                "tcp get during reconfigure",
+                vec![t0.elapsed()],
+                ops as f64,
+            )
+            .with_dim("reconfig_stall_us", max_gap.as_micros() as f64)
+            .with_dim("items_migrated", gauges.moved as f64),
+        );
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

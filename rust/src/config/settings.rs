@@ -4,6 +4,7 @@
 use super::toml::{TomlDoc, TomlError};
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::PAGE_SIZE;
+use crate::store::migrate::DEFAULT_MIGRATE_BATCH;
 use std::fmt;
 
 /// Which optimization algorithm the auto-tuner runs.
@@ -104,6 +105,10 @@ pub struct Settings {
     pub mem_limit: usize,
     pub page_size: usize,
     pub use_cas: bool,
+    /// Items an incremental slab migration moves per step while holding
+    /// a shard's write lock — the bounded-pause knob for live
+    /// reconfiguration (`slabs reconfigure` / the auto-tuner).
+    pub migrate_batch: usize,
     pub policy: ChunkSizePolicy,
     pub optimizer: OptimizerSettings,
 }
@@ -120,6 +125,7 @@ impl Default for Settings {
             mem_limit: 64 << 20,
             page_size: PAGE_SIZE,
             use_cas: true,
+            migrate_batch: DEFAULT_MIGRATE_BATCH,
             policy: ChunkSizePolicy::default(),
             optimizer: OptimizerSettings::default(),
         }
@@ -191,6 +197,12 @@ impl Settings {
         }
         if let Some(v) = doc.get("memory.use_cas") {
             s.use_cas = v.as_bool().ok_or_else(|| invalid("memory.use_cas"))?;
+        }
+        if let Some(v) = doc.get("memory.migrate_batch") {
+            s.migrate_batch = v
+                .as_usize()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| invalid("memory.migrate_batch"))?;
         }
 
         // slab policy: explicit sizes win over growth factor
@@ -344,6 +356,14 @@ artifacts_dir = "artifacts"
         assert!(s.event_loop, "event-driven mode must be the default");
         assert_eq!(s.max_conns, 1024);
         assert_eq!(s.idle_timeout_secs, 0);
+        assert_eq!(s.migrate_batch, 256);
+    }
+
+    #[test]
+    fn migrate_batch_parses_and_validates() {
+        let s = Settings::from_toml("[memory]\nmigrate_batch = 64\n").unwrap();
+        assert_eq!(s.migrate_batch, 64);
+        assert!(Settings::from_toml("[memory]\nmigrate_batch = 0\n").is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!                    [--slab-sizes a,b,c] [--optimizer] [--backend rust|xla]
 //!                    [--algorithm paper|steepest|dp] [--artifacts DIR]
 //!                    [--threads N] [--legacy-threads] [--max-conns N]
-//!                    [--idle-timeout SECS]
+//!                    [--idle-timeout SECS] [--migrate-batch N]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -99,6 +99,15 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
         .map_err(|e| e.to_string())?
     {
         s.idle_timeout_secs = n;
+    }
+    if let Some(n) = args
+        .flag_parse::<usize>("migrate-batch")
+        .map_err(|e| e.to_string())?
+    {
+        if n == 0 {
+            return Err("--migrate-batch must be at least 1".into());
+        }
+        s.migrate_batch = n;
     }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {

@@ -122,6 +122,14 @@ impl AutoTuner {
     }
 
     /// Background loop every `interval_secs`; stop via the flag.
+    ///
+    /// This thread is also the **migration driver**: whenever a drain
+    /// is in flight (kicked off by `slabs reconfigure` or by a tuner
+    /// pass), it pumps bounded [`ShardedStore::migration_step_all`]
+    /// steps until the drain completes — each step holds a shard's
+    /// write lock for at most `migrate_batch` items, so the reactor
+    /// threads keep serving between steps and are never pinned for a
+    /// whole migration.
     pub fn spawn(self: &Arc<Self>, shutdown: Arc<AtomicBool>) -> JoinHandle<()> {
         let tuner = self.clone();
         std::thread::Builder::new()
@@ -131,6 +139,18 @@ impl AutoTuner {
                 let tick = Duration::from_millis(100);
                 let mut waited = Duration::ZERO;
                 while !shutdown.load(Ordering::SeqCst) {
+                    if tuner.store.migration_active() {
+                        while tuner.store.migration_step_all() {
+                            if shutdown.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            // breathe between rounds: std's RwLock makes
+                            // no fairness promise, so back-to-back write
+                            // acquisitions could starve readers
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        continue;
+                    }
                     std::thread::sleep(tick);
                     waited += tick;
                     if waited < interval {
@@ -145,6 +165,14 @@ impl AutoTuner {
 }
 
 impl Control for AutoTuner {
+    /// `slabs optimize` stays synchronous by contract: it reports the
+    /// final recovery numbers, so an apply drives the (incremental,
+    /// lock-yielding) drain to completion before answering. Other
+    /// reactor threads keep serving throughout, but the issuing
+    /// connection's reactor is occupied for the duration — it is a
+    /// measurement/debugging command; steady-state retuning runs on
+    /// the background thread, and the production-facing async path is
+    /// `slabs reconfigure` → `MIGRATING`.
     fn optimize_now(&self) -> String {
         match self.run_once() {
             Ok(TuneOutcome::NotEnoughData { seen, need }) => {
@@ -169,15 +197,23 @@ impl Control for AutoTuner {
         }
     }
 
+    /// `slabs reconfigure` is asynchronous: validate, flip the geometry
+    /// on every shard (O(shards), no item copied), and return
+    /// immediately. The background loop ([`AutoTuner::spawn`]) drives
+    /// the drain in bounded steps; progress is visible in `stats slabs`
+    /// (`migration_*` gauges).
     fn reconfigure(&self, sizes: Vec<usize>) -> Result<String, String> {
         validate_sizes(&sizes, self.page_size).map_err(|e| e.to_string())?;
-        let migs = self
-            .store
-            .reconfigure(ChunkSizePolicy::Explicit(sizes))
+        self.store
+            .begin_reconfigure(ChunkSizePolicy::Explicit(sizes))
             .map_err(|e| e.to_string())?;
-        let moved: usize = migs.iter().map(|m| m.items_moved).sum();
-        let dropped: usize = migs.iter().map(|m| m.items_dropped).sum();
-        Ok(format!("RECONFIGURED items_moved={moved} items_dropped={dropped}"))
+        let g = self.store.migration_gauges();
+        Ok(format!(
+            "MIGRATING shards={} items={} batch={}",
+            self.store.shard_count(),
+            g.items_remaining,
+            self.store.migrate_batch()
+        ))
     }
 
     fn sizes_histogram(&self) -> Option<SizeHistogram> {
@@ -261,11 +297,39 @@ mod tests {
     }
 
     #[test]
-    fn control_trait_reconfigure_validates() {
-        let (_, _, tuner) = setup(10);
+    fn control_trait_reconfigure_validates_and_kicks_off() {
+        let (store, _, tuner) = setup(10);
         assert!(tuner.reconfigure(vec![500, 400]).is_err());
         let msg = tuner.reconfigure(vec![304, 600, 1024]).unwrap();
-        assert!(msg.starts_with("RECONFIGURED"), "{msg}");
+        assert!(msg.starts_with("MIGRATING"), "{msg}");
+        // geometry flipped immediately; drain runs asynchronously
+        assert_eq!(&store.chunk_sizes()[..3], &[304, 600, 1024]);
+        while store.migration_step_all() {}
+        assert!(!store.migration_active());
+    }
+
+    #[test]
+    fn spawned_loop_drives_manual_migration() {
+        let (store, _, tuner) = setup(u64::MAX); // never auto-tunes
+        drive_lognormal(&store, 5000, 9);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = tuner.spawn(stop.clone());
+        let msg = tuner.reconfigure(vec![518, 1024, 8192]).unwrap();
+        assert!(msg.starts_with("MIGRATING"), "{msg}");
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while store.migration_active() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "background loop never finished the drain"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // data survived the background drain
+        assert!(store.get(b"k00000000").is_some());
+        assert!(store.get(b"k00004999").is_some());
+        assert!(store.migration_gauges().moved > 0);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
     }
 
     #[test]

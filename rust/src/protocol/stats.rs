@@ -10,6 +10,7 @@
 use super::response::stat;
 use crate::server::metrics::ConnCounters;
 use crate::slab::SlabStats;
+use crate::store::migrate::MigrationGauges;
 use crate::store::store::StoreStats;
 use crate::util::histogram::SizeHistogram;
 
@@ -54,8 +55,11 @@ pub fn render_general(
     out.extend_from_slice(b"END\r\n");
 }
 
-/// Render `stats slabs` (one row group per active class).
-pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats) {
+/// Render `stats slabs` (one row group per active class, plus the
+/// incremental-migration gauges). While a reconfiguration drains,
+/// per-class rows cover **both** generations, so the hole accounting
+/// stays honest mid-migration.
+pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats, mig: &MigrationGauges) {
     for (i, c) in slabs.per_class.iter().enumerate() {
         if c.pages == 0 {
             continue; // memcached omits classes with no pages
@@ -72,6 +76,12 @@ pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats) {
     }
     stat(out, "active_slabs", slabs.per_class.iter().filter(|c| c.pages > 0).count());
     stat(out, "total_malloced", slabs.pages_allocated * slabs.page_size);
+    stat(out, "total_pages_free", slabs.pages_free);
+    stat(out, "migration_active", mig.active_shards);
+    stat(out, "migration_moved", mig.moved);
+    stat(out, "migration_dropped", mig.dropped);
+    stat(out, "migration_pages_reclaimed", mig.pages_reclaimed);
+    stat(out, "migration_items_remaining", mig.items_remaining);
     out.extend_from_slice(b"END\r\n");
 }
 
@@ -144,7 +154,7 @@ mod tests {
     #[test]
     fn slabs_stats_rows() {
         let mut out = Vec::new();
-        render_slabs(&mut out, &slab_stats_with_items());
+        render_slabs(&mut out, &slab_stats_with_items(), &MigrationGauges::default());
         let t = text(&out);
         // 518 -> class id 9 (600 bytes) with memcached numbering from 1
         assert!(t.contains(":chunk_size 600"), "{t}");
@@ -153,6 +163,28 @@ mod tests {
         assert!(t.contains("STAT active_slabs 2"), "{t}");
         // inactive classes omitted
         assert!(!t.contains(":chunk_size 96\r"), "{t}");
+        // idle migration gauges render as zeros
+        assert!(t.contains("STAT migration_active 0"), "{t}");
+        assert!(t.contains("STAT migration_moved 0"), "{t}");
+    }
+
+    #[test]
+    fn slabs_stats_migration_gauges() {
+        let mut out = Vec::new();
+        let mig = MigrationGauges {
+            active_shards: 2,
+            moved: 1500,
+            dropped: 3,
+            pages_reclaimed: 7,
+            items_remaining: 420,
+        };
+        render_slabs(&mut out, &slab_stats_with_items(), &mig);
+        let t = text(&out);
+        assert!(t.contains("STAT migration_active 2"), "{t}");
+        assert!(t.contains("STAT migration_moved 1500"), "{t}");
+        assert!(t.contains("STAT migration_dropped 3"), "{t}");
+        assert!(t.contains("STAT migration_pages_reclaimed 7"), "{t}");
+        assert!(t.contains("STAT migration_items_remaining 420"), "{t}");
     }
 
     #[test]

@@ -390,7 +390,11 @@ impl Conn {
             Command::Stats { arg } => {
                 match arg.as_deref() {
                     Some(b"slabs") => {
-                        stats::render_slabs(sink, &self.store.slab_stats());
+                        stats::render_slabs(
+                            sink,
+                            &self.store.slab_stats(),
+                            &self.store.migration_gauges(),
+                        );
                     }
                     Some(b"sizes") => match self.control.sizes_histogram() {
                         Some(h) => stats::render_sizes(sink, &h),
@@ -573,6 +577,8 @@ fn store_error(out: &mut Vec<u8>, e: &StoreError) {
         }
         StoreError::TooLarge { .. } => response::server_error(out, "object too large for cache"),
         StoreError::OutOfMemory => response::server_error(out, "out of memory storing object"),
+        StoreError::Busy => response::server_error(out, "slab migration already in progress"),
+        StoreError::BadPolicy(_) => response::server_error(out, "bad slab policy"),
     }
 }
 

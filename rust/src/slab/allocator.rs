@@ -1,12 +1,30 @@
 //! The slab allocator facade: class selection, the global page budget,
 //! and whole-cache hole accounting (the paper's measured quantity).
+//!
+//! ## Two generations, one budget
+//!
+//! A live reconfiguration does not build a second allocator. Instead
+//! the allocator itself holds up to two class tables: the **current**
+//! generation (where every new allocation lands) and, while a migration
+//! drains, the **old** generation (read/free only). Both draw pages
+//! from one budget; a fully drained old page dissolves into the
+//! free-page pool and is re-carved for the new geometry. The transient
+//! overhead of a migration is therefore bounded by
+//! [`MIGRATION_PAGE_SLACK`] pages — not the 2× of a shadow copy.
 
 use super::class::{ChunkLoc, ClassStats, SlabClass};
 use super::policy::{ChunkSizePolicy, PolicyError};
 use std::fmt;
 
+/// Extra pages the budget tolerates while a migration is draining: the
+/// new geometry needs somewhere to land items before the first old page
+/// has fully drained. Constant — independent of cache size.
+pub const MIGRATION_PAGE_SLACK: usize = 2;
+
 /// Handle to an allocated chunk. `class` indexes the allocator's class
-/// table; the location addresses the chunk within the class.
+/// table; the location addresses the chunk within the class. Whether it
+/// points into the current or the old generation is tracked by the
+/// owner (the store tags each item with its generation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkHandle {
     pub class: u16,
@@ -49,12 +67,18 @@ impl From<PolicyError> for SlabError {
     }
 }
 
-/// Whole-allocator statistics (aggregated `stats slabs`).
+/// Whole-allocator statistics (aggregated `stats slabs`). While a
+/// migration drains, totals cover **both** generations and `per_class`
+/// lists the current-generation classes followed by the old-generation
+/// classes still holding pages.
 #[derive(Clone, Debug)]
 pub struct SlabStats {
     pub per_class: Vec<ClassStats>,
     pub page_size: usize,
+    /// Carved pages, both generations.
     pub pages_allocated: usize,
+    /// Recycled page buffers waiting in the free pool (still resident).
+    pub pages_free: usize,
     pub page_budget: usize,
     pub requested_bytes: u64,
     pub allocated_bytes: u64,
@@ -74,12 +98,23 @@ impl SlabStats {
     }
 }
 
-/// The slab allocator: a class table sharing one page budget.
+/// The old (draining) generation of a mid-migration allocator.
+struct OldGen {
+    classes: Vec<SlabClass>,
+    chunk_sizes: Vec<usize>,
+}
+
+/// The slab allocator: a class table sharing one page budget, plus —
+/// while a migration drains — the previous generation's class table.
 pub struct SlabAllocator {
     classes: Vec<SlabClass>,
     /// Ascending chunk sizes, parallel to `classes` (lookup table).
     chunk_sizes: Vec<usize>,
+    old: Option<OldGen>,
+    /// Recycled page buffers (from drained old pages) awaiting reuse.
+    free_pages: Vec<Box<[u8]>>,
     page_size: usize,
+    /// Carved pages across both generations (excludes `free_pages`).
     pages_allocated: usize,
     page_budget: usize,
 }
@@ -97,13 +132,15 @@ impl SlabAllocator {
         Ok(SlabAllocator {
             classes,
             chunk_sizes,
+            old: None,
+            free_pages: Vec::new(),
             page_size,
             pages_allocated: 0,
             page_budget: (mem_limit / page_size).max(1),
         })
     }
 
-    /// The ascending chunk-size table.
+    /// The ascending chunk-size table (current generation).
     #[inline]
     pub fn chunk_sizes(&self) -> &[usize] {
         &self.chunk_sizes
@@ -119,9 +156,16 @@ impl SlabAllocator {
         self.page_budget
     }
 
+    /// Carved pages across both generations.
     #[inline]
     pub fn pages_allocated(&self) -> usize {
         self.pages_allocated
+    }
+
+    /// Recycled page buffers held for reuse.
+    #[inline]
+    pub fn free_page_count(&self) -> usize {
+        self.free_pages.len()
     }
 
     /// Largest storable item.
@@ -140,13 +184,45 @@ impl SlabAllocator {
         }
     }
 
-    /// Chunk size of a class.
+    /// Chunk size of a class (current generation).
     #[inline]
     pub fn chunk_size_of(&self, class: u16) -> usize {
         self.chunk_sizes[class as usize]
     }
 
-    /// Allocate a chunk for an item of `size` bytes.
+    /// Pages the budget admits right now (slack applies while a
+    /// migration is draining).
+    #[inline]
+    fn effective_budget(&self) -> usize {
+        self.page_budget + if self.old.is_some() { MIGRATION_PAGE_SLACK } else { 0 }
+    }
+
+    /// Obtain a page buffer: recycled first, fresh while under budget.
+    fn take_page(&mut self) -> Option<Box<[u8]>> {
+        if let Some(buf) = self.free_pages.pop() {
+            return Some(buf);
+        }
+        if self.pages_allocated < self.effective_budget() {
+            Some(vec![0u8; self.page_size].into_boxed_slice())
+        } else {
+            None
+        }
+    }
+
+    /// Retain a released page buffer for reuse, unless total resident
+    /// pages would exceed the current budget (then the memory is
+    /// returned to the OS). During a migration the slack applies, so a
+    /// full-budget drain recycles pages through the pool instead of
+    /// paying a free + zeroed-realloc per page; `finish_migration`
+    /// trims the pool back under the strict budget.
+    fn retire_page(&mut self, buf: Box<[u8]>) {
+        if self.pages_allocated + self.free_pages.len() < self.effective_budget() {
+            self.free_pages.push(buf);
+        }
+    }
+
+    /// Allocate a chunk for an item of `size` bytes (current
+    /// generation).
     pub fn alloc(&mut self, size: usize) -> Result<ChunkHandle, SlabError> {
         let class = self.class_for_size(size).ok_or(SlabError::TooLarge {
             size,
@@ -154,11 +230,12 @@ impl SlabAllocator {
         })?;
         let ci = class as usize;
         if !self.classes[ci].has_free_chunk() {
-            if self.pages_allocated < self.page_budget {
-                self.classes[ci].add_page(self.page_size);
-                self.pages_allocated += 1;
-            } else {
-                return Err(SlabError::NeedEviction { class });
+            match self.take_page() {
+                Some(buf) => {
+                    self.classes[ci].add_page(buf);
+                    self.pages_allocated += 1;
+                }
+                None => return Err(SlabError::NeedEviction { class }),
             }
         }
         let loc = self.classes[ci]
@@ -167,37 +244,182 @@ impl SlabAllocator {
         Ok(ChunkHandle { class, loc })
     }
 
-    /// Free a chunk, un-accounting the item's requested `size`.
+    /// Free a current-generation chunk, un-accounting the item's
+    /// requested `size`.
     pub fn free(&mut self, handle: ChunkHandle, size: usize) {
         self.classes[handle.class as usize].free(handle.loc, size);
     }
 
-    /// Re-account an in-place item resize within the same chunk.
+    /// Free an old-generation chunk (items still draining).
+    pub fn free_old(&mut self, handle: ChunkHandle, size: usize) {
+        self.old
+            .as_mut()
+            .expect("old-generation free without an active migration")
+            .classes[handle.class as usize]
+            .free(handle.loc, size);
+    }
+
+    /// Re-account an in-place item resize within the same chunk
+    /// (current generation).
     pub fn reaccount(&mut self, handle: ChunkHandle, old_size: usize, new_size: usize) {
         self.classes[handle.class as usize].reaccount(old_size, new_size);
     }
 
-    /// Read a stored chunk.
+    /// Read a stored current-generation chunk.
     #[inline]
     pub fn chunk(&self, handle: ChunkHandle) -> &[u8] {
         self.classes[handle.class as usize].chunk(handle.loc)
     }
 
-    /// Write into a stored chunk.
+    /// Read a stored chunk from either generation.
+    #[inline]
+    pub fn chunk_gen(&self, old: bool, handle: ChunkHandle) -> &[u8] {
+        if old {
+            self.old
+                .as_ref()
+                .expect("old-generation read without an active migration")
+                .classes[handle.class as usize]
+                .chunk(handle.loc)
+        } else {
+            self.classes[handle.class as usize].chunk(handle.loc)
+        }
+    }
+
+    /// Write into a stored current-generation chunk.
     #[inline]
     pub fn chunk_mut(&mut self, handle: ChunkHandle) -> &mut [u8] {
         self.classes[handle.class as usize].chunk_mut(handle.loc)
     }
 
-    /// Aggregate statistics (the paper's measurement instrument).
+    // ------------------------------------------------------- migration
+
+    /// True while an old generation is still draining.
+    #[inline]
+    pub fn migration_active(&self) -> bool {
+        self.old.is_some()
+    }
+
+    /// Chunk-size table of the draining generation, if any.
+    pub fn old_chunk_sizes(&self) -> Option<&[usize]> {
+        self.old.as_ref().map(|o| o.chunk_sizes.as_slice())
+    }
+
+    /// Start a migration: the current class table becomes the old
+    /// (draining) generation and a fresh table for `policy` takes over.
+    /// All future allocations land in the new geometry; old chunks stay
+    /// readable via [`chunk_gen`] until individually freed.
+    ///
+    /// [`chunk_gen`]: SlabAllocator::chunk_gen
+    pub fn begin_migration(&mut self, policy: &ChunkSizePolicy) -> Result<(), SlabError> {
+        assert!(self.old.is_none(), "migration already active");
+        let new_sizes = policy.materialize(self.page_size)?;
+        let new_classes: Vec<SlabClass> = new_sizes.iter().map(|&s| SlabClass::new(s)).collect();
+        let old_classes = std::mem::replace(&mut self.classes, new_classes);
+        let old_sizes = std::mem::replace(&mut self.chunk_sizes, new_sizes);
+        self.old = Some(OldGen {
+            classes: old_classes,
+            chunk_sizes: old_sizes,
+        });
+        Ok(())
+    }
+
+    /// Copy `len` bytes from an old-generation chunk into a
+    /// current-generation chunk (the item move, no intermediate buffer).
+    pub fn migrate_copy(&mut self, from: ChunkHandle, to: ChunkHandle, len: usize) {
+        let old = self
+            .old
+            .as_ref()
+            .expect("migrate_copy without an active migration");
+        let src = old.classes[from.class as usize].chunk(from.loc);
+        let dst = self.classes[to.class as usize].chunk_mut(to.loc);
+        dst[..len].copy_from_slice(&src[..len]);
+    }
+
+    /// Release every fully drained old-generation page into the
+    /// free-page pool. Returns the number of pages released.
+    pub fn release_old_drained_pages(&mut self) -> usize {
+        let Some(old) = self.old.as_mut() else { return 0 };
+        let mut bufs = Vec::new();
+        for class in &mut old.classes {
+            bufs.append(&mut class.release_drained_pages());
+        }
+        let freed = bufs.len();
+        for buf in bufs {
+            self.pages_allocated -= 1;
+            self.retire_page(buf);
+        }
+        freed
+    }
+
+    /// Occupancy of every old-generation page still holding live
+    /// chunks: `(class, page_slot, live_chunks)`, unordered. The
+    /// force-drain path sorts this ascending to pick the cheapest
+    /// drainable page.
+    pub fn old_page_occupancy(&self) -> Vec<(u16, u32, u32)> {
+        let Some(old) = self.old.as_ref() else {
+            return Vec::new();
+        };
+        old.classes
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, c)| {
+                c.occupied_pages()
+                    .into_iter()
+                    .map(move |(p, n)| (ci as u16, p, n))
+            })
+            .collect()
+    }
+
+    /// Live chunks remaining in the old generation.
+    pub fn old_used_chunks(&self) -> usize {
+        self.old
+            .as_ref()
+            .map_or(0, |o| o.classes.iter().map(SlabClass::used_chunks).sum())
+    }
+
+    /// Drop the (fully drained) old generation, releasing its remaining
+    /// pages. Returns the number of pages released. Panics in debug
+    /// builds if live old chunks remain.
+    pub fn finish_migration(&mut self) -> usize {
+        let freed = self.release_old_drained_pages();
+        if let Some(old) = self.old.take() {
+            debug_assert!(
+                old.classes.iter().all(|c| c.used_chunks() == 0),
+                "finish_migration with live old chunks"
+            );
+            // shed pooled buffers until resident pages fit the strict
+            // budget again. Carved pages are never un-carved: when the
+            // new geometry packs less densely, up to the slack can
+            // remain live past the drain — a permanent overshoot capped
+            // at MIGRATION_PAGE_SLACK (take_page never admits beyond
+            // budget + slack, so repeated migrations cannot compound it)
+            while self.pages_allocated + self.free_pages.len() > self.page_budget
+                && self.free_pages.pop().is_some()
+            {}
+        }
+        freed
+    }
+
+    /// Aggregate statistics (the paper's measurement instrument);
+    /// covers both generations while a migration drains.
     pub fn stats(&self) -> SlabStats {
-        let per_class: Vec<ClassStats> = self.classes.iter().map(SlabClass::stats).collect();
+        let mut per_class: Vec<ClassStats> =
+            self.classes.iter().map(SlabClass::stats).collect();
+        if let Some(old) = &self.old {
+            per_class.extend(
+                old.classes
+                    .iter()
+                    .map(SlabClass::stats)
+                    .filter(|c| c.pages > 0),
+            );
+        }
         SlabStats {
             requested_bytes: per_class.iter().map(|c| c.requested_bytes).sum(),
             allocated_bytes: per_class.iter().map(|c| c.allocated_bytes).sum(),
             hole_bytes: per_class.iter().map(|c| c.hole_bytes).sum(),
             tail_waste_bytes: per_class.iter().map(|c| c.tail_waste_bytes).sum(),
             pages_allocated: self.pages_allocated,
+            pages_free: self.free_pages.len(),
             page_budget: self.page_budget,
             page_size: self.page_size,
             per_class,
@@ -327,5 +549,113 @@ mod tests {
         assert_eq!(s.per_class[0].pages, 1);
         let c600 = s.per_class.iter().find(|c| c.chunk_size == 600).unwrap();
         assert_eq!(c600.pages, 1);
+    }
+
+    // ------------------------------------------- generation migration
+
+    #[test]
+    fn begin_migration_switches_geometry_keeps_old_readable() {
+        let mut a = small();
+        let h = a.alloc(100).unwrap();
+        a.chunk_mut(h)[..3].copy_from_slice(b"abc");
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![256, 4096]))
+            .unwrap();
+        assert!(a.migration_active());
+        assert_eq!(a.chunk_sizes(), &[256, 4096]);
+        // old chunk still readable through the generation-aware path
+        assert_eq!(&a.chunk_gen(true, h)[..3], b"abc");
+        // new allocations land in the new geometry
+        let h2 = a.alloc(100).unwrap();
+        assert_eq!(a.chunk_size_of(h2.class), 256);
+    }
+
+    #[test]
+    fn drained_old_pages_recycle_into_new_geometry() {
+        // budget: exactly 2 pages of 4096
+        let mut a = SlabAllocator::new(
+            &ChunkSizePolicy::Explicit(vec![512, 4096]),
+            4096,
+            8192,
+        )
+        .unwrap();
+        let handles: Vec<_> = (0..8).map(|_| a.alloc(500).unwrap()).collect();
+        assert_eq!(a.pages_allocated(), 1);
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![1024, 4096]))
+            .unwrap();
+        // drain the old page: move items one by one
+        for h in handles {
+            let to = a.alloc(500).unwrap();
+            a.migrate_copy(h, to, 500);
+            a.free_old(h, 500);
+        }
+        assert_eq!(a.old_used_chunks(), 0);
+        let freed = a.release_old_drained_pages();
+        assert_eq!(freed, 1);
+        assert_eq!(a.finish_migration(), 0);
+        assert!(!a.migration_active());
+        // peak stayed within budget + slack
+        assert!(a.pages_allocated() + a.free_page_count() <= 2 + MIGRATION_PAGE_SLACK);
+    }
+
+    #[test]
+    fn migration_slack_admits_extra_pages_then_budget_restores() {
+        // budget 1 page, full
+        let mut a = SlabAllocator::new(
+            &ChunkSizePolicy::Explicit(vec![512, 4096]),
+            4096,
+            4096,
+        )
+        .unwrap();
+        let held: Vec<_> = (0..8).map(|_| a.alloc(400).unwrap()).collect();
+        assert!(matches!(a.alloc(400), Err(SlabError::NeedEviction { .. })));
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![600, 4096]))
+            .unwrap();
+        // slack lets the new generation start before any page drains
+        let moved = a.alloc(400).unwrap();
+        a.migrate_copy(held[0], moved, 400);
+        a.free_old(held[0], 400);
+        for &h in &held[1..] {
+            let to = a.alloc(400).unwrap();
+            a.migrate_copy(h, to, 400);
+            a.free_old(h, 400);
+        }
+        assert!(a.pages_allocated() <= 1 + MIGRATION_PAGE_SLACK);
+        a.finish_migration();
+        // after the drain the budget is strict again
+        assert!(a.pages_allocated() + a.free_page_count() <= 1 + MIGRATION_PAGE_SLACK);
+    }
+
+    #[test]
+    fn stats_cover_both_generations() {
+        let mut a = small();
+        a.alloc(518).unwrap(); // old gen: 600-chunk, hole 82
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![530, 4096]))
+            .unwrap();
+        a.alloc(520).unwrap(); // new gen: 530-chunk, hole 10
+        let s = a.stats();
+        assert_eq!(s.requested_bytes, 518 + 520);
+        assert_eq!(s.hole_bytes, 82 + 10);
+        assert_eq!(s.pages_allocated, 2);
+        assert!(s.per_class.iter().any(|c| c.chunk_size == 600 && c.used_chunks == 1));
+        assert!(s.per_class.iter().any(|c| c.chunk_size == 530 && c.used_chunks == 1));
+    }
+
+    #[test]
+    fn old_page_occupancy_spans_classes() {
+        let mut a = small();
+        let _pin96 = a.alloc(50).unwrap();
+        for _ in 0..5 {
+            a.alloc(500).unwrap();
+        }
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![128, 700, 4096]))
+            .unwrap();
+        let mut occ = a.old_page_occupancy();
+        occ.sort_unstable_by_key(|&(_, _, n)| n);
+        assert_eq!(occ.len(), 2, "{occ:?}");
+        // the 96-byte class holds a single item: cheapest drain
+        let (class, _page, used) = occ[0];
+        assert_eq!(a.old_chunk_sizes().unwrap()[class as usize], 96);
+        assert_eq!(used, 1);
+        assert_eq!(occ[1].2, 5);
     }
 }

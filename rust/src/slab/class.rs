@@ -1,9 +1,15 @@
 //! A slab class: all pages carved to one chunk size, plus the free list
 //! and the hole accounting the paper's metric is computed from.
+//!
+//! Pages occupy stable slots (`ChunkLoc::page` indexes never move), but
+//! a slot can be vacated: when every chunk of a page is free the page
+//! can be released back to the caller ([`SlabClass::release_drained_pages`])
+//! and the slot reused later — the building block of incremental slab
+//! migration, where old-geometry classes drain page by page.
 
 use super::page::Page;
 
-/// Location of a chunk within its class: (page index, chunk index).
+/// Location of a chunk within its class: (page slot, chunk index).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkLoc {
     pub page: u32,
@@ -13,7 +19,12 @@ pub struct ChunkLoc {
 /// One slab class.
 pub struct SlabClass {
     chunk_size: usize,
-    pages: Vec<Page>,
+    /// Page slots; `None` marks a released page whose slot awaits reuse.
+    pages: Vec<Option<Page>>,
+    /// Live chunks per page slot — a page with 0 is fully drained.
+    page_used: Vec<u32>,
+    /// Released slots available for the next added page.
+    vacant: Vec<u32>,
     free: Vec<ChunkLoc>,
     used_chunks: usize,
     /// Σ of the *requested* sizes of live items — `used_chunks *
@@ -44,6 +55,8 @@ impl SlabClass {
         SlabClass {
             chunk_size,
             pages: Vec::new(),
+            page_used: Vec::new(),
+            vacant: Vec::new(),
             free: Vec::new(),
             used_chunks: 0,
             requested_bytes: 0,
@@ -60,9 +73,10 @@ impl SlabClass {
         !self.free.is_empty()
     }
 
+    /// Live (non-released) pages.
     #[inline]
     pub fn pages(&self) -> usize {
-        self.pages.len()
+        self.pages.iter().filter(|p| p.is_some()).count()
     }
 
     #[inline]
@@ -70,18 +84,24 @@ impl SlabClass {
         self.used_chunks
     }
 
-    /// Grow the class by one page; its chunks join the free list.
-    pub fn add_page(&mut self, page_size: usize) {
-        let page = Page::new(page_size, self.chunk_size);
-        let page_idx = self.pages.len() as u32;
+    /// Grow the class by one page carved from `buf`; its chunks join
+    /// the free list. Released slots are reused before new ones.
+    pub fn add_page(&mut self, buf: Box<[u8]>) {
+        let page = Page::from_buf(buf, self.chunk_size);
+        let slot = match self.vacant.pop() {
+            Some(s) => s,
+            None => {
+                self.pages.push(None);
+                self.page_used.push(0);
+                (self.pages.len() - 1) as u32
+            }
+        };
         // Reverse order so the lowest offsets are handed out first.
         for chunk in (0..page.chunk_count() as u32).rev() {
-            self.free.push(ChunkLoc {
-                page: page_idx,
-                chunk,
-            });
+            self.free.push(ChunkLoc { page: slot, chunk });
         }
-        self.pages.push(page);
+        self.page_used[slot as usize] = 0;
+        self.pages[slot as usize] = Some(page);
     }
 
     /// Take a free chunk, accounting `requested` bytes of real payload.
@@ -91,6 +111,7 @@ impl SlabClass {
         debug_assert!(requested <= self.chunk_size);
         let loc = self.free.pop()?;
         self.used_chunks += 1;
+        self.page_used[loc.page as usize] += 1;
         self.requested_bytes += requested as u64;
         Some(loc)
     }
@@ -99,7 +120,9 @@ impl SlabClass {
     pub fn free(&mut self, loc: ChunkLoc, requested: usize) {
         debug_assert!(self.used_chunks > 0);
         debug_assert!(self.requested_bytes >= requested as u64);
+        debug_assert!(self.page_used[loc.page as usize] > 0);
         self.used_chunks -= 1;
+        self.page_used[loc.page as usize] -= 1;
         self.requested_bytes -= requested as u64;
         self.free.push(loc);
     }
@@ -111,29 +134,78 @@ impl SlabClass {
         self.requested_bytes = self.requested_bytes - old_requested as u64 + new_requested as u64;
     }
 
+    /// Release every fully drained page: their chunks leave the free
+    /// list, their slots become reusable, and the raw buffers are
+    /// handed back (for the allocator's free-page pool).
+    pub fn release_drained_pages(&mut self) -> Vec<Box<[u8]>> {
+        let mut drained = vec![false; self.pages.len()];
+        let mut any = false;
+        for (i, p) in self.pages.iter().enumerate() {
+            if p.is_some() && self.page_used[i] == 0 {
+                drained[i] = true;
+                any = true;
+            }
+        }
+        if !any {
+            return Vec::new();
+        }
+        self.free.retain(|loc| !drained[loc.page as usize]);
+        let mut out = Vec::new();
+        for (i, is_drained) in drained.iter().enumerate() {
+            if *is_drained {
+                let page = self.pages[i].take().expect("drained page present");
+                out.push(page.into_buf());
+                self.vacant.push(i as u32);
+            }
+        }
+        out
+    }
+
+    /// `(page_slot, live_chunks)` for every page still holding items —
+    /// the force-drain path picks its victim page from this.
+    pub fn occupied_pages(&self) -> Vec<(u32, u32)> {
+        self.pages
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| p.is_some() && self.page_used[*i] > 0)
+            .map(|(i, _)| (i as u32, self.page_used[i]))
+            .collect()
+    }
+
     #[inline]
     pub fn chunk(&self, loc: ChunkLoc) -> &[u8] {
-        self.pages[loc.page as usize].chunk(loc.chunk as usize)
+        self.pages[loc.page as usize]
+            .as_ref()
+            .expect("chunk in released page")
+            .chunk(loc.chunk as usize)
     }
 
     #[inline]
     pub fn chunk_mut(&mut self, loc: ChunkLoc) -> &mut [u8] {
-        self.pages[loc.page as usize].chunk_mut(loc.chunk as usize)
+        self.pages[loc.page as usize]
+            .as_mut()
+            .expect("chunk in released page")
+            .chunk_mut(loc.chunk as usize)
     }
 
     pub fn stats(&self) -> ClassStats {
-        let total_chunks = self.pages.iter().map(Page::chunk_count).sum::<usize>();
+        let total_chunks = self
+            .pages
+            .iter()
+            .flatten()
+            .map(Page::chunk_count)
+            .sum::<usize>();
         let allocated = self.used_chunks as u64 * self.chunk_size as u64;
         ClassStats {
             chunk_size: self.chunk_size,
-            pages: self.pages.len(),
+            pages: self.pages(),
             total_chunks,
             used_chunks: self.used_chunks,
             free_chunks: self.free.len(),
             requested_bytes: self.requested_bytes,
             allocated_bytes: allocated,
             hole_bytes: allocated - self.requested_bytes,
-            tail_waste_bytes: self.pages.iter().map(|p| p.tail_waste() as u64).sum(),
+            tail_waste_bytes: self.pages.iter().flatten().map(|p| p.tail_waste() as u64).sum(),
         }
     }
 }
@@ -142,11 +214,15 @@ impl SlabClass {
 mod tests {
     use super::*;
 
+    fn buf(n: usize) -> Box<[u8]> {
+        vec![0u8; n].into_boxed_slice()
+    }
+
     #[test]
     fn page_growth_and_alloc() {
         let mut c = SlabClass::new(100);
         assert!(c.alloc(80).is_none());
-        c.add_page(1000); // 10 chunks
+        c.add_page(buf(1000)); // 10 chunks
         let a = c.alloc(80).unwrap();
         let b = c.alloc(90).unwrap();
         assert_ne!(a, b);
@@ -161,7 +237,7 @@ mod tests {
     #[test]
     fn free_returns_chunk_and_accounting() {
         let mut c = SlabClass::new(64);
-        c.add_page(256);
+        c.add_page(buf(256));
         let a = c.alloc(50).unwrap();
         c.free(a, 50);
         let s = c.stats();
@@ -176,7 +252,7 @@ mod tests {
     #[test]
     fn exhaustion() {
         let mut c = SlabClass::new(128);
-        c.add_page(256); // 2 chunks
+        c.add_page(buf(256)); // 2 chunks
         assert!(c.alloc(1).is_some());
         assert!(c.alloc(1).is_some());
         assert!(c.alloc(1).is_none());
@@ -185,7 +261,7 @@ mod tests {
     #[test]
     fn chunks_hand_out_low_offsets_first() {
         let mut c = SlabClass::new(100);
-        c.add_page(1000);
+        c.add_page(buf(1000));
         let a = c.alloc(1).unwrap();
         assert_eq!(a, ChunkLoc { page: 0, chunk: 0 });
     }
@@ -193,7 +269,7 @@ mod tests {
     #[test]
     fn data_roundtrip() {
         let mut c = SlabClass::new(32);
-        c.add_page(128);
+        c.add_page(buf(128));
         let loc = c.alloc(5).unwrap();
         c.chunk_mut(loc)[..5].copy_from_slice(b"hello");
         assert_eq!(&c.chunk(loc)[..5], b"hello");
@@ -202,7 +278,7 @@ mod tests {
     #[test]
     fn reaccount_moves_hole() {
         let mut c = SlabClass::new(100);
-        c.add_page(1000);
+        c.add_page(buf(1000));
         c.alloc(40).unwrap();
         assert_eq!(c.stats().hole_bytes, 60);
         c.reaccount(40, 70);
@@ -213,7 +289,51 @@ mod tests {
     #[test]
     fn tail_waste_reported() {
         let mut c = SlabClass::new(300);
-        c.add_page(1000); // 3 chunks, 100 tail
+        c.add_page(buf(1000)); // 3 chunks, 100 tail
         assert_eq!(c.stats().tail_waste_bytes, 100);
+    }
+
+    #[test]
+    fn drained_page_released_and_slot_reused() {
+        let mut c = SlabClass::new(100);
+        c.add_page(buf(1000)); // slot 0
+        c.add_page(buf(1000)); // slot 1
+        assert_eq!(c.pages(), 2);
+        // occupy one chunk on slot 1 (free list pops slot-1 chunks first)
+        let held = c.alloc(60).unwrap();
+        assert_eq!(held.page, 1);
+        // slot 0 is fully free -> released; slot 1 is pinned by `held`
+        let bufs = c.release_drained_pages();
+        assert_eq!(bufs.len(), 1);
+        assert_eq!(c.pages(), 1);
+        assert_eq!(c.stats().free_chunks, 9, "slot-0 chunks left the free list");
+        // the held chunk still reads/writes
+        c.chunk_mut(held)[..2].copy_from_slice(b"ok");
+        assert_eq!(&c.chunk(held)[..2], b"ok");
+        // a new page reuses the vacated slot
+        c.add_page(buf(1000));
+        assert_eq!(c.pages(), 2);
+        let a = c.alloc(1).unwrap();
+        assert_eq!(a.page, 0, "released slot comes back first");
+        // nothing is drained now: slot 0 and slot 1 both hold items
+        assert!(c.release_drained_pages().is_empty());
+    }
+
+    #[test]
+    fn occupied_pages_tracks_live_chunks_per_slot() {
+        let mut c = SlabClass::new(100);
+        c.add_page(buf(1000)); // slot 0
+        c.add_page(buf(1000)); // slot 1: handed out first
+        for _ in 0..10 {
+            c.alloc(1).unwrap(); // fills slot 1
+        }
+        let one_on_slot0 = c.alloc(1).unwrap();
+        assert_eq!(one_on_slot0.page, 0);
+        let mut occ = c.occupied_pages();
+        occ.sort_unstable();
+        assert_eq!(occ, vec![(0, 1), (1, 10)]);
+        c.free(one_on_slot0, 1);
+        // slot 0 drained: only slot 1 qualifies (used > 0)
+        assert_eq!(c.occupied_pages(), vec![(1, 10)]);
     }
 }

@@ -1,10 +1,17 @@
 //! Pages: fixed-size memory arenas carved into equal chunks.
 //!
 //! Memory is allocated one page at a time (memcached: 1 MiB). A page is
-//! permanently assigned to one slab class and carved into
-//! `page_size / chunk_size` chunks; the remainder at the page tail is
-//! *page tail waste* (distinct from the per-item holes the paper
-//! targets, and tracked separately in stats).
+//! assigned to one slab class and carved into `page_size / chunk_size`
+//! chunks; the remainder at the page tail is *page tail waste*
+//! (distinct from the per-item holes the paper targets, and tracked
+//! separately in stats).
+//!
+//! Pages are no longer permanently welded to a class: a fully drained
+//! page can be dissolved back into its raw buffer ([`Page::into_buf`])
+//! and re-carved for a different chunk size ([`Page::from_buf`]) — the
+//! mechanism the incremental slab migrator uses to hand memory from the
+//! old chunk geometry to the new one without ever holding two full
+//! copies of the cache.
 
 /// One page of cache memory, owned by a single slab class.
 pub struct Page {
@@ -15,11 +22,21 @@ pub struct Page {
 impl Page {
     /// Allocate a zeroed page carved into `chunk_size` chunks.
     pub fn new(page_size: usize, chunk_size: usize) -> Self {
-        assert!(chunk_size > 0 && chunk_size <= page_size);
-        Page {
-            data: vec![0u8; page_size].into_boxed_slice(),
-            chunk_size,
-        }
+        Page::from_buf(vec![0u8; page_size].into_boxed_slice(), chunk_size)
+    }
+
+    /// Carve an existing buffer (a recycled page) into `chunk_size`
+    /// chunks. The buffer is not zeroed: every chunk is fully
+    /// overwritten up to the item length before any read.
+    pub fn from_buf(data: Box<[u8]>, chunk_size: usize) -> Self {
+        assert!(chunk_size > 0 && chunk_size <= data.len());
+        Page { data, chunk_size }
+    }
+
+    /// Dissolve the page back into its raw buffer (for the free-page
+    /// pool). Only legal once no live chunk references it.
+    pub fn into_buf(self) -> Box<[u8]> {
+        self.data
     }
 
     /// Number of chunks this page holds.
@@ -95,5 +112,17 @@ mod tests {
     fn out_of_range_chunk_panics() {
         let p = Page::new(256, 64);
         let _ = p.chunk(4);
+    }
+
+    #[test]
+    fn buf_roundtrip_recarves() {
+        let mut p = Page::new(256, 64);
+        p.chunk_mut(1).fill(0xCD);
+        let buf = p.into_buf();
+        assert_eq!(buf.len(), 256);
+        // re-carve the same memory for a different chunk size
+        let p2 = Page::from_buf(buf, 128);
+        assert_eq!(p2.chunk_count(), 2);
+        assert_eq!(p2.chunk_size(), 128);
     }
 }

@@ -46,6 +46,11 @@ pub struct ItemMeta {
     pub prev: u32,
     pub next: u32,
     pub tier: u8,
+    /// Slab-geometry generation the chunk belongs to. During an
+    /// incremental migration, items whose tag differs from the store's
+    /// current generation still live in the old (draining) allocator
+    /// generation.
+    pub gen: u8,
     /// True while the record is live (guards against stale ids).
     pub live: bool,
 }
@@ -69,6 +74,7 @@ impl ItemMeta {
             prev: NIL,
             next: NIL,
             tier: Tier::Hot as u8,
+            gen: 0,
             live: false,
         }
     }

@@ -225,6 +225,7 @@ mod tests {
             prev: NIL,
             next: NIL,
             tier: 0,
+            gen: 0,
             live: true,
         }
     }

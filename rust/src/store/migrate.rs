@@ -1,0 +1,540 @@
+//! Incremental slab migration: the paper's central operation —
+//! re-learning chunk geometry online — as a **bounded-pause drain**
+//! instead of a stop-the-world rebuild.
+//!
+//! ## How it works
+//!
+//! [`KvStore::begin_migration`] flips the store to a new generation:
+//! the allocator's class table is swapped for the new geometry (O(1) —
+//! no item is touched), the per-class LRUs move into [`MigrationState`]
+//! as the *old* generation, and the store's generation tag advances so
+//! every existing item is recognisably old. From that instant:
+//!
+//! * **writes** land in the new geometry; any rewrite of an old item
+//!   (set over, append, incr, cas) migrates it as a side effect;
+//! * **reads** resolve items in either generation (the allocator keeps
+//!   both class tables readable);
+//! * [`KvStore::migrate_step`] moves at most `max_items` items per call
+//!   — the only work done under the shard write lock — walking each old
+//!   class coldest-first so relative recency survives the move;
+//! * a fully drained old page dissolves into the allocator's free-page
+//!   pool and is re-carved for the new geometry, bounding transient
+//!   memory to the page budget plus a constant slack (no 2× copy).
+//!
+//! Under memory pressure (budget exhausted, nothing of the new
+//! generation to evict) the migrator force-drains the old page with the
+//! fewest live items — memcached's slab-rebalance move, applied to the
+//! cheapest page — trading the coldest few items for forward progress.
+//!
+//! The drain is complete when no old item remains; the final page
+//! release and the [`MigrationReport`] happen in
+//! `maybe_finish_migration`, reached from `migrate_step` (and from
+//! `flush_all`, which empties both generations at once).
+
+use super::lru::ClassLru;
+use super::store::{KvStore, MigrationReport, StoreError};
+use crate::slab::policy::ChunkSizePolicy;
+use crate::slab::SlabError;
+
+/// Items moved per [`KvStore::migrate_step`] when the caller does not
+/// supply a budget (the `migrate_batch` setting overrides per store).
+pub const DEFAULT_MIGRATE_BATCH: usize = 256;
+
+/// Per-shard state of an in-flight incremental migration.
+pub struct MigrationState {
+    /// The draining generation's per-class LRUs (parallel to the
+    /// allocator's old class table).
+    pub(crate) old_lrus: Vec<ClassLru>,
+    /// Live items still in the old generation; 0 ⇒ drain complete.
+    pub(crate) old_items: usize,
+    /// Items copied into the new geometry so far (steps + rewrites).
+    pub(crate) moved: usize,
+    /// Items lost to the drain: no room under budget + slack, or on a
+    /// force-drained page.
+    pub(crate) dropped: usize,
+    /// Old pages recycled into the free-page pool so far.
+    pub(crate) pages_reclaimed: usize,
+    pub(crate) hole_bytes_before: u64,
+    pub(crate) pages_before: usize,
+}
+
+/// Migration gauges for `stats slabs` (merged across shards by
+/// `ShardedStore::migration_gauges`). Counters are lifetime totals;
+/// `active_shards` / `items_remaining` describe the in-flight drain.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationGauges {
+    /// Shards with a drain in flight (0 or 1 for a single store).
+    pub active_shards: u64,
+    pub moved: u64,
+    pub dropped: u64,
+    pub pages_reclaimed: u64,
+    /// Old-generation items still awaiting the drain.
+    pub items_remaining: u64,
+}
+
+impl KvStore {
+    /// True while an incremental migration is draining.
+    #[inline]
+    pub fn migration_active(&self) -> bool {
+        self.migration.is_some()
+    }
+
+    /// Report of the most recently completed migration, if any.
+    pub fn last_migration(&self) -> Option<&MigrationReport> {
+        self.last_migration.as_ref()
+    }
+
+    /// Migration gauges: lifetime totals plus the in-flight drain.
+    pub fn migration_gauges(&self) -> MigrationGauges {
+        let mut g = self.mig_totals.clone();
+        if let Some(m) = &self.migration {
+            g.active_shards = 1;
+            g.moved += m.moved as u64;
+            g.dropped += m.dropped as u64;
+            g.pages_reclaimed += m.pages_reclaimed as u64;
+            g.items_remaining = m.old_items as u64;
+        }
+        g
+    }
+
+    /// Start an incremental migration to `new_policy`. O(1) in the
+    /// number of items: geometry and generation flip immediately (new
+    /// writes land in the new layout, reads resolve both), and the
+    /// actual drain happens in subsequent [`migrate_step`] calls.
+    ///
+    /// Fails with [`StoreError::Busy`] while a previous drain is still
+    /// running and [`StoreError::BadPolicy`] for an invalid geometry
+    /// (nothing is touched in either case).
+    ///
+    /// [`migrate_step`]: KvStore::migrate_step
+    pub fn begin_migration(&mut self, new_policy: ChunkSizePolicy) -> Result<(), StoreError> {
+        if self.migration.is_some() {
+            return Err(StoreError::Busy);
+        }
+        let before = self.alloc.stats();
+        self.alloc
+            .begin_migration(&new_policy)
+            .map_err(|e| match e {
+                SlabError::Policy(p) => StoreError::BadPolicy(p.to_string()),
+                other => StoreError::BadPolicy(other.to_string()),
+            })?;
+        let new_lrus: Vec<ClassLru> = (0..self.alloc.chunk_sizes().len())
+            .map(|_| ClassLru::new())
+            .collect();
+        let old_lrus = std::mem::replace(&mut self.lrus, new_lrus);
+        self.gen = self.gen.wrapping_add(1);
+        self.policy = new_policy;
+        self.migration = Some(MigrationState {
+            old_lrus,
+            old_items: self.arena.len(),
+            moved: 0,
+            dropped: 0,
+            pages_reclaimed: 0,
+            hole_bytes_before: before.hole_bytes,
+            pages_before: before.pages_allocated,
+        });
+        // an empty store drains instantly
+        self.maybe_finish_migration();
+        Ok(())
+    }
+
+    /// Drive the drain: move at most `max_items` old-generation items
+    /// into the new geometry (coldest-first per class), then release
+    /// any old pages that drained. This is the only migration work done
+    /// under the shard write lock — callers alternate steps with
+    /// regular traffic. Returns `true` while the migration is still
+    /// active after the step.
+    pub fn migrate_step(&mut self, max_items: usize) -> bool {
+        if self.migration.is_none() {
+            return false;
+        }
+        for _ in 0..max_items.max(1) {
+            let Some((class, id)) = self.next_drain_victim() else {
+                break;
+            };
+            let (handle, klen, vlen, total, hash, expired) = {
+                let m = self.arena.get(id);
+                (
+                    m.handle,
+                    m.klen as usize,
+                    m.vlen as usize,
+                    m.total as usize,
+                    m.hash,
+                    self.is_expired(m),
+                )
+            };
+            if expired {
+                // lazy reclaim instead of a pointless move
+                self.unlink_and_free(id, hash);
+                self.stats.expired_reclaims += 1;
+                continue;
+            }
+            // unlink from the old LRU first so a force-drain during the
+            // allocation below can never free the item being moved
+            {
+                let mig = self.migration.as_mut().expect("active migration");
+                mig.old_lrus[class].remove(id, &mut self.arena);
+            }
+            match self.migrate_alloc(total) {
+                Some(new_handle) => {
+                    self.alloc.migrate_copy(handle, new_handle, klen + vlen);
+                    self.alloc.free_old(handle, total);
+                    let gen = self.gen;
+                    let m = self.arena.get_mut(id);
+                    m.handle = new_handle;
+                    m.gen = gen;
+                    self.lrus[new_handle.class as usize].insert(id, &mut self.arena);
+                    let mig = self.migration.as_mut().expect("active migration");
+                    mig.moved += 1;
+                    mig.old_items -= 1;
+                }
+                None => {
+                    // no room even after force-drains: the item is lost
+                    // (the paper's restart would have lost everything)
+                    self.table.remove(id, hash, &mut self.arena);
+                    self.alloc.free_old(handle, total);
+                    self.arena.remove(id);
+                    let mig = self.migration.as_mut().expect("active migration");
+                    mig.dropped += 1;
+                    mig.old_items -= 1;
+                }
+            }
+        }
+        let freed = self.alloc.release_old_drained_pages();
+        if let Some(mig) = self.migration.as_mut() {
+            mig.pages_reclaimed += freed;
+        }
+        self.maybe_finish_migration();
+        self.migration.is_some()
+    }
+
+    /// Coldest item of the lowest-indexed old class that still has one.
+    fn next_drain_victim(&self) -> Option<(usize, u32)> {
+        let mig = self.migration.as_ref()?;
+        mig.old_lrus
+            .iter()
+            .enumerate()
+            .find_map(|(ci, lru)| lru.eviction_candidate().map(|id| (ci, id)))
+    }
+
+    /// Allocate a new-generation chunk for a migrating item. Never
+    /// evicts new-generation items (a drain must not churn what it just
+    /// moved); when the budget is exhausted it force-drains the
+    /// emptiest old page and retries.
+    fn migrate_alloc(&mut self, total: usize) -> Option<crate::slab::ChunkHandle> {
+        loop {
+            match self.alloc.alloc(total) {
+                Ok(h) => return Some(h),
+                Err(SlabError::TooLarge { .. }) => return None,
+                Err(SlabError::NeedEviction { .. }) => {
+                    if !self.force_drain_old_page() {
+                        return None;
+                    }
+                }
+                Err(SlabError::Policy(_)) => unreachable!("policy validated at begin"),
+            }
+        }
+    }
+
+    /// Drop every item on the emptiest drainable old page and release
+    /// it into the free-page pool — memcached's slab-rebalance move,
+    /// aimed at the cheapest page. Pages pinned by an in-flight move
+    /// (a chunk whose item is temporarily unlinked from the old LRU)
+    /// cannot fully drain, so candidates are tried in ascending
+    /// occupancy until one actually releases. Returns `true` when a
+    /// page was reclaimed (so an allocation retry can succeed).
+    pub(crate) fn force_drain_old_page(&mut self) -> bool {
+        let mut candidates = self.alloc.old_page_occupancy();
+        candidates.sort_unstable_by_key(|&(_, _, used)| used);
+        for (class, page, used) in candidates {
+            let victims: Vec<(u32, u64)> = {
+                let mig = self.migration.as_ref().expect("active migration");
+                mig.old_lrus[class as usize]
+                    .iter_all(&self.arena)
+                    .filter(|&id| self.arena.get(id).handle.loc.page == page)
+                    .map(|id| (id, self.arena.get(id).hash))
+                    .collect()
+            };
+            if (victims.len() as u32) < used {
+                // pinned: dropping the LRU residents cannot release it
+                continue;
+            }
+            let n = victims.len();
+            for (id, hash) in victims {
+                self.unlink_and_free(id, hash); // routes old, maintains old_items
+            }
+            let freed = self.alloc.release_old_drained_pages();
+            if let Some(mig) = self.migration.as_mut() {
+                mig.dropped += n;
+                mig.pages_reclaimed += freed;
+            }
+            self.stats.evictions += n as u64;
+            if freed > 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Complete the migration once the old generation is empty: release
+    /// its remaining (drained) pages, record the report, bump
+    /// `slab_reconfigures`.
+    pub(crate) fn maybe_finish_migration(&mut self) {
+        let drained = self.migration.as_ref().is_some_and(|m| m.old_items == 0);
+        if !drained {
+            return;
+        }
+        let mut mig = self.migration.take().expect("checked above");
+        mig.pages_reclaimed += self.alloc.finish_migration();
+        self.mig_totals.moved += mig.moved as u64;
+        self.mig_totals.dropped += mig.dropped as u64;
+        self.mig_totals.pages_reclaimed += mig.pages_reclaimed as u64;
+        self.mig_totals.items_remaining = 0;
+        self.stats.reconfigures += 1;
+        let after = self.alloc.stats();
+        self.last_migration = Some(MigrationReport {
+            items_moved: mig.moved,
+            items_dropped: mig.dropped,
+            hole_bytes_before: mig.hole_bytes_before,
+            hole_bytes_after: after.hole_bytes,
+            pages_before: mig.pages_before,
+            pages_after: after.pages_allocated,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::allocator::MIGRATION_PAGE_SLACK;
+    use crate::store::store::{Clock, KvStore};
+
+    fn store_with(page_size: usize, mem: usize) -> KvStore {
+        KvStore::new(
+            ChunkSizePolicy::default(),
+            page_size,
+            mem,
+            true,
+            Clock::System,
+        )
+        .unwrap()
+    }
+
+    /// total_item_size(5-byte key, 455-byte value, cas) = 518.
+    fn fill_518(s: &mut KvStore, n: u32) {
+        for i in 0..n {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn begin_is_o1_and_serving_continues_between_steps() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 2000);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        assert!(s.migration_active());
+        assert_eq!(s.chunk_sizes(), &[518, 1 << 20]);
+
+        let mut steps = 0;
+        loop {
+            let active = s.migrate_step(128);
+            steps += 1;
+            // gets are served mid-drain, resolving both generations
+            assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+            assert_eq!(s.get(b"k1999").unwrap().value.len(), 455);
+            // new writes land while the drain is in flight (exact-fit
+            // sized so the final hole assertion stays meaningful)
+            s.set(format!("n{steps:04}").as_bytes(), &vec![b'y'; 455], 0, 0)
+                .unwrap();
+            if !active {
+                break;
+            }
+        }
+        assert!(steps >= 2000 / 128, "drain must take multiple steps");
+        let report = s.last_migration().unwrap();
+        assert_eq!(report.items_moved, 2000);
+        assert_eq!(report.items_dropped, 0);
+        assert_eq!(report.hole_bytes_after, 0, "518 items in 518 chunks");
+        assert_eq!(s.len(), 2000 + steps);
+    }
+
+    #[test]
+    fn memory_bounded_by_budget_plus_slack_throughout() {
+        let mut s = store_with(1 << 20, 8 << 20); // 8-page budget
+        fill_518(&mut s, 8000); // ~4.1 MiB requested -> ~5 pages of 600s
+        let budget = s.slab_stats().page_budget;
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        while s.migrate_step(64) {
+            let st = s.slab_stats();
+            assert!(
+                st.pages_allocated + st.pages_free <= budget + MIGRATION_PAGE_SLACK,
+                "resident {}+{} pages exceeds budget {budget} + slack",
+                st.pages_allocated,
+                st.pages_free
+            );
+        }
+        let st = s.slab_stats();
+        assert!(st.pages_allocated + st.pages_free <= budget + MIGRATION_PAGE_SLACK);
+        assert_eq!(s.last_migration().unwrap().items_dropped, 0);
+        assert_eq!(s.len(), 8000);
+    }
+
+    #[test]
+    fn cas_and_flags_preserved_across_step_boundaries() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        s.set(b"token", b"payload", 42, 0).unwrap();
+        let before = s.get(b"token").unwrap();
+        fill_518(&mut s, 500);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![200, 518])).unwrap();
+        // partial drain: the item may sit in either generation now
+        s.migrate_step(50);
+        let mid = s.get(b"token").unwrap();
+        assert_eq!(mid.cas, before.cas, "cas must survive the move");
+        assert_eq!(mid.flags, 42);
+        assert_eq!(mid.value, b"payload");
+        while s.migrate_step(50) {}
+        let after = s.get(b"token").unwrap();
+        assert_eq!(after.cas, before.cas);
+        assert_eq!(after.flags, 42);
+        // the preserved token still wins a cas
+        assert_eq!(
+            s.cas(b"token", b"new", 0, 0, before.cas).unwrap(),
+            crate::store::store::CasResult::Stored
+        );
+    }
+
+    #[test]
+    fn incr_delete_and_append_land_on_old_items_mid_drain() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        s.set(b"counter", b"10", 0, 0).unwrap();
+        s.set(b"doomed", b"bye", 0, 0).unwrap();
+        s.set(b"grow", b"seed", 0, 0).unwrap();
+        fill_518(&mut s, 1000);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![100, 518])).unwrap();
+        // nothing stepped yet: every target below is still old-gen
+        assert_eq!(s.migration_gauges().items_remaining, 1003);
+        // incr on an old item migrates it as a side effect
+        assert_eq!(s.incr_decr(b"counter", 5, true).unwrap(), Some(15));
+        // delete on an old item frees the old chunk directly
+        assert!(s.delete(b"doomed"));
+        assert!(s.get(b"doomed").is_none());
+        // append migrates too (and must read the old bytes correctly)
+        assert!(s.concat(b"grow", b"-appended", true).unwrap());
+        assert_eq!(s.migration_gauges().items_remaining, 1000);
+        while s.migrate_step(100) {}
+        assert_eq!(s.get(b"counter").unwrap().value, b"15");
+        assert_eq!(s.get(b"grow").unwrap().value, b"seed-appended");
+        let r = s.last_migration().unwrap();
+        // counter + grow moved via rewrites, doomed left via delete:
+        // all three count toward drain completion without being stepped
+        assert_eq!(r.items_moved + r.items_dropped, 1002);
+    }
+
+    #[test]
+    fn hole_accounting_sums_generations_honestly() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 1000); // hole = 82 per item in the 600 class
+        assert_eq!(s.slab_stats().hole_bytes, 82 * 1000);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        let mut mid_checked = false;
+        while s.migrate_step(100) {
+            let g = s.migration_gauges();
+            let st = s.slab_stats();
+            // moved items sit hole-free in 518 chunks; the rest still
+            // carry their 82-byte hole in the old 600 class
+            assert_eq!(st.requested_bytes, 518 * 1000);
+            assert_eq!(st.hole_bytes, 82 * g.items_remaining);
+            assert_eq!(st.allocated_bytes - st.requested_bytes, st.hole_bytes);
+            mid_checked = true;
+        }
+        assert!(mid_checked, "drain must be observable mid-flight");
+        assert_eq!(s.slab_stats().hole_bytes, 0);
+    }
+
+    #[test]
+    fn gauges_track_drain_and_reset() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 300);
+        assert_eq!(s.migration_gauges().active_shards, 0);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        s.migrate_step(100);
+        let g = s.migration_gauges();
+        assert_eq!(g.active_shards, 1);
+        assert_eq!(g.moved, 100);
+        assert_eq!(g.items_remaining, 200);
+        while s.migrate_step(100) {}
+        let g = s.migration_gauges();
+        assert_eq!(g.active_shards, 0);
+        assert_eq!(g.moved, 300);
+        assert_eq!(g.items_remaining, 0);
+        assert!(g.pages_reclaimed >= 1, "old pages must recycle");
+    }
+
+    #[test]
+    fn second_begin_while_draining_is_busy() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 100);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        assert_eq!(
+            s.begin_migration(ChunkSizePolicy::Explicit(vec![600])),
+            Err(StoreError::Busy)
+        );
+        while s.migrate_step(100) {}
+        // after the drain a new migration may start
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![600])).unwrap();
+    }
+
+    #[test]
+    fn bad_policy_rejected_without_touching_state() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 10);
+        let before = s.chunk_sizes().to_vec();
+        match s.begin_migration(ChunkSizePolicy::Explicit(vec![900, 400])) {
+            Err(StoreError::BadPolicy(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(!s.migration_active());
+        assert_eq!(s.chunk_sizes(), &before[..]);
+        assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+    }
+
+    #[test]
+    fn full_cache_drain_force_reclaims_pages_not_two_x() {
+        // 64 KiB pages, 16-page budget, cache filled to eviction
+        let mut s = store_with(64 << 10, 1 << 20);
+        for i in 0..4000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        assert!(s.stats().evictions > 0, "cache must be full");
+        let live_before = s.len();
+        let budget = s.slab_stats().page_budget;
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![520, 620, 950])).unwrap();
+        while s.migrate_step(64) {
+            let st = s.slab_stats();
+            assert!(st.pages_allocated + st.pages_free <= budget + MIGRATION_PAGE_SLACK);
+        }
+        let r = s.last_migration().unwrap().clone();
+        assert_eq!(r.items_moved + r.items_dropped, live_before);
+        // tighter packing: the drain must not shed more than a sliver
+        assert!(
+            r.items_dropped * 10 <= live_before,
+            "dropped {} of {live_before}",
+            r.items_dropped
+        );
+        assert!(s.migration_gauges().pages_reclaimed > 0);
+    }
+
+    #[test]
+    fn flush_all_mid_drain_finishes_migration() {
+        let mut s = store_with(1 << 20, 32 << 20);
+        fill_518(&mut s, 200);
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![518])).unwrap();
+        s.migrate_step(50);
+        s.flush_all();
+        assert!(!s.migration_active(), "flush empties both generations");
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.slab_stats().requested_bytes, 0);
+    }
+}

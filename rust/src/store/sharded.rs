@@ -22,14 +22,17 @@
 //! skewed the moment shard counts stopped dividing 256.)
 
 use super::item::hash_key;
+use super::migrate::{MigrationGauges, DEFAULT_MIGRATE_BATCH};
 use super::store::{
     CasResult, Clock, KvStore, MigrationReport, PeekOutcome, SizeObserver, StoreError, StoreStats,
     Value, ValueRef,
 };
 use crate::config::Settings;
+use crate::slab::class::ClassStats;
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::{SlabError, SlabStats};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock, RwLockWriteGuard};
 
 /// Keys routed on the stack per multiget batch; longer batches spill
@@ -60,6 +63,10 @@ impl Shard {
 /// Thread-safe sharded cache — the object the TCP server serves.
 pub struct ShardedStore {
     shards: Vec<Shard>,
+    page_size: usize,
+    /// Items a migration step may move per shard while holding the
+    /// shard write lock (the `migrate_batch` setting).
+    migrate_batch: AtomicUsize,
 }
 
 /// splitmix64 finalizer: a multiplicative fold in which every input
@@ -75,16 +82,19 @@ fn mix(mut h: u64) -> u64 {
 }
 
 impl ShardedStore {
-    /// Build from [`Settings`] (shard count, memory split, policy).
+    /// Build from [`Settings`] (shard count, memory split, policy,
+    /// migration step budget).
     pub fn new(settings: &Settings) -> Result<Self, SlabError> {
-        Self::with(
+        let store = Self::with(
             settings.policy.clone(),
             settings.page_size,
             settings.mem_limit,
             settings.use_cas,
             settings.shards,
             Clock::System,
-        )
+        )?;
+        store.set_migrate_batch(settings.migrate_batch);
+        Ok(store)
     }
 
     /// Fully explicit constructor (tests, benches).
@@ -104,7 +114,21 @@ impl ShardedStore {
                     .map(Shard::new)
             })
             .collect();
-        Ok(ShardedStore { shards: stores? })
+        Ok(ShardedStore {
+            shards: stores?,
+            page_size,
+            migrate_batch: AtomicUsize::new(DEFAULT_MIGRATE_BATCH),
+        })
+    }
+
+    /// Per-step item budget for incremental migration.
+    pub fn migrate_batch(&self) -> usize {
+        self.migrate_batch.load(Ordering::Relaxed)
+    }
+
+    /// Tune the per-step item budget (≥ 1).
+    pub fn set_migrate_batch(&self, n: usize) {
+        self.migrate_batch.store(n.max(1), Ordering::Relaxed);
     }
 
     pub fn shard_count(&self) -> usize {
@@ -307,6 +331,9 @@ impl ShardedStore {
     // ------------------------------------------------------------ stats
 
     /// Aggregated slab statistics across shards (whole-cache holes).
+    /// Per-class rows merge by chunk size: while a migration drains,
+    /// shards can expose different class tables (old + new generations,
+    /// at different stages), so positional zipping would lie.
     pub fn slab_stats(&self) -> SlabStats {
         let mut shard_stats: Vec<SlabStats> = self
             .shards
@@ -314,25 +341,39 @@ impl ShardedStore {
             .map(|s| s.store.read().unwrap().slab_stats())
             .collect();
         let mut agg = shard_stats.pop().expect("at least one shard");
+        let mut by_size: BTreeMap<usize, ClassStats> = BTreeMap::new();
+        let mut merge = |rows: Vec<ClassStats>| {
+            for b in rows {
+                match by_size.get_mut(&b.chunk_size) {
+                    Some(a) => {
+                        a.pages += b.pages;
+                        a.total_chunks += b.total_chunks;
+                        a.used_chunks += b.used_chunks;
+                        a.free_chunks += b.free_chunks;
+                        a.requested_bytes += b.requested_bytes;
+                        a.allocated_bytes += b.allocated_bytes;
+                        a.hole_bytes += b.hole_bytes;
+                        a.tail_waste_bytes += b.tail_waste_bytes;
+                    }
+                    None => {
+                        by_size.insert(b.chunk_size, b);
+                    }
+                }
+            }
+        };
+        merge(std::mem::take(&mut agg.per_class));
         for st in shard_stats {
             agg.requested_bytes += st.requested_bytes;
             agg.allocated_bytes += st.allocated_bytes;
             agg.hole_bytes += st.hole_bytes;
             agg.tail_waste_bytes += st.tail_waste_bytes;
             agg.pages_allocated += st.pages_allocated;
+            agg.pages_free += st.pages_free;
             agg.page_budget += st.page_budget;
-            for (a, b) in agg.per_class.iter_mut().zip(st.per_class.iter()) {
-                debug_assert_eq!(a.chunk_size, b.chunk_size, "shards share a policy");
-                a.pages += b.pages;
-                a.total_chunks += b.total_chunks;
-                a.used_chunks += b.used_chunks;
-                a.free_chunks += b.free_chunks;
-                a.requested_bytes += b.requested_bytes;
-                a.allocated_bytes += b.allocated_bytes;
-                a.hole_bytes += b.hole_bytes;
-                a.tail_waste_bytes += b.tail_waste_bytes;
-            }
+            merge(st.per_class);
         }
+        drop(merge);
+        agg.per_class = by_size.into_values().collect();
         agg
     }
 
@@ -370,18 +411,103 @@ impl ShardedStore {
         agg
     }
 
-    /// Current chunk-size table (identical across shards).
+    /// Current chunk-size table (identical across shards —
+    /// [`begin_reconfigure`] switches all shards atomically).
+    ///
+    /// [`begin_reconfigure`]: ShardedStore::begin_reconfigure
     pub fn chunk_sizes(&self) -> Vec<usize> {
         self.shards[0].store.read().unwrap().chunk_sizes().to_vec()
     }
 
-    /// Reconfigure every shard to a new chunk geometry, shard by shard
-    /// (bounds the transient extra memory to one shard's worth).
-    pub fn reconfigure(&self, policy: ChunkSizePolicy) -> Result<Vec<MigrationReport>, StoreError> {
+    // ------------------------------------------- live reconfiguration
+
+    /// Kick off an incremental migration to a new chunk geometry on
+    /// every shard. The policy is validated **once, up front**, and the
+    /// generation flip happens with all shard locks held (an O(shards)
+    /// pause — no item is touched), so a failure can never leave shards
+    /// on divergent geometries. Returns immediately; the drain is
+    /// driven by [`migration_step_all`] (the auto-tuner's background
+    /// thread, or any caller polling).
+    ///
+    /// [`migration_step_all`]: ShardedStore::migration_step_all
+    pub fn begin_reconfigure(&self, policy: ChunkSizePolicy) -> Result<(), StoreError> {
+        policy
+            .materialize(self.page_size)
+            .map_err(|e| StoreError::BadPolicy(e.to_string()))?;
+        let mut guards: Vec<RwLockWriteGuard<'_, KvStore>> = self
+            .shards
+            .iter()
+            .map(|s| s.store.write().unwrap())
+            .collect();
+        if guards.iter().any(|g| g.migration_active()) {
+            return Err(StoreError::Busy);
+        }
+        for g in &mut guards {
+            g.begin_migration(policy.clone())
+                .expect("validated policy and idle shard cannot fail");
+        }
+        Ok(())
+    }
+
+    /// Drive every shard's drain by one bounded step (`migrate_batch`
+    /// items max per shard, each under that shard's write lock only for
+    /// the step). Returns `true` while any shard is still draining.
+    pub fn migration_step_all(&self) -> bool {
+        let batch = self.migrate_batch();
+        let mut active = false;
+        for s in &self.shards {
+            active |= s.store.write().unwrap().migrate_step(batch);
+        }
+        active
+    }
+
+    /// True while any shard has a drain in flight.
+    pub fn migration_active(&self) -> bool {
         self.shards
             .iter()
-            .map(|s| s.store.write().unwrap().reconfigure(policy.clone()))
-            .collect()
+            .any(|s| s.store.read().unwrap().migration_active())
+    }
+
+    /// Aggregated migration gauges (`stats slabs`).
+    pub fn migration_gauges(&self) -> MigrationGauges {
+        let mut agg = MigrationGauges::default();
+        for s in &self.shards {
+            let g = s.store.read().unwrap().migration_gauges();
+            agg.active_shards += g.active_shards;
+            agg.moved += g.moved;
+            agg.dropped += g.dropped;
+            agg.pages_reclaimed += g.pages_reclaimed;
+            agg.items_remaining += g.items_remaining;
+        }
+        agg
+    }
+
+    /// Reconfigure every shard and drive the drain to completion —
+    /// the blocking convenience over [`begin_reconfigure`] +
+    /// [`migration_step_all`]. Unlike the old stop-the-world migration,
+    /// each shard's write lock is held only per bounded step, so
+    /// concurrent traffic keeps serving throughout.
+    ///
+    /// [`begin_reconfigure`]: ShardedStore::begin_reconfigure
+    /// [`migration_step_all`]: ShardedStore::migration_step_all
+    pub fn reconfigure(&self, policy: ChunkSizePolicy) -> Result<Vec<MigrationReport>, StoreError> {
+        self.begin_reconfigure(policy)?;
+        while self.migration_step_all() {
+            // let concurrent readers win the lock between rounds
+            std::thread::yield_now();
+        }
+        Ok(self
+            .shards
+            .iter()
+            .map(|s| {
+                s.store
+                    .read()
+                    .unwrap()
+                    .last_migration()
+                    .cloned()
+                    .expect("drain just completed")
+            })
+            .collect())
     }
 }
 
@@ -487,6 +613,70 @@ mod tests {
         assert_eq!(reports.iter().map(|r| r.items_moved).sum::<usize>(), 400);
         assert_eq!(s.slab_stats().hole_bytes, 0);
         assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+    }
+
+    #[test]
+    fn begin_reconfigure_validates_before_touching_shards() {
+        // a bad policy must fail up front: no shard may flip geometry
+        // (the old per-shard loop left shards 0..k migrated on error)
+        let s = store(4);
+        s.set(b"k", &vec![b'x'; 400], 0, 0).unwrap();
+        let before = s.chunk_sizes();
+        match s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![900, 400])) {
+            Err(StoreError::BadPolicy(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(!s.migration_active());
+        assert_eq!(s.chunk_sizes(), before);
+        assert_eq!(s.get(b"k").unwrap().value.len(), 400);
+    }
+
+    #[test]
+    fn gets_served_between_sharded_migration_steps() {
+        let s = store(2);
+        for i in 0..2000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        s.set_migrate_batch(64);
+        s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![518]))
+            .unwrap();
+        assert!(s.migration_active());
+        let mut rounds = 0;
+        while s.migration_step_all() {
+            rounds += 1;
+            // the store serves normally between steps, both generations
+            assert_eq!(s.get(b"k0000").unwrap().value.len(), 455);
+            assert_eq!(s.get(b"k1999").unwrap().value.len(), 455);
+            // exact-fit mid-drain writes keep the hole assertion exact
+            s.set(format!("m{rounds:04}").as_bytes(), &vec![b'y'; 455], 0, 0)
+                .unwrap();
+        }
+        assert!(rounds > 1, "drain must span multiple steps");
+        assert!(!s.migration_active());
+        let g = s.migration_gauges();
+        assert_eq!(g.moved, 2000);
+        assert_eq!(g.dropped, 0);
+        assert_eq!(s.slab_stats().hole_bytes, 0);
+    }
+
+    #[test]
+    fn second_reconfigure_while_draining_is_busy() {
+        let s = store(2);
+        for i in 0..500u32 {
+            s.set(format!("k{i:03}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![518]))
+            .unwrap();
+        assert!(matches!(
+            s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![600])),
+            Err(StoreError::Busy)
+        ));
+        while s.migration_step_all() {}
+        s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![600]))
+            .unwrap();
+        while s.migration_step_all() {}
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! The single-shard KV engine: memcached command semantics over the
 //! slab allocator, plus the paper's hooks (size observation on every
-//! set, live slab reconfiguration).
+//! set, live slab reconfiguration — incremental, see `store::migrate`).
 
 use super::arena::{Arena, ItemMeta, NIL};
 use super::hashtable::HashTable;
 use super::item::{hash_key, key_is_valid, total_item_size};
 use super::lru::ClassLru;
+use super::migrate::{MigrationGauges, MigrationState};
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
 use std::fmt;
@@ -62,6 +63,11 @@ pub enum StoreError {
     OutOfMemory,
     /// incr/decr on a non-numeric value.
     NonNumeric,
+    /// A slab migration is already draining; one at a time.
+    Busy,
+    /// Rejected chunk-size configuration (validated before any shard
+    /// is touched).
+    BadPolicy(String),
 }
 
 impl fmt::Display for StoreError {
@@ -75,6 +81,8 @@ impl fmt::Display for StoreError {
             StoreError::NonNumeric => {
                 write!(f, "cannot increment or decrement non-numeric value")
             }
+            StoreError::Busy => write!(f, "slab migration already in progress"),
+            StoreError::BadPolicy(m) => write!(f, "bad slab policy: {m}"),
         }
     }
 }
@@ -150,11 +158,13 @@ pub struct StoreStats {
     pub reconfigures: u64,
 }
 
-/// Outcome of a live slab reconfiguration ([`KvStore::reconfigure`]).
+/// Outcome of a completed slab reconfiguration
+/// ([`KvStore::reconfigure`], or [`KvStore::last_migration`] after an
+/// incremental drain finishes).
 #[derive(Debug, Clone)]
 pub struct MigrationReport {
     pub items_moved: usize,
-    /// Items that no longer fit under the transient page budget.
+    /// Items that no longer fit under the page budget (+ slack).
     pub items_dropped: usize,
     pub hole_bytes_before: u64,
     pub hole_bytes_after: u64,
@@ -175,18 +185,26 @@ impl MigrationReport {
 
 /// One shard of the cache.
 pub struct KvStore {
-    alloc: SlabAllocator,
-    arena: Arena,
-    table: HashTable,
-    lrus: Vec<ClassLru>,
+    pub(crate) alloc: SlabAllocator,
+    pub(crate) arena: Arena,
+    pub(crate) table: HashTable,
+    pub(crate) lrus: Vec<ClassLru>,
     clock: Clock,
     use_cas: bool,
     cas_counter: u64,
-    stats: StoreStats,
+    pub(crate) stats: StoreStats,
     observer: Option<Arc<dyn SizeObserver>>,
-    policy: ChunkSizePolicy,
-    page_size: usize,
-    mem_limit: usize,
+    pub(crate) policy: ChunkSizePolicy,
+    /// Current slab-geometry generation; items tagged with an older
+    /// generation still live in the allocator's draining class table.
+    pub(crate) gen: u8,
+    /// In-flight incremental migration, if any (see `store::migrate`).
+    pub(crate) migration: Option<MigrationState>,
+    /// Report of the most recently completed migration.
+    pub(crate) last_migration: Option<MigrationReport>,
+    /// Lifetime migration gauges (completed drains), merged with the
+    /// in-flight state by [`KvStore::migration_gauges`].
+    pub(crate) mig_totals: MigrationGauges,
 }
 
 impl KvStore {
@@ -212,8 +230,10 @@ impl KvStore {
             stats: StoreStats::default(),
             observer: None,
             policy,
-            page_size,
-            mem_limit,
+            gen: 0,
+            migration: None,
+            last_migration: None,
+            mig_totals: MigrationGauges::default(),
         })
     }
 
@@ -263,19 +283,51 @@ impl KvStore {
         }
     }
 
-    fn is_expired(&self, meta: &ItemMeta) -> bool {
+    pub(crate) fn is_expired(&self, meta: &ItemMeta) -> bool {
         meta.exptime != 0 && meta.exptime <= self.clock.now()
     }
 
     // ------------------------------------------------------------ internals
 
+    /// Is this item's chunk in the old (draining) generation?
+    #[inline]
+    pub(crate) fn is_old_gen(&self, item_gen: u8) -> bool {
+        self.migration.is_some() && item_gen != self.gen
+    }
+
+    /// Read an item's chunk from whichever generation holds it.
+    #[inline]
+    pub(crate) fn item_chunk(&self, m: &ItemMeta) -> &[u8] {
+        self.alloc.chunk_gen(self.is_old_gen(m.gen), m.handle)
+    }
+
+    /// Bump an item's recency in whichever generation's LRU holds it.
+    /// Old and new class tables differ mid-drain, so indexing the wrong
+    /// one would corrupt LRU links — every recency bump must go through
+    /// here. Returns whether the item is in the old generation.
+    fn touch_lru(&mut self, id: u32) -> bool {
+        let (class, old) = {
+            let m = self.arena.get(id);
+            (m.handle.class as usize, self.is_old_gen(m.gen))
+        };
+        if old {
+            let mig = self.migration.as_mut().expect("old item implies migration");
+            mig.old_lrus[class].touch(id, &mut self.arena);
+        } else {
+            self.lrus[class].touch(id, &mut self.arena);
+        }
+        old
+    }
+
     fn find_live(&mut self, key: &[u8], hash: u64) -> Option<u32> {
         let id = {
             let arena = &self.arena;
             let alloc = &self.alloc;
+            let gen = self.gen;
+            let migrating = self.migration.is_some();
             self.table.find(hash, arena, |id| {
                 let m = arena.get(id);
-                let chunk = alloc.chunk(m.handle);
+                let chunk = alloc.chunk_gen(migrating && m.gen != gen, m.handle);
                 &chunk[..m.klen as usize] == key
             })?
         };
@@ -287,17 +339,31 @@ impl KvStore {
         Some(id)
     }
 
-    fn unlink_and_free(&mut self, id: u32, hash: u64) {
+    pub(crate) fn unlink_and_free(&mut self, id: u32, hash: u64) {
         self.table.remove(id, hash, &mut self.arena);
-        let class = self.arena.get(id).handle.class as usize;
-        self.lrus[class].remove(id, &mut self.arena);
-        let meta = self.arena.remove(id);
-        self.alloc.free(meta.handle, meta.total as usize);
+        let (class, old) = {
+            let m = self.arena.get(id);
+            (m.handle.class as usize, self.is_old_gen(m.gen))
+        };
+        if old {
+            let mig = self.migration.as_mut().expect("old item implies migration");
+            mig.old_lrus[class].remove(id, &mut self.arena);
+            mig.old_items -= 1;
+            let meta = self.arena.remove(id);
+            self.alloc.free_old(meta.handle, meta.total as usize);
+        } else {
+            self.lrus[class].remove(id, &mut self.arena);
+            let meta = self.arena.remove(id);
+            self.alloc.free(meta.handle, meta.total as usize);
+        }
     }
 
     /// Allocate a chunk, evicting from the target class when the page
     /// budget is exhausted (memcached's default `-M off` behaviour).
-    fn alloc_with_eviction(&mut self, total: usize) -> Result<ChunkHandle, StoreError> {
+    /// During a migration, a class with nothing of its own to evict
+    /// force-drains the emptiest old-generation page instead, recycling
+    /// it into the new geometry.
+    pub(crate) fn alloc_with_eviction(&mut self, total: usize) -> Result<ChunkHandle, StoreError> {
         for _ in 0..MAX_EVICT_ATTEMPTS {
             match self.alloc.alloc(total) {
                 Ok(h) => return Ok(h),
@@ -311,6 +377,11 @@ impl KvStore {
                             let hash = self.arena.get(id).hash;
                             self.unlink_and_free(id, hash);
                             self.stats.evictions += 1;
+                        }
+                        None if self.migration.is_some() => {
+                            if !self.force_drain_old_page() {
+                                return Err(StoreError::OutOfMemory);
+                            }
                         }
                         None => return Err(StoreError::OutOfMemory),
                     }
@@ -355,6 +426,7 @@ impl KvStore {
             prev: NIL,
             next: NIL,
             tier: 0,
+            gen: self.gen,
             live: true,
         });
         self.table.insert(id, hash, &mut self.arena);
@@ -367,35 +439,72 @@ impl KvStore {
 
     /// Replace the value bytes of an existing item, reallocating across
     /// classes when the new total no longer fits the current chunk.
+    /// Items still in the old (draining) generation are migrated to the
+    /// current geometry by any rewrite, so every mutation makes drain
+    /// progress.
     fn replace_value_bytes(&mut self, id: u32, new_value: &[u8]) -> Result<(), StoreError> {
-        let (handle, klen, old_total) = {
+        let (handle, klen, old_total, item_gen) = {
             let m = self.arena.get(id);
-            (m.handle, m.klen as usize, m.total as usize)
+            (m.handle, m.klen as usize, m.total as usize, m.gen)
         };
         let new_total = total_item_size(klen, new_value.len(), self.use_cas);
-        let chunk_size = self.alloc.chunk_size_of(handle.class);
-        if new_total <= chunk_size {
-            // in-place rewrite
-            let chunk = self.alloc.chunk_mut(handle);
-            chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
-            self.alloc.reaccount(handle, old_total, new_total);
-        } else {
-            // move to a larger chunk; copy key + new value
-            let key: Vec<u8> = self.alloc.chunk(handle)[..klen].to_vec();
-            let new_handle = self.alloc_with_eviction(new_total)?;
-            debug_assert!(self.arena.get(id).live, "victim eviction freed self");
+        if self.is_old_gen(item_gen) {
+            // migrate on rewrite: new chunk in the current geometry
+            let key: Vec<u8> = self.item_chunk(self.arena.get(id))[..klen].to_vec();
+            let old_class = handle.class as usize;
+            // unlink first so the eviction walk cannot pick this item
+            {
+                let mig = self.migration.as_mut().expect("old item implies migration");
+                mig.old_lrus[old_class].remove(id, &mut self.arena);
+            }
+            let new_handle = match self.alloc_with_eviction(new_total) {
+                Ok(h) => h,
+                Err(e) => {
+                    // restore: the item survives the failed rewrite
+                    let mig = self.migration.as_mut().expect("still migrating");
+                    mig.old_lrus[old_class].insert(id, &mut self.arena);
+                    return Err(e);
+                }
+            };
             let chunk = self.alloc.chunk_mut(new_handle);
             chunk[..klen].copy_from_slice(&key);
             chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
-            self.alloc.free(handle, old_total);
-            // move LRU membership to the new class
-            let old_class = handle.class as usize;
-            let new_class = new_handle.class as usize;
-            if old_class != new_class {
-                self.lrus[old_class].remove(id, &mut self.arena);
-                self.lrus[new_class].insert(id, &mut self.arena);
+            self.alloc.free_old(handle, old_total);
+            {
+                let mig = self.migration.as_mut().expect("still migrating");
+                mig.old_items -= 1;
+                mig.moved += 1;
             }
-            self.arena.get_mut(id).handle = new_handle;
+            self.lrus[new_handle.class as usize].insert(id, &mut self.arena);
+            let gen = self.gen;
+            let m = self.arena.get_mut(id);
+            m.handle = new_handle;
+            m.gen = gen;
+        } else {
+            let chunk_size = self.alloc.chunk_size_of(handle.class);
+            if new_total <= chunk_size {
+                // in-place rewrite
+                let chunk = self.alloc.chunk_mut(handle);
+                chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+                self.alloc.reaccount(handle, old_total, new_total);
+            } else {
+                // move to a larger chunk; copy key + new value
+                let key: Vec<u8> = self.alloc.chunk(handle)[..klen].to_vec();
+                let new_handle = self.alloc_with_eviction(new_total)?;
+                debug_assert!(self.arena.get(id).live, "victim eviction freed self");
+                let chunk = self.alloc.chunk_mut(new_handle);
+                chunk[..klen].copy_from_slice(&key);
+                chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+                self.alloc.free(handle, old_total);
+                // move LRU membership to the new class
+                let old_class = handle.class as usize;
+                let new_class = new_handle.class as usize;
+                if old_class != new_class {
+                    self.lrus[old_class].remove(id, &mut self.arena);
+                    self.lrus[new_class].insert(id, &mut self.arena);
+                }
+                self.arena.get_mut(id).handle = new_handle;
+            }
         }
         let cas = self.next_cas();
         let m = self.arena.get_mut(id);
@@ -525,11 +634,11 @@ impl KvStore {
         let Some(id) = self.find_live(key, hash) else {
             return Ok(false);
         };
-        let (handle, klen, vlen) = {
+        let (klen, vlen) = {
             let m = self.arena.get(id);
-            (m.handle, m.klen as usize, m.vlen as usize)
+            (m.klen as usize, m.vlen as usize)
         };
-        let old = self.alloc.chunk(handle)[klen..klen + vlen].to_vec();
+        let old = self.item_chunk(self.arena.get(id))[klen..klen + vlen].to_vec();
         let mut merged = Vec::with_capacity(old.len() + data.len());
         if append {
             merged.extend_from_slice(&old);
@@ -564,14 +673,13 @@ impl KvStore {
             return None;
         };
         self.stats.get_hits += 1;
-        let class = self.arena.get(id).handle.class as usize;
-        self.lrus[class].touch(id, &mut self.arena);
+        let old = self.touch_lru(id);
         // refresh the access time so the next TOUCH_INTERVAL seconds of
         // hits on this key can be served by `peek` under a read lock
         let now = self.clock.now();
         self.arena.get_mut(id).time = now;
         let m = self.arena.get(id);
-        let chunk = self.alloc.chunk(m.handle);
+        let chunk = self.alloc.chunk_gen(old, m.handle);
         Some(f(ValueRef {
             data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
             flags: m.flags,
@@ -594,7 +702,7 @@ impl KvStore {
         let hash = hash_key(key);
         let found = self.table.find(hash, &self.arena, |id| {
             let m = self.arena.get(id);
-            let chunk = self.alloc.chunk(m.handle);
+            let chunk = self.item_chunk(m);
             &chunk[..m.klen as usize] == key
         });
         let Some(id) = found else {
@@ -607,7 +715,7 @@ impl KvStore {
         if self.clock.now().saturating_sub(m.time) >= TOUCH_INTERVAL {
             return PeekOutcome::NeedsWrite; // write path bumps the LRU
         }
-        let chunk = self.alloc.chunk(m.handle);
+        let chunk = self.item_chunk(m);
         PeekOutcome::Hit(f(ValueRef {
             data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
             flags: m.flags,
@@ -647,11 +755,11 @@ impl KvStore {
             }
             return Ok(None);
         };
-        let (handle, klen, vlen) = {
+        let (klen, vlen) = {
             let m = self.arena.get(id);
-            (m.handle, m.klen as usize, m.vlen as usize)
+            (m.klen as usize, m.vlen as usize)
         };
-        let bytes = &self.alloc.chunk(handle)[klen..klen + vlen];
+        let bytes = &self.item_chunk(self.arena.get(id))[klen..klen + vlen];
         let text = std::str::from_utf8(bytes).map_err(|_| StoreError::NonNumeric)?;
         let current: u64 = text.trim_end().parse().map_err(|_| StoreError::NonNumeric)?;
         let next = if incr {
@@ -675,8 +783,7 @@ impl KvStore {
         match self.find_live(key, hash) {
             Some(id) => {
                 let exp = self.normalize_exptime(exptime);
-                let class = self.arena.get(id).handle.class as usize;
-                self.lrus[class].touch(id, &mut self.arena);
+                self.touch_lru(id);
                 self.arena.get_mut(id).exptime = exp;
                 self.stats.touch_hits += 1;
                 true
@@ -696,13 +803,15 @@ impl KvStore {
             let hash = self.arena.get(id).hash;
             self.unlink_and_free(id, hash);
         }
+        // flushing everything also empties the draining generation
+        self.maybe_finish_migration();
     }
 
     /// Visit `(key, meta_total_size)` for every live item.
     pub fn for_each_item<F: FnMut(&[u8], usize)>(&self, mut f: F) {
         for id in self.arena.iter_ids() {
             let m = self.arena.get(id);
-            let chunk = self.alloc.chunk(m.handle);
+            let chunk = self.item_chunk(m);
             f(&chunk[..m.klen as usize], m.total as usize);
         }
     }
@@ -712,77 +821,29 @@ impl KvStore {
     /// Migrate every item into a new chunk geometry — the online
     /// equivalent of restarting memcached with `-o slab_sizes=...`.
     ///
-    /// Recency is preserved within each old class (hot → cold order);
-    /// items that cannot fit under the page budget of the new layout
-    /// are dropped (counted in the report). Transiently uses up to 2×
-    /// the memory limit while both allocators are alive — the price of
-    /// not restarting (the paper restarts the server instead).
+    /// Blocking convenience over the incremental machinery in
+    /// `store::migrate`: kicks off a migration and drives
+    /// [`migrate_step`] to completion. Items move coldest-first within
+    /// each old class, so relative recency is preserved; items that
+    /// cannot fit under the page budget (plus the constant page slack)
+    /// are dropped, counted in the report. Peak memory is bounded by
+    /// `mem_limit` + [`MIGRATION_PAGE_SLACK`] pages — old pages drain
+    /// into a free-page pool and are re-carved for the new geometry.
+    ///
+    /// Concurrent callers (`ShardedStore`, the auto-tuner) instead use
+    /// [`begin_migration`] + [`migrate_step`] directly, releasing the
+    /// shard lock between steps.
+    ///
+    /// [`begin_migration`]: KvStore::begin_migration
+    /// [`migrate_step`]: KvStore::migrate_step
+    /// [`MIGRATION_PAGE_SLACK`]: crate::slab::allocator::MIGRATION_PAGE_SLACK
     pub fn reconfigure(&mut self, new_policy: ChunkSizePolicy) -> Result<MigrationReport, StoreError> {
-        let before = self.alloc.stats();
-        let mut new_alloc = match SlabAllocator::new(&new_policy, self.page_size, self.mem_limit) {
-            Ok(a) => a,
-            Err(SlabError::Policy(_)) | Err(_) => {
-                return Err(StoreError::OutOfMemory) // invalid policy surfaced upstream
-            }
-        };
-        self.table.finish_expansion(&mut self.arena);
-
-        // Snapshot ids least-recent-last per old class, then re-insert in
-        // reverse so push-to-hot-head preserves relative recency.
-        let mut ordered: Vec<u32> = Vec::with_capacity(self.arena.len());
-        for lru in &self.lrus {
-            ordered.extend(lru.iter_all(&self.arena));
-        }
-
-        let mut new_lrus: Vec<ClassLru> = (0..new_alloc.chunk_sizes().len())
-            .map(|_| ClassLru::new())
-            .collect();
-
-        let mut moved = 0usize;
-        let mut dropped: Vec<u32> = Vec::new();
-        for &id in ordered.iter().rev() {
-            let (old_handle, klen, vlen, total) = {
-                let m = self.arena.get(id);
-                (m.handle, m.klen as usize, m.vlen as usize, m.total as usize)
-            };
-            match new_alloc.alloc(total) {
-                Ok(new_handle) => {
-                    let src = self.alloc.chunk(old_handle)[..klen + vlen].to_vec();
-                    new_alloc.chunk_mut(new_handle)[..klen + vlen].copy_from_slice(&src);
-                    // old LRU links are rebuilt below; clear them first
-                    let m = self.arena.get_mut(id);
-                    m.handle = new_handle;
-                    m.prev = NIL;
-                    m.next = NIL;
-                    new_lrus[new_handle.class as usize].insert(id, &mut self.arena);
-                    moved += 1;
-                }
-                Err(_) => dropped.push(id),
-            }
-        }
-
-        // Unlink dropped items from the hash table + arena (their chunks
-        // die with the old allocator).
-        for id in &dropped {
-            let hash = self.arena.get(*id).hash;
-            self.table.remove(*id, hash, &mut self.arena);
-            self.arena.remove(*id);
-        }
-
-        self.alloc = new_alloc;
-        self.lrus = new_lrus;
-        self.policy = new_policy;
-        self.stats.reconfigures += 1;
-
-        let after = self.alloc.stats();
-        Ok(MigrationReport {
-            items_moved: moved,
-            items_dropped: dropped.len(),
-            hole_bytes_before: before.hole_bytes,
-            hole_bytes_after: after.hole_bytes,
-            pages_before: before.pages_allocated,
-            pages_after: after.pages_allocated,
-        })
+        self.begin_migration(new_policy)?;
+        while self.migrate_step(super::migrate::DEFAULT_MIGRATE_BATCH) {}
+        Ok(self
+            .last_migration
+            .clone()
+            .expect("migration just completed"))
     }
 }
 

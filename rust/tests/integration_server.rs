@@ -13,9 +13,16 @@ use slabforge::store::sharded::ShardedStore;
 use slabforge::store::store::Clock;
 use slabforge::util::rng::Pcg64;
 use slabforge::workload::gen::value_len_for_total;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn full_server(min_samples: u64) -> (ServerHandle, Arc<ShardedStore>) {
+    let (handle, store, _tuner) = full_server_with_tuner(min_samples);
+    (handle, store)
+}
+
+fn full_server_with_tuner(min_samples: u64) -> (ServerHandle, Arc<ShardedStore>, Arc<AutoTuner>) {
     let store = Arc::new(
         ShardedStore::with(
             ChunkSizePolicy::default(),
@@ -43,10 +50,10 @@ fn full_server(min_samples: u64) -> (ServerHandle, Arc<ShardedStore>) {
         PAGE_SIZE,
     )
     .unwrap();
-    let handle = Server::with_control(store.clone(), tuner)
+    let handle = Server::with_control(store.clone(), tuner.clone())
         .start("127.0.0.1:0")
         .unwrap();
-    (handle, store)
+    (handle, store, tuner)
 }
 
 fn drive_sets(c: &mut Client, n: usize, seed: u64) {
@@ -95,15 +102,99 @@ fn manual_reconfigure_over_the_wire() {
     let mut c = Client::connect(handle.addr()).unwrap();
     c.set("a", &vec![b'x'; 400], 0, 0).unwrap();
 
+    // the command is asynchronous: it kicks off the drain and returns
     let msg = c.slabs_reconfigure(&[512, 1024, 8192]).unwrap();
-    assert!(msg.starts_with("RECONFIGURED items_moved=1"), "{msg}");
+    assert!(msg.starts_with("MIGRATING"), "{msg}");
+    // geometry flips immediately; the item serves from the old
+    // generation while the drain is in flight
     assert_eq!(store.chunk_sizes(), vec![512, 1024, 8192, PAGE_SIZE]);
     assert_eq!(c.get("a").unwrap().unwrap().value.len(), 400);
+
+    // no background tuner thread in this test: drive the drain inline
+    while store.migration_step_all() {}
+    assert_eq!(c.get("a").unwrap().unwrap().value.len(), 400);
+    let slabs = c.stats(Some("slabs")).unwrap();
+    assert_eq!(slabs["migration_active"], "0", "{slabs:?}");
+    assert_eq!(slabs["migration_moved"], "1", "{slabs:?}");
 
     // invalid sizes rejected, store untouched
     let err = c.slabs_reconfigure(&[100, 50]).unwrap_err();
     assert!(format!("{err}").contains("SERVER_ERROR"), "{err}");
     assert_eq!(store.chunk_sizes(), vec![512, 1024, 8192, PAGE_SIZE]);
+    handle.shutdown();
+}
+
+/// The control plane must stay off the hot loop: while a large
+/// `slabs reconfigure` drains, other connections keep serving with a
+/// bounded per-request gap (the shard write lock is only ever held for
+/// one `migrate_batch` step at a time).
+#[test]
+fn reconfigure_under_load_keeps_serving() {
+    let (handle, store, tuner) = full_server_with_tuner(u64::MAX);
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = tuner.spawn(stop.clone());
+
+    let mut c = Client::connect(handle.addr()).unwrap();
+    drive_sets(&mut c, 20_000, 11);
+    store.set_migrate_batch(128); // many steps -> many lock release points
+
+    // a second connection serving gets throughout the drain
+    let addr = handle.addr();
+    let reader = std::thread::spawn(move || {
+        let mut c2 = Client::connect(addr).unwrap();
+        let mut rng = Pcg64::new(12);
+        let mut max_gap = Duration::ZERO;
+        let mut ops = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(5) {
+            let key = format!("k{:08}", rng.gen_range(20_000));
+            let t = Instant::now();
+            let _ = c2.get(&key).unwrap();
+            max_gap = max_gap.max(t.elapsed());
+            ops += 1;
+        }
+        (max_gap, ops)
+    });
+
+    // kick off the migration; the response must come back immediately
+    let t = Instant::now();
+    let msg = c.slabs_reconfigure(&[518, 1024, 8192]).unwrap();
+    assert!(msg.starts_with("MIGRATING"), "{msg}");
+    assert!(
+        t.elapsed() < Duration::from_secs(1),
+        "kick-off must not block on the drain ({:?})",
+        t.elapsed()
+    );
+
+    // the background tuner thread drains it while traffic flows
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let slabs = c.stats(Some("slabs")).unwrap();
+        if slabs["migration_active"] == "0" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "drain never completed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let (max_gap, ops) = reader.join().unwrap();
+    assert!(ops > 100, "reader must have made progress ({ops} ops)");
+    // bounded pause: no single get may stall anywhere near the length
+    // of the whole drain (generous bound for loaded CI machines)
+    assert!(
+        max_gap < Duration::from_millis(500),
+        "get stalled {max_gap:?} during migration"
+    );
+
+    // data survived and the new geometry holds
+    assert!(c.get("k00000000").unwrap().is_some());
+    assert!(c.get("k00019999").unwrap().is_some());
+    let slabs = c.stats(Some("slabs")).unwrap();
+    let moved: u64 = slabs["migration_moved"].parse().unwrap();
+    assert!(moved > 10_000, "most items must have migrated ({moved})");
+
+    stop.store(true, Ordering::SeqCst);
+    driver.join().unwrap();
     handle.shutdown();
 }
 
