@@ -27,4 +27,10 @@ grep -q "reconfig_stall_us" "$root/BENCH_server.json" || {
     exit 1
 }
 
+echo "==> verify meta_pipeline landed in BENCH_server.json"
+grep -q "meta_pipeline" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the meta quiet-pipeline row" >&2
+    exit 1
+}
+
 echo "CI OK"

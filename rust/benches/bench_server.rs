@@ -180,6 +180,70 @@ fn main() {
         },
     ));
 
+    // ---- meta quiet-miss pipeline (mg ... q + mn barrier) ------------------
+    // The meta dialect's signature workload: deep pipelines of quiet
+    // gets where misses produce NO response bytes at all, terminated by
+    // an mn barrier. Half the keys miss, so the reactor serves a
+    // response stream much smaller than the request stream — a shape
+    // the classic dialect cannot express (every classic get answers).
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        const DEPTH: usize = 64;
+        let mut resp = vec![0u8; 256 * 1024];
+        rows.push(
+            bench(
+                "meta mg quiet pipeline x64",
+                &BenchOpts {
+                    warmup: 1,
+                    iters,
+                    units_per_iter: (n_get / DEPTH * DEPTH) as f64,
+                },
+                || {
+                    let mut rng = Pcg64::new(7);
+                    let mut req = Vec::with_capacity(DEPTH * 32);
+                    for _ in 0..n_get / DEPTH {
+                        req.clear();
+                        for _ in 0..DEPTH {
+                            // ~50% misses: the "m" prefix never collides
+                            // with the seeded k-keys
+                            let id = rng.gen_range(n_set as u64);
+                            if rng.chance(0.5) {
+                                req.extend_from_slice(
+                                    format!("mg k{id:08} v q\r\n").as_bytes(),
+                                );
+                            } else {
+                                req.extend_from_slice(
+                                    format!("mg m{id:08} v q\r\n").as_bytes(),
+                                );
+                            }
+                        }
+                        req.extend_from_slice(b"mn\r\n");
+                        s.write_all(&req).unwrap();
+                        // drain until the barrier: quiet misses emit
+                        // nothing, so MN is the only completion signal
+                        let mut done = false;
+                        let mut carry = [0u8; 3];
+                        let mut carry_len = 0usize;
+                        while !done {
+                            let n = s.read(&mut resp).unwrap();
+                            assert!(n > 0, "server closed mid-pipeline");
+                            let mut window = Vec::with_capacity(carry_len + n);
+                            window.extend_from_slice(&carry[..carry_len]);
+                            window.extend_from_slice(&resp[..n]);
+                            done = window.windows(4).any(|w| w == b"MN\r\n");
+                            let keep = window.len().min(3);
+                            carry[..keep].copy_from_slice(&window[window.len() - keep..]);
+                            carry_len = keep;
+                        }
+                    }
+                },
+            )
+            .with_dim("meta_pipeline", DEPTH as f64),
+        );
+    }
+
     // ---- connection scaling -----------------------------------------------
     for conns in [1usize, 4, 8] {
         let per = n_get / conns;

@@ -15,6 +15,27 @@ pub struct ClientValue {
     pub cas: Option<u64>,
 }
 
+/// One parsed meta-protocol response: the return code (`HD`, `VA`,
+/// `EN`, `NS`, `EX`, `NF`, `MN`), the echoed flag tokens, and the data
+/// block when the code is `VA`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetaResponse {
+    pub code: String,
+    pub flags: Vec<String>,
+    pub data: Option<Vec<u8>>,
+}
+
+impl MetaResponse {
+    /// The token of echo flag `c` (e.g. `flag('c')` on `HD c42` →
+    /// `Some("42")`).
+    pub fn flag(&self, c: char) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|f| f.starts_with(c))
+            .map(|f| &f[c.len_utf8()..])
+    }
+}
+
 /// Client-side failures.
 #[derive(Debug)]
 pub enum ClientError {
@@ -178,6 +199,12 @@ impl Client {
         let verb = if with_cas { "gets" } else { "get" };
         let cmd = format!("{verb} {}\r\n", keys.join(" "));
         self.writer.write_all(cmd.as_bytes())?;
+        self.read_values()
+    }
+
+    /// Read `VALUE ...` lines until `END` (shared by `get`/`gets`/
+    /// `gat`/`gats`).
+    fn read_values(&mut self) -> Result<BTreeMap<String, ClientValue>> {
         let mut found = BTreeMap::new();
         loop {
             let line = self.read_line()?;
@@ -209,7 +236,119 @@ impl Client {
         }
     }
 
+    // ---------------------------------------------------------------- meta
+
+    /// Read one meta response (line + data block when `VA`).
+    fn read_meta(&mut self) -> Result<MetaResponse> {
+        let line = self.read_line()?;
+        Self::check_error(&line)?;
+        let mut parts = line.split_whitespace();
+        let code = parts
+            .next()
+            .ok_or_else(|| ClientError::Protocol("empty meta response".into()))?
+            .to_string();
+        if code == "VA" {
+            let size: usize = parse_field(parts.next(), "size")?;
+            let flags: Vec<String> = parts.map(str::to_string).collect();
+            let mut data = vec![0u8; size + 2];
+            self.reader.read_exact(&mut data)?;
+            data.truncate(size);
+            Ok(MetaResponse {
+                code,
+                flags,
+                data: Some(data),
+            })
+        } else {
+            Ok(MetaResponse {
+                code,
+                flags: parts.map(str::to_string).collect(),
+                data: None,
+            })
+        }
+    }
+
+    fn meta_line(verb: &str, key: &str, flags: &[&str]) -> String {
+        let mut line = format!("{verb} {key}");
+        for f in flags {
+            line.push(' ');
+            line.push_str(f);
+        }
+        line.push_str("\r\n");
+        line
+    }
+
+    /// `mg <key> <flags>*` — meta get.
+    pub fn mg(&mut self, key: &str, flags: &[&str]) -> Result<MetaResponse> {
+        let line = Self::meta_line("mg", key, flags);
+        self.writer.write_all(line.as_bytes())?;
+        self.read_meta()
+    }
+
+    /// `ms <key> <datalen> <flags>*` + data block — meta set.
+    pub fn ms(&mut self, key: &str, value: &[u8], flags: &[&str]) -> Result<MetaResponse> {
+        let mut line = format!("ms {key} {}", value.len());
+        for f in flags {
+            line.push(' ');
+            line.push_str(f);
+        }
+        line.push_str("\r\n");
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(value)?;
+        self.writer.write_all(b"\r\n")?;
+        self.read_meta()
+    }
+
+    /// `md <key> <flags>*` — meta delete.
+    pub fn md(&mut self, key: &str, flags: &[&str]) -> Result<MetaResponse> {
+        let line = Self::meta_line("md", key, flags);
+        self.writer.write_all(line.as_bytes())?;
+        self.read_meta()
+    }
+
+    /// `ma <key> <flags>*` — meta arithmetic.
+    pub fn ma(&mut self, key: &str, flags: &[&str]) -> Result<MetaResponse> {
+        let line = Self::meta_line("ma", key, flags);
+        self.writer.write_all(line.as_bytes())?;
+        self.read_meta()
+    }
+
+    /// `mn` — meta no-op / quiet-pipeline barrier. Errors if the next
+    /// response line is not `MN` (i.e. an unexpected response was
+    /// queued ahead of the barrier).
+    pub fn mn(&mut self) -> Result<()> {
+        self.writer.write_all(b"mn\r\n")?;
+        let r = self.read_meta()?;
+        if r.code == "MN" {
+            Ok(())
+        } else {
+            Err(ClientError::Protocol(format!("mn -> {}", r.code)))
+        }
+    }
+
     // --------------------------------------------------------------- admin
+
+    /// `gat`/`gats`: get-and-touch every key to `exptime`.
+    pub fn gat(
+        &mut self,
+        exptime: u32,
+        keys: &[&str],
+        with_cas: bool,
+    ) -> Result<BTreeMap<String, ClientValue>> {
+        let verb = if with_cas { "gats" } else { "gat" };
+        let cmd = format!("{verb} {exptime} {}\r\n", keys.join(" "));
+        self.writer.write_all(cmd.as_bytes())?;
+        self.read_values()
+    }
+
+    /// `stats reset` — zero the resettable counters.
+    pub fn stats_reset(&mut self) -> Result<()> {
+        let line = self.simple_command("stats reset\r\n")?;
+        if line == "RESET" {
+            Ok(())
+        } else {
+            Err(ClientError::Protocol(format!("stats reset -> {line}")))
+        }
+    }
 
     pub fn delete(&mut self, key: &str) -> Result<bool> {
         Ok(self.simple_command(&format!("delete {key}\r\n"))? == "DELETED")
@@ -383,6 +522,78 @@ mod tests {
         assert_eq!(c.get("k99").unwrap().unwrap().value, b"v");
         let stats = c.stats(None).unwrap();
         assert_eq!(stats["curr_items"], "100");
+        h.shutdown();
+    }
+
+    #[test]
+    fn meta_commands_roundtrip() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+
+        let r = c.ms("mk", b"hello", &["F7", "c", "k"]).unwrap();
+        assert_eq!(r.code, "HD");
+        let cas: u64 = r.flag('c').unwrap().parse().unwrap();
+        assert_eq!(r.flag('k'), Some("mk"));
+
+        let r = c.mg("mk", &["v", "f", "c", "t", "k"]).unwrap();
+        assert_eq!(r.code, "VA");
+        assert_eq!(r.data.as_deref(), Some(b"hello".as_ref()));
+        assert_eq!(r.flag('f'), Some("7"));
+        assert_eq!(r.flag('t'), Some("-1"));
+        assert_eq!(r.flag('c').unwrap().parse::<u64>().unwrap(), cas);
+
+        let r = c.mg("missing", &["v"]).unwrap();
+        assert_eq!(r.code, "EN");
+
+        let err = c.ma("mk", &[]).unwrap_err(); // non-numeric value
+        assert!(matches!(err, ClientError::Server(_)), "{err}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn meta_quiet_pipeline_with_barrier() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        // quiet misses produce nothing; mn is the only response
+        c.writer
+            .write_all(b"mg gone1 v q\r\nmg gone2 v q\r\n")
+            .unwrap();
+        c.mn().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn gat_touches_over_the_wire() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        c.set("g1", b"x", 3, 60).unwrap();
+        let m = c.gat(300, &["g1", "missing"], false).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m["g1"].value, b"x");
+        assert_eq!(m["g1"].flags, 3);
+        assert!(m["g1"].cas.is_none());
+        let m = c.gat(300, &["g1"], true).unwrap();
+        assert!(m["g1"].cas.is_some(), "gats returns cas");
+        // TTL observable through the meta t flag
+        let r = c.mg("g1", &["t"]).unwrap();
+        let ttl: i64 = r.flag('t').unwrap().parse().unwrap();
+        assert!((295..=300).contains(&ttl), "{ttl}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn stats_reset_over_the_wire() {
+        let h = server();
+        let mut c = Client::connect(h.addr()).unwrap();
+        c.set("k", b"v", 0, 0).unwrap();
+        c.get("k").unwrap();
+        let st = c.stats(None).unwrap();
+        assert_ne!(st["cmd_get"], "0");
+        c.stats_reset().unwrap();
+        let st = c.stats(None).unwrap();
+        assert_eq!(st["cmd_get"], "0");
+        assert_eq!(st["cmd_set"], "0");
+        assert_eq!(st["curr_items"], "1", "items survive");
         h.shutdown();
     }
 

@@ -1,0 +1,297 @@
+//! Meta-dialect parser (`mg`/`ms`/`md`/`ma`/`mn`) — the second
+//! front-end onto the command IR ([`Request`]).
+//!
+//! The meta protocol replaces per-command response grammar with one
+//! compact shape: `<cmd> <key> <flag>*`, where each flag is a single
+//! letter optionally followed by a token, and the response echoes the
+//! requested flags back (`HD`/`VA`/`EN`/`NS`/`EX`/`NF` codes). Flags
+//! implemented here:
+//!
+//! | flag | meaning |
+//! |------|---------|
+//! | `v`  | return value (`VA` response) |
+//! | `f`  | echo stored client flags |
+//! | `c`  | echo CAS |
+//! | `t`  | echo remaining TTL (`-1` = unlimited) |
+//! | `s`  | echo value size |
+//! | `k`  | echo key |
+//! | `O<tok>` | echo opaque token |
+//! | `q`  | quiet: suppress misses (`mg`) / successes (`ms`/`md`/`ma`) |
+//! | `b`  | key token is base64 |
+//! | `T<ttl>` | `ms`: item TTL; `mg`/`ma`: touch TTL on hit |
+//! | `N<ttl>` | `mg`/`ma`: vivify on miss with this TTL |
+//! | `E<cas>` | `ms`/`ma`: store this CAS value; `mg`: CAS for a vivified item (invalid on `md`) |
+//! | `C<cas>` | compare-and-swap guard (`ms`/`md`/`ma`) |
+//! | `F<flags>` | `ms`: client flags to store |
+//! | `D<delta>` | `ma`: delta (default 1) |
+//! | `J<init>` | `ma`: vivify initial value (default 0) |
+//! | `M<mode>` | `ms`: S/E/A/P/R = set/add/append/prepend/replace; `ma`: I/+ incr, D/- decr |
+//!
+//! Parsing is allocation-free: the verb/key/flag tokens are iterated in
+//! place and every borrowed field of the produced [`Request`] points
+//! into the receive buffer, keeping the `mg` hit path zero-alloc
+//! end-to-end (`tests/hotpath_alloc.rs`).
+
+use super::parse::{parse_exptime, parse_u32, parse_u64, parse_usize, ParseError};
+use super::request::{want, Opcode, Request, MAX_OPAQUE};
+use crate::store::item::key_is_valid;
+use crate::store::store::StoreMode;
+
+/// Cheap shape test: does this line use a meta verb? (`mg`, `ms`,
+/// `md`, `ma`, `mn` followed by end-of-line or a space.)
+#[inline]
+pub fn is_meta(line: &[u8]) -> bool {
+    line.len() >= 2
+        && line[0] == b'm'
+        && matches!(line[1], b'g' | b's' | b'd' | b'a' | b'n')
+        && (line.len() == 2 || line[2] == b' ')
+}
+
+/// Parse one meta command line (without the trailing `\r\n`).
+pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
+    let mut toks = line.split(|&b| b == b' ').filter(|t| !t.is_empty());
+    let Some(verb) = toks.next() else {
+        return Err(ParseError::UnknownCommand);
+    };
+    let op = match verb {
+        b"mn" => return Ok(Request::meta(Opcode::Noop)),
+        b"mg" => Opcode::Get,
+        b"ms" => Opcode::Store,
+        b"md" => Opcode::Delete,
+        b"ma" => Opcode::Arith,
+        _ => return Err(ParseError::UnknownCommand),
+    };
+    let Some(key) = toks.next() else {
+        return Err(ParseError::Client("missing key"));
+    };
+    let mut r = Request::meta(op);
+    r.key = key;
+    r.key_echo = key;
+    if op == Opcode::Store {
+        let Some(len) = toks.next() else {
+            return Err(ParseError::Client("ms requires a data length"));
+        };
+        r.nbytes = Some(parse_usize(len)?);
+    }
+    for t in toks {
+        let (flag, arg) = (t[0], &t[1..]);
+        match flag {
+            // argless flags with a trailing token (e.g. a fused "vq")
+            // are malformed — reject loudly rather than silently
+            // dropping the tail and changing semantics
+            b'v' | b'f' | b'c' | b't' | b's' | b'k' | b'q' | b'b' if !arg.is_empty() => {
+                return Err(ParseError::Client("invalid flag"));
+            }
+            b'v' => r.want |= want::VALUE,
+            b'f' => r.want |= want::FLAGS,
+            b'c' => r.want |= want::CAS,
+            b't' => r.want |= want::TTL,
+            b's' => r.want |= want::SIZE,
+            b'k' => r.want |= want::KEY,
+            b'q' => r.quiet = true,
+            b'b' => r.b64_key = true,
+            b'O' => {
+                if arg.is_empty() || arg.len() > MAX_OPAQUE {
+                    return Err(ParseError::Client("bad opaque token"));
+                }
+                r.want |= want::OPAQUE;
+                r.opaque = arg;
+            }
+            b'T' => {
+                let ttl = parse_exptime(arg)?;
+                if op == Opcode::Store {
+                    r.exptime = ttl;
+                } else {
+                    r.touch_ttl = Some(ttl);
+                }
+            }
+            b'N' => r.vivify = Some(parse_exptime(arg)?),
+            b'E' => {
+                // md never keeps the item, so an explicit CAS would be
+                // silently meaningless — reject it loudly
+                if op == Opcode::Delete {
+                    return Err(ParseError::Client("invalid flag"));
+                }
+                r.cas_set = Some(parse_u64(arg)?);
+            }
+            b'C' => r.cas_compare = Some(parse_u64(arg)?),
+            b'F' => r.set_flags = parse_u32(arg)?,
+            b'D' => r.delta = parse_u64(arg)?,
+            b'J' => r.arith_init = parse_u64(arg)?,
+            b'M' => match (op, arg) {
+                (Opcode::Store, b"S") => r.mode = StoreMode::Set,
+                (Opcode::Store, b"E") => r.mode = StoreMode::Add,
+                (Opcode::Store, b"A") => r.mode = StoreMode::Append,
+                (Opcode::Store, b"P") => r.mode = StoreMode::Prepend,
+                (Opcode::Store, b"R") => r.mode = StoreMode::Replace,
+                (Opcode::Arith, b"I" | b"+") => r.incr = true,
+                (Opcode::Arith, b"D" | b"-") => r.incr = false,
+                _ => return Err(ParseError::Client("invalid mode")),
+            },
+            _ => return Err(ParseError::Client("invalid flag")),
+        }
+    }
+    // raw (non-base64) keys must satisfy the text-protocol rules, and
+    // violations error loudly here instead of silently missing
+    // store-side (memcached parity); base64 keys may be fully binary
+    // and are length-bounded by the connection's stack decode buffer
+    if !r.b64_key && !key_is_valid(r.key) {
+        return Err(ParseError::Client("bad key"));
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::request::Dialect;
+
+    #[test]
+    fn verb_shapes() {
+        assert!(is_meta(b"mg key v"));
+        assert!(is_meta(b"mn"));
+        assert!(is_meta(b"ms k 3"));
+        assert!(!is_meta(b"get key"));
+        assert!(!is_meta(b"m"));
+        assert!(!is_meta(b"me key")); // me (debug) unimplemented
+        assert!(!is_meta(b"mget key"));
+    }
+
+    #[test]
+    fn mg_flags() {
+        let r = parse_meta(b"mg foo v f c t k Oabc q b").unwrap();
+        assert_eq!(r.op, Opcode::Get);
+        assert_eq!(r.dialect, Dialect::Meta);
+        assert_eq!(r.key, b"foo");
+        assert_eq!(
+            r.want,
+            want::VALUE | want::FLAGS | want::CAS | want::TTL | want::KEY | want::OPAQUE
+        );
+        assert_eq!(r.opaque, b"abc");
+        assert!(r.quiet);
+        assert!(r.b64_key);
+        assert_eq!(r.touch_ttl, None);
+        assert_eq!(r.vivify, None);
+    }
+
+    #[test]
+    fn mg_touch_and_vivify() {
+        let r = parse_meta(b"mg k T120 N60").unwrap();
+        assert_eq!(r.touch_ttl, Some(120));
+        assert_eq!(r.vivify, Some(60));
+    }
+
+    #[test]
+    fn ms_line() {
+        let r = parse_meta(b"ms foo 5 T60 F7 C9 E11 c k Oxy").unwrap();
+        assert_eq!(r.op, Opcode::Store);
+        assert_eq!(r.data_len(), Some(5));
+        assert_eq!(r.exptime, 60); // T goes to the item TTL on ms
+        assert_eq!(r.set_flags, 7);
+        assert_eq!(r.cas_compare, Some(9));
+        assert_eq!(r.cas_set, Some(11));
+        assert_eq!(r.mode, StoreMode::Set);
+        assert_eq!(r.want, want::CAS | want::KEY | want::OPAQUE);
+    }
+
+    #[test]
+    fn ms_modes() {
+        for (m, mode) in [
+            (&b"ms k 1 MS"[..], StoreMode::Set),
+            (b"ms k 1 ME", StoreMode::Add),
+            (b"ms k 1 MA", StoreMode::Append),
+            (b"ms k 1 MP", StoreMode::Prepend),
+            (b"ms k 1 MR", StoreMode::Replace),
+        ] {
+            assert_eq!(parse_meta(m).unwrap().mode, mode, "{m:?}");
+        }
+        assert!(parse_meta(b"ms k 1 MX").is_err());
+    }
+
+    #[test]
+    fn md_cas_guard() {
+        let r = parse_meta(b"md foo C42 q Oz").unwrap();
+        assert_eq!(r.op, Opcode::Delete);
+        assert_eq!(r.cas_compare, Some(42));
+        assert!(r.quiet);
+        assert_eq!(r.opaque, b"z");
+        // explicit CAS is meaningless on delete — rejected, not dropped
+        assert_eq!(
+            parse_meta(b"md foo E9"),
+            Err(ParseError::Client("invalid flag"))
+        );
+    }
+
+    #[test]
+    fn ma_modes_and_tokens() {
+        let r = parse_meta(b"ma n D5 MI J100 N30 v").unwrap();
+        assert_eq!(r.op, Opcode::Arith);
+        assert_eq!(r.delta, 5);
+        assert!(r.incr);
+        assert_eq!(r.arith_init, 100);
+        assert_eq!(r.vivify, Some(30));
+        assert!(r.want & want::VALUE != 0);
+        let r = parse_meta(b"ma n MD").unwrap();
+        assert!(!r.incr);
+        assert_eq!(r.delta, 1, "delta defaults to 1");
+        let r = parse_meta(b"ma n M-").unwrap();
+        assert!(!r.incr);
+        assert!(parse_meta(b"ma n MZ").is_err());
+    }
+
+    #[test]
+    fn mn_is_bare() {
+        let r = parse_meta(b"mn").unwrap();
+        assert_eq!(r.op, Opcode::Noop);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(parse_meta(b"mg"), Err(ParseError::Client("missing key")));
+        assert_eq!(
+            parse_meta(b"ms k"),
+            Err(ParseError::Client("ms requires a data length"))
+        );
+        assert!(matches!(
+            parse_meta(b"ms k notanumber"),
+            Err(ParseError::Client(_))
+        ));
+        assert!(parse_meta(b"mg k z").is_err(), "unknown flag letter");
+        assert!(parse_meta(b"mg k O").is_err(), "opaque needs a token");
+        assert!(parse_meta(b"mg k Tx").is_err(), "T needs a number");
+        assert!(parse_meta(b"mg k vq").is_err(), "fused argless flags");
+        assert!(parse_meta(b"ms k 1 qx").is_err(), "q takes no token");
+        assert!(parse_meta(b"mx k").is_err());
+    }
+
+    #[test]
+    fn raw_key_violations_rejected_loudly() {
+        let long = [b'k'; 251];
+        let line = [b"mg " as &[u8], &long, b" v"].concat();
+        assert_eq!(parse_meta(&line), Err(ParseError::Client("bad key")));
+        // at exactly 250 it parses
+        let line = [b"mg " as &[u8], &long[..250]].concat();
+        assert!(parse_meta(&line).is_ok());
+        // control bytes in a raw key are rejected (vivify must not be
+        // able to insert a text-illegal key)...
+        assert_eq!(
+            parse_meta(b"mg a\x01b N60"),
+            Err(ParseError::Client("bad key"))
+        );
+        assert_eq!(
+            parse_meta(b"ma a\x01b N60"),
+            Err(ParseError::Client("bad key"))
+        );
+        // ...but the same bytes are fine behind the b64 flag
+        assert!(parse_meta(b"mg YQFi b N60").is_ok());
+    }
+
+    #[test]
+    fn negative_ttl_tokens_expire_immediately() {
+        use crate::protocol::parse::EXPIRED_SENTINEL;
+        let r = parse_meta(b"mg k T-1").unwrap();
+        assert_eq!(r.touch_ttl, Some(EXPIRED_SENTINEL));
+        let r = parse_meta(b"ms k 1 T-5").unwrap();
+        assert_eq!(r.exptime, EXPIRED_SENTINEL);
+    }
+}

@@ -1,15 +1,37 @@
-//! Memcached **text protocol**: command parsing, response rendering and
-//! the `stats`-family introspection the paper's measurements come from
-//! (`stats slabs` exposes per-class hole accounting), plus two
-//! slabforge extensions:
+//! Protocol layer: **two wire dialects, one command IR**.
+//!
+//! * [`request`] — the unified IR ([`Request`]: opcode + key + flag
+//!   set + optional data block) both front-ends compile to, executed
+//!   dialect-blind by `server::conn`.
+//! * [`parse`] — the classic text dialect (`get`/`set`/... plus the
+//!   `gat`/`gats` get-and-touch verbs) and the verb dispatcher
+//!   ([`parse_command`]).
+//! * [`meta`] — the meta dialect (`mg`/`ms`/`md`/`ma`/`mn`) with its
+//!   flag grammar (quiet pipelines, touch-on-read, vivify-on-miss,
+//!   base64 keys, CAS-carrying delete/arith).
+//! * [`writer`] — [`ResponseWriter`]: one semantic response surface
+//!   rendered into whichever dialect the request arrived in, over the
+//!   transport-pluggable [`RespSink`].
+//! * [`response`] — low-level classic line encoders (the writer's
+//!   byte layer; the hit path is allocation- and `fmt`-free).
+//! * [`stats`] — `stats`-family introspection the paper's measurements
+//!   come from (`stats slabs` exposes per-class hole accounting).
+//!
+//! Slabforge extensions (classic dialect):
 //!
 //! * `slabs reconfigure <size,...>` — live-apply a learned chunk-size
 //!   configuration (the online analog of restarting with
 //!   `-o slab_sizes=...`).
 //! * `slabs optimize` — trigger the learned-slab-classes optimizer now.
+//! * `stats reset` — zero the resettable counters (memcached parity).
 
+pub mod meta;
 pub mod parse;
+pub mod request;
 pub mod response;
 pub mod stats;
+pub mod writer;
 
-pub use parse::{parse_command, Command, ParseError, StoreOp};
+pub use parse::{parse_command, ParseError};
+pub use request::{want, DataRequest, Dialect, Opcode, Request};
+pub use writer::{BufSink, RespSink, ResponseWriter};

@@ -1,95 +1,16 @@
-//! Text-protocol command parser.
+//! Classic text-dialect parser — one of the two front-ends that
+//! compile onto the unified command IR ([`Request`]).
 //!
 //! The connection layer feeds one `\r\n`-terminated command line at a
 //! time; storage commands additionally carry a `<bytes>\r\n` data block
-//! that the connection reads separately (`Command::data_len`).
+//! that the connection reads separately (`Request::data_len`).
+//! [`parse_command`] dispatches between this dialect and the meta
+//! dialect (`protocol::meta`) by verb shape.
 
+use super::meta;
+use super::request::{Opcode, Request};
+use crate::store::store::StoreMode;
 use std::fmt;
-
-/// Storage-command family.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum StoreOp {
-    Set,
-    Add,
-    Replace,
-    Append,
-    Prepend,
-    Cas,
-}
-
-/// A parsed command line (data block, if any, arrives separately).
-#[derive(Debug, Clone, PartialEq)]
-pub enum Command {
-    Get {
-        keys: Vec<Vec<u8>>,
-        with_cas: bool,
-    },
-    Store {
-        op: StoreOp,
-        key: Vec<u8>,
-        flags: u32,
-        exptime: u32,
-        nbytes: usize,
-        cas: u64,
-        noreply: bool,
-    },
-    Delete {
-        key: Vec<u8>,
-        noreply: bool,
-    },
-    IncrDecr {
-        key: Vec<u8>,
-        delta: u64,
-        incr: bool,
-        noreply: bool,
-    },
-    Touch {
-        key: Vec<u8>,
-        exptime: u32,
-        noreply: bool,
-    },
-    Stats {
-        arg: Option<Vec<u8>>,
-    },
-    FlushAll {
-        noreply: bool,
-    },
-    Version,
-    Verbosity {
-        noreply: bool,
-    },
-    Quit,
-    /// Extension: `slabs reconfigure 304,384,480 [noreply]`.
-    SlabsReconfigure {
-        sizes: Vec<usize>,
-        noreply: bool,
-    },
-    /// Extension: `slabs optimize` — run the learned optimizer now.
-    SlabsOptimize,
-}
-
-impl Command {
-    /// Bytes of data block this command expects after its line.
-    pub fn data_len(&self) -> Option<usize> {
-        match self {
-            Command::Store { nbytes, .. } => Some(*nbytes),
-            _ => None,
-        }
-    }
-
-    pub fn noreply(&self) -> bool {
-        match self {
-            Command::Store { noreply, .. }
-            | Command::Delete { noreply, .. }
-            | Command::IncrDecr { noreply, .. }
-            | Command::Touch { noreply, .. }
-            | Command::FlushAll { noreply }
-            | Command::Verbosity { noreply }
-            | Command::SlabsReconfigure { noreply, .. } => *noreply,
-            _ => false,
-        }
-    }
-}
 
 /// Client-visible parse failures (rendered as `ERROR`/`CLIENT_ERROR`).
 #[derive(Debug, Clone, PartialEq)]
@@ -113,36 +34,42 @@ fn tokens(line: &[u8]) -> Vec<&[u8]> {
     line.split(|&b| b == b' ').filter(|t| !t.is_empty()).collect()
 }
 
-fn parse_u32(tok: &[u8]) -> Result<u32, ParseError> {
+pub(crate) fn parse_u32(tok: &[u8]) -> Result<u32, ParseError> {
     std::str::from_utf8(tok)
         .ok()
         .and_then(|s| s.parse().ok())
         .ok_or(ParseError::Client("bad numeric argument"))
 }
 
-fn parse_u64(tok: &[u8]) -> Result<u64, ParseError> {
+pub(crate) fn parse_u64(tok: &[u8]) -> Result<u64, ParseError> {
     std::str::from_utf8(tok)
         .ok()
         .and_then(|s| s.parse().ok())
         .ok_or(ParseError::Client("bad numeric argument"))
 }
 
-fn parse_usize(tok: &[u8]) -> Result<usize, ParseError> {
+pub(crate) fn parse_usize(tok: &[u8]) -> Result<usize, ParseError> {
     std::str::from_utf8(tok)
         .ok()
         .and_then(|s| s.parse().ok())
         .ok_or(ParseError::Client("bad numeric argument"))
 }
+
+/// What a negative exptime parses to: an **absolute** timestamp in the
+/// distant past. It must sit above the store's 30-day relative cutoff
+/// (`REALTIME_MAXDELTA`) or it would be misread as a relative offset
+/// and the "already expired" item would live for that many seconds.
+pub const EXPIRED_SENTINEL: u32 = 60 * 60 * 24 * 30 + 1;
 
 /// memcached also accepts negative exptimes (= already expired); we map
-/// them to 0xFFFFFFF0 (far past, relative cutoff keeps them absolute).
-fn parse_exptime(tok: &[u8]) -> Result<u32, ParseError> {
+/// them to [`EXPIRED_SENTINEL`].
+pub(crate) fn parse_exptime(tok: &[u8]) -> Result<u32, ParseError> {
     let s = std::str::from_utf8(tok).map_err(|_| ParseError::Client("bad exptime"))?;
     if let Some(stripped) = s.strip_prefix('-') {
         stripped
             .parse::<u64>()
             .map_err(|_| ParseError::Client("bad exptime"))?;
-        Ok(1) // 1 second after the epoch: always already expired
+        Ok(EXPIRED_SENTINEL)
     } else {
         s.parse().map_err(|_| ParseError::Client("bad exptime"))
     }
@@ -150,6 +77,14 @@ fn parse_exptime(tok: &[u8]) -> Result<u32, ParseError> {
 
 fn is_noreply(tok: Option<&&[u8]>) -> bool {
     tok.is_some_and(|t| *t == b"noreply")
+}
+
+/// Re-slice `line` from where `tok` starts (both must come from the
+/// same buffer) — recovers the raw key tail of a retrieval line after
+/// tokenization.
+fn tail_from<'a>(line: &'a [u8], tok: &'a [u8]) -> &'a [u8] {
+    let off = tok.as_ptr() as usize - line.as_ptr() as usize;
+    &line[off..]
 }
 
 /// Fast-path split of a `get`/`gets` line: returns `(with_cas,
@@ -180,8 +115,18 @@ pub fn get_keys(tail: &[u8]) -> impl Iterator<Item = &[u8]> {
     tail.split(|&b| b == b' ').filter(|t| !t.is_empty())
 }
 
-/// Parse one command line (without the trailing `\r\n`).
-pub fn parse_command(line: &[u8]) -> Result<Command, ParseError> {
+/// Parse one command line (without the trailing `\r\n`), dispatching to
+/// the meta parser for `m?` verbs and the classic grammar otherwise.
+pub fn parse_command(line: &[u8]) -> Result<Request<'_>, ParseError> {
+    if meta::is_meta(line) {
+        meta::parse_meta(line)
+    } else {
+        parse_classic(line)
+    }
+}
+
+/// Parse one classic-dialect command line into the IR.
+pub fn parse_classic(line: &[u8]) -> Result<Request<'_>, ParseError> {
     let toks = tokens(line);
     let Some(&verb) = toks.first() else {
         return Err(ParseError::UnknownCommand);
@@ -191,96 +136,106 @@ pub fn parse_command(line: &[u8]) -> Result<Command, ParseError> {
             if toks.len() < 2 {
                 return Err(ParseError::Client("get requires at least one key"));
             }
-            Ok(Command::Get {
-                keys: toks[1..].iter().map(|k| k.to_vec()).collect(),
-                with_cas: verb == b"gets",
-            })
+            let mut r = Request::classic(Opcode::Get);
+            r.key = tail_from(line, toks[1]);
+            r.with_cas = verb == b"gets";
+            Ok(r)
+        }
+        b"gat" | b"gats" => {
+            if toks.len() < 3 {
+                return Err(ParseError::Client("gat requires exptime and at least one key"));
+            }
+            let mut r = Request::classic(Opcode::Get);
+            r.touch_ttl = Some(parse_exptime(toks[1])?);
+            r.key = tail_from(line, toks[2]);
+            r.with_cas = verb == b"gats";
+            Ok(r)
         }
         b"set" | b"add" | b"replace" | b"append" | b"prepend" | b"cas" => {
-            let op = match verb {
-                b"set" => StoreOp::Set,
-                b"add" => StoreOp::Add,
-                b"replace" => StoreOp::Replace,
-                b"append" => StoreOp::Append,
-                b"prepend" => StoreOp::Prepend,
-                _ => StoreOp::Cas,
+            let mode = match verb {
+                b"set" | b"cas" => StoreMode::Set,
+                b"add" => StoreMode::Add,
+                b"replace" => StoreMode::Replace,
+                b"append" => StoreMode::Append,
+                _ => StoreMode::Prepend,
             };
-            let want = if op == StoreOp::Cas { 6 } else { 5 };
+            let is_cas = verb == b"cas";
+            let want = if is_cas { 6 } else { 5 };
             if toks.len() < want {
                 return Err(ParseError::Client("bad command line format"));
             }
-            let nbytes = parse_usize(toks[4])?;
-            let cas = if op == StoreOp::Cas {
-                parse_u64(toks[5])?
-            } else {
-                0
-            };
-            Ok(Command::Store {
-                op,
-                key: toks[1].to_vec(),
-                flags: parse_u32(toks[2])?,
-                exptime: parse_exptime(toks[3])?,
-                nbytes,
-                cas,
-                noreply: is_noreply(toks.get(want)),
-            })
+            let mut r = Request::classic(Opcode::Store);
+            r.mode = mode;
+            r.key = toks[1];
+            r.set_flags = parse_u32(toks[2])?;
+            r.exptime = parse_exptime(toks[3])?;
+            r.nbytes = Some(parse_usize(toks[4])?);
+            if is_cas {
+                r.cas_compare = Some(parse_u64(toks[5])?);
+            }
+            r.quiet = is_noreply(toks.get(want));
+            Ok(r)
         }
         b"delete" => {
             if toks.len() < 2 {
                 return Err(ParseError::Client("delete requires a key"));
             }
-            Ok(Command::Delete {
-                key: toks[1].to_vec(),
-                noreply: is_noreply(toks.get(2)),
-            })
+            let mut r = Request::classic(Opcode::Delete);
+            r.key = toks[1];
+            r.quiet = is_noreply(toks.get(2));
+            Ok(r)
         }
         b"incr" | b"decr" => {
             if toks.len() < 3 {
                 return Err(ParseError::Client("incr/decr require key and value"));
             }
-            Ok(Command::IncrDecr {
-                key: toks[1].to_vec(),
-                delta: parse_u64(toks[2])?,
-                incr: verb == b"incr",
-                noreply: is_noreply(toks.get(3)),
-            })
+            let mut r = Request::classic(Opcode::Arith);
+            r.key = toks[1];
+            r.delta = parse_u64(toks[2])?;
+            r.incr = verb == b"incr";
+            r.quiet = is_noreply(toks.get(3));
+            Ok(r)
         }
         b"touch" => {
             if toks.len() < 3 {
                 return Err(ParseError::Client("touch requires key and exptime"));
             }
-            Ok(Command::Touch {
-                key: toks[1].to_vec(),
-                exptime: parse_exptime(toks[2])?,
-                noreply: is_noreply(toks.get(3)),
-            })
+            let mut r = Request::classic(Opcode::Touch);
+            r.key = toks[1];
+            r.exptime = parse_exptime(toks[2])?;
+            r.quiet = is_noreply(toks.get(3));
+            Ok(r)
         }
-        b"stats" => Ok(Command::Stats {
-            arg: toks.get(1).map(|t| t.to_vec()),
-        }),
-        b"flush_all" => Ok(Command::FlushAll {
-            noreply: is_noreply(toks.get(1)),
-        }),
-        b"version" => Ok(Command::Version),
-        b"verbosity" => Ok(Command::Verbosity {
-            noreply: is_noreply(toks.get(2)),
-        }),
-        b"quit" => Ok(Command::Quit),
+        b"stats" => {
+            let mut r = Request::classic(Opcode::Stats);
+            r.stats_arg = toks.get(1).copied();
+            Ok(r)
+        }
+        b"flush_all" => {
+            let mut r = Request::classic(Opcode::FlushAll);
+            r.quiet = is_noreply(toks.get(1));
+            Ok(r)
+        }
+        b"version" => Ok(Request::classic(Opcode::Version)),
+        b"verbosity" => {
+            let mut r = Request::classic(Opcode::Verbosity);
+            r.quiet = is_noreply(toks.get(2));
+            Ok(r)
+        }
+        b"quit" => Ok(Request::classic(Opcode::Quit)),
         b"slabs" => match toks.get(1).copied() {
             Some(b"reconfigure") => {
                 let Some(list) = toks.get(2) else {
                     return Err(ParseError::Client("slabs reconfigure requires sizes"));
                 };
-                let sizes: Result<Vec<usize>, ParseError> = list
-                    .split(|&b| b == b',')
-                    .map(parse_usize)
-                    .collect();
-                Ok(Command::SlabsReconfigure {
-                    sizes: sizes?,
-                    noreply: is_noreply(toks.get(3)),
-                })
+                let sizes: Result<Vec<usize>, ParseError> =
+                    list.split(|&b| b == b',').map(parse_usize).collect();
+                let mut r = Request::classic(Opcode::SlabsReconfigure);
+                r.sizes = sizes?;
+                r.quiet = is_noreply(toks.get(3));
+                Ok(r)
             }
-            Some(b"optimize") => Ok(Command::SlabsOptimize),
+            Some(b"optimize") => Ok(Request::classic(Opcode::SlabsOptimize)),
             _ => Err(ParseError::UnknownCommand),
         },
         _ => Err(ParseError::UnknownCommand),
@@ -290,129 +245,108 @@ pub fn parse_command(line: &[u8]) -> Result<Command, ParseError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::protocol::request::Dialect;
 
     #[test]
     fn get_single_and_multi() {
-        assert_eq!(
-            parse_command(b"get foo").unwrap(),
-            Command::Get {
-                keys: vec![b"foo".to_vec()],
-                with_cas: false
-            }
-        );
-        let c = parse_command(b"gets a b c").unwrap();
-        match c {
-            Command::Get { keys, with_cas } => {
-                assert!(with_cas);
-                assert_eq!(keys.len(), 3);
-            }
-            _ => panic!(),
-        }
+        let r = parse_command(b"get foo").unwrap();
+        assert_eq!(r.op, Opcode::Get);
+        assert_eq!(r.dialect, Dialect::Classic);
+        assert_eq!(r.key, b"foo");
+        assert!(!r.with_cas);
+        let r = parse_command(b"gets a b c").unwrap();
+        assert!(r.with_cas);
+        assert_eq!(get_keys(r.key).count(), 3);
         assert!(parse_command(b"get").is_err());
     }
 
     #[test]
+    fn gat_lines() {
+        let r = parse_command(b"gat 60 a b").unwrap();
+        assert_eq!(r.op, Opcode::Get);
+        assert_eq!(r.touch_ttl, Some(60));
+        assert!(!r.with_cas);
+        assert_eq!(
+            get_keys(r.key).collect::<Vec<_>>(),
+            vec![b"a".as_slice(), b"b".as_slice()]
+        );
+        let r = parse_command(b"gats 120 k").unwrap();
+        assert!(r.with_cas);
+        assert_eq!(r.touch_ttl, Some(120));
+        assert!(parse_command(b"gat 60").is_err());
+        assert!(parse_command(b"gat x k").is_err());
+    }
+
+    #[test]
     fn set_line() {
-        let c = parse_command(b"set foo 7 60 5").unwrap();
-        match &c {
-            Command::Store {
-                op: StoreOp::Set,
-                key,
-                flags: 7,
-                exptime: 60,
-                nbytes: 5,
-                cas: 0,
-                noreply: false,
-            } => assert_eq!(key, b"foo"),
-            other => panic!("{other:?}"),
-        }
-        assert_eq!(c.data_len(), Some(5));
+        let r = parse_command(b"set foo 7 60 5").unwrap();
+        assert_eq!(r.op, Opcode::Store);
+        assert_eq!(r.mode, StoreMode::Set);
+        assert_eq!(r.key, b"foo");
+        assert_eq!(r.set_flags, 7);
+        assert_eq!(r.exptime, 60);
+        assert_eq!(r.data_len(), Some(5));
+        assert_eq!(r.cas_compare, None);
+        assert!(!r.quiet);
     }
 
     #[test]
     fn set_noreply() {
-        let c = parse_command(b"set foo 0 0 3 noreply").unwrap();
-        assert!(c.noreply());
+        let r = parse_command(b"set foo 0 0 3 noreply").unwrap();
+        assert!(r.quiet);
     }
 
     #[test]
     fn cas_line() {
-        let c = parse_command(b"cas k 1 0 2 99 noreply").unwrap();
-        match c {
-            Command::Store {
-                op: StoreOp::Cas,
-                cas: 99,
-                noreply: true,
-                ..
-            } => {}
-            other => panic!("{other:?}"),
-        }
+        let r = parse_command(b"cas k 1 0 2 99 noreply").unwrap();
+        assert_eq!(r.mode, StoreMode::Set);
+        assert_eq!(r.cas_compare, Some(99));
+        assert!(r.quiet);
     }
 
     #[test]
     fn negative_exptime_expires_immediately() {
-        let c = parse_command(b"set k 0 -1 3").unwrap();
-        match c {
-            Command::Store { exptime: 1, .. } => {}
-            other => panic!("{other:?}"),
-        }
+        let r = parse_command(b"set k 0 -1 3").unwrap();
+        assert_eq!(r.exptime, EXPIRED_SENTINEL);
+        // the sentinel must read as an ABSOLUTE past time, not a
+        // relative offset (memcached's 30-day cutoff)
+        assert!(EXPIRED_SENTINEL > 60 * 60 * 24 * 30);
     }
 
     #[test]
     fn incr_decr_touch_delete() {
-        assert!(matches!(
-            parse_command(b"incr n 5").unwrap(),
-            Command::IncrDecr {
-                delta: 5,
-                incr: true,
-                ..
-            }
-        ));
-        assert!(matches!(
-            parse_command(b"decr n 2 noreply").unwrap(),
-            Command::IncrDecr {
-                incr: false,
-                noreply: true,
-                ..
-            }
-        ));
-        assert!(matches!(
-            parse_command(b"touch k 300").unwrap(),
-            Command::Touch { exptime: 300, .. }
-        ));
-        assert!(matches!(
-            parse_command(b"delete k").unwrap(),
-            Command::Delete { noreply: false, .. }
-        ));
+        let r = parse_command(b"incr n 5").unwrap();
+        assert_eq!((r.op, r.delta, r.incr), (Opcode::Arith, 5, true));
+        let r = parse_command(b"decr n 2 noreply").unwrap();
+        assert!(!r.incr && r.quiet);
+        let r = parse_command(b"touch k 300").unwrap();
+        assert_eq!((r.op, r.exptime), (Opcode::Touch, 300));
+        let r = parse_command(b"delete k").unwrap();
+        assert_eq!((r.op, r.quiet), (Opcode::Delete, false));
     }
 
     #[test]
     fn admin_commands() {
-        assert_eq!(parse_command(b"stats").unwrap(), Command::Stats { arg: None });
-        assert_eq!(
-            parse_command(b"stats slabs").unwrap(),
-            Command::Stats {
-                arg: Some(b"slabs".to_vec())
-            }
-        );
-        assert_eq!(parse_command(b"version").unwrap(), Command::Version);
-        assert_eq!(parse_command(b"quit").unwrap(), Command::Quit);
-        assert!(matches!(
-            parse_command(b"flush_all noreply").unwrap(),
-            Command::FlushAll { noreply: true }
-        ));
+        let r = parse_command(b"stats").unwrap();
+        assert_eq!((r.op, r.stats_arg), (Opcode::Stats, None));
+        let r = parse_command(b"stats slabs").unwrap();
+        assert_eq!(r.stats_arg, Some(b"slabs".as_slice()));
+        assert_eq!(parse_command(b"version").unwrap().op, Opcode::Version);
+        assert_eq!(parse_command(b"quit").unwrap().op, Opcode::Quit);
+        let r = parse_command(b"flush_all noreply").unwrap();
+        assert_eq!((r.op, r.quiet), (Opcode::FlushAll, true));
     }
 
     #[test]
     fn slabs_extensions() {
+        let r = parse_command(b"slabs reconfigure 304,384,480").unwrap();
+        assert_eq!(r.op, Opcode::SlabsReconfigure);
+        assert_eq!(r.sizes, vec![304, 384, 480]);
+        assert!(!r.quiet);
         assert_eq!(
-            parse_command(b"slabs reconfigure 304,384,480").unwrap(),
-            Command::SlabsReconfigure {
-                sizes: vec![304, 384, 480],
-                noreply: false
-            }
+            parse_command(b"slabs optimize").unwrap().op,
+            Opcode::SlabsOptimize
         );
-        assert_eq!(parse_command(b"slabs optimize").unwrap(), Command::SlabsOptimize);
         assert!(parse_command(b"slabs unknown").is_err());
         assert!(parse_command(b"slabs reconfigure").is_err());
         assert!(parse_command(b"slabs reconfigure 1,x").is_err());
@@ -421,7 +355,10 @@ mod tests {
     #[test]
     fn garbage_rejected() {
         assert_eq!(parse_command(b""), Err(ParseError::UnknownCommand));
-        assert_eq!(parse_command(b"frobnicate x"), Err(ParseError::UnknownCommand));
+        assert_eq!(
+            parse_command(b"frobnicate x"),
+            Err(ParseError::UnknownCommand)
+        );
         assert!(matches!(
             parse_command(b"set k 0 0 notanumber"),
             Err(ParseError::Client(_))
@@ -451,7 +388,10 @@ mod tests {
 
     #[test]
     fn extra_whitespace_tolerated() {
-        let c = parse_command(b"set  foo   1  0  3").unwrap();
-        assert!(matches!(c, Command::Store { flags: 1, .. }));
+        let r = parse_classic(b"set  foo   1  0  3").unwrap();
+        assert_eq!(r.set_flags, 1);
+        // the retrieval tail keeps raw spacing; get_keys skips empties
+        let r = parse_classic(b"get  a   b").unwrap();
+        assert_eq!(get_keys(r.key).count(), 2);
     }
 }

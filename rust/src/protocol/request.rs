@@ -1,0 +1,252 @@
+//! The unified command IR both protocol front-ends compile to.
+//!
+//! A [`Request`] is *opcode + key + flag set + optional data block*:
+//! the classic text dialect (`protocol::parse`) and the meta dialect
+//! (`protocol::meta`) both parse their wire grammar into this one
+//! shape, and `server::conn` executes it against the store without
+//! knowing which dialect produced it. Responses flow back through
+//! [`ResponseWriter`](crate::protocol::writer::ResponseWriter), which
+//! renders the dialect-appropriate wire format from the request's echo
+//! flags.
+//!
+//! Line-phase requests **borrow** every byte (key, opaque token) from
+//! the connection's receive buffer, so parsing a retrieval costs zero
+//! heap allocations; storage commands convert to an owned
+//! [`DataRequest`] before the connection waits for their data block.
+
+use crate::store::store::StoreMode;
+
+/// Which wire dialect a request arrived in (selects response rendering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dialect {
+    /// Classic text protocol (`get`/`set`/... with word responses).
+    Classic,
+    /// Meta protocol (`mg`/`ms`/`md`/`ma`/`mn` with code+flag responses).
+    Meta,
+}
+
+/// What the request asks the server to *do* — the dialect-independent
+/// operation the execution core switches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opcode {
+    /// Retrieval: classic `get`/`gets`/`gat`/`gats` (multi-key) and
+    /// meta `mg` (single key, optionally touch/vivify).
+    Get,
+    /// Storage (carries a data block): classic `set` family and meta
+    /// `ms`; the exact behaviour is the request's [`StoreMode`].
+    Store,
+    /// Classic `delete` / meta `md` (optionally CAS-guarded).
+    Delete,
+    /// Classic `incr`/`decr` / meta `ma`.
+    Arith,
+    /// Classic `touch`.
+    Touch,
+    /// Meta `mn` — answers `MN` unconditionally; with quiet-mode
+    /// pipelines it acts as the flush barrier.
+    Noop,
+    Stats,
+    FlushAll,
+    Version,
+    Verbosity,
+    Quit,
+    /// Extension: `slabs reconfigure <sizes>`.
+    SlabsReconfigure,
+    /// Extension: `slabs optimize`.
+    SlabsOptimize,
+}
+
+/// Response-echo flags a request may ask for (meta `v f c t s k O`).
+/// Stored as a bitset on the request; the writer renders whichever are
+/// set, in canonical order `f c t s k O`.
+pub mod want {
+    /// `v` — return the value bytes (`VA` instead of `HD`).
+    pub const VALUE: u16 = 1 << 0;
+    /// `f` — echo the stored client flags.
+    pub const FLAGS: u16 = 1 << 1;
+    /// `c` — echo the item CAS.
+    pub const CAS: u16 = 1 << 2;
+    /// `t` — echo remaining TTL seconds (`-1` = unlimited).
+    pub const TTL: u16 = 1 << 3;
+    /// `s` — echo the value size.
+    pub const SIZE: u16 = 1 << 4;
+    /// `k` — echo the key (as transmitted, i.e. base64 when `b`).
+    pub const KEY: u16 = 1 << 5;
+    /// `O` — echo the request's opaque token.
+    pub const OPAQUE: u16 = 1 << 6;
+}
+
+/// Longest opaque (`O`) token accepted, per memcached.
+pub const MAX_OPAQUE: usize = 32;
+
+/// One parsed command line in either dialect — borrowed from the
+/// receive buffer. Storage commands (`nbytes = Some`) are converted to
+/// an owned [`DataRequest`] for the data-block phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request<'a> {
+    pub op: Opcode,
+    pub dialect: Dialect,
+    /// The (decoded) key — or, for classic retrieval, the raw
+    /// space-separated key tail of the command line.
+    pub key: &'a [u8],
+    /// The key as transmitted (base64 form under `b`) — what `k` echo
+    /// must return.
+    pub key_echo: &'a [u8],
+    /// Storage behaviour for [`Opcode::Store`].
+    pub mode: StoreMode,
+    /// Client flags to store (classic `<flags>` / meta `F`).
+    pub set_flags: u32,
+    /// Storage/touch TTL (classic `<exptime>` / meta `T` on `ms`).
+    pub exptime: u32,
+    /// Data-block length (storage commands only).
+    pub nbytes: Option<usize>,
+    /// Compare-and-swap guard (classic `cas <token>` / meta `C`).
+    pub cas_compare: Option<u64>,
+    /// Explicit CAS value to store (meta `E`).
+    pub cas_set: Option<u64>,
+    /// Arithmetic delta (classic operand / meta `D`, default 1).
+    pub delta: u64,
+    /// Arithmetic direction (classic verb / meta `M`).
+    pub incr: bool,
+    /// Auto-vivify initial value for `ma` (meta `J`, default 0).
+    pub arith_init: u64,
+    /// Auto-vivify TTL on miss (meta `N`).
+    pub vivify: Option<u32>,
+    /// Touch-on-read TTL (classic `gat <exptime>` / meta `T` on
+    /// `mg`/`ma`).
+    pub touch_ttl: Option<u32>,
+    /// Opaque echo token (meta `O`).
+    pub opaque: &'a [u8],
+    /// Echo-flag bitset ([`want`]).
+    pub want: u16,
+    /// Classic `gets`/`gats`: append the CAS to `VALUE` lines.
+    pub with_cas: bool,
+    /// Classic `noreply` (suppress everything) / meta `q` (suppress
+    /// the *expected* outcome: misses for `mg`, successes for
+    /// `ms`/`md`/`ma`).
+    pub quiet: bool,
+    /// Meta `b`: the key token is base64; decode before store access,
+    /// echo in encoded form.
+    pub b64_key: bool,
+    /// `stats [arg]` argument.
+    pub stats_arg: Option<&'a [u8]>,
+    /// `slabs reconfigure` size list.
+    pub sizes: Vec<usize>,
+}
+
+impl<'a> Request<'a> {
+    /// A request with every field at its neutral default.
+    pub fn new(op: Opcode, dialect: Dialect) -> Request<'a> {
+        Request {
+            op,
+            dialect,
+            key: b"",
+            key_echo: b"",
+            mode: StoreMode::Set,
+            set_flags: 0,
+            exptime: 0,
+            nbytes: None,
+            cas_compare: None,
+            cas_set: None,
+            delta: 1,
+            incr: true,
+            arith_init: 0,
+            vivify: None,
+            touch_ttl: None,
+            opaque: b"",
+            want: 0,
+            with_cas: false,
+            quiet: false,
+            b64_key: false,
+            stats_arg: None,
+            sizes: Vec::new(),
+        }
+    }
+
+    pub fn classic(op: Opcode) -> Request<'a> {
+        Request::new(op, Dialect::Classic)
+    }
+
+    pub fn meta(op: Opcode) -> Request<'a> {
+        Request::new(op, Dialect::Meta)
+    }
+
+    /// Bytes of data block this request expects after its line.
+    pub fn data_len(&self) -> Option<usize> {
+        self.nbytes
+    }
+
+    /// Detach a storage request from the receive buffer so the
+    /// connection can wait for its data block.
+    pub fn to_data(&self) -> DataRequest {
+        DataRequest {
+            dialect: self.dialect,
+            mode: self.mode,
+            key: self.key.to_vec(),
+            key_echo: self.key_echo.to_vec(),
+            opaque: self.opaque.to_vec(),
+            set_flags: self.set_flags,
+            exptime: self.exptime,
+            nbytes: self.nbytes.unwrap_or(0),
+            cas_compare: self.cas_compare,
+            cas_set: self.cas_set,
+            want: self.want,
+            quiet: self.quiet,
+            b64_key: self.b64_key,
+        }
+    }
+}
+
+/// An owned storage request parked while its `<data block>\r\n` streams
+/// in ([`Request::to_data`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataRequest {
+    pub dialect: Dialect,
+    pub mode: StoreMode,
+    pub key: Vec<u8>,
+    pub key_echo: Vec<u8>,
+    pub opaque: Vec<u8>,
+    pub set_flags: u32,
+    pub exptime: u32,
+    pub nbytes: usize,
+    pub cas_compare: Option<u64>,
+    pub cas_set: Option<u64>,
+    pub want: u16,
+    pub quiet: bool,
+    /// The key was transmitted base64-encoded (`key` holds the decoded
+    /// bytes, `key_echo` the encoded token).
+    pub b64_key: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_neutral() {
+        let r = Request::meta(Opcode::Get);
+        assert_eq!(r.delta, 1);
+        assert!(r.incr);
+        assert_eq!(r.want, 0);
+        assert!(!r.quiet);
+        assert_eq!(r.data_len(), None);
+    }
+
+    #[test]
+    fn to_data_detaches_borrows() {
+        let key = b"abc".to_vec();
+        let mut r = Request::meta(Opcode::Store);
+        r.key = key.as_slice();
+        r.key_echo = key.as_slice();
+        r.opaque = b"tok";
+        r.nbytes = Some(5);
+        r.want = want::CAS | want::OPAQUE;
+        r.quiet = true;
+        let d = r.to_data();
+        drop(key);
+        assert_eq!(d.key, b"abc");
+        assert_eq!(d.opaque, b"tok");
+        assert_eq!(d.nbytes, 5);
+        assert_eq!(d.want, want::CAS | want::OPAQUE);
+        assert!(d.quiet);
+    }
+}

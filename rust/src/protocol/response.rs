@@ -82,13 +82,13 @@ pub fn ok(out: &mut Vec<u8>) {
     out.extend_from_slice(b"OK\r\n");
 }
 
-pub fn number(out: &mut Vec<u8>, n: u64) {
-    push_u64(out, n);
-    out.extend_from_slice(b"\r\n");
+/// `stats reset` acknowledgement (memcached parity).
+pub fn reset(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"RESET\r\n");
 }
 
-pub fn version(out: &mut Vec<u8>, v: &str) {
-    append_fmt(out, format_args!("VERSION {v}"));
+pub fn number(out: &mut Vec<u8>, n: u64) {
+    push_u64(out, n);
     out.extend_from_slice(b"\r\n");
 }
 

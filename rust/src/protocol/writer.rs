@@ -1,0 +1,561 @@
+//! Response abstraction: [`RespSink`] is *where* bytes go (buffer,
+//! bounded socket-aware sink), [`ResponseWriter`] is *what* they say —
+//! one semantic surface (`value`/`stored`/`not_found`/...) rendered
+//! into whichever wire dialect the request arrived in. The execution
+//! core in `server::conn` speaks only to the writer, which is what
+//! lets two front-ends share it.
+//!
+//! Dialect differences the writer owns:
+//!
+//! * **Classic**: word responses (`STORED`, `VALUE k f n`, `END`,
+//!   `DELETED`...); `noreply` suppresses *everything*.
+//! * **Meta**: code + echo-flag responses (`HD f7 c42 kfoo`,
+//!   `VA 5 c42`, `EN`, `NS`, `EX`, `NF`); `q` suppresses only the
+//!   *expected* outcome — misses for `mg`, successes for
+//!   `ms`/`md`/`ma` — while hits and errors always flow. Echo flags
+//!   render in canonical order `f c t s k O` (plus `W` for a vivify
+//!   winner).
+
+use super::request::{want, DataRequest, Dialect, Request};
+use super::response;
+use crate::store::store::{MetaHit, StoreError, ValueRef};
+use crate::util::fmt::{push_i64, push_u64, push_usize, u64_digits};
+
+/// Where protocol responses land. The writer appends every response
+/// into `buf()`; `value()` is the one hook a transport-aware sink can
+/// override to scatter a large value straight to the socket (`writev`)
+/// instead of copying chunk → buffer. `saturated()` lets a bounded sink
+/// pause command execution mid-pipeline (backpressure): the connection
+/// stops parsing, keeps the unread tail buffered, and resumes when the
+/// sink drains.
+pub trait RespSink {
+    fn buf(&mut self) -> &mut Vec<u8>;
+
+    /// Encode one classic `VALUE` response (called under the shard
+    /// lock, so implementations must not block indefinitely).
+    fn value(&mut self, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
+        response::value_ref(self.buf(), key, v, with_cas);
+    }
+
+    /// Append a response data block + trailing CRLF whose header line
+    /// is already encoded in `buf()` — the meta `VA` body. A
+    /// socket-aware sink may hand large blocks to the kernel directly
+    /// (scatter) instead of copying them into the buffer.
+    fn append_data(&mut self, data: &[u8]) {
+        let out = self.buf();
+        out.extend_from_slice(data);
+        out.extend_from_slice(b"\r\n");
+    }
+
+    /// True when the sink cannot absorb more responses right now.
+    fn saturated(&self) -> bool {
+        false
+    }
+}
+
+/// Plain unbounded buffer sink — the in-memory/test path and the legacy
+/// threaded server.
+pub struct BufSink<'a>(pub &'a mut Vec<u8>);
+
+impl RespSink for BufSink<'_> {
+    fn buf(&mut self) -> &mut Vec<u8> {
+        self.0
+    }
+}
+
+/// Values a meta response may echo; `None` fields render nothing even
+/// when requested (e.g. no CAS on an `EN` miss).
+#[derive(Default, Clone, Copy)]
+struct Echo<'e> {
+    flags: Option<u32>,
+    cas: Option<u64>,
+    ttl: Option<i64>,
+    size: Option<usize>,
+    key: Option<&'e [u8]>,
+    opaque: Option<&'e [u8]>,
+    won: bool,
+}
+
+/// Per-request response renderer over a [`RespSink`].
+pub struct ResponseWriter<'a, S: RespSink> {
+    sink: &'a mut S,
+    dialect: Dialect,
+    quiet: bool,
+    want: u16,
+    key_echo: &'a [u8],
+    opaque: &'a [u8],
+    with_cas: bool,
+}
+
+impl<'a, S: RespSink> ResponseWriter<'a, S> {
+    /// Writer for a line-phase request (borrows its echo tokens).
+    pub fn for_request(sink: &'a mut S, req: &Request<'a>) -> ResponseWriter<'a, S> {
+        ResponseWriter {
+            sink,
+            dialect: req.dialect,
+            quiet: req.quiet,
+            want: req.want,
+            key_echo: req.key_echo,
+            opaque: req.opaque,
+            with_cas: req.with_cas,
+        }
+    }
+
+    /// Writer for a data-phase (storage) request.
+    pub fn for_data(sink: &'a mut S, req: &'a DataRequest) -> ResponseWriter<'a, S> {
+        ResponseWriter {
+            sink,
+            dialect: req.dialect,
+            quiet: req.quiet,
+            want: req.want,
+            key_echo: &req.key_echo,
+            opaque: &req.opaque,
+            with_cas: false,
+        }
+    }
+
+    /// Classic-dialect writer with no echo state (admin commands).
+    pub fn classic(sink: &'a mut S, quiet: bool) -> ResponseWriter<'a, S> {
+        ResponseWriter {
+            sink,
+            dialect: Dialect::Classic,
+            quiet,
+            want: 0,
+            key_echo: b"",
+            opaque: b"",
+            with_cas: false,
+        }
+    }
+
+    /// Classic `noreply` swallows every response of the command.
+    #[inline]
+    fn gag(&self) -> bool {
+        self.dialect == Dialect::Classic && self.quiet
+    }
+
+    /// Append `<code>[ <size>]<echo flags>\r\n[<data>\r\n]`. The data
+    /// block goes through [`RespSink::append_data`], so a socket-aware
+    /// sink scatters large meta values exactly like classic `VALUE`s.
+    fn meta_respond(&mut self, code: &[u8], e: &Echo<'_>, data: Option<&[u8]>) {
+        let out = self.sink.buf();
+        out.extend_from_slice(code);
+        if let Some(d) = data {
+            out.push(b' ');
+            push_usize(out, d.len());
+        }
+        if self.want & want::FLAGS != 0 {
+            if let Some(f) = e.flags {
+                out.extend_from_slice(b" f");
+                push_u64(out, f as u64);
+            }
+        }
+        if self.want & want::CAS != 0 {
+            if let Some(c) = e.cas {
+                out.extend_from_slice(b" c");
+                push_u64(out, c);
+            }
+        }
+        if self.want & want::TTL != 0 {
+            if let Some(t) = e.ttl {
+                out.extend_from_slice(b" t");
+                push_i64(out, t);
+            }
+        }
+        if self.want & want::SIZE != 0 {
+            if let Some(s) = e.size {
+                out.extend_from_slice(b" s");
+                push_usize(out, s);
+            }
+        }
+        if self.want & want::KEY != 0 {
+            if let Some(k) = e.key {
+                out.extend_from_slice(b" k");
+                out.extend_from_slice(k);
+            }
+        }
+        if self.want & want::OPAQUE != 0 {
+            if let Some(o) = e.opaque {
+                out.extend_from_slice(b" O");
+                out.extend_from_slice(o);
+            }
+        }
+        if e.won {
+            out.extend_from_slice(b" W");
+        }
+        out.extend_from_slice(b"\r\n");
+        if let Some(d) = data {
+            self.sink.append_data(d);
+        }
+    }
+
+    /// Echo skeleton carrying the request identity (key + opaque).
+    fn base_echo(&self) -> Echo<'a> {
+        Echo {
+            key: Some(self.key_echo),
+            opaque: Some(self.opaque),
+            ..Echo::default()
+        }
+    }
+
+    // ------------------------------------------------------- retrieval
+
+    /// A retrieval hit. `key` is the lookup key (classic rendering);
+    /// meta rendering echoes the request's own key token. Meta hits are
+    /// never quiet-suppressed (only misses are).
+    pub fn value(&mut self, key: &[u8], v: ValueRef<'_>, hit: MetaHit) {
+        match self.dialect {
+            Dialect::Classic => {
+                if self.gag() {
+                    return;
+                }
+                self.sink.value(key, v, self.with_cas);
+            }
+            Dialect::Meta => {
+                let e = Echo {
+                    flags: Some(v.flags),
+                    cas: Some(v.cas),
+                    ttl: Some(hit.ttl),
+                    size: Some(v.data.len()),
+                    won: hit.won,
+                    ..self.base_echo()
+                };
+                if self.want & want::VALUE != 0 {
+                    self.meta_respond(b"VA", &e, Some(v.data));
+                } else {
+                    self.meta_respond(b"HD", &e, None);
+                }
+            }
+        }
+    }
+
+    /// A retrieval miss. Classic emits nothing per-key (`END` closes
+    /// the response); meta emits `EN` unless quiet.
+    pub fn miss(&mut self) {
+        if self.dialect == Dialect::Meta && !self.quiet {
+            let e = self.base_echo();
+            self.meta_respond(b"EN", &e, None);
+        }
+    }
+
+    /// Classic retrieval terminator (`END`); meta has none.
+    pub fn end(&mut self) {
+        if self.dialect == Dialect::Classic && !self.gag() {
+            response::end(self.sink.buf());
+        }
+    }
+
+    // --------------------------------------------------------- storage
+
+    /// Store succeeded; `cas` is the item's new CAS.
+    pub fn stored(&mut self, cas: u64) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::stored(self.sink.buf());
+                }
+            }
+            Dialect::Meta => {
+                if !self.quiet {
+                    let e = Echo {
+                        cas: Some(cas),
+                        ..self.base_echo()
+                    };
+                    self.meta_respond(b"HD", &e, None);
+                }
+            }
+        }
+    }
+
+    /// Store rejected by mode (add-on-present / replace-on-absent /
+    /// concat-on-absent). Not quiet-suppressed in meta.
+    pub fn not_stored(&mut self) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::not_stored(self.sink.buf());
+                }
+            }
+            Dialect::Meta => {
+                let e = self.base_echo();
+                self.meta_respond(b"NS", &e, None);
+            }
+        }
+    }
+
+    /// CAS guard mismatch. Not quiet-suppressed in meta.
+    pub fn exists(&mut self) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::exists(self.sink.buf());
+                }
+            }
+            Dialect::Meta => {
+                let e = self.base_echo();
+                self.meta_respond(b"EX", &e, None);
+            }
+        }
+    }
+
+    /// Keyed mutation on an absent item. Not quiet-suppressed in meta.
+    pub fn not_found(&mut self) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::not_found(self.sink.buf());
+                }
+            }
+            Dialect::Meta => {
+                let e = self.base_echo();
+                self.meta_respond(b"NF", &e, None);
+            }
+        }
+    }
+
+    /// Delete succeeded.
+    pub fn deleted(&mut self) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::deleted(self.sink.buf());
+                }
+            }
+            Dialect::Meta => {
+                if !self.quiet {
+                    let e = self.base_echo();
+                    self.meta_respond(b"HD", &e, None);
+                }
+            }
+        }
+    }
+
+    /// Classic `touch` succeeded.
+    pub fn touched(&mut self) {
+        if !self.gag() {
+            response::touched(self.sink.buf());
+        }
+    }
+
+    /// Arithmetic succeeded: classic renders the bare number, meta
+    /// `HD`/`VA` (with the new value as the data block under `v`).
+    pub fn number(&mut self, n: u64, ttl: i64, cas: u64) {
+        match self.dialect {
+            Dialect::Classic => {
+                if !self.gag() {
+                    response::number(self.sink.buf(), n);
+                }
+            }
+            Dialect::Meta => {
+                if self.quiet {
+                    return;
+                }
+                let mut digits = [0u8; 20];
+                let i = u64_digits(n, &mut digits);
+                let e = Echo {
+                    cas: Some(cas),
+                    ttl: Some(ttl),
+                    size: Some(digits.len() - i),
+                    ..self.base_echo()
+                };
+                if self.want & want::VALUE != 0 {
+                    self.meta_respond(b"VA", &e, Some(&digits[i..]));
+                } else {
+                    self.meta_respond(b"HD", &e, None);
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- admin
+
+    /// Meta `mn` barrier response — unconditional by design (it is the
+    /// flush marker quiet pipelines wait for).
+    pub fn noop(&mut self) {
+        self.sink.buf().extend_from_slice(b"MN\r\n");
+    }
+
+    pub fn ok(&mut self) {
+        if !self.gag() {
+            response::ok(self.sink.buf());
+        }
+    }
+
+    /// A raw status line (control-plane responses).
+    pub fn line(&mut self, msg: &str) {
+        if self.gag() {
+            return;
+        }
+        let out = self.sink.buf();
+        out.extend_from_slice(msg.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
+
+    pub fn client_error(&mut self, msg: &str) {
+        if !self.gag() {
+            response::client_error(self.sink.buf(), msg);
+        }
+    }
+
+    pub fn server_error(&mut self, msg: &str) {
+        if !self.gag() {
+            response::server_error(self.sink.buf(), msg);
+        }
+    }
+
+    /// Render a [`StoreError`] on the wire (same lines both dialects).
+    pub fn store_error(&mut self, e: &StoreError) {
+        match e {
+            StoreError::BadKey => self.client_error("bad key"),
+            StoreError::NonNumeric => {
+                self.client_error("cannot increment or decrement non-numeric value")
+            }
+            StoreError::TooLarge { .. } => self.server_error("object too large for cache"),
+            StoreError::OutOfMemory => self.server_error("out of memory storing object"),
+            StoreError::Busy => self.server_error("slab migration already in progress"),
+            StoreError::BadPolicy(_) => self.server_error("bad slab policy"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::request::Opcode;
+
+    /// Meta request with canonical echo tokens for the writer tests.
+    fn req(want: u16, quiet: bool) -> Request<'static> {
+        let mut r = Request::meta(Opcode::Get);
+        r.want = want;
+        r.quiet = quiet;
+        r.key_echo = b"kk";
+        r.opaque = b"op";
+        r
+    }
+
+    fn vref(data: &[u8]) -> ValueRef<'_> {
+        ValueRef {
+            data,
+            flags: 7,
+            cas: 42,
+        }
+    }
+
+    #[test]
+    fn meta_value_with_all_flags() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(
+            want::VALUE | want::FLAGS | want::CAS | want::TTL | want::SIZE | want::KEY | want::OPAQUE,
+            false,
+        );
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.value(b"ignored", vref(b"hello"), MetaHit { ttl: -1, won: false });
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "VA 5 f7 c42 t-1 s5 kkk Oop\r\nhello\r\n"
+        );
+    }
+
+    #[test]
+    fn meta_hd_when_no_value_flag() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::CAS, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.value(b"x", vref(b"hello"), MetaHit { ttl: 30, won: false });
+        assert_eq!(String::from_utf8_lossy(&out), "HD c42\r\n");
+    }
+
+    #[test]
+    fn meta_vivify_winner_marks_w() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::VALUE, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.value(b"x", vref(b""), MetaHit { ttl: 60, won: true });
+        assert_eq!(String::from_utf8_lossy(&out), "VA 0 W\r\n\r\n");
+    }
+
+    #[test]
+    fn meta_quiet_suppresses_miss_not_hit() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::VALUE, true);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.miss();
+        w.value(b"x", vref(b"v"), MetaHit { ttl: -1, won: false });
+        assert_eq!(String::from_utf8_lossy(&out), "VA 1\r\nv\r\n");
+    }
+
+    #[test]
+    fn meta_quiet_suppresses_success_not_errors() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(0, true);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.stored(9);
+        w.deleted();
+        w.number(5, -1, 1);
+        w.not_stored();
+        w.exists();
+        w.not_found();
+        assert_eq!(String::from_utf8_lossy(&out), "NS\r\nEX\r\nNF\r\n");
+    }
+
+    #[test]
+    fn meta_miss_echoes_key_and_opaque() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::KEY | want::OPAQUE, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.miss();
+        assert_eq!(String::from_utf8_lossy(&out), "EN kkk Oop\r\n");
+    }
+
+    #[test]
+    fn meta_number_renders_value_block() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::VALUE | want::TTL, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.number(1234, 55, 3);
+        assert_eq!(String::from_utf8_lossy(&out), "VA 4 t55\r\n1234\r\n");
+    }
+
+    #[test]
+    fn classic_noreply_gags_everything() {
+        let mut out = Vec::new();
+        {
+            let mut sink = BufSink(&mut out);
+            let mut w = ResponseWriter::classic(&mut sink, true);
+            w.stored(1);
+            w.not_found();
+            w.client_error("nope");
+            w.server_error("nope");
+            w.number(3, -1, 0);
+            w.end();
+        }
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn classic_words() {
+        let mut out = Vec::new();
+        {
+            let mut sink = BufSink(&mut out);
+            let mut w = ResponseWriter::classic(&mut sink, false);
+            w.stored(1);
+            w.not_stored();
+            w.exists();
+            w.not_found();
+            w.deleted();
+            w.touched();
+            w.number(15, -1, 0);
+            w.end();
+        }
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "STORED\r\nNOT_STORED\r\nEXISTS\r\nNOT_FOUND\r\nDELETED\r\nTOUCHED\r\n15\r\nEND\r\n"
+        );
+    }
+}

@@ -2,6 +2,18 @@
 //! bytes out. The same machine drives real sockets (`server::tcp`) and
 //! in-memory tests.
 //!
+//! ## Two front-ends, one execution core
+//!
+//! Both wire dialects — classic text and meta (`mg`/`ms`/`md`/`ma`/
+//! `mn`) — parse into the same command IR (`protocol::Request`) and
+//! execute through one core ([`Exec`]); responses render back through
+//! `protocol::ResponseWriter`, which owns the dialect differences
+//! (word responses vs code+flag echo, `noreply` vs `q` quiet
+//! semantics). Meta data blocks (`ms`) reuse the classic `Phase::Data`
+//! machinery; meta quiet mode composes with the bounded-sink
+//! backpressure below because suppressed responses simply never enter
+//! the output buffer, and `mn` emits its `MN` barrier unconditionally.
+//!
 //! ## Hot-path design
 //!
 //! The receive side is a cursor buffer ([`RecvBuf`]): completed
@@ -16,14 +28,21 @@
 //! heap allocation at all: socket → hash probe → chunk-to-buffer copy.
 
 use super::metrics::Metrics;
-use crate::protocol::parse::{get_keys, parse_command, split_get, Command, ParseError, StoreOp};
+use crate::protocol::parse::{get_keys, parse_command, split_get, ParseError};
+use crate::protocol::request::{DataRequest, Dialect, Opcode, Request};
+use crate::protocol::writer::ResponseWriter;
 use crate::protocol::{response, stats};
 use crate::store::sharded::ShardedStore;
-use crate::store::store::{CasResult, StoreError, ValueRef};
+use crate::store::store::{
+    ArithOpts, ArithOutcome, DeleteOutcome, MetaGetOpts, MetaSetOpts, SetOutcome, ValueRef,
+};
+use crate::util::b64;
 use crate::util::histogram::SizeHistogram;
 use std::io::{ErrorKind, Read, Write};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+pub use crate::protocol::writer::{BufSink, RespSink};
 
 /// Hard cap on one command line (memcached: 2048 for key lines).
 const MAX_LINE: usize = 8192;
@@ -68,38 +87,6 @@ impl Control for NoControl {
 
     fn sizes_histogram(&self) -> Option<SizeHistogram> {
         None
-    }
-}
-
-/// Where protocol responses land. The state machine appends every
-/// response into `buf()`; `value()` is the one hook a transport-aware
-/// sink can override to scatter a large value straight to the socket
-/// (`writev`) instead of copying chunk → buffer. `saturated()` lets a
-/// bounded sink pause command execution mid-pipeline (backpressure):
-/// the connection stops parsing, keeps the unread tail buffered, and
-/// resumes when the sink drains.
-pub trait RespSink {
-    fn buf(&mut self) -> &mut Vec<u8>;
-
-    /// Encode one `VALUE` response (called under the shard lock, so
-    /// implementations must not block indefinitely).
-    fn value(&mut self, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
-        response::value_ref(self.buf(), key, v, with_cas);
-    }
-
-    /// True when the sink cannot absorb more responses right now.
-    fn saturated(&self) -> bool {
-        false
-    }
-}
-
-/// Plain unbounded buffer sink — the in-memory/test path and the legacy
-/// threaded server.
-pub struct BufSink<'a>(pub &'a mut Vec<u8>);
-
-impl RespSink for BufSink<'_> {
-    fn buf(&mut self) -> &mut Vec<u8> {
-        self.0
     }
 }
 
@@ -160,8 +147,9 @@ impl RecvBuf {
 enum Phase {
     /// Waiting for a full command line.
     Line,
-    /// Waiting for `len` data bytes + CRLF of a storage command.
-    Data { cmd: Command, len: usize },
+    /// Waiting for `len` data bytes + CRLF of a storage command
+    /// (either dialect — the parked request is already owned).
+    Data { req: DataRequest, len: usize },
     /// Swallowing the data block of a rejected storage command (the
     /// error line is already on the wire); keeps the stream in sync
     /// without buffering the oversized block.
@@ -174,8 +162,8 @@ pub struct Conn {
     control: Arc<dyn Control>,
     rb: RecvBuf,
     phase: Phase,
-    /// Reused staging buffer: `noreply` sink, and out-of-order multiget
-    /// hits before they are stitched into request order.
+    /// Reused staging buffer: out-of-order multiget hits before they
+    /// are stitched into request order.
     scratch: Vec<u8>,
     /// Multiget spans: (request key index, scratch start, scratch end).
     spans: Vec<(u32, usize, usize)>,
@@ -256,8 +244,8 @@ impl Conn {
                     }
                     let line_total = eol + 2;
                     let line = &self.rb.buf[self.rb.pos..self.rb.pos + eol];
-                    // Retrieval fast path: keys stay borrowed from the
-                    // receive buffer; hits stream chunk -> out.
+                    // Classic retrieval fast path: keys stay borrowed
+                    // from the receive buffer; hits stream chunk -> out.
                     if let Some((with_cas, tail)) = split_get(line) {
                         do_get(
                             &self.store,
@@ -272,10 +260,40 @@ impl Conn {
                         continue;
                     }
                     match parse_command(line) {
-                        Ok(cmd) => {
-                            self.rb.consume(line_total);
-                            match cmd.data_len() {
+                        Ok(req) => {
+                            // resolve base64 keys (`b`) in place; the
+                            // decoded key lives on the stack so the mg
+                            // hit path stays allocation-free
+                            let mut kbuf = [0u8; 250];
+                            let req = if req.b64_key {
+                                match b64::decode(req.key, &mut kbuf) {
+                                    Ok(n) if n > 0 => {
+                                        let mut r = req;
+                                        r.key = &kbuf[..n];
+                                        r
+                                    }
+                                    _ => {
+                                        // a storage line (`ms ... b`) still
+                                        // announced a data block — swallow it
+                                        // so its payload cannot execute as
+                                        // commands
+                                        let discard = req.data_len();
+                                        self.rb.consume(line_total);
+                                        response::client_error(sink.buf(), "bad base64 key");
+                                        if let Some(len) = discard {
+                                            self.phase = Phase::Discard {
+                                                remaining: len.saturating_add(2),
+                                            };
+                                        }
+                                        continue;
+                                    }
+                                }
+                            } else {
+                                req
+                            };
+                            match req.data_len() {
                                 Some(len) if len > MAX_DATA => {
+                                    self.rb.consume(line_total);
                                     response::server_error(
                                         sink.buf(),
                                         "object too large for cache",
@@ -288,10 +306,22 @@ impl Conn {
                                     };
                                 }
                                 Some(len) => {
-                                    self.phase = Phase::Data { cmd, len };
+                                    let parked = req.to_data();
+                                    self.rb.consume(line_total);
+                                    self.phase = Phase::Data { req: parked, len };
                                 }
                                 None => {
-                                    self.execute_simple(cmd, sink.buf());
+                                    Exec {
+                                        store: &*self.store,
+                                        control: &*self.control,
+                                        scratch: &mut self.scratch,
+                                        spans: &mut self.spans,
+                                        metrics: self.metrics.as_deref(),
+                                        start: self.start,
+                                        closing: &mut self.closing,
+                                    }
+                                    .run(&req, sink);
+                                    self.rb.consume(line_total);
                                     completed += 1;
                                 }
                             }
@@ -311,7 +341,7 @@ impl Conn {
                     if self.rb.len() < need {
                         return completed;
                     }
-                    let Phase::Data { cmd, len } =
+                    let Phase::Data { req, len } =
                         std::mem::replace(&mut self.phase, Phase::Line)
                     else {
                         unreachable!()
@@ -326,7 +356,7 @@ impl Conn {
                     // of the receive buffer: socket -> slab chunk, one copy
                     {
                         let data = &self.rb.buf[self.rb.pos..self.rb.pos + len];
-                        execute_store(&self.store, &mut self.scratch, cmd, data, sink.buf());
+                        execute_data(&self.store, &req, data, sink);
                     }
                     self.rb.consume(need);
                     completed += 1;
@@ -347,95 +377,130 @@ impl Conn {
         }
     }
 
-    /// Execute a line-only (no data block) command. Storage commands go
-    /// through [`execute_store`]; `get`/`gets` normally take the
+}
+
+/// The dialect-blind execution core: one [`Request`] in, responses out
+/// through a [`ResponseWriter`] that renders whichever wire format the
+/// request arrived in. Borrows the connection's state field-by-field so
+/// the request may keep borrowing the receive buffer.
+struct Exec<'e> {
+    store: &'e ShardedStore,
+    control: &'e dyn Control,
+    scratch: &'e mut Vec<u8>,
+    spans: &'e mut Vec<(u32, usize, usize)>,
+    metrics: Option<&'e Metrics>,
+    start: Instant,
+    closing: &'e mut bool,
+}
+
+impl Exec<'_> {
+    /// Execute a line-only (no data block) request. Storage requests go
+    /// through [`execute_data`]; classic `get`/`gets` normally take the
     /// [`do_get`] fast path and only land here via [`parse_command`]
-    /// (e.g. driven directly in tests).
-    fn execute_simple(&mut self, cmd: Command, out: &mut Vec<u8>) {
-        let quiet = cmd.noreply();
-        // `noreply` suppresses normal responses; errors still flow in
-        // memcached, so we buffer into the scratch and drop on success.
-        self.scratch.clear();
-        let sink: &mut Vec<u8> = if quiet { &mut self.scratch } else { out };
-        match cmd {
-            Command::Get { keys, with_cas } => {
-                for key in &keys {
-                    self.store
-                        .get_with(key, |v| response::value_ref(sink, key, v, with_cas));
-                }
-                response::end(sink);
-            }
-            Command::Store { .. } => unreachable!("storage commands carry a data block"),
-            Command::Delete { key, .. } => {
-                if self.store.delete(&key) {
-                    response::deleted(sink);
-                } else {
-                    response::not_found(sink);
-                }
-            }
-            Command::IncrDecr {
-                key, delta, incr, ..
-            } => match self.store.incr_decr(&key, delta, incr) {
-                Ok(Some(n)) => response::number(sink, n),
-                Ok(None) => response::not_found(sink),
-                Err(e) => store_error(sink, &e),
+    /// (`gat`/`gats`, odd spacing, or direct test drives).
+    fn run<S: RespSink>(&mut self, req: &Request<'_>, sink: &mut S) {
+        match req.op {
+            Opcode::Get => match req.dialect {
+                Dialect::Classic => match req.touch_ttl {
+                    Some(exp) => do_gat(self.store, req.key, exp, req.with_cas, sink),
+                    None => do_get(
+                        self.store,
+                        self.scratch,
+                        self.spans,
+                        req.key,
+                        req.with_cas,
+                        sink,
+                    ),
+                },
+                Dialect::Meta => do_meta_get(self.store, req, sink),
             },
-            Command::Touch { key, exptime, .. } => {
-                if self.store.touch(&key, exptime) {
-                    response::touched(sink);
-                } else {
-                    response::not_found(sink);
+            Opcode::Store => unreachable!("storage requests carry a data block"),
+            Opcode::Delete => {
+                let mut w = ResponseWriter::for_request(sink, req);
+                match self.store.delete_cas(req.key, req.cas_compare) {
+                    DeleteOutcome::Deleted => w.deleted(),
+                    DeleteOutcome::NotFound => w.not_found(),
+                    DeleteOutcome::Exists => w.exists(),
                 }
             }
-            Command::Stats { arg } => {
-                match arg.as_deref() {
-                    Some(b"slabs") => {
-                        stats::render_slabs(
-                            sink,
-                            &self.store.slab_stats(),
-                            &self.store.migration_gauges(),
-                        );
-                    }
-                    Some(b"sizes") => match self.control.sizes_histogram() {
-                        Some(h) => stats::render_sizes(sink, &h),
-                        None => {
-                            let h = SizeHistogram::new(1);
-                            stats::render_sizes(sink, &h);
-                        }
-                    },
-                    _ => {
-                        let ops = self.store.stats();
-                        let slabs = self.store.slab_stats();
-                        let uptime = self.start.elapsed().as_secs();
-                        let conns = self
-                            .metrics
-                            .as_deref()
-                            .map(Metrics::conn_counters)
-                            .unwrap_or_default();
-                        stats::render_general(sink, &ops, &slabs, self.store.len(), uptime, &conns);
-                    }
+            Opcode::Arith => {
+                let mut w = ResponseWriter::for_request(sink, req);
+                let opts = ArithOpts {
+                    delta: req.delta,
+                    incr: req.incr,
+                    cas_compare: req.cas_compare,
+                    vivify: req.vivify.map(|ttl| (ttl, req.arith_init)),
+                    new_ttl: req.touch_ttl,
+                    cas_set: req.cas_set,
+                    binary_key: req.b64_key,
                 };
-            }
-            Command::FlushAll { .. } => {
-                self.store.flush_all();
-                response::ok(sink);
-            }
-            Command::Version => response::version(sink, env!("CARGO_PKG_VERSION")),
-            Command::Verbosity { .. } => response::ok(sink),
-            Command::Quit => {
-                self.closing = true;
-            }
-            Command::SlabsReconfigure { sizes, .. } => match self.control.reconfigure(sizes) {
-                Ok(msg) => {
-                    sink.extend_from_slice(msg.as_bytes());
-                    sink.extend_from_slice(b"\r\n");
+                match self.store.arith(req.key, &opts) {
+                    Ok(ArithOutcome::Value { value, ttl, cas }) => w.number(value, ttl, cas),
+                    Ok(ArithOutcome::NotFound) => w.not_found(),
+                    Ok(ArithOutcome::Exists) => w.exists(),
+                    Err(e) => w.store_error(&e),
                 }
-                Err(msg) => response::server_error(sink, &msg),
-            },
-            Command::SlabsOptimize => {
+            }
+            Opcode::Touch => {
+                let mut w = ResponseWriter::for_request(sink, req);
+                if self.store.touch(req.key, req.exptime) {
+                    w.touched();
+                } else {
+                    w.not_found();
+                }
+            }
+            Opcode::Noop => ResponseWriter::for_request(sink, req).noop(),
+            Opcode::Stats => self.run_stats(req.stats_arg, sink),
+            Opcode::FlushAll => {
+                self.store.flush_all();
+                ResponseWriter::for_request(sink, req).ok();
+            }
+            Opcode::Version => ResponseWriter::for_request(sink, req)
+                .line(concat!("VERSION ", env!("CARGO_PKG_VERSION"))),
+            Opcode::Verbosity => ResponseWriter::for_request(sink, req).ok(),
+            Opcode::Quit => *self.closing = true,
+            Opcode::SlabsReconfigure => {
+                let mut w = ResponseWriter::for_request(sink, req);
+                match self.control.reconfigure(req.sizes.clone()) {
+                    Ok(msg) => w.line(&msg),
+                    Err(msg) => w.server_error(&msg),
+                }
+            }
+            Opcode::SlabsOptimize => {
                 let msg = self.control.optimize_now();
-                sink.extend_from_slice(msg.as_bytes());
-                sink.extend_from_slice(b"\r\n");
+                ResponseWriter::for_request(sink, req).line(&msg);
+            }
+        }
+    }
+
+    fn run_stats<S: RespSink>(&mut self, arg: Option<&[u8]>, sink: &mut S) {
+        let out = sink.buf();
+        match arg {
+            Some(b"slabs") => stats::render_slabs(
+                out,
+                &self.store.slab_stats(),
+                &self.store.migration_gauges(),
+            ),
+            Some(b"sizes") => match self.control.sizes_histogram() {
+                Some(h) => stats::render_sizes(out, &h),
+                None => stats::render_sizes(out, &SizeHistogram::new(1)),
+            },
+            Some(b"reset") => {
+                self.store.reset_stats();
+                if let Some(m) = self.metrics {
+                    m.reset();
+                }
+                response::reset(out);
+            }
+            _ => {
+                let ops = self.store.stats();
+                let slabs = self.store.slab_stats();
+                let uptime = self.start.elapsed().as_secs();
+                let conns = self
+                    .metrics
+                    .map(|m| m.conn_counters())
+                    .unwrap_or_default();
+                stats::render_general(out, &ops, &slabs, self.store.len(), uptime, &conns);
             }
         }
     }
@@ -519,66 +584,67 @@ fn do_get<S: RespSink>(
     }
 }
 
-/// Execute a storage command whose data block just completed, with the
-/// block borrowed from the receive buffer (copied once, into the slab
-/// chunk under the shard's write lock).
-fn execute_store(
+/// Classic `gat`/`gats`: serve each key like a get while refreshing
+/// its TTL (touch-on-read, through the same store primitive the meta
+/// `T` flag uses). Touch mutates, so every key takes its shard's write
+/// lock — no batching, which matches memcached's per-key gat.
+fn do_gat<S: RespSink>(
     store: &ShardedStore,
-    scratch: &mut Vec<u8>,
-    cmd: Command,
-    data: &[u8],
-    out: &mut Vec<u8>,
+    tail: &[u8],
+    exptime: u32,
+    with_cas: bool,
+    sink: &mut S,
 ) {
-    let Command::Store {
-        op,
-        key,
-        flags,
-        exptime,
-        cas,
-        noreply,
-        ..
-    } = cmd
-    else {
-        unreachable!("only storage commands enter the data phase");
+    let opts = MetaGetOpts {
+        touch: Some(exptime),
+        ..MetaGetOpts::default()
     };
-    scratch.clear();
-    let sink: &mut Vec<u8> = if noreply { scratch } else { out };
-    let outcome = match op {
-        StoreOp::Set => store.set(&key, data, flags, exptime).map(|_| true),
-        StoreOp::Add => store.add(&key, data, flags, exptime),
-        StoreOp::Replace => store.replace(&key, data, flags, exptime),
-        StoreOp::Append => store.concat(&key, data, true),
-        StoreOp::Prepend => store.concat(&key, data, false),
-        StoreOp::Cas => match store.cas(&key, data, flags, exptime, cas) {
-            Ok(CasResult::Stored) => Ok(true),
-            Ok(CasResult::Exists) => {
-                response::exists(sink);
-                return;
-            }
-            Ok(CasResult::NotFound) => {
-                response::not_found(sink);
-                return;
-            }
-            Err(e) => Err(e),
-        },
+    for key in get_keys(tail) {
+        // the touch path never inserts, so no error can surface here
+        let _ = store.meta_get(key, &opts, |v, _| sink.value(key, v, with_cas));
+    }
+    response::end(sink.buf());
+}
+
+/// Meta `mg`: single-key retrieval with flag-driven extras. Plain
+/// lookups ride the shard read lock ([`ShardedStore::meta_get`] peek
+/// path) and encode straight into the sink — allocation-free, same as
+/// the classic fast path.
+fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
+    let mut w = ResponseWriter::for_request(sink, req);
+    let opts = MetaGetOpts {
+        touch: req.touch_ttl,
+        vivify: req.vivify,
+        vivify_cas: req.cas_set,
+        binary_key: req.b64_key,
     };
-    match outcome {
-        Ok(true) => response::stored(sink),
-        Ok(false) => response::not_stored(sink),
-        Err(e) => store_error(sink, &e),
+    match store.meta_get(req.key, &opts, |v, hit| w.value(req.key, v, hit)) {
+        Ok(Some(_)) => {}
+        Ok(None) => w.miss(),
+        Err(e) => w.store_error(&e),
     }
 }
 
-fn store_error(out: &mut Vec<u8>, e: &StoreError) {
-    match e {
-        StoreError::BadKey => response::client_error(out, "bad key"),
-        StoreError::NonNumeric => {
-            response::client_error(out, "cannot increment or decrement non-numeric value")
-        }
-        StoreError::TooLarge { .. } => response::server_error(out, "object too large for cache"),
-        StoreError::OutOfMemory => response::server_error(out, "out of memory storing object"),
-        StoreError::Busy => response::server_error(out, "slab migration already in progress"),
-        StoreError::BadPolicy(_) => response::server_error(out, "bad slab policy"),
+/// Execute a storage request whose data block just completed, with the
+/// block borrowed from the receive buffer (copied once, into the slab
+/// chunk under the shard's write lock). Both dialects land on
+/// [`ShardedStore::meta_set`]; the writer renders the outcome.
+fn execute_data<S: RespSink>(store: &ShardedStore, req: &DataRequest, data: &[u8], sink: &mut S) {
+    let mut w = ResponseWriter::for_data(sink, req);
+    let opts = MetaSetOpts {
+        mode: req.mode,
+        flags: req.set_flags,
+        exptime: req.exptime,
+        cas_compare: req.cas_compare,
+        cas_set: req.cas_set,
+        binary_key: req.b64_key,
+    };
+    match store.meta_set(&req.key, data, &opts) {
+        Ok(SetOutcome::Stored { cas }) => w.stored(cas),
+        Ok(SetOutcome::NotStored) => w.not_stored(),
+        Ok(SetOutcome::Exists) => w.exists(),
+        Ok(SetOutcome::NotFound) => w.not_found(),
+        Err(e) => w.store_error(&e),
     }
 }
 
@@ -919,31 +985,50 @@ impl RespSink for NetSink<'_> {
         #[cfg(target_os = "linux")]
         if let Some(fd) = self.fd {
             if *self.write_ready && !*self.dead && v.data.len() >= DIRECT_VALUE_MIN {
-                self.value_writev(fd, key, v, with_cas);
+                // encode the VALUE header into the output buffer, then
+                // scatter [pending, chunk, CRLF] to the kernel
+                response::value_header(
+                    self.out.buf_mut(),
+                    key,
+                    v.data.len(),
+                    v.flags,
+                    with_cas.then_some(v.cas),
+                );
+                self.scatter(fd, v.data);
                 return;
             }
         }
         response::value_ref(self.out.buf_mut(), key, v, with_cas);
     }
+
+    /// Meta `VA` data blocks ride the same scatter machinery as classic
+    /// `VALUE`s: the writer already encoded the header line into the
+    /// buffer, so large chunks go `[pending, chunk, CRLF]` straight to
+    /// the kernel.
+    fn append_data(&mut self, data: &[u8]) {
+        #[cfg(target_os = "linux")]
+        if let Some(fd) = self.fd {
+            if *self.write_ready && !*self.dead && data.len() >= DIRECT_VALUE_MIN {
+                self.scatter(fd, data);
+                return;
+            }
+        }
+        let out = self.out.buf_mut();
+        out.extend_from_slice(data);
+        out.extend_from_slice(b"\r\n");
+    }
 }
 
 #[cfg(target_os = "linux")]
 impl NetSink<'_> {
-    /// Encode the `VALUE` header into the output buffer, then hand
-    /// `[pending output, chunk, CRLF]` to the kernel in one `writev`.
-    /// On a full send nothing of the chunk is ever copied; on a short
-    /// send only the unaccepted tail lands in the buffer.
-    fn value_writev(&mut self, fd: i32, key: &[u8], v: ValueRef<'_>, with_cas: bool) {
+    /// Hand `[pending output, data, CRLF]` to the kernel in one
+    /// `writev` (the header line is already in the buffer). On a full
+    /// send nothing of `data` is ever copied; on a short send only the
+    /// unaccepted tail lands in the buffer.
+    fn scatter(&mut self, fd: i32, data: &[u8]) {
         use super::sys::writev_slices;
-        response::value_header(
-            self.out.buf_mut(),
-            key,
-            v.data.len(),
-            v.flags,
-            with_cas.then_some(v.cas),
-        );
-        let total = self.out.len() + v.data.len() + 2;
-        match writev_slices(fd, &[self.out.pending(), v.data, b"\r\n"]) {
+        let total = self.out.len() + data.len() + 2;
+        match writev_slices(fd, &[self.out.pending(), data, b"\r\n"]) {
             Ok(mut n) => {
                 Metrics::add(&self.metrics.bytes_written, n as u64);
                 if n < total {
@@ -952,11 +1037,11 @@ impl NetSink<'_> {
                 let take = n.min(self.out.len());
                 self.out.consume(take);
                 n -= take;
-                if n < v.data.len() {
-                    self.out.buf_mut().extend_from_slice(&v.data[n..]);
+                if n < data.len() {
+                    self.out.buf_mut().extend_from_slice(&data[n..]);
                     n = 0;
                 } else {
-                    n -= v.data.len();
+                    n -= data.len();
                 }
                 if n < 2 {
                     self.out.buf_mut().extend_from_slice(&b"\r\n"[n..]);
@@ -966,14 +1051,14 @@ impl NetSink<'_> {
                 if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted =>
             {
                 *self.write_ready = false;
-                self.out.buf_mut().extend_from_slice(v.data);
+                self.out.buf_mut().extend_from_slice(data);
                 self.out.buf_mut().extend_from_slice(b"\r\n");
             }
             Err(_) => {
                 *self.dead = true;
                 // keep the buffer protocol-consistent even though the
                 // connection is about to close
-                self.out.buf_mut().extend_from_slice(v.data);
+                self.out.buf_mut().extend_from_slice(data);
                 self.out.buf_mut().extend_from_slice(b"\r\n");
             }
         }
@@ -1143,6 +1228,299 @@ mod tests {
         let t = out.clone();
         assert!(String::from_utf8_lossy(&t).contains("VALUE bin 0 6"));
         assert!(t.windows(6).any(|w| w == b"ab\r\ncd"));
+    }
+
+    // ------------------------------------------------ meta dialect
+
+    #[test]
+    fn negative_exptime_is_dead_on_arrival() {
+        // the parsed sentinel must be an absolute past time: the item
+        // stores but can never be read back (memcached semantics)
+        let mut c = conn();
+        let out = run(
+            &mut c,
+            b"set k 0 0 1\r\nv\r\nset dead 0 -1 1\r\nw\r\nget dead\r\nget k\r\n",
+        );
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "STORED\r\nSTORED\r\nEND\r\nVALUE k 0 1\r\nv\r\nEND\r\n"
+        );
+    }
+
+    #[test]
+    fn meta_set_get_roundtrip_with_flag_echo() {
+        let mut c = conn();
+        let out = run(&mut c, b"ms foo 5 F7 c k Oab\r\nhello\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("HD c"), "{t}");
+        assert!(t.contains(" kfoo "), "{t}");
+        assert!(t.trim_end().ends_with("Oab"), "{t}");
+        let out = run(&mut c, b"mg foo v f c t s k Oxyz\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("VA 5 f7 c"), "{t}");
+        assert!(t.contains(" t-1 "), "{t}");
+        assert!(t.contains(" s5 "), "{t}");
+        assert!(t.contains(" kfoo "), "{t}");
+        assert!(t.contains(" Oxyz\r\nhello\r\n"), "{t}");
+    }
+
+    #[test]
+    fn meta_flag_parse_echo_is_byte_exact() {
+        let mut c = conn();
+        run(&mut c, b"ms k 2 E42 T0\r\nhi\r\n");
+        let out = run(&mut c, b"mg k v f c t s k\r\n");
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "VA 2 f0 c42 t-1 s2 kk\r\nhi\r\n"
+        );
+    }
+
+    #[test]
+    fn meta_get_miss_and_quiet() {
+        let mut c = conn();
+        let out = run(&mut c, b"mg nope v\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "EN\r\n");
+        // q suppresses the miss; mn flushes the barrier
+        let out = run(&mut c, b"mg nope v q\r\nmg also v q\r\nmn\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "MN\r\n");
+        // q does not suppress hits
+        run(&mut c, b"ms hit 1\r\nx\r\n");
+        let out = run(&mut c, b"mg hit v q\r\nmn\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VA 1\r\nx\r\nMN\r\n");
+    }
+
+    #[test]
+    fn meta_set_modes_and_quiet() {
+        let mut c = conn();
+        // quiet success suppressed
+        let out = run(&mut c, b"ms q1 1 q\r\nx\r\n");
+        assert!(out.is_empty(), "{:?}", String::from_utf8_lossy(&out));
+        // add-on-present fails loudly even with q
+        let out = run(&mut c, b"ms q1 1 ME q\r\ny\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "NS\r\n");
+        // append via meta mode
+        let out = run(&mut c, b"ms q1 2 MA\r\n-z\r\nmg q1 v\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "HD\r\nVA 3\r\nx-z\r\n");
+        // replace-on-absent
+        let out = run(&mut c, b"ms none 1 MR\r\nw\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "NS\r\n");
+    }
+
+    #[test]
+    fn meta_cas_guards() {
+        let mut c = conn();
+        let out = run(&mut c, b"ms k 1 c\r\nv\r\n");
+        let t = String::from_utf8_lossy(&out);
+        let cas: u64 = t.trim().strip_prefix("HD c").unwrap().parse().unwrap();
+        // ms with wrong CAS -> EX, right CAS -> HD
+        let out = run(&mut c, format!("ms k 1 C{}\r\nw\r\n", cas + 1).as_bytes());
+        assert_eq!(String::from_utf8_lossy(&out), "EX\r\n");
+        let out = run(&mut c, format!("ms k 1 C{cas}\r\nw\r\n").as_bytes());
+        assert_eq!(String::from_utf8_lossy(&out), "HD\r\n");
+        // md with wrong CAS -> EX (item survives), then right CAS deletes
+        let out = run(&mut c, b"mg k c\r\n");
+        let t = String::from_utf8_lossy(&out);
+        let cas: u64 = t.trim().strip_prefix("HD c").unwrap().parse().unwrap();
+        let out = run(&mut c, format!("md k C{}\r\n", cas + 1).as_bytes());
+        assert_eq!(String::from_utf8_lossy(&out), "EX\r\n");
+        let out = run(&mut c, format!("md k C{cas}\r\nmd k\r\n").as_bytes());
+        assert_eq!(String::from_utf8_lossy(&out), "HD\r\nNF\r\n");
+    }
+
+    #[test]
+    fn meta_arith_flows() {
+        let mut c = conn();
+        run(&mut c, b"ms n 2\r\n10\r\n");
+        let out = run(&mut c, b"ma n\r\nma n D5 v\r\nma n MD D3 v\r\nma missing\r\n");
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "HD\r\nVA 2\r\n16\r\nVA 2\r\n13\r\nNF\r\n"
+        );
+        // vivify with initial value
+        let out = run(&mut c, b"ma fresh N60 J9 v t\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("VA 1 t"), "{t}");
+        assert!(t.ends_with("\r\n9\r\n"), "{t}");
+        // non-numeric -> CLIENT_ERROR
+        run(&mut c, b"ms txt 3\r\nabc\r\n");
+        let out = run(&mut c, b"ma txt\r\n");
+        assert!(String::from_utf8_lossy(&out).starts_with("CLIENT_ERROR"));
+    }
+
+    #[test]
+    fn meta_vivify_on_get() {
+        let mut c = conn();
+        let out = run(&mut c, b"mg viv N60 v t\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("VA 0 t"), "{t}");
+        assert!(t.trim_end().ends_with(" W"), "winner flag: {t}");
+        // classic dialect sees the vivified (empty) item
+        let out = run(&mut c, b"get viv\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VALUE viv 0 0\r\n\r\nEND\r\n");
+        // second mg is a plain hit, no W
+        let out = run(&mut c, b"mg viv v\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VA 0\r\n\r\n");
+    }
+
+    #[test]
+    fn meta_base64_keys_interoperate_with_classic() {
+        let mut c = conn();
+        // b64("foo") = "Zm9v": store via meta with b, read via classic
+        let out = run(&mut c, b"ms Zm9v 3 b k\r\nabc\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("HD kZm9v"), "k echo stays encoded: {t}");
+        let out = run(&mut c, b"get foo\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VALUE foo 0 3\r\nabc\r\nEND\r\n");
+        // and the reverse: classic store, meta b64 read
+        run(&mut c, b"set bar 0 0 2\r\nhi\r\n");
+        let out = run(&mut c, b"mg YmFy v b k\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VA 2 kYmFy\r\nhi\r\n");
+        // invalid base64 is a client error, stream stays in sync
+        let out = run(&mut c, b"mg !!! b\r\nversion\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("CLIENT_ERROR bad base64 key\r\nVERSION"), "{t}");
+    }
+
+    #[test]
+    fn meta_bad_b64_storage_discards_data_block() {
+        // a rejected base64 key on ms must still swallow the announced
+        // data block — its payload must not execute as commands
+        let mut c = conn();
+        run(&mut c, b"set keep 0 0 1\r\nv\r\n");
+        let out = run(&mut c, b"ms !bad! 11 b\r\nflush_all\r\n\r\nversion\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("CLIENT_ERROR bad base64 key\r\nVERSION"), "{t}");
+        assert!(!t.contains("OK"), "smuggled flush_all must not run: {t}");
+        let out = run(&mut c, b"get keep\r\n");
+        assert!(
+            String::from_utf8_lossy(&out).contains("VALUE keep"),
+            "store must be untouched"
+        );
+    }
+
+    #[test]
+    fn meta_binary_keys_via_b64() {
+        // base64 keys may decode to bytes illegal in the text protocol
+        // (here: an embedded space); they are first-class items
+        let mut c = conn();
+        // b64("a b") = "YSBi"
+        let out = run(&mut c, b"ms YSBi 3 b c\r\nbin\r\n");
+        assert!(String::from_utf8_lossy(&out).starts_with("HD c"));
+        let out = run(&mut c, b"mg YSBi v k b\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "VA 3 kYSBi\r\nbin\r\n");
+        // vivify works for binary keys too (b64("x\ty") = "eAl5")
+        let out = run(&mut c, b"mg eAl5 v b N60\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("VA 0") && t.contains(" W"), "{t}");
+        // and delete addresses the same binary key
+        let out = run(&mut c, b"md YSBi b\r\nmg YSBi v b\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "HD\r\nEN\r\n");
+    }
+
+    #[test]
+    fn meta_touch_on_read_updates_ttl() {
+        use std::sync::atomic::Ordering;
+        let (clock, cell) = Clock::manual(2_000_000);
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                2,
+                clock,
+            )
+            .unwrap(),
+        );
+        let mut c = Conn::new(store, Arc::new(NoControl));
+        run(&mut c, b"ms k 1 T50\r\nv\r\n");
+        let out = run(&mut c, b"mg k t T500\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "HD t500\r\n");
+        // past the original expiry the touched item still serves
+        cell.store(2_000_100, Ordering::Relaxed);
+        let out = run(&mut c, b"mg k t\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "HD t400\r\n");
+    }
+
+    #[test]
+    fn meta_data_block_phase_and_errors() {
+        let mut c = conn();
+        // fragmented ms data block reassembles
+        let mut out = Vec::new();
+        for chunk in [&b"ms fr"[..], b"ag 4 c", b"\r\nda", b"ta\r", b"\nmg frag v\r\n"] {
+            c.on_bytes(chunk, &mut out);
+        }
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("HD c"), "{t}");
+        assert!(t.ends_with("VA 4\r\ndata\r\n"), "{t}");
+        // bad data tail flagged like classic
+        let out = run(&mut c, b"ms k 2\r\nabXXmn\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("CLIENT_ERROR bad data chunk"), "{t}");
+        assert!(t.ends_with("MN\r\n"), "stream resyncs: {t}");
+        // oversized ms rejected and discarded
+        let len = MAX_DATA + 1;
+        let mut out = Vec::new();
+        c.on_bytes(format!("ms huge {len}\r\n").as_bytes(), &mut out);
+        assert!(String::from_utf8_lossy(&out).contains("SERVER_ERROR object too large"));
+    }
+
+    #[test]
+    fn meta_parse_errors_recover() {
+        let mut c = conn();
+        let out = run(&mut c, b"mg\r\nms k\r\nmg k Z\r\nmz k\r\nmn\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert_eq!(t.matches("CLIENT_ERROR").count(), 3, "{t}");
+        assert!(t.contains("ERROR\r\n"), "unknown meta verb: {t}");
+        assert!(t.ends_with("MN\r\n"), "{t}");
+    }
+
+    #[test]
+    fn classic_gat_touches_and_serves() {
+        use std::sync::atomic::Ordering;
+        let (clock, cell) = Clock::manual(3_000_000);
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                16 << 20,
+                true,
+                2,
+                clock,
+            )
+            .unwrap(),
+        );
+        let mut c = Conn::new(store, Arc::new(NoControl));
+        run(&mut c, b"set a 1 50 1\r\nx\r\nset b 2 50 1\r\ny\r\n");
+        let out = run(&mut c, b"gat 500 a b missing\r\n");
+        assert_eq!(
+            String::from_utf8_lossy(&out),
+            "VALUE a 1 1\r\nx\r\nVALUE b 2 1\r\ny\r\nEND\r\n"
+        );
+        // both TTLs were refreshed: alive past the original expiry
+        cell.store(3_000_100, Ordering::Relaxed);
+        let out = run(&mut c, b"get a b\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("VALUE a") && t.contains("VALUE b"), "{t}");
+        // gats returns the cas like gets
+        let out = run(&mut c, b"gats 500 a\r\n");
+        let t = String::from_utf8_lossy(&out);
+        let ncols = t.lines().next().unwrap().split_whitespace().count();
+        assert_eq!(ncols, 5, "VALUE key flags len cas: {t}");
+    }
+
+    #[test]
+    fn stats_reset_zeroes_counters() {
+        let mut c = conn();
+        run(&mut c, b"set k 0 0 1\r\nv\r\nget k\r\nget missing\r\n");
+        let before = String::from_utf8_lossy(&run(&mut c, b"stats\r\n")).to_string();
+        assert!(before.contains("STAT cmd_get 2"), "{before}");
+        let out = run(&mut c, b"stats reset\r\n");
+        assert_eq!(String::from_utf8_lossy(&out), "RESET\r\n");
+        let after = String::from_utf8_lossy(&run(&mut c, b"stats\r\n")).to_string();
+        assert!(after.contains("STAT cmd_get 0"), "{after}");
+        assert!(after.contains("STAT cmd_set 0"), "{after}");
+        assert!(after.contains("STAT curr_items 1"), "gauge survives: {after}");
     }
 
     // ------------------------------------------------ hot-path refits

@@ -41,6 +41,25 @@ impl Metrics {
         counter.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// `stats reset`: zero the cumulative counters. The
+    /// `curr_connections` gauge is live state, not a counter, and
+    /// survives (memcached parity: `stats_reset` clears `struct stats`
+    /// but not `stats_state`).
+    pub fn reset(&self) {
+        for c in [
+            &self.connections_accepted,
+            &self.connections_closed,
+            &self.rejected_connections,
+            &self.conn_yields,
+            &self.commands,
+            &self.bytes_read,
+            &self.bytes_written,
+            &self.protocol_errors,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
     /// The connection-level gauges `stats` reports (memcached parity).
     pub fn conn_counters(&self) -> ConnCounters {
         ConnCounters {
@@ -119,5 +138,20 @@ mod tests {
         assert_eq!(c.total, 2);
         assert_eq!(c.rejected, 1);
         assert_eq!(c.yields, 1);
+    }
+
+    #[test]
+    fn reset_clears_counters_keeps_curr_gauge() {
+        let m = Metrics::new();
+        Metrics::bump(&m.connections_accepted);
+        Metrics::bump(&m.curr_connections);
+        Metrics::add(&m.bytes_read, 512);
+        Metrics::bump(&m.commands);
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.connections_accepted, 0);
+        assert_eq!(s.bytes_read, 0);
+        assert_eq!(s.commands, 0);
+        assert_eq!(s.curr_connections, 1, "live gauge survives");
     }
 }

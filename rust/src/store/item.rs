@@ -27,12 +27,28 @@ pub fn total_item_size(klen: usize, vlen: usize, use_cas: bool) -> usize {
 /// Maximum key length (memcached: 250 bytes).
 pub const MAX_KEY_LEN: usize = 250;
 
+/// Length-only key bound: 1..=250 bytes. Binary keys (the meta
+/// protocol's base64 `b` flag) are exempt from the text-protocol
+/// character rules but still bounded.
+pub fn key_len_ok(key: &[u8]) -> bool {
+    !key.is_empty() && key.len() <= MAX_KEY_LEN
+}
+
 /// Validate a key per the text protocol: 1..=250 bytes, no whitespace
 /// or control characters.
 pub fn key_is_valid(key: &[u8]) -> bool {
-    !key.is_empty()
-        && key.len() <= MAX_KEY_LEN
-        && key.iter().all(|&b| b > 32 && b != 127)
+    key_len_ok(key) && key.iter().all(|&b| b > 32 && b != 127)
+}
+
+/// The store's key gate: binary (base64-sourced) keys are only
+/// length-bounded, text keys must satisfy the full protocol rules.
+#[inline]
+pub fn key_ok(key: &[u8], binary: bool) -> bool {
+    if binary {
+        key_len_ok(key)
+    } else {
+        key_is_valid(key)
+    }
 }
 
 /// 64-bit FNV-1a — memcached's default hash since 1.4.x is murmur3,

@@ -24,7 +24,8 @@
 use super::item::hash_key;
 use super::migrate::{MigrationGauges, DEFAULT_MIGRATE_BATCH};
 use super::store::{
-    CasResult, Clock, KvStore, MigrationReport, PeekOutcome, SizeObserver, StoreError, StoreStats,
+    ArithOpts, ArithOutcome, CasResult, Clock, DeleteOutcome, KvStore, MetaGetOpts, MetaHit,
+    MetaSetOpts, MigrationReport, PeekOutcome, SetOutcome, SizeObserver, StoreError, StoreStats,
     Value, ValueRef,
 };
 use crate::config::Settings;
@@ -299,12 +300,72 @@ impl ShardedStore {
         }
     }
 
+    /// The unified storage primitive (see [`KvStore::meta_set`]).
+    pub fn meta_set(
+        &self,
+        key: &[u8],
+        value: &[u8],
+        opts: &MetaSetOpts,
+    ) -> Result<SetOutcome, StoreError> {
+        self.write_shard(key).meta_set(key, value, opts)
+    }
+
+    /// Meta retrieval: zero-copy visit with per-hit metadata (TTL),
+    /// optional touch-on-read and vivify-on-miss ([`MetaGetOpts`]).
+    /// Plain lookups (no `touch`) serve recently-accessed items under
+    /// the shard's *read* lock via [`KvStore::peek_meta`]; touch,
+    /// vivify-on-miss, expired and recency-stale items take the write
+    /// path ([`KvStore::meta_get`]). `Ok(None)` = miss; `Err` = a
+    /// vivify insert failed.
+    pub fn meta_get<R>(
+        &self,
+        key: &[u8],
+        opts: &MetaGetOpts,
+        mut f: impl FnMut(ValueRef<'_>, MetaHit) -> R,
+    ) -> Result<Option<R>, StoreError> {
+        let shard = &self.shards[self.shard_index(key)];
+        if opts.touch.is_none() {
+            let s = shard.store.read().unwrap();
+            match s.peek_meta(key, &mut f) {
+                PeekOutcome::Hit(r) => {
+                    shard.read_gets.fetch_add(1, Ordering::Relaxed);
+                    shard.read_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Some(r));
+                }
+                PeekOutcome::Miss if opts.vivify.is_none() => {
+                    shard.read_gets.fetch_add(1, Ordering::Relaxed);
+                    shard.read_misses.fetch_add(1, Ordering::Relaxed);
+                    return Ok(None);
+                }
+                // a vivifiable miss needs the write lock to create;
+                // NeedsWrite retries like get_with
+                PeekOutcome::Miss | PeekOutcome::NeedsWrite => {}
+            }
+        }
+        shard
+            .store
+            .write()
+            .unwrap()
+            .meta_get(key, opts, |v, h| f(v, h))
+    }
+
     pub fn delete(&self, key: &[u8]) -> bool {
         self.write_shard(key).delete(key)
     }
 
+    /// CAS-guarded delete (see [`KvStore::delete_cas`]).
+    pub fn delete_cas(&self, key: &[u8], cas: Option<u64>) -> DeleteOutcome {
+        self.write_shard(key).delete_cas(key, cas)
+    }
+
     pub fn incr_decr(&self, key: &[u8], delta: u64, incr: bool) -> Result<Option<u64>, StoreError> {
         self.write_shard(key).incr_decr(key, delta, incr)
+    }
+
+    /// CAS-guarded, optionally vivifying arithmetic (see
+    /// [`KvStore::arith`]).
+    pub fn arith(&self, key: &[u8], opts: &ArithOpts) -> Result<ArithOutcome, StoreError> {
+        self.write_shard(key).arith(key, opts)
     }
 
     pub fn touch(&self, key: &[u8], exptime: u32) -> bool {
@@ -409,6 +470,18 @@ impl ShardedStore {
             agg.get_misses += s.read_misses.load(Ordering::Relaxed);
         }
         agg
+    }
+
+    /// `stats reset`: zero every shard's cumulative operation counters
+    /// and the lock-free read-path counters. Gauges (item counts, slab
+    /// geometry) are untouched.
+    pub fn reset_stats(&self) {
+        for s in &self.shards {
+            s.store.write().unwrap().reset_stats();
+            s.read_gets.store(0, Ordering::Relaxed);
+            s.read_hits.store(0, Ordering::Relaxed);
+            s.read_misses.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Current chunk-size table (identical across shards —
@@ -803,5 +876,63 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(s.stats().get_hits, 16_000);
+    }
+
+    #[test]
+    fn meta_get_serves_reads_and_vivifies() {
+        use crate::store::store::MetaHit;
+        let s = store(4);
+        let plain = MetaGetOpts::default();
+        s.set(b"k", b"val", 9, 0).unwrap();
+        // fresh item: read path, ttl -1
+        let got = s.meta_get(b"k", &plain, |v: ValueRef<'_>, h: MetaHit| {
+            (v.data.to_vec(), v.flags, h.ttl, h.won)
+        });
+        assert_eq!(got.unwrap(), Some((b"val".to_vec(), 9, -1, false)));
+        assert_eq!(s.stats().get_hits, 1, "read-path hit counted");
+        // miss without vivify counted on the read path
+        assert!(s
+            .meta_get(b"nope", &plain, |_: ValueRef<'_>, _| ())
+            .unwrap()
+            .is_none());
+        assert_eq!(s.stats().get_misses, 1);
+        // vivify creates through the write path
+        let viv = MetaGetOpts {
+            vivify: Some(60),
+            ..MetaGetOpts::default()
+        };
+        let h = s
+            .meta_get(b"viv", &viv, |_: ValueRef<'_>, h| h)
+            .unwrap()
+            .unwrap();
+        assert!(h.won);
+        assert_eq!(s.get(b"viv").unwrap().value, b"");
+        // touch-on-read goes straight to the write path
+        let touch = MetaGetOpts {
+            touch: Some(120),
+            ..MetaGetOpts::default()
+        };
+        let h = s
+            .meta_get(b"k", &touch, |_: ValueRef<'_>, h| h)
+            .unwrap()
+            .unwrap();
+        assert_eq!(h.ttl, 120);
+    }
+
+    #[test]
+    fn reset_stats_covers_both_paths() {
+        let s = store(2);
+        s.set(b"a", b"1", 0, 0).unwrap();
+        s.get(b"a"); // read path
+        s.get(b"missing");
+        s.delete(b"a");
+        let st = s.stats();
+        assert!(st.cmd_get >= 2 && st.cmd_set >= 1 && st.delete_hits == 1);
+        s.reset_stats();
+        let st = s.stats();
+        assert_eq!(
+            (st.cmd_get, st.cmd_set, st.get_hits, st.get_misses, st.delete_hits),
+            (0, 0, 0, 0, 0)
+        );
     }
 }

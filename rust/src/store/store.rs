@@ -4,7 +4,7 @@
 
 use super::arena::{Arena, ItemMeta, NIL};
 use super::hashtable::HashTable;
-use super::item::{hash_key, key_is_valid, total_item_size};
+use super::item::{hash_key, key_ok, total_item_size};
 use super::lru::ClassLru;
 use super::migrate::{MigrationGauges, MigrationState};
 use crate::slab::policy::ChunkSizePolicy;
@@ -95,6 +95,151 @@ pub enum CasResult {
     Stored,
     Exists,
     NotFound,
+}
+
+/// Storage behaviour of a [`KvStore::meta_set`] — the classic verbs
+/// and the meta `M` mode switch name the same five semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreMode {
+    /// Unconditional store (`set` / `ms`).
+    Set,
+    /// Store only if absent (`add` / `ms ... ME`).
+    Add,
+    /// Store only if present (`replace` / `ms ... MR`).
+    Replace,
+    /// Append to an existing value (`append` / `ms ... MA`).
+    Append,
+    /// Prepend to an existing value (`prepend` / `ms ... MP`).
+    Prepend,
+}
+
+/// Options for [`KvStore::meta_set`] — the store-side surface the meta
+/// `ms` flag grammar (and the classic storage verbs) compile onto.
+#[derive(Debug, Clone, Copy)]
+pub struct MetaSetOpts {
+    pub mode: StoreMode,
+    /// Client flags to store (classic `<flags>` / meta `F`).
+    pub flags: u32,
+    /// Item TTL (classic `<exptime>` / meta `T`).
+    pub exptime: u32,
+    /// Store only if the existing item's CAS matches (classic `cas` /
+    /// meta `C`).
+    pub cas_compare: Option<u64>,
+    /// Store with this explicit CAS value instead of the next counter
+    /// value (meta `E`).
+    pub cas_set: Option<u64>,
+    /// The key arrived base64-encoded (meta `b`): exempt from the
+    /// text-protocol character rules, length bound still applies.
+    pub binary_key: bool,
+}
+
+impl MetaSetOpts {
+    /// Plain unconditional `set` with the given flags/TTL.
+    pub fn set(flags: u32, exptime: u32) -> MetaSetOpts {
+        MetaSetOpts {
+            mode: StoreMode::Set,
+            flags,
+            exptime,
+            cas_compare: None,
+            cas_set: None,
+            binary_key: false,
+        }
+    }
+}
+
+/// Outcome of a [`KvStore::meta_set`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOutcome {
+    /// Stored; `cas` is the item's new CAS value (meta `c` echo).
+    Stored { cas: u64 },
+    /// Mode precondition failed (add-on-present, replace/concat-on-absent).
+    NotStored,
+    /// `cas_compare` mismatch.
+    Exists,
+    /// `cas_compare` given but the key is absent.
+    NotFound,
+}
+
+/// Outcome of a CAS-guarded delete ([`KvStore::delete_cas`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeleteOutcome {
+    Deleted,
+    NotFound,
+    /// CAS guard mismatch; the item survives.
+    Exists,
+}
+
+/// Options for [`KvStore::arith`] — classic `incr`/`decr` and the meta
+/// `ma` flag grammar.
+#[derive(Debug, Clone, Copy)]
+pub struct ArithOpts {
+    pub delta: u64,
+    /// `true` = increment (wrapping), `false` = decrement (floors at 0).
+    pub incr: bool,
+    /// Mutate only if the item's CAS matches (meta `C`).
+    pub cas_compare: Option<u64>,
+    /// On miss, auto-create with `(ttl, initial_value)` (meta `N`/`J`).
+    pub vivify: Option<(u32, u64)>,
+    /// Refresh the item TTL on success (meta `T`).
+    pub new_ttl: Option<u32>,
+    /// Store this explicit CAS value on success (meta `E`).
+    pub cas_set: Option<u64>,
+    /// The key arrived base64-encoded (meta `b`): a vivify may insert
+    /// it even when it violates the text-protocol character rules.
+    pub binary_key: bool,
+}
+
+impl ArithOpts {
+    /// Classic `incr`/`decr`.
+    pub fn classic(delta: u64, incr: bool) -> ArithOpts {
+        ArithOpts {
+            delta,
+            incr,
+            cas_compare: None,
+            vivify: None,
+            new_ttl: None,
+            cas_set: None,
+            binary_key: false,
+        }
+    }
+}
+
+/// Outcome of a [`KvStore::arith`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOutcome {
+    /// New value after the operation (or the vivified initial value),
+    /// with the metadata the meta dialect echoes.
+    Value { value: u64, ttl: i64, cas: u64 },
+    NotFound,
+    /// CAS guard mismatch; the item is untouched.
+    Exists,
+}
+
+/// Options for [`KvStore::meta_get`] — the flag-driven retrieval
+/// extras of the meta `mg` command (and classic `gat` via `touch`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MetaGetOpts {
+    /// Refresh the TTL on hit (touch-on-read: meta `T`, classic `gat`).
+    pub touch: Option<u32>,
+    /// On miss, create an empty item with this TTL and serve it as a
+    /// "won" hit (meta `N`).
+    pub vivify: Option<u32>,
+    /// Explicit CAS for a vivified insert (meta `E`).
+    pub vivify_cas: Option<u64>,
+    /// The key arrived base64-encoded (meta `b`): a vivify may insert
+    /// it even when it violates the text-protocol character rules.
+    pub binary_key: bool,
+}
+
+/// Per-hit metadata the meta read path hands its visitor alongside the
+/// borrowed value bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetaHit {
+    /// Remaining TTL in seconds; `-1` = never expires.
+    pub ttl: i64,
+    /// The miss was vivified (`mg ... N`): this caller "won" the right
+    /// to recache and the value is the fresh empty item.
+    pub won: bool,
 }
 
 /// A fetched value.
@@ -287,6 +432,21 @@ impl KvStore {
         meta.exptime != 0 && meta.exptime <= self.clock.now()
     }
 
+    /// Remaining TTL in seconds (`-1` = never expires) — the meta `t`
+    /// response flag.
+    fn ttl_of(&self, meta: &ItemMeta) -> i64 {
+        self.ttl_from_exp(meta.exptime)
+    }
+
+    /// [`ttl_of`](KvStore::ttl_of) from a raw absolute exptime.
+    fn ttl_from_exp(&self, exp: u32) -> i64 {
+        if exp == 0 {
+            -1
+        } else {
+            exp as i64 - self.clock.now() as i64
+        }
+    }
+
     // ------------------------------------------------------------ internals
 
     /// Is this item's chunk in the old (draining) generation?
@@ -397,7 +557,23 @@ impl KvStore {
         self.cas_counter
     }
 
-    /// Insert a brand-new item (caller ensured the key is absent).
+    /// Resolve an item's new CAS: an explicit override (the meta `E`
+    /// flag) advances the counter past itself so later items stay
+    /// unique; otherwise take the next counter value.
+    fn resolve_cas(&mut self, cas_override: Option<u64>) -> u64 {
+        match cas_override {
+            Some(c) => {
+                self.cas_counter = self.cas_counter.max(c);
+                c
+            }
+            None => self.next_cas(),
+        }
+    }
+
+    /// Insert a brand-new item (caller ensured the key is absent) and
+    /// return its CAS. `cas_override` stores an explicit CAS value (the
+    /// meta `E` flag); the counter is advanced past it so later items
+    /// stay unique.
     fn insert_new(
         &mut self,
         key: &[u8],
@@ -405,13 +581,14 @@ impl KvStore {
         value: &[u8],
         flags: u32,
         exptime_abs: u32,
-    ) -> Result<(), StoreError> {
+        cas_override: Option<u64>,
+    ) -> Result<u64, StoreError> {
         let total = total_item_size(key.len(), value.len(), self.use_cas);
         let handle = self.alloc_with_eviction(total)?;
         let chunk = self.alloc.chunk_mut(handle);
         chunk[..key.len()].copy_from_slice(key);
         chunk[key.len()..key.len() + value.len()].copy_from_slice(value);
-        let cas = self.next_cas();
+        let cas = self.resolve_cas(cas_override);
         let id = self.arena.insert(ItemMeta {
             hash,
             handle,
@@ -434,15 +611,21 @@ impl KvStore {
         if let Some(obs) = &self.observer {
             obs.observe(total);
         }
-        Ok(())
+        Ok(cas)
     }
 
     /// Replace the value bytes of an existing item, reallocating across
     /// classes when the new total no longer fits the current chunk.
     /// Items still in the old (draining) generation are migrated to the
     /// current geometry by any rewrite, so every mutation makes drain
-    /// progress.
-    fn replace_value_bytes(&mut self, id: u32, new_value: &[u8]) -> Result<(), StoreError> {
+    /// progress. Returns the item's new CAS (`cas_override` = the meta
+    /// `E` flag).
+    fn replace_value_bytes(
+        &mut self,
+        id: u32,
+        new_value: &[u8],
+        cas_override: Option<u64>,
+    ) -> Result<u64, StoreError> {
         let (handle, klen, old_total, item_gen) = {
             let m = self.arena.get(id);
             (m.handle, m.klen as usize, m.total as usize, m.gen)
@@ -506,7 +689,7 @@ impl KvStore {
                 self.arena.get_mut(id).handle = new_handle;
             }
         }
-        let cas = self.next_cas();
+        let cas = self.resolve_cas(cas_override);
         let m = self.arena.get_mut(id);
         m.vlen = new_value.len() as u32;
         m.total = new_total as u32;
@@ -515,10 +698,87 @@ impl KvStore {
         if let Some(obs) = &self.observer {
             obs.observe(new_total);
         }
-        Ok(())
+        Ok(cas)
     }
 
     // ----------------------------------------------------------- operations
+
+    /// The unified storage primitive both protocol dialects execute:
+    /// mode-gated store with optional CAS guard and explicit CAS value.
+    /// The classic verbs (`set`/`add`/`replace`/`cas`/`append`/
+    /// `prepend`) are thin wrappers over this.
+    pub fn meta_set(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        opts: &MetaSetOpts,
+    ) -> Result<SetOutcome, StoreError> {
+        if !key_ok(key, opts.binary_key) {
+            return Err(StoreError::BadKey);
+        }
+        self.stats.cmd_set += 1;
+        let hash = hash_key(key);
+        let existing = self.find_live(key, hash);
+        match opts.mode {
+            StoreMode::Add => {
+                if existing.is_some() {
+                    return Ok(SetOutcome::NotStored);
+                }
+            }
+            StoreMode::Replace => {
+                if existing.is_none() {
+                    return Ok(SetOutcome::NotStored);
+                }
+            }
+            StoreMode::Append | StoreMode::Prepend => {
+                let Some(id) = existing else {
+                    return Ok(SetOutcome::NotStored);
+                };
+                if let Some(c) = opts.cas_compare {
+                    if self.arena.get(id).cas != c {
+                        self.stats.cas_badval += 1;
+                        return Ok(SetOutcome::Exists);
+                    }
+                    self.stats.cas_hits += 1;
+                }
+                let (klen, vlen) = {
+                    let m = self.arena.get(id);
+                    (m.klen as usize, m.vlen as usize)
+                };
+                let old = self.item_chunk(self.arena.get(id))[klen..klen + vlen].to_vec();
+                let mut merged = Vec::with_capacity(old.len() + value.len());
+                if opts.mode == StoreMode::Append {
+                    merged.extend_from_slice(&old);
+                    merged.extend_from_slice(value);
+                } else {
+                    merged.extend_from_slice(value);
+                    merged.extend_from_slice(&old);
+                }
+                let cas = self.replace_value_bytes(id, &merged, opts.cas_set)?;
+                return Ok(SetOutcome::Stored { cas });
+            }
+            StoreMode::Set => {}
+        }
+        if let Some(c) = opts.cas_compare {
+            match existing {
+                None => {
+                    self.stats.cas_misses += 1;
+                    return Ok(SetOutcome::NotFound);
+                }
+                Some(id) if self.arena.get(id).cas != c => {
+                    self.stats.cas_badval += 1;
+                    return Ok(SetOutcome::Exists);
+                }
+                Some(_) => self.stats.cas_hits += 1,
+            }
+        }
+        let exptime = self.normalize_exptime(opts.exptime);
+        if let Some(id) = existing {
+            self.unlink_and_free(id, hash);
+        }
+        let cas = self.insert_new(key, hash, value, opts.flags, exptime, opts.cas_set)?;
+        Ok(SetOutcome::Stored { cas })
+    }
 
     /// `set`: unconditional store.
     pub fn set(
@@ -528,16 +788,8 @@ impl KvStore {
         flags: u32,
         exptime: u32,
     ) -> Result<(), StoreError> {
-        if !key_is_valid(key) {
-            return Err(StoreError::BadKey);
-        }
-        self.stats.cmd_set += 1;
-        let hash = hash_key(key);
-        let exptime = self.normalize_exptime(exptime);
-        if let Some(id) = self.find_live(key, hash) {
-            self.unlink_and_free(id, hash);
-        }
-        self.insert_new(key, hash, value, flags, exptime)
+        self.meta_set(key, value, &MetaSetOpts::set(flags, exptime))
+            .map(|_| ())
     }
 
     /// `add`: store only if absent. Returns false when the key exists.
@@ -548,17 +800,14 @@ impl KvStore {
         flags: u32,
         exptime: u32,
     ) -> Result<bool, StoreError> {
-        if !key_is_valid(key) {
-            return Err(StoreError::BadKey);
-        }
-        self.stats.cmd_set += 1;
-        let hash = hash_key(key);
-        if self.find_live(key, hash).is_some() {
-            return Ok(false);
-        }
-        let exptime = self.normalize_exptime(exptime);
-        self.insert_new(key, hash, value, flags, exptime)?;
-        Ok(true)
+        let opts = MetaSetOpts {
+            mode: StoreMode::Add,
+            ..MetaSetOpts::set(flags, exptime)
+        };
+        Ok(matches!(
+            self.meta_set(key, value, &opts)?,
+            SetOutcome::Stored { .. }
+        ))
     }
 
     /// `replace`: store only if present. Returns false when absent.
@@ -569,21 +818,14 @@ impl KvStore {
         flags: u32,
         exptime: u32,
     ) -> Result<bool, StoreError> {
-        if !key_is_valid(key) {
-            return Err(StoreError::BadKey);
-        }
-        self.stats.cmd_set += 1;
-        let hash = hash_key(key);
-        if self.find_live(key, hash).is_none() {
-            return Ok(false);
-        }
-        let exptime = self.normalize_exptime(exptime);
-        // full replace: drop + insert (flags/exptime reset like memcached)
-        if let Some(id) = self.find_live(key, hash) {
-            self.unlink_and_free(id, hash);
-        }
-        self.insert_new(key, hash, value, flags, exptime)?;
-        Ok(true)
+        let opts = MetaSetOpts {
+            mode: StoreMode::Replace,
+            ..MetaSetOpts::set(flags, exptime)
+        };
+        Ok(matches!(
+            self.meta_set(key, value, &opts)?,
+            SetOutcome::Stored { .. }
+        ))
     }
 
     /// `cas`: store if the token matches.
@@ -595,28 +837,15 @@ impl KvStore {
         exptime: u32,
         cas: u64,
     ) -> Result<CasResult, StoreError> {
-        if !key_is_valid(key) {
-            return Err(StoreError::BadKey);
-        }
-        self.stats.cmd_set += 1;
-        let hash = hash_key(key);
-        match self.find_live(key, hash) {
-            None => {
-                self.stats.cas_misses += 1;
-                Ok(CasResult::NotFound)
-            }
-            Some(id) if self.arena.get(id).cas != cas => {
-                self.stats.cas_badval += 1;
-                Ok(CasResult::Exists)
-            }
-            Some(id) => {
-                self.stats.cas_hits += 1;
-                self.unlink_and_free(id, hash);
-                let exptime = self.normalize_exptime(exptime);
-                self.insert_new(key, hash, value, flags, exptime)?;
-                Ok(CasResult::Stored)
-            }
-        }
+        let opts = MetaSetOpts {
+            cas_compare: Some(cas),
+            ..MetaSetOpts::set(flags, exptime)
+        };
+        Ok(match self.meta_set(key, value, &opts)? {
+            SetOutcome::Stored { .. } => CasResult::Stored,
+            SetOutcome::Exists => CasResult::Exists,
+            SetOutcome::NotFound | SetOutcome::NotStored => CasResult::NotFound,
+        })
     }
 
     /// `append`/`prepend`. Returns false when the key is absent.
@@ -626,29 +855,18 @@ impl KvStore {
         data: &[u8],
         append: bool,
     ) -> Result<bool, StoreError> {
-        if !key_is_valid(key) {
-            return Err(StoreError::BadKey);
-        }
-        self.stats.cmd_set += 1;
-        let hash = hash_key(key);
-        let Some(id) = self.find_live(key, hash) else {
-            return Ok(false);
+        let opts = MetaSetOpts {
+            mode: if append {
+                StoreMode::Append
+            } else {
+                StoreMode::Prepend
+            },
+            ..MetaSetOpts::set(0, 0)
         };
-        let (klen, vlen) = {
-            let m = self.arena.get(id);
-            (m.klen as usize, m.vlen as usize)
-        };
-        let old = self.item_chunk(self.arena.get(id))[klen..klen + vlen].to_vec();
-        let mut merged = Vec::with_capacity(old.len() + data.len());
-        if append {
-            merged.extend_from_slice(&old);
-            merged.extend_from_slice(data);
-        } else {
-            merged.extend_from_slice(data);
-            merged.extend_from_slice(&old);
-        }
-        self.replace_value_bytes(id, &merged)?;
-        Ok(true)
+        Ok(matches!(
+            self.meta_set(key, data, &opts)?,
+            SetOutcome::Stored { .. }
+        ))
     }
 
     /// `get`/`gets` (allocating convenience wrapper over [`get_with`]).
@@ -687,18 +905,9 @@ impl KvStore {
         }))
     }
 
-    /// Read-only probe for the concurrent fast path: looks the key up
-    /// and, when the item is live and was accessed within
-    /// [`TOUCH_INTERVAL`], runs `f` over its bytes without touching any
-    /// store state — callable under a shared (read) lock. Expired or
-    /// recency-stale items report [`PeekOutcome::NeedsWrite`] and the
-    /// caller falls back to [`get_with`] under an exclusive lock.
-    ///
-    /// Does NOT count stats (no `&mut`); callers account fast-path
-    /// reads themselves (see `ShardedStore`).
-    ///
-    /// [`get_with`]: KvStore::get_with
-    pub fn peek<R, F: FnMut(ValueRef<'_>) -> R>(&self, key: &[u8], f: &mut F) -> PeekOutcome<R> {
+    /// Shared lookup for the read-only probes: `Hit` only when the item
+    /// is live, unexpired, and recently bumped.
+    fn peek_find(&self, key: &[u8]) -> PeekOutcome<u32> {
         let hash = hash_key(key);
         let found = self.table.find(hash, &self.arena, |id| {
             let m = self.arena.get(id);
@@ -715,28 +924,235 @@ impl KvStore {
         if self.clock.now().saturating_sub(m.time) >= TOUCH_INTERVAL {
             return PeekOutcome::NeedsWrite; // write path bumps the LRU
         }
-        let chunk = self.item_chunk(m);
-        PeekOutcome::Hit(f(ValueRef {
-            data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
-            flags: m.flags,
-            cas: m.cas,
-        }))
+        PeekOutcome::Hit(id)
+    }
+
+    /// Read-only probe for the concurrent fast path: looks the key up
+    /// and, when the item is live and was accessed within
+    /// [`TOUCH_INTERVAL`], runs `f` over its bytes without touching any
+    /// store state — callable under a shared (read) lock. Expired or
+    /// recency-stale items report [`PeekOutcome::NeedsWrite`] and the
+    /// caller falls back to [`get_with`] under an exclusive lock.
+    ///
+    /// Does NOT count stats (no `&mut`); callers account fast-path
+    /// reads themselves (see `ShardedStore`).
+    ///
+    /// [`get_with`]: KvStore::get_with
+    pub fn peek<R, F: FnMut(ValueRef<'_>) -> R>(&self, key: &[u8], f: &mut F) -> PeekOutcome<R> {
+        match self.peek_find(key) {
+            PeekOutcome::Miss => PeekOutcome::Miss,
+            PeekOutcome::NeedsWrite => PeekOutcome::NeedsWrite,
+            PeekOutcome::Hit(id) => {
+                let m = self.arena.get(id);
+                let chunk = self.item_chunk(m);
+                PeekOutcome::Hit(f(ValueRef {
+                    data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
+                    flags: m.flags,
+                    cas: m.cas,
+                }))
+            }
+        }
+    }
+
+    /// [`peek`](KvStore::peek) with per-hit metadata (remaining TTL) —
+    /// the meta `mg` read fast path. Same contract: read-only,
+    /// stat-free, `NeedsWrite` when serving would require mutation.
+    pub fn peek_meta<R, F: FnMut(ValueRef<'_>, MetaHit) -> R>(
+        &self,
+        key: &[u8],
+        f: &mut F,
+    ) -> PeekOutcome<R> {
+        match self.peek_find(key) {
+            PeekOutcome::Miss => PeekOutcome::Miss,
+            PeekOutcome::NeedsWrite => PeekOutcome::NeedsWrite,
+            PeekOutcome::Hit(id) => {
+                let m = self.arena.get(id);
+                let chunk = self.item_chunk(m);
+                let hit = MetaHit {
+                    ttl: self.ttl_of(m),
+                    won: false,
+                };
+                PeekOutcome::Hit(f(
+                    ValueRef {
+                        data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
+                        flags: m.flags,
+                        cas: m.cas,
+                    },
+                    hit,
+                ))
+            }
+        }
+    }
+
+    /// Meta retrieval under the write lock: full get semantics plus the
+    /// flag-driven extras — [`MetaGetOpts::touch`] refreshes the TTL on
+    /// hit (touch-on-read, also classic `gat`), [`MetaGetOpts::vivify`]
+    /// creates an empty item on miss and serves it as a "won" hit
+    /// (`mg ... N`). `Ok(None)` is a plain miss; `Err` surfaces a
+    /// failed vivify allocation (the client must not mistake memory
+    /// exhaustion for a miss).
+    pub fn meta_get<R, F: FnOnce(ValueRef<'_>, MetaHit) -> R>(
+        &mut self,
+        key: &[u8],
+        opts: &MetaGetOpts,
+        f: F,
+    ) -> Result<Option<R>, StoreError> {
+        self.stats.cmd_get += 1;
+        let hash = hash_key(key);
+        if let Some(id) = self.find_live(key, hash) {
+            self.stats.get_hits += 1;
+            let old = self.touch_lru(id);
+            let now = self.clock.now();
+            self.arena.get_mut(id).time = now;
+            if let Some(t) = opts.touch {
+                let exp = self.normalize_exptime(t);
+                self.arena.get_mut(id).exptime = exp;
+                self.stats.touch_hits += 1;
+            }
+            let m = self.arena.get(id);
+            let hit = MetaHit {
+                ttl: self.ttl_of(m),
+                won: false,
+            };
+            let chunk = self.alloc.chunk_gen(old, m.handle);
+            return Ok(Some(f(
+                ValueRef {
+                    data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
+                    flags: m.flags,
+                    cas: m.cas,
+                },
+                hit,
+            )));
+        }
+        self.stats.get_misses += 1;
+        if opts.touch.is_some() {
+            self.stats.touch_misses += 1;
+        }
+        let Some(ttl) = opts.vivify else {
+            return Ok(None);
+        };
+        if !key_ok(key, opts.binary_key) {
+            return Ok(None); // unviable vivify: report the plain miss
+        }
+        let exp = self.normalize_exptime(ttl);
+        self.stats.cmd_set += 1;
+        self.insert_new(key, hash, b"", 0, exp, opts.vivify_cas)?;
+        // an absolute-past vivify TTL creates an already-expired item;
+        // find_live reclaims it and the request reports a plain miss
+        let Some(id) = self.find_live(key, hash) else {
+            return Ok(None);
+        };
+        let m = self.arena.get(id);
+        let hit = MetaHit {
+            ttl: self.ttl_of(m),
+            won: true,
+        };
+        let chunk = self.alloc.chunk_gen(false, m.handle);
+        Ok(Some(f(
+            ValueRef {
+                data: &chunk[m.klen as usize..m.klen as usize + m.vlen as usize],
+                flags: m.flags,
+                cas: m.cas,
+            },
+            hit,
+        )))
+    }
+
+    /// CAS-guarded delete — classic `delete` (no guard) and meta `md`
+    /// (`C` flag) share this primitive.
+    pub fn delete_cas(&mut self, key: &[u8], cas: Option<u64>) -> DeleteOutcome {
+        let hash = hash_key(key);
+        match self.find_live(key, hash) {
+            Some(id) => {
+                if let Some(c) = cas {
+                    if self.arena.get(id).cas != c {
+                        self.stats.cas_badval += 1;
+                        return DeleteOutcome::Exists;
+                    }
+                }
+                self.unlink_and_free(id, hash);
+                self.stats.delete_hits += 1;
+                DeleteOutcome::Deleted
+            }
+            None => {
+                self.stats.delete_misses += 1;
+                DeleteOutcome::NotFound
+            }
+        }
     }
 
     /// `delete`. Returns true when the key existed.
     pub fn delete(&mut self, key: &[u8]) -> bool {
+        matches!(self.delete_cas(key, None), DeleteOutcome::Deleted)
+    }
+
+    /// The unified arithmetic primitive: CAS-guarded, optionally
+    /// vivifying incr/decr. Classic `incr`/`decr` and meta `ma` both
+    /// execute this.
+    pub fn arith(&mut self, key: &[u8], opts: &ArithOpts) -> Result<ArithOutcome, StoreError> {
         let hash = hash_key(key);
-        match self.find_live(key, hash) {
-            Some(id) => {
-                self.unlink_and_free(id, hash);
-                self.stats.delete_hits += 1;
-                true
+        let Some(id) = self.find_live(key, hash) else {
+            if let Some((ttl, init)) = opts.vivify {
+                if key_ok(key, opts.binary_key) {
+                    let exp = self.normalize_exptime(ttl);
+                    self.stats.cmd_set += 1;
+                    let repr = init.to_string();
+                    let cas =
+                        self.insert_new(key, hash, repr.as_bytes(), 0, exp, opts.cas_set)?;
+                    if opts.incr {
+                        self.stats.incr_hits += 1;
+                    } else {
+                        self.stats.decr_hits += 1;
+                    }
+                    return Ok(ArithOutcome::Value {
+                        value: init,
+                        ttl: self.ttl_from_exp(exp),
+                        cas,
+                    });
+                }
             }
-            None => {
-                self.stats.delete_misses += 1;
-                false
+            if opts.incr {
+                self.stats.incr_misses += 1;
+            } else {
+                self.stats.decr_misses += 1;
+            }
+            return Ok(ArithOutcome::NotFound);
+        };
+        if let Some(c) = opts.cas_compare {
+            if self.arena.get(id).cas != c {
+                self.stats.cas_badval += 1;
+                return Ok(ArithOutcome::Exists);
             }
         }
+        let (klen, vlen) = {
+            let m = self.arena.get(id);
+            (m.klen as usize, m.vlen as usize)
+        };
+        let bytes = &self.item_chunk(self.arena.get(id))[klen..klen + vlen];
+        let text = std::str::from_utf8(bytes).map_err(|_| StoreError::NonNumeric)?;
+        let current: u64 = text.trim_end().parse().map_err(|_| StoreError::NonNumeric)?;
+        let next = if opts.incr {
+            current.wrapping_add(opts.delta)
+        } else {
+            current.saturating_sub(opts.delta)
+        };
+        let repr = next.to_string();
+        let cas = self.replace_value_bytes(id, repr.as_bytes(), opts.cas_set)?;
+        if let Some(t) = opts.new_ttl {
+            let exp = self.normalize_exptime(t);
+            self.arena.get_mut(id).exptime = exp;
+        }
+        if opts.incr {
+            self.stats.incr_hits += 1;
+        } else {
+            self.stats.decr_hits += 1;
+        }
+        let ttl = self.ttl_of(self.arena.get(id));
+        Ok(ArithOutcome::Value {
+            value: next,
+            ttl,
+            cas,
+        })
     }
 
     /// `incr`/`decr`. `Ok(None)` = not found.
@@ -746,35 +1162,12 @@ impl KvStore {
         delta: u64,
         incr: bool,
     ) -> Result<Option<u64>, StoreError> {
-        let hash = hash_key(key);
-        let Some(id) = self.find_live(key, hash) else {
-            if incr {
-                self.stats.incr_misses += 1;
-            } else {
-                self.stats.decr_misses += 1;
-            }
-            return Ok(None);
-        };
-        let (klen, vlen) = {
-            let m = self.arena.get(id);
-            (m.klen as usize, m.vlen as usize)
-        };
-        let bytes = &self.item_chunk(self.arena.get(id))[klen..klen + vlen];
-        let text = std::str::from_utf8(bytes).map_err(|_| StoreError::NonNumeric)?;
-        let current: u64 = text.trim_end().parse().map_err(|_| StoreError::NonNumeric)?;
-        let next = if incr {
-            current.wrapping_add(delta)
-        } else {
-            current.saturating_sub(delta)
-        };
-        let repr = next.to_string();
-        self.replace_value_bytes(id, repr.as_bytes())?;
-        if incr {
-            self.stats.incr_hits += 1;
-        } else {
-            self.stats.decr_hits += 1;
-        }
-        Ok(Some(next))
+        Ok(
+            match self.arith(key, &ArithOpts::classic(delta, incr))? {
+                ArithOutcome::Value { value, .. } => Some(value),
+                ArithOutcome::NotFound | ArithOutcome::Exists => None,
+            },
+        )
     }
 
     /// `touch`: refresh expiry. Returns true when the key existed.
@@ -793,6 +1186,12 @@ impl KvStore {
                 false
             }
         }
+    }
+
+    /// `stats reset`: zero the cumulative operation counters
+    /// (memcached parity — gauges like item counts are untouched).
+    pub fn reset_stats(&mut self) {
+        self.stats = StoreStats::default();
     }
 
     /// `flush_all` (eager variant: reclaims immediately).
@@ -1196,5 +1595,307 @@ mod tests {
         s.set(b"abc", b"12345", 0, 0).unwrap();
         let want = total_item_size(3, 5, true);
         assert_eq!(*rec.0.lock().unwrap(), vec![want]);
+    }
+
+    // --------------------------------------------- meta-store surface
+
+    #[test]
+    fn meta_set_returns_cas_and_honors_explicit_cas() {
+        let mut s = store(8 << 20);
+        let SetOutcome::Stored { cas } = s.meta_set(b"k", b"v", &MetaSetOpts::set(0, 0)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(s.get(b"k").unwrap().cas, cas);
+        // explicit CAS (meta E flag) sticks and future items stay unique
+        let opts = MetaSetOpts {
+            cas_set: Some(1000),
+            ..MetaSetOpts::set(0, 0)
+        };
+        let SetOutcome::Stored { cas } = s.meta_set(b"e", b"v", &opts).unwrap() else {
+            panic!()
+        };
+        assert_eq!(cas, 1000);
+        assert_eq!(s.get(b"e").unwrap().cas, 1000);
+        let SetOutcome::Stored { cas } = s.meta_set(b"f", b"v", &MetaSetOpts::set(0, 0)).unwrap()
+        else {
+            panic!()
+        };
+        assert!(cas > 1000, "counter advanced past the override");
+    }
+
+    #[test]
+    fn meta_set_cas_guarded_concat() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"mid", 0, 0).unwrap();
+        let cas = s.get(b"k").unwrap().cas;
+        let bad = MetaSetOpts {
+            mode: StoreMode::Append,
+            cas_compare: Some(cas + 1),
+            ..MetaSetOpts::set(0, 0)
+        };
+        assert_eq!(s.meta_set(b"k", b"-x", &bad).unwrap(), SetOutcome::Exists);
+        assert_eq!(s.get(b"k").unwrap().value, b"mid");
+        let good = MetaSetOpts {
+            mode: StoreMode::Append,
+            cas_compare: Some(cas),
+            ..MetaSetOpts::set(0, 0)
+        };
+        assert!(matches!(
+            s.meta_set(b"k", b"-end", &good).unwrap(),
+            SetOutcome::Stored { .. }
+        ));
+        assert_eq!(s.get(b"k").unwrap().value, b"mid-end");
+    }
+
+    #[test]
+    fn meta_set_binary_key_gate() {
+        let mut s = store(8 << 20);
+        let key = b"has space\x01";
+        // text-protocol rules reject it...
+        assert_eq!(
+            s.meta_set(key, b"v", &MetaSetOpts::set(0, 0)),
+            Err(StoreError::BadKey)
+        );
+        // ...the binary (base64-sourced) gate accepts it
+        let opts = MetaSetOpts {
+            binary_key: true,
+            ..MetaSetOpts::set(0, 0)
+        };
+        assert!(matches!(
+            s.meta_set(key, b"v", &opts).unwrap(),
+            SetOutcome::Stored { .. }
+        ));
+        assert_eq!(s.get(key).unwrap().value, b"v");
+        // length bound still applies
+        assert_eq!(
+            s.meta_set(&[b'k'; 251], b"v", &opts),
+            Err(StoreError::BadKey)
+        );
+    }
+
+    #[test]
+    fn delete_cas_guard() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        let cas = s.get(b"k").unwrap().cas;
+        assert_eq!(s.delete_cas(b"k", Some(cas + 1)), DeleteOutcome::Exists);
+        assert!(s.get(b"k").is_some(), "mismatch must not delete");
+        assert_eq!(s.delete_cas(b"k", Some(cas)), DeleteOutcome::Deleted);
+        assert_eq!(s.delete_cas(b"k", None), DeleteOutcome::NotFound);
+    }
+
+    #[test]
+    fn arith_vivify_and_cas() {
+        let mut s = store(8 << 20);
+        // vivify on miss with initial value
+        let opts = ArithOpts {
+            vivify: Some((60, 5)),
+            ..ArithOpts::classic(3, true)
+        };
+        match s.arith(b"n", &opts).unwrap() {
+            ArithOutcome::Value { value: 5, ttl, cas } => {
+                assert!((1..=60).contains(&ttl), "{ttl}");
+                assert!(cas > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.get(b"n").unwrap().value, b"5");
+        // second call hits and applies the delta
+        match s.arith(b"n", &opts).unwrap() {
+            ArithOutcome::Value { value: 8, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // CAS guard
+        let cas = s.get(b"n").unwrap().cas;
+        let guarded = ArithOpts {
+            cas_compare: Some(cas + 1),
+            ..ArithOpts::classic(1, true)
+        };
+        assert_eq!(s.arith(b"n", &guarded).unwrap(), ArithOutcome::Exists);
+        assert_eq!(s.get(b"n").unwrap().value, b"8");
+        // no vivify: plain miss
+        assert_eq!(
+            s.arith(b"absent", &ArithOpts::classic(1, true)).unwrap(),
+            ArithOutcome::NotFound
+        );
+    }
+
+    #[test]
+    fn arith_new_ttl_refreshes_expiry() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"n", b"1", 0, 30).unwrap();
+        let opts = ArithOpts {
+            new_ttl: Some(300),
+            ..ArithOpts::classic(1, true)
+        };
+        match s.arith(b"n", &opts).unwrap() {
+            ArithOutcome::Value { value: 2, ttl, .. } => assert_eq!(ttl, 300),
+            other => panic!("{other:?}"),
+        }
+        cell.store(1_000_100, Ordering::Relaxed);
+        assert!(s.get(b"n").is_some(), "TTL refreshed past old expiry");
+    }
+
+    /// `MetaGetOpts` shorthand for the tests below.
+    fn mg_opts(touch: Option<u32>, vivify: Option<u32>) -> MetaGetOpts {
+        MetaGetOpts {
+            touch,
+            vivify,
+            ..MetaGetOpts::default()
+        }
+    }
+
+    #[test]
+    fn meta_get_reports_ttl_and_touches() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"v", 3, 100).unwrap();
+        // plain meta get: ttl reported, untouched
+        let hit = s.meta_get(b"k", &mg_opts(None, None), |v, h| {
+            assert_eq!(v.data, b"v");
+            assert_eq!(v.flags, 3);
+            h
+        });
+        let hit = hit.unwrap().unwrap();
+        assert_eq!(hit.ttl, 100);
+        assert!(!hit.won);
+        // touch-on-read rewrites the TTL
+        let hit = s
+            .meta_get(b"k", &mg_opts(Some(500), None), |_, h| h)
+            .unwrap()
+            .unwrap();
+        assert_eq!(hit.ttl, 500);
+        assert_eq!(s.stats().touch_hits, 1);
+        cell.store(1_000_200, Ordering::Relaxed);
+        assert!(s.get(b"k").is_some(), "survives old expiry after touch");
+        // unlimited TTL renders -1
+        s.set(b"e", b"v", 0, 0).unwrap();
+        assert_eq!(
+            s.meta_get(b"e", &mg_opts(None, None), |_, h| h.ttl).unwrap(),
+            Some(-1)
+        );
+    }
+
+    #[test]
+    fn meta_get_vivify_creates_empty_item() {
+        let mut s = store(8 << 20);
+        let hit = s
+            .meta_get(b"fresh", &mg_opts(None, Some(60)), |v, h| {
+                assert_eq!(v.data, b"");
+                h
+            })
+            .unwrap()
+            .unwrap();
+        assert!(hit.won);
+        assert!((1..=60).contains(&hit.ttl), "{}", hit.ttl);
+        // the item is real: classic get sees it, second meta get is not won
+        assert_eq!(s.get(b"fresh").unwrap().value, b"");
+        let hit = s
+            .meta_get(b"fresh", &mg_opts(None, Some(60)), |_, h| h)
+            .unwrap()
+            .unwrap();
+        assert!(!hit.won);
+        // plain miss without vivify
+        assert!(s
+            .meta_get(b"gone", &mg_opts(None, None), |_, h| h)
+            .unwrap()
+            .is_none());
+        // explicit CAS on a vivified insert (mg E)
+        let opts = MetaGetOpts {
+            vivify: Some(60),
+            vivify_cas: Some(7777),
+            ..MetaGetOpts::default()
+        };
+        let cas = s
+            .meta_get(b"lease", &opts, |v, _| v.cas)
+            .unwrap()
+            .unwrap();
+        assert_eq!(cas, 7777);
+    }
+
+    #[test]
+    fn meta_get_vivify_oom_surfaces_error() {
+        // two 4 KiB pages, both filled by the big class: a vivify into
+        // the small class has no page and nothing to evict — the
+        // client must see an error, not a plain miss
+        let mut s = KvStore::new(
+            ChunkSizePolicy::Explicit(vec![96, 4000]),
+            4096,
+            8192,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        s.set(b"big1", &vec![b'x'; 3000], 0, 0).unwrap();
+        s.set(b"big2", &vec![b'x'; 3000], 0, 0).unwrap();
+        match s.meta_get(b"small", &mg_opts(None, Some(60)), |_, h| h) {
+            Err(StoreError::OutOfMemory) => {}
+            other => panic!("expected OutOfMemory, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_cas_threads_through_concat_and_arith() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"mid", 0, 0).unwrap();
+        let opts = MetaSetOpts {
+            mode: StoreMode::Append,
+            cas_set: Some(500),
+            ..MetaSetOpts::set(0, 0)
+        };
+        assert_eq!(
+            s.meta_set(b"k", b"-end", &opts).unwrap(),
+            SetOutcome::Stored { cas: 500 }
+        );
+        assert_eq!(s.get(b"k").unwrap().cas, 500);
+        s.set(b"n", b"1", 0, 0).unwrap();
+        let opts = ArithOpts {
+            cas_set: Some(900),
+            ..ArithOpts::classic(1, true)
+        };
+        match s.arith(b"n", &opts).unwrap() {
+            ArithOutcome::Value { value: 2, cas: 900, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.get(b"n").unwrap().cas, 900);
+    }
+
+    #[test]
+    fn peek_meta_matches_peek_gating() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"hello", 7, 0).unwrap();
+        match s.peek_meta(b"k", &mut |v: ValueRef<'_>, h: MetaHit| (v.flags, h.ttl)) {
+            PeekOutcome::Hit((7, -1)) => {}
+            _ => panic!("expected hit"),
+        }
+        assert!(matches!(
+            s.peek_meta(b"nope", &mut |_: ValueRef<'_>, _| ()),
+            PeekOutcome::Miss
+        ));
+        cell.store(1_000_000 + TOUCH_INTERVAL as u64, Ordering::Relaxed);
+        assert!(matches!(
+            s.peek_meta(b"k", &mut |_: ValueRef<'_>, _| ()),
+            PeekOutcome::NeedsWrite
+        ));
+    }
+
+    #[test]
+    fn reset_stats_zeroes_counters_not_items() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        s.get(b"k");
+        s.get(b"missing");
+        assert!(s.stats().cmd_get > 0);
+        s.reset_stats();
+        assert_eq!(s.stats().cmd_get, 0);
+        assert_eq!(s.stats().cmd_set, 0);
+        assert_eq!(s.len(), 1, "items survive a stats reset");
+        assert_eq!(s.get(b"k").unwrap().value, b"v");
     }
 }

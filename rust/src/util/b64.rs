@@ -1,0 +1,130 @@
+//! Standard base64 (RFC 4648, `+/` alphabet) — the meta protocol's `b`
+//! flag transmits binary-safe keys as base64 tokens. Decode writes into
+//! a caller-provided buffer so the request hot path stays
+//! allocation-free; encode allocates and is only used by clients and
+//! tests.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+#[inline]
+fn sextet(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode `input` (padding optional) into `out`; returns the decoded
+/// length. `Err(())` on an invalid character, bad length, or when the
+/// decoded form does not fit `out`.
+pub fn decode(input: &[u8], out: &mut [u8]) -> Result<usize, ()> {
+    let body = match input {
+        [head @ .., b'=', b'='] => head,
+        [head @ .., b'='] => head,
+        _ => input,
+    };
+    if body.len() % 4 == 1 {
+        return Err(()); // 6 leftover bits can never form a byte
+    }
+    let mut n = 0usize;
+    let mut acc = 0u32;
+    let mut bits = 0u32;
+    for &c in body {
+        let v = sextet(c).ok_or(())?;
+        acc = (acc << 6) | v;
+        bits += 6;
+        if bits >= 8 {
+            bits -= 8;
+            if n >= out.len() {
+                return Err(());
+            }
+            out[n] = (acc >> bits) as u8;
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
+/// Encode with padding (client-side convenience; allocates).
+pub fn encode(input: &[u8]) -> String {
+    let mut out = String::with_capacity(input.len().div_ceil(3) * 4);
+    for chunk in input.chunks(3) {
+        let b = [
+            chunk[0],
+            chunk.get(1).copied().unwrap_or(0),
+            chunk.get(2).copied().unwrap_or(0),
+        ];
+        let v = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(v >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[v as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(s: &[u8]) {
+        let enc = encode(s);
+        let mut buf = [0u8; 300];
+        let n = decode(enc.as_bytes(), &mut buf).unwrap();
+        assert_eq!(&buf[..n], s, "roundtrip {s:?} via {enc}");
+    }
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(encode(b""), "");
+        assert_eq!(encode(b"f"), "Zg==");
+        assert_eq!(encode(b"fo"), "Zm8=");
+        assert_eq!(encode(b"foo"), "Zm9v");
+        assert_eq!(encode(b"foob"), "Zm9vYg==");
+        assert_eq!(encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn decode_padded_and_unpadded() {
+        let mut buf = [0u8; 16];
+        assert_eq!(decode(b"Zm9v", &mut buf).unwrap(), 3);
+        assert_eq!(&buf[..3], b"foo");
+        assert_eq!(decode(b"Zm8=", &mut buf).unwrap(), 2);
+        assert_eq!(&buf[..2], b"fo");
+        assert_eq!(decode(b"Zm8", &mut buf).unwrap(), 2);
+        assert_eq!(&buf[..2], b"fo");
+        assert_eq!(decode(b"", &mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let mut buf = [0u8; 16];
+        assert!(decode(b"a b c", &mut buf).is_err()); // whitespace
+        assert!(decode(b"Zm!v", &mut buf).is_err()); // invalid char
+        assert!(decode(b"A", &mut buf).is_err()); // impossible length
+        let mut tiny = [0u8; 1];
+        assert!(decode(b"Zm9v", &mut tiny).is_err()); // overflow
+    }
+
+    #[test]
+    fn binary_roundtrips() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"hello world");
+        roundtrip(&[0u8, 1, 2, 255, 13, 10, 127]);
+        roundtrip(&[0xde; 250]);
+    }
+}

@@ -8,25 +8,48 @@
 /// `Formatter` state machine and padding logic per integer. This digs
 /// digits into a stack buffer instead — no allocation, no `fmt`.
 #[inline]
-pub fn push_u64(out: &mut Vec<u8>, mut n: u64) {
-    // u64::MAX has 20 decimal digits
+pub fn push_u64(out: &mut Vec<u8>, n: u64) {
     let mut tmp = [0u8; 20];
-    let mut i = tmp.len();
+    let start = u64_digits(n, &mut tmp);
+    out.extend_from_slice(&tmp[start..]);
+}
+
+/// Render `n`'s decimal digits into the tail of `buf`, returning the
+/// start index (the digits occupy `buf[start..]`). Shared by
+/// [`push_u64`] and callers that need the byte count before the bytes
+/// (the meta `VA <size>` arithmetic response).
+#[inline]
+pub fn u64_digits(n: u64, buf: &mut [u8; 20]) -> usize {
+    // u64::MAX has 20 decimal digits
+    let mut i = buf.len();
+    let mut x = n;
     loop {
         i -= 1;
-        tmp[i] = b'0' + (n % 10) as u8;
-        n /= 10;
-        if n == 0 {
+        buf[i] = b'0' + (x % 10) as u8;
+        x /= 10;
+        if x == 0 {
             break;
         }
     }
-    out.extend_from_slice(&tmp[i..]);
+    i
 }
 
 /// [`push_u64`] for `usize` operands (lengths, counts).
 #[inline]
 pub fn push_usize(out: &mut Vec<u8>, n: usize) {
     push_u64(out, n as u64);
+}
+
+/// Signed [`push_u64`] — the meta protocol's `t` (TTL) response flag
+/// renders `-1` for items that never expire.
+#[inline]
+pub fn push_i64(out: &mut Vec<u8>, n: i64) {
+    if n < 0 {
+        out.push(b'-');
+        push_u64(out, n.unsigned_abs());
+    } else {
+        push_u64(out, n as u64);
+    }
 }
 
 /// Format a byte count with binary units (`1.5 MiB`).
@@ -150,5 +173,14 @@ mod tests {
         let mut out = b"x ".to_vec();
         push_usize(&mut out, 42);
         assert_eq!(out, b"x 42");
+    }
+
+    #[test]
+    fn push_i64_matches_display() {
+        for n in [0i64, 1, -1, 42, -42, i64::MAX, i64::MIN] {
+            let mut out = Vec::new();
+            push_i64(&mut out, n);
+            assert_eq!(out, n.to_string().into_bytes(), "n={n}");
+        }
     }
 }

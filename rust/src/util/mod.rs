@@ -2,6 +2,7 @@
 //! reader (the image has no network, so no serde — see DESIGN.md §3
 //! substitutions), and human-readable formatting.
 
+pub mod b64;
 pub mod fmt;
 pub mod histogram;
 pub mod json;

@@ -118,6 +118,65 @@ fn multiget_steady_state_allocates_nothing() {
 }
 
 #[test]
+fn meta_get_hit_path_allocates_nothing() {
+    // the meta dialect must ride the same zero-alloc machinery as the
+    // classic fast path: in-place flag parse (no token vec), stack
+    // base64 decode, read-locked peek, direct response encode
+    let mut c = conn(4);
+    let mut out = Vec::with_capacity(64 * 1024);
+    c.on_bytes(b"ms hot 11 F3\r\nhello-world\r\n", &mut out);
+    assert!(String::from_utf8_lossy(&out).contains("HD"));
+
+    // plain mg with the full echo-flag set + base64-keyed mg (aG90 = "hot")
+    let req = b"mg hot v f c t s k Oabcd\r\nmg aG90 v b k\r\n";
+    for _ in 0..4 {
+        out.clear();
+        c.on_bytes(req, &mut out);
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("VA 11 f3"), "{t}");
+        assert!(t.contains("kaG90"), "{t}");
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1000 {
+        out.clear();
+        let done = c.on_bytes(req, &mut out);
+        assert_eq!(done, 2);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "meta get hit path performed {delta} heap allocations over 2000 requests"
+    );
+    assert!(String::from_utf8_lossy(&out).contains("hello-world"));
+}
+
+#[test]
+fn meta_quiet_miss_path_allocates_nothing() {
+    // pipelined quiet misses + mn barrier: the backbone of the
+    // meta_pipeline bench scenario must not allocate per miss
+    let mut c = conn(4);
+    let mut out = Vec::with_capacity(16 * 1024);
+    let req = b"mg absent-a v q\r\nmg absent-b v q\r\nmn\r\n";
+    for _ in 0..4 {
+        out.clear();
+        c.on_bytes(req, &mut out);
+        assert_eq!(String::from_utf8_lossy(&out), "MN\r\n");
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1000 {
+        out.clear();
+        let done = c.on_bytes(req, &mut out);
+        assert_eq!(done, 3);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "quiet miss pipeline performed {delta} heap allocations over 3000 commands"
+    );
+}
+
+#[test]
 fn set_path_allocation_is_bounded() {
     // sets are allowed to allocate (parsed command, arena/table growth)
     // but must not regress into per-byte or per-token explosions: the

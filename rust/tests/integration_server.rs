@@ -351,6 +351,154 @@ fn legacy_threaded_mode_over_the_wire() {
     handle.shutdown();
 }
 
+/// Acceptance: full meta round-trip over TCP — `ms` then `mg` with the
+/// `v f c t k O` echo-flag set.
+#[test]
+fn meta_roundtrip_over_tcp() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    let r = c.ms("mkey", b"hello", &["T60", "F9", "c", "k", "Oreq1"]).unwrap();
+    assert_eq!(r.code, "HD", "{r:?}");
+    let cas: u64 = r.flag('c').unwrap().parse().unwrap();
+    assert_eq!(r.flag('k'), Some("mkey"));
+    assert_eq!(r.flag('O'), Some("req1"));
+
+    let r = c.mg("mkey", &["v", "f", "c", "t", "k", "Oreq2"]).unwrap();
+    assert_eq!(r.code, "VA");
+    assert_eq!(r.data.as_deref(), Some(&b"hello"[..]));
+    assert_eq!(r.flag('f'), Some("9"));
+    assert_eq!(r.flag('c').unwrap().parse::<u64>().unwrap(), cas);
+    let ttl: i64 = r.flag('t').unwrap().parse().unwrap();
+    assert!((1..=60).contains(&ttl), "ttl {ttl}");
+    assert_eq!(r.flag('k'), Some("mkey"));
+    assert_eq!(r.flag('O'), Some("req2"));
+
+    // the same item is visible to the classic dialect
+    let v = c.gets("mkey").unwrap().unwrap();
+    assert_eq!(v.value, b"hello");
+    assert_eq!(v.flags, 9);
+    assert_eq!(v.cas, Some(cas));
+    handle.shutdown();
+}
+
+/// Acceptance: `q` suppresses quiet misses and successes; the `mn`
+/// barrier flushes exactly `MN\r\n` behind the surviving responses.
+#[test]
+fn meta_quiet_pipeline_with_mn_barrier() {
+    use std::io::{Read, Write};
+    let (handle, _) = full_server(u64::MAX);
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(
+        b"mg miss1 v q\r\nmg miss2 v q\r\nms qk 1 q\r\nx\r\nmg qk v q\r\nmd qk q\r\nmg qk v q\r\nmn\r\n",
+    )
+    .unwrap();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 4096];
+    while !String::from_utf8_lossy(&got).contains("MN\r\n") {
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "server closed early");
+        got.extend_from_slice(&buf[..n]);
+    }
+    // misses suppressed, quiet set/delete suppressed; only the hit and
+    // the barrier made it to the wire
+    assert_eq!(String::from_utf8_lossy(&got), "VA 1\r\nx\r\nMN\r\n");
+    handle.shutdown();
+}
+
+/// Acceptance: `T` touch-on-read is observable through the `t` TTL
+/// echo on subsequent reads.
+#[test]
+fn meta_touch_on_read_observable_via_ttl() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.ms("tk", b"v", &["T100"]).unwrap();
+    let r = c.mg("tk", &["t", "T5000"]).unwrap();
+    let ttl: i64 = r.flag('t').unwrap().parse().unwrap();
+    assert!((4995..=5000).contains(&ttl), "touch-on-read ttl {ttl}");
+    let r = c.mg("tk", &["t"]).unwrap();
+    let ttl: i64 = r.flag('t').unwrap().parse().unwrap();
+    assert!(ttl > 100, "touch persisted: {ttl}");
+    handle.shutdown();
+}
+
+/// Acceptance: `N` vivifies a miss into a real (empty) item and marks
+/// the winner with `W`.
+#[test]
+fn meta_vivify_creates_on_miss() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let r = c.mg("fresh", &["v", "t", "N60"]).unwrap();
+    assert_eq!(r.code, "VA");
+    assert_eq!(r.data.as_deref(), Some(&b""[..]));
+    assert!(r.flags.iter().any(|f| f == "W"), "winner flag: {r:?}");
+    let ttl: i64 = r.flag('t').unwrap().parse().unwrap();
+    assert!((1..=60).contains(&ttl), "{ttl}");
+    // real item: classic sees it; the next mg is a plain hit, not won
+    assert_eq!(c.get("fresh").unwrap().unwrap().value, b"");
+    let r = c.mg("fresh", &["v", "N60"]).unwrap();
+    assert!(!r.flags.iter().any(|f| f == "W"), "{r:?}");
+    handle.shutdown();
+}
+
+/// Acceptance: `b` base64 keys address the same item as classic
+/// commands on the raw key.
+#[test]
+fn meta_base64_keys_interop_with_classic() {
+    use slabforge::util::b64;
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    // classic write, meta b64 read
+    c.set("foo", b"classic-val", 0, 0).unwrap();
+    let r = c.mg(&b64::encode(b"foo"), &["v", "k", "b"]).unwrap();
+    assert_eq!(r.code, "VA");
+    assert_eq!(r.data.as_deref(), Some(&b"classic-val"[..]));
+    assert_eq!(r.flag('k'), Some("Zm9v"), "k echo stays encoded: {r:?}");
+    // meta b64 write, classic read
+    let r = c.ms(&b64::encode(b"bar"), b"meta-val", &["b"]).unwrap();
+    assert_eq!(r.code, "HD");
+    assert_eq!(c.get("bar").unwrap().unwrap().value, b"meta-val");
+    handle.shutdown();
+}
+
+/// Large meta values ride the reactor's writev scatter path (>= 4 KiB
+/// data blocks are handed to the kernel without a chunk->buffer copy);
+/// the wire bytes must be identical either way.
+#[test]
+fn meta_large_value_over_tcp() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let big: Vec<u8> = (0..64 * 1024).map(|i| (i % 251) as u8).collect();
+    let r = c.ms("big", &big, &["c"]).unwrap();
+    assert_eq!(r.code, "HD");
+    let r = c.mg("big", &["v", "s"]).unwrap();
+    assert_eq!(r.code, "VA");
+    assert_eq!(r.flag('s'), Some("65536"));
+    assert_eq!(r.data.as_deref(), Some(&big[..]), "scatter path byte-exact");
+    handle.shutdown();
+}
+
+/// CAS-guarded meta delete and arithmetic over the wire.
+#[test]
+fn meta_cas_delete_and_arith_over_tcp() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.ms("n", b"10", &[]).unwrap();
+    let r = c.ma("n", &["D5", "v"]).unwrap();
+    assert_eq!(r.data.as_deref(), Some(&b"15"[..]));
+    let r = c.ma("n", &["MD", "D6", "v", "c"]).unwrap();
+    assert_eq!(r.data.as_deref(), Some(&b"9"[..]));
+    let cas: u64 = r.flag('c').unwrap().parse().unwrap();
+    // guarded delete: wrong CAS -> EX, right CAS -> HD
+    let r = c.md("n", &[&format!("C{}", cas + 1)]).unwrap();
+    assert_eq!(r.code, "EX");
+    assert!(c.get("n").unwrap().is_some());
+    let r = c.md("n", &[&format!("C{cas}")]).unwrap();
+    assert_eq!(r.code, "HD");
+    assert!(c.get("n").unwrap().is_none());
+    handle.shutdown();
+}
+
 #[test]
 fn concurrent_traffic_during_optimization() {
     let (handle, _) = full_server(500);

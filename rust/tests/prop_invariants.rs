@@ -9,6 +9,7 @@ use slabforge::optimizer::steepest::{steepest_descent, SteepestParams};
 use slabforge::optimizer::engine::{RustBackend, WasteBackend};
 use slabforge::optimizer::waste::WasteMap;
 use slabforge::protocol::parse::parse_command;
+use slabforge::protocol::request::{want, Opcode};
 use slabforge::slab::policy::ChunkSizePolicy;
 use slabforge::slab::{SlabAllocator, SlabError};
 use slabforge::store::store::{Clock, KvStore};
@@ -259,17 +260,79 @@ fn prop_reconfigure_preserves_model() {
 fn prop_parser_never_panics_on_garbage() {
     check("parser total", 50, |rng| {
         let len = rng.gen_range(200) as usize;
-        let line: Vec<u8> = (0..len)
-            .map(|_| {
-                // bias toward printable + protocol-ish bytes
-                match rng.gen_range(4) {
-                    0 => b' ',
-                    1 => rng.gen_range(256) as u8,
-                    _ => 33 + rng.gen_range(94) as u8,
-                }
-            })
-            .collect();
+        let mut line: Vec<u8> = Vec::with_capacity(len + 3);
+        // bias toward the meta verbs so both front-ends get fuzzed
+        match rng.gen_range(8) {
+            0 => line.extend_from_slice(b"mg "),
+            1 => line.extend_from_slice(b"ms "),
+            2 => line.extend_from_slice(b"md "),
+            3 => line.extend_from_slice(b"ma "),
+            _ => {}
+        }
+        for _ in 0..len {
+            line.push(match rng.gen_range(4) {
+                0 => b' ',
+                1 => rng.gen_range(256) as u8,
+                _ => 33 + rng.gen_range(94) as u8,
+            });
+        }
         let _ = parse_command(&line); // must not panic
+    });
+}
+
+#[test]
+fn prop_conn_never_panics_on_malformed_streams() {
+    use slabforge::server::{Conn, NoControl};
+    use slabforge::slab::PAGE_SIZE;
+    use slabforge::store::sharded::ShardedStore;
+    use std::sync::Arc;
+    check("conn total", 12, |rng| {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                8 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let mut c = Conn::new(store, Arc::new(NoControl));
+        let mut out = Vec::new();
+        // a stream of mostly-broken classic + meta lines, some with
+        // data blocks, fed in random fragment sizes — the state
+        // machine must neither panic nor wedge
+        let verbs: [&[u8]; 10] = [
+            b"get", b"set", b"mg", b"ms", b"md", b"ma", b"mn", b"gat", b"stats", b"bogus",
+        ];
+        let mut stream = Vec::new();
+        for _ in 0..30 {
+            stream.extend_from_slice(verbs[rng.gen_range(10) as usize]);
+            let toks = rng.gen_range(4);
+            for _ in 0..toks {
+                stream.push(b' ');
+                let tok_len = 1 + rng.gen_range(8) as usize;
+                for _ in 0..tok_len {
+                    stream.push(33 + rng.gen_range(94) as u8);
+                }
+            }
+            stream.extend_from_slice(b"\r\n");
+            if rng.chance(0.3) {
+                // sometimes a stray data-ish blob
+                let blob = rng.gen_range(20) as usize;
+                for _ in 0..blob {
+                    stream.push(rng.gen_range(256) as u8);
+                }
+                stream.extend_from_slice(b"\r\n");
+            }
+        }
+        let mut fed = 0;
+        while fed < stream.len() {
+            let take = (1 + rng.gen_range(64) as usize).min(stream.len() - fed);
+            c.on_bytes(&stream[fed..fed + take], &mut out);
+            fed += take;
+        }
     });
 }
 
@@ -281,21 +344,97 @@ fn prop_parser_roundtrips_valid_set_lines() {
         let exp = rng.gen_range(1000) as u32;
         let n = rng.gen_range(10_000) as usize;
         let line = format!("set {key} {flags} {exp} {n}");
-        match parse_command(line.as_bytes()).unwrap() {
-            slabforge::protocol::Command::Store {
-                key: k,
-                flags: f,
-                exptime: e,
-                nbytes,
-                ..
-            } => {
-                assert_eq!(k, key.as_bytes());
-                assert_eq!(f, flags);
-                assert_eq!(e, exp);
-                assert_eq!(nbytes, n);
+        let r = parse_command(line.as_bytes()).unwrap();
+        assert_eq!(r.op, Opcode::Store);
+        assert_eq!(r.key, key.as_bytes());
+        assert_eq!(r.set_flags, flags);
+        assert_eq!(r.exptime, exp);
+        assert_eq!(r.nbytes, Some(n));
+        assert_eq!(r.cas_compare, None);
+    });
+}
+
+#[test]
+fn prop_meta_flags_roundtrip_any_order() {
+    check("meta flag roundtrip", 40, |rng| {
+        let key = String::from_utf8(gen::key(rng, 30)).unwrap();
+        let mut flags: Vec<String> = Vec::new();
+        let mut expect_want = 0u16;
+        for (tok, w) in [
+            ("v", want::VALUE),
+            ("f", want::FLAGS),
+            ("c", want::CAS),
+            ("t", want::TTL),
+            ("s", want::SIZE),
+            ("k", want::KEY),
+        ] {
+            if rng.chance(0.5) {
+                flags.push(tok.to_string());
+                expect_want |= w;
             }
-            other => panic!("{other:?}"),
         }
+        let quiet = rng.chance(0.5);
+        if quiet {
+            flags.push("q".into());
+        }
+        let opaque = if rng.chance(0.5) {
+            let o = format!("o{}", rng.gen_range(100_000));
+            flags.push(format!("O{o}"));
+            expect_want |= want::OPAQUE;
+            Some(o)
+        } else {
+            None
+        };
+        let touch = if rng.chance(0.5) {
+            let t = rng.gen_range(100_000) as u32;
+            flags.push(format!("T{t}"));
+            Some(t)
+        } else {
+            None
+        };
+        let vivify = if rng.chance(0.5) {
+            let n = rng.gen_range(100_000) as u32;
+            flags.push(format!("N{n}"));
+            Some(n)
+        } else {
+            None
+        };
+        // shuffle the flag order (Fisher-Yates): order must not matter
+        for i in (1..flags.len()).rev() {
+            let j = rng.gen_range(i as u64 + 1) as usize;
+            flags.swap(i, j);
+        }
+        let line = format!("mg {key} {}", flags.join(" "));
+        let r = parse_command(line.as_bytes()).unwrap();
+        assert_eq!(r.op, Opcode::Get);
+        assert_eq!(r.key, key.as_bytes());
+        assert_eq!(r.want, expect_want, "line: {line}");
+        assert_eq!(r.quiet, quiet);
+        assert_eq!(r.opaque, opaque.as_deref().unwrap_or("").as_bytes());
+        assert_eq!(r.touch_ttl, touch);
+        assert_eq!(r.vivify, vivify);
+    });
+}
+
+#[test]
+fn prop_meta_ms_tokens_roundtrip() {
+    check("meta ms roundtrip", 30, |rng| {
+        let key = String::from_utf8(gen::key(rng, 30)).unwrap();
+        let n = rng.gen_range(10_000) as usize;
+        let f = rng.gen_range(1 << 16) as u32;
+        let t = rng.gen_range(100_000) as u32;
+        let cc = rng.gen_range(u32::MAX as u64);
+        let cs = rng.gen_range(u32::MAX as u64);
+        let line = format!("ms {key} {n} F{f} T{t} C{cc} E{cs} c k q");
+        let r = parse_command(line.as_bytes()).unwrap();
+        assert_eq!(r.op, Opcode::Store);
+        assert_eq!(r.nbytes, Some(n));
+        assert_eq!(r.set_flags, f);
+        assert_eq!(r.exptime, t, "T maps to the item TTL on ms");
+        assert_eq!(r.cas_compare, Some(cc));
+        assert_eq!(r.cas_set, Some(cs));
+        assert_eq!(r.want, want::CAS | want::KEY);
+        assert!(r.quiet);
     });
 }
 
