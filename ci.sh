@@ -33,4 +33,16 @@ grep -q "meta_pipeline" "$root/BENCH_server.json" || {
     exit 1
 }
 
+echo "==> verify set_p99_us landed in BENCH_server.json"
+grep -q "set_p99_us" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the set-storm row" >&2
+    exit 1
+}
+
+echo "==> verify optimize_stall_us landed in BENCH_server.json"
+grep -q "optimize_stall_us" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the async-optimize stall dim" >&2
+    exit 1
+}
+
 echo "CI OK"

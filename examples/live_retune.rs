@@ -99,10 +99,38 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // ---- phase 2: learned retune via the control plane ------------------
+    // `slabs optimize` is asynchronous: the reply comes back instantly
+    // and the tuner's background thread runs the pass and pumps the
+    // drain; completion is observable in the stats slabs gauges.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let tuner_thread = tuner.spawn(stop.clone());
     let t_opt = Instant::now();
     let msg = c.slabs_optimize()?;
-    println!("slabs optimize -> {msg} ({:.2}s)", t_opt.elapsed().as_secs_f64());
-    assert!(msg.starts_with("APPLIED"), "expected retune to apply");
+    println!(
+        "slabs optimize -> {msg} (reply in {:.0}µs)",
+        t_opt.elapsed().as_micros()
+    );
+    assert!(msg.starts_with("OPTIMIZING"), "expected async kick-off");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let slabs = c.stats(Some("slabs"))?;
+        if slabs["optimize_pending"] == "0"
+            && slabs["optimize_runs"] != "0"
+            && slabs["migration_active"] == "0"
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "optimize never completed");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!(
+        "optimize + drain completed in {:.2}s (server answered throughout)",
+        t_opt.elapsed().as_secs_f64()
+    );
+    let slabs = c.stats(Some("slabs"))?;
+    assert_eq!(slabs["optimize_applied"], "1", "expected retune to apply");
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    tuner_thread.join().unwrap();
 
     // ---- phase 3: verify live behaviour after migration -----------------
     let (thr_after, lat_after) = measure_gets(&mut c, GET_PROBES, 12)?;

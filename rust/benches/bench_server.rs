@@ -9,14 +9,19 @@
 
 use slabforge::benchkit::{bench, table, write_json, BenchOpts, Summary};
 use slabforge::client::Client;
+use slabforge::config::settings::{Algorithm, Backend, OptimizerSettings};
+use slabforge::optimizer::autotune::AutoTuner;
+use slabforge::optimizer::collector::SizeCollector;
 use slabforge::server::{Server, ServerHandle};
 use slabforge::slab::policy::ChunkSizePolicy;
 use slabforge::slab::PAGE_SIZE;
 use slabforge::store::sharded::ShardedStore;
 use slabforge::store::store::Clock;
+use slabforge::store::{spawn_maintainer, MaintainerConfig};
 use slabforge::util::fmt::human_duration;
 use slabforge::util::rng::Pcg64;
 use slabforge::workload::gen::value_len_for_total;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -394,6 +399,132 @@ fn main() {
             .with_dim("reconfig_stall_us", max_gap.as_micros() as f64)
             .with_dim("items_migrated", gauges.moved as f64),
         );
+    }
+
+    // ---- set storm at full memory + async optimize -------------------------
+    // A dedicated small server filled past capacity: every set evicts,
+    // the background maintainer owns the LRU demotion work, and an
+    // async `slabs optimize` (OPTIMIZING immediately, drain pumped by
+    // the tuner thread) runs under the storm. `set_p99_us` is the
+    // steady-state eviction-path set latency; `optimize_stall_us` is
+    // the worst per-set gap the client saw while the optimize pass and
+    // its drain ran — the cost the issuing connection used to pay in
+    // full, now spread invisibly across the background threads.
+    {
+        let storm_store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                64 << 10, // small pages so every engaged class has some
+                2 << 20,  // 2 MiB: the keyspace oversubscribes it ~2-10x
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let collector = Arc::new(SizeCollector::default());
+        storm_store.set_observer(collector.clone());
+        let tuner = AutoTuner::new(
+            storm_store.clone(),
+            collector,
+            OptimizerSettings {
+                enabled: true,
+                min_samples: 500,
+                min_improvement: 0.0,
+                algorithm: Algorithm::SteepestDescent,
+                backend: Backend::Rust,
+                ..Default::default()
+            },
+            64 << 10,
+        )
+        .unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let tuner_thread = tuner.spawn(stop.clone());
+        let maint_thread = spawn_maintainer(
+            storm_store.clone(),
+            MaintainerConfig {
+                // the tuner thread is the designated migration driver
+                pump_migration: false,
+                ..MaintainerConfig::default()
+            },
+            stop.clone(),
+        );
+        let storm_handle = Server::with_control(storm_store.clone(), tuner.clone())
+            .start("127.0.0.1:0")
+            .unwrap();
+        let storm_addr = storm_handle.addr();
+        let mut sc = Client::connect(storm_addr).unwrap();
+
+        let n_storm = if smoke() { 6_000 } else { 40_000 };
+        let keyspace = n_storm as u64; // every set a distinct key: ~2-10x memory
+
+        let mut rng = Pcg64::new(31);
+        let storm_val = |rng: &mut Pcg64| {
+            let t = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 8_000);
+            vec![b'x'; value_len_for_total(t, true).unwrap()]
+        };
+        // phase 1: fill past capacity and measure per-set latency
+        let mut lats = Vec::with_capacity(n_storm);
+        let t0 = Instant::now();
+        for i in 0..n_storm {
+            let v = storm_val(&mut rng);
+            let key = format!("s{:07}", (i as u64) % keyspace);
+            let t = Instant::now();
+            // OutOfMemory is legal early on (fresh class, no page, no
+            // victim); the storm keeps pounding
+            let _ = sc.set(&key, &v, 0, 0);
+            lats.push(t.elapsed());
+        }
+        let storm_elapsed = t0.elapsed();
+        lats.sort_unstable();
+        let p99 = lats[lats.len() * 99 / 100];
+        let evictions = storm_store.stats().evictions;
+        assert!(evictions > 0, "storm must run at full memory");
+
+        // phase 2: async optimize under continued storm
+        let msg = sc.slabs_optimize().unwrap();
+        assert!(msg.starts_with("OPTIMIZING"), "{msg}");
+        let mut max_gap = std::time::Duration::ZERO;
+        let mut last = Instant::now();
+        let mut ops = 0usize;
+        loop {
+            let v = storm_val(&mut rng);
+            let key = format!("s{:07}", rng.gen_range(keyspace));
+            let _ = sc.set(&key, &v, 0, 0);
+            let now = Instant::now();
+            max_gap = max_gap.max(now.duration_since(last));
+            last = now;
+            ops += 1;
+            if ops % 64 == 0 {
+                let slabs = sc.stats(Some("slabs")).unwrap();
+                if slabs["optimize_pending"] == "0"
+                    && slabs["optimize_runs"] != "0"
+                    && slabs["migration_active"] == "0"
+                {
+                    break;
+                }
+            }
+        }
+        println!(
+            "set storm: p99 {}  evictions {}  optimize stall {}µs over {} sets",
+            human_duration(p99),
+            evictions,
+            max_gap.as_micros(),
+            ops
+        );
+        rows.push(
+            Summary::from_samples(
+                "set storm at full memory",
+                vec![storm_elapsed],
+                n_storm as f64,
+            )
+            .with_dim("set_p99_us", p99.as_micros() as f64)
+            .with_dim("optimize_stall_us", max_gap.as_micros() as f64),
+        );
+        stop.store(true, Ordering::SeqCst);
+        tuner_thread.join().unwrap();
+        maint_thread.join().unwrap();
+        storm_handle.shutdown();
     }
 
     println!(

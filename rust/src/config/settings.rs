@@ -4,6 +4,7 @@
 use super::toml::{TomlDoc, TomlError};
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::PAGE_SIZE;
+use crate::store::maintainer::{DEFAULT_MAINTAINER_BATCH, DEFAULT_MAINTAINER_INTERVAL_MS};
 use crate::store::migrate::DEFAULT_MIGRATE_BATCH;
 use std::fmt;
 
@@ -109,6 +110,15 @@ pub struct Settings {
     /// a shard's write lock — the bounded-pause knob for live
     /// reconfiguration (`slabs reconfigure` / the auto-tuner).
     pub migrate_batch: usize,
+    /// Background maintenance thread (LRU demotion, migration pumping,
+    /// post-drain slack shedding) — `memory.maintainer` / `--maintainer`.
+    pub maintainer: bool,
+    /// Milliseconds between maintenance passes
+    /// (`memory.maintainer_interval_ms`).
+    pub maintainer_interval_ms: u64,
+    /// Max LRU demotions per shard per pass — the maintainer's
+    /// write-lock lease bound (`memory.maintainer_batch`).
+    pub maintainer_batch: usize,
     pub policy: ChunkSizePolicy,
     pub optimizer: OptimizerSettings,
 }
@@ -126,6 +136,9 @@ impl Default for Settings {
             page_size: PAGE_SIZE,
             use_cas: true,
             migrate_batch: DEFAULT_MIGRATE_BATCH,
+            maintainer: true,
+            maintainer_interval_ms: DEFAULT_MAINTAINER_INTERVAL_MS,
+            maintainer_batch: DEFAULT_MAINTAINER_BATCH,
             policy: ChunkSizePolicy::default(),
             optimizer: OptimizerSettings::default(),
         }
@@ -203,6 +216,22 @@ impl Settings {
                 .as_usize()
                 .filter(|&n| n > 0)
                 .ok_or_else(|| invalid("memory.migrate_batch"))?;
+        }
+        if let Some(v) = doc.get("memory.maintainer") {
+            s.maintainer = v.as_bool().ok_or_else(|| invalid("memory.maintainer"))?;
+        }
+        if let Some(v) = doc.get("memory.maintainer_interval_ms") {
+            s.maintainer_interval_ms = v
+                .as_usize()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| invalid("memory.maintainer_interval_ms"))?
+                as u64;
+        }
+        if let Some(v) = doc.get("memory.maintainer_batch") {
+            s.maintainer_batch = v
+                .as_usize()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| invalid("memory.maintainer_batch"))?;
         }
 
         // slab policy: explicit sizes win over growth factor
@@ -364,6 +393,23 @@ artifacts_dir = "artifacts"
         let s = Settings::from_toml("[memory]\nmigrate_batch = 64\n").unwrap();
         assert_eq!(s.migrate_batch, 64);
         assert!(Settings::from_toml("[memory]\nmigrate_batch = 0\n").is_err());
+    }
+
+    #[test]
+    fn maintainer_keys_parse_with_on_by_default() {
+        let s = Settings::from_toml("").unwrap();
+        assert!(s.maintainer, "maintainer must default on");
+        assert_eq!(s.maintainer_interval_ms, 100);
+        assert_eq!(s.maintainer_batch, 1024);
+        let s = Settings::from_toml(
+            "[memory]\nmaintainer = false\nmaintainer_interval_ms = 25\nmaintainer_batch = 64\n",
+        )
+        .unwrap();
+        assert!(!s.maintainer);
+        assert_eq!(s.maintainer_interval_ms, 25);
+        assert_eq!(s.maintainer_batch, 64);
+        assert!(Settings::from_toml("[memory]\nmaintainer_batch = 0\n").is_err());
+        assert!(Settings::from_toml("[memory]\nmaintainer = 3\n").is_err());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!                    [--algorithm paper|steepest|dp] [--artifacts DIR]
 //!                    [--threads N] [--legacy-threads] [--max-conns N]
 //!                    [--idle-timeout SECS] [--migrate-batch N]
+//!                    [--maintainer true|false] [--maintainer-interval-ms N]
+//!                    [--maintainer-batch N]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -109,6 +111,30 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
         }
         s.migrate_batch = n;
     }
+    if let Some(on) = args
+        .flag_parse::<bool>("maintainer")
+        .map_err(|e| e.to_string())?
+    {
+        s.maintainer = on;
+    }
+    if let Some(n) = args
+        .flag_parse::<u64>("maintainer-interval-ms")
+        .map_err(|e| e.to_string())?
+    {
+        if n == 0 {
+            return Err("--maintainer-interval-ms must be at least 1".into());
+        }
+        s.maintainer_interval_ms = n;
+    }
+    if let Some(n) = args
+        .flag_parse::<usize>("maintainer-batch")
+        .map_err(|e| e.to_string())?
+    {
+        if n == 0 {
+            return Err("--maintainer-batch must be at least 1".into());
+        }
+        s.maintainer_batch = n;
+    }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {
             chunk_min: 96,
@@ -171,6 +197,27 @@ fn cmd_serve(args: &Args) -> i32 {
         } else {
             (Arc::new(NoControl), None)
         };
+
+    let _maintainer_thread = if settings.maintainer {
+        eprintln!(
+            "maintainer: enabled (every {}ms, batch {})",
+            settings.maintainer_interval_ms, settings.maintainer_batch
+        );
+        Some(slabforge::store::spawn_maintainer(
+            store.clone(),
+            slabforge::store::MaintainerConfig {
+                interval_ms: settings.maintainer_interval_ms,
+                batch: settings.maintainer_batch,
+                // when the optimizer thread runs, IT is the designated
+                // migration driver; two pumpers would double write-lock
+                // pressure on every shard during a drain
+                pump_migration: !settings.optimizer.enabled,
+            },
+            shutdown.clone(),
+        ))
+    } else {
+        None
+    };
 
     let mode = if settings.event_loop {
         slabforge::server::ServeMode::Event

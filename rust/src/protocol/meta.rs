@@ -15,6 +15,9 @@
 //! | `t`  | echo remaining TTL (`-1` = unlimited) |
 //! | `s`  | echo value size |
 //! | `k`  | echo key |
+//! | `l`  | `mg`: echo seconds since last access (accurate to the touch interval: read-lock fast-path hits do not refresh it) |
+//! | `h`  | `mg`: echo hit-before (0/1, memcached's ITEM_FETCHED; forces the write path so the bit is read and set atomically) |
+//! | `u`  | `mg`: no-LRU-bump read — serve the hit without touching recency state (and without flipping the fetched bit) |
 //! | `O<tok>` | echo opaque token |
 //! | `q`  | quiet: suppress misses (`mg`) / successes (`ms`/`md`/`ma`) |
 //! | `b`  | key token is base64 |
@@ -79,7 +82,9 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
             // argless flags with a trailing token (e.g. a fused "vq")
             // are malformed — reject loudly rather than silently
             // dropping the tail and changing semantics
-            b'v' | b'f' | b'c' | b't' | b's' | b'k' | b'q' | b'b' if !arg.is_empty() => {
+            b'v' | b'f' | b'c' | b't' | b's' | b'k' | b'q' | b'b' | b'l' | b'h' | b'u'
+                if !arg.is_empty() =>
+            {
                 return Err(ParseError::Client("invalid flag"));
             }
             b'v' => r.want |= want::VALUE,
@@ -90,6 +95,9 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
             b'k' => r.want |= want::KEY,
             b'q' => r.quiet = true,
             b'b' => r.b64_key = true,
+            b'l' if op == Opcode::Get => r.want |= want::LA,
+            b'h' if op == Opcode::Get => r.want |= want::HIT,
+            b'u' if op == Opcode::Get => r.no_bump = true,
             b'O' => {
                 if arg.is_empty() || arg.len() > MAX_OPAQUE {
                     return Err(ParseError::Client("bad opaque token"));
@@ -172,6 +180,23 @@ mod tests {
         assert!(r.b64_key);
         assert_eq!(r.touch_ttl, None);
         assert_eq!(r.vivify, None);
+    }
+
+    #[test]
+    fn mg_la_hit_and_nobump_flags() {
+        let r = parse_meta(b"mg foo v l h u").unwrap();
+        assert_eq!(r.want & want::LA, want::LA);
+        assert_eq!(r.want & want::HIT, want::HIT);
+        assert!(r.no_bump);
+        let r = parse_meta(b"mg foo v").unwrap();
+        assert_eq!(r.want & (want::LA | want::HIT), 0);
+        assert!(!r.no_bump);
+        // mg-only flags: rejected on the other verbs, and when fused
+        assert!(parse_meta(b"ms k 1 l").is_err());
+        assert!(parse_meta(b"md k h").is_err());
+        assert!(parse_meta(b"ma k u").is_err());
+        assert!(parse_meta(b"mg k l1").is_err(), "l takes no token");
+        assert!(parse_meta(b"mg k uq").is_err(), "fused argless flags");
     }
 
     #[test]

@@ -73,6 +73,10 @@ pub mod want {
     pub const KEY: u16 = 1 << 5;
     /// `O` — echo the request's opaque token.
     pub const OPAQUE: u16 = 1 << 6;
+    /// `l` — echo seconds since the item's last access.
+    pub const LA: u16 = 1 << 7;
+    /// `h` — echo whether the item had been hit before (0/1).
+    pub const HIT: u16 = 1 << 8;
 }
 
 /// Longest opaque (`O`) token accepted, per memcached.
@@ -127,6 +131,9 @@ pub struct Request<'a> {
     /// Meta `b`: the key token is base64; decode before store access,
     /// echo in encoded form.
     pub b64_key: bool,
+    /// Meta `u` (`mg`): serve the hit without bumping the LRU or
+    /// refreshing the access time.
+    pub no_bump: bool,
     /// `stats [arg]` argument.
     pub stats_arg: Option<&'a [u8]>,
     /// `slabs reconfigure` size list.
@@ -157,6 +164,7 @@ impl<'a> Request<'a> {
             with_cas: false,
             quiet: false,
             b64_key: false,
+            no_bump: false,
             stats_arg: None,
             sizes: Vec::new(),
         }

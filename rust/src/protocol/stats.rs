@@ -8,6 +8,7 @@
 //!   optimizer learns from), bucketed like memcached's 32-byte rows.
 
 use super::response::stat;
+use crate::server::conn::OptimizeGauges;
 use crate::server::metrics::ConnCounters;
 use crate::slab::SlabStats;
 use crate::store::migrate::MigrationGauges;
@@ -47,6 +48,9 @@ pub fn render_general(
     stat(out, "evictions", ops.evictions);
     stat(out, "expired_unfetched", ops.expired_reclaims);
     stat(out, "slab_reconfigures", ops.reconfigures);
+    stat(out, "maintainer_runs", ops.maintainer_runs);
+    stat(out, "maintainer_demoted", ops.maintainer_demoted);
+    stat(out, "maintainer_pages_shed", ops.maintainer_pages_shed);
     stat(out, "bytes", slabs.requested_bytes);
     stat(out, "bytes_allocated", slabs.allocated_bytes);
     stat(out, "bytes_wasted", slabs.hole_bytes);
@@ -56,10 +60,17 @@ pub fn render_general(
 }
 
 /// Render `stats slabs` (one row group per active class, plus the
-/// incremental-migration gauges). While a reconfiguration drains,
-/// per-class rows cover **both** generations, so the hole accounting
-/// stays honest mid-migration.
-pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats, mig: &MigrationGauges) {
+/// incremental-migration and async-optimize gauges). While a
+/// reconfiguration drains, per-class rows cover **both** generations,
+/// so the hole accounting stays honest mid-migration. The `optimize_*`
+/// gauges are where an async `slabs optimize` reports its outcome —
+/// the control reply is just `OPTIMIZING`.
+pub fn render_slabs(
+    out: &mut Vec<u8>,
+    slabs: &SlabStats,
+    mig: &MigrationGauges,
+    opt: &OptimizeGauges,
+) {
     for (i, c) in slabs.per_class.iter().enumerate() {
         if c.pages == 0 {
             continue; // memcached omits classes with no pages
@@ -81,7 +92,13 @@ pub fn render_slabs(out: &mut Vec<u8>, slabs: &SlabStats, mig: &MigrationGauges)
     stat(out, "migration_moved", mig.moved);
     stat(out, "migration_dropped", mig.dropped);
     stat(out, "migration_pages_reclaimed", mig.pages_reclaimed);
+    stat(out, "migration_force_drained_pages", mig.force_drained_pages);
+    stat(out, "migration_force_dropped", mig.force_dropped);
     stat(out, "migration_items_remaining", mig.items_remaining);
+    stat(out, "optimize_pending", u64::from(opt.pending));
+    stat(out, "optimize_runs", opt.runs);
+    stat(out, "optimize_applied", opt.applied);
+    stat(out, "optimize_last_recovery_bp", opt.last_recovery_bp);
     out.extend_from_slice(b"END\r\n");
 }
 
@@ -154,7 +171,12 @@ mod tests {
     #[test]
     fn slabs_stats_rows() {
         let mut out = Vec::new();
-        render_slabs(&mut out, &slab_stats_with_items(), &MigrationGauges::default());
+        render_slabs(
+            &mut out,
+            &slab_stats_with_items(),
+            &MigrationGauges::default(),
+            &OptimizeGauges::default(),
+        );
         let t = text(&out);
         // 518 -> class id 9 (600 bytes) with memcached numbering from 1
         assert!(t.contains(":chunk_size 600"), "{t}");
@@ -176,15 +198,52 @@ mod tests {
             moved: 1500,
             dropped: 3,
             pages_reclaimed: 7,
+            force_drained_pages: 2,
+            force_dropped: 3,
             items_remaining: 420,
         };
-        render_slabs(&mut out, &slab_stats_with_items(), &mig);
+        let opt = OptimizeGauges {
+            pending: true,
+            runs: 4,
+            applied: 2,
+            last_recovery_bp: 3100,
+        };
+        render_slabs(&mut out, &slab_stats_with_items(), &mig, &opt);
         let t = text(&out);
         assert!(t.contains("STAT migration_active 2"), "{t}");
         assert!(t.contains("STAT migration_moved 1500"), "{t}");
         assert!(t.contains("STAT migration_dropped 3"), "{t}");
         assert!(t.contains("STAT migration_pages_reclaimed 7"), "{t}");
+        assert!(t.contains("STAT migration_force_drained_pages 2"), "{t}");
+        assert!(t.contains("STAT migration_force_dropped 3"), "{t}");
         assert!(t.contains("STAT migration_items_remaining 420"), "{t}");
+        assert!(t.contains("STAT optimize_pending 1"), "{t}");
+        assert!(t.contains("STAT optimize_runs 4"), "{t}");
+        assert!(t.contains("STAT optimize_applied 2"), "{t}");
+        assert!(t.contains("STAT optimize_last_recovery_bp 3100"), "{t}");
+    }
+
+    #[test]
+    fn general_stats_contain_maintainer_counters() {
+        let mut out = Vec::new();
+        let ops = StoreStats {
+            maintainer_runs: 12,
+            maintainer_demoted: 340,
+            maintainer_pages_shed: 2,
+            ..StoreStats::default()
+        };
+        render_general(
+            &mut out,
+            &ops,
+            &slab_stats_with_items(),
+            0,
+            0,
+            &ConnCounters::default(),
+        );
+        let t = text(&out);
+        assert!(t.contains("STAT maintainer_runs 12"), "{t}");
+        assert!(t.contains("STAT maintainer_demoted 340"), "{t}");
+        assert!(t.contains("STAT maintainer_pages_shed 2"), "{t}");
     }
 
     #[test]

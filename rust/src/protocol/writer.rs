@@ -13,8 +13,8 @@
 //!   `VA 5 c42`, `EN`, `NS`, `EX`, `NF`); `q` suppresses only the
 //!   *expected* outcome — misses for `mg`, successes for
 //!   `ms`/`md`/`ma` — while hits and errors always flow. Echo flags
-//!   render in canonical order `f c t s k O` (plus `W` for a vivify
-//!   winner).
+//!   render in canonical order `f c t l h s k O` (plus `W` for a
+//!   vivify winner).
 
 use super::request::{want, DataRequest, Dialect, Request};
 use super::response;
@@ -70,6 +70,10 @@ struct Echo<'e> {
     flags: Option<u32>,
     cas: Option<u64>,
     ttl: Option<i64>,
+    /// Seconds since last access (the `l` echo).
+    la: Option<u32>,
+    /// Hit-before bit (the `h` echo).
+    fetched: Option<bool>,
     size: Option<usize>,
     key: Option<&'e [u8]>,
     opaque: Option<&'e [u8]>,
@@ -161,6 +165,17 @@ impl<'a, S: RespSink> ResponseWriter<'a, S> {
                 push_i64(out, t);
             }
         }
+        if self.want & want::LA != 0 {
+            if let Some(la) = e.la {
+                out.extend_from_slice(b" l");
+                push_u64(out, la as u64);
+            }
+        }
+        if self.want & want::HIT != 0 {
+            if let Some(h) = e.fetched {
+                out.extend_from_slice(if h { b" h1" } else { b" h0" });
+            }
+        }
         if self.want & want::SIZE != 0 {
             if let Some(s) = e.size {
                 out.extend_from_slice(b" s");
@@ -215,6 +230,8 @@ impl<'a, S: RespSink> ResponseWriter<'a, S> {
                     flags: Some(v.flags),
                     cas: Some(v.cas),
                     ttl: Some(hit.ttl),
+                    la: Some(hit.la),
+                    fetched: Some(hit.fetched),
                     size: Some(v.data.len()),
                     won: hit.won,
                     ..self.base_echo()
@@ -440,6 +457,15 @@ mod tests {
         }
     }
 
+    fn hit(ttl: i64, won: bool) -> MetaHit {
+        MetaHit {
+            ttl,
+            won,
+            la: 0,
+            fetched: false,
+        }
+    }
+
     #[test]
     fn meta_value_with_all_flags() {
         let mut out = Vec::new();
@@ -449,7 +475,7 @@ mod tests {
             false,
         );
         let mut w = ResponseWriter::for_request(&mut sink, &r);
-        w.value(b"ignored", vref(b"hello"), MetaHit { ttl: -1, won: false });
+        w.value(b"ignored", vref(b"hello"), hit(-1, false));
         assert_eq!(
             String::from_utf8_lossy(&out),
             "VA 5 f7 c42 t-1 s5 kkk Oop\r\nhello\r\n"
@@ -462,7 +488,7 @@ mod tests {
         let mut sink = BufSink(&mut out);
         let r = req(want::CAS, false);
         let mut w = ResponseWriter::for_request(&mut sink, &r);
-        w.value(b"x", vref(b"hello"), MetaHit { ttl: 30, won: false });
+        w.value(b"x", vref(b"hello"), hit(30, false));
         assert_eq!(String::from_utf8_lossy(&out), "HD c42\r\n");
     }
 
@@ -472,8 +498,33 @@ mod tests {
         let mut sink = BufSink(&mut out);
         let r = req(want::VALUE, false);
         let mut w = ResponseWriter::for_request(&mut sink, &r);
-        w.value(b"x", vref(b""), MetaHit { ttl: 60, won: true });
+        w.value(b"x", vref(b""), hit(60, true));
         assert_eq!(String::from_utf8_lossy(&out), "VA 0 W\r\n\r\n");
+    }
+
+    #[test]
+    fn meta_la_and_hit_echo_in_canonical_order() {
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::TTL | want::LA | want::HIT | want::SIZE, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.value(
+            b"x",
+            vref(b"hello"),
+            MetaHit {
+                ttl: 30,
+                won: false,
+                la: 7,
+                fetched: true,
+            },
+        );
+        assert_eq!(String::from_utf8_lossy(&out), "HD t30 l7 h1 s5\r\n");
+        out.clear();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::HIT, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        w.value(b"x", vref(b"v"), hit(-1, false));
+        assert_eq!(String::from_utf8_lossy(&out), "HD h0\r\n");
     }
 
     #[test]
@@ -483,7 +534,7 @@ mod tests {
         let r = req(want::VALUE, true);
         let mut w = ResponseWriter::for_request(&mut sink, &r);
         w.miss();
-        w.value(b"x", vref(b"v"), MetaHit { ttl: -1, won: false });
+        w.value(b"x", vref(b"v"), hit(-1, false));
         assert_eq!(String::from_utf8_lossy(&out), "VA 1\r\nv\r\n");
     }
 

@@ -61,15 +61,39 @@ const INLINE_KEYS: usize = 32;
 const SCRATCH_KEEP: usize = 256 * 1024;
 const SCRATCH_STEADY: usize = 16 * 1024;
 
+/// Progress/outcome gauges of the asynchronous `slabs optimize` path,
+/// rendered into `stats slabs` (the final recovery numbers land here
+/// instead of in a blocking reply).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptimizeGauges {
+    /// An optimize request is queued or its drain is still running.
+    pub pending: bool,
+    /// Optimization passes completed (applied or not).
+    pub runs: u64,
+    /// Passes whose result was applied (a migration was kicked off).
+    pub applied: u64,
+    /// Predicted waste recovery of the most recent pass, in basis
+    /// points (10000 = all waste recovered).
+    pub last_recovery_bp: u64,
+}
+
 /// Hook for the admin extensions; implemented by the optimizer
 /// coordinator and injected by the launcher.
 pub trait Control: Send + Sync {
-    /// `slabs optimize` — returns a status line (without CRLF).
+    /// `slabs optimize` — returns a status line (without CRLF). The
+    /// optimizer coordinator answers `OPTIMIZING` immediately and runs
+    /// the pass (and its drain) on its background thread; completion
+    /// is observable through [`Control::optimize_gauges`].
     fn optimize_now(&self) -> String;
     /// `slabs reconfigure` — apply explicit sizes; status line.
     fn reconfigure(&self, sizes: Vec<usize>) -> Result<String, String>;
     /// `stats sizes` source (the learned histogram), if any.
     fn sizes_histogram(&self) -> Option<SizeHistogram>;
+    /// Async-optimize progress for `stats slabs` (zeros when the
+    /// optimizer is not enabled).
+    fn optimize_gauges(&self) -> OptimizeGauges {
+        OptimizeGauges::default()
+    }
 }
 
 /// No-op control for servers launched without the optimizer.
@@ -480,6 +504,7 @@ impl Exec<'_> {
                 out,
                 &self.store.slab_stats(),
                 &self.store.migration_gauges(),
+                &self.control.optimize_gauges(),
             ),
             Some(b"sizes") => match self.control.sizes_histogram() {
                 Some(h) => stats::render_sizes(out, &h),
@@ -617,6 +642,8 @@ fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut 
         vivify: req.vivify,
         vivify_cas: req.cas_set,
         binary_key: req.b64_key,
+        no_bump: req.no_bump,
+        wants_hit_before: req.want & crate::protocol::request::want::HIT != 0,
     };
     match store.meta_get(req.key, &opts, |v, hit| w.value(req.key, v, hit)) {
         Ok(Some(_)) => {}
@@ -1273,6 +1300,37 @@ mod tests {
             String::from_utf8_lossy(&out),
             "VA 2 f0 c42 t-1 s2 kk\r\nhi\r\n"
         );
+    }
+
+    #[test]
+    fn meta_la_hit_and_nobump_echoes() {
+        let mut c = conn();
+        run(&mut c, b"ms k 1\r\nx\r\n");
+        // never fetched: h0; fresh: tiny l. `u` must not mark it fetched
+        let out = run(&mut c, b"mg k v l h u\r\n");
+        let t = String::from_utf8_lossy(&out).to_string();
+        assert!(t.starts_with("VA 1 l"), "{t}");
+        assert!(t.contains(" h0\r\n"), "{t}");
+        let la: u64 = t.split(" l").nth(1).unwrap().split(' ').next().unwrap().parse().unwrap();
+        assert!(la <= 2, "fresh item, la {la}");
+        let out = run(&mut c, b"mg k v h u\r\n");
+        assert!(
+            String::from_utf8_lossy(&out).contains(" h0"),
+            "u reads never mark fetched"
+        );
+        // a bumping h read reports the pre-state, then marks the item
+        let out = run(&mut c, b"mg k v h\r\n");
+        assert!(String::from_utf8_lossy(&out).contains(" h0"));
+        let out = run(&mut c, b"mg k v h\r\n");
+        assert!(String::from_utf8_lossy(&out).contains(" h1"));
+        // canonical echo order: t, then l, then h, then s
+        let out = run(&mut c, b"mg k t l h s\r\n");
+        let t = String::from_utf8_lossy(&out).to_string();
+        let pos = |needle: &str| t.find(needle).unwrap_or_else(|| panic!("{needle} in {t}"));
+        assert!(pos(" t") < pos(" l") && pos(" l") < pos(" h1") && pos(" h1") < pos(" s1"), "{t}");
+        // the mg-only flags are rejected on other verbs
+        let out = run(&mut c, b"md k l\r\n");
+        assert!(String::from_utf8_lossy(&out).starts_with("CLIENT_ERROR"));
     }
 
     #[test]

@@ -168,6 +168,42 @@ impl SlabAllocator {
         self.free_pages.len()
     }
 
+    /// Resident pages: carved (both generations) + pooled buffers.
+    #[inline]
+    pub fn resident_pages(&self) -> usize {
+        self.pages_allocated + self.free_pages.len()
+    }
+
+    /// Head of the per-page item chain for a page in either generation
+    /// (the store maintains the links through `ItemMeta::{pg_prev,
+    /// pg_next}`).
+    #[inline]
+    pub fn page_item_head(&self, old: bool, class: u16, page: u32) -> u32 {
+        if old {
+            self.old
+                .as_ref()
+                .expect("old-generation index without an active migration")
+                .classes[class as usize]
+                .page_item_head(page)
+        } else {
+            self.classes[class as usize].page_item_head(page)
+        }
+    }
+
+    /// Set the per-page item-chain head in either generation.
+    #[inline]
+    pub fn set_page_item_head(&mut self, old: bool, class: u16, page: u32, id: u32) {
+        if old {
+            self.old
+                .as_mut()
+                .expect("old-generation index without an active migration")
+                .classes[class as usize]
+                .set_page_item_head(page, id);
+        } else {
+            self.classes[class as usize].set_page_item_head(page, id);
+        }
+    }
+
     /// Largest storable item.
     #[inline]
     pub fn max_item_size(&self) -> usize {
@@ -368,6 +404,50 @@ impl SlabAllocator {
                     .map(move |(p, n)| (ci as u16, p, n))
             })
             .collect()
+    }
+
+    /// Occupancy of every **current-generation** page still holding
+    /// live chunks: `(class, page_slot, live_chunks)` — the maintainer's
+    /// slack-shedding pass picks its victim page from this.
+    pub fn page_occupancy(&self) -> Vec<(u16, u32, u32)> {
+        self.classes
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, c)| {
+                c.occupied_pages()
+                    .into_iter()
+                    .map(move |(p, n)| (ci as u16, p, n))
+            })
+            .collect()
+    }
+
+    /// Drop pooled page buffers until resident pages fit the strict
+    /// budget. Returns the buffers returned to the OS.
+    pub fn trim_free_pool(&mut self) -> usize {
+        let mut shed = 0;
+        while self.resident_pages() > self.page_budget && self.free_pages.pop().is_some() {
+            shed += 1;
+        }
+        shed
+    }
+
+    /// Release fully drained **current-generation** pages — the
+    /// maintainer's slack-shedding move, only meaningful while carved
+    /// pages exceed the strict budget (a post-migration overshoot of up
+    /// to [`MIGRATION_PAGE_SLACK`]). Released buffers go through the
+    /// pool gate, which drops them outright when resident pages are at
+    /// or over budget. Returns pages released from their class.
+    pub fn release_current_drained_pages(&mut self) -> usize {
+        let mut bufs = Vec::new();
+        for class in &mut self.classes {
+            bufs.append(&mut class.release_drained_pages());
+        }
+        let freed = bufs.len();
+        for buf in bufs {
+            self.pages_allocated -= 1;
+            self.retire_page(buf);
+        }
+        freed
     }
 
     /// Live chunks remaining in the old generation.

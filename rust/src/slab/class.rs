@@ -23,6 +23,12 @@ pub struct SlabClass {
     pages: Vec<Option<Page>>,
     /// Live chunks per page slot — a page with 0 is fully drained.
     page_used: Vec<u32>,
+    /// Head of the per-page intrusive item chain (arena item ids,
+    /// threaded through `ItemMeta::{pg_prev,pg_next}`), parallel to
+    /// `pages`. Owned by the store: the class only provides the stable
+    /// per-page slot, so that a drain can enumerate a page's residents
+    /// in O(chunks/page). `u32::MAX` = empty.
+    item_head: Vec<u32>,
     /// Released slots available for the next added page.
     vacant: Vec<u32>,
     free: Vec<ChunkLoc>,
@@ -56,6 +62,7 @@ impl SlabClass {
             chunk_size,
             pages: Vec::new(),
             page_used: Vec::new(),
+            item_head: Vec::new(),
             vacant: Vec::new(),
             free: Vec::new(),
             used_chunks: 0,
@@ -93,6 +100,7 @@ impl SlabClass {
             None => {
                 self.pages.push(None);
                 self.page_used.push(0);
+                self.item_head.push(super::NIL_ITEM);
                 (self.pages.len() - 1) as u32
             }
         };
@@ -101,6 +109,7 @@ impl SlabClass {
             self.free.push(ChunkLoc { page: slot, chunk });
         }
         self.page_used[slot as usize] = 0;
+        self.item_head[slot as usize] = super::NIL_ITEM;
         self.pages[slot as usize] = Some(page);
     }
 
@@ -154,11 +163,28 @@ impl SlabClass {
         for (i, is_drained) in drained.iter().enumerate() {
             if *is_drained {
                 let page = self.pages[i].take().expect("drained page present");
+                debug_assert_eq!(
+                    self.item_head[i],
+                    super::NIL_ITEM,
+                    "drained page with a non-empty item chain"
+                );
                 out.push(page.into_buf());
                 self.vacant.push(i as u32);
             }
         }
         out
+    }
+
+    /// Head of the per-page item chain for `page` (`NIL_ITEM` = empty).
+    #[inline]
+    pub fn page_item_head(&self, page: u32) -> u32 {
+        self.item_head[page as usize]
+    }
+
+    /// Set the per-page item-chain head (the store maintains the links).
+    #[inline]
+    pub fn set_page_item_head(&mut self, page: u32, id: u32) {
+        self.item_head[page as usize] = id;
     }
 
     /// `(page_slot, live_chunks)` for every page still holding items —

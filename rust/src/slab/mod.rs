@@ -32,3 +32,8 @@ pub const MIN_CHUNK: usize = 48;
 
 /// Memcached caps its class table at 63 usable classes.
 pub const MAX_CLASSES: usize = 63;
+
+/// Sentinel for "no item" in the per-page item chains the store threads
+/// through the class table (mirrors `store::arena::NIL` without making
+/// the slab layer depend on the store).
+pub const NIL_ITEM: u32 = u32::MAX;

@@ -45,7 +45,16 @@ pub struct ItemMeta {
     /// LRU links.
     pub prev: u32,
     pub next: u32,
+    /// Per-page item chain (all items whose chunk lives on the same
+    /// page of the same generation): the page→items index that lets a
+    /// page drain enumerate its residents in O(chunks/page).
+    pub pg_prev: u32,
+    pub pg_next: u32,
     pub tier: u8,
+    /// The item has been served by a write-path fetch since it was
+    /// stored (memcached's ITEM_FETCHED; the meta `h` echo). Read-lock
+    /// fast-path hits inside TOUCH_INTERVAL cannot set it.
+    pub fetched: bool,
     /// Slab-geometry generation the chunk belongs to. During an
     /// incremental migration, items whose tag differs from the store's
     /// current generation still live in the old (draining) allocator
@@ -73,7 +82,10 @@ impl ItemMeta {
             hnext: NIL,
             prev: NIL,
             next: NIL,
+            pg_prev: NIL,
+            pg_next: NIL,
             tier: Tier::Hot as u8,
+            fetched: false,
             gen: 0,
             live: false,
         }

@@ -224,7 +224,10 @@ mod tests {
             hnext: NIL,
             prev: NIL,
             next: NIL,
+            pg_prev: NIL,
+            pg_next: NIL,
             tier: 0,
+            fetched: false,
             gen: 0,
             live: true,
         }

@@ -5,6 +5,14 @@
 //! is promoted to WARM. Eviction for a class walks COLD tail → WARM
 //! tail → HOT tail. Lists are intrusive (`ItemMeta::{prev,next,tier}`),
 //! ids never move in memory.
+//!
+//! Cap enforcement is **not** done inline on the write path: `insert`
+//! and `touch` only link/move the item (O(1)), and the background
+//! maintainer (`store::maintainer`) drains over-cap tails into COLD in
+//! bounded batches via [`ClassLru::rebalance_step`] — memcached's
+//! `lru_maintainer` split. Until a rebalance runs the tiers may be
+//! over cap; eviction still works because the candidate walk falls
+//! back COLD → WARM → HOT.
 
 use super::arena::{Arena, Tier, NIL};
 
@@ -154,11 +162,11 @@ impl ClassLru {
         }
     }
 
-    /// Insert a new item: HOT head, then rebalance caps.
+    /// Insert a new item at the HOT head — O(1), no cap enforcement
+    /// (the maintainer demotes over-cap tails off-thread).
     pub fn insert(&mut self, id: u32, arena: &mut Arena) {
         arena.get_mut(id).tier = Tier::Hot as u8;
         self.hot.push_head(id, arena);
-        self.rebalance(arena);
     }
 
     /// Remove an item from whichever tier holds it.
@@ -168,7 +176,8 @@ impl ClassLru {
     }
 
     /// Touch on access: HOT/WARM bump to their head; COLD promotes to
-    /// WARM (memcached's ITEM_ACTIVE promotion).
+    /// WARM (memcached's ITEM_ACTIVE promotion). O(1) — caps are
+    /// enforced by the maintainer, not here.
     pub fn touch(&mut self, id: u32, arena: &mut Arena) {
         let tier = Tier::from_u8(arena.get(id).tier);
         match tier {
@@ -184,26 +193,44 @@ impl ClassLru {
                 self.cold.unlink(id, arena);
                 arena.get_mut(id).tier = Tier::Warm as u8;
                 self.warm.push_head(id, arena);
-                self.rebalance(arena);
             }
         }
     }
 
-    /// Enforce HOT/WARM caps by demoting tails into COLD.
-    fn rebalance(&mut self, arena: &mut Arena) {
+    /// Current HOT/WARM caps (fractions of this class's item count).
+    fn caps(&self) -> (usize, usize) {
         let total = self.total();
-        let hot_cap = (total * HOT_PCT / 100).max(1);
-        let warm_cap = (total * WARM_PCT / 100).max(1);
-        while self.hot.len() > hot_cap {
+        (
+            (total * HOT_PCT / 100).max(1),
+            (total * WARM_PCT / 100).max(1),
+        )
+    }
+
+    /// True when both fraction caps hold (the maintained steady state).
+    pub fn is_balanced(&self) -> bool {
+        let (hot_cap, warm_cap) = self.caps();
+        self.hot.len() <= hot_cap && self.warm.len() <= warm_cap
+    }
+
+    /// Demote up to `max_moves` over-cap HOT/WARM tails into COLD (the
+    /// maintainer's bounded batch). Returns the demotions performed;
+    /// `< max_moves` means this class is now balanced.
+    pub fn rebalance_step(&mut self, arena: &mut Arena, max_moves: usize) -> usize {
+        let (hot_cap, warm_cap) = self.caps();
+        let mut moved = 0;
+        while self.hot.len() > hot_cap && moved < max_moves {
             let id = self.hot.pop_tail(arena).unwrap();
             arena.get_mut(id).tier = Tier::Cold as u8;
             self.cold.push_head(id, arena);
+            moved += 1;
         }
-        while self.warm.len() > warm_cap {
+        while self.warm.len() > warm_cap && moved < max_moves {
             let id = self.warm.pop_tail(arena).unwrap();
             arena.get_mut(id).tier = Tier::Cold as u8;
             self.cold.push_head(id, arena);
+            moved += 1;
         }
+        moved
     }
 
     /// The next eviction victim: COLD tail, else WARM tail, else HOT
@@ -249,10 +276,18 @@ mod tests {
             hnext: NIL,
             prev: NIL,
             next: NIL,
+            pg_prev: NIL,
+            pg_next: NIL,
             tier: 0,
+            fetched: false,
             gen: 0,
             live: true,
         }
+    }
+
+    /// Drain a class to its balanced steady state (test convenience).
+    fn settle(c: &mut ClassLru, a: &mut Arena) {
+        while c.rebalance_step(a, 16) > 0 {}
     }
 
     #[test]
@@ -285,17 +320,38 @@ mod tests {
     }
 
     #[test]
-    fn new_items_enter_hot_then_overflow_cold() {
+    fn inserts_are_hot_until_maintained_then_overflow_cold() {
         let mut a = Arena::new();
         let mut c = ClassLru::new();
         let ids: Vec<u32> = (0..10).map(|_| a.insert(item())).collect();
         for &id in &ids {
             c.insert(id, &mut a);
         }
+        // no inline rebalance: the write path leaves everything HOT
+        assert_eq!(c.hot.len(), 10, "insert must be link-only");
+        assert!(!c.is_balanced());
+        settle(&mut c, &mut a);
         // caps: hot <= max(10*20%,1)=2, warm <= 4
         assert!(c.hot.len() <= 2, "hot={}", c.hot.len());
         assert_eq!(c.total(), 10);
         assert!(c.cold.len() >= 4);
+        assert!(c.is_balanced());
+    }
+
+    #[test]
+    fn rebalance_step_is_bounded() {
+        let mut a = Arena::new();
+        let mut c = ClassLru::new();
+        for _ in 0..100 {
+            let id = a.insert(item());
+            c.insert(id, &mut a);
+        }
+        // 100 hot, cap 20: a budget-3 step demotes exactly 3
+        assert_eq!(c.rebalance_step(&mut a, 3), 3);
+        assert_eq!(c.hot.len(), 97);
+        settle(&mut c, &mut a);
+        assert!(c.hot.len() <= 20);
+        assert_eq!(c.rebalance_step(&mut a, 16), 0, "balanced -> no work");
     }
 
     #[test]
@@ -306,6 +362,7 @@ mod tests {
         for &id in &ids {
             c.insert(id, &mut a);
         }
+        settle(&mut c, &mut a);
         let victim = c.cold.tail().unwrap();
         c.touch(victim, &mut a);
         assert_eq!(Tier::from_u8(a.get(victim).tier), Tier::Warm);
@@ -319,6 +376,7 @@ mod tests {
         for &id in &ids {
             c.insert(id, &mut a);
         }
+        settle(&mut c, &mut a);
         let v = c.eviction_candidate().unwrap();
         assert_eq!(Tier::from_u8(a.get(v).tier), Tier::Cold);
         // empty cold+warm: falls back to hot
@@ -336,6 +394,7 @@ mod tests {
         for &id in &ids {
             c.insert(id, &mut a);
         }
+        settle(&mut c, &mut a);
         let total_before = c.total();
         let cold_item = c.cold.tail().unwrap();
         c.remove(cold_item, &mut a);

@@ -1,0 +1,179 @@
+//! The background maintenance engine — memcached's `lru_maintainer`
+//! thread, grown to own every piece of management work the request
+//! path used to pay for inline:
+//!
+//! * **LRU tier rebalance**: the set path only links new items into
+//!   HOT ([`ClassLru::insert`] is O(1)); this thread demotes over-cap
+//!   HOT/WARM tails into COLD in bounded batches under short per-shard
+//!   write-lock leases ([`KvStore::maintain`]).
+//! * **Migration pumping**: while an incremental slab migration is
+//!   draining (kicked off by `slabs reconfigure`, `slabs optimize`, or
+//!   the auto-tuner), the maintainer drives bounded
+//!   [`ShardedStore::migration_step_all`] steps so a drain completes
+//!   even when the optimizer thread is not running.
+//! * **Slack shedding**: after a drain into a less-dense geometry, up
+//!   to `MIGRATION_PAGE_SLACK` carved pages can outlive the migration;
+//!   the maintainer re-drains them (one page per pass, residents
+//!   enumerated in O(chunks/page) through the per-page item index) and
+//!   returns the buffers to the OS.
+//!
+//! The thread shares the auto-tuner's clock discipline (a fixed tick,
+//! work only when there is work) but is independent of it: servers
+//! without the optimizer still get background maintenance.
+//!
+//! [`ClassLru::insert`]: crate::store::lru::ClassLru::insert
+//! [`KvStore::maintain`]: crate::store::store::KvStore::maintain
+
+use super::sharded::ShardedStore;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default milliseconds between maintenance passes
+/// (`memory.maintainer_interval_ms` / `--maintainer-interval-ms`).
+pub const DEFAULT_MAINTAINER_INTERVAL_MS: u64 = 100;
+
+/// Default demotion budget per shard per pass
+/// (`memory.maintainer_batch` / `--maintainer-batch`) — the write-lock
+/// lease is bounded by this many O(1) list moves.
+pub const DEFAULT_MAINTAINER_BATCH: usize = 1024;
+
+/// Maintainer thread knobs.
+#[derive(Clone, Debug)]
+pub struct MaintainerConfig {
+    /// Milliseconds between passes when there is no migration to pump.
+    pub interval_ms: u64,
+    /// Max demotions per shard per pass (lock-lease bound).
+    pub batch: usize,
+    /// Drive in-flight migrations (`migration_step_all`). Exactly one
+    /// thread should pump a drain: when the optimizer's autotune
+    /// thread is running it is the designated driver, and this must be
+    /// `false` — two phase-shifted pumpers acquire every shard's write
+    /// lock near back-to-back and erode the reader "breathe" window
+    /// that keeps drains bounded-pause. Default `true` (standalone
+    /// stores with no autotune thread).
+    pub pump_migration: bool,
+}
+
+impl Default for MaintainerConfig {
+    fn default() -> Self {
+        MaintainerConfig {
+            interval_ms: DEFAULT_MAINTAINER_INTERVAL_MS,
+            batch: DEFAULT_MAINTAINER_BATCH,
+            pump_migration: true,
+        }
+    }
+}
+
+/// Spawn the background maintainer. Stops (promptly) when `shutdown`
+/// flips; join the handle to be sure it exited.
+pub fn spawn_maintainer(
+    store: Arc<ShardedStore>,
+    cfg: MaintainerConfig,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("slabforge-maintainer".into())
+        .spawn(move || {
+            let interval = Duration::from_millis(cfg.interval_ms.max(1));
+            while !shutdown.load(Ordering::SeqCst) {
+                if cfg.pump_migration && store.migration_active() {
+                    // pump the drain; breathe between rounds so std's
+                    // unfair RwLock cannot starve readers
+                    store.migration_step_all();
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                store.maintain_all(cfg.batch);
+                std::thread::sleep(interval);
+            }
+        })
+        .expect("spawn maintainer thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::store::Clock;
+    use std::time::Instant;
+
+    fn store() -> Arc<ShardedStore> {
+        Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                32 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn thread_rebalances_what_the_set_path_left_hot() {
+        let s = store();
+        for i in 0..2000u32 {
+            s.set(format!("k{i:05}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        assert!(!s.lru_balanced(), "sets must not rebalance inline");
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_maintainer(
+            s.clone(),
+            MaintainerConfig {
+                interval_ms: 1,
+                batch: 256,
+                ..MaintainerConfig::default()
+            },
+            stop.clone(),
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !s.lru_balanced() {
+            assert!(Instant::now() < deadline, "maintainer never converged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let st = s.stats();
+        assert!(st.maintainer_runs > 0);
+        assert!(st.maintainer_demoted > 0, "demotions moved off-thread");
+        // traffic keeps serving while the maintainer runs
+        assert_eq!(s.get(b"k00000").unwrap().value, b"v");
+        stop.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn thread_pumps_migration_to_completion() {
+        let s = store();
+        for i in 0..3000u32 {
+            s.set(format!("k{i:05}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_maintainer(s.clone(), MaintainerConfig::default(), stop.clone());
+        s.begin_reconfigure(ChunkSizePolicy::Explicit(vec![518]))
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while s.migration_active() {
+            assert!(Instant::now() < deadline, "maintainer never drained");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(s.migration_gauges().moved, 3000);
+        assert_eq!(s.get(b"k00000").unwrap().value.len(), 455);
+        stop.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_joins_promptly() {
+        let s = store();
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_maintainer(s, MaintainerConfig::default(), stop.clone());
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+}

@@ -54,6 +54,11 @@ pub struct MigrationState {
     pub(crate) dropped: usize,
     /// Old pages recycled into the free-page pool so far.
     pub(crate) pages_reclaimed: usize,
+    /// Pages reclaimed by force-drain (subset of `pages_reclaimed`).
+    pub(crate) force_drained_pages: usize,
+    /// Items dropped by force-draining an enumerated page (subset of
+    /// `dropped`; the rest fell to the no-room fallback).
+    pub(crate) force_dropped: usize,
     pub(crate) hole_bytes_before: u64,
     pub(crate) pages_before: usize,
 }
@@ -68,6 +73,14 @@ pub struct MigrationGauges {
     pub moved: u64,
     pub dropped: u64,
     pub pages_reclaimed: u64,
+    /// Pages reclaimed by force-drain under full-budget pressure
+    /// (subset of `pages_reclaimed`).
+    pub force_drained_pages: u64,
+    /// Items dropped by force-draining an enumerated page — with the
+    /// per-page index, drops are exactly the residents of the pages we
+    /// enumerate (subset of `dropped`; the remainder is the terminal
+    /// no-room fallback).
+    pub force_dropped: u64,
     /// Old-generation items still awaiting the drain.
     pub items_remaining: u64,
 }
@@ -92,6 +105,8 @@ impl KvStore {
             g.moved += m.moved as u64;
             g.dropped += m.dropped as u64;
             g.pages_reclaimed += m.pages_reclaimed as u64;
+            g.force_drained_pages += m.force_drained_pages as u64;
+            g.force_dropped += m.force_dropped as u64;
             g.items_remaining = m.old_items as u64;
         }
         g
@@ -130,6 +145,8 @@ impl KvStore {
             moved: 0,
             dropped: 0,
             pages_reclaimed: 0,
+            force_drained_pages: 0,
+            force_dropped: 0,
             hole_bytes_before: before.hole_bytes,
             pages_before: before.pages_allocated,
         });
@@ -169,12 +186,14 @@ impl KvStore {
                 self.stats.expired_reclaims += 1;
                 continue;
             }
-            // unlink from the old LRU first so a force-drain during the
-            // allocation below can never free the item being moved
+            // unlink from the old LRU and the old page index first so a
+            // force-drain during the allocation below can never free
+            // the item being moved
             {
                 let mig = self.migration.as_mut().expect("active migration");
                 mig.old_lrus[class].remove(id, &mut self.arena);
             }
+            self.page_unlink(id);
             match self.migrate_alloc(total) {
                 Some(new_handle) => {
                     self.alloc.migrate_copy(handle, new_handle, klen + vlen);
@@ -184,6 +203,7 @@ impl KvStore {
                     m.handle = new_handle;
                     m.gen = gen;
                     self.lrus[new_handle.class as usize].insert(id, &mut self.arena);
+                    self.page_link(id);
                     let mig = self.migration.as_mut().expect("active migration");
                     mig.moved += 1;
                     mig.old_items -= 1;
@@ -238,25 +258,24 @@ impl KvStore {
 
     /// Drop every item on the emptiest drainable old page and release
     /// it into the free-page pool — memcached's slab-rebalance move,
-    /// aimed at the cheapest page. Pages pinned by an in-flight move
-    /// (a chunk whose item is temporarily unlinked from the old LRU)
-    /// cannot fully drain, so candidates are tried in ascending
-    /// occupancy until one actually releases. Returns `true` when a
-    /// page was reclaimed (so an allocation retry can succeed).
+    /// aimed at the cheapest page. Victims are enumerated through the
+    /// **per-page item index** (`ItemMeta::{pg_prev,pg_next}` chains
+    /// headed in the class table), so resolving page→items costs
+    /// O(chunks/page) instead of an O(class items) LRU walk — and the
+    /// drop set is exactly the residents of the page we enumerate.
+    /// Pages pinned by an in-flight move (a chunk whose item is
+    /// temporarily unlinked from both indexes) cannot fully drain, so
+    /// candidates are tried in ascending occupancy until one actually
+    /// releases. Returns `true` when a page was reclaimed (so an
+    /// allocation retry can succeed).
     pub(crate) fn force_drain_old_page(&mut self) -> bool {
         let mut candidates = self.alloc.old_page_occupancy();
         candidates.sort_unstable_by_key(|&(_, _, used)| used);
         for (class, page, used) in candidates {
-            let victims: Vec<(u32, u64)> = {
-                let mig = self.migration.as_ref().expect("active migration");
-                mig.old_lrus[class as usize]
-                    .iter_all(&self.arena)
-                    .filter(|&id| self.arena.get(id).handle.loc.page == page)
-                    .map(|id| (id, self.arena.get(id).hash))
-                    .collect()
-            };
+            // walk the page's item chain: O(items on this page)
+            let victims = self.page_residents(true, class, page);
             if (victims.len() as u32) < used {
-                // pinned: dropping the LRU residents cannot release it
+                // pinned: dropping the chain residents cannot release it
                 continue;
             }
             let n = victims.len();
@@ -266,7 +285,9 @@ impl KvStore {
             let freed = self.alloc.release_old_drained_pages();
             if let Some(mig) = self.migration.as_mut() {
                 mig.dropped += n;
+                mig.force_dropped += n;
                 mig.pages_reclaimed += freed;
+                mig.force_drained_pages += freed;
             }
             self.stats.evictions += n as u64;
             if freed > 0 {
@@ -289,6 +310,8 @@ impl KvStore {
         self.mig_totals.moved += mig.moved as u64;
         self.mig_totals.dropped += mig.dropped as u64;
         self.mig_totals.pages_reclaimed += mig.pages_reclaimed as u64;
+        self.mig_totals.force_drained_pages += mig.force_drained_pages as u64;
+        self.mig_totals.force_dropped += mig.force_dropped as u64;
         self.mig_totals.items_remaining = 0;
         self.stats.reconfigures += 1;
         let after = self.alloc.stats();
@@ -524,6 +547,45 @@ mod tests {
             r.items_dropped
         );
         assert!(s.migration_gauges().pages_reclaimed > 0);
+    }
+
+    #[test]
+    fn force_drain_resolves_pages_in_o_items_on_page() {
+        // Full cache: the first migrate_step must force-drain an old
+        // page to make room. With the per-page item index, resolving
+        // page→items walks only that page's residents — the step
+        // counter stays O(chunks/page), independent of the ~1700 items
+        // resident in the class (the old LRU walk was O(class items)
+        // per reclaimed page).
+        let mut s = store_with(64 << 10, 1 << 20); // 16-page budget
+        for i in 0..4000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        assert!(s.stats().evictions > 0, "cache must be full");
+        let live = s.len() as u64;
+        assert!(live > 1000, "live {live}");
+        s.begin_migration(ChunkSizePolicy::Explicit(vec![520, 620, 950]))
+            .unwrap();
+        assert_eq!(s.page_scan_steps(), 0);
+        s.migrate_step(1); // forces at least one page reclaim
+        let scanned = s.page_scan_steps();
+        assert!(scanned >= 1, "force-drain must have walked a page chain");
+        // 518-byte items sit in 600-byte chunks: ≤ 109 chunks per 64 KiB
+        // page. At most two chains walked (the in-flight item can pin
+        // its own page, forcing one skip).
+        let per_page: u64 = (64 << 10) / 600;
+        assert!(
+            scanned <= 2 * per_page,
+            "scanned {scanned} items for one page reclaim (page holds ≤ {per_page})"
+        );
+        assert!(
+            scanned < live / 4,
+            "scan ({scanned}) must not approach class size ({live})"
+        );
+        let g = s.migration_gauges();
+        assert!(g.force_drained_pages >= 1);
+        assert_eq!(g.force_dropped, g.dropped, "all drops from enumerated pages");
     }
 
     #[test]

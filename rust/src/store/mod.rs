@@ -8,12 +8,14 @@ pub mod arena;
 pub mod hashtable;
 pub mod item;
 pub mod lru;
+pub mod maintainer;
 pub mod migrate;
 pub mod sharded;
 #[allow(clippy::module_inception)]
 pub mod store;
 
 pub use item::{total_item_size, ITEM_HEADER, TAIL_CRLF};
+pub use maintainer::{spawn_maintainer, MaintainerConfig};
 pub use migrate::MigrationGauges;
 pub use sharded::ShardedStore;
 pub use store::{KvStore, MigrationReport, StoreError, StoreStats, Value};

@@ -310,13 +310,18 @@ impl ShardedStore {
         self.write_shard(key).meta_set(key, value, opts)
     }
 
-    /// Meta retrieval: zero-copy visit with per-hit metadata (TTL),
-    /// optional touch-on-read and vivify-on-miss ([`MetaGetOpts`]).
-    /// Plain lookups (no `touch`) serve recently-accessed items under
-    /// the shard's *read* lock via [`KvStore::peek_meta`]; touch,
-    /// vivify-on-miss, expired and recency-stale items take the write
-    /// path ([`KvStore::meta_get`]). `Ok(None)` = miss; `Err` = a
-    /// vivify insert failed.
+    /// Meta retrieval: zero-copy visit with per-hit metadata (TTL,
+    /// last-access age, fetched bit), optional touch-on-read and
+    /// vivify-on-miss ([`MetaGetOpts`]). Plain lookups (no `touch`, no
+    /// `h` echo) serve recently-accessed items under the shard's *read*
+    /// lock via [`KvStore::peek_meta`] — and a `u` (no-bump) read
+    /// serves even recency-stale items there, since it wants no LRU
+    /// mutation at all (including `h u`: with no bump the fetched bit
+    /// is read-only, so the probe is a pure read). Touch, a *bumping*
+    /// `h` (the fetched bit must be read and set atomically),
+    /// vivify-on-miss, expired and (bumping) recency-stale items take
+    /// the write path ([`KvStore::meta_get`]). `Ok(None)` = miss;
+    /// `Err` = a vivify insert failed.
     pub fn meta_get<R>(
         &self,
         key: &[u8],
@@ -324,9 +329,9 @@ impl ShardedStore {
         mut f: impl FnMut(ValueRef<'_>, MetaHit) -> R,
     ) -> Result<Option<R>, StoreError> {
         let shard = &self.shards[self.shard_index(key)];
-        if opts.touch.is_none() {
+        if opts.touch.is_none() && (!opts.wants_hit_before || opts.no_bump) {
             let s = shard.store.read().unwrap();
-            match s.peek_meta(key, &mut f) {
+            match s.peek_meta(key, opts, &mut f) {
                 PeekOutcome::Hit(r) => {
                     shard.read_gets.fetch_add(1, Ordering::Relaxed);
                     shard.read_hits.fetch_add(1, Ordering::Relaxed);
@@ -376,6 +381,27 @@ impl ShardedStore {
         for s in &self.shards {
             s.store.write().unwrap().flush_all();
         }
+    }
+
+    // ------------------------------------------- background maintenance
+
+    /// One bounded maintenance pass over every shard: each shard's
+    /// write lock is held only for its own ≤ `max_moves_per_shard`
+    /// demotions (plus at most one slack-page release) — the
+    /// maintainer thread's unit of work. Returns total demotions.
+    pub fn maintain_all(&self, max_moves_per_shard: usize) -> usize {
+        let mut demoted = 0;
+        for s in &self.shards {
+            demoted += s.store.write().unwrap().maintain(max_moves_per_shard).0;
+        }
+        demoted
+    }
+
+    /// True when every shard's HOT/WARM fraction caps hold.
+    pub fn lru_balanced(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.store.read().unwrap().lru_balanced())
     }
 
     pub fn len(&self) -> usize {
@@ -464,6 +490,9 @@ impl ShardedStore {
             agg.expired_reclaims += x.expired_reclaims;
             agg.flush_cmds += x.flush_cmds;
             agg.reconfigures += x.reconfigures;
+            agg.maintainer_runs += x.maintainer_runs;
+            agg.maintainer_demoted += x.maintainer_demoted;
+            agg.maintainer_pages_shed += x.maintainer_pages_shed;
             drop(st);
             agg.cmd_get += s.read_gets.load(Ordering::Relaxed);
             agg.get_hits += s.read_hits.load(Ordering::Relaxed);
@@ -550,6 +579,8 @@ impl ShardedStore {
             agg.moved += g.moved;
             agg.dropped += g.dropped;
             agg.pages_reclaimed += g.pages_reclaimed;
+            agg.force_drained_pages += g.force_drained_pages;
+            agg.force_dropped += g.force_dropped;
             agg.items_remaining += g.items_remaining;
         }
         agg

@@ -229,6 +229,14 @@ pub struct MetaGetOpts {
     /// The key arrived base64-encoded (meta `b`): a vivify may insert
     /// it even when it violates the text-protocol character rules.
     pub binary_key: bool,
+    /// Meta `u`: serve the hit without an LRU bump or access-time
+    /// refresh (and without flipping the fetched bit) — a read that
+    /// leaves recency state untouched.
+    pub no_bump: bool,
+    /// The request asked for the `h` (hit-before) echo: the lookup must
+    /// take the write path so the fetched bit is both read and set
+    /// accurately.
+    pub wants_hit_before: bool,
 }
 
 /// Per-hit metadata the meta read path hands its visitor alongside the
@@ -240,6 +248,13 @@ pub struct MetaHit {
     /// The miss was vivified (`mg ... N`): this caller "won" the right
     /// to recache and the value is the fresh empty item.
     pub won: bool,
+    /// Seconds since the item's last (write-path) access — the meta `l`
+    /// echo. Read-lock fast-path hits do not refresh it, so it is
+    /// accurate to within [`TOUCH_INTERVAL`].
+    pub la: u32,
+    /// The item had been fetched before this request (meta `h` echo;
+    /// memcached's ITEM_FETCHED).
+    pub fetched: bool,
 }
 
 /// A fetched value.
@@ -301,6 +316,15 @@ pub struct StoreStats {
     pub expired_reclaims: u64,
     pub flush_cmds: u64,
     pub reconfigures: u64,
+    /// Background maintenance passes over this store
+    /// ([`KvStore::maintain`]). NOTE: counted per shard — the
+    /// aggregated `stats` value is maintainer passes × shard count.
+    pub maintainer_runs: u64,
+    /// HOT/WARM→COLD demotions performed by the maintainer (the
+    /// rebalance work the set path no longer does inline).
+    pub maintainer_demoted: u64,
+    /// Post-migration slack pages returned to the OS by the maintainer.
+    pub maintainer_pages_shed: u64,
 }
 
 /// Outcome of a completed slab reconfiguration
@@ -350,6 +374,10 @@ pub struct KvStore {
     /// Lifetime migration gauges (completed drains), merged with the
     /// in-flight state by [`KvStore::migration_gauges`].
     pub(crate) mig_totals: MigrationGauges,
+    /// Items visited while resolving page→items through the per-page
+    /// index (force-drain + slack shedding) — the O(chunks/page) proof
+    /// counter the step-count tests read.
+    pub(crate) page_scan_steps: u64,
 }
 
 impl KvStore {
@@ -379,6 +407,7 @@ impl KvStore {
             migration: None,
             last_migration: None,
             mig_totals: MigrationGauges::default(),
+            page_scan_steps: 0,
         })
     }
 
@@ -455,6 +484,70 @@ impl KvStore {
         self.migration.is_some() && item_gen != self.gen
     }
 
+    /// Thread `id` onto the head of its page's item chain (the per-page
+    /// index). Must run *after* `handle`/`gen` are current: the chain
+    /// lives in whichever generation's class table owns the chunk.
+    pub(crate) fn page_link(&mut self, id: u32) {
+        let (class, page, old) = {
+            let m = self.arena.get(id);
+            (m.handle.class, m.handle.loc.page, self.is_old_gen(m.gen))
+        };
+        let head = self.alloc.page_item_head(old, class, page);
+        {
+            let m = self.arena.get_mut(id);
+            m.pg_prev = NIL;
+            m.pg_next = head;
+        }
+        if head != NIL {
+            self.arena.get_mut(head).pg_prev = id;
+        }
+        self.alloc.set_page_item_head(old, class, page, id);
+    }
+
+    /// Enumerate a page's residents through its item chain —
+    /// O(items on this page). Returns `(id, hash)` pairs and bumps the
+    /// step counter the O(chunks/page) tests read. Shared by the
+    /// migration force-drain and the maintainer's slack shedding so
+    /// the walk (and its accounting) cannot diverge.
+    pub(crate) fn page_residents(&mut self, old: bool, class: u16, page: u32) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        let mut cur = self.alloc.page_item_head(old, class, page);
+        while cur != NIL {
+            self.page_scan_steps += 1;
+            let m = self.arena.get(cur);
+            out.push((cur, m.hash));
+            cur = m.pg_next;
+        }
+        out
+    }
+
+    /// Remove `id` from its page's item chain. Must run while
+    /// `handle`/`gen` still describe the chunk being vacated.
+    pub(crate) fn page_unlink(&mut self, id: u32) {
+        let (class, page, old, prev, next) = {
+            let m = self.arena.get(id);
+            (
+                m.handle.class,
+                m.handle.loc.page,
+                self.is_old_gen(m.gen),
+                m.pg_prev,
+                m.pg_next,
+            )
+        };
+        if prev != NIL {
+            self.arena.get_mut(prev).pg_next = next;
+        } else {
+            debug_assert_eq!(self.alloc.page_item_head(old, class, page), id);
+            self.alloc.set_page_item_head(old, class, page, next);
+        }
+        if next != NIL {
+            self.arena.get_mut(next).pg_prev = prev;
+        }
+        let m = self.arena.get_mut(id);
+        m.pg_prev = NIL;
+        m.pg_next = NIL;
+    }
+
     /// Read an item's chunk from whichever generation holds it.
     #[inline]
     pub(crate) fn item_chunk(&self, m: &ItemMeta) -> &[u8] {
@@ -501,6 +594,7 @@ impl KvStore {
 
     pub(crate) fn unlink_and_free(&mut self, id: u32, hash: u64) {
         self.table.remove(id, hash, &mut self.arena);
+        self.page_unlink(id);
         let (class, old) = {
             let m = self.arena.get(id);
             (m.handle.class as usize, self.is_old_gen(m.gen))
@@ -602,12 +696,16 @@ impl KvStore {
             hnext: NIL,
             prev: NIL,
             next: NIL,
+            pg_prev: NIL,
+            pg_next: NIL,
             tier: 0,
+            fetched: false,
             gen: self.gen,
             live: true,
         });
         self.table.insert(id, hash, &mut self.arena);
         self.lrus[handle.class as usize].insert(id, &mut self.arena);
+        self.page_link(id);
         if let Some(obs) = &self.observer {
             obs.observe(total);
         }
@@ -635,17 +733,20 @@ impl KvStore {
             // migrate on rewrite: new chunk in the current geometry
             let key: Vec<u8> = self.item_chunk(self.arena.get(id))[..klen].to_vec();
             let old_class = handle.class as usize;
-            // unlink first so the eviction walk cannot pick this item
+            // unlink first (LRU + page index) so neither the eviction
+            // walk nor a force-drain can pick the item being moved
             {
                 let mig = self.migration.as_mut().expect("old item implies migration");
                 mig.old_lrus[old_class].remove(id, &mut self.arena);
             }
+            self.page_unlink(id);
             let new_handle = match self.alloc_with_eviction(new_total) {
                 Ok(h) => h,
                 Err(e) => {
                     // restore: the item survives the failed rewrite
                     let mig = self.migration.as_mut().expect("still migrating");
                     mig.old_lrus[old_class].insert(id, &mut self.arena);
+                    self.page_link(id);
                     return Err(e);
                 }
             };
@@ -663,6 +764,7 @@ impl KvStore {
             let m = self.arena.get_mut(id);
             m.handle = new_handle;
             m.gen = gen;
+            self.page_link(id);
         } else {
             let chunk_size = self.alloc.chunk_size_of(handle.class);
             if new_total <= chunk_size {
@@ -678,6 +780,7 @@ impl KvStore {
                 let chunk = self.alloc.chunk_mut(new_handle);
                 chunk[..klen].copy_from_slice(&key);
                 chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+                self.page_unlink(id);
                 self.alloc.free(handle, old_total);
                 // move LRU membership to the new class
                 let old_class = handle.class as usize;
@@ -687,14 +790,19 @@ impl KvStore {
                     self.lrus[new_class].insert(id, &mut self.arena);
                 }
                 self.arena.get_mut(id).handle = new_handle;
+                self.page_link(id);
             }
         }
         let cas = self.resolve_cas(cas_override);
+        let now = self.clock.now();
         let m = self.arena.get_mut(id);
         m.vlen = new_value.len() as u32;
         m.total = new_total as u32;
         m.cas = cas;
-        m.time = self.clock.now();
+        m.time = now;
+        // a rewrite stores a new value: the hit-before bit starts over
+        // (memcached parity — a store clears ITEM_FETCHED)
+        m.fetched = false;
         if let Some(obs) = &self.observer {
             obs.observe(new_total);
         }
@@ -895,7 +1003,11 @@ impl KvStore {
         // refresh the access time so the next TOUCH_INTERVAL seconds of
         // hits on this key can be served by `peek` under a read lock
         let now = self.clock.now();
-        self.arena.get_mut(id).time = now;
+        {
+            let m = self.arena.get_mut(id);
+            m.time = now;
+            m.fetched = true;
+        }
         let m = self.arena.get(id);
         let chunk = self.alloc.chunk_gen(old, m.handle);
         Some(f(ValueRef {
@@ -906,8 +1018,9 @@ impl KvStore {
     }
 
     /// Shared lookup for the read-only probes: `Hit` only when the item
-    /// is live, unexpired, and recently bumped.
-    fn peek_find(&self, key: &[u8]) -> PeekOutcome<u32> {
+    /// is live, unexpired, and (unless `allow_stale`, the meta `u`
+    /// no-bump read) recently bumped.
+    fn peek_find(&self, key: &[u8], allow_stale: bool) -> PeekOutcome<u32> {
         let hash = hash_key(key);
         let found = self.table.find(hash, &self.arena, |id| {
             let m = self.arena.get(id);
@@ -921,7 +1034,7 @@ impl KvStore {
         if self.is_expired(m) {
             return PeekOutcome::NeedsWrite; // write path reclaims it
         }
-        if self.clock.now().saturating_sub(m.time) >= TOUCH_INTERVAL {
+        if !allow_stale && self.clock.now().saturating_sub(m.time) >= TOUCH_INTERVAL {
             return PeekOutcome::NeedsWrite; // write path bumps the LRU
         }
         PeekOutcome::Hit(id)
@@ -939,7 +1052,7 @@ impl KvStore {
     ///
     /// [`get_with`]: KvStore::get_with
     pub fn peek<R, F: FnMut(ValueRef<'_>) -> R>(&self, key: &[u8], f: &mut F) -> PeekOutcome<R> {
-        match self.peek_find(key) {
+        match self.peek_find(key, false) {
             PeekOutcome::Miss => PeekOutcome::Miss,
             PeekOutcome::NeedsWrite => PeekOutcome::NeedsWrite,
             PeekOutcome::Hit(id) => {
@@ -954,15 +1067,18 @@ impl KvStore {
         }
     }
 
-    /// [`peek`](KvStore::peek) with per-hit metadata (remaining TTL) —
-    /// the meta `mg` read fast path. Same contract: read-only,
-    /// stat-free, `NeedsWrite` when serving would require mutation.
+    /// [`peek`](KvStore::peek) with per-hit metadata (remaining TTL,
+    /// last-access age) — the meta `mg` read fast path. Same contract:
+    /// read-only, stat-free, `NeedsWrite` when serving would require
+    /// mutation. A `u` (no-bump) request serves recency-stale items
+    /// here too: with no LRU bump wanted, staleness needs no write.
     pub fn peek_meta<R, F: FnMut(ValueRef<'_>, MetaHit) -> R>(
         &self,
         key: &[u8],
+        opts: &MetaGetOpts,
         f: &mut F,
     ) -> PeekOutcome<R> {
-        match self.peek_find(key) {
+        match self.peek_find(key, opts.no_bump) {
             PeekOutcome::Miss => PeekOutcome::Miss,
             PeekOutcome::NeedsWrite => PeekOutcome::NeedsWrite,
             PeekOutcome::Hit(id) => {
@@ -971,6 +1087,8 @@ impl KvStore {
                 let hit = MetaHit {
                     ttl: self.ttl_of(m),
                     won: false,
+                    la: self.clock.now().saturating_sub(m.time),
+                    fetched: m.fetched,
                 };
                 PeekOutcome::Hit(f(
                     ValueRef {
@@ -1001,9 +1119,24 @@ impl KvStore {
         let hash = hash_key(key);
         if let Some(id) = self.find_live(key, hash) {
             self.stats.get_hits += 1;
-            let old = self.touch_lru(id);
+            // capture the pre-request access metadata (the l/h echoes)
             let now = self.clock.now();
-            self.arena.get_mut(id).time = now;
+            let (la, fetched_before) = {
+                let m = self.arena.get(id);
+                (now.saturating_sub(m.time), m.fetched)
+            };
+            let old = if opts.no_bump {
+                // `u`: no LRU bump, no access-time refresh, no fetched
+                // flip — the read leaves recency state untouched
+                let m = self.arena.get(id);
+                self.is_old_gen(m.gen)
+            } else {
+                let old = self.touch_lru(id);
+                let m = self.arena.get_mut(id);
+                m.time = now;
+                m.fetched = true;
+                old
+            };
             if let Some(t) = opts.touch {
                 let exp = self.normalize_exptime(t);
                 self.arena.get_mut(id).exptime = exp;
@@ -1013,6 +1146,8 @@ impl KvStore {
             let hit = MetaHit {
                 ttl: self.ttl_of(m),
                 won: false,
+                la,
+                fetched: fetched_before,
             };
             let chunk = self.alloc.chunk_gen(old, m.handle);
             return Ok(Some(f(
@@ -1046,6 +1181,8 @@ impl KvStore {
         let hit = MetaHit {
             ttl: self.ttl_of(m),
             won: true,
+            la: 0,
+            fetched: false,
         };
         let chunk = self.alloc.chunk_gen(false, m.handle);
         Ok(Some(f(
@@ -1192,6 +1329,135 @@ impl KvStore {
     /// (memcached parity — gauges like item counts are untouched).
     pub fn reset_stats(&mut self) {
         self.stats = StoreStats::default();
+    }
+
+    // -------------------------------------------- background maintenance
+
+    /// One bounded maintenance pass (the background maintainer's unit
+    /// of work, run under a short write-lock lease):
+    ///
+    /// 1. demote up to `max_moves` over-cap HOT/WARM tails into COLD
+    ///    across this store's classes — the tier-rebalance work the set
+    ///    path no longer does inline;
+    /// 2. outside a migration, shed post-drain budget overshoot (the ≤
+    ///    [`MIGRATION_PAGE_SLACK`] carved-over pages a drain into a
+    ///    less-dense geometry can leave behind), returning the memory
+    ///    to the OS — likewise bounded to `max_moves` evictions per
+    ///    pass, so a dense victim page drains across passes instead of
+    ///    stalling this lease.
+    ///
+    /// Returns `(demoted, pages_shed)`.
+    ///
+    /// [`MIGRATION_PAGE_SLACK`]: crate::slab::allocator::MIGRATION_PAGE_SLACK
+    pub fn maintain(&mut self, max_moves: usize) -> (usize, usize) {
+        let mut demoted = 0;
+        for lru in &mut self.lrus {
+            if demoted >= max_moves {
+                break;
+            }
+            demoted += lru.rebalance_step(&mut self.arena, max_moves - demoted);
+        }
+        let pages_shed = if self.migration.is_none() {
+            self.shed_slack_page(max_moves)
+        } else {
+            0
+        };
+        self.stats.maintainer_runs += 1;
+        self.stats.maintainer_demoted += demoted as u64;
+        self.stats.maintainer_pages_shed += pages_shed as u64;
+        (demoted, pages_shed)
+    }
+
+    /// True when every class's HOT/WARM fraction caps hold (the state
+    /// the maintainer converges to).
+    pub fn lru_balanced(&self) -> bool {
+        self.lrus.iter().all(|l| l.is_balanced())
+    }
+
+    /// Per-class `(hot, warm, cold)` tier sizes — test/diagnostic probe.
+    pub fn lru_tier_sizes(&self) -> Vec<(usize, usize, usize)> {
+        self.lrus
+            .iter()
+            .map(|l| (l.hot.len(), l.warm.len(), l.cold.len()))
+            .collect()
+    }
+
+    /// Items visited through the per-page index so far (force-drain and
+    /// slack shedding) — the step counter the O(chunks/page) tests read.
+    pub fn page_scan_steps(&self) -> u64 {
+        self.page_scan_steps
+    }
+
+    /// Structural self-check (test support): every live arena id is
+    /// linked in exactly one LRU tier of exactly one generation, and the
+    /// slab hole identity holds. Returns a description of the first
+    /// violation.
+    pub fn check_integrity(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        let mut visit = |lru: &ClassLru, arena: &Arena| -> Result<(), String> {
+            for id in lru.iter_all(arena) {
+                if !seen.insert(id) {
+                    return Err(format!("id {id} linked twice"));
+                }
+            }
+            Ok(())
+        };
+        for lru in &self.lrus {
+            visit(lru, &self.arena)?;
+        }
+        if let Some(mig) = &self.migration {
+            for lru in &mig.old_lrus {
+                visit(lru, &self.arena)?;
+            }
+        }
+        if seen.len() != self.arena.len() {
+            return Err(format!(
+                "{} ids linked in LRUs but {} live in the arena",
+                seen.len(),
+                self.arena.len()
+            ));
+        }
+        let st = self.alloc.stats();
+        if st.allocated_bytes - st.requested_bytes != st.hole_bytes {
+            return Err("hole identity violated".into());
+        }
+        Ok(())
+    }
+
+    /// Shed budget overshoot: drop pooled buffers first; if carved
+    /// pages still exceed the strict budget, release drained
+    /// current-generation pages, then (if needed) evict residents of
+    /// the emptiest current page — enumerated in O(chunks/page)
+    /// through the per-page index, at most `max_evict` items per call
+    /// so the write-lock lease stays short even for a dense page (the
+    /// partially drained page is finished by subsequent passes).
+    fn shed_slack_page(&mut self, max_evict: usize) -> usize {
+        let before = self.alloc.resident_pages();
+        self.alloc.trim_free_pool();
+        if self.alloc.pages_allocated() > self.alloc.page_budget() {
+            self.alloc.release_current_drained_pages();
+            if self.alloc.pages_allocated() > self.alloc.page_budget() {
+                // only the minimum-occupancy page is wanted — no sort
+                let candidate = self
+                    .alloc
+                    .page_occupancy()
+                    .into_iter()
+                    .min_by_key(|&(_, _, used)| used);
+                if let Some((class, page, used)) = candidate {
+                    let mut victims = self.page_residents(false, class, page);
+                    debug_assert_eq!(victims.len() as u32, used, "page chain out of sync");
+                    victims.truncate(max_evict.max(1));
+                    let n = victims.len() as u64;
+                    for (id, hash) in victims {
+                        self.unlink_and_free(id, hash);
+                    }
+                    self.stats.evictions += n;
+                    self.alloc.release_current_drained_pages();
+                }
+            }
+            self.alloc.trim_free_pool();
+        }
+        before - self.alloc.resident_pages()
     }
 
     /// `flush_all` (eager variant: reclaims immediately).
@@ -1870,19 +2136,151 @@ mod tests {
         let mut s =
             KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
         s.set(b"k", b"hello", 7, 0).unwrap();
-        match s.peek_meta(b"k", &mut |v: ValueRef<'_>, h: MetaHit| (v.flags, h.ttl)) {
+        let plain = MetaGetOpts::default();
+        match s.peek_meta(b"k", &plain, &mut |v: ValueRef<'_>, h: MetaHit| (v.flags, h.ttl)) {
             PeekOutcome::Hit((7, -1)) => {}
             _ => panic!("expected hit"),
         }
         assert!(matches!(
-            s.peek_meta(b"nope", &mut |_: ValueRef<'_>, _| ()),
+            s.peek_meta(b"nope", &plain, &mut |_: ValueRef<'_>, _| ()),
             PeekOutcome::Miss
         ));
         cell.store(1_000_000 + TOUCH_INTERVAL as u64, Ordering::Relaxed);
         assert!(matches!(
-            s.peek_meta(b"k", &mut |_: ValueRef<'_>, _| ()),
+            s.peek_meta(b"k", &plain, &mut |_: ValueRef<'_>, _| ()),
             PeekOutcome::NeedsWrite
         ));
+        // a no-bump (`u`) read serves the stale item on the read path —
+        // it asks for no LRU mutation, so no write lock is needed
+        let nobump = MetaGetOpts {
+            no_bump: true,
+            ..MetaGetOpts::default()
+        };
+        match s.peek_meta(b"k", &nobump, &mut |_: ValueRef<'_>, h: MetaHit| h.la) {
+            PeekOutcome::Hit(la) => assert_eq!(la, TOUCH_INTERVAL),
+            _ => panic!("no-bump read must serve stale items read-only"),
+        }
+        // ...but never an expired one
+        s.set(b"e", b"v", 0, 30).unwrap();
+        cell.store(1_000_000 + TOUCH_INTERVAL as u64 + 40, Ordering::Relaxed);
+        assert!(matches!(
+            s.peek_meta(b"e", &nobump, &mut |_: ValueRef<'_>, _| ()),
+            PeekOutcome::NeedsWrite
+        ));
+    }
+
+    #[test]
+    fn no_bump_read_leaves_recency_state_alone() {
+        let (clock, cell) = Clock::manual(1_000_000);
+        let mut s =
+            KvStore::new(ChunkSizePolicy::default(), PAGE_SIZE, 8 << 20, true, clock).unwrap();
+        s.set(b"k", b"v", 0, 0).unwrap();
+        cell.store(1_000_030, Ordering::Relaxed);
+        let nobump = MetaGetOpts {
+            no_bump: true,
+            ..MetaGetOpts::default()
+        };
+        let hit = s.meta_get(b"k", &nobump, |_, h| h).unwrap().unwrap();
+        assert_eq!(hit.la, 30, "la reports the untouched access age");
+        assert!(!hit.fetched, "u must not flip the fetched bit");
+        // the access time did not move: a second no-bump read agrees
+        let hit = s.meta_get(b"k", &nobump, |_, h| h).unwrap().unwrap();
+        assert_eq!(hit.la, 30);
+        assert!(!hit.fetched);
+        // a normal read refreshes and marks it
+        let hit = s
+            .meta_get(b"k", &MetaGetOpts::default(), |_, h| h)
+            .unwrap()
+            .unwrap();
+        assert_eq!(hit.la, 30, "echo is the pre-request age");
+        assert!(!hit.fetched, "pre-request state");
+        let hit = s
+            .meta_get(b"k", &MetaGetOpts::default(), |_, h| h)
+            .unwrap()
+            .unwrap();
+        assert_eq!(hit.la, 0, "previous read refreshed the access time");
+        assert!(hit.fetched);
+    }
+
+    // ------------------------------------------ background maintenance
+
+    #[test]
+    fn set_path_does_zero_tier_rebalance_work() {
+        // the acceptance guard: a steady-state set only ever links into
+        // HOT — every demotion is performed (and counted) by maintain()
+        let mut s = store(8 << 20);
+        for i in 0..200u32 {
+            s.set(format!("k{i:03}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        let tiers = s.lru_tier_sizes();
+        let (hot, warm, cold): (usize, usize, usize) = tiers
+            .iter()
+            .fold((0, 0, 0), |a, t| (a.0 + t.0, a.1 + t.1, a.2 + t.2));
+        assert_eq!((hot, warm, cold), (200, 0, 0), "sets must stay HOT-linked");
+        assert!(!s.lru_balanced());
+        assert_eq!(s.stats().maintainer_demoted, 0);
+        // the maintainer does the deferred work, bounded per call
+        let (demoted, _) = s.maintain(64);
+        assert!(demoted <= 64);
+        while s.maintain(64).0 > 0 {}
+        assert!(s.lru_balanced());
+        assert!(s.stats().maintainer_demoted >= 160, "80% must leave HOT");
+        assert!(s.stats().maintainer_runs > 0);
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn touch_promotion_defers_rebalance_to_maintainer() {
+        let mut s = store(8 << 20);
+        for i in 0..100u32 {
+            s.set(format!("k{i:03}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        while s.maintain(usize::MAX).0 > 0 {}
+        // hammer gets: COLD→WARM promotions happen inline (O(1)) but
+        // the warm cap is only re-enforced by the next maintain pass
+        for i in 0..100u32 {
+            s.get(format!("k{i:03}").as_bytes()).unwrap();
+        }
+        while s.maintain(usize::MAX).0 > 0 {}
+        assert!(s.lru_balanced());
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn maintain_sheds_post_migration_slack_pages() {
+        use crate::slab::allocator::MIGRATION_PAGE_SLACK;
+        // full cache, then migrate to a denser geometry: the drain can
+        // leave carved pages above the strict budget (≤ slack); the
+        // maintainer must walk them back and return the memory
+        let mut s = KvStore::new(
+            ChunkSizePolicy::default(),
+            64 << 10,
+            1 << 20, // 16-page budget
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        for i in 0..4000u32 {
+            s.set(format!("k{i:04}").as_bytes(), &vec![b'x'; 455], 0, 0)
+                .unwrap();
+        }
+        s.reconfigure(ChunkSizePolicy::Explicit(vec![520, 620, 950]))
+            .unwrap();
+        let budget = s.slab_stats().page_budget;
+        let resident = s.slab_stats().pages_allocated + s.slab_stats().pages_free;
+        assert!(resident <= budget + MIGRATION_PAGE_SLACK);
+        // a bounded number of passes restores the strict budget
+        for _ in 0..(MIGRATION_PAGE_SLACK + 2) {
+            s.maintain(usize::MAX);
+        }
+        let st = s.slab_stats();
+        assert!(
+            st.pages_allocated + st.pages_free <= budget,
+            "slack not shed: {} carved + {} free > {budget}",
+            st.pages_allocated,
+            st.pages_free
+        );
+        s.check_integrity().unwrap();
     }
 
     #[test]

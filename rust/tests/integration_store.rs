@@ -193,6 +193,24 @@ fn reconfigure_under_eviction_pressure_drops_nothing_vital() {
     let moved: usize = migs.iter().map(|m| m.items_moved).sum();
     let dropped: usize = migs.iter().map(|m| m.items_dropped).sum();
     assert_eq!(moved + dropped, live_before);
+    // Deterministic drop accounting via the per-page index: a
+    // force-drain drops exactly the residents of the pages it
+    // enumerates, so every drop is attributable — either counted
+    // against a force-drained page or the terminal no-room fallback
+    // (bounded by one page's worth of items: only the in-flight item's
+    // own pinned page can refuse to drain).
+    let g = store.migration_gauges();
+    assert_eq!(
+        g.dropped,
+        dropped as u64,
+        "gauges and reports must agree"
+    );
+    let fallback = g.dropped - g.force_dropped;
+    let max_chunks_per_page = (64 << 10) / 96; // smallest default class
+    assert!(
+        fallback <= max_chunks_per_page,
+        "fallback drops {fallback} exceed one page's residents"
+    );
     // tighter packing should not need to drop more than a sliver
     assert!(
         dropped * 20 <= live_before,

@@ -224,6 +224,78 @@ fn prop_store_matches_model_hashmap() {
 }
 
 #[test]
+fn prop_maintainer_preserves_lru_invariants() {
+    // Randomized interleavings of inserts/gets/deletes with bounded
+    // maintainer steps: at every step no id may be lost or linked
+    // twice across the LRU tiers and the hole identity must hold; once
+    // the maintainer settles, the HOT/WARM fraction caps must hold too.
+    check("maintainer invariants", 10, |rng| {
+        let mut store = KvStore::new(
+            ChunkSizePolicy::default(),
+            1 << 20,
+            64 << 20,
+            true,
+            Clock::System,
+        )
+        .unwrap();
+        let mut live: Vec<Vec<u8>> = Vec::new();
+        for step in 0..600 {
+            match rng.gen_range(10) {
+                // 60% inserts (various sizes → several classes)
+                0..=5 => {
+                    let key = gen::key(rng, 14);
+                    let vlen = 1 + rng.gen_range(4000) as usize;
+                    store.set(&key, &vec![b'v'; vlen], 0, 0).unwrap();
+                    live.push(key);
+                }
+                // 20% gets (touch → promotion churn)
+                6 | 7 => {
+                    if !live.is_empty() {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        store.get(&live[i]);
+                    }
+                }
+                // 10% deletes
+                8 => {
+                    if !live.is_empty() {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        let key = live.swap_remove(i);
+                        store.delete(&key);
+                        // a re-set key may appear twice in the list
+                        live.retain(|k| k != &key);
+                    }
+                }
+                // 10% bounded maintainer steps
+                _ => {
+                    store.maintain(1 + rng.gen_range(64) as usize);
+                }
+            }
+            if step % 50 == 0 {
+                store.check_integrity().unwrap_or_else(|e| panic!("step {step}: {e}"));
+            }
+        }
+        store.check_integrity().unwrap();
+        // settle: a full maintenance pass must restore every cap
+        while store.maintain(usize::MAX).0 > 0 {}
+        assert!(store.lru_balanced(), "caps must hold after settling");
+        store.check_integrity().unwrap();
+        // per-class caps concretely: hot <= max(20%,1), warm <= max(40%,1)
+        for (hot, warm, cold) in store.lru_tier_sizes() {
+            let total = hot + warm + cold;
+            if total == 0 {
+                continue;
+            }
+            assert!(hot <= (total * 20 / 100).max(1), "hot {hot} of {total}");
+            assert!(warm <= (total * 40 / 100).max(1), "warm {warm} of {total}");
+        }
+        // nothing was lost: every surviving key still reads back
+        for key in &live {
+            assert!(store.get(key).is_some(), "lost {key:?}");
+        }
+    });
+}
+
+#[test]
 fn prop_reconfigure_preserves_model() {
     check("reconfigure preserves data", 8, |rng| {
         let mut store = KvStore::new(
