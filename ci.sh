@@ -18,6 +18,18 @@ cargo build --release
 echo "==> cargo test"
 cargo test -q
 
+echo "==> chaos suite, fixed seed (deterministic reproduction baseline)"
+cargo test -q --test chaos
+
+echo "==> chaos randomized-seed smoke"
+chaos_seed="${SLABFORGE_CHAOS_SEED:-$RANDOM$RANDOM}"
+echo "    SLABFORGE_CHAOS_SEED=$chaos_seed (rerun with this env to reproduce)"
+SLABFORGE_CHAOS_SEED="$chaos_seed" \
+    cargo test -q --test chaos randomized_schedule_no_aborts_no_corruption || {
+    echo "error: randomized chaos schedule failed with SLABFORGE_CHAOS_SEED=$chaos_seed" >&2
+    exit 1
+}
+
 echo "==> bench smoke (256-connection sweep + reconfigure-under-load)"
 "$root/scripts/bench_server_smoke.sh" --smoke
 
@@ -42,6 +54,18 @@ grep -q "set_p99_us" "$root/BENCH_server.json" || {
 echo "==> verify optimize_stall_us landed in BENCH_server.json"
 grep -q "optimize_stall_us" "$root/BENCH_server.json" || {
     echo "error: BENCH_server.json is missing the async-optimize stall dim" >&2
+    exit 1
+}
+
+echo "==> verify shed_connections landed in BENCH_server.json"
+grep -q "shed_connections" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the overload-shedding row" >&2
+    exit 1
+}
+
+echo "==> verify degraded_get_p99_us landed in BENCH_server.json"
+grep -q "degraded_get_p99_us" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the degraded-get dim" >&2
     exit 1
 }
 

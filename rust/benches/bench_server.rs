@@ -527,6 +527,96 @@ fn main() {
         storm_handle.shutdown();
     }
 
+    // ---- stalled readers at the buffer budget (overload shedding) ----------
+    // A dedicated server with a small global connection-buffer budget
+    // (`memory.conn_buffer_budget`). Stalled readers pipeline
+    // large-value gets and never read a byte: their pending output
+    // accumulates until the reactors shed them and the gauge falls back
+    // under budget — while a healthy connection keeps doing small gets
+    // the whole time. `shed_connections` is how many victims the budget
+    // claimed; `degraded_get_p99_us` is the healthy connection's get
+    // p99 while the storm was in flight (the price of degradation,
+    // which must stay a latency tax and never a hang).
+    {
+        use std::io::Write;
+        let shed_store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                64 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let budget = 128 << 10;
+        let shed_handle = Server::new(shed_store.clone())
+            .conn_buffer_budget(budget)
+            .start("127.0.0.1:0")
+            .unwrap();
+        let shed_addr = shed_handle.addr();
+        // healthy conn first: accepts pause while the gauge is over
+        // budget, so late connections could wait out the storm
+        let mut hc = Client::connect(shed_addr).unwrap();
+        // 64 KiB value: big enough to clog a stalled socket fast, small
+        // enough that the healthy conn's own responses stay under budget
+        hc.set("big", &vec![b'B'; 64 << 10], 0, 0).unwrap();
+        for i in 0..256 {
+            hc.set(&format!("h{i:03}"), &vec![b'h'; 300], 0, 0).unwrap();
+        }
+
+        let n_stalled = 4usize;
+        let stalled: Vec<std::net::TcpStream> = (0..n_stalled)
+            .map(|_| {
+                let mut s = std::net::TcpStream::connect(shed_addr).unwrap();
+                // 400 × 64 KiB demanded ≫ kernel buffering: pending
+                // output must pile up far past the budget
+                s.write_all("get big\r\n".repeat(400).as_bytes()).unwrap();
+                s
+            })
+            .collect();
+
+        let mut rng = Pcg64::new(41);
+        let mut lats = Vec::with_capacity(8_192);
+        let cap = if smoke() { 10_000 } else { 50_000 };
+        let t0 = Instant::now();
+        let mut ops = 0usize;
+        let shed_seen = loop {
+            let key = format!("h{:03}", rng.gen_range(256));
+            let t = Instant::now();
+            assert!(hc.get(&key).unwrap().is_some());
+            lats.push(t.elapsed());
+            ops += 1;
+            let shed = shed_handle.metrics.shed_connections.load(Ordering::Relaxed);
+            // keep measuring a little past the first shed so the p99
+            // covers the whole degraded window, not just its onset
+            if shed > 0 && ops >= 2_000 {
+                break shed;
+            }
+            if ops >= cap {
+                break shed;
+            }
+        };
+        let elapsed = t0.elapsed();
+        assert!(shed_seen > 0, "budget never shed a stalled reader");
+        lats.sort_unstable();
+        let p99 = lats[lats.len() * 99 / 100];
+        println!(
+            "stalled readers at budget: {} shed, healthy get p99 {} over {} gets",
+            shed_seen,
+            human_duration(p99),
+            ops
+        );
+        rows.push(
+            Summary::from_samples("stalled readers at budget", vec![elapsed], ops as f64)
+                .with_dim("shed_connections", shed_seen as f64)
+                .with_dim("degraded_get_p99_us", p99.as_micros() as f64),
+        );
+        drop(stalled);
+        shed_handle.shutdown();
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

@@ -119,6 +119,10 @@ pub struct Settings {
     /// Max LRU demotions per shard per pass — the maintainer's
     /// write-lock lease bound (`memory.maintainer_batch`).
     pub maintainer_batch: usize,
+    /// Global connection-buffer byte budget; over it, stalled
+    /// connections are shed and accepting pauses. 0 = unlimited
+    /// (`memory.conn_buffer_budget` / `--conn-buffer-budget`).
+    pub conn_buffer_budget: usize,
     pub policy: ChunkSizePolicy,
     pub optimizer: OptimizerSettings,
 }
@@ -139,6 +143,7 @@ impl Default for Settings {
             maintainer: true,
             maintainer_interval_ms: DEFAULT_MAINTAINER_INTERVAL_MS,
             maintainer_batch: DEFAULT_MAINTAINER_BATCH,
+            conn_buffer_budget: 0,
             policy: ChunkSizePolicy::default(),
             optimizer: OptimizerSettings::default(),
         }
@@ -232,6 +237,11 @@ impl Settings {
                 .as_usize()
                 .filter(|&n| n > 0)
                 .ok_or_else(|| invalid("memory.maintainer_batch"))?;
+        }
+        if let Some(v) = doc.get("memory.conn_buffer_budget") {
+            s.conn_buffer_budget = v
+                .as_usize()
+                .ok_or_else(|| invalid("memory.conn_buffer_budget"))?;
         }
 
         // slab policy: explicit sizes win over growth factor
@@ -410,6 +420,15 @@ artifacts_dir = "artifacts"
         assert_eq!(s.maintainer_batch, 64);
         assert!(Settings::from_toml("[memory]\nmaintainer_batch = 0\n").is_err());
         assert!(Settings::from_toml("[memory]\nmaintainer = 3\n").is_err());
+    }
+
+    #[test]
+    fn conn_buffer_budget_parses_with_unlimited_default() {
+        let s = Settings::from_toml("").unwrap();
+        assert_eq!(s.conn_buffer_budget, 0, "default = unlimited");
+        let s = Settings::from_toml("[memory]\nconn_buffer_budget = 8_388_608\n").unwrap();
+        assert_eq!(s.conn_buffer_budget, 8 << 20);
+        assert!(Settings::from_toml("[memory]\nconn_buffer_budget = \"big\"\n").is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!                    [--threads N] [--legacy-threads] [--max-conns N]
 //!                    [--idle-timeout SECS] [--migrate-batch N]
 //!                    [--maintainer true|false] [--maintainer-interval-ms N]
-//!                    [--maintainer-batch N]
+//!                    [--maintainer-batch N] [--conn-buffer-budget BYTES]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -135,6 +135,12 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
         }
         s.maintainer_batch = n;
     }
+    if let Some(n) = args
+        .flag_parse::<usize>("conn-buffer-budget")
+        .map_err(|e| e.to_string())?
+    {
+        s.conn_buffer_budget = n;
+    }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {
             chunk_min: 96,
@@ -230,7 +236,8 @@ fn cmd_serve(args: &Args) -> i32 {
         .mode(mode)
         .reactor_threads(settings.threads)
         .max_conns(settings.max_conns)
-        .idle_timeout(idle);
+        .idle_timeout(idle)
+        .conn_buffer_budget(settings.conn_buffer_budget);
     let handle = match server.start(&settings.listen) {
         Ok(h) => h,
         Err(e) => return fail(format!("cannot bind {}: {e}", settings.listen)),

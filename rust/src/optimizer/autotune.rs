@@ -12,9 +12,10 @@ use crate::server::conn::{Control, OptimizeGauges};
 use crate::slab::policy::{validate_sizes, ChunkSizePolicy};
 use crate::store::sharded::ShardedStore;
 use crate::util::histogram::SizeHistogram;
+use crate::util::{failpoint, supervisor};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -70,8 +71,16 @@ impl AutoTuner {
     }
 
     /// Reports of every optimization run so far.
+    ///
+    /// Both tuner mutexes recover from poisoning via `into_inner`: the
+    /// protected state (a report log, a gauge struct) is valid after
+    /// any partial update, and a supervised pass that panicked must not
+    /// take `stats slabs` down with it.
     pub fn history(&self) -> Vec<OptimizeReport> {
-        self.history.lock().unwrap().clone()
+        self.history
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
     }
 
     fn params(&self) -> OptimizerParams {
@@ -91,6 +100,10 @@ impl AutoTuner {
     /// outcome lands in the `optimize_*` gauges of `stats slabs`
     /// instead of a blocking reply.
     fn run_async_pass(&self) {
+        // failpoint: an optimizer pass dying mid-flight must be
+        // survivable (supervised loop restarts; a kicked drain is
+        // pumped by the next iteration)
+        failpoint::maybe_panic("autotune.pass.panic");
         let seen = self.collector.total();
         if seen < self.settings.min_samples {
             return;
@@ -99,7 +112,10 @@ impl AutoTuner {
         let current = self.store.chunk_sizes();
         let report = self.optimize_against(&hist, &current);
         let recovery = report.recovery();
-        self.history.lock().unwrap().push(report.clone());
+        self.history
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(report.clone());
         let mut applied = false;
         if recovery >= self.settings.min_improvement {
             let sizes: Vec<usize> = report.new_config.iter().map(|&c| c as usize).collect();
@@ -114,7 +130,7 @@ impl AutoTuner {
                 Err(e) => eprintln!("autotune: optimize apply failed: {e}"),
             }
         }
-        let mut g = self.opt_gauges.lock().unwrap();
+        let mut g = self.opt_gauges.lock().unwrap_or_else(PoisonError::into_inner);
         g.runs += 1;
         if applied {
             g.applied += 1;
@@ -145,6 +161,12 @@ impl AutoTuner {
     /// write lock for at most `migrate_batch` items, so the reactor
     /// threads keep serving between steps and are never pinned for a
     /// whole migration.
+    /// The loop body runs under [`supervisor::supervise`]: a panicking
+    /// pass (or an injected `autotune.pass.panic`) is logged, counted
+    /// in `thread_restarts`, and retried after a capped backoff. A
+    /// panic while pumping a drain leaves the two-generation state
+    /// parked inside the shards; the next iteration's
+    /// `migration_active()` check picks it right back up.
     pub fn spawn(self: &Arc<Self>, shutdown: Arc<AtomicBool>) -> JoinHandle<()> {
         let tuner = self.clone();
         std::thread::Builder::new()
@@ -153,7 +175,7 @@ impl AutoTuner {
                 let interval = Duration::from_secs(tuner.settings.interval_secs.max(1));
                 let tick = Duration::from_millis(100);
                 let mut waited = Duration::ZERO;
-                while !shutdown.load(Ordering::SeqCst) {
+                supervisor::supervise("autotune", &shutdown, || {
                     if tuner.store.migration_active() {
                         while tuner.store.migration_step_all() {
                             if shutdown.load(Ordering::SeqCst) {
@@ -164,7 +186,7 @@ impl AutoTuner {
                             // acquisitions could starve readers
                             std::thread::sleep(Duration::from_millis(1));
                         }
-                        continue;
+                        return;
                     }
                     // a queued `slabs optimize` runs ahead of the
                     // periodic schedule; its drain is pumped above.
@@ -176,18 +198,27 @@ impl AutoTuner {
                     if tuner.optimize_pending.load(Ordering::SeqCst) {
                         tuner.optimize_running.store(true, Ordering::SeqCst);
                         tuner.optimize_pending.store(false, Ordering::SeqCst);
-                        tuner.run_async_pass();
+                        // `running` must clear even when the pass
+                        // panics, or the gauges would report a stuck
+                        // optimize forever; the panic still reaches the
+                        // supervisor (logged + counted)
+                        let pass = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || tuner.run_async_pass(),
+                        ));
                         tuner.optimize_running.store(false, Ordering::SeqCst);
-                        continue;
+                        if let Err(p) = pass {
+                            std::panic::resume_unwind(p);
+                        }
+                        return;
                     }
                     std::thread::sleep(tick);
                     waited += tick;
                     if waited < interval {
-                        continue;
+                        return;
                     }
                     waited = Duration::ZERO;
                     tuner.run_async_pass();
-                }
+                });
             })
             .expect("spawn autotune thread")
     }
@@ -237,7 +268,7 @@ impl Control for AutoTuner {
     }
 
     fn optimize_gauges(&self) -> OptimizeGauges {
-        let mut g = *self.opt_gauges.lock().unwrap();
+        let mut g = *self.opt_gauges.lock().unwrap_or_else(PoisonError::into_inner);
         g.pending = self.optimize_pending.load(Ordering::SeqCst)
             || self.optimize_running.load(Ordering::SeqCst);
         g

@@ -238,6 +238,15 @@ pub fn parse_classic(line: &[u8]) -> Result<Request<'_>, ParseError> {
             Some(b"optimize") => Ok(Request::classic(Opcode::SlabsOptimize)),
             _ => Err(ParseError::UnknownCommand),
         },
+        b"failpoints" => {
+            // whole raw tail (subcommand + spec) — the executor owns
+            // the grammar so `set a=1in5,b=once` keeps its commas
+            let mut r = Request::classic(Opcode::Failpoints);
+            if let Some(first) = toks.get(1) {
+                r.key = tail_from(line, first);
+            }
+            Ok(r)
+        }
         _ => Err(ParseError::UnknownCommand),
     }
 }
@@ -335,6 +344,17 @@ mod tests {
         assert_eq!(parse_command(b"quit").unwrap().op, Opcode::Quit);
         let r = parse_command(b"flush_all noreply").unwrap();
         assert_eq!((r.op, r.quiet), (Opcode::FlushAll, true));
+    }
+
+    #[test]
+    fn failpoints_lines_keep_the_raw_tail() {
+        let r = parse_command(b"failpoints").unwrap();
+        assert_eq!((r.op, r.key), (Opcode::Failpoints, b"".as_slice()));
+        let r = parse_command(b"failpoints set a=1in5,b=once").unwrap();
+        assert_eq!(r.op, Opcode::Failpoints);
+        assert_eq!(r.key, b"set a=1in5,b=once");
+        let r = parse_command(b"failpoints clear a").unwrap();
+        assert_eq!(r.key, b"clear a");
     }
 
     #[test]

@@ -53,6 +53,10 @@ pub enum Opcode {
     SlabsReconfigure,
     /// Extension: `slabs optimize`.
     SlabsOptimize,
+    /// Extension: `failpoints [list|set <spec>|clear [name]]` —
+    /// runtime control of the fault-injection registry
+    /// (`util::failpoint`). The raw argument tail rides in `key`.
+    Failpoints,
 }
 
 /// Response-echo flags a request may ask for (meta `v f c t s k O`).

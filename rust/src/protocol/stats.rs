@@ -29,6 +29,9 @@ pub fn render_general(
     stat(out, "total_connections", conns.total);
     stat(out, "rejected_connections", conns.rejected);
     stat(out, "conn_yields", conns.yields);
+    stat(out, "shed_connections", conns.shed);
+    stat(out, "conn_buffer_bytes", conns.buffer_bytes);
+    stat(out, "thread_restarts", conns.thread_restarts);
     stat(out, "curr_items", items);
     stat(out, "cmd_get", ops.cmd_get);
     stat(out, "cmd_set", ops.cmd_set);
@@ -148,6 +151,9 @@ mod tests {
             total: 9,
             rejected: 1,
             yields: 4,
+            shed: 2,
+            buffer_bytes: 8192,
+            thread_restarts: 0,
         };
         render_general(
             &mut out,
@@ -165,6 +171,9 @@ mod tests {
         assert!(t.contains("STAT total_connections 9"));
         assert!(t.contains("STAT rejected_connections 1"));
         assert!(t.contains("STAT conn_yields 4"));
+        assert!(t.contains("STAT shed_connections 2"));
+        assert!(t.contains("STAT conn_buffer_bytes 8192"));
+        assert!(t.contains("STAT thread_restarts 0"));
         assert!(t.ends_with("END\r\n"));
     }
 

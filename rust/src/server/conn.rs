@@ -166,6 +166,15 @@ impl RecvBuf {
         }
         self.buf.extend_from_slice(data);
     }
+
+    /// Release the high-water allocation of a fully-drained buffer
+    /// down to `floor` capacity (idle-connection memory reclamation —
+    /// a past 1 MiB upload must not pin 1 MiB per idle conn forever).
+    fn shrink_idle(&mut self, floor: usize) {
+        if self.len() == 0 && self.buf.capacity() > floor {
+            self.buf.shrink_to(floor);
+        }
+    }
 }
 
 enum Phase {
@@ -234,6 +243,15 @@ impl Conn {
     /// Returns the number of commands completed.
     pub fn on_bytes(&mut self, data: &[u8], out: &mut Vec<u8>) -> usize {
         self.on_bytes_sink(data, &mut BufSink(out))
+    }
+
+    /// Idle-sweep memory reclamation: shed oversized receive/staging
+    /// allocations left behind by a large upload or multiget.
+    pub fn shrink_idle(&mut self, floor: usize) {
+        self.rb.shrink_idle(floor);
+        if self.scratch.is_empty() && self.scratch.capacity() > floor {
+            self.scratch.shrink_to(floor);
+        }
     }
 
     /// Sink-generic core of [`Conn::on_bytes`]: the reactor path feeds
@@ -494,6 +512,46 @@ impl Exec<'_> {
                 let msg = self.control.optimize_now();
                 ResponseWriter::for_request(sink, req).line(&msg);
             }
+            Opcode::Failpoints => self.run_failpoints(req, sink),
+        }
+    }
+
+    /// `failpoints [list]` / `failpoints set <name=spec[,..]>` /
+    /// `failpoints clear [name]` — runtime control of the
+    /// fault-injection registry ([`crate::util::failpoint`]). `list`
+    /// renders one `FAILPOINT <name> <spec> <fires>` line per armed
+    /// point, then `END`.
+    fn run_failpoints<S: RespSink>(&mut self, req: &Request<'_>, sink: &mut S) {
+        use crate::util::failpoint;
+        let mut w = ResponseWriter::for_request(sink, req);
+        let arg = req.key;
+        let (sub, rest) = match arg.iter().position(|&b| b == b' ') {
+            Some(i) => (&arg[..i], &arg[i + 1..]),
+            None => (arg, &b""[..]),
+        };
+        match sub {
+            b"" | b"list" => {
+                for (name, spec, fires) in failpoint::list() {
+                    w.line(&format!("FAILPOINT {name} {spec} {fires}"));
+                }
+                w.line("END");
+            }
+            b"set" => {
+                let spec = String::from_utf8_lossy(rest);
+                match failpoint::arm_list(&spec) {
+                    Ok(()) => w.ok(),
+                    Err(e) => w.client_error(&e),
+                }
+            }
+            b"clear" => {
+                if rest.is_empty() {
+                    failpoint::disarm_all();
+                } else {
+                    failpoint::disarm(&String::from_utf8_lossy(rest));
+                }
+                w.ok();
+            }
+            _ => w.client_error("usage: failpoints [list|set name=spec[,..]|clear [name]]"),
         }
     }
 
@@ -767,6 +825,14 @@ impl OutBuf {
             }
         }
     }
+
+    /// Release a drained-but-oversized allocation down to `floor`
+    /// (idle sweep under connection-buffer budget pressure).
+    pub fn shrink_idle(&mut self, floor: usize) {
+        if self.is_empty() && self.buf.capacity() > floor {
+            self.buf.shrink_to(floor);
+        }
+    }
 }
 
 impl Default for OutBuf {
@@ -836,6 +902,20 @@ impl<T: Read + Write> DrivenConn<T> {
         !self.out.is_empty()
     }
 
+    /// Unflushed response bytes — the quantity the reactor charges
+    /// against the global connection-buffer budget (a stalled reader
+    /// accumulates up to `OUT_HIGH_WATER` + one response here).
+    pub fn pending_out_len(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Idle-sweep memory reclamation: shed drained-but-oversized
+    /// receive, staging, and output allocations down to `floor`.
+    pub fn shrink_idle(&mut self, floor: usize) {
+        self.out.shrink_idle(floor);
+        self.conn.shrink_idle(floor);
+    }
+
     /// The connection yielded with work still buffered (kernel bytes
     /// unread or parsed-but-unexecuted commands) and can make progress
     /// without a new readiness event. The reactor re-drives these
@@ -900,6 +980,13 @@ impl<T: Read + Write> DrivenConn<T> {
                 break;
             }
             budget -= 1;
+            // `conn.read.eintr`: exercise the signal-interrupt retry
+            // path without a real signal (arm with `1inN`, never
+            // `always` — like real EINTR storms, that would spin)
+            if crate::util::failpoint::fired("conn.read.eintr") {
+                budget += 1;
+                continue;
+            }
             match self.io.read(&mut rbuf) {
                 Ok(0) => {
                     self.peer_closed = true;
@@ -1132,6 +1219,29 @@ mod tests {
             String::from_utf8_lossy(&out),
             "STORED\r\nVALUE foo 7 5\r\nhello\r\nEND\r\n"
         );
+    }
+
+    #[test]
+    fn failpoints_command_sets_lists_and_clears() {
+        // names are unique to this test: the registry is
+        // process-global and lib tests run in parallel
+        let mut c = conn();
+        let out = run(&mut c, b"failpoints set fp.conn.a=1in5,fp.conn.b=once\r\n");
+        assert_eq!(out, b"OK\r\n");
+        let out = String::from_utf8(run(&mut c, b"failpoints list\r\n")).unwrap();
+        assert!(out.contains("FAILPOINT fp.conn.a 1in5 0"), "{out}");
+        assert!(out.contains("FAILPOINT fp.conn.b once 0"), "{out}");
+        assert!(out.ends_with("END\r\n"), "{out}");
+        let out = run(&mut c, b"failpoints clear fp.conn.a\r\n");
+        assert_eq!(out, b"OK\r\n");
+        // cleared points stay listed (with their fire history) as `off`
+        let out = String::from_utf8(run(&mut c, b"failpoints\r\n")).unwrap();
+        assert!(out.contains("FAILPOINT fp.conn.a off"), "{out}");
+        assert_eq!(run(&mut c, b"failpoints clear fp.conn.b\r\n"), b"OK\r\n");
+        let out = run(&mut c, b"failpoints set fp.conn.a=bogus\r\n");
+        assert!(out.starts_with(b"CLIENT_ERROR"), "{:?}", out);
+        let out = run(&mut c, b"failpoints frob\r\n");
+        assert!(out.starts_with(b"CLIENT_ERROR usage"), "{:?}", out);
     }
 
     #[test]

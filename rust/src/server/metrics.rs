@@ -1,5 +1,6 @@
 //! Server-level counters (lock-free; sampled by `stats` and benches).
 
+use crate::util::supervisor;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 #[derive(Debug, Default)]
@@ -19,6 +20,13 @@ pub struct Metrics {
     pub bytes_read: AtomicU64,
     pub bytes_written: AtomicU64,
     pub protocol_errors: AtomicU64,
+    /// Connections closed by overload shedding (conn-buffer budget
+    /// exhausted; most-backlogged stalled connection evicted first).
+    pub shed_connections: AtomicU64,
+    /// Gauge: bytes currently buffered in connection output buffers
+    /// across all reactors (what the conn-buffer budget is charged
+    /// against).
+    pub conn_buffer_bytes: AtomicU64,
 }
 
 impl Metrics {
@@ -55,6 +63,7 @@ impl Metrics {
             &self.bytes_read,
             &self.bytes_written,
             &self.protocol_errors,
+            &self.shed_connections,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -67,6 +76,9 @@ impl Metrics {
             total: self.connections_accepted.load(Ordering::Relaxed),
             rejected: self.rejected_connections.load(Ordering::Relaxed),
             yields: self.conn_yields.load(Ordering::Relaxed),
+            shed: self.shed_connections.load(Ordering::Relaxed),
+            buffer_bytes: self.conn_buffer_bytes.load(Ordering::Relaxed),
+            thread_restarts: supervisor::thread_restarts(),
         }
     }
 
@@ -81,6 +93,8 @@ impl Metrics {
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            shed_connections: self.shed_connections.load(Ordering::Relaxed),
+            conn_buffer_bytes: self.conn_buffer_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -92,6 +106,9 @@ pub struct ConnCounters {
     pub total: u64,
     pub rejected: u64,
     pub yields: u64,
+    pub shed: u64,
+    pub buffer_bytes: u64,
+    pub thread_restarts: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +122,8 @@ pub struct MetricsSnapshot {
     pub bytes_read: u64,
     pub bytes_written: u64,
     pub protocol_errors: u64,
+    pub shed_connections: u64,
+    pub conn_buffer_bytes: u64,
 }
 
 #[cfg(test)]

@@ -38,7 +38,7 @@ use super::sys::{
 use crate::store::sharded::ShardedStore;
 use std::net::TcpStream;
 use std::os::unix::io::{AsRawFd, RawFd};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -59,6 +59,14 @@ const SWEEP_EVERY: Duration = Duration::from_secs(1);
 /// responses before connections are closed regardless.
 const DRAIN_DEADLINE: Duration = Duration::from_millis(500);
 
+/// Idle-buffer shrink floor: a drained idle connection keeps at most
+/// this much receive/output/staging capacity per buffer.
+const IDLE_BUF_FLOOR: usize = 4096;
+
+/// How long a connection must sit idle before the sweep reclaims its
+/// oversized buffers (immediately under budget pressure).
+const IDLE_SHRINK_AFTER: Duration = Duration::from_secs(5);
+
 /// Hand-off queue from the accept thread into one reactor.
 struct Inbox {
     queue: Mutex<Vec<TcpStream>>,
@@ -66,6 +74,9 @@ struct Inbox {
     /// Cleared when the owning reactor exits (including by panic) so
     /// the accept thread stops routing sockets into a black hole.
     alive: AtomicBool,
+    /// Connections the accept thread asks this reactor to reap (oldest
+    /// idle first) — the fd-exhaustion relief valve.
+    reap: AtomicUsize,
 }
 
 impl Inbox {
@@ -118,6 +129,15 @@ impl ReactorPool {
         }
     }
 
+    /// Ask every reactor to close its oldest-idle connection (the
+    /// accept thread's EMFILE relief valve — frees up to N fds).
+    pub(crate) fn request_reap(&self) {
+        for inbox in &self.inboxes {
+            inbox.reap.fetch_add(1, Ordering::SeqCst);
+            inbox.wake.wake();
+        }
+    }
+
     pub(crate) fn join_all(&self) {
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
@@ -129,6 +149,7 @@ impl ReactorPool {
 pub(crate) fn start(
     threads: usize,
     idle_timeout: Option<Duration>,
+    buffer_budget: usize,
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
     metrics: Arc<Metrics>,
@@ -142,6 +163,7 @@ pub(crate) fn start(
             queue: Mutex::new(Vec::new()),
             wake: WakeFd::new()?,
             alive: AtomicBool::new(true),
+            reap: AtomicUsize::new(0),
         });
         let ep = Epoll::new()?;
         ep.add(inbox.wake.raw(), WAKE_TOKEN, EPOLLIN)?;
@@ -149,6 +171,7 @@ pub(crate) fn start(
             ep,
             inbox: inbox.clone(),
             idle_timeout,
+            buffer_budget,
             store: store.clone(),
             control: control.clone(),
             metrics: metrics.clone(),
@@ -192,13 +215,40 @@ struct Entry {
     fd: RawFd,
     /// EPOLLOUT currently registered.
     interest_write: bool,
+    /// Pending-output bytes currently charged to the global
+    /// `conn_buffer_bytes` gauge (settled after every drive; the gauge
+    /// is the sum of these across all reactors).
+    accounted: usize,
     metrics: Arc<Metrics>,
+}
+
+impl Entry {
+    /// Reconcile the global buffer gauge with this connection's actual
+    /// pending output.
+    fn settle_account(&mut self) {
+        let now = self.dc.pending_out_len();
+        if now > self.accounted {
+            self.metrics
+                .conn_buffer_bytes
+                .fetch_add((now - self.accounted) as u64, Ordering::Relaxed);
+        } else if now < self.accounted {
+            self.metrics
+                .conn_buffer_bytes
+                .fetch_sub((self.accounted - now) as u64, Ordering::Relaxed);
+        }
+        self.accounted = now;
+    }
 }
 
 impl Drop for Entry {
     fn drop(&mut self) {
         // the TcpStream closes with the DrivenConn, which deregisters
         // the fd from epoll
+        if self.accounted > 0 {
+            self.metrics
+                .conn_buffer_bytes
+                .fetch_sub(self.accounted as u64, Ordering::Relaxed);
+        }
         Metrics::bump(&self.metrics.connections_closed);
         Metrics::dec(&self.metrics.curr_connections);
     }
@@ -233,6 +283,11 @@ struct ReactorCtx {
     ep: Epoll,
     inbox: Arc<Inbox>,
     idle_timeout: Option<Duration>,
+    /// Global connection-buffer byte budget (0 = unlimited): when the
+    /// `conn_buffer_bytes` gauge exceeds this, the reactor sheds its
+    /// most-backlogged stalled connections and the accept thread
+    /// pauses (`server::tcp`).
+    buffer_budget: usize,
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
     metrics: Arc<Metrics>,
@@ -279,6 +334,12 @@ impl ReactorCtx {
                 let writable = bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0;
                 self.drive_slot(&mut slab, token as usize, readable, writable, &mut next);
             }
+            // fd-exhaustion relief requested by the accept thread:
+            // close the oldest-idle connections to free descriptors
+            let reap = self.inbox.reap.swap(0, Ordering::SeqCst);
+            if reap > 0 {
+                self.reap_oldest(&mut slab, reap);
+            }
             // new sockets register after the event batch so a freed
             // slot can never be reused while its stale events are still
             // in `events`
@@ -300,12 +361,63 @@ impl ReactorCtx {
             next.dedup();
             std::mem::swap(&mut redrive, &mut next);
 
-            if self.idle_timeout.is_some() && last_sweep.elapsed() >= SWEEP_EVERY {
+            if self.buffer_budget > 0 {
+                self.shed_over_budget(&mut slab);
+            }
+            if last_sweep.elapsed() >= SWEEP_EVERY {
                 self.sweep_idle(&mut slab);
                 last_sweep = Instant::now();
             }
         }
         self.drain_and_close(&mut slab);
+    }
+
+    /// Overload shedding: while the global buffer gauge is over budget,
+    /// close this reactor's most-backlogged *stalled* connection (has
+    /// pending output and EPOLLOUT registered — i.e. the socket already
+    /// refused it). Healthy connections are never shed; each close
+    /// releases its accounted bytes, so the loop terminates.
+    fn shed_over_budget(&self, slab: &mut Slab) {
+        while self.metrics.conn_buffer_bytes.load(Ordering::Relaxed) > self.buffer_budget as u64
+        {
+            let mut victim: Option<(usize, usize)> = None;
+            for slot in 0..slab.conns.len() {
+                if let Some(e) = &slab.conns[slot] {
+                    let pending = e.dc.pending_out_len();
+                    if e.interest_write
+                        && pending > 0
+                        && victim.is_none_or(|(_, p)| pending > p)
+                    {
+                        victim = Some((slot, pending));
+                    }
+                }
+            }
+            // no stalled conn here: another reactor holds the backlog
+            let Some((slot, _)) = victim else { return };
+            Metrics::bump(&self.metrics.shed_connections);
+            slab.close(slot);
+        }
+    }
+
+    /// Close the `n` longest-idle connections (EMFILE relief). Under fd
+    /// exhaustion even a mostly-active table must give something up, so
+    /// this picks the oldest unconditionally.
+    fn reap_oldest(&self, slab: &mut Slab, n: usize) {
+        let now = Instant::now();
+        for _ in 0..n {
+            let mut oldest: Option<(usize, Duration)> = None;
+            for slot in 0..slab.conns.len() {
+                if let Some(e) = &slab.conns[slot] {
+                    let idle = e.dc.idle_for(now);
+                    if oldest.is_none_or(|(_, d)| idle > d) {
+                        oldest = Some((slot, idle));
+                    }
+                }
+            }
+            let Some((slot, _)) = oldest else { return };
+            Metrics::bump(&self.metrics.shed_connections);
+            slab.close(slot);
+        }
     }
 
     /// Register an accepted socket: nonblocking, edge-triggered
@@ -340,6 +452,7 @@ impl ReactorCtx {
             dc,
             fd,
             interest_write: false,
+            accounted: 0,
             metrics: self.metrics.clone(),
         });
         self.drive_slot(slab, slot, true, true, redrive);
@@ -347,6 +460,12 @@ impl ReactorCtx {
 
     /// Drive one connection and apply the outcome: close, EPOLLOUT
     /// interest re-registration, or a redrive request.
+    ///
+    /// The drive runs under `catch_unwind`: a request that panics the
+    /// execution core (lock-poisoning recovery gone wrong, a poisoned
+    /// payload) closes **that connection** — never the reactor. State
+    /// isolation is per-connection by construction (`Conn` owns its
+    /// buffers; store mutations are transactional per call).
     fn drive_slot(
         &self,
         slab: &mut Slab,
@@ -359,20 +478,41 @@ impl ReactorCtx {
         // slab is mutated)
         let outcome = match slab.conns.get_mut(slot).and_then(Option::as_mut) {
             None => return, // stale event for an already-closed connection
-            Some(entry) => match entry.dc.drive(readable, writable, &self.metrics) {
-                ConnState::Closed => None,
-                ConnState::Open { wants_write } => Some((
-                    wants_write,
-                    entry.interest_write,
-                    entry.fd,
-                    entry.dc.wants_redrive(),
-                )),
-            },
+            Some(entry) => {
+                let state = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    entry.dc.drive(readable, writable, &self.metrics)
+                }))
+                .unwrap_or_else(|_| {
+                    eprintln!(
+                        "slabforge: connection panicked mid-request; closing only that \
+                         connection"
+                    );
+                    ConnState::Closed
+                });
+                // keep the global buffer gauge in sync with whatever
+                // this drive buffered or flushed
+                entry.settle_account();
+                match state {
+                    ConnState::Closed => None,
+                    ConnState::Open { wants_write } => Some((
+                        wants_write,
+                        entry.interest_write,
+                        entry.fd,
+                        entry.dc.wants_redrive(),
+                    )),
+                }
+            }
         };
         match outcome {
             None => slab.close(slot),
             Some((wants_write, interest_write, fd, wants_redrive)) => {
-                if wants_write != interest_write {
+                // re-arm whenever write interest is (or was) registered
+                // even if unchanged: with edge-triggered registration a
+                // spuriously-cleared `write_ready` (injected EAGAIN, a
+                // raced short write) would otherwise wait forever for
+                // an edge that already passed — EPOLL_CTL_MOD re-delivers
+                // the event if the socket is in fact writable.
+                if wants_write || interest_write {
                     let mut bits = EPOLLIN | EPOLLRDHUP | EPOLLET;
                     if wants_write {
                         bits |= EPOLLOUT;
@@ -392,20 +532,28 @@ impl ReactorCtx {
         }
     }
 
-    /// Close connections with no read activity past the idle timeout —
-    /// `quit`-less load generators cannot leak fds.
+    /// Periodic housekeeping pass: close connections with no activity
+    /// past the idle timeout (`quit`-less load generators cannot leak
+    /// fds) and reclaim oversized buffers from idle survivors —
+    /// immediately when the buffer gauge nears its budget, otherwise
+    /// only after [`IDLE_SHRINK_AFTER`] so active connections keep
+    /// their warm allocations.
     fn sweep_idle(&self, slab: &mut Slab) {
-        let Some(timeout) = self.idle_timeout else {
-            return;
-        };
         let now = Instant::now();
+        let pressure = self.buffer_budget > 0
+            && self.metrics.conn_buffer_bytes.load(Ordering::Relaxed)
+                > (self.buffer_budget as u64) / 2;
         for slot in 0..slab.conns.len() {
-            let idle = match &slab.conns[slot] {
-                Some(entry) => entry.dc.idle_for(now),
-                None => continue,
+            let Some(entry) = slab.conns[slot].as_mut() else {
+                continue;
             };
-            if idle > timeout {
+            let idle = entry.dc.idle_for(now);
+            if self.idle_timeout.is_some_and(|t| idle > t) {
                 slab.close(slot);
+                continue;
+            }
+            if pressure || idle > IDLE_SHRINK_AFTER {
+                entry.dc.shrink_idle(IDLE_BUF_FLOOR);
             }
         }
     }

@@ -63,6 +63,7 @@ extern "C" {
     fn close(fd: c_int) -> c_int;
     fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
     fn signal(signum: c_int, handler: usize) -> usize;
+    fn dup(fd: c_int) -> c_int;
 }
 
 /// An epoll instance. Registered fds deregister themselves when their
@@ -167,8 +168,34 @@ impl WakeFd {
 
 /// Scatter-gather write of up to four slices (pending buffer, response
 /// header, value chunk, trailing CRLF). Returns bytes written.
+///
+/// Failpoints (disarmed: one relaxed load each):
+/// * `sys.writev.eagain` — report `WouldBlock` without writing, as if
+///   the socket buffer were full (the conn must buffer and re-arm
+///   EPOLLOUT);
+/// * `sys.writev.short` — truncate the request to a 1-byte write (the
+///   byte IS written, so short-write bookkeeping must resume exactly
+///   after it — dropping it would corrupt the stream, which is the
+///   bug class this point exists to catch).
 pub fn writev_slices(fd: RawFd, bufs: &[&[u8]]) -> io::Result<usize> {
     debug_assert!(bufs.len() <= 4);
+    if crate::util::failpoint::fired("sys.writev.eagain") {
+        return Err(io::Error::from(io::ErrorKind::WouldBlock));
+    }
+    if crate::util::failpoint::fired("sys.writev.short") {
+        if let Some(first) = bufs.iter().find(|b| !b.is_empty()) {
+            let iov = IoVec {
+                base: first.as_ptr() as *const c_void,
+                len: 1,
+            };
+            let rc = unsafe { writev(fd, &iov, 1) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            return Ok(rc as usize);
+        }
+        return Ok(0);
+    }
     let mut iov = [IoVec {
         base: std::ptr::null(),
         len: 0,
@@ -201,6 +228,21 @@ pub fn writev_slices(fd: RawFd, bufs: &[&[u8]]) -> io::Result<usize> {
         return Err(io::Error::last_os_error());
     }
     Ok(rc as usize)
+}
+
+// ------------------------------------------------------------------ dup
+
+/// `dup(2)` an fd into an owned `File` — used by the accept loop to
+/// park a **reserve fd** at startup: on `EMFILE` the reserve is
+/// dropped, the table briefly has one free slot to accept-and-close
+/// with, and the reserve is re-duplicated afterwards (the classic
+/// fd-exhaustion livelock breaker).
+pub fn dup_fd(fd: RawFd) -> io::Result<File> {
+    let rc = unsafe { dup(fd) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(unsafe { File::from_raw_fd(rc) })
 }
 
 // -------------------------------------------------------------- signals

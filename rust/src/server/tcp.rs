@@ -15,9 +15,13 @@ use super::conn::Conn;
 use super::metrics::Metrics;
 #[cfg(target_os = "linux")]
 use super::reactor::{self, ReactorPool};
+#[cfg(target_os = "linux")]
+use super::sys;
 use crate::store::sharded::ShardedStore;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(target_os = "linux")]
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -111,6 +115,11 @@ pub struct Server {
     pub reactor_threads: usize,
     pub max_conns: usize,
     pub idle_timeout: Option<Duration>,
+    /// Global connection-buffer byte budget (0 = unlimited). Over
+    /// budget, the reactors shed their most-backlogged stalled
+    /// connections and the accept thread pauses until the gauge falls
+    /// back under.
+    pub conn_buffer_budget: usize,
 }
 
 impl Server {
@@ -126,6 +135,7 @@ impl Server {
             reactor_threads: default_reactor_threads(),
             max_conns: DEFAULT_MAX_CONNS,
             idle_timeout: None,
+            conn_buffer_budget: 0,
         }
     }
 
@@ -148,6 +158,13 @@ impl Server {
     /// (`None` = never).
     pub fn idle_timeout(mut self, t: Option<Duration>) -> Self {
         self.idle_timeout = t;
+        self
+    }
+
+    /// Cap total pending-output bytes across all connections
+    /// (0 = unlimited); see [`Server::conn_buffer_budget`].
+    pub fn conn_buffer_budget(mut self, bytes: usize) -> Self {
+        self.conn_buffer_budget = bytes;
         self
     }
 
@@ -178,6 +195,7 @@ impl Server {
         let pool = reactor::start(
             self.reactor_threads,
             self.idle_timeout,
+            self.conn_buffer_budget,
             self.store,
             self.control,
             metrics.clone(),
@@ -187,21 +205,62 @@ impl Server {
         let accept_shutdown = shutdown.clone();
         let accept_metrics = metrics.clone();
         let max_conns = self.max_conns;
+        let buffer_budget = self.conn_buffer_budget;
         let accept_pool = pool.clone();
+        // EMFILE livelock breaker: park one fd now so there is always
+        // one to give back when the table fills up
+        let mut reserve = sys::dup_fd(listener.as_raw_fd()).ok();
         let accept_thread = std::thread::Builder::new()
             .name("slabforge-accept".into())
             .spawn(move || {
                 let mut next = 0usize;
-                for stream in listener.incoming() {
+                loop {
                     if accept_shutdown.load(Ordering::SeqCst) {
                         break;
                     }
-                    let Ok(stream) = stream else { continue };
-                    if !try_admit(&accept_metrics, max_conns) {
-                        continue; // drop: close immediately
+                    // shed-on-pressure: over the buffer budget, stop
+                    // admitting load (the backlog queues in the kernel)
+                    // until the reactors shed/drain back under it
+                    if buffer_budget > 0
+                        && accept_metrics.conn_buffer_bytes.load(Ordering::Relaxed)
+                            > buffer_budget as u64
+                    {
+                        std::thread::sleep(Duration::from_millis(5));
+                        continue;
                     }
-                    accept_pool.dispatch(next, stream);
-                    next = next.wrapping_add(1);
+                    let accepted = if crate::util::failpoint::fired("accept.emfile") {
+                        Err(std::io::Error::from_raw_os_error(24)) // EMFILE
+                    } else {
+                        listener.accept().map(|(s, _)| s)
+                    };
+                    match accepted {
+                        Ok(stream) => {
+                            if !try_admit(&accept_metrics, max_conns) {
+                                continue; // drop: close immediately
+                            }
+                            accept_pool.dispatch(next, stream);
+                            next = next.wrapping_add(1);
+                        }
+                        // EMFILE(24)/ENFILE(23): fd exhaustion. Give
+                        // back the reserve fd, accept-and-close one
+                        // pending socket so the backlog cannot livelock
+                        // us, re-park the reserve, and ask the reactors
+                        // to reap their oldest connections.
+                        Err(e) if matches!(e.raw_os_error(), Some(23) | Some(24)) => {
+                            drop(reserve.take());
+                            let _ = listener.set_nonblocking(true);
+                            if let Ok((s, _)) = listener.accept() {
+                                Metrics::bump(&accept_metrics.connections_accepted);
+                                Metrics::bump(&accept_metrics.rejected_connections);
+                                drop(s);
+                            }
+                            let _ = listener.set_nonblocking(false);
+                            reserve = sys::dup_fd(listener.as_raw_fd()).ok();
+                            accept_pool.request_reap();
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => continue,
+                    }
                 }
             })?;
 
@@ -247,14 +306,28 @@ impl Server {
                     let spawned = std::thread::Builder::new()
                         .name("slabforge-conn".into())
                         .spawn(move || {
-                            serve_connection(
-                                stream,
-                                store,
-                                control,
-                                metrics.clone(),
-                                &conn_shutdown,
-                                idle_timeout,
+                            // a poisoned request kills its own
+                            // connection, never the process: the stream
+                            // closes with the unwound stack and the
+                            // gauges below still settle
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    serve_connection(
+                                        stream,
+                                        store,
+                                        control,
+                                        metrics.clone(),
+                                        &conn_shutdown,
+                                        idle_timeout,
+                                    )
+                                }),
                             );
+                            if r.is_err() {
+                                eprintln!(
+                                    "slabforge: connection thread panicked; closing only \
+                                     that connection"
+                                );
+                            }
                             Metrics::bump(&metrics.connections_closed);
                             Metrics::dec(&metrics.curr_connections);
                         });

@@ -234,7 +234,12 @@ impl SlabAllocator {
     }
 
     /// Obtain a page buffer: recycled first, fresh while under budget.
+    /// Failpoint `slab.page_alloc` simulates exhaustion: the caller
+    /// sees `NeedEviction` exactly as if the budget were spent.
     fn take_page(&mut self) -> Option<Box<[u8]>> {
+        if crate::util::failpoint::fired("slab.page_alloc") {
+            return None;
+        }
         if let Some(buf) = self.free_pages.pop() {
             return Some(buf);
         }

@@ -25,7 +25,8 @@
 //! [`KvStore::maintain`]: crate::store::store::KvStore::maintain
 
 use super::sharded::ShardedStore;
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::util::{failpoint, supervisor};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -68,6 +69,15 @@ impl Default for MaintainerConfig {
 
 /// Spawn the background maintainer. Stops (promptly) when `shutdown`
 /// flips; join the handle to be sure it exited.
+///
+/// The pass loop runs under [`supervisor::supervise`]: a panicking pass
+/// (lock-poisoning recovery gone wrong, an injected
+/// `maintainer.pass.panic`) is logged, counted in `thread_restarts`,
+/// and retried after a capped backoff — and because migration state
+/// lives wholly inside the shards, a panic mid-pump leaves the drain
+/// resumable and the very next pass picks it back up. The
+/// `maintainer.pass.pause` sync point lets tests hold the maintainer
+/// quiescent between passes without sleeps.
 pub fn spawn_maintainer(
     store: Arc<ShardedStore>,
     cfg: MaintainerConfig,
@@ -77,17 +87,19 @@ pub fn spawn_maintainer(
         .name("slabforge-maintainer".into())
         .spawn(move || {
             let interval = Duration::from_millis(cfg.interval_ms.max(1));
-            while !shutdown.load(Ordering::SeqCst) {
+            supervisor::supervise("maintainer", &shutdown, || {
+                failpoint::fired("maintainer.pass.pause");
+                failpoint::maybe_panic("maintainer.pass.panic");
                 if cfg.pump_migration && store.migration_active() {
                     // pump the drain; breathe between rounds so std's
                     // unfair RwLock cannot starve readers
                     store.migration_step_all();
                     std::thread::sleep(Duration::from_millis(1));
-                    continue;
+                    return;
                 }
                 store.maintain_all(cfg.batch);
                 std::thread::sleep(interval);
-            }
+            });
         })
         .expect("spawn maintainer thread")
 }

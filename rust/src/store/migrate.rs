@@ -165,6 +165,13 @@ impl KvStore {
         if self.migration.is_none() {
             return false;
         }
+        // failpoints sit at the entry, BEFORE any unlink/move: a panic
+        // or injected failure here leaves the two-generation state
+        // exactly as it was, so the next pumper resumes the drain
+        crate::util::failpoint::maybe_panic("migrate.step.panic");
+        if crate::util::failpoint::fired("migrate.step.fail") {
+            return true; // "made no progress this step" — still active
+        }
         for _ in 0..max_items.max(1) {
             let Some((class, id)) = self.next_drain_victim() else {
                 break;
@@ -269,6 +276,12 @@ impl KvStore {
     /// releases. Returns `true` when a page was reclaimed (so an
     /// allocation retry can succeed).
     pub(crate) fn force_drain_old_page(&mut self) -> bool {
+        // entry failpoint (before any drop): an injected `false` sends
+        // the caller down its real exhaustion path (`OutOfMemory` for
+        // the set path, item-drop for `migrate_alloc`)
+        if crate::util::failpoint::fired("migrate.force_drain.fail") {
+            return false;
+        }
         let mut candidates = self.alloc.old_page_occupancy();
         candidates.sort_unstable_by_key(|&(_, _, used)| used);
         for (class, page, used) in candidates {

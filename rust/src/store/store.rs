@@ -618,6 +618,11 @@ impl KvStore {
     /// force-drains the emptiest old-generation page instead, recycling
     /// it into the new geometry.
     pub(crate) fn alloc_with_eviction(&mut self, total: usize) -> Result<ChunkHandle, StoreError> {
+        // failpoint: alloc-failure storms surface to clients as
+        // `SERVER_ERROR out of memory storing object`, never a hang
+        if crate::util::failpoint::fired("store.item_alloc") {
+            return Err(StoreError::OutOfMemory);
+        }
         for _ in 0..MAX_EVICT_ATTEMPTS {
             match self.alloc.alloc(total) {
                 Ok(h) => return Ok(h),

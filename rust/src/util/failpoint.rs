@@ -1,0 +1,441 @@
+//! Zero-dependency failpoints: named, runtime-armed fault-injection
+//! points at the system's fallible boundaries (DESIGN.md §3 — nothing
+//! is vendored, so this is a from-scratch reduction of the classic
+//! `fail`-crate idea to the schedules the chaos suite needs).
+//!
+//! A **site** is a line of code asking [`fired`] whether to misbehave;
+//! what "misbehave" means is fixed per site and encoded in its name
+//! (`store.item_alloc` returns `OutOfMemory`, `sys.writev.short`
+//! truncates the write, `maintainer.pass.panic` panics...). A **point**
+//! is a site armed with a schedule:
+//!
+//! | spec        | fires                                        |
+//! |-------------|----------------------------------------------|
+//! | `off`       | never                                        |
+//! | `once`      | first evaluation only, then disarms itself   |
+//! | `always`    | every evaluation                             |
+//! | `1inN`      | every Nth evaluation (deterministic counter) |
+//! | `after(N)`  | every evaluation after the first N           |
+//! | `pause`     | never — but blocks the caller while armed (a |
+//! |             | sync point for serializing thread races)     |
+//!
+//! Points are armed via the `SLABFORGE_FAILPOINTS` environment variable
+//! (`name=spec,name=spec,...`, read once on first use) or at runtime
+//! through the `failpoints` debug protocol command.
+//!
+//! **Disarmed cost.** With no point armed, [`fired`] is one relaxed
+//! atomic load and a predictable branch — cheap enough for the request
+//! hot path, and allocation-free (the zero-alloc guards in
+//! `tests/hotpath_alloc.rs` run with this code compiled in).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Armed-point count; `UNINIT` until the env var has been consulted.
+static ARMED: AtomicUsize = AtomicUsize::new(UNINIT);
+const UNINIT: usize = usize::MAX;
+
+/// Longest a `pause` point will hold its caller — a forgotten disarm
+/// must degrade to slow, not to a deadlocked test run.
+const PAUSE_CAP: Duration = Duration::from_secs(10);
+
+/// When a point fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Schedule {
+    Off,
+    Once,
+    Always,
+    /// Every `n`th evaluation (deterministic, counter-based).
+    OneIn(u64),
+    /// Every evaluation after the first `n`.
+    After(u64),
+    /// Never fires; blocks the evaluating thread while armed.
+    Pause,
+}
+
+impl Schedule {
+    fn parse(spec: &str) -> Result<Schedule, String> {
+        let s = spec.trim();
+        if let Some(n) = s.strip_prefix("1in") {
+            let n: u64 = n.parse().map_err(|_| format!("bad count in '{s}'"))?;
+            if n == 0 {
+                return Err("1in0 is meaningless".into());
+            }
+            return Ok(Schedule::OneIn(n));
+        }
+        if let Some(rest) = s.strip_prefix("after(") {
+            let n: u64 = rest
+                .strip_suffix(')')
+                .and_then(|d| d.parse().ok())
+                .ok_or_else(|| format!("bad count in '{s}'"))?;
+            return Ok(Schedule::After(n));
+        }
+        match s {
+            "off" => Ok(Schedule::Off),
+            "once" => Ok(Schedule::Once),
+            "always" => Ok(Schedule::Always),
+            "pause" => Ok(Schedule::Pause),
+            _ => Err(format!(
+                "unknown failpoint spec '{s}' (want off|once|always|1inN|after(N)|pause)"
+            )),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Schedule::Off => "off".into(),
+            Schedule::Once => "once".into(),
+            Schedule::Always => "always".into(),
+            Schedule::OneIn(n) => format!("1in{n}"),
+            Schedule::After(n) => format!("after({n})"),
+            Schedule::Pause => "pause".into(),
+        }
+    }
+}
+
+struct Point {
+    name: String,
+    schedule: Schedule,
+    /// Evaluations since arming (schedules count against this).
+    evals: u64,
+    /// Times the point actually fired.
+    fires: u64,
+}
+
+fn registry() -> &'static Mutex<Vec<Point>> {
+    static R: OnceLock<Mutex<Vec<Point>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Vec<Point>> {
+    // a panicking failpoint (that is the product) must not poison the
+    // registry for every later check
+    registry().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read `SLABFORGE_FAILPOINTS` exactly once, before the first
+/// evaluation or mutation that needs the registry.
+fn ensure_env() {
+    static ENV: OnceLock<()> = OnceLock::new();
+    ENV.get_or_init(|| {
+        if let Ok(spec) = std::env::var("SLABFORGE_FAILPOINTS") {
+            for pair in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                match pair.split_once('=') {
+                    Some((name, sched)) => {
+                        if let Err(e) = arm_locked(name.trim(), sched.trim()) {
+                            eprintln!("slabforge: SLABFORGE_FAILPOINTS: {e}");
+                        }
+                    }
+                    None => eprintln!(
+                        "slabforge: SLABFORGE_FAILPOINTS: '{pair}' is not name=spec"
+                    ),
+                }
+            }
+        }
+        recount();
+    });
+}
+
+/// Recompute the hot-path gate from the registry.
+fn recount() {
+    let n = lock().iter().filter(|p| p.schedule != Schedule::Off).count();
+    ARMED.store(n, Ordering::Relaxed);
+}
+
+fn arm_locked(name: &str, spec: &str) -> Result<(), String> {
+    if name.is_empty() {
+        return Err("empty failpoint name".into());
+    }
+    let schedule = Schedule::parse(spec)?;
+    let mut reg = lock();
+    match reg.iter_mut().find(|p| p.name == name) {
+        Some(p) => {
+            p.schedule = schedule;
+            p.evals = 0;
+            p.fires = 0;
+        }
+        None => reg.push(Point {
+            name: name.to_string(),
+            schedule,
+            evals: 0,
+            fires: 0,
+        }),
+    }
+    Ok(())
+}
+
+/// Arm (or re-arm) a point. `spec` grammar: `off`, `once`, `always`,
+/// `1inN`, `after(N)`, `pause`. Re-arming resets the counters.
+pub fn arm(name: &str, spec: &str) -> Result<(), String> {
+    ensure_env();
+    arm_locked(name, spec)?;
+    recount();
+    Ok(())
+}
+
+/// Arm a comma-separated list (`name=spec,name=spec`) — the grammar of
+/// both the env var and the `failpoints set` protocol command.
+pub fn arm_list(list: &str) -> Result<(), String> {
+    ensure_env();
+    for pair in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, spec) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("'{pair}' is not name=spec"))?;
+        arm_locked(name.trim(), spec.trim())?;
+    }
+    recount();
+    Ok(())
+}
+
+/// Disarm one point (no-op when it was never armed).
+pub fn disarm(name: &str) {
+    ensure_env();
+    if let Some(p) = lock().iter_mut().find(|p| p.name == name) {
+        p.schedule = Schedule::Off;
+    }
+    recount();
+}
+
+/// Disarm everything (the chaos suite's between-schedules reset).
+pub fn disarm_all() {
+    ensure_env();
+    for p in lock().iter_mut() {
+        p.schedule = Schedule::Off;
+    }
+    recount();
+}
+
+/// `(name, spec, fires)` for every point ever armed in this process.
+pub fn list() -> Vec<(String, String, u64)> {
+    ensure_env();
+    lock()
+        .iter()
+        .map(|p| (p.name.clone(), p.schedule.render(), p.fires))
+        .collect()
+}
+
+/// Times `name` has fired since it was last (re-)armed.
+pub fn fire_count(name: &str) -> u64 {
+    ensure_env();
+    lock()
+        .iter()
+        .find(|p| p.name == name)
+        .map_or(0, |p| p.fires)
+}
+
+enum Verdict {
+    No,
+    Yes,
+    Paused,
+}
+
+#[cold]
+fn eval_slow(name: &str) -> bool {
+    ensure_env();
+    loop {
+        let verdict = {
+            let mut reg = lock();
+            let Some(p) = reg.iter_mut().find(|p| p.name == name) else {
+                return false;
+            };
+            p.evals += 1;
+            match p.schedule {
+                Schedule::Off => Verdict::No,
+                Schedule::Always => {
+                    p.fires += 1;
+                    Verdict::Yes
+                }
+                Schedule::Once => {
+                    p.schedule = Schedule::Off;
+                    p.fires += 1;
+                    Verdict::Yes
+                }
+                Schedule::OneIn(n) => {
+                    if p.evals % n == 0 {
+                        p.fires += 1;
+                        Verdict::Yes
+                    } else {
+                        Verdict::No
+                    }
+                }
+                Schedule::After(n) => {
+                    if p.evals > n {
+                        p.fires += 1;
+                        Verdict::Yes
+                    } else {
+                        Verdict::No
+                    }
+                }
+                Schedule::Pause => Verdict::Paused,
+            }
+        };
+        match verdict {
+            Verdict::Yes => {
+                // `once` exhausting itself may close the hot-path gate
+                recount();
+                return true;
+            }
+            Verdict::No => return false,
+            Verdict::Paused => {
+                // sync point: hold the caller until disarmed (bounded,
+                // so a forgotten disarm cannot deadlock a test run)
+                let start = Instant::now();
+                while start.elapsed() < PAUSE_CAP {
+                    std::thread::sleep(Duration::from_millis(1));
+                    let reg = lock();
+                    let still = reg
+                        .iter()
+                        .find(|p| p.name == name)
+                        .is_some_and(|p| p.schedule == Schedule::Pause);
+                    if !still {
+                        break;
+                    }
+                }
+                return false;
+            }
+        }
+    }
+}
+
+/// Evaluate a failpoint site. Disarmed: one relaxed load, `false`.
+#[inline(always)]
+pub fn fired(name: &str) -> bool {
+    match ARMED.load(Ordering::Relaxed) {
+        0 => false,
+        _ => eval_slow(name),
+    }
+}
+
+/// Panic-injection helper for supervised-thread sites.
+#[inline(always)]
+pub fn maybe_panic(name: &str) {
+    if fired(name) {
+        panic!("failpoint {name} fired");
+    }
+}
+
+/// RAII arming for tests: disarms the point when dropped.
+pub struct Guard(&'static str);
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        disarm(self.0);
+    }
+}
+
+/// Arm a point for the lifetime of the returned [`Guard`].
+pub fn armed(name: &'static str, spec: &str) -> Result<Guard, String> {
+    arm(name, spec)?;
+    Ok(Guard(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // every test uses its own point names: the registry is
+    // process-global and the test harness is multi-threaded
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        assert!(!fired("fp.test.unarmed"));
+        assert_eq!(fire_count("fp.test.unarmed"), 0);
+    }
+
+    #[test]
+    fn once_fires_exactly_once_then_disarms() {
+        let _g = armed("fp.test.once", "once").unwrap();
+        assert!(fired("fp.test.once"));
+        assert!(!fired("fp.test.once"));
+        assert!(!fired("fp.test.once"));
+        assert_eq!(fire_count("fp.test.once"), 1);
+    }
+
+    #[test]
+    fn one_in_n_is_deterministic() {
+        let _g = armed("fp.test.1in3", "1in3").unwrap();
+        let hits: Vec<bool> = (0..9).map(|_| fired("fp.test.1in3")).collect();
+        assert_eq!(
+            hits,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(fire_count("fp.test.1in3"), 3);
+    }
+
+    #[test]
+    fn after_skips_a_prefix_then_always_fires() {
+        let _g = armed("fp.test.after", "after(2)").unwrap();
+        assert!(!fired("fp.test.after"));
+        assert!(!fired("fp.test.after"));
+        assert!(fired("fp.test.after"));
+        assert!(fired("fp.test.after"));
+    }
+
+    #[test]
+    fn always_and_rearm_reset_counters() {
+        let _g = armed("fp.test.always", "always").unwrap();
+        assert!(fired("fp.test.always"));
+        assert!(fired("fp.test.always"));
+        assert_eq!(fire_count("fp.test.always"), 2);
+        arm("fp.test.always", "off").unwrap();
+        assert!(!fired("fp.test.always"));
+        arm("fp.test.always", "always").unwrap();
+        assert_eq!(fire_count("fp.test.always"), 0, "re-arm resets");
+    }
+
+    #[test]
+    fn guard_disarms_on_drop() {
+        {
+            let _g = armed("fp.test.guard", "always").unwrap();
+            assert!(fired("fp.test.guard"));
+        }
+        assert!(!fired("fp.test.guard"));
+    }
+
+    #[test]
+    fn pause_blocks_until_disarmed() {
+        arm("fp.test.pause", "pause").unwrap();
+        let t = std::thread::spawn(|| {
+            let start = Instant::now();
+            assert!(!fired("fp.test.pause"), "pause never fires");
+            start.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        disarm("fp.test.pause");
+        let held = t.join().unwrap();
+        assert!(held >= Duration::from_millis(40), "held {held:?}");
+        assert!(held < PAUSE_CAP, "released promptly, not by the cap");
+    }
+
+    #[test]
+    fn spec_grammar_round_trips_and_rejects_garbage() {
+        for spec in ["off", "once", "always", "1in20", "after(100)", "pause"] {
+            let s = Schedule::parse(spec).unwrap();
+            assert_eq!(s.render(), spec);
+        }
+        for bad in ["", "sometimes", "1in0", "1inx", "after(", "after(x)"] {
+            assert!(Schedule::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn arm_list_parses_the_env_grammar() {
+        arm_list("fp.test.la=once, fp.test.lb=1in5").unwrap();
+        assert!(fired("fp.test.la"));
+        assert!(!fired("fp.test.la"));
+        assert!(arm_list("fp.test.lc").is_err());
+        assert!(arm_list("fp.test.ld=nope").is_err());
+        disarm("fp.test.lb");
+    }
+
+    #[test]
+    fn list_reports_spec_and_fires() {
+        arm("fp.test.list", "1in1").unwrap();
+        assert!(fired("fp.test.list"));
+        let rows = list();
+        let row = rows.iter().find(|(n, _, _)| n == "fp.test.list").unwrap();
+        assert_eq!((row.1.as_str(), row.2), ("1in1", 1));
+        disarm("fp.test.list");
+    }
+}

@@ -3,7 +3,9 @@
 //! substitutions), and human-readable formatting.
 
 pub mod b64;
+pub mod failpoint;
 pub mod fmt;
 pub mod histogram;
 pub mod json;
 pub mod rng;
+pub mod supervisor;

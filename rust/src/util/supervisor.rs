@@ -1,0 +1,123 @@
+//! Thread supervision: background loops (maintainer, autotuner,
+//! reactor workers) run each iteration under `catch_unwind`. A panic is
+//! logged, counted in the process-wide `thread_restarts` stat, and
+//! followed by a capped exponential backoff before the loop body is
+//! re-entered — the thread itself never dies, so in-flight state (most
+//! importantly a two-generation migration parked inside a shard) is
+//! picked back up on the next iteration.
+//!
+//! The restart counter is a process-global because the threads it
+//! covers span modules that must not depend on `server::Metrics`
+//! (store-level maintainer, optimizer-level autotuner); `stats`
+//! rendering samples it alongside the per-server counters.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+static RESTARTS: AtomicU64 = AtomicU64::new(0);
+
+/// First pause after a panic.
+pub const BACKOFF_START_MS: u64 = 10;
+/// Backoff ceiling: a permanently-crashing loop retries at 1 Hz-ish,
+/// it does not spin.
+pub const BACKOFF_CAP_MS: u64 = 1_000;
+
+/// Total supervised-thread panics survived by this process.
+pub fn thread_restarts() -> u64 {
+    RESTARTS.load(Ordering::Relaxed)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic payload>")
+}
+
+/// Run `body` (one loop iteration) repeatedly until `shutdown` is set.
+/// A panicking iteration is caught, logged, counted, and retried after
+/// a capped exponential backoff; a clean iteration resets the backoff.
+/// The backoff sleeps in small slices so shutdown stays prompt even
+/// while a crashing thread is cooling down.
+pub fn supervise<F: FnMut()>(name: &str, shutdown: &AtomicBool, mut body: F) {
+    let mut backoff = BACKOFF_START_MS;
+    while !shutdown.load(Ordering::SeqCst) {
+        match catch_unwind(AssertUnwindSafe(&mut body)) {
+            Ok(()) => backoff = BACKOFF_START_MS,
+            Err(payload) => {
+                RESTARTS.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "slabforge: {name} thread panicked: {}; restarting in {backoff}ms",
+                    panic_message(payload.as_ref())
+                );
+                let mut waited = 0u64;
+                while waited < backoff && !shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(10));
+                    waited += 10;
+                }
+                backoff = (backoff * 2).min(BACKOFF_CAP_MS);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn panicking_iterations_are_survived_and_counted() {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let iters = Arc::new(AtomicUsize::new(0));
+        let before = thread_restarts();
+        let t = {
+            let shutdown = shutdown.clone();
+            let iters = iters.clone();
+            std::thread::spawn(move || {
+                supervise("test-loop", &shutdown, || {
+                    let n = iters.fetch_add(1, Ordering::SeqCst);
+                    if n < 3 {
+                        panic!("boom {n}");
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                })
+            })
+        };
+        // three panics at 10/20/40ms backoff, then healthy iterations
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while iters.load(Ordering::SeqCst) < 6 {
+            assert!(std::time::Instant::now() < deadline, "loop never recovered");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shutdown.store(true, Ordering::SeqCst);
+        t.join().expect("supervised thread itself must not die");
+        assert!(
+            thread_restarts() - before >= 3,
+            "each caught panic bumps thread_restarts"
+        );
+    }
+
+    #[test]
+    fn shutdown_is_prompt_even_mid_backoff() {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let t = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                supervise("crashy", &shutdown, || panic!("always"));
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        shutdown.store(true, Ordering::SeqCst);
+        let start = std::time::Instant::now();
+        t.join().unwrap();
+        assert!(
+            start.elapsed() < Duration::from_millis(500),
+            "join after shutdown took {:?}",
+            start.elapsed()
+        );
+    }
+}

@@ -10,8 +10,11 @@ use slabforge::slab::policy::ChunkSizePolicy;
 use slabforge::slab::PAGE_SIZE;
 use slabforge::store::sharded::ShardedStore;
 use slabforge::store::store::Clock;
+use slabforge::store::{spawn_maintainer, MaintainerConfig};
+use slabforge::util::failpoint;
 use slabforge::workload::spec::SizeDistribution;
 use slabforge::workload::{Op, WorkloadGen, WorkloadSpec};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn store(mem: usize, shards: usize) -> Arc<ShardedStore> {
@@ -187,6 +190,16 @@ fn reconfigure_under_eviction_pressure_drops_nothing_vital() {
     let store = small_page_store(4 << 20, 1);
     drive(&store, t1_spec(20_000));
     let live_before = store.len();
+    // Run the reconfigure with a live maintainer thread, the way a
+    // real server does — but hold it quiescent at its
+    // `maintainer.pass.pause` sync point instead of sleeping and
+    // hoping it lands between passes. The thread is provably between
+    // passes for the whole accounting window, so the drop/moved
+    // bookkeeping below is deterministic (this replaced a flaky
+    // sleep-based variant).
+    let pause = failpoint::armed("maintainer.pass.pause", "pause").unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let maint = spawn_maintainer(store.clone(), MaintainerConfig::default(), stop.clone());
     let migs = store
         .reconfigure(ChunkSizePolicy::Explicit(vec![520, 620, 950]))
         .unwrap();
@@ -216,6 +229,12 @@ fn reconfigure_under_eviction_pressure_drops_nothing_vital() {
         dropped * 20 <= live_before,
         "dropped {dropped} of {live_before}"
     );
+    // Unblock before joining: the thread is parked at the pause point,
+    // so the stop flag alone would leave it waiting out the pause cap.
+    stop.store(true, Ordering::SeqCst);
+    drop(pause);
+    maint.join().unwrap();
+    store.check_integrity().unwrap();
 }
 
 #[test]
