@@ -30,6 +30,18 @@ SLABFORGE_CHAOS_SEED="$chaos_seed" \
     exit 1
 }
 
+echo "==> torn-read stress, fixed seed (deterministic reproduction baseline)"
+cargo test -q --test torn_read_stress
+
+echo "==> torn-read randomized-seed stress"
+torn_seed="${SLABFORGE_TORN_SEED:-$RANDOM$RANDOM}"
+echo "    SLABFORGE_TORN_SEED=$torn_seed (rerun with this env to reproduce)"
+SLABFORGE_TORN_SEED="$torn_seed" \
+    cargo test -q --test torn_read_stress readers_never_observe_torn_values || {
+    echo "error: torn-read stress failed with SLABFORGE_TORN_SEED=$torn_seed" >&2
+    exit 1
+}
+
 echo "==> bench smoke (256-connection sweep + reconfigure-under-load)"
 "$root/scripts/bench_server_smoke.sh" --smoke
 
@@ -66,6 +78,18 @@ grep -q "shed_connections" "$root/BENCH_server.json" || {
 echo "==> verify degraded_get_p99_us landed in BENCH_server.json"
 grep -q "degraded_get_p99_us" "$root/BENCH_server.json" || {
     echo "error: BENCH_server.json is missing the degraded-get dim" >&2
+    exit 1
+}
+
+echo "==> verify hot_shard_get_mops landed in BENCH_server.json"
+grep -q "hot_shard_get_mops" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the hot-shard read-scalability row" >&2
+    exit 1
+}
+
+echo "==> verify get_p99_contended_us landed in BENCH_server.json"
+grep -q "get_p99_contended_us" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the contended-get p99 dim" >&2
     exit 1
 }
 

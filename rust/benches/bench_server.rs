@@ -617,6 +617,122 @@ fn main() {
         shed_handle.shutdown();
     }
 
+    // ---- hot-shard read scalability (optimistic seqlock gets) --------------
+    // A single-shard store: every reader thread probes the same seqlock
+    // stripes and bucket array, so sharding cannot spread the load and
+    // the curve isolates how the lock-free get path itself scales.
+    // Uncontended rows carry `hot_shard_get_mops`; rows with a
+    // concurrent writer hammering the same 256 keys carry
+    // `get_p99_contended_us` — the reader-visible cost of seqlock
+    // retries and locked-path fallbacks under real write traffic.
+    {
+        use slabforge::store::sharded::ReadAttempt;
+        use slabforge::store::store::ValueRef;
+        let hot = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                32 << 20,
+                true,
+                1,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        const HOT_KEYS: u64 = 256;
+        for i in 0..HOT_KEYS {
+            hot.set(format!("hot{i:03}").as_bytes(), &vec![b'h'; 400], 0, 0)
+                .unwrap();
+        }
+        let per_reader = if smoke() { 20_000usize } else { 200_000 };
+        let counts: &[usize] = if smoke() { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
+        for &n_readers in counts {
+            for with_writer in [false, true] {
+                let stop = Arc::new(AtomicBool::new(false));
+                let writer = with_writer.then(|| {
+                    let s = hot.clone();
+                    let stop = stop.clone();
+                    std::thread::spawn(move || {
+                        let mut rng = Pcg64::new(97);
+                        let v = vec![b'w'; 400];
+                        while !stop.load(Ordering::Relaxed) {
+                            let k = format!("hot{:03}", rng.gen_range(HOT_KEYS));
+                            s.set(k.as_bytes(), &v, 0, 0).unwrap();
+                        }
+                    })
+                });
+                let t0 = Instant::now();
+                let threads: Vec<_> = (0..n_readers)
+                    .map(|r| {
+                        let s = hot.clone();
+                        std::thread::spawn(move || {
+                            let mut rng = Pcg64::new(50 + r as u64);
+                            let mut buf: Vec<u8> = Vec::with_capacity(512);
+                            // reader 0 samples per-op latency for the p99
+                            let mut lats: Vec<std::time::Duration> =
+                                Vec::with_capacity(if r == 0 { per_reader } else { 0 });
+                            for _ in 0..per_reader {
+                                let k = format!("hot{:03}", rng.gen_range(HOT_KEYS));
+                                let t = (r == 0).then(Instant::now);
+                                buf.clear();
+                                match s.get_optimistic(
+                                    k.as_bytes(),
+                                    &mut buf,
+                                    |c| c.clear(),
+                                    |c, v: ValueRef<'_>| c.extend_from_slice(v.data),
+                                ) {
+                                    ReadAttempt::Hit(()) => debug_assert_eq!(buf.len(), 400),
+                                    ReadAttempt::Miss => {}
+                                    ReadAttempt::Fallback => {
+                                        s.get_with(k.as_bytes(), |_: ValueRef<'_>| ());
+                                    }
+                                }
+                                if let Some(t) = t {
+                                    lats.push(t.elapsed());
+                                }
+                            }
+                            lats
+                        })
+                    })
+                    .collect();
+                let mut lats: Vec<std::time::Duration> = threads
+                    .into_iter()
+                    .flat_map(|t| t.join().unwrap())
+                    .collect();
+                let elapsed = t0.elapsed();
+                stop.store(true, Ordering::Relaxed);
+                if let Some(w) = writer {
+                    w.join().unwrap();
+                }
+                let total_ops = n_readers * per_reader;
+                let mops = total_ops as f64 / elapsed.as_secs_f64() / 1e6;
+                lats.sort_unstable();
+                let p99 = lats[lats.len() * 99 / 100];
+                let tag = if with_writer { "+writer" } else { "no writer" };
+                println!(
+                    "hot shard {n_readers:2} readers {tag}: {mops:.2} Mops/s, reader-0 p99 {}",
+                    human_duration(p99)
+                );
+                let row = Summary::from_samples(
+                    &format!("hot shard get {n_readers} readers {tag}"),
+                    vec![elapsed],
+                    total_ops as f64,
+                )
+                .with_dim("readers", n_readers as f64);
+                rows.push(if with_writer {
+                    row.with_dim("get_p99_contended_us", p99.as_micros() as f64)
+                } else {
+                    row.with_dim("hot_shard_get_mops", mops)
+                });
+            }
+        }
+        let st = hot.stats();
+        println!(
+            "hot shard totals: {} retries, {} fallbacks, {} bumps queued / {} dropped",
+            st.seqlock_retries, st.seqlock_fallbacks, st.lru_bump_queued, st.lru_bump_dropped
+        );
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

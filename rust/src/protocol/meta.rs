@@ -1,5 +1,6 @@
-//! Meta-dialect parser (`mg`/`ms`/`md`/`ma`/`mn`) — the second
-//! front-end onto the command IR ([`Request`]).
+//! Meta-dialect parser (`mg`/`ms`/`md`/`ma`/`mn`/`me`) — the second
+//! front-end onto the command IR ([`Request`]). `me <key> [b]` is the
+//! per-key bookkeeping dump (no echo flags).
 //!
 //! The meta protocol replaces per-command response grammar with one
 //! compact shape: `<cmd> <key> <flag>*`, where each flag is a single
@@ -41,12 +42,12 @@ use crate::store::item::key_is_valid;
 use crate::store::store::StoreMode;
 
 /// Cheap shape test: does this line use a meta verb? (`mg`, `ms`,
-/// `md`, `ma`, `mn` followed by end-of-line or a space.)
+/// `md`, `ma`, `mn`, `me` followed by end-of-line or a space.)
 #[inline]
 pub fn is_meta(line: &[u8]) -> bool {
     line.len() >= 2
         && line[0] == b'm'
-        && matches!(line[1], b'g' | b's' | b'd' | b'a' | b'n')
+        && matches!(line[1], b'g' | b's' | b'd' | b'a' | b'n' | b'e')
         && (line.len() == 2 || line[2] == b' ')
 }
 
@@ -62,6 +63,7 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
         b"ms" => Opcode::Store,
         b"md" => Opcode::Delete,
         b"ma" => Opcode::Arith,
+        b"me" => Opcode::MetaDebug,
         _ => return Err(ParseError::UnknownCommand),
     };
     let Some(key) = toks.next() else {
@@ -70,6 +72,19 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
     let mut r = Request::meta(op);
     r.key = key;
     r.key_echo = key;
+    if op == Opcode::MetaDebug {
+        // the debug dump takes no echo flags — only `b` (base64 key)
+        for t in toks {
+            match t {
+                b"b" => r.b64_key = true,
+                _ => return Err(ParseError::Client("invalid flag")),
+            }
+        }
+        if !r.b64_key && !key_is_valid(r.key) {
+            return Err(ParseError::Client("bad key"));
+        }
+        return Ok(r);
+    }
     if op == Opcode::Store {
         let Some(len) = toks.next() else {
             return Err(ParseError::Client("ms requires a data length"));
@@ -161,8 +176,23 @@ mod tests {
         assert!(is_meta(b"ms k 3"));
         assert!(!is_meta(b"get key"));
         assert!(!is_meta(b"m"));
-        assert!(!is_meta(b"me key")); // me (debug) unimplemented
+        assert!(is_meta(b"me key"));
         assert!(!is_meta(b"mget key"));
+    }
+
+    #[test]
+    fn me_debug_line() {
+        let r = parse_meta(b"me foo").unwrap();
+        assert_eq!(r.op, Opcode::MetaDebug);
+        assert_eq!(r.key, b"foo");
+        assert!(!r.b64_key);
+        let r = parse_meta(b"me Zm9v b").unwrap();
+        assert!(r.b64_key);
+        // no echo flags on me — anything else is rejected loudly
+        assert!(parse_meta(b"me k v").is_err());
+        assert!(parse_meta(b"me k q").is_err());
+        assert_eq!(parse_meta(b"me"), Err(ParseError::Client("missing key")));
+        assert_eq!(parse_meta(b"me a\x01b"), Err(ParseError::Client("bad key")));
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub enum Opcode {
     /// Meta `mn` — answers `MN` unconditionally; with quiet-mode
     /// pipelines it acts as the flush barrier.
     Noop,
+    /// Meta `me` — per-key bookkeeping dump (slab class, LRU tier,
+    /// last access, fetched bit, CAS) for debugging; no LRU effects.
+    MetaDebug,
     Stats,
     FlushAll,
     Version,

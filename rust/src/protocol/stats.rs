@@ -54,6 +54,11 @@ pub fn render_general(
     stat(out, "maintainer_runs", ops.maintainer_runs);
     stat(out, "maintainer_demoted", ops.maintainer_demoted);
     stat(out, "maintainer_pages_shed", ops.maintainer_pages_shed);
+    stat(out, "seqlock_retries", ops.seqlock_retries);
+    stat(out, "seqlock_fallbacks", ops.seqlock_fallbacks);
+    stat(out, "lru_bump_queued", ops.lru_bump_queued);
+    stat(out, "lru_bump_drained", ops.lru_bump_drained);
+    stat(out, "lru_bump_dropped", ops.lru_bump_dropped);
     stat(out, "bytes", slabs.requested_bytes);
     stat(out, "bytes_allocated", slabs.allocated_bytes);
     stat(out, "bytes_wasted", slabs.hole_bytes);
@@ -253,6 +258,33 @@ mod tests {
         assert!(t.contains("STAT maintainer_runs 12"), "{t}");
         assert!(t.contains("STAT maintainer_demoted 340"), "{t}");
         assert!(t.contains("STAT maintainer_pages_shed 2"), "{t}");
+    }
+
+    #[test]
+    fn general_stats_contain_optimistic_read_counters() {
+        let mut out = Vec::new();
+        let ops = StoreStats {
+            seqlock_retries: 7,
+            seqlock_fallbacks: 3,
+            lru_bump_queued: 40,
+            lru_bump_drained: 38,
+            lru_bump_dropped: 2,
+            ..StoreStats::default()
+        };
+        render_general(
+            &mut out,
+            &ops,
+            &slab_stats_with_items(),
+            0,
+            0,
+            &ConnCounters::default(),
+        );
+        let t = text(&out);
+        assert!(t.contains("STAT seqlock_retries 7"), "{t}");
+        assert!(t.contains("STAT seqlock_fallbacks 3"), "{t}");
+        assert!(t.contains("STAT lru_bump_queued 40"), "{t}");
+        assert!(t.contains("STAT lru_bump_drained 38"), "{t}");
+        assert!(t.contains("STAT lru_bump_dropped 2"), "{t}");
     }
 
     #[test]

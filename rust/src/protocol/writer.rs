@@ -137,6 +137,14 @@ impl<'a, S: RespSink> ResponseWriter<'a, S> {
         self.dialect == Dialect::Classic && self.quiet
     }
 
+    /// Direct access to the sink's output buffer. The optimistic read
+    /// path records a length mark before encoding and truncates back to
+    /// it when the post-encode seqlock validation fails.
+    #[inline]
+    pub fn buf(&mut self) -> &mut Vec<u8> {
+        self.sink.buf()
+    }
+
     /// Append `<code>[ <size>]<echo flags>\r\n[<data>\r\n]`. The data
     /// block goes through [`RespSink::append_data`], so a socket-aware
     /// sink scatters large meta values exactly like classic `VALUE`s.

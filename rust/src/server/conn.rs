@@ -32,7 +32,8 @@ use crate::protocol::parse::{get_keys, parse_command, split_get, ParseError};
 use crate::protocol::request::{DataRequest, Dialect, Opcode, Request};
 use crate::protocol::writer::ResponseWriter;
 use crate::protocol::{response, stats};
-use crate::store::sharded::ShardedStore;
+use crate::store::arena::Tier;
+use crate::store::sharded::{ReadAttempt, ShardedStore};
 use crate::store::store::{
     ArithOpts, ArithOutcome, DeleteOutcome, MetaGetOpts, MetaSetOpts, SetOutcome, ValueRef,
 };
@@ -492,6 +493,7 @@ impl Exec<'_> {
                 }
             }
             Opcode::Noop => ResponseWriter::for_request(sink, req).noop(),
+            Opcode::MetaDebug => do_me(self.store, req, sink),
             Opcode::Stats => self.run_stats(req.stats_arg, sink),
             Opcode::FlushAll => {
                 self.store.flush_all();
@@ -615,7 +617,25 @@ fn do_get<S: RespSink>(
         return;
     };
     let Some(second) = iter.next() else {
-        store.get_with(first, |v| sink.value(first, v, with_cas));
+        // lock-free first: the optimistic probe encodes straight into
+        // the sink buffer (values < OPTIMISTIC_VALUE_MAX never take the
+        // writev scatter path, so a torn encode is undone by truncating
+        // back to the mark). Only expired/oversized items and exhausted
+        // seqlock retries pay a lock.
+        let mark = sink.buf().len();
+        match store.get_optimistic(
+            first,
+            sink,
+            |s: &mut S| s.buf().truncate(mark),
+            |s, v| {
+                s.value(first, v, with_cas);
+            },
+        ) {
+            ReadAttempt::Hit(()) | ReadAttempt::Miss => {}
+            ReadAttempt::Fallback => {
+                store.get_with(first, |v| sink.value(first, v, with_cas));
+            }
+        }
         response::end(sink.buf());
         return;
     };
@@ -690,9 +710,12 @@ fn do_gat<S: RespSink>(
 }
 
 /// Meta `mg`: single-key retrieval with flag-driven extras. Plain
-/// lookups ride the shard read lock ([`ShardedStore::meta_get`] peek
-/// path) and encode straight into the sink — allocation-free, same as
-/// the classic fast path.
+/// lookups go **lock-free** first ([`ShardedStore::meta_get_optimistic`]
+/// — seqlock probe, metadata echoes built from the validated record
+/// copy, LRU bump deferred to the maintainer) and encode straight into
+/// the sink. Requests the optimistic path cannot answer exactly
+/// (touch-on-read, bumping `h`, base64 keys, vivify misses, oversized
+/// values) fall back to the locked [`ShardedStore::meta_get`].
 fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
     let mut w = ResponseWriter::for_request(sink, req);
     let opts = MetaGetOpts {
@@ -703,10 +726,56 @@ fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut 
         no_bump: req.no_bump,
         wants_hit_before: req.want & crate::protocol::request::want::HIT != 0,
     };
-    match store.meta_get(req.key, &opts, |v, hit| w.value(req.key, v, hit)) {
+    let key = req.key;
+    let mark = w.buf().len();
+    match store.meta_get_optimistic(
+        key,
+        &opts,
+        &mut w,
+        |w| w.buf().truncate(mark),
+        |w, v, hit| {
+            w.value(key, v, hit);
+        },
+    ) {
+        ReadAttempt::Hit(()) => return,
+        ReadAttempt::Miss => {
+            w.miss();
+            return;
+        }
+        ReadAttempt::Fallback => {}
+    }
+    match store.meta_get(key, &opts, |v, hit| w.value(key, v, hit)) {
         Ok(Some(_)) => {}
         Ok(None) => w.miss(),
         Err(e) => w.store_error(&e),
+    }
+}
+
+/// Meta `me`: dump one item's bookkeeping (`ME <key> exp=.. la=..
+/// cas=.. fetch=.. cls=.. tier=.. size=..`) for debugging slab/LRU
+/// placement. Read-locked and side-effect free — it neither bumps the
+/// LRU nor flips the fetched bit. Miss answers `EN`.
+fn do_me<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
+    let mut w = ResponseWriter::for_request(sink, req);
+    match store.debug_item(req.key) {
+        Some(d) => {
+            let tier = match d.tier {
+                Tier::Hot => "hot",
+                Tier::Warm => "warm",
+                Tier::Cold => "cold",
+            };
+            let key = String::from_utf8_lossy(req.key_echo);
+            w.line(&format!(
+                "ME {key} exp={} la={} cas={} fetch={} cls={} tier={tier} size={}",
+                d.ttl,
+                d.la,
+                d.cas,
+                u8::from(d.fetched),
+                d.class,
+                d.vlen,
+            ));
+        }
+        None => w.miss(),
     }
 }
 
@@ -1583,6 +1652,35 @@ mod tests {
         // and delete addresses the same binary key
         let out = run(&mut c, b"md YSBi b\r\nmg YSBi v b\r\n");
         assert_eq!(String::from_utf8_lossy(&out), "HD\r\nEN\r\n");
+    }
+
+    #[test]
+    fn meta_debug_dumps_item_bookkeeping() {
+        let mut c = conn();
+        run(&mut c, b"set foo 7 0 5\r\nhello\r\n");
+        let out = run(&mut c, b"me foo\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("ME foo "), "{t}");
+        assert!(t.contains("exp=-1"), "{t}");
+        assert!(t.contains("la=0"), "{t}");
+        assert!(t.contains("cas="), "{t}");
+        assert!(t.contains("fetch=0"), "{t}");
+        assert!(t.contains("cls="), "{t}");
+        assert!(t.contains("tier=hot"), "{t}");
+        assert!(t.contains("size=5"), "{t}");
+        // a write-path fetch flips the bit the dump reports; the dump
+        // itself is side-effect free (fetch stays as the get left it)
+        run(&mut c, b"mg foo v h\r\n");
+        let out = run(&mut c, b"me foo\r\nme foo\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert_eq!(t.matches("fetch=1").count(), 2, "{t}");
+        // miss answers EN; b addresses base64 keys (b64("foo")="Zm9v")
+        let out = run(&mut c, b"me nope\r\nme Zm9v b\r\n");
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.starts_with("EN\r\nME Zm9v "), "{t}");
+        // echo flags are rejected loudly
+        let out = run(&mut c, b"me foo v\r\n");
+        assert!(String::from_utf8_lossy(&out).starts_with("CLIENT_ERROR"), "{out:?}");
     }
 
     #[test]

@@ -117,6 +117,17 @@ pub struct SlabAllocator {
     /// Carved pages across both generations (excludes `free_pages`).
     pages_allocated: usize,
     page_budget: usize,
+    /// Two-phase limbo for page buffers leaving the cache: an
+    /// optimistic reader may still dereference a chunk address inside a
+    /// buffer that was just released, so buffers are never returned to
+    /// the OS immediately. They age here for at least one full
+    /// maintainer pass ([`drain_limbo`]) first — long after any
+    /// optimistic read window (which re-validates its seqlock stripe
+    /// microseconds before touching the bytes) has closed.
+    ///
+    /// [`drain_limbo`]: SlabAllocator::drain_limbo
+    limbo_fresh: Vec<Box<[u8]>>,
+    limbo_aged: Vec<Box<[u8]>>,
 }
 
 impl SlabAllocator {
@@ -137,7 +148,30 @@ impl SlabAllocator {
             page_size,
             pages_allocated: 0,
             page_budget: (mem_limit / page_size).max(1),
+            limbo_fresh: Vec::new(),
+            limbo_aged: Vec::new(),
         })
+    }
+
+    /// Send a page buffer toward the OS via the two-phase limbo (see
+    /// the field docs): it survives at least one [`drain_limbo`] call.
+    ///
+    /// [`drain_limbo`]: SlabAllocator::drain_limbo
+    fn condemn(&mut self, buf: Box<[u8]>) {
+        self.limbo_fresh.push(buf);
+    }
+
+    /// Age the limbo one phase: buffers condemned before the *previous*
+    /// drain are finally freed, freshly condemned ones move to aged.
+    /// Called once per maintainer pass (and per migration pump round).
+    pub fn drain_limbo(&mut self) {
+        self.limbo_aged.clear();
+        std::mem::swap(&mut self.limbo_aged, &mut self.limbo_fresh);
+    }
+
+    /// Buffers currently parked in limbo (test/introspection hook).
+    pub fn limbo_pages(&self) -> usize {
+        self.limbo_fresh.len() + self.limbo_aged.len()
     }
 
     /// The ascending chunk-size table (current generation).
@@ -259,6 +293,8 @@ impl SlabAllocator {
     fn retire_page(&mut self, buf: Box<[u8]>) {
         if self.pages_allocated + self.free_pages.len() < self.effective_budget() {
             self.free_pages.push(buf);
+        } else {
+            self.condemn(buf);
         }
     }
 
@@ -430,8 +466,14 @@ impl SlabAllocator {
     /// budget. Returns the buffers returned to the OS.
     pub fn trim_free_pool(&mut self) -> usize {
         let mut shed = 0;
-        while self.resident_pages() > self.page_budget && self.free_pages.pop().is_some() {
-            shed += 1;
+        while self.resident_pages() > self.page_budget {
+            match self.free_pages.pop() {
+                Some(buf) => {
+                    self.condemn(buf);
+                    shed += 1;
+                }
+                None => break,
+            }
         }
         shed
     }
@@ -478,9 +520,12 @@ impl SlabAllocator {
             // remain live past the drain — a permanent overshoot capped
             // at MIGRATION_PAGE_SLACK (take_page never admits beyond
             // budget + slack, so repeated migrations cannot compound it)
-            while self.pages_allocated + self.free_pages.len() > self.page_budget
-                && self.free_pages.pop().is_some()
-            {}
+            while self.pages_allocated + self.free_pages.len() > self.page_budget {
+                match self.free_pages.pop() {
+                    Some(buf) => self.condemn(buf),
+                    None => break,
+                }
+            }
         }
         freed
     }
@@ -708,6 +753,35 @@ mod tests {
         a.finish_migration();
         // after the drain the budget is strict again
         assert!(a.pages_allocated() + a.free_page_count() <= 1 + MIGRATION_PAGE_SLACK);
+    }
+
+    #[test]
+    fn freed_page_buffers_age_through_limbo() {
+        // budget 1 page; migrating to a less dense geometry strands
+        // over-budget buffers, which must age through limbo (stale
+        // optimistic readers may still hold chunk addresses into them)
+        // instead of returning to the OS immediately
+        let mut a = SlabAllocator::new(
+            &ChunkSizePolicy::Explicit(vec![512, 4096]),
+            4096,
+            4096,
+        )
+        .unwrap();
+        let held: Vec<_> = (0..8).map(|_| a.alloc(400).unwrap()).collect();
+        a.begin_migration(&ChunkSizePolicy::Explicit(vec![600, 4096]))
+            .unwrap();
+        for &h in &held {
+            let to = a.alloc(400).unwrap();
+            a.migrate_copy(h, to, 400);
+            a.free_old(h, 400);
+        }
+        a.finish_migration();
+        let parked = a.limbo_pages();
+        assert!(parked > 0, "over-budget buffers parked in limbo");
+        a.drain_limbo();
+        assert_eq!(a.limbo_pages(), parked, "first drain only ages");
+        a.drain_limbo();
+        assert_eq!(a.limbo_pages(), 0, "second drain returns them to the OS");
     }
 
     #[test]

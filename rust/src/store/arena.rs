@@ -1,8 +1,34 @@
 //! Item-metadata arena: fixed-size records addressed by `u32` ids, with
 //! intrusive links for both the hash chains and the LRU lists (the same
 //! layout trick as memcached's `_stritem`, minus the pointers).
+//!
+//! The slot array is published (base pointer + initialized length)
+//! through an [`ArenaPub`] for the optimistic read path: lock-free
+//! readers volatile-copy `ItemMeta` records straight out of the array
+//! and validate the copy against the shard's seqlock stripes. Two
+//! consequences shape the implementation:
+//!
+//! * **Slots never move while readable.** Growth allocates a fresh
+//!   array, copies, republishes, and parks the superseded allocation in
+//!   a graveyard instead of freeing it — a reader holding a stale base
+//!   pointer dereferences frozen memory and its seqlock validation
+//!   (the insert that grew the arena bumped its stripe) rejects any
+//!   stale conclusion. Growth is geometric, so graveyard bytes total
+//!   less than the current array.
+//! * **Records are `Copy`** so readers can `ptr::read_volatile` a whole
+//!   record; every field is a plain integer/bool, so a torn copy can
+//!   produce stale or inconsistent *combinations* but never an invalid
+//!   bit pattern — and inconsistent combinations are exactly what the
+//!   seqlock validation rejects.
 
+use super::optimistic::ArenaPub;
 use crate::slab::ChunkHandle;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Initial slot capacity (pre-sized so small stores never retire an
+/// array at all).
+const INITIAL_CAP: usize = 1024;
 
 /// Sentinel id for "no item".
 pub const NIL: u32 = u32::MAX;
@@ -26,10 +52,17 @@ impl Tier {
 }
 
 /// Per-item metadata record (the chunk holds `[key][value]` bytes).
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct ItemMeta {
     pub hash: u64,
     pub handle: ChunkHandle,
+    /// Base address of the item's chunk (`[key][value]` bytes). Kept in
+    /// sync with `handle` at every assignment site so the optimistic
+    /// read path can reach the bytes without traversing the allocator.
+    /// Chunk buffers are never unmapped while a reader could hold this
+    /// address (freed page buffers age through the allocator's limbo
+    /// list for at least one maintainer pass).
+    pub chunk_addr: usize,
     pub klen: u16,
     pub vlen: u32,
     pub flags: u32,
@@ -72,6 +105,7 @@ impl ItemMeta {
                 class: 0,
                 loc: crate::slab::class::ChunkLoc { page: 0, chunk: 0 },
             },
+            chunk_addr: 0,
             klen: 0,
             vlen: 0,
             flags: 0,
@@ -97,15 +131,53 @@ pub struct Arena {
     items: Vec<ItemMeta>,
     free: Vec<u32>,
     live: usize,
+    /// Base/len published to lock-free readers.
+    publish: Arc<ArenaPub>,
+    /// Superseded slot arrays, kept mapped for stale-pointer readers.
+    retired: Vec<Vec<ItemMeta>>,
 }
 
 impl Arena {
     pub fn new() -> Self {
-        Arena {
-            items: Vec::new(),
+        let a = Arena {
+            items: Vec::with_capacity(INITIAL_CAP),
             free: Vec::new(),
             live: 0,
+            publish: Arc::new(ArenaPub::default()),
+            retired: Vec::new(),
+        };
+        a.republish();
+        a
+    }
+
+    /// Handle for the optimistic read path.
+    pub fn publish_handle(&self) -> Arc<ArenaPub> {
+        self.publish.clone()
+    }
+
+    /// Publish the current base pointer and initialized length. Release
+    /// ordering pairs with the readers' Acquire loads, so a reader that
+    /// observes the new length also observes the pushed record.
+    fn republish(&self) {
+        self.publish
+            .base
+            .store(self.items.as_ptr() as usize, Ordering::Release);
+        self.publish.len.store(self.items.len(), Ordering::Release);
+    }
+
+    /// Grow without ever invalidating a published pointer: allocate the
+    /// doubled array, copy, swap, and park the old allocation.
+    fn grow_for_push(&mut self) {
+        if self.items.len() < self.items.capacity() {
+            return;
         }
+        let mut bigger = Vec::with_capacity((self.items.capacity() * 2).max(INITIAL_CAP));
+        bigger.extend_from_slice(&self.items);
+        let old = std::mem::replace(&mut self.items, bigger);
+        if !old.is_empty() {
+            self.retired.push(old);
+        }
+        self.republish();
     }
 
     /// Number of live records.
@@ -129,7 +201,9 @@ impl Arena {
             None => {
                 let id = self.items.len() as u32;
                 assert!(id != NIL, "arena exhausted");
+                self.grow_for_push();
                 self.items.push(meta);
+                self.republish();
                 self.live += 1;
                 id
             }
@@ -151,6 +225,14 @@ impl Arena {
         let m = &self.items[id as usize];
         debug_assert!(m.live, "access of dead id {id}");
         m
+    }
+
+    /// Bounds- and liveness-checked access: `None` for out-of-range or
+    /// vacant ids. Used to validate deferred bump events, whose ids may
+    /// be arbitrarily stale by the time the maintainer applies them.
+    #[inline]
+    pub fn get_checked(&self, id: u32) -> Option<&ItemMeta> {
+        self.items.get(id as usize).filter(|m| m.live)
     }
 
     #[inline]
@@ -213,6 +295,29 @@ mod tests {
         let id = a.insert(meta());
         a.remove(id);
         a.remove(id);
+    }
+
+    #[test]
+    fn growth_republishes_and_retires_old_array() {
+        let mut a = Arena::new();
+        let p = a.publish_handle();
+        let base0 = p.base.load(Ordering::Relaxed);
+        assert_ne!(base0, 0);
+        assert_eq!(p.len.load(Ordering::Relaxed), 0);
+        for _ in 0..(INITIAL_CAP + 1) {
+            a.insert(meta());
+        }
+        assert_eq!(p.len.load(Ordering::Relaxed), INITIAL_CAP + 1);
+        assert_eq!(
+            p.base.load(Ordering::Relaxed),
+            a.items.as_ptr() as usize,
+            "published base tracks the live array"
+        );
+        assert_eq!(a.retired.len(), 1, "superseded array parked, not freed");
+        assert_eq!(
+            a.retired[0].as_ptr() as usize, base0,
+            "the parked array is the one readers may still hold"
+        );
     }
 
     #[test]

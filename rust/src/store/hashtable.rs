@@ -6,8 +6,29 @@
 //! The table stores `u32` arena ids and chains through
 //! `ItemMeta::hnext`; key equality is delegated to a caller-provided
 //! closure because key bytes live in slab chunks, not in the arena.
+//!
+//! ## Optimistic-reader support
+//!
+//! The bucket-array geometry is published through a [`TablePub`] so the
+//! lock-free read path can walk chains without the shard lock:
+//!
+//! * Superseded bucket arrays (and superseded [`TableView`] boxes) are
+//!   parked in a graveyard instead of freed, so a stale snapshot is
+//!   always dereferenceable; there are at most O(log buckets) of them.
+//! * The bucket count never drops below [`MIN_BUCKETS`] = the seqlock
+//!   stripe count. Because the bucket index is `hash & mask` with
+//!   `mask >= STRIPES - 1`, **every item chained in one bucket shares
+//!   one seqlock stripe** — a chain relink (which rewrites a
+//!   *neighbour* item's `hnext`, or re-heads the bucket) is covered by
+//!   the same stripe any reader of that chain validates against.
+//! * Expansion relinks (which move whole old buckets while holding no
+//!   per-item context) bump the stripe of the bucket being relinked via
+//!   the table's own [`SeqStripes`] handle — shared with the owning
+//!   `KvStore` so readers see one coherent counter space.
 
 use super::arena::{Arena, NIL};
+use super::optimistic::{SeqStripes, TablePub, TableView, STRIPES};
+use std::sync::Arc;
 
 /// Buckets double when `items > buckets * LOAD_NUM / LOAD_DEN`.
 const LOAD_NUM: usize = 3;
@@ -15,6 +36,11 @@ const LOAD_DEN: usize = 2;
 
 /// Old-table buckets migrated per operation during expansion.
 const MIGRATE_PER_OP: usize = 2;
+
+/// Bucket-count floor: one stripe must never cover less than one
+/// bucket, or a chain could span stripes and escape its readers'
+/// validation (see module docs).
+pub const MIN_BUCKETS: usize = STRIPES;
 
 pub struct HashTable {
     /// Current (possibly expanded) bucket array.
@@ -26,6 +52,16 @@ pub struct HashTable {
     items: usize,
     mask: u64,
     old_mask: u64,
+    /// Stripe counters shared with the owning store (private stripes
+    /// when constructed standalone, e.g. in unit tests).
+    seq: Arc<SeqStripes>,
+    /// Geometry published to lock-free readers.
+    publish: Arc<TablePub>,
+    /// Every view ever published (the last one is current); kept alive
+    /// for readers holding stale snapshots.
+    views: Vec<Box<TableView>>,
+    /// Retired bucket arrays, kept mapped for stale-view readers.
+    graveyard: Vec<Vec<u32>>,
 }
 
 impl HashTable {
@@ -34,15 +70,50 @@ impl HashTable {
     }
 
     pub fn with_buckets(n: usize) -> Self {
-        let n = n.next_power_of_two();
-        HashTable {
+        Self::with_buckets_and_seq(n, Arc::new(SeqStripes::new()))
+    }
+
+    /// Construct with the owning store's stripe counters (the handle
+    /// expansion relinks bump).
+    pub fn with_buckets_and_seq(n: usize, seq: Arc<SeqStripes>) -> Self {
+        let n = n.next_power_of_two().max(MIN_BUCKETS);
+        let mut t = HashTable {
             primary: vec![NIL; n],
             old: Vec::new(),
             migrate_pos: 0,
             items: 0,
             mask: (n - 1) as u64,
             old_mask: 0,
-        }
+            seq,
+            publish: Arc::new(TablePub::new()),
+            views: Vec::new(),
+            graveyard: Vec::new(),
+        };
+        t.republish();
+        t
+    }
+
+    /// Handle for the optimistic read path.
+    pub fn publish_handle(&self) -> Arc<TablePub> {
+        self.publish.clone()
+    }
+
+    /// Publish the current geometry; the superseded view box stays in
+    /// `views` for readers that already snapshotted it.
+    fn republish(&mut self) {
+        let view = Box::new(TableView {
+            prim_base: self.primary.as_ptr() as usize,
+            prim_mask: self.mask,
+            old_base: if self.old.is_empty() {
+                0
+            } else {
+                self.old.as_ptr() as usize
+            },
+            old_mask: self.old_mask,
+        });
+        self.views.push(view);
+        let raw = &**self.views.last().unwrap() as *const TableView as *mut TableView;
+        self.publish.publish(raw);
     }
 
     pub fn len(&self) -> usize {
@@ -141,6 +212,20 @@ impl HashTable {
         self.old = old;
         self.migrate_pos = 0;
         self.mask = (new_size - 1) as u64;
+        // readers snapshotting before this publish walk the old array as
+        // "primary" — every item is still linked there, so both views
+        // stay coherent until relinks start bumping stripes
+        self.republish();
+    }
+
+    /// Expansion finished: park the drained old array for stale-view
+    /// readers and publish the single-array geometry.
+    fn complete_expansion(&mut self) {
+        let drained = std::mem::take(&mut self.old);
+        self.graveyard.push(drained);
+        self.old_mask = 0;
+        self.migrate_pos = 0;
+        self.republish();
     }
 
     /// Migrate up to [`MIGRATE_PER_OP`] old buckets into the primary.
@@ -150,11 +235,12 @@ impl HashTable {
         }
         for _ in 0..MIGRATE_PER_OP {
             if self.migrate_pos >= self.old.len() {
-                self.old = Vec::new();
-                self.old_mask = 0;
-                self.migrate_pos = 0;
+                self.complete_expansion();
                 return;
             }
+            // one stripe covers the old bucket and every primary bucket
+            // its items re-head into (same hash low bits)
+            let _g = self.seq.guard_stripe(self.migrate_pos & (STRIPES - 1));
             let mut id = std::mem::replace(&mut self.old[self.migrate_pos], NIL);
             while id != NIL {
                 let next = arena.get(id).hnext;
@@ -166,9 +252,7 @@ impl HashTable {
             self.migrate_pos += 1;
         }
         if self.migrate_pos >= self.old.len() {
-            self.old = Vec::new();
-            self.old_mask = 0;
-            self.migrate_pos = 0;
+            self.complete_expansion();
         }
     }
 
@@ -214,6 +298,7 @@ mod tests {
                 class: 0,
                 loc: crate::slab::class::ChunkLoc { page: 0, chunk: 0 },
             },
+            chunk_addr: 0,
             klen: 0,
             vlen: 0,
             flags: 0,
@@ -303,6 +388,59 @@ mod tests {
         for k in 0..64u64 {
             let h = hash_key(&k.to_le_bytes());
             assert!(t.find(h, &a, |i| a.get(i).hash == h).is_some());
+        }
+    }
+
+    #[test]
+    fn bucket_floor_is_stripe_count() {
+        // the chain-per-stripe invariant the optimistic reader relies on
+        let t = HashTable::with_buckets(2);
+        assert_eq!(t.buckets(), MIN_BUCKETS);
+        assert!(HashTable::new().buckets() >= MIN_BUCKETS);
+    }
+
+    #[test]
+    fn expansion_republishes_and_parks_arrays() {
+        let mut t = HashTable::with_buckets(64);
+        let mut a = Arena::new();
+        let p = t.publish_handle();
+        let v0 = p.snapshot().unwrap();
+        assert_eq!(v0.prim_mask, 63);
+        assert_eq!(v0.old_base, 0, "no expansion yet");
+        for k in 0..200u64 {
+            put(&mut t, &mut a, hash_key(&k.to_le_bytes()));
+        }
+        t.finish_expansion(&mut a);
+        let v1 = p.snapshot().unwrap();
+        assert!(v1.prim_mask > 63, "expanded geometry published");
+        assert_eq!(v1.old_base, 0, "expansion complete in final view");
+        assert!(
+            !t.graveyard.is_empty(),
+            "drained arrays parked for stale-view readers"
+        );
+        // stale view v0's array is one of the parked ones — still mapped
+        assert!(t
+            .graveyard
+            .iter()
+            .any(|g| g.as_ptr() as usize == v0.prim_base));
+    }
+
+    #[test]
+    fn expansion_relinks_bump_their_stripes() {
+        let seq = Arc::new(SeqStripes::new());
+        let mut t = HashTable::with_buckets_and_seq(64, seq.clone());
+        let mut a = Arena::new();
+        let before: Vec<u64> = (0..STRIPES).map(|s| seq.begin_read(s)).collect();
+        for k in 0..200u64 {
+            put(&mut t, &mut a, hash_key(&k.to_le_bytes()));
+        }
+        t.finish_expansion(&mut a);
+        let moved = (0..STRIPES)
+            .filter(|&s| seq.begin_read(s) != before[s])
+            .count();
+        assert!(moved > 0, "relinked buckets must bump stripes");
+        for s in 0..STRIPES {
+            assert_eq!(seq.begin_read(s) & 1, 0, "all windows closed");
         }
     }
 

@@ -16,6 +16,11 @@
 //!   the maintainer re-drains them (one page per pass, residents
 //!   enumerated in O(chunks/page) through the per-page item index) and
 //!   returns the buffers to the OS.
+//! * **Deferred read-side effects**: optimistic (lock-free) gets queue
+//!   their LRU bumps and fetched-bit sets on per-shard rings
+//!   ([`ShardedStore::drain_deferred`]); every pass drains and applies
+//!   them under one short write-lock lease per shard, keeping LRU
+//!   ordering fresh without the read path ever writing shared state.
 //!
 //! The thread shares the auto-tuner's clock discipline (a fixed tick,
 //! work only when there is work) but is independent of it: servers
@@ -90,6 +95,9 @@ pub fn spawn_maintainer(
             supervisor::supervise("maintainer", &shutdown, || {
                 failpoint::fired("maintainer.pass.pause");
                 failpoint::maybe_panic("maintainer.pass.panic");
+                // apply deferred read-side bumps (optimistic-get LRU
+                // effects) even while a migration monopolizes the pass
+                store.drain_deferred();
                 if cfg.pump_migration && store.migration_active() {
                     // pump the drain; breathe between rounds so std's
                     // unfair RwLock cannot starve readers

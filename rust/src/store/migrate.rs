@@ -203,12 +203,21 @@ impl KvStore {
             self.page_unlink(id);
             match self.migrate_alloc(total) {
                 Some(new_handle) => {
+                    // the new chunk is filled before the stripe window
+                    // opens: a reader can only reach it through the
+                    // handle/addr flip below, which the window covers
                     self.alloc.migrate_copy(handle, new_handle, klen + vlen);
+                    let new_addr = self.alloc.chunk(new_handle).as_ptr() as usize;
                     self.alloc.free_old(handle, total);
                     let gen = self.gen;
-                    let m = self.arena.get_mut(id);
-                    m.handle = new_handle;
-                    m.gen = gen;
+                    {
+                        let seq = self.seq.clone();
+                        let _g = seq.guard(hash);
+                        let m = self.arena.get_mut(id);
+                        m.handle = new_handle;
+                        m.gen = gen;
+                        m.chunk_addr = new_addr;
+                    }
                     self.lrus[new_handle.class as usize].insert(id, &mut self.arena);
                     self.page_link(id);
                     let mig = self.migration.as_mut().expect("active migration");
@@ -218,9 +227,13 @@ impl KvStore {
                 None => {
                     // no room even after force-drains: the item is lost
                     // (the paper's restart would have lost everything)
-                    self.table.remove(id, hash, &mut self.arena);
+                    {
+                        let seq = self.seq.clone();
+                        let _g = seq.guard(hash);
+                        self.table.remove(id, hash, &mut self.arena);
+                        self.arena.remove(id);
+                    }
                     self.alloc.free_old(handle, total);
-                    self.arena.remove(id);
                     let mig = self.migration.as_mut().expect("active migration");
                     mig.dropped += 1;
                     mig.old_items -= 1;

@@ -10,6 +10,7 @@ pub mod item;
 pub mod lru;
 pub mod maintainer;
 pub mod migrate;
+pub mod optimistic;
 pub mod sharded;
 #[allow(clippy::module_inception)]
 pub mod store;

@@ -1,0 +1,574 @@
+//! Primitives for the optimistic (lock-free) read path.
+//!
+//! Three building blocks, all shared between a shard's `KvStore`
+//! (writer side, behind the shard `RwLock`) and the shard itself
+//! (reader side, *outside* the lock):
+//!
+//! * [`SeqStripes`] — 64 cache-padded seqlock counters per shard.
+//!   Writers bump the stripe of every hash whose reader-visible state
+//!   they mutate (odd = mutation in flight); optimistic readers
+//!   snapshot the stripe, copy what they need, and [`SeqStripes::
+//!   validate`] that the stripe never moved. The stripe of a hash is
+//!   its low 6 bits, which combined with the hash table's ≥ 64-bucket
+//!   floor guarantees *every item chained in one bucket shares one
+//!   stripe* — so chain-relink writes (which touch a neighbour item,
+//!   not the item being removed) are still observable by any reader of
+//!   that chain.
+//! * [`BumpRing`] — a bounded MPSC ring (Vyukov-style) carrying
+//!   deferred read-side effects: LRU bumps, access-time refreshes and
+//!   fetched-bit sets become [`BumpEvent`]s enqueued by lock-free
+//!   readers and drained by the maintainer thread under one short
+//!   write-lock lease per pass. Overflow policy is drop-bump: recency
+//!   goes slightly stale, correctness is unaffected, and the drop is
+//!   counted (`lru_bump_dropped`).
+//! * [`ReadLanes`] — read-path statistics striped across 8 cache-line
+//!   padded lanes (indexed by a thread-local lane id) so the hot get
+//!   path never bounces a shared counter cache line between reader
+//!   threads.
+//!
+//! ## Seqlock protocol
+//!
+//! Writer (always under the shard write lock, so stripes never race
+//! each other):
+//!
+//! ```text
+//! seq.fetch_add(1, AcqRel);   // odd: mutation in flight; later writes
+//!                             // cannot be reordered before this
+//! ... mutate reader-visible state ...
+//! seq.fetch_add(1, Release);  // even again; mutations cannot leak after
+//! ```
+//!
+//! Reader:
+//!
+//! ```text
+//! s1 = seq.load(Acquire);        // odd -> writer active, retry
+//! ... volatile copies ...
+//! fence(Acquire); s2 = seq.load(Relaxed);
+//! valid iff s1 == s2 (and s1 even)
+//! ```
+//!
+//! Nested writer guards on one stripe are deliberately a no-op: an
+//! eviction performed while an outer [`StripeGuard`] already holds the
+//! stripe odd must *not* flip it back to even mid-mutation, and the
+//! outer guard's window already covers the nested mutation.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+
+/// Stripes per shard. Must be a power of two, and must not exceed the
+/// hash table's minimum bucket count (see `HashTable::with_buckets`):
+/// that floor is what makes "stripe of the hash" equal "stripe of the
+/// bucket" so one guard covers a whole chain.
+pub const STRIPES: usize = 64;
+
+/// One seqlock counter on its own cache line.
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedSeq(AtomicU64);
+
+/// Per-shard striped seqlock (see module docs for the protocol).
+pub struct SeqStripes {
+    seqs: [PaddedSeq; STRIPES],
+}
+
+impl Default for SeqStripes {
+    fn default() -> Self {
+        SeqStripes::new()
+    }
+}
+
+impl SeqStripes {
+    pub fn new() -> SeqStripes {
+        SeqStripes {
+            seqs: std::array::from_fn(|_| PaddedSeq::default()),
+        }
+    }
+
+    /// Stripe index of a key hash (low bits — shared by every item in
+    /// the hash-table bucket the key chains into).
+    #[inline]
+    pub fn stripe_of(hash: u64) -> usize {
+        (hash & (STRIPES as u64 - 1)) as usize
+    }
+
+    /// Reader: snapshot a stripe. Odd means a writer is mid-mutation.
+    #[inline]
+    pub fn begin_read(&self, stripe: usize) -> u64 {
+        self.seqs[stripe].0.load(Ordering::Acquire)
+    }
+
+    /// Reader: did the stripe stay put since [`begin_read`]? Implies
+    /// every volatile copy made in between was consistent.
+    ///
+    /// [`begin_read`]: SeqStripes::begin_read
+    #[inline]
+    pub fn validate(&self, stripe: usize, seen: u64) -> bool {
+        fence(Ordering::Acquire);
+        seen & 1 == 0 && self.seqs[stripe].0.load(Ordering::Relaxed) == seen
+    }
+
+    /// Writer: mark a mutation window on the stripe of `hash`. Caller
+    /// must hold the shard write lock (single mutator per stripe).
+    #[inline]
+    pub fn guard(&self, hash: u64) -> StripeGuard<'_> {
+        self.guard_stripe(Self::stripe_of(hash))
+    }
+
+    /// Writer: mutation window on an explicit stripe index (used by the
+    /// hash table when relinking whole buckets during expansion).
+    #[inline]
+    pub fn guard_stripe(&self, stripe: usize) -> StripeGuard<'_> {
+        let seq = &self.seqs[stripe].0;
+        // already odd: an outer guard on this stripe is active (e.g. an
+        // eviction nested inside a store) — its window covers us
+        if seq.load(Ordering::Relaxed) & 1 == 1 {
+            return StripeGuard { seq: None };
+        }
+        // AcqRel: subsequent mutations cannot be reordered before the
+        // odd transition
+        seq.fetch_add(1, Ordering::AcqRel);
+        StripeGuard { seq: Some(seq) }
+    }
+}
+
+/// RAII writer window on one stripe (see [`SeqStripes::guard`]).
+pub struct StripeGuard<'a> {
+    /// `None` when nested inside an outer guard on the same stripe.
+    seq: Option<&'a AtomicU64>,
+}
+
+impl Drop for StripeGuard<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(seq) = self.seq {
+            // Release: the mutations cannot leak past the even transition
+            seq.fetch_add(1, Ordering::Release);
+        }
+    }
+}
+
+// ====================================================================
+// Published pointers: what the lock-free reader is allowed to touch
+// ====================================================================
+
+/// Arena item-slot array, published for lock-free readers. The writer
+/// republishes on every growth; retired arrays are kept alive (see
+/// `Arena`) so a reader holding a stale base pointer dereferences
+/// frozen — never freed — memory.
+#[derive(Default)]
+pub struct ArenaPub {
+    /// Base address of the `ItemMeta` slot array.
+    pub base: AtomicUsize,
+    /// Number of initialized slots (readers bound-check ids against it).
+    pub len: AtomicUsize,
+}
+
+/// Immutable snapshot of the hash table's bucket-array geometry. The
+/// table republishes a fresh boxed view whenever an array appears,
+/// moves or retires; superseded views and bucket arrays are parked in
+/// the table's graveyard, so any snapshot a reader loaded stays
+/// dereferenceable for the table's lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableView {
+    /// Base address of the primary bucket array (`u32` heads).
+    pub prim_base: usize,
+    /// Primary index mask (`buckets - 1`).
+    pub prim_mask: u64,
+    /// Base address of the pre-expansion array (0 = no expansion).
+    pub old_base: usize,
+    /// Old index mask (meaningless when `old_base == 0`).
+    pub old_mask: u64,
+}
+
+/// Atomic cell holding the current [`TableView`] pointer.
+pub struct TablePub {
+    view: std::sync::atomic::AtomicPtr<TableView>,
+}
+
+impl TablePub {
+    /// Starts with a null view; the owning table publishes immediately.
+    pub fn new() -> TablePub {
+        TablePub {
+            view: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
+        }
+    }
+
+    /// Writer: swing the view pointer. The caller owns (and must keep
+    /// alive) both the new and the previously published box.
+    pub fn publish(&self, view: *mut TableView) {
+        self.view.store(view, Ordering::Release);
+    }
+
+    /// Reader: copy the current view. Returns `None` before the first
+    /// publish (never happens for a constructed table).
+    #[inline]
+    pub fn snapshot(&self) -> Option<TableView> {
+        let p = self.view.load(Ordering::Acquire);
+        // SAFETY: a non-null view pointer is always a Box the owning
+        // table keeps alive (graveyarded on republish) for as long as
+        // any reader can exist.
+        unsafe { p.as_ref().copied() }
+    }
+}
+
+impl Default for TablePub {
+    fn default() -> Self {
+        TablePub::new()
+    }
+}
+
+// ====================================================================
+// Deferred read-side effects
+// ====================================================================
+
+/// One deferred read-side effect: "this read would have bumped the
+/// item's LRU position / access time / fetched bit". Applied later by
+/// the maintainer under the shard write lock, after re-validating that
+/// the slot still holds the same item (`live` + `gen` + `cas`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BumpEvent {
+    /// Arena slot id of the item at enqueue time.
+    pub id: u32,
+    /// Item generation tag at enqueue time.
+    pub gen: u8,
+    /// Item CAS at enqueue time (slot-reuse guard).
+    pub cas: u64,
+    /// Coarse clock at enqueue time (becomes the new access time).
+    pub now: u32,
+}
+
+/// Capacity of each shard's deferred-bump ring. Power of two.
+pub const BUMP_RING_CAP: usize = 2048;
+
+struct RingSlot {
+    seq: AtomicUsize,
+    val: UnsafeCell<BumpEvent>,
+}
+
+/// Bounded multi-producer single-consumer ring (Vyukov's bounded MPMC
+/// queue, used here MPSC: readers produce, the maintainer consumes).
+/// `push` is lock-free and allocation-free; a full ring rejects the
+/// event (drop-bump overflow policy).
+pub struct BumpRing {
+    slots: Box<[RingSlot]>,
+    mask: usize,
+    enqueue: AtomicUsize,
+    dequeue: AtomicUsize,
+}
+
+// SAFETY: slot payloads are only written by the producer that won the
+// slot via CAS on `enqueue` (published by the slot's `seq` store) and
+// only read by the single consumer after observing that publish.
+unsafe impl Send for BumpRing {}
+unsafe impl Sync for BumpRing {}
+
+impl BumpRing {
+    pub fn new(capacity: usize) -> BumpRing {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots = (0..cap)
+            .map(|i| RingSlot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(BumpEvent::default()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        BumpRing {
+            slots,
+            mask: cap - 1,
+            enqueue: AtomicUsize::new(0),
+            dequeue: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enqueue from any reader thread. `false` = ring full (drop-bump).
+    pub fn push(&self, ev: BumpEvent) -> bool {
+        let mut pos = self.enqueue.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread sole
+                        // write access to the slot until the seq store.
+                        unsafe { *slot.val.get() = ev };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return true;
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                return false; // full
+            } else {
+                pos = self.enqueue.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue one event. Single consumer (the maintainer).
+    pub fn pop(&self) -> Option<BumpEvent> {
+        let pos = self.dequeue.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & self.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if (seq as isize) - (pos.wrapping_add(1) as isize) < 0 {
+            return None; // empty
+        }
+        // SAFETY: single consumer; the Acquire load above synchronizes
+        // with the producer's Release publish of this slot.
+        let ev = unsafe { *slot.val.get() };
+        slot.seq
+            .store(pos.wrapping_add(self.mask).wrapping_add(1), Ordering::Release);
+        self.dequeue.store(pos.wrapping_add(1), Ordering::Relaxed);
+        Some(ev)
+    }
+
+    /// Drain up to `max` events into `out` (consumer side).
+    pub fn drain_into(&self, out: &mut Vec<BumpEvent>, max: usize) {
+        while out.len() < max {
+            match self.pop() {
+                Some(ev) => out.push(ev),
+                None => break,
+            }
+        }
+    }
+}
+
+// ====================================================================
+// Striped read counters
+// ====================================================================
+
+/// Lanes per shard for read-path counters. Power of two.
+pub const LANES: usize = 8;
+
+/// One lane of read counters, padded to a cache line (7 × 8 B = 56 B).
+#[repr(align(64))]
+#[derive(Default)]
+pub struct ReadLane {
+    pub gets: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub retries: AtomicU64,
+    pub fallbacks: AtomicU64,
+    pub bump_queued: AtomicU64,
+    pub bump_dropped: AtomicU64,
+}
+
+/// Aggregated totals of a shard's [`ReadLanes`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReadLaneTotals {
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub retries: u64,
+    pub fallbacks: u64,
+    pub bump_queued: u64,
+    pub bump_dropped: u64,
+}
+
+/// Cache-line striped read-path counters. Each thread hashes to one
+/// lane (sticky thread-local assignment), so concurrent readers on
+/// different cores do not share a counter cache line.
+pub struct ReadLanes {
+    lanes: [ReadLane; LANES],
+}
+
+impl Default for ReadLanes {
+    fn default() -> Self {
+        ReadLanes::new()
+    }
+}
+
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    static LANE: usize = NEXT_LANE.fetch_add(1, Ordering::Relaxed) & (LANES - 1);
+}
+
+impl ReadLanes {
+    pub fn new() -> ReadLanes {
+        ReadLanes {
+            lanes: std::array::from_fn(|_| ReadLane::default()),
+        }
+    }
+
+    /// The calling thread's lane.
+    #[inline]
+    pub fn lane(&self) -> &ReadLane {
+        &self.lanes[LANE.with(|l| *l)]
+    }
+
+    pub fn totals(&self) -> ReadLaneTotals {
+        let mut t = ReadLaneTotals::default();
+        for l in &self.lanes {
+            t.gets += l.gets.load(Ordering::Relaxed);
+            t.hits += l.hits.load(Ordering::Relaxed);
+            t.misses += l.misses.load(Ordering::Relaxed);
+            t.retries += l.retries.load(Ordering::Relaxed);
+            t.fallbacks += l.fallbacks.load(Ordering::Relaxed);
+            t.bump_queued += l.bump_queued.load(Ordering::Relaxed);
+            t.bump_dropped += l.bump_dropped.load(Ordering::Relaxed);
+        }
+        t
+    }
+
+    pub fn reset(&self) {
+        for l in &self.lanes {
+            l.gets.store(0, Ordering::Relaxed);
+            l.hits.store(0, Ordering::Relaxed);
+            l.misses.store(0, Ordering::Relaxed);
+            l.retries.store(0, Ordering::Relaxed);
+            l.fallbacks.store(0, Ordering::Relaxed);
+            l.bump_queued.store(0, Ordering::Relaxed);
+            l.bump_dropped.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn stripe_guard_parity() {
+        let s = SeqStripes::new();
+        let h = 0x1234_5678_u64;
+        let stripe = SeqStripes::stripe_of(h);
+        let before = s.begin_read(stripe);
+        assert_eq!(before & 1, 0);
+        {
+            let _g = s.guard(h);
+            assert_eq!(s.begin_read(stripe) & 1, 1, "odd inside the window");
+        }
+        let after = s.begin_read(stripe);
+        assert_eq!(after, before + 2);
+        assert!(s.validate(stripe, after));
+        assert!(!s.validate(stripe, before));
+    }
+
+    #[test]
+    fn nested_guard_on_same_stripe_is_noop() {
+        let s = SeqStripes::new();
+        let h = 64 + 5; // stripe 5
+        let outer = s.guard(h);
+        let v = s.begin_read(5);
+        assert_eq!(v & 1, 1);
+        {
+            let _inner = s.guard(h);
+            assert_eq!(s.begin_read(5), v, "nested guard must not move the seq");
+        }
+        assert_eq!(s.begin_read(5), v, "inner drop must not end the window");
+        drop(outer);
+        assert_eq!(s.begin_read(5) & 1, 0);
+    }
+
+    #[test]
+    fn guards_on_distinct_stripes_are_independent() {
+        let s = SeqStripes::new();
+        let _a = s.guard(0);
+        let _b = s.guard(1);
+        assert_eq!(s.begin_read(0) & 1, 1);
+        assert_eq!(s.begin_read(1) & 1, 1);
+        assert_eq!(s.begin_read(2) & 1, 0);
+    }
+
+    #[test]
+    fn stripe_of_matches_bucket_low_bits() {
+        // the invariant the read path depends on: with >= 64 buckets,
+        // hash & (buckets-1) and hash & 63 agree in the low 6 bits
+        for hash in [0u64, 63, 64, 0xdead_beef, u64::MAX] {
+            for buckets in [64u64, 128, 1 << 20] {
+                assert_eq!(
+                    (hash & (buckets - 1)) & 63,
+                    SeqStripes::stripe_of(hash) as u64
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_fifo_and_overflow() {
+        let r = BumpRing::new(4);
+        for i in 0..4u32 {
+            assert!(r.push(BumpEvent {
+                id: i,
+                ..BumpEvent::default()
+            }));
+        }
+        assert!(!r.push(BumpEvent::default()), "full ring rejects");
+        for i in 0..4u32 {
+            assert_eq!(r.pop().unwrap().id, i);
+        }
+        assert_eq!(r.pop(), None);
+        // slots recycle
+        assert!(r.push(BumpEvent {
+            id: 9,
+            ..BumpEvent::default()
+        }));
+        assert_eq!(r.pop().unwrap().id, 9);
+    }
+
+    #[test]
+    fn ring_concurrent_producers_lose_nothing() {
+        let r = Arc::new(BumpRing::new(4096));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..512u32 {
+                    assert!(r.push(BumpEvent {
+                        id: t * 1000 + i,
+                        ..BumpEvent::default()
+                    }));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = Vec::new();
+        while let Some(ev) = r.pop() {
+            seen.push(ev.id);
+        }
+        assert_eq!(seen.len(), 4 * 512);
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 4 * 512, "no duplicates, no losses");
+    }
+
+    #[test]
+    fn lanes_total_and_reset() {
+        let lanes = ReadLanes::new();
+        lanes.lane().gets.fetch_add(3, Ordering::Relaxed);
+        lanes.lane().hits.fetch_add(2, Ordering::Relaxed);
+        lanes.lane().bump_dropped.fetch_add(1, Ordering::Relaxed);
+        let t = lanes.totals();
+        assert_eq!((t.gets, t.hits, t.bump_dropped), (3, 2, 1));
+        lanes.reset();
+        assert_eq!(lanes.totals(), ReadLaneTotals::default());
+    }
+
+    #[test]
+    fn table_pub_roundtrip() {
+        let p = TablePub::new();
+        assert!(p.snapshot().is_none());
+        let v = Box::new(TableView {
+            prim_base: 0x1000,
+            prim_mask: 63,
+            old_base: 0,
+            old_mask: 0,
+        });
+        let raw = Box::into_raw(v);
+        p.publish(raw);
+        let s = p.snapshot().unwrap();
+        assert_eq!(s.prim_base, 0x1000);
+        assert_eq!(s.prim_mask, 63);
+        // re-box to free (the real owner keeps superseded views alive)
+        unsafe { drop(Box::from_raw(raw)) };
+    }
+}

@@ -6,11 +6,38 @@
 //!
 //! Mutating commands take the shard's write lock. `get`s first probe
 //! under the shard's **read** lock via [`KvStore::peek`] — items
-//! accessed within [`TOUCH_INTERVAL`](crate::store::store::TOUCH_INTERVAL)
-//! are served concurrently with zero store mutation (hit/miss counters
-//! live in per-shard atomics). Only expired items and items due an LRU
-//! bump fall back to the write-locked [`KvStore::get_with`] path, so a
-//! get-heavy workload on one shard no longer serializes.
+//! accessed within [`TOUCH_INTERVAL`] are served concurrently with
+//! zero store mutation (hit/miss counters live in per-shard atomics).
+//! Only expired items and items due an LRU bump fall back to the
+//! write-locked [`KvStore::get_with`] path, so a get-heavy workload on
+//! one shard no longer serializes.
+//!
+//! ## Optimistic (lock-free) reads
+//!
+//! [`get_optimistic`] and [`meta_get_optimistic`] go one step further:
+//! they take **no lock at all**. The probe walks the published hash
+//! geometry ([`TablePub`]) and arena slots ([`ArenaPub`]) with volatile
+//! copies, validated against the shard's seqlock stripes
+//! ([`SeqStripes`]): snapshot the stripe of the key's hash, copy, and
+//! accept the result only if the stripe never moved. Every writer wraps
+//! its reader-visible mutations in a stripe window, and the hash
+//! table's ≥ 64-bucket floor makes "stripe of the hash" = "stripe of
+//! the bucket", so one stripe covers the whole chain the reader walks.
+//! A failed validation retries a few times, then falls back to the
+//! locked paths ([`ReadAttempt::Fallback`]). Read-side effects (LRU
+//! bump, access-time refresh, fetched bit) are not applied inline:
+//! stale hits enqueue a [`BumpEvent`] on the shard's bounded MPSC ring,
+//! drained by the maintainer under one short write-lock lease
+//! ([`ShardedStore::drain_deferred`]); a full ring drops the bump
+//! (counted, never blocking).
+//!
+//! [`TOUCH_INTERVAL`]: crate::store::store::TOUCH_INTERVAL
+//! [`get_optimistic`]: ShardedStore::get_optimistic
+//! [`meta_get_optimistic`]: ShardedStore::meta_get_optimistic
+//! [`TablePub`]: super::optimistic::TablePub
+//! [`ArenaPub`]: super::optimistic::ArenaPub
+//! [`SeqStripes`]: super::optimistic::SeqStripes
+//! [`BumpEvent`]: super::optimistic::BumpEvent
 //!
 //! ## Routing
 //!
@@ -41,12 +68,16 @@
 //! geometries, so an error there is unrecoverable by design (and
 //! unreachable: the policy is validated before any shard flips).
 
+use super::arena::{ItemMeta, NIL};
 use super::item::hash_key;
 use super::migrate::{MigrationGauges, DEFAULT_MIGRATE_BATCH};
+use super::optimistic::{
+    ArenaPub, BumpEvent, BumpRing, ReadLanes, SeqStripes, TablePub, BUMP_RING_CAP,
+};
 use super::store::{
-    ArithOpts, ArithOutcome, CasResult, Clock, DeleteOutcome, KvStore, MetaGetOpts, MetaHit,
-    MetaSetOpts, MigrationReport, PeekOutcome, SetOutcome, SizeObserver, StoreError, StoreStats,
-    Value, ValueRef,
+    ArithOpts, ArithOutcome, CasResult, Clock, DeleteOutcome, ItemDebug, KvStore, MetaGetOpts,
+    MetaHit, MetaSetOpts, MigrationReport, PeekOutcome, SetOutcome, SizeObserver, StoreError,
+    StoreStats, Value, ValueRef, TOUCH_INTERVAL,
 };
 use crate::config::Settings;
 use crate::slab::class::ClassStats;
@@ -60,6 +91,51 @@ use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 /// to one transient allocation.
 const INLINE_BATCH: usize = 64;
 
+/// Values at or above this size are never served by the optimistic
+/// path: the connection layer scatter-writes large values straight to
+/// the socket (`DIRECT_VALUE_MIN`), which cannot be undone if the
+/// post-encode seqlock validation fails. Smaller values are encoded
+/// into the response buffer, which a failed attempt simply truncates.
+pub const OPTIMISTIC_VALUE_MAX: usize = 4096;
+
+/// Optimistic probe attempts before falling back to the locked path.
+const OPTIMISTIC_RETRIES: usize = 4;
+
+/// Chain-hop bound per probe. A genuine chain is far shorter (the
+/// table expands at load factor 1.5); exceeding the bound means the
+/// walk is chasing torn links and must retry.
+const MAX_PROBE_HOPS: usize = 256;
+
+/// Outcome of an optimistic (lock-free) read
+/// ([`ShardedStore::get_optimistic`] /
+/// [`ShardedStore::meta_get_optimistic`]).
+pub enum ReadAttempt<R> {
+    /// Served without any lock; the visitor's output was validated.
+    Hit(R),
+    /// Definitively absent under a validated probe.
+    Miss,
+    /// The lock-free path cannot serve this request — torn-read retries
+    /// exhausted, expired item, oversized value, or flags that require
+    /// the write path. The caller retries on the locked paths, whose
+    /// semantics (and stats accounting) then apply.
+    Fallback,
+}
+
+/// One optimistic probe attempt's outcome (internal; the public
+/// surface folds `Torn` retries and `Unservable` into
+/// [`ReadAttempt::Fallback`]).
+enum ProbeStep<R> {
+    /// Validated hit; the deferred bump (if the item is recency-stale)
+    /// rides along for the caller to enqueue.
+    Hit(R, Option<BumpEvent>),
+    Miss,
+    /// Seqlock validation failed somewhere — retry.
+    Torn,
+    /// The item exists but only the locked path may serve it (expired:
+    /// lazy reclaim mutates; oversized: scatter-write hazard).
+    Unservable,
+}
+
 /// One shard: the store behind an RwLock, plus lock-free counters for
 /// gets served on the read path (where `&mut StoreStats` is
 /// unavailable). [`ShardedStore::stats`] merges both sources.
@@ -68,15 +144,37 @@ struct Shard {
     read_gets: AtomicU64,
     read_hits: AtomicU64,
     read_misses: AtomicU64,
+    /// Seqlock stripes shared with the shard's writers (the store and
+    /// its hash table bump these around every reader-visible mutation).
+    seq: Arc<SeqStripes>,
+    /// Published arena base/len for lock-free slot reads.
+    apub: Arc<ArenaPub>,
+    /// Published hash-table geometry for lock-free bucket walks.
+    tpub: Arc<TablePub>,
+    /// The store's clock, cloned so expiry checks need no lock.
+    clock: Clock,
+    /// Deferred read-side effects (LRU bumps, fetched bits) queued by
+    /// optimistic hits, drained by the maintainer.
+    ring: BumpRing,
+    /// Striped counters for the optimistic path (gets/hits/misses plus
+    /// seqlock retries/fallbacks and bump queue/drop counts).
+    lanes: ReadLanes,
 }
 
 impl Shard {
     fn new(store: KvStore) -> Self {
+        let (seq, apub, tpub, clock) = store.read_handles();
         Shard {
             store: RwLock::new(store),
             read_gets: AtomicU64::new(0),
             read_hits: AtomicU64::new(0),
             read_misses: AtomicU64::new(0),
+            seq,
+            apub,
+            tpub,
+            clock,
+            ring: BumpRing::new(BUMP_RING_CAP),
+            lanes: ReadLanes::new(),
         }
     }
 
@@ -88,6 +186,143 @@ impl Shard {
     /// Write guard, recovering from poisoning (see module docs).
     fn write(&self) -> RwLockWriteGuard<'_, KvStore> {
         self.store.write().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// One lock-free probe attempt for `key` under the seqlock protocol.
+    ///
+    /// Ordering is load-bearing: the stripe snapshot `s1` is taken
+    /// **first**, then the table view and arena base/len (all Acquire).
+    /// Any writer whose mutation precedes `s1` finished with a Release
+    /// stripe bump, so the Acquire load of `s1` makes that mutation —
+    /// and, via the write lock's ordering, every earlier republish of
+    /// the arena or table — visible to this probe. Snapshots taken
+    /// *before* `s1` could be stale yet still pass validation.
+    ///
+    /// Chunk bytes are dereferenced only after (a) the stripe validated
+    /// post-meta-copy and (b) the copied record is live with our hash,
+    /// key length, and a non-zero `chunk_addr`. A torn `chunk_addr`
+    /// cannot clear both gates: a writer mutating an item in our bucket
+    /// holds our stripe (caught by (a)), and a writer recycling the
+    /// slot for another bucket never stores our hash value into it
+    /// (caught by (b)). Walks through garbage links are bounded by the
+    /// arena-length check and [`MAX_PROBE_HOPS`]; byte derefs are
+    /// bounded by the key-length limit and [`OPTIMISTIC_VALUE_MAX`].
+    ///
+    /// `enc` encodes the hit into caller-owned storage (`ctx`); if the
+    /// **post-encode** validation fails, `reset` must undo the encode
+    /// (truncate the output buffer) before the retry.
+    fn probe<C, R>(
+        &self,
+        key: &[u8],
+        hash: u64,
+        ctx: &mut C,
+        reset: &mut impl FnMut(&mut C),
+        enc: &mut impl FnMut(&mut C, &ItemMeta, u32, ValueRef<'_>) -> R,
+    ) -> ProbeStep<R> {
+        let stripe = SeqStripes::stripe_of(hash);
+        let s1 = self.seq.begin_read(stripe);
+        if s1 & 1 == 1 {
+            return ProbeStep::Torn; // writer in flight on our stripe
+        }
+        let Some(view) = self.tpub.snapshot() else {
+            return ProbeStep::Torn;
+        };
+        let abase = self.apub.base.load(Ordering::Acquire) as *const ItemMeta;
+        let alen = self.apub.len.load(Ordering::Acquire);
+        let now = self.clock.now();
+        // The view does not expose migration progress, so walk the
+        // bucket in *both* arrays: during an expansion an item is
+        // linked in exactly one of them at any validated instant.
+        let heads = [
+            (view.prim_base, view.prim_mask),
+            (view.old_base, view.old_mask),
+        ];
+        for &(base, mask) in &heads {
+            if base == 0 {
+                continue; // no old array
+            }
+            let mut id = unsafe {
+                std::ptr::read_volatile((base as *const u32).add((hash & mask) as usize))
+            };
+            let mut hops = 0usize;
+            while id != NIL {
+                hops += 1;
+                if hops > MAX_PROBE_HOPS || (id as usize) >= alen {
+                    return ProbeStep::Torn; // torn link or stale id
+                }
+                let m = unsafe { std::ptr::read_volatile(abase.add(id as usize)) };
+                if !self.seq.validate(stripe, s1) {
+                    return ProbeStep::Torn;
+                }
+                if !m.live
+                    || m.hash != hash
+                    || m.klen as usize != key.len()
+                    || m.chunk_addr == 0
+                {
+                    id = m.hnext;
+                    continue;
+                }
+                if crate::util::failpoint::fired("store.seqlock.stall") {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                // Revalidate before the first chunk deref: the copied
+                // record is now known consistent, so `chunk_addr` is a
+                // real chunk base that limbo keeps mapped.
+                if !self.seq.validate(stripe, s1) {
+                    return ProbeStep::Torn;
+                }
+                let kbytes = unsafe {
+                    std::slice::from_raw_parts(m.chunk_addr as *const u8, m.klen as usize)
+                };
+                if kbytes != key {
+                    id = m.hnext;
+                    continue;
+                }
+                if m.exptime != 0 && m.exptime <= now {
+                    return ProbeStep::Unservable; // lazy reclaim mutates
+                }
+                if m.vlen as usize >= OPTIMISTIC_VALUE_MAX {
+                    return ProbeStep::Unservable; // scatter-write hazard
+                }
+                let vbytes = unsafe {
+                    std::slice::from_raw_parts(
+                        (m.chunk_addr + m.klen as usize) as *const u8,
+                        m.vlen as usize,
+                    )
+                };
+                let r = enc(
+                    ctx,
+                    &m,
+                    now,
+                    ValueRef {
+                        data: vbytes,
+                        flags: m.flags,
+                        cas: m.cas,
+                    },
+                );
+                if !self.seq.validate(stripe, s1) {
+                    reset(ctx); // the encode may have copied torn bytes
+                    return ProbeStep::Torn;
+                }
+                let bump = if now.saturating_sub(m.time) >= TOUCH_INTERVAL {
+                    Some(BumpEvent {
+                        id,
+                        gen: m.gen,
+                        cas: m.cas,
+                        now,
+                    })
+                } else {
+                    None
+                };
+                return ProbeStep::Hit(r, bump);
+            }
+        }
+        // A miss is only a miss if both walks ran against a stable stripe.
+        if self.seq.validate(stripe, s1) {
+            ProbeStep::Miss
+        } else {
+            ProbeStep::Torn
+        }
     }
 }
 
@@ -240,6 +475,157 @@ impl ShardedStore {
             }
         }
         shard.write().get_with(key, f)
+    }
+
+    /// Lock-free `get`: probe the published table/arena under the
+    /// shard's seqlock stripes without touching either shard lock.
+    ///
+    /// `enc` encodes a validated hit into `ctx` (the caller's response
+    /// buffer); a hit is only returned after the stripe revalidated
+    /// *post-encode*, so the encoded bytes are never torn. When that
+    /// final validation fails, `reset` undoes the encode (truncate
+    /// `ctx` back to its pre-call mark) and the probe retries — which
+    /// is why the closures are `FnMut`, not `FnOnce`.
+    ///
+    /// Returns [`ReadAttempt::Fallback`] when the optimistic path
+    /// cannot serve (retries exhausted, expired item, value ≥
+    /// [`OPTIMISTIC_VALUE_MAX`]); the caller then uses [`get_with`],
+    /// which does its own stats accounting (a fallback increments only
+    /// `seqlock_fallbacks`, never double-counts the get).
+    ///
+    /// Recency-stale hits are still served lock-free: the LRU bump and
+    /// fetched bit are queued on the shard's [`BumpRing`] for the
+    /// maintainer ([`drain_deferred`]) instead of being applied inline.
+    ///
+    /// [`get_with`]: ShardedStore::get_with
+    /// [`BumpRing`]: super::optimistic::BumpRing
+    /// [`drain_deferred`]: ShardedStore::drain_deferred
+    pub fn get_optimistic<C, R>(
+        &self,
+        key: &[u8],
+        ctx: &mut C,
+        mut reset: impl FnMut(&mut C),
+        mut f: impl FnMut(&mut C, ValueRef<'_>) -> R,
+    ) -> ReadAttempt<R> {
+        let hash = hash_key(key);
+        let shard = &self.shards[(mix(hash) % self.shards.len() as u64) as usize];
+        let lane = shard.lanes.lane();
+        for _ in 0..OPTIMISTIC_RETRIES {
+            let mut enc = |c: &mut C, _m: &ItemMeta, _now: u32, v: ValueRef<'_>| f(c, v);
+            match shard.probe(key, hash, ctx, &mut reset, &mut enc) {
+                ProbeStep::Hit(r, bump) => {
+                    lane.gets.fetch_add(1, Ordering::Relaxed);
+                    lane.hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(ev) = bump {
+                        if shard.ring.push(ev) {
+                            lane.bump_queued.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            lane.bump_dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    return ReadAttempt::Hit(r);
+                }
+                ProbeStep::Miss => {
+                    lane.gets.fetch_add(1, Ordering::Relaxed);
+                    lane.misses.fetch_add(1, Ordering::Relaxed);
+                    return ReadAttempt::Miss;
+                }
+                ProbeStep::Torn => {
+                    lane.retries.fetch_add(1, Ordering::Relaxed);
+                    std::hint::spin_loop();
+                }
+                ProbeStep::Unservable => {
+                    lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    return ReadAttempt::Fallback;
+                }
+            }
+        }
+        lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+        ReadAttempt::Fallback
+    }
+
+    /// Lock-free meta retrieval: like [`get_optimistic`], with the
+    /// per-hit metadata echoes built from the validated record copy.
+    ///
+    /// Requests the optimistic path cannot answer exactly go straight
+    /// to [`ReadAttempt::Fallback`] **uncounted** (they are protocol
+    /// shape, not seqlock failures): touch-on-read (`T` mutates), a
+    /// bumping hit-before echo (`h` without `u` must read+set the
+    /// fetched bit atomically), and base64 keys (the vivify path owns
+    /// their validation). A vivifiable miss likewise falls back
+    /// uncounted — creation needs the write lock. With `u` (no-bump)
+    /// the hit never queues a deferred bump.
+    ///
+    /// [`get_optimistic`]: ShardedStore::get_optimistic
+    pub fn meta_get_optimistic<C, R>(
+        &self,
+        key: &[u8],
+        opts: &MetaGetOpts,
+        ctx: &mut C,
+        mut reset: impl FnMut(&mut C),
+        mut f: impl FnMut(&mut C, ValueRef<'_>, MetaHit) -> R,
+    ) -> ReadAttempt<R> {
+        if opts.touch.is_some() || (opts.wants_hit_before && !opts.no_bump) || opts.binary_key {
+            return ReadAttempt::Fallback;
+        }
+        let hash = hash_key(key);
+        let shard = &self.shards[(mix(hash) % self.shards.len() as u64) as usize];
+        let lane = shard.lanes.lane();
+        for _ in 0..OPTIMISTIC_RETRIES {
+            let mut enc = |c: &mut C, m: &ItemMeta, now: u32, v: ValueRef<'_>| {
+                let hit = MetaHit {
+                    ttl: if m.exptime == 0 {
+                        -1
+                    } else {
+                        m.exptime as i64 - now as i64
+                    },
+                    won: false,
+                    la: now.saturating_sub(m.time),
+                    fetched: m.fetched,
+                };
+                f(c, v, hit)
+            };
+            match shard.probe(key, hash, ctx, &mut reset, &mut enc) {
+                ProbeStep::Hit(r, bump) => {
+                    lane.gets.fetch_add(1, Ordering::Relaxed);
+                    lane.hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(ev) = bump {
+                        if opts.no_bump {
+                            // `u` reads leave recency state untouched
+                        } else if shard.ring.push(ev) {
+                            lane.bump_queued.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            lane.bump_dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    return ReadAttempt::Hit(r);
+                }
+                ProbeStep::Miss => {
+                    if opts.vivify.is_some() {
+                        return ReadAttempt::Fallback; // create under lock
+                    }
+                    lane.gets.fetch_add(1, Ordering::Relaxed);
+                    lane.misses.fetch_add(1, Ordering::Relaxed);
+                    return ReadAttempt::Miss;
+                }
+                ProbeStep::Torn => {
+                    lane.retries.fetch_add(1, Ordering::Relaxed);
+                    std::hint::spin_loop();
+                }
+                ProbeStep::Unservable => {
+                    lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    return ReadAttempt::Fallback;
+                }
+            }
+        }
+        lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+        ReadAttempt::Fallback
+    }
+
+    /// Snapshot one item's bookkeeping (the meta `me` debug command);
+    /// read-locked, no LRU effects. `None` = absent or expired.
+    pub fn debug_item(&self, key: &[u8]) -> Option<ItemDebug> {
+        self.shards[self.shard_index(key)].read().debug_item(key)
     }
 
     /// Batched multiget: keys are grouped per shard and each shard's
@@ -411,14 +797,42 @@ impl ShardedStore {
 
     // ------------------------------------------- background maintenance
 
+    /// Drain every shard's deferred-bump ring and apply the surviving
+    /// events (stale ids/generations/CAS values are skipped) under one
+    /// short write-lock lease per non-empty ring. Returns events
+    /// applied. Called by the maintainer between passes — and on every
+    /// pump iteration while a migration drains, so bumps stay fresh
+    /// even when full maintenance is paused.
+    pub fn drain_deferred(&self) -> u64 {
+        let mut applied = 0u64;
+        let mut buf: Vec<BumpEvent> = Vec::new();
+        for s in &self.shards {
+            buf.clear();
+            s.ring.drain_into(&mut buf, BUMP_RING_CAP);
+            if !buf.is_empty() {
+                applied += s.write().apply_deferred(&buf);
+            }
+        }
+        applied
+    }
+
     /// One bounded maintenance pass over every shard: each shard's
     /// write lock is held only for its own ≤ `max_moves_per_shard`
     /// demotions (plus at most one slack-page release) — the
-    /// maintainer thread's unit of work. Returns total demotions.
+    /// maintainer thread's unit of work. Deferred read-side bumps are
+    /// applied first, under the same write-lock lease, so LRU ordering
+    /// is current before demotion decisions. Returns total demotions.
     pub fn maintain_all(&self, max_moves_per_shard: usize) -> usize {
         let mut demoted = 0;
+        let mut buf: Vec<BumpEvent> = Vec::new();
         for s in &self.shards {
-            demoted += s.write().maintain(max_moves_per_shard).0;
+            buf.clear();
+            s.ring.drain_into(&mut buf, BUMP_RING_CAP);
+            let mut g = s.write();
+            if !buf.is_empty() {
+                g.apply_deferred(&buf);
+            }
+            demoted += g.maintain(max_moves_per_shard).0;
         }
         demoted
     }
@@ -530,10 +944,23 @@ impl ShardedStore {
             agg.maintainer_runs += x.maintainer_runs;
             agg.maintainer_demoted += x.maintainer_demoted;
             agg.maintainer_pages_shed += x.maintainer_pages_shed;
+            agg.seqlock_retries += x.seqlock_retries;
+            agg.seqlock_fallbacks += x.seqlock_fallbacks;
+            agg.lru_bump_queued += x.lru_bump_queued;
+            agg.lru_bump_drained += x.lru_bump_drained;
+            agg.lru_bump_dropped += x.lru_bump_dropped;
             drop(st);
             agg.cmd_get += s.read_gets.load(Ordering::Relaxed);
             agg.get_hits += s.read_hits.load(Ordering::Relaxed);
             agg.get_misses += s.read_misses.load(Ordering::Relaxed);
+            let lt = s.lanes.totals();
+            agg.cmd_get += lt.gets;
+            agg.get_hits += lt.hits;
+            agg.get_misses += lt.misses;
+            agg.seqlock_retries += lt.retries;
+            agg.seqlock_fallbacks += lt.fallbacks;
+            agg.lru_bump_queued += lt.bump_queued;
+            agg.lru_bump_dropped += lt.bump_dropped;
         }
         agg
     }
@@ -547,6 +974,7 @@ impl ShardedStore {
             s.read_gets.store(0, Ordering::Relaxed);
             s.read_hits.store(0, Ordering::Relaxed);
             s.read_misses.store(0, Ordering::Relaxed);
+            s.lanes.reset();
         }
     }
 
@@ -983,6 +1411,173 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(h.ttl, 120);
+    }
+
+    #[test]
+    fn optimistic_get_hit_and_miss() {
+        let s = store(2);
+        s.set(b"opt", b"payload", 7, 0).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        let got = s.get_optimistic(
+            b"opt",
+            &mut buf,
+            |c| c.clear(),
+            |c, v| {
+                c.extend_from_slice(v.data);
+                v.flags
+            },
+        );
+        match got {
+            ReadAttempt::Hit(flags) => {
+                assert_eq!(flags, 7);
+                assert_eq!(buf, b"payload");
+            }
+            _ => panic!("expected lock-free hit"),
+        }
+        buf.clear();
+        assert!(matches!(
+            s.get_optimistic(b"nope", &mut buf, |c| c.clear(), |_, _: ValueRef<'_>| ()),
+            ReadAttempt::Miss
+        ));
+        let st = s.stats();
+        assert_eq!((st.cmd_get, st.get_hits, st.get_misses), (2, 1, 1));
+        assert_eq!(st.seqlock_retries, 0);
+        assert_eq!(st.seqlock_fallbacks, 0);
+    }
+
+    #[test]
+    fn optimistic_get_defers_lru_bump() {
+        let (clock, cell) = Clock::manual(5_000_000);
+        let s = ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            16 << 20,
+            true,
+            2,
+            clock,
+        )
+        .unwrap();
+        s.set(b"k", b"v", 0, 0).unwrap();
+        // push the item past TOUCH_INTERVAL: the hit must still be
+        // served lock-free, with the bump queued rather than applied
+        cell.store(5_000_000 + TOUCH_INTERVAL + 5, Ordering::Relaxed);
+        let mut buf: Vec<u8> = Vec::new();
+        assert!(matches!(
+            s.get_optimistic(b"k", &mut buf, |c| c.clear(), |_, _: ValueRef<'_>| ()),
+            ReadAttempt::Hit(())
+        ));
+        let st = s.stats();
+        assert_eq!(st.lru_bump_queued, 1);
+        assert_eq!(st.lru_bump_drained, 0);
+        // before the drain the write-path bookkeeping is untouched
+        let d = s.debug_item(b"k").unwrap();
+        assert_eq!(d.la, TOUCH_INTERVAL + 5);
+        assert!(!d.fetched);
+        assert_eq!(s.drain_deferred(), 1);
+        assert_eq!(s.stats().lru_bump_drained, 1);
+        let d = s.debug_item(b"k").unwrap();
+        assert_eq!(d.la, 0, "deferred bump refreshed the access time");
+        assert!(d.fetched, "deferred bump set the fetched bit");
+        // a second drain finds an empty ring
+        assert_eq!(s.drain_deferred(), 0);
+    }
+
+    #[test]
+    fn optimistic_get_falls_back_for_large_values() {
+        let s = store(1);
+        s.set(b"big", &vec![b'x'; OPTIMISTIC_VALUE_MAX], 0, 0).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        assert!(matches!(
+            s.get_optimistic(b"big", &mut buf, |c| c.clear(), |_, _: ValueRef<'_>| ()),
+            ReadAttempt::Fallback
+        ));
+        assert!(buf.is_empty(), "no bytes encoded on fallback");
+        let st = s.stats();
+        assert_eq!(st.seqlock_fallbacks, 1);
+        assert_eq!(st.get_hits, 0, "fallback does not count the get");
+        // the locked path then serves it (and counts it)
+        assert_eq!(
+            s.get_with(b"big", |v: ValueRef<'_>| v.data.len()).unwrap(),
+            OPTIMISTIC_VALUE_MAX
+        );
+        assert_eq!(s.stats().get_hits, 1);
+    }
+
+    #[test]
+    fn optimistic_get_falls_back_on_expired() {
+        let (clock, cell) = Clock::manual(5_000_000);
+        let s = ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            16 << 20,
+            true,
+            2,
+            clock,
+        )
+        .unwrap();
+        s.set(b"e", b"v", 0, 50).unwrap();
+        cell.store(5_000_000 + 120, Ordering::Relaxed);
+        let mut buf: Vec<u8> = Vec::new();
+        assert!(matches!(
+            s.get_optimistic(b"e", &mut buf, |c| c.clear(), |_, _: ValueRef<'_>| ()),
+            ReadAttempt::Fallback
+        ));
+        assert_eq!(s.stats().seqlock_fallbacks, 1);
+        // the locked retry performs the lazy reclaim
+        assert!(s.get(b"e").is_none());
+        assert_eq!(s.stats().expired_reclaims, 1);
+    }
+
+    #[test]
+    fn meta_get_optimistic_echoes_and_gates() {
+        let s = store(2);
+        s.set(b"k", b"val", 9, 0).unwrap();
+        let plain = MetaGetOpts::default();
+        let mut buf: Vec<u8> = Vec::new();
+        let got = s.meta_get_optimistic(
+            b"k",
+            &plain,
+            &mut buf,
+            |c| c.clear(),
+            |c, v, h| {
+                c.extend_from_slice(v.data);
+                (v.flags, h.ttl, h.la, h.fetched, h.won)
+            },
+        );
+        match got {
+            ReadAttempt::Hit(echo) => {
+                assert_eq!(echo, (9, -1, 0, false, false));
+                assert_eq!(buf, b"val");
+            }
+            _ => panic!("expected lock-free meta hit"),
+        }
+        // plain miss resolves lock-free
+        buf.clear();
+        assert!(matches!(
+            s.meta_get_optimistic(b"nope", &plain, &mut buf, |c| c.clear(), |_, _: ValueRef<'_>, _| ()),
+            ReadAttempt::Miss
+        ));
+        // touch-on-read must take the write path (uncounted fallback)
+        let touch = MetaGetOpts {
+            touch: Some(120),
+            ..MetaGetOpts::default()
+        };
+        assert!(matches!(
+            s.meta_get_optimistic(b"k", &touch, &mut buf, |c| c.clear(), |_, _: ValueRef<'_>, _| ()),
+            ReadAttempt::Fallback
+        ));
+        // vivifiable miss must create under the lock (uncounted fallback)
+        let viv = MetaGetOpts {
+            vivify: Some(60),
+            ..MetaGetOpts::default()
+        };
+        assert!(matches!(
+            s.meta_get_optimistic(b"viv", &viv, &mut buf, |c| c.clear(), |_, _: ValueRef<'_>, _| ()),
+            ReadAttempt::Fallback
+        ));
+        let st = s.stats();
+        assert_eq!(st.seqlock_fallbacks, 0, "protocol-shape fallbacks uncounted");
+        assert_eq!((st.cmd_get, st.get_hits, st.get_misses), (2, 1, 1));
     }
 
     #[test]

@@ -2,11 +2,12 @@
 //! slab allocator, plus the paper's hooks (size observation on every
 //! set, live slab reconfiguration — incremental, see `store::migrate`).
 
-use super::arena::{Arena, ItemMeta, NIL};
+use super::arena::{Arena, ItemMeta, Tier, NIL};
 use super::hashtable::HashTable;
 use super::item::{hash_key, key_ok, total_item_size};
 use super::lru::ClassLru;
 use super::migrate::{MigrationGauges, MigrationState};
+use super::optimistic::{ArenaPub, BumpEvent, SeqStripes, TablePub};
 use crate::slab::policy::ChunkSizePolicy;
 use crate::slab::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
 use std::fmt;
@@ -257,6 +258,25 @@ pub struct MetaHit {
     pub fetched: bool,
 }
 
+/// Snapshot of one item's bookkeeping — the meta `me` debug command
+/// ([`KvStore::debug_item`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ItemDebug {
+    /// Remaining TTL in seconds; `-1` = never expires.
+    pub ttl: i64,
+    /// Seconds since the last (write-path) access.
+    pub la: u32,
+    pub cas: u64,
+    /// Served by a write-path fetch since stored (ITEM_FETCHED).
+    pub fetched: bool,
+    /// Slab class holding the item's chunk.
+    pub class: u16,
+    /// Segmented-LRU tier.
+    pub tier: Tier,
+    /// Value length in bytes.
+    pub vlen: u32,
+}
+
 /// A fetched value.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Value {
@@ -325,6 +345,21 @@ pub struct StoreStats {
     pub maintainer_demoted: u64,
     /// Post-migration slack pages returned to the OS by the maintainer.
     pub maintainer_pages_shed: u64,
+    /// Optimistic-read attempts that failed seqlock validation and
+    /// retried (aggregated from the shard's read lanes).
+    pub seqlock_retries: u64,
+    /// Optimistic reads that exhausted their retries (or hit a
+    /// condition the lock-free path cannot serve) and fell back to the
+    /// locked path (aggregated from the shard's read lanes).
+    pub seqlock_fallbacks: u64,
+    /// Deferred LRU bumps enqueued by optimistic read hits
+    /// (aggregated from the shard's read lanes).
+    pub lru_bump_queued: u64,
+    /// Deferred LRU bumps the maintainer validated and applied.
+    pub lru_bump_drained: u64,
+    /// Deferred LRU bumps dropped because the shard's ring was full
+    /// (recency goes slightly stale; correctness unaffected).
+    pub lru_bump_dropped: u64,
 }
 
 /// Outcome of a completed slab reconfiguration
@@ -357,6 +392,13 @@ pub struct KvStore {
     pub(crate) alloc: SlabAllocator,
     pub(crate) arena: Arena,
     pub(crate) table: HashTable,
+    /// Seqlock stripes shared with the shard's lock-free read path:
+    /// every mutation of reader-visible state (arena records reachable
+    /// through hash chains, chain links, chunk bytes) runs inside a
+    /// [`StripeGuard`] window on the stripe of the item's hash.
+    ///
+    /// [`StripeGuard`]: super::optimistic::StripeGuard
+    pub(crate) seq: Arc<SeqStripes>,
     pub(crate) lrus: Vec<ClassLru>,
     clock: Clock,
     use_cas: bool,
@@ -392,10 +434,12 @@ impl KvStore {
         let lrus = (0..alloc.chunk_sizes().len())
             .map(|_| ClassLru::new())
             .collect();
+        let seq = Arc::new(SeqStripes::new());
         Ok(KvStore {
             alloc,
             arena: Arena::new(),
-            table: HashTable::new(),
+            table: HashTable::with_buckets_and_seq(1024, seq.clone()),
+            seq,
             lrus,
             clock,
             use_cas,
@@ -443,6 +487,19 @@ impl KvStore {
     /// Current absolute time.
     pub fn now(&self) -> u32 {
         self.clock.now()
+    }
+
+    /// Everything the shard's lock-free read path is allowed to touch:
+    /// the stripe counters, the published arena slot array, the
+    /// published table geometry and the clock. All other store state
+    /// stays behind the shard `RwLock`.
+    pub(crate) fn read_handles(&self) -> (Arc<SeqStripes>, Arc<ArenaPub>, Arc<TablePub>, Clock) {
+        (
+            self.seq.clone(),
+            self.arena.publish_handle(),
+            self.table.publish_handle(),
+            self.clock.clone(),
+        )
     }
 
     /// Memcached exptime normalization: 0 = never, ≤ 30 days = relative,
@@ -593,6 +650,11 @@ impl KvStore {
     }
 
     pub(crate) fn unlink_and_free(&mut self, id: u32, hash: u64) {
+        // the chain relink, the slot vacate and the chunk free are all
+        // reader-visible: one stripe window covers them (nested no-op
+        // when an outer store op already holds this stripe)
+        let seq = self.seq.clone();
+        let _g = seq.guard(hash);
         self.table.remove(id, hash, &mut self.arena);
         self.page_unlink(id);
         let (class, old) = {
@@ -683,19 +745,28 @@ impl KvStore {
         cas_override: Option<u64>,
     ) -> Result<u64, StoreError> {
         let total = total_item_size(key.len(), value.len(), self.use_cas);
+        // allocation (and any evictions it performs — those guard their
+        // own stripes) plus the chunk fill happen before this item's
+        // stripe window opens: the chunk is unreachable until the table
+        // insert links it
         let handle = self.alloc_with_eviction(total)?;
         let chunk = self.alloc.chunk_mut(handle);
         chunk[..key.len()].copy_from_slice(key);
         chunk[key.len()..key.len() + value.len()].copy_from_slice(value);
+        let chunk_addr = chunk.as_ptr() as usize;
         let cas = self.resolve_cas(cas_override);
+        let now = self.clock.now();
+        let seq = self.seq.clone();
+        let _g = seq.guard(hash);
         let id = self.arena.insert(ItemMeta {
             hash,
             handle,
+            chunk_addr,
             klen: key.len() as u16,
             vlen: value.len() as u32,
             flags,
             exptime: exptime_abs,
-            time: self.clock.now(),
+            time: now,
             cas,
             total: total as u32,
             hnext: NIL,
@@ -729,11 +800,18 @@ impl KvStore {
         new_value: &[u8],
         cas_override: Option<u64>,
     ) -> Result<u64, StoreError> {
-        let (handle, klen, old_total, item_gen) = {
+        let (handle, klen, old_total, item_gen, hash) = {
             let m = self.arena.get(id);
-            (m.handle, m.klen as usize, m.total as usize, m.gen)
+            (m.handle, m.klen as usize, m.total as usize, m.gen, m.hash)
         };
         let new_total = total_item_size(klen, new_value.len(), self.use_cas);
+        // one stripe window over the whole rewrite: readers must never
+        // see a half-updated (handle, chunk_addr, vlen, cas) record or
+        // in-place chunk bytes mid-overwrite (evictions inside the
+        // allocation guard their own stripes; same-stripe nesting is a
+        // no-op covered by this window)
+        let seq = self.seq.clone();
+        let _g = seq.guard(hash);
         if self.is_old_gen(item_gen) {
             // migrate on rewrite: new chunk in the current geometry
             let key: Vec<u8> = self.item_chunk(self.arena.get(id))[..klen].to_vec();
@@ -758,6 +836,7 @@ impl KvStore {
             let chunk = self.alloc.chunk_mut(new_handle);
             chunk[..klen].copy_from_slice(&key);
             chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+            let new_addr = chunk.as_ptr() as usize;
             self.alloc.free_old(handle, old_total);
             {
                 let mig = self.migration.as_mut().expect("still migrating");
@@ -769,6 +848,7 @@ impl KvStore {
             let m = self.arena.get_mut(id);
             m.handle = new_handle;
             m.gen = gen;
+            m.chunk_addr = new_addr;
             self.page_link(id);
         } else {
             let chunk_size = self.alloc.chunk_size_of(handle.class);
@@ -785,6 +865,7 @@ impl KvStore {
                 let chunk = self.alloc.chunk_mut(new_handle);
                 chunk[..klen].copy_from_slice(&key);
                 chunk[klen..klen + new_value.len()].copy_from_slice(new_value);
+                let new_addr = chunk.as_ptr() as usize;
                 self.page_unlink(id);
                 self.alloc.free(handle, old_total);
                 // move LRU membership to the new class
@@ -794,7 +875,11 @@ impl KvStore {
                     self.lrus[old_class].remove(id, &mut self.arena);
                     self.lrus[new_class].insert(id, &mut self.arena);
                 }
-                self.arena.get_mut(id).handle = new_handle;
+                {
+                    let m = self.arena.get_mut(id);
+                    m.handle = new_handle;
+                    m.chunk_addr = new_addr;
+                }
                 self.page_link(id);
             }
         }
@@ -1336,6 +1421,30 @@ impl KvStore {
         self.stats = StoreStats::default();
     }
 
+    /// Read-only bookkeeping lookup for the meta `me` debug command:
+    /// no stats, no LRU bump, no lazy reclaim (an expired item reports
+    /// as absent and is left for the next write-path lookup).
+    pub fn debug_item(&self, key: &[u8]) -> Option<ItemDebug> {
+        let hash = hash_key(key);
+        let id = self.table.find(hash, &self.arena, |id| {
+            let m = self.arena.get(id);
+            &self.item_chunk(m)[..m.klen as usize] == key
+        })?;
+        let m = self.arena.get(id);
+        if self.is_expired(m) {
+            return None;
+        }
+        Some(ItemDebug {
+            ttl: self.ttl_of(m),
+            la: self.clock.now().saturating_sub(m.time),
+            cas: m.cas,
+            fetched: m.fetched,
+            class: m.handle.class,
+            tier: Tier::from_u8(m.tier),
+            vlen: m.vlen,
+        })
+    }
+
     // -------------------------------------------- background maintenance
 
     /// One bounded maintenance pass (the background maintainer's unit
@@ -1355,6 +1464,11 @@ impl KvStore {
     ///
     /// [`MIGRATION_PAGE_SLACK`]: crate::slab::allocator::MIGRATION_PAGE_SLACK
     pub fn maintain(&mut self, max_moves: usize) -> (usize, usize) {
+        // age freed page buffers one limbo phase: a buffer condemned
+        // before the previous pass can no longer be reached by any
+        // optimistic reader (the free bumped its stripe; readers
+        // re-validate before every dereference)
+        self.alloc.drain_limbo();
         let mut demoted = 0;
         for lru in &mut self.lrus {
             if demoted >= max_moves {
@@ -1371,6 +1485,36 @@ impl KvStore {
         self.stats.maintainer_demoted += demoted as u64;
         self.stats.maintainer_pages_shed += pages_shed as u64;
         (demoted, pages_shed)
+    }
+
+    /// Apply a batch of deferred read-side effects ([`BumpEvent`]s
+    /// drained from the shard's ring). Each event is re-validated —
+    /// the arena slot must still be live and hold the same logical
+    /// item (generation tag + CAS) — then the LRU bump, access-time
+    /// refresh and fetched-bit set the optimistic hit skipped are
+    /// performed. Invalid events are silently dropped: the item was
+    /// deleted, replaced or migrated since the read, so its recency
+    /// state is no longer ours to touch. Returns the number applied.
+    pub(crate) fn apply_deferred(&mut self, events: &[BumpEvent]) -> u64 {
+        let mut applied = 0u64;
+        for ev in events {
+            let valid = matches!(
+                self.arena.get_checked(ev.id),
+                Some(m) if m.gen == ev.gen && m.cas == ev.cas
+            );
+            if !valid {
+                continue;
+            }
+            self.touch_lru(ev.id);
+            let m = self.arena.get_mut(ev.id);
+            // never move the access time backwards: a write-path hit
+            // may have refreshed it after this event was queued
+            m.time = m.time.max(ev.now);
+            m.fetched = true;
+            applied += 1;
+        }
+        self.stats.lru_bump_drained += applied;
+        applied
     }
 
     /// True when every class's HOT/WARM fraction caps hold (the state

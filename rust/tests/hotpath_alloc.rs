@@ -177,6 +177,55 @@ fn meta_quiet_miss_path_allocates_nothing() {
 }
 
 #[test]
+fn optimistic_get_and_mg_hits_stay_lock_free_and_alloc_free() {
+    // the single-key classic hit and the plain mg hit now ride the
+    // optimistic (seqlock) read path; this pins down both properties at
+    // once: the probe performs zero heap allocations AND actually
+    // resolves optimistically (no seqlock fallbacks — a silent
+    // regression to the locked path would still be alloc-free).
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            32 << 20,
+            true,
+            4,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let mut c = Conn::new(store.clone(), Arc::new(NoControl));
+    let mut out = Vec::with_capacity(64 * 1024);
+    c.on_bytes(b"set hot 3 0 11\r\nhello-world\r\n", &mut out);
+    assert!(String::from_utf8_lossy(&out).contains("STORED"));
+
+    let req = b"get hot\r\nmg hot v f c t s\r\n";
+    for _ in 0..4 {
+        out.clear();
+        c.on_bytes(req, &mut out);
+        let t = String::from_utf8_lossy(&out);
+        assert!(t.contains("VALUE hot 3 11"), "{t}");
+        assert!(t.contains("VA 11"), "{t}");
+    }
+    store.reset_stats();
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1000 {
+        out.clear();
+        let done = c.on_bytes(req, &mut out);
+        assert_eq!(done, 2);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "optimistic get/mg hit path performed {delta} heap allocations over 2000 requests"
+    );
+    let st = store.stats();
+    assert_eq!(st.get_hits, 2000, "every request was a hit");
+    assert_eq!(st.seqlock_fallbacks, 0, "hits resolved lock-free");
+}
+
+#[test]
 fn set_path_allocation_is_bounded() {
     // sets are allowed to allocate (parsed command, arena/table growth)
     // but must not regress into per-byte or per-token explosions: the
