@@ -93,4 +93,16 @@ grep -q "get_p99_contended_us" "$root/BENCH_server.json" || {
     exit 1
 }
 
+echo "==> verify accept_rate_conns_s landed in BENCH_server.json"
+grep -q "accept_rate_conns_s" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the accept-burst row" >&2
+    exit 1
+}
+
+echo "==> verify udp_get_kops landed in BENCH_server.json"
+grep -q "udp_get_kops" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the udp get-throughput row" >&2
+    exit 1
+}
+
 echo "CI OK"

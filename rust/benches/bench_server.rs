@@ -733,6 +733,116 @@ fn main() {
         );
     }
 
+    // ---- accept burst (kernel-distributed SO_REUSEPORT listeners) ----------
+    // Connection churn: every op is a fresh connect + one roundtrip +
+    // close. With per-reactor reuseport listeners the kernel spreads the
+    // accept load; the old layout funneled every accept through one
+    // thread and an eventfd hop.
+    {
+        let n_conns = if smoke() { 128usize } else { 1024 };
+        let burst_threads = 4usize;
+        let per = n_conns / burst_threads;
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..burst_threads)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    for _ in 0..per {
+                        let mut c = Client::connect(addr).unwrap();
+                        c.version().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let total = (burst_threads * per) as f64;
+        let rate = total / elapsed.as_secs_f64();
+        let accepts = handle.accept_counts();
+        println!(
+            "accept burst: {total:.0} connect+version roundtrips at {rate:.0} conns/s \
+             (reuseport={}, per-reactor accepts {accepts:?})",
+            handle.reuseport()
+        );
+        rows.push(
+            Summary::from_samples("accept burst connect+version", vec![elapsed], total)
+                .with_dim("accept_rate_conns_s", rate),
+        );
+    }
+
+    // ---- udp get throughput (datagram front-end, same Request IR) ----------
+    #[cfg(target_os = "linux")]
+    {
+        use slabforge::server::udp::{encode_header, parse_header, HEADER_LEN};
+        let udp_store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                64 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let udp_handle = Server::new(udp_store.clone())
+            .udp(true)
+            .start("127.0.0.1:0")
+            .unwrap();
+        let ua = udp_handle.addr();
+        let n_keys = 1024u64;
+        {
+            let mut seed = Client::connect(ua).unwrap();
+            for i in 0..n_keys {
+                seed.set_noreply(&format!("u{i:04}"), &vec![b'u'; 100], 0, 0)
+                    .unwrap();
+            }
+            seed.version().unwrap(); // drain
+        }
+        let sock = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+        sock.connect(ua).unwrap();
+        sock.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let n_udp = if smoke() { 2_000usize } else { 20_000 };
+        let mut rng = Pcg64::new(61);
+        let mut id = 1u16;
+        let mut req = Vec::with_capacity(64);
+        let mut buf = [0u8; 2048];
+        let t0 = Instant::now();
+        for _ in 0..n_udp {
+            id = id.wrapping_add(1);
+            req.clear();
+            req.resize(HEADER_LEN, 0);
+            encode_header(&mut req, id, 0, 1);
+            req.extend_from_slice(
+                format!("get u{:04}\r\n", rng.gen_range(n_keys)).as_bytes(),
+            );
+            sock.send(&req).unwrap();
+            loop {
+                let n = sock.recv(&mut buf).unwrap();
+                let h = parse_header(&buf[..n]).unwrap();
+                if h.request_id == id {
+                    assert!(buf[HEADER_LEN..n].starts_with(b"VALUE "));
+                    break;
+                }
+            }
+        }
+        let elapsed = t0.elapsed();
+        let kops = n_udp as f64 / elapsed.as_secs_f64() / 1e3;
+        println!(
+            "udp get roundtrip: {n_udp} single-datagram gets at {kops:.1} kops/s \
+             (rx {} / tx {} datagrams)",
+            udp_handle.metrics.udp_datagrams_rx.load(Ordering::Relaxed),
+            udp_handle.metrics.udp_datagrams_tx.load(Ordering::Relaxed),
+        );
+        rows.push(
+            Summary::from_samples("udp get roundtrip", vec![elapsed], n_udp as f64)
+                .with_dim("udp_get_kops", kops),
+        );
+        udp_handle.shutdown();
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

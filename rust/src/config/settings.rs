@@ -100,6 +100,14 @@ pub struct Settings {
     /// Close connections idle longer than this many seconds; 0 = never
     /// (memcached `-o idle_timeout`).
     pub idle_timeout_secs: u64,
+    /// Per-reactor `SO_REUSEPORT` listeners (kernel-parallel accept) in
+    /// event mode; off = single shared listener (`--no-reuseport`).
+    pub reuseport: bool,
+    /// UDP front-end on the same port (memcached 8-byte frame header;
+    /// `--udp`).
+    pub udp: bool,
+    /// Pin each reactor thread to one CPU core (`--pin-cores`).
+    pub pin_cores: bool,
     /// Store shards (each shard = one mutex + one allocator).
     pub shards: usize,
     /// Total cache memory across shards, bytes.
@@ -135,6 +143,9 @@ impl Default for Settings {
             event_loop: true,
             max_conns: 1024,
             idle_timeout_secs: 0,
+            reuseport: true,
+            udp: false,
+            pin_cores: false,
             shards: 4,
             mem_limit: 64 << 20,
             page_size: PAGE_SIZE,
@@ -200,6 +211,15 @@ impl Settings {
         }
         if let Some(v) = doc.get("idle_timeout_secs") {
             s.idle_timeout_secs = v.as_usize().ok_or_else(|| invalid("idle_timeout_secs"))? as u64;
+        }
+        if let Some(v) = doc.get("reuseport") {
+            s.reuseport = v.as_bool().ok_or_else(|| invalid("reuseport"))?;
+        }
+        if let Some(v) = doc.get("udp") {
+            s.udp = v.as_bool().ok_or_else(|| invalid("udp"))?;
+        }
+        if let Some(v) = doc.get("pin_cores") {
+            s.pin_cores = v.as_bool().ok_or_else(|| invalid("pin_cores"))?;
         }
         if let Some(v) = doc.get("shards") {
             s.shards = v.as_usize().filter(|&n| n > 0).ok_or_else(|| invalid("shards"))?;
@@ -443,5 +463,20 @@ artifacts_dir = "artifacts"
         assert_eq!(s.threads, 2);
         assert!(Settings::from_toml("max_conns = 0\n").is_err());
         assert!(Settings::from_toml("event_loop = 3\n").is_err());
+    }
+
+    #[test]
+    fn networking_keys_parse_with_reuseport_on_by_default() {
+        let s = Settings::from_toml("").unwrap();
+        assert!(s.reuseport, "reuseport must default on");
+        assert!(!s.udp, "udp must default off");
+        assert!(!s.pin_cores, "pinning must default off");
+        let s =
+            Settings::from_toml("reuseport = false\nudp = true\npin_cores = true\n").unwrap();
+        assert!(!s.reuseport);
+        assert!(s.udp);
+        assert!(s.pin_cores);
+        assert!(Settings::from_toml("udp = 7\n").is_err());
+        assert!(Settings::from_toml("reuseport = \"yes\"\n").is_err());
     }
 }

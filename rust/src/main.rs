@@ -7,6 +7,7 @@
 //!                    [--slab-sizes a,b,c] [--optimizer] [--backend rust|xla]
 //!                    [--algorithm paper|steepest|dp] [--artifacts DIR]
 //!                    [--threads N] [--legacy-threads] [--max-conns N]
+//!                    [--no-reuseport] [--udp] [--pin-cores]
 //!                    [--idle-timeout SECS] [--migrate-batch N]
 //!                    [--maintainer true|false] [--maintainer-interval-ms N]
 //!                    [--maintainer-batch N] [--conn-buffer-budget BYTES]
@@ -34,7 +35,15 @@ use std::path::Path;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-const SWITCHES: &[&str] = &["optimizer", "help", "verbose", "legacy-threads"];
+const SWITCHES: &[&str] = &[
+    "optimizer",
+    "help",
+    "verbose",
+    "legacy-threads",
+    "no-reuseport",
+    "udp",
+    "pin-cores",
+];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -101,6 +110,15 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
         .map_err(|e| e.to_string())?
     {
         s.idle_timeout_secs = n;
+    }
+    if args.switch("no-reuseport") {
+        s.reuseport = false;
+    }
+    if args.switch("udp") {
+        s.udp = true;
+    }
+    if args.switch("pin-cores") {
+        s.pin_cores = true;
     }
     if let Some(n) = args
         .flag_parse::<usize>("migrate-batch")
@@ -237,7 +255,10 @@ fn cmd_serve(args: &Args) -> i32 {
         .reactor_threads(settings.threads)
         .max_conns(settings.max_conns)
         .idle_timeout(idle)
-        .conn_buffer_budget(settings.conn_buffer_budget);
+        .conn_buffer_budget(settings.conn_buffer_budget)
+        .reuseport(settings.reuseport)
+        .udp(settings.udp)
+        .pin_cores(settings.pin_cores);
     let handle = match server.start(&settings.listen) {
         Ok(h) => h,
         Err(e) => return fail(format!("cannot bind {}: {e}", settings.listen)),
@@ -246,7 +267,17 @@ fn cmd_serve(args: &Args) -> i32 {
         "slabforge listening on {} ({}, {} shards, {} limit, {} classes, max {} conns)",
         handle.addr(),
         if handle.reactors() > 0 {
-            format!("epoll reactor x{}", handle.reactors())
+            let mut m = format!("epoll reactor x{}", handle.reactors());
+            if handle.reuseport() {
+                m.push_str(", reuseport");
+            }
+            if settings.udp {
+                m.push_str(", udp");
+            }
+            if settings.pin_cores {
+                m.push_str(", pinned");
+            }
+            m
         } else {
             "threaded".to_string()
         },

@@ -19,6 +19,8 @@
 //! | `l`  | `mg`: echo seconds since last access (accurate to the touch interval: read-lock fast-path hits do not refresh it) |
 //! | `h`  | `mg`: echo hit-before (0/1, memcached's ITEM_FETCHED; forces the write path so the bit is read and set atomically) |
 //! | `u`  | `mg`: no-LRU-bump read — serve the hit without touching recency state (and without flipping the fetched bit) |
+//! | `I`  | `md`: mark the item stale instead of deleting it; `ms` with `C`: a CAS-mismatched store marks the survivor stale |
+//! | `R<ttl>` | `mg`: win the recache race (`W`/`Z` echoes) when the hit's TTL is below the threshold |
 //! | `O<tok>` | echo opaque token |
 //! | `q`  | quiet: suppress misses (`mg`) / successes (`ms`/`md`/`ma`) |
 //! | `b`  | key token is base64 |
@@ -97,7 +99,7 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
             // argless flags with a trailing token (e.g. a fused "vq")
             // are malformed — reject loudly rather than silently
             // dropping the tail and changing semantics
-            b'v' | b'f' | b'c' | b't' | b's' | b'k' | b'q' | b'b' | b'l' | b'h' | b'u'
+            b'v' | b'f' | b'c' | b't' | b's' | b'k' | b'q' | b'b' | b'l' | b'h' | b'u' | b'I'
                 if !arg.is_empty() =>
             {
                 return Err(ParseError::Client("invalid flag"));
@@ -113,6 +115,10 @@ pub fn parse_meta(line: &[u8]) -> Result<Request<'_>, ParseError> {
             b'l' if op == Opcode::Get => r.want |= want::LA,
             b'h' if op == Opcode::Get => r.want |= want::HIT,
             b'u' if op == Opcode::Get => r.no_bump = true,
+            b'I' if matches!(op, Opcode::Delete | Opcode::Store) => r.invalidate = true,
+            // R is a *remaining-TTL threshold*, not an expiry: plain
+            // non-negative seconds, no absolute-timestamp rewriting
+            b'R' if op == Opcode::Get => r.recache = Some(parse_u32(arg)?),
             b'O' => {
                 if arg.is_empty() || arg.len() > MAX_OPAQUE {
                     return Err(ParseError::Client("bad opaque token"));
@@ -292,6 +298,28 @@ mod tests {
         let r = parse_meta(b"ma n M-").unwrap();
         assert!(!r.incr);
         assert!(parse_meta(b"ma n MZ").is_err());
+    }
+
+    #[test]
+    fn invalidate_and_recache_flags() {
+        // md I: mark-stale delete
+        let r = parse_meta(b"md foo I").unwrap();
+        assert!(r.invalidate);
+        // ms I rides along with a CAS compare
+        let r = parse_meta(b"ms foo 3 C9 I").unwrap();
+        assert!(r.invalidate);
+        assert_eq!(r.cas_compare, Some(9));
+        // mg R<ttl>: recache-win threshold
+        let r = parse_meta(b"mg foo v R30").unwrap();
+        assert_eq!(r.recache, Some(30));
+        assert!(!r.invalidate);
+        // I is argless; R needs a number; both are verb-gated
+        assert!(parse_meta(b"md foo I1").is_err(), "I takes no token");
+        assert!(parse_meta(b"mg foo I").is_err(), "I invalid on mg");
+        assert!(parse_meta(b"mg foo R").is_err(), "R needs a number");
+        assert!(parse_meta(b"mg foo Rx").is_err());
+        assert!(parse_meta(b"ms foo 3 R30").is_err(), "R invalid on ms");
+        assert!(parse_meta(b"ma foo R30").is_err(), "R invalid on ma");
     }
 
     #[test]

@@ -141,6 +141,13 @@ pub struct Request<'a> {
     /// Meta `u` (`mg`): serve the hit without bumping the LRU or
     /// refreshing the access time.
     pub no_bump: bool,
+    /// Meta `I`: on `md`, mark the item stale instead of deleting it;
+    /// on `ms` with `C`, a CAS-mismatched store marks the surviving
+    /// item stale.
+    pub invalidate: bool,
+    /// Meta `R<ttl>` (`mg`): hand this request the recache win (`W`
+    /// echo) when the hit's remaining TTL is below the threshold.
+    pub recache: Option<u32>,
     /// `stats [arg]` argument.
     pub stats_arg: Option<&'a [u8]>,
     /// `slabs reconfigure` size list.
@@ -172,6 +179,8 @@ impl<'a> Request<'a> {
             quiet: false,
             b64_key: false,
             no_bump: false,
+            invalidate: false,
+            recache: None,
             stats_arg: None,
             sizes: Vec::new(),
         }
@@ -207,6 +216,7 @@ impl<'a> Request<'a> {
             want: self.want,
             quiet: self.quiet,
             b64_key: self.b64_key,
+            invalidate: self.invalidate,
         }
     }
 }
@@ -230,6 +240,9 @@ pub struct DataRequest {
     /// The key was transmitted base64-encoded (`key` holds the decoded
     /// bytes, `key_echo` the encoded token).
     pub b64_key: bool,
+    /// Meta `I` on `ms`: a CAS-mismatched store invalidates the
+    /// surviving item (see [`Request::invalidate`]).
+    pub invalidate: bool,
 }
 
 #[cfg(test)]

@@ -32,6 +32,11 @@ pub fn render_general(
     stat(out, "shed_connections", conns.shed);
     stat(out, "conn_buffer_bytes", conns.buffer_bytes);
     stat(out, "thread_restarts", conns.thread_restarts);
+    stat(out, "reactor_cross_shard", conns.cross_shard);
+    stat(out, "udp_datagrams_rx", conns.udp_rx);
+    stat(out, "udp_datagrams_tx", conns.udp_tx);
+    stat(out, "udp_oversized_drops", conns.udp_oversized);
+    stat(out, "udp_bad_frames", conns.udp_bad);
     stat(out, "curr_items", items);
     stat(out, "cmd_get", ops.cmd_get);
     stat(out, "cmd_set", ops.cmd_set);
@@ -159,6 +164,7 @@ mod tests {
             shed: 2,
             buffer_bytes: 8192,
             thread_restarts: 0,
+            ..ConnCounters::default()
         };
         render_general(
             &mut out,
@@ -285,6 +291,33 @@ mod tests {
         assert!(t.contains("STAT lru_bump_queued 40"), "{t}");
         assert!(t.contains("STAT lru_bump_drained 38"), "{t}");
         assert!(t.contains("STAT lru_bump_dropped 2"), "{t}");
+    }
+
+    #[test]
+    fn general_stats_contain_frontend_counters() {
+        let mut out = Vec::new();
+        let conns = ConnCounters {
+            cross_shard: 11,
+            udp_rx: 120,
+            udp_tx: 150,
+            udp_oversized: 2,
+            udp_bad: 5,
+            ..ConnCounters::default()
+        };
+        render_general(
+            &mut out,
+            &StoreStats::default(),
+            &slab_stats_with_items(),
+            0,
+            0,
+            &conns,
+        );
+        let t = text(&out);
+        assert!(t.contains("STAT reactor_cross_shard 11"), "{t}");
+        assert!(t.contains("STAT udp_datagrams_rx 120"), "{t}");
+        assert!(t.contains("STAT udp_datagrams_tx 150"), "{t}");
+        assert!(t.contains("STAT udp_oversized_drops 2"), "{t}");
+        assert!(t.contains("STAT udp_bad_frames 5"), "{t}");
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //!   `VA 5 c42`, `EN`, `NS`, `EX`, `NF`); `q` suppresses only the
 //!   *expected* outcome — misses for `mg`, successes for
 //!   `ms`/`md`/`ma` — while hits and errors always flow. Echo flags
-//!   render in canonical order `f c t l h s k O` (plus `W` for a
-//!   vivify winner).
+//!   render in canonical order `f c t l h s k O`, then the win-race
+//!   markers: `W` (this reader won the vivify/recache race), `Z` (a
+//!   prior reader holds the win), `X` (the item is stale).
 
 use super::request::{want, DataRequest, Dialect, Request};
 use super::response;
@@ -78,6 +79,10 @@ struct Echo<'e> {
     key: Option<&'e [u8]>,
     opaque: Option<&'e [u8]>,
     won: bool,
+    /// Another reader already holds the recache win (the `Z` echo).
+    lost: bool,
+    /// The item was served stale (the `X` echo).
+    stale: bool,
 }
 
 /// Per-request response renderer over a [`RespSink`].
@@ -204,6 +209,11 @@ impl<'a, S: RespSink> ResponseWriter<'a, S> {
         }
         if e.won {
             out.extend_from_slice(b" W");
+        } else if e.lost {
+            out.extend_from_slice(b" Z");
+        }
+        if e.stale {
+            out.extend_from_slice(b" X");
         }
         out.extend_from_slice(b"\r\n");
         if let Some(d) = data {
@@ -242,6 +252,8 @@ impl<'a, S: RespSink> ResponseWriter<'a, S> {
                     fetched: Some(hit.fetched),
                     size: Some(v.data.len()),
                     won: hit.won,
+                    lost: hit.lost,
+                    stale: hit.stale,
                     ..self.base_echo()
                 };
                 if self.want & want::VALUE != 0 {
@@ -471,6 +483,8 @@ mod tests {
             won,
             la: 0,
             fetched: false,
+            stale: false,
+            lost: false,
         }
     }
 
@@ -511,6 +525,29 @@ mod tests {
     }
 
     #[test]
+    fn meta_stale_and_lost_mark_x_and_z() {
+        // Stale winner: gets both W (go recache) and X (bytes are stale).
+        let mut out = Vec::new();
+        let mut sink = BufSink(&mut out);
+        let r = req(want::VALUE, false);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        let mut h = hit(60, true);
+        h.stale = true;
+        w.value(b"x", vref(b"old"), h);
+        assert_eq!(String::from_utf8_lossy(&out), "VA 3 W X\r\nold\r\n");
+
+        // Stale loser: Z instead of W, still X.
+        out.clear();
+        let mut sink = BufSink(&mut out);
+        let mut w = ResponseWriter::for_request(&mut sink, &r);
+        let mut h = hit(60, false);
+        h.stale = true;
+        h.lost = true;
+        w.value(b"x", vref(b"old"), h);
+        assert_eq!(String::from_utf8_lossy(&out), "VA 3 Z X\r\nold\r\n");
+    }
+
+    #[test]
     fn meta_la_and_hit_echo_in_canonical_order() {
         let mut out = Vec::new();
         let mut sink = BufSink(&mut out);
@@ -524,6 +561,8 @@ mod tests {
                 won: false,
                 la: 7,
                 fetched: true,
+                stale: false,
+                lost: false,
             },
         );
         assert_eq!(String::from_utf8_lossy(&out), "HD t30 l7 h1 s5\r\n");

@@ -205,6 +205,10 @@ pub struct Conn {
     /// Server metrics for the `stats` connection gauges (`None` for
     /// embedded/test connections; gauges render as zero).
     metrics: Option<Arc<Metrics>>,
+    /// `(reactor_id, reactor_count)` when core pinning is on: requests
+    /// whose key's home shard is not `reactor_id`-affine bump the
+    /// `reactor_cross_shard` stat, making cross-core traffic visible.
+    affinity: Option<(u32, u32)>,
     pub closing: bool,
     /// Set when the last `on_bytes_sink` call stopped early because the
     /// sink saturated — complete commands may still be buffered, and
@@ -223,9 +227,45 @@ impl Conn {
             spans: Vec::new(),
             start: std::time::Instant::now(),
             metrics: None,
+            affinity: None,
             closing: false,
             yielded: false,
         }
+    }
+
+    /// Tag this connection with its serving reactor for the
+    /// cross-shard affinity stat (only wired when `--pin-cores` makes
+    /// the reactor↔core mapping meaningful).
+    pub fn set_affinity(&mut self, reactor_id: u32, reactors: u32) {
+        if reactors > 0 {
+            self.affinity = Some((reactor_id, reactors));
+        }
+    }
+
+    #[inline]
+    fn note_shard_affinity(&self, key: &[u8]) {
+        if let (Some((id, n)), Some(m)) = (self.affinity, self.metrics.as_deref()) {
+            if self.store.shard_index(key) as u32 % n != id {
+                Metrics::bump(&m.reactor_cross_shard);
+            }
+        }
+    }
+
+    /// Close out one UDP datagram: a well-formed datagram ends on a
+    /// command boundary (no partial line or data block buffered).
+    /// Returns `false` if the datagram was torn mid-command. Either
+    /// way the parser is reset so the connection can serve the next
+    /// datagram — UDP has no cross-datagram stream to preserve, and a
+    /// `quit` (which only sets `closing`) must not poison the reused
+    /// per-reactor connection.
+    pub fn finish_datagram(&mut self) -> bool {
+        let clean = self.rb.len() == 0 && matches!(self.phase, Phase::Line);
+        self.rb.buf.clear();
+        self.rb.pos = 0;
+        self.phase = Phase::Line;
+        self.closing = false;
+        self.yielded = false;
+        clean
     }
 
     /// Like [`Conn::new`], wiring the server [`Metrics`] in so `stats`
@@ -290,6 +330,11 @@ impl Conn {
                     // Classic retrieval fast path: keys stay borrowed
                     // from the receive buffer; hits stream chunk -> out.
                     if let Some((with_cas, tail)) = split_get(line) {
+                        if self.affinity.is_some() {
+                            if let Some(first) = get_keys(tail).next() {
+                                self.note_shard_affinity(first);
+                            }
+                        }
                         do_get(
                             &self.store,
                             &mut self.scratch,
@@ -354,6 +399,9 @@ impl Conn {
                                     self.phase = Phase::Data { req: parked, len };
                                 }
                                 None => {
+                                    if req.op == Opcode::Get {
+                                        self.note_shard_affinity(req.key);
+                                    }
                                     Exec {
                                         store: &*self.store,
                                         control: &*self.control,
@@ -460,7 +508,7 @@ impl Exec<'_> {
             Opcode::Store => unreachable!("storage requests carry a data block"),
             Opcode::Delete => {
                 let mut w = ResponseWriter::for_request(sink, req);
-                match self.store.delete_cas(req.key, req.cas_compare) {
+                match self.store.delete_cas(req.key, req.cas_compare, req.invalidate) {
                     DeleteOutcome::Deleted => w.deleted(),
                     DeleteOutcome::NotFound => w.not_found(),
                     DeleteOutcome::Exists => w.exists(),
@@ -663,11 +711,26 @@ fn do_get<S: RespSink>(
 
     scratch.clear();
     spans.clear();
-    store.get_batch(keys, |idx, v| {
-        let s = scratch.len();
-        response::value_ref(scratch, keys[idx], v, with_cas);
-        spans.push((idx as u32, s, scratch.len()));
-    });
+    let mut ctx = (&mut *scratch, &mut *spans);
+    store.get_batch(
+        keys,
+        &mut ctx,
+        |c, idx, v| {
+            let s = c.0.len();
+            response::value_ref(c.0, keys[idx], v, with_cas);
+            c.1.push((idx as u32, s, c.0.len()));
+        },
+        // a torn optimistic encode is undone by dropping the span the
+        // probe just staged (always the most recent one for this key)
+        |c, idx| {
+            if let Some(&(i, s, _)) = c.1.last() {
+                if i == idx as u32 {
+                    c.1.pop();
+                    c.0.truncate(s);
+                }
+            }
+        },
+    );
     // single-shard batches (and lucky layouts) already arrive in
     // request order — skip the sort, splice directly
     if !spans.windows(2).all(|w| w[0].0 <= w[1].0) {
@@ -715,7 +778,8 @@ fn do_gat<S: RespSink>(
 /// copy, LRU bump deferred to the maintainer) and encode straight into
 /// the sink. Requests the optimistic path cannot answer exactly
 /// (touch-on-read, bumping `h`, base64 keys, vivify misses, oversized
-/// values) fall back to the locked [`ShardedStore::meta_get`].
+/// values, recache-`R` win races, stale items) fall back to the locked
+/// [`ShardedStore::meta_get`].
 fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
     let mut w = ResponseWriter::for_request(sink, req);
     let opts = MetaGetOpts {
@@ -725,6 +789,7 @@ fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut 
         binary_key: req.b64_key,
         no_bump: req.no_bump,
         wants_hit_before: req.want & crate::protocol::request::want::HIT != 0,
+        recache: req.recache,
     };
     let key = req.key;
     let mark = w.buf().len();
@@ -792,6 +857,7 @@ fn execute_data<S: RespSink>(store: &ShardedStore, req: &DataRequest, data: &[u8
         cas_compare: req.cas_compare,
         cas_set: req.cas_set,
         binary_key: req.b64_key,
+        invalidate: req.invalidate,
     };
     match store.meta_set(&req.key, data, &opts) {
         Ok(SetOutcome::Stored { cas }) => w.stored(cas),

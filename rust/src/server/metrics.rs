@@ -27,6 +27,19 @@ pub struct Metrics {
     /// across all reactors (what the conn-buffer budget is charged
     /// against).
     pub conn_buffer_bytes: AtomicU64,
+    /// Requests whose key's home shard is not affine to the serving
+    /// reactor (`shard % reactors != reactor`). Only counted when core
+    /// pinning is on; measures how much traffic crosses cores.
+    pub reactor_cross_shard: AtomicU64,
+    /// UDP datagrams received / response fragments sent.
+    pub udp_datagrams_rx: AtomicU64,
+    pub udp_datagrams_tx: AtomicU64,
+    /// UDP responses dropped because they exceeded the fragment cap
+    /// (`SERVER_ERROR` frame sent instead, memcached parity).
+    pub udp_oversized_drops: AtomicU64,
+    /// Datagrams dropped at the frame layer (short header or a
+    /// multi-fragment request, which the protocol forbids).
+    pub udp_bad_frames: AtomicU64,
 }
 
 impl Metrics {
@@ -64,6 +77,11 @@ impl Metrics {
             &self.bytes_written,
             &self.protocol_errors,
             &self.shed_connections,
+            &self.reactor_cross_shard,
+            &self.udp_datagrams_rx,
+            &self.udp_datagrams_tx,
+            &self.udp_oversized_drops,
+            &self.udp_bad_frames,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -79,6 +97,11 @@ impl Metrics {
             shed: self.shed_connections.load(Ordering::Relaxed),
             buffer_bytes: self.conn_buffer_bytes.load(Ordering::Relaxed),
             thread_restarts: supervisor::thread_restarts(),
+            cross_shard: self.reactor_cross_shard.load(Ordering::Relaxed),
+            udp_rx: self.udp_datagrams_rx.load(Ordering::Relaxed),
+            udp_tx: self.udp_datagrams_tx.load(Ordering::Relaxed),
+            udp_oversized: self.udp_oversized_drops.load(Ordering::Relaxed),
+            udp_bad: self.udp_bad_frames.load(Ordering::Relaxed),
         }
     }
 
@@ -109,6 +132,11 @@ pub struct ConnCounters {
     pub shed: u64,
     pub buffer_bytes: u64,
     pub thread_restarts: u64,
+    pub cross_shard: u64,
+    pub udp_rx: u64,
+    pub udp_tx: u64,
+    pub udp_oversized: u64,
+    pub udp_bad: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

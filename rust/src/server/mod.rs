@@ -4,11 +4,12 @@
 //! the legacy thread-per-connection mode survives behind
 //! [`ServeMode::Threaded`] for A/B benching and non-Linux builds.
 //!
-//! Layers: `sys` (raw epoll/eventfd/writev FFI) → `reactor` (event
-//! loops, connection slab, accept hand-off, idle sweep, drain) →
-//! `conn` (protocol state machine + `DrivenConn` readiness wrapper +
-//! bounded `OutBuf`) → `tcp` (listener bootstrap + mode dispatch) →
-//! `metrics` (gauges the `stats` command reports).
+//! Layers: `sys` (raw epoll/eventfd/socket/mmsg FFI) → `reactor`
+//! (event loops, connection slab, per-reactor accept + UDP service,
+//! idle sweep, drain) → `conn` (protocol state machine + `DrivenConn`
+//! readiness wrapper + bounded `OutBuf`) → `udp` (datagram frame
+//! codec over the same `Conn`) → `tcp` (listener bootstrap + mode
+//! dispatch) → `metrics` (gauges the `stats` command reports).
 
 pub mod conn;
 pub mod metrics;
@@ -17,6 +18,7 @@ pub(crate) mod reactor;
 #[cfg(target_os = "linux")]
 pub mod sys;
 pub mod tcp;
+pub mod udp;
 
 pub use conn::{Conn, ConnState, DrivenConn, NoControl, OutBuf, RespSink};
 pub use tcp::{Control, ServeMode, Server, ServerHandle};

@@ -4,17 +4,30 @@
 //! ## Architecture
 //!
 //! ```text
-//!                       accept thread (server::tcp)
-//!                     round-robin  |  max_conns gate
-//!             +-----------+-----------+-----------+
-//!             v           v           v
-//!        [inbox 0]    [inbox 1]   [inbox N-1]      (Mutex<Vec> + eventfd)
-//!             |           |           |
-//!        reactor 0    reactor 1   reactor N-1      (one epoll each)
-//!          epoll_wait -> DrivenConn::drive(readable, writable)
+//!   SO_REUSEPORT (default):              fallback (option unavailable):
+//!
+//!   kernel hashes SYNs / datagrams            accept thread (server::tcp)
+//!    |            |           |             round-robin  |  max_conns gate
+//!    v            v           v            +-----------+-----------+
+//!  [lsn 0]     [lsn 1]    [lsn N-1]        v           v           v
+//!  [udp 0]     [udp 1]    [udp N-1]   [inbox 0]   [inbox 1]  [inbox N-1]
+//!    |            |           |            |           |           |
+//!  reactor 0   reactor 1  reactor N-1  reactor 0   reactor 1  reactor N-1
+//!          epoll_wait -> accept burst / recvmmsg batch /
+//!                        DrivenConn::drive(readable, writable)
 //! ```
 //!
-//! Sockets are nonblocking and registered **edge-triggered**
+//! In reuseport mode every reactor owns its **own** listening socket
+//! (and optionally its own UDP socket): the kernel distributes
+//! accepts, so no lock, queue, or eventfd hop exists anywhere on the
+//! accept path, and the `max_conns` gate plus the EMFILE reserve-fd
+//! relief both run per-reactor. The inbox + eventfd machinery survives
+//! only as the fallback when `SO_REUSEPORT` is unavailable (and for
+//! shutdown wakeups). Reactor threads can be pinned to cores
+//! (`pin_cores`), which also tags connections for the
+//! `reactor_cross_shard` affinity stat.
+//!
+//! Connection sockets are nonblocking and registered **edge-triggered**
 //! (`EPOLLIN | EPOLLRDHUP | EPOLLET`); `DrivenConn` keeps its own
 //! readiness memory so edges are never lost across yields. EPOLLOUT
 //! interest is added only while a connection has output the socket
@@ -33,18 +46,38 @@
 use super::conn::{Conn, ConnState, Control, DrivenConn};
 use super::metrics::Metrics;
 use super::sys::{
-    Epoll, EpollEvent, WakeFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+    self, Epoll, EpollEvent, WakeFd, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
+use super::udp;
 use crate::store::sharded::ShardedStore;
-use std::net::TcpStream;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream, UdpSocket};
 use std::os::unix::io::{AsRawFd, RawFd};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Event token reserved for the inbox eventfd.
 const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Event token for this reactor's own listening socket (reuseport
+/// mode). Registered level-triggered so a burst cut short (EMFILE,
+/// accept budget) re-fires without bookkeeping.
+const LISTEN_TOKEN: u64 = u64::MAX - 1;
+
+/// Event token for this reactor's UDP socket (level-triggered, same
+/// reasoning: an un-drained batch re-fires).
+const UDP_TOKEN: u64 = u64::MAX - 2;
+
+/// Accepts per listener wakeup before returning to serve connections
+/// (level-triggered registration re-fires if more are pending).
+const ACCEPT_BURST: usize = 64;
+
+/// Receive buffer per UDP datagram slot. A request must fit one
+/// datagram; anything longer arrives truncated and answers
+/// `CLIENT_ERROR` via the torn-datagram path.
+const UDP_RX_BUF: usize = 16 * 1024;
 
 /// Events drained per `epoll_wait`.
 const EVENTS_PER_WAIT: usize = 256;
@@ -77,6 +110,10 @@ struct Inbox {
     /// Connections the accept thread asks this reactor to reap (oldest
     /// idle first) — the fd-exhaustion relief valve.
     reap: AtomicUsize,
+    /// Connections accepted into this reactor (kernel-distributed in
+    /// reuseport mode, dispatcher-assigned in fallback mode) — the
+    /// distribution the reuseport integration test asserts on.
+    accepted: AtomicU64,
 }
 
 impl Inbox {
@@ -113,6 +150,7 @@ impl ReactorPool {
             if !inbox.alive.load(Ordering::SeqCst) {
                 continue;
             }
+            inbox.accepted.fetch_add(1, Ordering::Relaxed);
             inbox.queue().push(stream);
             inbox.wake.wake();
             return;
@@ -143,19 +181,51 @@ impl ReactorPool {
             let _ = h.join();
         }
     }
+
+    /// Per-reactor accepted-connection counts.
+    pub(crate) fn accept_counts(&self) -> Vec<u64> {
+        self.inboxes
+            .iter()
+            .map(|i| i.accepted.load(Ordering::Relaxed))
+            .collect()
+    }
 }
 
-/// Spawn `threads` reactor event loops.
+/// Front-end layout handed to [`start`] by `server::tcp`.
+pub(crate) struct ReactorConfig {
+    pub threads: usize,
+    pub idle_timeout: Option<Duration>,
+    pub buffer_budget: usize,
+    /// Live-connection cap, enforced at accept time (per-reactor in
+    /// reuseport mode, by the accept thread in fallback mode — the
+    /// gauge it gates on is global either way).
+    pub max_conns: usize,
+    /// Pin reactor `i` to core `i % cores` and tag connections for the
+    /// cross-shard affinity stat.
+    pub pin_cores: bool,
+    /// One `SO_REUSEPORT` listener per reactor; empty = fallback mode
+    /// (the accept thread owns the single listener and dispatches).
+    pub listeners: Vec<TcpListener>,
+    /// Per-reactor UDP sockets. One per reactor in reuseport mode; a
+    /// single socket (served by reactor 0) in fallback mode; empty =
+    /// UDP disabled.
+    pub udp: Vec<UdpSocket>,
+}
+
+/// Spawn `cfg.threads` reactor event loops.
 pub(crate) fn start(
-    threads: usize,
-    idle_timeout: Option<Duration>,
-    buffer_budget: usize,
+    cfg: ReactorConfig,
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 ) -> std::io::Result<Arc<ReactorPool>> {
-    let threads = threads.max(1);
+    let threads = cfg.threads.max(1);
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut listeners: Vec<Option<TcpListener>> = cfg.listeners.into_iter().map(Some).collect();
+    listeners.resize_with(threads, || None);
+    let mut udp_socks: Vec<Option<UdpSocket>> = cfg.udp.into_iter().map(Some).collect();
+    udp_socks.resize_with(threads, || None);
     let mut inboxes = Vec::with_capacity(threads);
     let mut handles = Vec::with_capacity(threads);
     for i in 0..threads {
@@ -164,14 +234,30 @@ pub(crate) fn start(
             wake: WakeFd::new()?,
             alive: AtomicBool::new(true),
             reap: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
         });
         let ep = Epoll::new()?;
         ep.add(inbox.wake.raw(), WAKE_TOKEN, EPOLLIN)?;
+        let listener = listeners[i].take();
+        let udp_sock = udp_socks[i].take();
+        if let Some(l) = &listener {
+            ep.add(l.as_raw_fd(), LISTEN_TOKEN, EPOLLIN)?;
+        }
+        if let Some(u) = &udp_sock {
+            u.set_nonblocking(true)?;
+            ep.add(u.as_raw_fd(), UDP_TOKEN, EPOLLIN)?;
+        }
         let ctx = ReactorCtx {
             ep,
             inbox: inbox.clone(),
-            idle_timeout,
-            buffer_budget,
+            id: i as u32,
+            total: threads as u32,
+            idle_timeout: cfg.idle_timeout,
+            buffer_budget: cfg.buffer_budget,
+            max_conns: cfg.max_conns,
+            pin: cfg.pin_cores.then_some(i % cores),
+            listener,
+            udp_sock,
             store: store.clone(),
             control: control.clone(),
             metrics: metrics.clone(),
@@ -282,20 +368,84 @@ impl Slab {
 struct ReactorCtx {
     ep: Epoll,
     inbox: Arc<Inbox>,
+    /// This reactor's index / the pool size (affinity tagging).
+    id: u32,
+    total: u32,
     idle_timeout: Option<Duration>,
     /// Global connection-buffer byte budget (0 = unlimited): when the
     /// `conn_buffer_bytes` gauge exceeds this, the reactor sheds its
-    /// most-backlogged stalled connections and the accept thread
-    /// pauses (`server::tcp`).
+    /// most-backlogged stalled connections and stops accepting (the
+    /// fallback accept thread pauses, `server::tcp`).
     buffer_budget: usize,
+    max_conns: usize,
+    /// Core to pin this reactor thread to (`--pin-cores`).
+    pin: Option<usize>,
+    /// This reactor's own `SO_REUSEPORT` listener (reuseport mode).
+    listener: Option<TcpListener>,
+    /// This reactor's UDP socket.
+    udp_sock: Option<UdpSocket>,
     store: Arc<ShardedStore>,
     control: Arc<dyn Control>,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 }
 
+/// Per-reactor UDP serving state: fixed datagram slots for
+/// `recvmmsg`, one reused [`Conn`] (datagrams are independent request
+/// batches — the parser resets at every frame boundary), and staging
+/// buffers so a full receive batch fragments and sends through one
+/// `sendmmsg` with no steady-state allocation.
+struct UdpState {
+    sock: UdpSocket,
+    conn: Conn,
+    bufs: Vec<Box<[u8]>>,
+    addrs: Vec<sys::SockAddrStorage>,
+    lens: Vec<usize>,
+    /// Raw (unframed) response bytes of the datagram being served.
+    reply: Vec<u8>,
+    /// Single-frame scratch for `udp::fragment`.
+    frame: Vec<u8>,
+    /// Staged outgoing frames (bytes + per-frame `(start, end,
+    /// addr-slot)` spans) for the batched send.
+    stage: Vec<u8>,
+    spans: Vec<(usize, usize, usize)>,
+}
+
 impl ReactorCtx {
-    fn run(self) {
+    fn run(mut self) {
+        if let Some(core) = self.pin {
+            // best-effort: a constrained cpuset must not kill serving
+            let _ = sys::pin_to_core(core);
+        }
+        // EMFILE livelock breaker (reuseport mode — each reactor owns
+        // its listener, so each parks its own fd to give back)
+        let mut reserve: Option<std::fs::File> = self
+            .listener
+            .as_ref()
+            .and_then(|l| sys::dup_fd(l.as_raw_fd()).ok());
+        let mut udp_state = self.udp_sock.take().map(|s| {
+            let mut conn = Conn::with_metrics(
+                self.store.clone(),
+                self.control.clone(),
+                self.metrics.clone(),
+            );
+            if self.pin.is_some() {
+                conn.set_affinity(self.id, self.total);
+            }
+            UdpState {
+                sock: s,
+                conn,
+                bufs: (0..sys::MAX_BATCH)
+                    .map(|_| vec![0u8; UDP_RX_BUF].into_boxed_slice())
+                    .collect(),
+                addrs: vec![sys::SockAddrStorage::zeroed(); sys::MAX_BATCH],
+                lens: vec![0usize; sys::MAX_BATCH],
+                reply: Vec::with_capacity(4096),
+                frame: Vec::with_capacity(udp::DATAGRAM_MAX),
+                stage: Vec::with_capacity(8192),
+                spans: Vec::new(),
+            }
+        });
         let mut slab = Slab {
             conns: Vec::new(),
             free: Vec::new(),
@@ -319,26 +469,44 @@ impl ReactorCtx {
                 break;
             }
             let mut accept_new = false;
+            let mut accept_own = false;
+            let mut serve_udp = false;
             for ev in events.iter().take(n) {
                 // copy out of the (possibly packed) kernel struct
                 let (bits, token) = {
                     let e = *ev;
                     (e.events, e.data)
                 };
-                if token == WAKE_TOKEN {
-                    self.inbox.wake.drain();
-                    accept_new = true;
-                    continue;
+                match token {
+                    WAKE_TOKEN => {
+                        self.inbox.wake.drain();
+                        accept_new = true;
+                    }
+                    LISTEN_TOKEN => accept_own = true,
+                    UDP_TOKEN => serve_udp = true,
+                    _ => {
+                        let readable =
+                            bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0;
+                        let writable = bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0;
+                        self.drive_slot(&mut slab, token as usize, readable, writable, &mut next);
+                    }
                 }
-                let readable = bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0;
-                let writable = bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0;
-                self.drive_slot(&mut slab, token as usize, readable, writable, &mut next);
             }
-            // fd-exhaustion relief requested by the accept thread:
-            // close the oldest-idle connections to free descriptors
+            // fd-exhaustion relief requested by the accept thread
+            // (fallback mode): close oldest-idle connections to free
+            // descriptors. In reuseport mode each reactor handles its
+            // own EMFILE inside accept_burst.
             let reap = self.inbox.reap.swap(0, Ordering::SeqCst);
             if reap > 0 {
                 self.reap_oldest(&mut slab, reap);
+            }
+            if accept_own {
+                self.accept_burst(&mut slab, &mut next, &mut reserve);
+            }
+            if serve_udp {
+                if let Some(st) = udp_state.as_mut() {
+                    self.udp_service(st);
+                }
             }
             // new sockets register after the event batch so a freed
             // slot can never be reused while its stale events are still
@@ -420,6 +588,135 @@ impl ReactorCtx {
         }
     }
 
+    /// Reuseport accept path: drain this reactor's own listener — no
+    /// lock, no queue, no eventfd hop; the kernel already picked us.
+    /// Bounded per wakeup so an accept flood cannot starve established
+    /// connections (the level-triggered listener re-fires).
+    fn accept_burst(
+        &self,
+        slab: &mut Slab,
+        redrive: &mut Vec<usize>,
+        reserve: &mut Option<std::fs::File>,
+    ) {
+        let Some(listener) = &self.listener else { return };
+        // over the buffer budget: stop admitting load; the backlog
+        // queues in the kernel until shedding drains the gauge
+        if self.buffer_budget > 0
+            && self.metrics.conn_buffer_bytes.load(Ordering::Relaxed) > self.buffer_budget as u64
+        {
+            return;
+        }
+        for _ in 0..ACCEPT_BURST {
+            let accepted = if crate::util::failpoint::fired("accept.emfile") {
+                Err(std::io::Error::from_raw_os_error(24)) // EMFILE
+            } else {
+                listener.accept().map(|(s, _)| s)
+            };
+            match accepted {
+                Ok(stream) => {
+                    self.inbox.accepted.fetch_add(1, Ordering::Relaxed);
+                    if !super::tcp::try_admit(&self.metrics, self.max_conns) {
+                        continue; // drop: close immediately
+                    }
+                    self.register(slab, stream, redrive);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                // EMFILE(24)/ENFILE(23): fd exhaustion, handled wholly
+                // within this reactor now that it owns the listener —
+                // give back the parked reserve fd, accept-and-close one
+                // pending socket so the backlog cannot livelock, re-park
+                // the reserve, and reap our own oldest connections.
+                Err(e) if matches!(e.raw_os_error(), Some(23) | Some(24)) => {
+                    drop(reserve.take());
+                    if let Ok((s, _)) = listener.accept() {
+                        Metrics::bump(&self.metrics.connections_accepted);
+                        Metrics::bump(&self.metrics.rejected_connections);
+                        drop(s);
+                    }
+                    *reserve = sys::dup_fd(listener.as_raw_fd()).ok();
+                    self.reap_oldest(slab, 2);
+                    return;
+                }
+                Err(_) => continue, // ECONNABORTED and friends
+            }
+        }
+    }
+
+    /// Serve this reactor's UDP socket: `recvmmsg` a batch, run every
+    /// datagram through the shared [`Conn`] (same parser/`Exec` core
+    /// as TCP), fragment the replies per the frame spec, and push them
+    /// back out through `sendmmsg`. Frames the socket refuses are
+    /// dropped — UDP is lossy by contract.
+    fn udp_service(&self, st: &mut UdpState) {
+        let fd = st.sock.as_raw_fd();
+        loop {
+            let n = {
+                let mut slices: Vec<&mut [u8]> = st.bufs.iter_mut().map(|b| &mut **b).collect();
+                match sys::recv_batch(fd, &mut slices, &mut st.addrs, &mut st.lens) {
+                    Ok(0) => return,
+                    Ok(n) => n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                    Err(_) => return,
+                }
+            };
+            Metrics::add(&self.metrics.udp_datagrams_rx, n as u64);
+            let UdpState {
+                conn,
+                bufs,
+                addrs,
+                lens,
+                reply,
+                frame,
+                stage,
+                spans,
+                ..
+            } = st;
+            stage.clear();
+            spans.clear();
+            for i in 0..n {
+                let len = lens[i].min(bufs[i].len());
+                Metrics::add(&self.metrics.bytes_read, len as u64);
+                reply.clear();
+                let Some(id) = udp::handle_datagram(conn, &bufs[i][..len], reply) else {
+                    Metrics::bump(&self.metrics.udp_bad_frames);
+                    continue;
+                };
+                Metrics::bump(&self.metrics.commands);
+                if !udp::fragment(id, reply, frame, |f| {
+                    let s = stage.len();
+                    stage.extend_from_slice(f);
+                    spans.push((s, stage.len(), i));
+                }) {
+                    Metrics::bump(&self.metrics.udp_oversized_drops);
+                }
+            }
+            let mut off = 0;
+            while off < spans.len() {
+                let end = (off + sys::MAX_BATCH).min(spans.len());
+                let msgs: Vec<(&[u8], &sys::SockAddrStorage)> = spans[off..end]
+                    .iter()
+                    .map(|&(s, e, a)| (&stage[s..e], &addrs[a]))
+                    .collect();
+                match sys::send_batch(fd, &msgs) {
+                    Ok(0) => break,
+                    Ok(sent) => {
+                        Metrics::add(&self.metrics.udp_datagrams_tx, sent as u64);
+                        let bytes: usize =
+                            spans[off..off + sent].iter().map(|&(s, e, _)| e - s).sum();
+                        Metrics::add(&self.metrics.bytes_written, bytes as u64);
+                        off += sent;
+                    }
+                    // lossy transport: a refused frame is dropped, not
+                    // parked — no per-peer backpressure state for UDP
+                    Err(_) => break,
+                }
+            }
+            if n < sys::MAX_BATCH {
+                return;
+            }
+        }
+    }
+
     /// Register an accepted socket: nonblocking, edge-triggered
     /// read-interest, then an immediate drive so bytes that arrived
     /// before registration are not stranded.
@@ -442,11 +739,14 @@ impl ReactorCtx {
             Metrics::dec(&self.metrics.curr_connections);
             return;
         }
-        let conn = Conn::with_metrics(
+        let mut conn = Conn::with_metrics(
             self.store.clone(),
             self.control.clone(),
             self.metrics.clone(),
         );
+        if self.pin.is_some() {
+            conn.set_affinity(self.id, self.total);
+        }
         let dc = DrivenConn::new(stream, conn).with_direct_fd(fd);
         slab.conns[slot] = Some(Entry {
             dc,

@@ -2,9 +2,12 @@
 //!
 //! The offline build image vendors no crates (not even `libc`), so the
 //! handful of syscalls the reactor needs — `epoll_*`, `eventfd`,
-//! `writev`, `signal` — are declared here as `extern "C"` against the
-//! system libc that `std` already links. Everything is wrapped in safe
-//! RAII types; `std::io::Error::last_os_error()` reads `errno` for us.
+//! `writev`, `signal`, `socket`/`setsockopt`/`bind`/`listen` (the
+//! SO_REUSEPORT listener group), `recvmmsg`/`sendmmsg` (UDP batch I/O)
+//! and `sched_setaffinity` (core pinning) — are declared here as
+//! `extern "C"` against the system libc that `std` already links.
+//! Everything is wrapped in safe RAII types;
+//! `std::io::Error::last_os_error()` reads `errno` for us.
 
 #![cfg(target_os = "linux")]
 
@@ -64,6 +67,25 @@ extern "C" {
     fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
     fn signal(signum: c_int, handler: usize) -> usize;
     fn dup(fd: c_int) -> c_int;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        optname: c_int,
+        optval: *const c_void,
+        optlen: u32,
+    ) -> c_int;
+    fn bind(fd: c_int, addr: *const c_void, addrlen: u32) -> c_int;
+    fn listen(fd: c_int, backlog: c_int) -> c_int;
+    fn recvmmsg(
+        fd: c_int,
+        msgvec: *mut MMsgHdr,
+        vlen: u32,
+        flags: c_int,
+        timeout: *mut c_void,
+    ) -> c_int;
+    fn sendmmsg(fd: c_int, msgvec: *mut MMsgHdr, vlen: u32, flags: c_int) -> c_int;
+    fn sched_setaffinity(pid: c_int, cpusetsize: usize, mask: *const u64) -> c_int;
 }
 
 /// An epoll instance. Registered fds deregister themselves when their
@@ -245,6 +267,305 @@ pub fn dup_fd(fd: RawFd) -> io::Result<File> {
     Ok(unsafe { File::from_raw_fd(rc) })
 }
 
+// -------------------------------------------------- reuseport sockets
+
+const AF_INET: c_int = 2;
+const AF_INET6: c_int = 10;
+const SOCK_STREAM: c_int = 1;
+const SOCK_DGRAM: c_int = 2;
+const SOCK_NONBLOCK: c_int = 0o4000;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const SO_REUSEPORT: c_int = 15;
+const LISTEN_BACKLOG: c_int = 1024;
+
+/// `struct sockaddr_in` (x86_64 Linux layout; ports/addr in network
+/// byte order).
+#[repr(C)]
+struct SockAddrIn {
+    family: u16,
+    port: u16,
+    addr: u32,
+    zero: [u8; 8],
+}
+
+/// `struct sockaddr_in6`.
+#[repr(C)]
+struct SockAddrIn6 {
+    family: u16,
+    port: u16,
+    flowinfo: u32,
+    addr: [u8; 16],
+    scope_id: u32,
+}
+
+/// A `struct sockaddr_storage`-sized blob plus its valid length —
+/// written by `recv_batch`, passed back verbatim to `send_batch` so
+/// the reactor never has to parse peer addresses on the datagram path.
+#[repr(C, align(8))]
+#[derive(Clone, Copy)]
+pub struct SockAddrStorage {
+    pub data: [u8; 128],
+    pub len: u32,
+}
+
+impl SockAddrStorage {
+    pub fn zeroed() -> SockAddrStorage {
+        SockAddrStorage {
+            data: [0; 128],
+            len: 0,
+        }
+    }
+}
+
+impl Default for SockAddrStorage {
+    fn default() -> Self {
+        SockAddrStorage::zeroed()
+    }
+}
+
+/// Encode a `SocketAddr` into storage form (for tests and one-off
+/// sends through [`send_batch`]).
+pub fn encode_addr(addr: &std::net::SocketAddr) -> SockAddrStorage {
+    let mut ss = SockAddrStorage::zeroed();
+    match addr {
+        std::net::SocketAddr::V4(a) => {
+            let sa = SockAddrIn {
+                family: AF_INET as u16,
+                port: a.port().to_be(),
+                addr: u32::from_ne_bytes(a.ip().octets()),
+                zero: [0; 8],
+            };
+            let n = std::mem::size_of::<SockAddrIn>();
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    &sa as *const SockAddrIn as *const u8,
+                    ss.data.as_mut_ptr(),
+                    n,
+                );
+            }
+            ss.len = n as u32;
+        }
+        std::net::SocketAddr::V6(a) => {
+            let sa = SockAddrIn6 {
+                family: AF_INET6 as u16,
+                port: a.port().to_be(),
+                flowinfo: a.flowinfo(),
+                addr: a.ip().octets(),
+                scope_id: a.scope_id(),
+            };
+            let n = std::mem::size_of::<SockAddrIn6>();
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    &sa as *const SockAddrIn6 as *const u8,
+                    ss.data.as_mut_ptr(),
+                    n,
+                );
+            }
+            ss.len = n as u32;
+        }
+    }
+    ss
+}
+
+/// Decode a storage blob back into a `SocketAddr` (tests, logging).
+pub fn decode_addr(ss: &SockAddrStorage) -> Option<std::net::SocketAddr> {
+    let family = u16::from_ne_bytes([ss.data[0], ss.data[1]]) as c_int;
+    if family == AF_INET && ss.len as usize >= std::mem::size_of::<SockAddrIn>() {
+        let port = u16::from_be_bytes([ss.data[2], ss.data[3]]);
+        let ip = std::net::Ipv4Addr::new(ss.data[4], ss.data[5], ss.data[6], ss.data[7]);
+        Some(std::net::SocketAddr::from((ip, port)))
+    } else if family == AF_INET6 && ss.len as usize >= std::mem::size_of::<SockAddrIn6>() {
+        let port = u16::from_be_bytes([ss.data[2], ss.data[3]]);
+        let mut oct = [0u8; 16];
+        oct.copy_from_slice(&ss.data[8..24]);
+        Some(std::net::SocketAddr::from((std::net::Ipv6Addr::from(oct), port)))
+    } else {
+        None
+    }
+}
+
+/// Open + bind a nonblocking SO_REUSEPORT socket on `addr`. Every
+/// reactor calls this against the *same* address, so the kernel hashes
+/// incoming connections/datagrams across the group — zero shared state
+/// on the accept path. Fails cleanly (socket closed) when the kernel
+/// rejects the option, which is the caller's signal to fall back to
+/// the single-listener mode.
+fn open_reuseport(addr: std::net::SocketAddr, stream: bool) -> io::Result<RawFd> {
+    let domain = if addr.is_ipv4() { AF_INET } else { AF_INET6 };
+    let ty = if stream { SOCK_STREAM } else { SOCK_DGRAM };
+    let fd = unsafe { socket(domain, ty | SOCK_NONBLOCK | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let fail = |fd: c_int| -> io::Error {
+        let e = io::Error::last_os_error();
+        unsafe { close(fd) };
+        e
+    };
+    let one: c_int = 1;
+    let optlen = std::mem::size_of::<c_int>() as u32;
+    let optval = &one as *const c_int as *const c_void;
+    // REUSEADDR keeps restarts from tripping over TIME_WAIT; REUSEPORT
+    // is the load-bearing one — its absence aborts the whole mode.
+    unsafe { setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, optval, optlen) };
+    if unsafe { setsockopt(fd, SOL_SOCKET, SO_REUSEPORT, optval, optlen) } < 0 {
+        return Err(fail(fd));
+    }
+    let ss = encode_addr(&addr);
+    if unsafe { bind(fd, ss.data.as_ptr() as *const c_void, ss.len) } < 0 {
+        return Err(fail(fd));
+    }
+    if stream && unsafe { listen(fd, LISTEN_BACKLOG) } < 0 {
+        return Err(fail(fd));
+    }
+    Ok(fd)
+}
+
+/// A nonblocking SO_REUSEPORT TCP listener (one per reactor thread).
+pub fn listen_reuseport(addr: std::net::SocketAddr) -> io::Result<std::net::TcpListener> {
+    let fd = open_reuseport(addr, true)?;
+    Ok(unsafe { std::net::TcpListener::from_raw_fd(fd) })
+}
+
+/// A nonblocking SO_REUSEPORT UDP socket (one per reactor thread).
+pub fn udp_reuseport(addr: std::net::SocketAddr) -> io::Result<std::net::UdpSocket> {
+    let fd = open_reuseport(addr, false)?;
+    Ok(unsafe { std::net::UdpSocket::from_raw_fd(fd) })
+}
+
+// ----------------------------------------------- datagram batch I/O
+
+/// `struct msghdr` (x86_64 Linux; `repr(C)` reproduces the padding
+/// after `namelen` and `flags`).
+#[repr(C)]
+struct MsgHdr {
+    name: *mut c_void,
+    namelen: u32,
+    iov: *mut IoVec,
+    iovlen: usize,
+    control: *mut c_void,
+    controllen: usize,
+    flags: c_int,
+}
+
+/// `struct mmsghdr`.
+#[repr(C)]
+struct MMsgHdr {
+    hdr: MsgHdr,
+    len: u32,
+}
+
+/// Max datagrams moved per `recvmmsg`/`sendmmsg` call (stack-built
+/// header arrays — no allocation on the datagram path).
+pub const MAX_BATCH: usize = 32;
+
+fn empty_mmsghdr() -> MMsgHdr {
+    MMsgHdr {
+        hdr: MsgHdr {
+            name: std::ptr::null_mut(),
+            namelen: 0,
+            iov: std::ptr::null_mut(),
+            iovlen: 0,
+            control: std::ptr::null_mut(),
+            controllen: 0,
+            flags: 0,
+        },
+        len: 0,
+    }
+}
+
+/// Receive up to `min(bufs, addrs, lens, MAX_BATCH)` datagrams in one
+/// syscall. For each received message `i`, `lens[i]` gets the payload
+/// length and `addrs[i]` the source address. Returns the count;
+/// `WouldBlock` when the socket is drained.
+pub fn recv_batch(
+    fd: RawFd,
+    bufs: &mut [&mut [u8]],
+    addrs: &mut [SockAddrStorage],
+    lens: &mut [usize],
+) -> io::Result<usize> {
+    let n = bufs.len().min(addrs.len()).min(lens.len()).min(MAX_BATCH);
+    if n == 0 {
+        return Ok(0);
+    }
+    let mut iovs: [IoVec; MAX_BATCH] = std::array::from_fn(|_| IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    });
+    let mut hdrs: [MMsgHdr; MAX_BATCH] = std::array::from_fn(|_| empty_mmsghdr());
+    for i in 0..n {
+        iovs[i] = IoVec {
+            base: bufs[i].as_mut_ptr() as *const c_void,
+            len: bufs[i].len(),
+        };
+        hdrs[i].hdr.name = addrs[i].data.as_mut_ptr() as *mut c_void;
+        hdrs[i].hdr.namelen = addrs[i].data.len() as u32;
+        hdrs[i].hdr.iov = &mut iovs[i];
+        hdrs[i].hdr.iovlen = 1;
+    }
+    let rc = unsafe { recvmmsg(fd, hdrs.as_mut_ptr(), n as u32, 0, std::ptr::null_mut()) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let got = rc as usize;
+    for i in 0..got {
+        lens[i] = hdrs[i].len as usize;
+        addrs[i].len = hdrs[i].hdr.namelen;
+    }
+    Ok(got)
+}
+
+/// Send up to `MAX_BATCH` datagrams in one syscall. Returns how many
+/// the kernel took (a partial count is normal under send-buffer
+/// pressure; the caller resumes from there or drops — UDP is lossy).
+pub fn send_batch(fd: RawFd, msgs: &[(&[u8], &SockAddrStorage)]) -> io::Result<usize> {
+    let n = msgs.len().min(MAX_BATCH);
+    if n == 0 {
+        return Ok(0);
+    }
+    let mut iovs: [IoVec; MAX_BATCH] = std::array::from_fn(|_| IoVec {
+        base: std::ptr::null(),
+        len: 0,
+    });
+    let mut hdrs: [MMsgHdr; MAX_BATCH] = std::array::from_fn(|_| empty_mmsghdr());
+    for (i, (payload, addr)) in msgs.iter().take(n).enumerate() {
+        iovs[i] = IoVec {
+            base: payload.as_ptr() as *const c_void,
+            len: payload.len(),
+        };
+        hdrs[i].hdr.name = addr.data.as_ptr() as *mut c_void;
+        hdrs[i].hdr.namelen = addr.len;
+        hdrs[i].hdr.iov = &mut iovs[i];
+        hdrs[i].hdr.iovlen = 1;
+    }
+    let rc = unsafe { sendmmsg(fd, hdrs.as_mut_ptr(), n as u32, 0) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(rc as usize)
+}
+
+// ------------------------------------------------------- cpu affinity
+
+/// Pin the calling thread to one CPU (`sched_setaffinity(0, ...)`).
+/// Used by `--pin-cores`: reactor `i` pins to core `i % ncores`, so a
+/// connection's reactor — and with kernel reuseport hashing, its whole
+/// 4-tuple — stays on one core end-to-end.
+pub fn pin_to_core(core: usize) -> io::Result<()> {
+    let mut mask = [0u64; 16]; // 1024 CPUs
+    if core >= mask.len() * 64 {
+        return Err(io::Error::from(io::ErrorKind::InvalidInput));
+    }
+    mask[core / 64] = 1u64 << (core % 64);
+    let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
 // -------------------------------------------------------------- signals
 
 const SIGINT: c_int = 2;
@@ -295,6 +616,90 @@ mod tests {
         wake.drain();
         // drained: level-triggered registration goes quiet again
         assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn reuseport_listeners_share_one_port() {
+        use std::io::Write as _;
+        let a = listen_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let port = a.local_addr().unwrap().port();
+        let b = listen_reuseport(format!("127.0.0.1:{port}").parse().unwrap())
+            .expect("second SO_REUSEPORT bind to the same port");
+        // a client lands on exactly one of the two listeners
+        let mut c = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        c.write_all(b"x").unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        let mut accepted = 0;
+        while std::time::Instant::now() < deadline {
+            for l in [&a, &b] {
+                match l.accept() {
+                    Ok(_) => accepted += 1,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) => panic!("accept: {e}"),
+                }
+            }
+            if accepted > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(accepted, 1);
+    }
+
+    #[test]
+    fn addr_encode_decode_roundtrip() {
+        for addr in ["127.0.0.1:11211", "[::1]:0"] {
+            let a: std::net::SocketAddr = addr.parse().unwrap();
+            assert_eq!(decode_addr(&encode_addr(&a)), Some(a));
+        }
+        assert_eq!(decode_addr(&SockAddrStorage::zeroed()), None);
+    }
+
+    #[test]
+    fn mmsg_batch_roundtrip() {
+        let rx = udp_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let rx_addr = rx.local_addr().unwrap();
+        let tx = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+        let dst = encode_addr(&rx_addr);
+        let msgs: Vec<(&[u8], &SockAddrStorage)> =
+            vec![(b"one", &dst), (b"two2", &dst), (b"three33", &dst)];
+        assert_eq!(send_batch(tx.as_raw_fd(), &msgs).unwrap(), 3);
+
+        let mut b0 = [0u8; 64];
+        let mut b1 = [0u8; 64];
+        let mut b2 = [0u8; 64];
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while got.len() < 3 && std::time::Instant::now() < deadline {
+            let mut bufs: [&mut [u8]; 3] = [&mut b0, &mut b1, &mut b2];
+            let mut addrs = [SockAddrStorage::zeroed(); 3];
+            let mut lens = [0usize; 3];
+            match recv_batch(rx.as_raw_fd(), &mut bufs, &mut addrs, &mut lens) {
+                Ok(n) => {
+                    for i in 0..n {
+                        got.push(bufs[i][..lens[i]].to_vec());
+                        // the source address round-trips to the sender
+                        assert_eq!(
+                            decode_addr(&addrs[i]),
+                            Some(tx.local_addr().unwrap())
+                        );
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => panic!("recv_batch: {e}"),
+            }
+        }
+        got.sort();
+        assert_eq!(got, vec![b"one".to_vec(), b"three33".to_vec(), b"two2".to_vec()]);
+    }
+
+    #[test]
+    fn pin_to_core_zero() {
+        // every Linux environment lets a thread restrict itself to CPU 0
+        pin_to_core(0).unwrap();
+        assert!(pin_to_core(100_000).is_err(), "out-of-range core rejected");
     }
 
     #[test]

@@ -21,6 +21,8 @@ use crate::store::sharded::ShardedStore;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 #[cfg(target_os = "linux")]
+use std::net::{ToSocketAddrs, UdpSocket};
+#[cfg(target_os = "linux")]
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -47,10 +49,11 @@ fn default_reactor_threads() -> usize {
         .unwrap_or(2)
 }
 
-/// Accept-gate bookkeeping shared by both serving modes: count the
-/// accept, enforce `max_conns`, and on admission claim a
+/// Accept-gate bookkeeping shared by every accept site (the fallback
+/// accept thread, the per-reactor reuseport bursts, threaded mode):
+/// count the accept, enforce `max_conns`, and on admission claim a
 /// `curr_connections` slot (the serving back end releases it on close).
-fn try_admit(metrics: &Metrics, max_conns: usize) -> bool {
+pub(crate) fn try_admit(metrics: &Metrics, max_conns: usize) -> bool {
     Metrics::bump(&metrics.connections_accepted);
     if metrics.curr_connections.load(Ordering::Relaxed) >= max_conns as u64 {
         Metrics::bump(&metrics.rejected_connections);
@@ -70,11 +73,15 @@ pub struct ServerHandle {
     pool: Option<Arc<ReactorPool>>,
     /// Reactor threads serving connections (0 in threaded mode).
     reactors: usize,
+    /// Kernel-distributed accept is live (per-reactor `SO_REUSEPORT`
+    /// listeners; no accept thread exists).
+    reuseport: bool,
     pub metrics: Arc<Metrics>,
 }
 
 impl ServerHandle {
-    /// The bound address (useful with `:0` ephemeral ports).
+    /// The bound address (useful with `:0` ephemeral ports). The UDP
+    /// front-end, when enabled, serves the same port.
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
@@ -83,6 +90,22 @@ impl ServerHandle {
     /// mode.
     pub fn reactors(&self) -> usize {
         self.reactors
+    }
+
+    /// True when each reactor owns its own `SO_REUSEPORT` listener
+    /// (false = single-listener fallback or threaded mode).
+    pub fn reuseport(&self) -> bool {
+        self.reuseport
+    }
+
+    /// Per-reactor accepted-connection distribution (empty in
+    /// threaded mode).
+    pub fn accept_counts(&self) -> Vec<u64> {
+        #[cfg(target_os = "linux")]
+        if let Some(pool) = &self.pool {
+            return pool.accept_counts();
+        }
+        Vec::new()
     }
 
     /// Stop accepting, drain the reactors (in-flight responses are
@@ -95,9 +118,11 @@ impl ServerHandle {
         if let Some(pool) = &self.pool {
             pool.wake_all();
         }
-        // poke the listener so accept() returns
-        let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
+            // poke the listener so a blocking accept() returns;
+            // reuseport reactors need no poke — the eventfd wake above
+            // already reached every event loop
+            let _ = TcpStream::connect(self.addr);
             let _ = t.join();
         }
         #[cfg(target_os = "linux")]
@@ -117,9 +142,18 @@ pub struct Server {
     pub idle_timeout: Option<Duration>,
     /// Global connection-buffer byte budget (0 = unlimited). Over
     /// budget, the reactors shed their most-backlogged stalled
-    /// connections and the accept thread pauses until the gauge falls
-    /// back under.
+    /// connections and accepting pauses until the gauge falls back
+    /// under.
     pub conn_buffer_budget: usize,
+    /// Per-reactor `SO_REUSEPORT` listeners (default). Falls back to
+    /// the single-listener accept thread when the option is
+    /// unavailable; irrelevant in threaded mode.
+    pub reuseport: bool,
+    /// Serve the memcached UDP frame protocol on the same port.
+    pub udp: bool,
+    /// Pin reactor threads to cores and tag connections for the
+    /// `reactor_cross_shard` affinity stat.
+    pub pin_cores: bool,
 }
 
 impl Server {
@@ -136,6 +170,9 @@ impl Server {
             max_conns: DEFAULT_MAX_CONNS,
             idle_timeout: None,
             conn_buffer_budget: 0,
+            reuseport: true,
+            udp: false,
+            pin_cores: false,
         }
     }
 
@@ -168,40 +205,133 @@ impl Server {
         self
     }
 
+    /// Per-reactor `SO_REUSEPORT` listeners (on by default); off
+    /// forces the single-listener accept thread.
+    pub fn reuseport(mut self, on: bool) -> Self {
+        self.reuseport = on;
+        self
+    }
+
+    /// Serve the memcached UDP frame protocol on the same port.
+    pub fn udp(mut self, on: bool) -> Self {
+        self.udp = on;
+        self
+    }
+
+    /// Pin reactor threads to cores (`sched_setaffinity`).
+    pub fn pin_cores(mut self, on: bool) -> Self {
+        self.pin_cores = on;
+        self
+    }
+
     /// Bind and serve in background threads.
     pub fn start(self, listen: &str) -> std::io::Result<ServerHandle> {
-        let listener = TcpListener::bind(listen)?;
-        let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::new());
 
         #[cfg(target_os = "linux")]
         if self.mode == ServeMode::Event {
-            return self.start_event(listener, addr, shutdown, metrics);
+            return self.start_event(listen, shutdown, metrics);
         }
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
         self.start_threaded(listener, addr, shutdown, metrics)
     }
 
-    /// Reactor mode: spawn the event loops, then a thin accept thread
-    /// that gates on `max_conns` and round-robins sockets across them.
+    /// Reactor mode. Preferred layout: one `SO_REUSEPORT` listener
+    /// (and UDP socket) per reactor, kernel-distributed accept, no
+    /// accept thread at all. When the socket option is unavailable the
+    /// old layout survives: a single listener plus a thin accept
+    /// thread that gates on `max_conns` and round-robins sockets into
+    /// the reactor inboxes.
     #[cfg(target_os = "linux")]
     fn start_event(
         self,
-        listener: TcpListener,
-        addr: SocketAddr,
+        listen: &str,
         shutdown: Arc<AtomicBool>,
         metrics: Arc<Metrics>,
     ) -> std::io::Result<ServerHandle> {
+        let threads = self.reactor_threads.max(1);
+        // reactor 0's listener resolves the address (`:0` ephemeral
+        // ports included); the rest bind the resolved one. Any failure
+        // — old kernel, no SO_REUSEPORT — falls back whole-hog.
+        let mut reuse_listeners: Vec<TcpListener> = Vec::new();
+        if self.reuseport {
+            let requested = listen.to_socket_addrs().ok().and_then(|mut a| a.next());
+            if let Some(req) = requested {
+                if let Ok(first) = sys::listen_reuseport(req) {
+                    if let Ok(resolved) = first.local_addr() {
+                        reuse_listeners.push(first);
+                        for _ in 1..threads {
+                            match sys::listen_reuseport(resolved) {
+                                Ok(l) => reuse_listeners.push(l),
+                                Err(_) => {
+                                    reuse_listeners.clear();
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let reuse = !reuse_listeners.is_empty();
+        let (fallback_listener, addr) = if reuse {
+            (None, reuse_listeners[0].local_addr()?)
+        } else {
+            let l = TcpListener::bind(listen)?;
+            let a = l.local_addr()?;
+            (Some(l), a)
+        };
+        // UDP front-end: per-reactor reuseport sockets when possible,
+        // else one socket served by reactor 0 (TCP and UDP port spaces
+        // are distinct, so the single bind always works).
+        let mut udp_socks: Vec<UdpSocket> = Vec::new();
+        if self.udp {
+            if reuse {
+                for _ in 0..threads {
+                    match sys::udp_reuseport(addr) {
+                        Ok(s) => udp_socks.push(s),
+                        Err(_) => {
+                            udp_socks.clear();
+                            break;
+                        }
+                    }
+                }
+            }
+            if udp_socks.is_empty() {
+                let s = UdpSocket::bind(addr)?;
+                s.set_nonblocking(true)?;
+                udp_socks.push(s);
+            }
+        }
         let pool = reactor::start(
-            self.reactor_threads,
-            self.idle_timeout,
-            self.conn_buffer_budget,
+            reactor::ReactorConfig {
+                threads,
+                idle_timeout: self.idle_timeout,
+                buffer_budget: self.conn_buffer_budget,
+                max_conns: self.max_conns,
+                pin_cores: self.pin_cores,
+                listeners: reuse_listeners,
+                udp: udp_socks,
+            },
             self.store,
             self.control,
             metrics.clone(),
             shutdown.clone(),
         )?;
         let reactors = pool.threads();
+        let Some(listener) = fallback_listener else {
+            return Ok(ServerHandle {
+                addr,
+                shutdown,
+                accept_thread: None,
+                pool: Some(pool),
+                reactors,
+                reuseport: true,
+                metrics,
+            });
+        };
         let accept_shutdown = shutdown.clone();
         let accept_metrics = metrics.clone();
         let max_conns = self.max_conns;
@@ -270,6 +400,7 @@ impl Server {
             accept_thread: Some(accept_thread),
             pool: Some(pool),
             reactors,
+            reuseport: false,
             metrics,
         })
     }
@@ -348,6 +479,7 @@ impl Server {
             #[cfg(target_os = "linux")]
             pool: None,
             reactors: 0,
+            reuseport: false,
             metrics,
         })
     }

@@ -1,0 +1,326 @@
+//! Memcached UDP frame protocol on the shared command IR.
+//!
+//! Every UDP datagram carries an 8-byte frame header followed by plain
+//! text-protocol bytes:
+//!
+//! ```text
+//! 0-1  request id   (opaque; echoed on every response datagram)
+//! 2-3  sequence no  (0-based)
+//! 4-5  datagram count for this message
+//! 6-7  reserved     (0 on send, ignored on receive)
+//! ```
+//!
+//! all three counters big-endian — the classic memcached framing.
+//! **Requests** must fit one datagram (`seq == 0 && total == 1`;
+//! anything else is dropped, memcached parity). **Responses** are
+//! fragmented into up to [`MAX_RESPONSE_FRAGS`] datagrams of
+//! [`DATAGRAM_MAX`] bytes, sequence numbers incrementing; a response
+//! that would need more is replaced by a single `SERVER_ERROR`
+//! datagram (parity with dropping oversized UDP responses, but
+//! diagnosable by the client).
+//!
+//! The payload runs through the **same** [`Conn`] state machine as TCP
+//! — one parser, one `Exec` core, one `ResponseWriter` — so the two
+//! transports cannot diverge semantically (the integration suite diffs
+//! them on an identical script). A datagram is a complete pipelined
+//! batch: if a command spills past the frame (a torn datagram), the
+//! completed prefix is answered, a `CLIENT_ERROR` is appended, and the
+//! connection state resets so the next datagram starts clean.
+
+use super::conn::Conn;
+
+/// Frame header bytes prepended to every datagram.
+pub const HEADER_LEN: usize = 8;
+
+/// Max bytes per datagram on the wire (memcached's
+/// `UDP_MAX_PAYLOAD_SIZE`), header included.
+pub const DATAGRAM_MAX: usize = 1400;
+
+/// Response payload bytes per datagram.
+pub const PAYLOAD_MAX: usize = DATAGRAM_MAX - HEADER_LEN;
+
+/// Ceiling on response datagrams per request. Beyond it the response
+/// is replaced by [`OVERSIZED_RESPONSE`] — a reply spanning more
+/// fragments than this has no business on a lossy transport (one
+/// dropped fragment wastes the whole burst).
+pub const MAX_RESPONSE_FRAGS: usize = 64;
+
+/// The single-datagram reply sent in place of an oversized response.
+pub const OVERSIZED_RESPONSE: &[u8] = b"SERVER_ERROR response too large for udp\r\n";
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub request_id: u16,
+    pub seq: u16,
+    pub total: u16,
+}
+
+/// Parse the 8-byte frame header off a datagram. `None` = too short.
+#[inline]
+pub fn parse_header(dgram: &[u8]) -> Option<FrameHeader> {
+    if dgram.len() < HEADER_LEN {
+        return None;
+    }
+    Some(FrameHeader {
+        request_id: u16::from_be_bytes([dgram[0], dgram[1]]),
+        seq: u16::from_be_bytes([dgram[2], dgram[3]]),
+        total: u16::from_be_bytes([dgram[4], dgram[5]]),
+    })
+}
+
+/// Encode a frame header into the first 8 bytes of `out`.
+#[inline]
+pub fn encode_header(out: &mut [u8], request_id: u16, seq: u16, total: u16) {
+    out[0..2].copy_from_slice(&request_id.to_be_bytes());
+    out[2..4].copy_from_slice(&seq.to_be_bytes());
+    out[4..6].copy_from_slice(&total.to_be_bytes());
+    out[6] = 0;
+    out[7] = 0;
+}
+
+/// Number of datagrams a response of `len` bytes needs.
+#[inline]
+pub fn frags_for(len: usize) -> usize {
+    len.div_ceil(PAYLOAD_MAX)
+}
+
+/// Fragment `response` into framed datagrams, handing each to `emit`
+/// (built in `scratch`, reused across fragments — no allocation once
+/// `scratch` reached [`DATAGRAM_MAX`]). An empty response emits
+/// nothing (an all-quiet pipeline sends no reply). An oversized
+/// response emits one [`OVERSIZED_RESPONSE`] datagram instead and
+/// returns `false`.
+pub fn fragment(
+    request_id: u16,
+    response: &[u8],
+    scratch: &mut Vec<u8>,
+    mut emit: impl FnMut(&[u8]),
+) -> bool {
+    let total = frags_for(response.len());
+    if total == 0 {
+        return true;
+    }
+    if total > MAX_RESPONSE_FRAGS {
+        scratch.clear();
+        scratch.resize(HEADER_LEN, 0);
+        encode_header(scratch, request_id, 0, 1);
+        scratch.extend_from_slice(OVERSIZED_RESPONSE);
+        emit(scratch);
+        return false;
+    }
+    for (seq, chunk) in response.chunks(PAYLOAD_MAX).enumerate() {
+        scratch.clear();
+        scratch.resize(HEADER_LEN, 0);
+        encode_header(scratch, request_id, seq as u16, total as u16);
+        scratch.extend_from_slice(chunk);
+        emit(scratch);
+    }
+    true
+}
+
+/// Run one request datagram through the shared connection state
+/// machine, appending the raw (unframed) response bytes to `reply`.
+/// Returns the request id to frame the reply under, or `None` when the
+/// datagram is not a well-formed single-fragment request — such frames
+/// are dropped without reply (there is no id worth answering to).
+pub fn handle_datagram(conn: &mut Conn, dgram: &[u8], reply: &mut Vec<u8>) -> Option<u16> {
+    let h = parse_header(dgram)?;
+    if h.seq != 0 || h.total != 1 {
+        return None; // multi-datagram requests are not a thing
+    }
+    conn.on_bytes(&dgram[HEADER_LEN..], reply);
+    if !conn.finish_datagram() {
+        // a command ran past the end of the frame: answer what
+        // completed, flag the truncation, and start the next datagram
+        // from a clean parser
+        reply.extend_from_slice(b"CLIENT_ERROR truncated datagram\r\n");
+    }
+    Some(h.request_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::NoControl;
+    use crate::slab::policy::ChunkSizePolicy;
+    use crate::slab::PAGE_SIZE;
+    use crate::store::sharded::ShardedStore;
+    use crate::store::store::Clock;
+    use std::sync::Arc;
+
+    fn conn() -> Conn {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                PAGE_SIZE,
+                32 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        Conn::new(store, Arc::new(NoControl))
+    }
+
+    fn framed(id: u16, body: &[u8]) -> Vec<u8> {
+        let mut d = vec![0u8; HEADER_LEN];
+        encode_header(&mut d, id, 0, 1);
+        d.extend_from_slice(body);
+        d
+    }
+
+    /// Reassemble emitted fragments, asserting the frame invariants.
+    fn reassemble(frames: &[Vec<u8>], want_id: u16) -> Vec<u8> {
+        let total = frames.len();
+        let mut body = Vec::new();
+        for (i, f) in frames.iter().enumerate() {
+            assert!(f.len() <= DATAGRAM_MAX);
+            let h = parse_header(f).unwrap();
+            assert_eq!(h.request_id, want_id);
+            assert_eq!(h.seq as usize, i);
+            assert_eq!(h.total as usize, total);
+            assert_eq!(&f[6..8], &[0, 0], "reserved bytes are zero");
+            body.extend_from_slice(&f[HEADER_LEN..]);
+        }
+        body
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let mut buf = [0u8; HEADER_LEN];
+        encode_header(&mut buf, 0xBEEF, 3, 9);
+        assert_eq!(
+            parse_header(&buf),
+            Some(FrameHeader {
+                request_id: 0xBEEF,
+                seq: 3,
+                total: 9
+            })
+        );
+        // big-endian on the wire
+        assert_eq!(&buf[..2], &[0xBE, 0xEF]);
+        assert_eq!(parse_header(&buf[..7]), None, "short datagram");
+    }
+
+    #[test]
+    fn single_fragment_response() {
+        let mut scratch = Vec::new();
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        assert!(fragment(7, b"END\r\n", &mut scratch, |f| frames.push(f.to_vec())));
+        assert_eq!(frames.len(), 1);
+        assert_eq!(reassemble(&frames, 7), b"END\r\n");
+    }
+
+    #[test]
+    fn empty_response_emits_nothing() {
+        let mut scratch = Vec::new();
+        let mut n = 0;
+        assert!(fragment(1, b"", &mut scratch, |_| n += 1));
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn multi_datagram_response_reassembles() {
+        // a response spanning several fragments, with a non-aligned tail
+        let body: Vec<u8> = (0..PAYLOAD_MAX * 3 + 123)
+            .map(|i| (i % 251) as u8)
+            .collect();
+        assert_eq!(frags_for(body.len()), 4);
+        let mut scratch = Vec::new();
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        assert!(fragment(42, &body, &mut scratch, |f| frames.push(f.to_vec())));
+        assert_eq!(frames.len(), 4);
+        // every fragment but the last is full
+        for f in &frames[..3] {
+            assert_eq!(f.len(), DATAGRAM_MAX);
+        }
+        assert_eq!(reassemble(&frames, 42), body);
+    }
+
+    #[test]
+    fn exact_boundary_needs_no_extra_fragment() {
+        let body = vec![b'x'; PAYLOAD_MAX * 2];
+        let mut scratch = Vec::new();
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        assert!(fragment(5, &body, &mut scratch, |f| frames.push(f.to_vec())));
+        assert_eq!(frames.len(), 2);
+        assert_eq!(reassemble(&frames, 5), body);
+    }
+
+    #[test]
+    fn oversized_response_drops_to_server_error() {
+        let body = vec![b'x'; PAYLOAD_MAX * MAX_RESPONSE_FRAGS + 1];
+        let mut scratch = Vec::new();
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        assert!(!fragment(9, &body, &mut scratch, |f| frames.push(f.to_vec())));
+        assert_eq!(frames.len(), 1);
+        assert_eq!(reassemble(&frames, 9), OVERSIZED_RESPONSE);
+    }
+
+    #[test]
+    fn datagram_set_get_through_shared_conn() {
+        let mut c = conn();
+        let mut reply = Vec::new();
+        let id = handle_datagram(&mut c, &framed(1, b"set k 0 0 5\r\nhello\r\n"), &mut reply);
+        assert_eq!(id, Some(1));
+        assert_eq!(reply, b"STORED\r\n");
+        reply.clear();
+        let id = handle_datagram(&mut c, &framed(2, b"get k\r\nmg k v s\r\n"), &mut reply);
+        assert_eq!(id, Some(2));
+        assert_eq!(
+            String::from_utf8_lossy(&reply),
+            "VALUE k 0 5\r\nhello\r\nEND\r\nVA 5 s5\r\nhello\r\n"
+        );
+    }
+
+    #[test]
+    fn bad_frames_are_dropped() {
+        let mut c = conn();
+        let mut reply = Vec::new();
+        // too short for a header
+        assert_eq!(handle_datagram(&mut c, b"abc", &mut reply), None);
+        // multi-fragment request shapes
+        let mut d = vec![0u8; HEADER_LEN];
+        encode_header(&mut d, 1, 1, 2);
+        d.extend_from_slice(b"get k\r\n");
+        assert_eq!(handle_datagram(&mut c, &d, &mut reply), None);
+        encode_header(&mut d, 1, 0, 2);
+        assert_eq!(handle_datagram(&mut c, &d, &mut reply), None);
+        assert!(reply.is_empty());
+    }
+
+    #[test]
+    fn torn_datagram_answers_prefix_and_resets() {
+        let mut c = conn();
+        let mut reply = Vec::new();
+        // one whole command + one command missing its data block
+        let id = handle_datagram(
+            &mut c,
+            &framed(3, b"set a 0 0 1\r\nx\r\nset b 0 0 5\r\nhe"),
+            &mut reply,
+        );
+        assert_eq!(id, Some(3));
+        let t = String::from_utf8_lossy(&reply);
+        assert!(t.starts_with("STORED\r\n"), "{t}");
+        assert!(t.contains("CLIENT_ERROR truncated datagram"), "{t}");
+        // the parser is clean again: the next datagram is unaffected by
+        // the dangling data phase
+        reply.clear();
+        let id = handle_datagram(&mut c, &framed(4, b"get a\r\n"), &mut reply);
+        assert_eq!(id, Some(4));
+        assert_eq!(String::from_utf8_lossy(&reply), "VALUE a 0 1\r\nx\r\nEND\r\n");
+    }
+
+    #[test]
+    fn quit_over_udp_does_not_poison_the_conn() {
+        let mut c = conn();
+        let mut reply = Vec::new();
+        handle_datagram(&mut c, &framed(1, b"quit\r\n"), &mut reply);
+        reply.clear();
+        let id = handle_datagram(&mut c, &framed(2, b"version\r\n"), &mut reply);
+        assert_eq!(id, Some(2));
+        assert!(String::from_utf8_lossy(&reply).starts_with("VERSION"));
+    }
+}

@@ -88,6 +88,14 @@ pub struct ItemMeta {
     /// stored (memcached's ITEM_FETCHED; the meta `h` echo). Read-lock
     /// fast-path hits inside TOUCH_INTERVAL cannot set it.
     pub fetched: bool,
+    /// Marked stale by an invalidation (`md I` / losing `ms I C`):
+    /// still served, but meta gets echo `X` and hand exactly one
+    /// client the recache win (memcached's ITEM_STALE).
+    pub stale: bool,
+    /// A recache/stale `W` win has already been handed out for the
+    /// current staleness window (memcached's ITEM_TOKEN_SENT); later
+    /// readers see `Z` until a rewrite clears it.
+    pub win_sent: bool,
     /// Slab-geometry generation the chunk belongs to. During an
     /// incremental migration, items whose tag differs from the store's
     /// current generation still live in the old (draining) allocator
@@ -120,6 +128,8 @@ impl ItemMeta {
             pg_next: NIL,
             tier: Tier::Hot as u8,
             fetched: false,
+            stale: false,
+            win_sent: false,
             gen: 0,
             live: false,
         }

@@ -313,6 +313,8 @@ mod tests {
             pg_next: NIL,
             tier: 0,
             fetched: false,
+            stale: false,
+            win_sent: false,
             gen: 0,
             live: true,
         }

@@ -266,6 +266,7 @@ mod tests {
                 class: 0,
                 loc: ChunkLoc { page: 0, chunk: 0 },
             },
+            chunk_addr: 0,
             klen: 0,
             vlen: 0,
             flags: 0,
@@ -280,6 +281,8 @@ mod tests {
             pg_next: NIL,
             tier: 0,
             fetched: false,
+            stale: false,
+            win_sent: false,
             gen: 0,
             live: true,
         }

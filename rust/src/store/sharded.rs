@@ -565,14 +565,22 @@ impl ShardedStore {
         mut reset: impl FnMut(&mut C),
         mut f: impl FnMut(&mut C, ValueRef<'_>, MetaHit) -> R,
     ) -> ReadAttempt<R> {
-        if opts.touch.is_some() || (opts.wants_hit_before && !opts.no_bump) || opts.binary_key {
+        if opts.touch.is_some()
+            || (opts.wants_hit_before && !opts.no_bump)
+            || opts.binary_key
+            || opts.recache.is_some()
+        {
+            // recache (`R`) joins touch here: deciding the W/Z win
+            // mutates the item's win token, a write-path job
             return ReadAttempt::Fallback;
         }
         let hash = hash_key(key);
         let shard = &self.shards[(mix(hash) % self.shards.len() as u64) as usize];
         let lane = shard.lanes.lane();
         for _ in 0..OPTIMISTIC_RETRIES {
+            let mut saw_stale = false;
             let mut enc = |c: &mut C, m: &ItemMeta, now: u32, v: ValueRef<'_>| {
+                saw_stale = m.stale;
                 let hit = MetaHit {
                     ttl: if m.exptime == 0 {
                         -1
@@ -582,11 +590,21 @@ impl ShardedStore {
                     won: false,
                     la: now.saturating_sub(m.time),
                     fetched: m.fetched,
+                    stale: false,
+                    lost: false,
                 };
                 f(c, v, hit)
             };
             match shard.probe(key, hash, ctx, &mut reset, &mut enc) {
                 ProbeStep::Hit(r, bump) => {
+                    if saw_stale {
+                        // a stale hit must run the write-path win race;
+                        // undo the staged encode and fall back (counted:
+                        // the probe did the work and threw it away)
+                        reset(ctx);
+                        lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+                        return ReadAttempt::Fallback;
+                    }
                     lane.gets.fetch_add(1, Ordering::Relaxed);
                     lane.hits.fetch_add(1, Ordering::Relaxed);
                     if let Some(ev) = bump {
@@ -628,41 +646,111 @@ impl ShardedStore {
         self.shards[self.shard_index(key)].read().debug_item(key)
     }
 
-    /// Batched multiget: keys are grouped per shard and each shard's
-    /// lock is acquired **once** for its whole group (a read lock; plus
-    /// at most one write acquisition when some of its items need an
-    /// expiry reclaim or LRU bump). The visitor receives
-    /// `(request_index, value)` for every hit.
+    /// Batched multiget, optimistic-first: every key is first probed
+    /// **lock-free** via the seqlock protocol (the same machinery as
+    /// [`get_optimistic`], including deferred LRU bumps for
+    /// recency-stale hits), so on a warm cache a whole multiget touches
+    /// no lock at all. Only keys the probe cannot settle — torn-read
+    /// retries exhausted, expired items (lazy reclaim mutates),
+    /// values ≥ [`OPTIMISTIC_VALUE_MAX`] (scatter-write hazard) — fall
+    /// through to the locked pass, where they are grouped per shard and
+    /// each shard's read lock is acquired **once** for its whole group
+    /// (plus at most one write acquisition for expiry reclaims).
     ///
-    /// Visitation order: within one shard, *read-path* hits arrive in
-    /// ascending request order, but items that needed the write-path
-    /// retry (expired / recency-stale) arrive **after** that shard's
-    /// read-path hits; shards are visited in order of their first key.
-    /// Callers that must answer in request order (the text protocol)
-    /// therefore still need an order check/sort over the indices —
-    /// `server::conn::do_get` stages spans and sorts only when needed.
+    /// `visit(ctx, request_index, value)` runs for every hit; because a
+    /// lock-free probe can validate-fail *after* encoding,
+    /// `unvisit(ctx, request_index)` must undo the most recent `visit`
+    /// for that index (truncate the staged bytes) before the retry —
+    /// the same contract as [`get_optimistic`]'s `reset`, per key.
     ///
-    /// Batches of up to [`INLINE_BATCH`] keys are routed entirely on
-    /// the stack (no allocation); grouping is O(n·shards-touched),
-    /// which is the right trade for protocol-sized batches.
-    pub fn get_batch<F: FnMut(usize, ValueRef<'_>)>(&self, keys: &[&[u8]], mut visit: F) {
-        let mut route_buf = [0u32; INLINE_BATCH];
-        let mut route_vec: Vec<u32> = Vec::new();
-        let routes: &mut [u32] = if keys.len() <= INLINE_BATCH {
-            &mut route_buf[..keys.len()]
-        } else {
-            route_vec.resize(keys.len(), 0);
-            &mut route_vec
-        };
-        for (i, k) in keys.iter().enumerate() {
-            routes[i] = self.shard_index(k) as u32;
+    /// Visitation order: the optimistic pass visits in ascending
+    /// request order; locked-pass hits arrive **after** it, grouped by
+    /// shard. Callers that must answer in request order (the text
+    /// protocol) therefore still need an order check/sort over the
+    /// indices — `server::conn::do_get` stages spans and sorts only
+    /// when needed.
+    ///
+    /// Batches of up to [`INLINE_BATCH`] keys run entirely on the
+    /// stack (no allocation); longer batches spill to transient
+    /// allocations.
+    ///
+    /// [`get_optimistic`]: ShardedStore::get_optimistic
+    pub fn get_batch<C>(
+        &self,
+        keys: &[&[u8]],
+        ctx: &mut C,
+        mut visit: impl FnMut(&mut C, usize, ValueRef<'_>),
+        mut unvisit: impl FnMut(&mut C, usize),
+    ) {
+        // pass 1: lock-free probes, in request order ------------------
+        let mut pend_buf = [(0u32, 0u32); INLINE_BATCH];
+        let mut pend_vec: Vec<(u32, u32)> = Vec::new();
+        let mut npend = 0usize;
+        for (i, key) in keys.iter().enumerate() {
+            let hash = hash_key(key);
+            let sidx = (mix(hash) % self.shards.len() as u64) as u32;
+            let shard = &self.shards[sidx as usize];
+            let lane = shard.lanes.lane();
+            let mut settled = false;
+            for _ in 0..OPTIMISTIC_RETRIES {
+                let mut reset = |c: &mut C| unvisit(c, i);
+                let mut enc =
+                    |c: &mut C, _m: &ItemMeta, _now: u32, v: ValueRef<'_>| visit(c, i, v);
+                match shard.probe(key, hash, ctx, &mut reset, &mut enc) {
+                    ProbeStep::Hit((), bump) => {
+                        lane.gets.fetch_add(1, Ordering::Relaxed);
+                        lane.hits.fetch_add(1, Ordering::Relaxed);
+                        if let Some(ev) = bump {
+                            if shard.ring.push(ev) {
+                                lane.bump_queued.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                lane.bump_dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        settled = true;
+                    }
+                    ProbeStep::Miss => {
+                        lane.gets.fetch_add(1, Ordering::Relaxed);
+                        lane.misses.fetch_add(1, Ordering::Relaxed);
+                        settled = true;
+                    }
+                    ProbeStep::Torn => {
+                        lane.retries.fetch_add(1, Ordering::Relaxed);
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    ProbeStep::Unservable => {}
+                }
+                break;
+            }
+            if !settled {
+                lane.fallbacks.fetch_add(1, Ordering::Relaxed);
+                if npend < INLINE_BATCH {
+                    pend_buf[npend] = (i as u32, sidx);
+                } else {
+                    pend_vec.push((i as u32, sidx));
+                }
+                npend += 1;
+            }
+        }
+        if npend == 0 {
+            return;
         }
 
+        // pass 2: leftovers under the shard locks, grouped ------------
+        let pend = |t: usize| -> (usize, u32) {
+            let (i, s) = if t < INLINE_BATCH {
+                pend_buf[t]
+            } else {
+                pend_vec[t - INLINE_BATCH]
+            };
+            (i as usize, s)
+        };
         let mut retry_buf = [0u32; INLINE_BATCH];
         let mut retry_vec: Vec<u32> = Vec::new();
-        for i in 0..keys.len() {
-            let sidx = routes[i];
-            if routes[..i].contains(&sidx) {
+        for t in 0..npend {
+            let (_, sidx) = pend(t);
+            if (0..t).any(|u| pend(u).1 == sidx) {
                 continue; // handled in this shard's earlier group pass
             }
             let shard = &self.shards[sidx as usize];
@@ -672,11 +760,12 @@ impl ShardedStore {
             let mut nretry = 0usize;
             {
                 let s = shard.read();
-                for j in i..keys.len() {
-                    if routes[j] != sidx {
+                for u in t..npend {
+                    let (j, sj) = pend(u);
+                    if sj != sidx {
                         continue;
                     }
-                    match s.peek(keys[j], &mut |v| visit(j, v)) {
+                    match s.peek(keys[j], &mut |v| visit(ctx, j, v)) {
                         PeekOutcome::Hit(_) => {
                             gets += 1;
                             hits += 1;
@@ -703,13 +792,13 @@ impl ShardedStore {
             }
             if nretry > 0 {
                 let mut s = shard.write();
-                for t in 0..nretry {
-                    let j = if t < INLINE_BATCH {
-                        retry_buf[t]
+                for t2 in 0..nretry {
+                    let j = if t2 < INLINE_BATCH {
+                        retry_buf[t2]
                     } else {
-                        retry_vec[t - INLINE_BATCH]
+                        retry_vec[t2 - INLINE_BATCH]
                     } as usize;
-                    s.get_with(keys[j], |v| visit(j, v));
+                    s.get_with(keys[j], |v| visit(ctx, j, v));
                 }
                 retry_vec.clear();
             }
@@ -770,9 +859,10 @@ impl ShardedStore {
         self.write_shard(key).delete(key)
     }
 
-    /// CAS-guarded delete (see [`KvStore::delete_cas`]).
-    pub fn delete_cas(&self, key: &[u8], cas: Option<u64>) -> DeleteOutcome {
-        self.write_shard(key).delete_cas(key, cas)
+    /// CAS-guarded delete, or — with `invalidate` (meta `md ... I`) —
+    /// mark-stale (see [`KvStore::delete_cas`]).
+    pub fn delete_cas(&self, key: &[u8], cas: Option<u64>, invalidate: bool) -> DeleteOutcome {
+        self.write_shard(key).delete_cas(key, cas, invalidate)
     }
 
     pub fn incr_decr(&self, key: &[u8], delta: u64, incr: bool) -> Result<Option<u64>, StoreError> {
@@ -1288,7 +1378,16 @@ mod tests {
         }
         let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
         let mut seen: Vec<(usize, Vec<u8>)> = Vec::new();
-        s.get_batch(&refs, |idx, v| seen.push((idx, v.data.to_vec())));
+        s.get_batch(
+            &refs,
+            &mut seen,
+            |c, idx, v| c.push((idx, v.data.to_vec())),
+            |c, idx| {
+                if c.last().is_some_and(|(i, _)| *i == idx) {
+                    c.pop();
+                }
+            },
+        );
         // every stored key visited exactly once, with the right bytes
         let mut got: Vec<usize> = seen.iter().map(|(i, _)| *i).collect();
         got.sort_unstable();
@@ -1311,7 +1410,16 @@ mod tests {
         }
         let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
         let mut order: Vec<usize> = Vec::new();
-        s.get_batch(&refs, |idx, _| order.push(idx));
+        s.get_batch(
+            &refs,
+            &mut order,
+            |c, idx, _| c.push(idx),
+            |c, idx| {
+                if c.last() == Some(&idx) {
+                    c.pop();
+                }
+            },
+        );
         assert_eq!(order.len(), 32);
         // hits from one shard must arrive in ascending request order
         let shard_of: Vec<usize> = refs.iter().map(|k| s.shard_index(k)).collect();
@@ -1339,14 +1447,24 @@ mod tests {
         .unwrap();
         s.set(b"a", b"1", 0, 0).unwrap();
         s.set(b"b", b"2", 0, 100).unwrap();
-        // push both items past TOUCH_INTERVAL, and "b" past its expiry
+        // push both items past TOUCH_INTERVAL, and "b" past its expiry:
+        // "a" is served lock-free with a deferred bump; "b" is
+        // unservable optimistically and the locked retry reclaims it
         cell.store(5_000_000 + 120, Ordering::Relaxed);
         let mut seen = Vec::new();
-        s.get_batch(&[b"a".as_slice(), b"b".as_slice()], |idx, v| {
-            seen.push((idx, v.data.to_vec()))
-        });
+        s.get_batch(
+            &[b"a".as_slice(), b"b".as_slice()],
+            &mut seen,
+            |c, idx, v| c.push((idx, v.data.to_vec())),
+            |c, idx| {
+                if c.last().is_some_and(|(i, _)| *i == idx) {
+                    c.pop();
+                }
+            },
+        );
         assert_eq!(seen, vec![(0usize, b"1".to_vec())]);
         assert_eq!(s.stats().expired_reclaims, 1);
+        assert_eq!(s.stats().lru_bump_queued, 1, "stale hit deferred its bump");
     }
 
     #[test]
@@ -1578,6 +1696,60 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.seqlock_fallbacks, 0, "protocol-shape fallbacks uncounted");
         assert_eq!((st.cmd_get, st.get_hits, st.get_misses), (2, 1, 1));
+    }
+
+    #[test]
+    fn meta_get_optimistic_falls_back_on_stale() {
+        let s = store(2);
+        s.set(b"k", b"val", 0, 0).unwrap();
+        assert_eq!(s.delete_cas(b"k", None, true), DeleteOutcome::Deleted);
+        let plain = MetaGetOpts::default();
+        let mut buf: Vec<u8> = Vec::new();
+        // the probe reaches the item, sees the stale bit in the
+        // validated copy, undoes its encode and falls back (counted)
+        assert!(matches!(
+            s.meta_get_optimistic(
+                b"k",
+                &plain,
+                &mut buf,
+                |c| c.clear(),
+                |c, v, _| c.extend_from_slice(v.data)
+            ),
+            ReadAttempt::Fallback
+        ));
+        assert!(buf.is_empty(), "staged stale encode undone");
+        assert_eq!(s.stats().seqlock_fallbacks, 1);
+        // an `R` request is a protocol-shape fallback (uncounted)
+        let r = MetaGetOpts {
+            recache: Some(30),
+            ..MetaGetOpts::default()
+        };
+        assert!(matches!(
+            s.meta_get_optimistic(b"k", &r, &mut buf, |c| c.clear(), |_, _: ValueRef<'_>, _| ()),
+            ReadAttempt::Fallback
+        ));
+        assert_eq!(s.stats().seqlock_fallbacks, 1, "R gate is uncounted");
+        // the locked path then runs the win race over the stale value
+        let h = s.meta_get(b"k", &plain, |_, h| h).unwrap().unwrap();
+        assert!(h.stale && h.won && !h.lost);
+        let h = s.meta_get(b"k", &plain, |_, h| h).unwrap().unwrap();
+        assert!(h.stale && !h.won && h.lost);
+    }
+
+    #[test]
+    fn get_batch_serves_fresh_keys_lock_free() {
+        let s = store(4);
+        for i in 0..20u32 {
+            s.set(format!("lf-{i:02}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        let keys: Vec<String> = (0..24).map(|i| format!("lf-{i:02}")).collect();
+        let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
+        let mut n = 0usize;
+        s.get_batch(&refs, &mut n, |c, _, _| *c += 1, |c, _| *c -= 1);
+        assert_eq!(n, 20);
+        let st = s.stats();
+        assert_eq!((st.get_hits, st.get_misses), (20, 4));
+        assert_eq!(st.seqlock_fallbacks, 0, "fresh batch never takes a lock");
     }
 
     #[test]

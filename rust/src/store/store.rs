@@ -132,6 +132,11 @@ pub struct MetaSetOpts {
     /// The key arrived base64-encoded (meta `b`): exempt from the
     /// text-protocol character rules, length bound still applies.
     pub binary_key: bool,
+    /// Meta `I` on `ms` with `C`: a CAS-mismatched store marks the
+    /// surviving item **stale** (and re-arms its recache win) instead of
+    /// leaving it untouched — the writer knows the data it lost to is
+    /// newer than what the cache holds.
+    pub invalidate: bool,
 }
 
 impl MetaSetOpts {
@@ -144,6 +149,7 @@ impl MetaSetOpts {
             cas_compare: None,
             cas_set: None,
             binary_key: false,
+            invalidate: false,
         }
     }
 }
@@ -238,6 +244,12 @@ pub struct MetaGetOpts {
     /// take the write path so the fetched bit is both read and set
     /// accurately.
     pub wants_hit_before: bool,
+    /// Meta `R<ttl>`: when the hit's remaining TTL has fallen below
+    /// this threshold, hand exactly one client the recache win (`W`
+    /// echo) so it refreshes the item before it expires; losers see
+    /// `Z`. Stale items (see [`MetaSetOpts::invalidate`]) always run
+    /// the same win race regardless of TTL.
+    pub recache: Option<u32>,
 }
 
 /// Per-hit metadata the meta read path hands its visitor alongside the
@@ -256,6 +268,13 @@ pub struct MetaHit {
     /// The item had been fetched before this request (meta `h` echo;
     /// memcached's ITEM_FETCHED).
     pub fetched: bool,
+    /// The item is stale (invalidated but still resident): the value is
+    /// served with the `X` echo so the client knows to treat it as a
+    /// hint, not truth.
+    pub stale: bool,
+    /// The recache/stale win was already claimed by an earlier request
+    /// (`Z` echo): serve the value but do not recache.
+    pub lost: bool,
 }
 
 /// Snapshot of one item's bookkeeping — the meta `me` debug command
@@ -776,6 +795,8 @@ impl KvStore {
             pg_next: NIL,
             tier: 0,
             fetched: false,
+            stale: false,
+            win_sent: false,
             gen: self.gen,
             live: true,
         });
@@ -893,6 +914,10 @@ impl KvStore {
         // a rewrite stores a new value: the hit-before bit starts over
         // (memcached parity — a store clears ITEM_FETCHED)
         m.fetched = false;
+        // ... and a rewrite recaches: staleness and the win token are
+        // spent the moment fresh bytes land
+        m.stale = false;
+        m.win_sent = false;
         if let Some(obs) = &self.observer {
             obs.observe(new_total);
         }
@@ -965,6 +990,18 @@ impl KvStore {
                 }
                 Some(id) if self.arena.get(id).cas != c => {
                     self.stats.cas_badval += 1;
+                    if opts.invalidate {
+                        // `ms ... C I`: the losing writer knows the
+                        // resident data is newer than its own view, so
+                        // mark it stale and re-arm the recache win.
+                        // Stale is reader-visible (the optimistic path
+                        // copies it), so bump the stripe around it.
+                        let seq = self.seq.clone();
+                        let _g = seq.guard(hash);
+                        let m = self.arena.get_mut(id);
+                        m.stale = true;
+                        m.win_sent = false;
+                    }
                     return Ok(SetOutcome::Exists);
                 }
                 Some(_) => self.stats.cas_hits += 1,
@@ -1173,12 +1210,25 @@ impl KvStore {
             PeekOutcome::NeedsWrite => PeekOutcome::NeedsWrite,
             PeekOutcome::Hit(id) => {
                 let m = self.arena.get(id);
+                if m.stale {
+                    // the stale win race mutates win_sent
+                    return PeekOutcome::NeedsWrite;
+                }
+                let ttl = self.ttl_of(m);
+                if let Some(r) = opts.recache {
+                    if ttl >= 0 && ttl < r as i64 {
+                        // ditto for the early-recache win race
+                        return PeekOutcome::NeedsWrite;
+                    }
+                }
                 let chunk = self.item_chunk(m);
                 let hit = MetaHit {
-                    ttl: self.ttl_of(m),
+                    ttl,
                     won: false,
                     la: self.clock.now().saturating_sub(m.time),
                     fetched: m.fetched,
+                    stale: false,
+                    lost: false,
                 };
                 PeekOutcome::Hit(f(
                     ValueRef {
@@ -1232,12 +1282,36 @@ impl KvStore {
                 self.arena.get_mut(id).exptime = exp;
                 self.stats.touch_hits += 1;
             }
+            let (stale, ttl) = {
+                let m = self.arena.get(id);
+                (m.stale, self.ttl_of(m))
+            };
+            // the stale/early-recache win race: the first reader to
+            // arrive after an invalidation (or once the TTL sinks under
+            // the `R` threshold) wins the right to recache (`W`); every
+            // later reader loses (`Z`) until a rewrite clears the token
+            let recache_due = match opts.recache {
+                Some(r) => ttl >= 0 && ttl < r as i64,
+                None => false,
+            };
+            let (mut won, mut lost) = (false, false);
+            if stale || recache_due {
+                let m = self.arena.get_mut(id);
+                if m.win_sent {
+                    lost = true;
+                } else {
+                    m.win_sent = true;
+                    won = true;
+                }
+            }
             let m = self.arena.get(id);
             let hit = MetaHit {
-                ttl: self.ttl_of(m),
-                won: false,
+                ttl,
+                won,
                 la,
                 fetched: fetched_before,
+                stale,
+                lost,
             };
             let chunk = self.alloc.chunk_gen(old, m.handle);
             return Ok(Some(f(
@@ -1273,6 +1347,8 @@ impl KvStore {
             won: true,
             la: 0,
             fetched: false,
+            stale: false,
+            lost: false,
         };
         let chunk = self.alloc.chunk_gen(false, m.handle);
         Ok(Some(f(
@@ -1286,8 +1362,12 @@ impl KvStore {
     }
 
     /// CAS-guarded delete — classic `delete` (no guard) and meta `md`
-    /// (`C` flag) share this primitive.
-    pub fn delete_cas(&mut self, key: &[u8], cas: Option<u64>) -> DeleteOutcome {
+    /// (`C` flag) share this primitive. With `invalidate` (meta
+    /// `md ... I`) the item is **marked stale** instead of removed: it
+    /// keeps serving (echoing `X`), its CAS is bumped so in-flight
+    /// CAS stores lose, and the recache win token is re-armed so
+    /// exactly one later reader is told to refresh it.
+    pub fn delete_cas(&mut self, key: &[u8], cas: Option<u64>, invalidate: bool) -> DeleteOutcome {
         let hash = hash_key(key);
         match self.find_live(key, hash) {
             Some(id) => {
@@ -1297,7 +1377,19 @@ impl KvStore {
                         return DeleteOutcome::Exists;
                     }
                 }
-                self.unlink_and_free(id, hash);
+                if invalidate {
+                    // stale and cas are reader-visible: stripe-guard
+                    // the combined mutation like any other write
+                    let new_cas = self.next_cas();
+                    let seq = self.seq.clone();
+                    let _g = seq.guard(hash);
+                    let m = self.arena.get_mut(id);
+                    m.stale = true;
+                    m.win_sent = false;
+                    m.cas = new_cas;
+                } else {
+                    self.unlink_and_free(id, hash);
+                }
                 self.stats.delete_hits += 1;
                 DeleteOutcome::Deleted
             }
@@ -1310,7 +1402,7 @@ impl KvStore {
 
     /// `delete`. Returns true when the key existed.
     pub fn delete(&mut self, key: &[u8]) -> bool {
-        matches!(self.delete_cas(key, None), DeleteOutcome::Deleted)
+        matches!(self.delete_cas(key, None, false), DeleteOutcome::Deleted)
     }
 
     /// The unified arithmetic primitive: CAS-guarded, optionally
@@ -2094,10 +2186,87 @@ mod tests {
         let mut s = store(8 << 20);
         s.set(b"k", b"v", 0, 0).unwrap();
         let cas = s.get(b"k").unwrap().cas;
-        assert_eq!(s.delete_cas(b"k", Some(cas + 1)), DeleteOutcome::Exists);
+        assert_eq!(s.delete_cas(b"k", Some(cas + 1), false), DeleteOutcome::Exists);
         assert!(s.get(b"k").is_some(), "mismatch must not delete");
-        assert_eq!(s.delete_cas(b"k", Some(cas)), DeleteOutcome::Deleted);
-        assert_eq!(s.delete_cas(b"k", None), DeleteOutcome::NotFound);
+        assert_eq!(s.delete_cas(b"k", Some(cas), false), DeleteOutcome::Deleted);
+        assert_eq!(s.delete_cas(b"k", None, false), DeleteOutcome::NotFound);
+    }
+
+    #[test]
+    fn invalidate_marks_stale_and_runs_the_win_race() {
+        let mut s = store(8 << 20);
+        s.set(b"k", b"v", 0, 0).unwrap();
+        let cas = s.get(b"k").unwrap().cas;
+        // md I: the item survives, stale, with a bumped CAS
+        assert_eq!(s.delete_cas(b"k", None, true), DeleteOutcome::Deleted);
+        let plain = MetaGetOpts::default();
+        let h1 = s.meta_get(b"k", &plain, |v, h| {
+            assert_eq!(v.data, b"v", "stale item still serves its bytes");
+            assert!(v.cas > cas, "invalidation bumps the CAS");
+            h
+        });
+        let h1 = h1.unwrap().unwrap();
+        assert!(h1.stale && h1.won && !h1.lost, "first reader wins recache");
+        // second reader: still stale, but the win is spent
+        let h2 = s.meta_get(b"k", &plain, |_, h| h).unwrap().unwrap();
+        assert!(h2.stale && !h2.won && h2.lost);
+        // a CAS store against the pre-invalidation token loses — and
+        // with I it re-arms the win instead of silently failing
+        let lose = MetaSetOpts {
+            cas_compare: Some(cas),
+            invalidate: true,
+            ..MetaSetOpts::set(0, 0)
+        };
+        assert_eq!(s.meta_set(b"k", b"old", &lose).unwrap(), SetOutcome::Exists);
+        let h3 = s.meta_get(b"k", &plain, |_, h| h).unwrap().unwrap();
+        assert!(h3.stale && h3.won, "losing ms I re-armed the win");
+        // a rewrite clears staleness and the token
+        s.set(b"k", b"fresh", 0, 0).unwrap();
+        let h4 = s.meta_get(b"k", &plain, |v, h| {
+            assert_eq!(v.data, b"fresh");
+            h
+        });
+        let h4 = h4.unwrap().unwrap();
+        assert!(!h4.stale && !h4.won && !h4.lost);
+    }
+
+    #[test]
+    fn recache_threshold_hands_out_one_win() {
+        let (clock, cell) = Clock::manual(5_000_000);
+        let mut s = KvStore::new(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            8 << 20,
+            true,
+            clock,
+        )
+        .unwrap();
+        s.set(b"k", b"v", 0, 100).unwrap();
+        let r30 = MetaGetOpts {
+            recache: Some(30),
+            ..MetaGetOpts::default()
+        };
+        // plenty of TTL left: no win race at all
+        let h = s.meta_get(b"k", &r30, |_, h| h).unwrap().unwrap();
+        assert!(!h.won && !h.lost && !h.stale);
+        // TTL sinks under the threshold: first reader wins, second loses
+        cell.store(5_000_000 + 80, Ordering::Relaxed);
+        let h = s.meta_get(b"k", &r30, |_, h| h).unwrap().unwrap();
+        assert!(h.won && !h.lost && !h.stale);
+        assert_eq!(h.ttl, 20);
+        let h = s.meta_get(b"k", &r30, |_, h| h).unwrap().unwrap();
+        assert!(!h.won && h.lost);
+        // readers without R are untouched by the race
+        let h = s
+            .meta_get(b"k", &MetaGetOpts::default(), |_, h| h)
+            .unwrap()
+            .unwrap();
+        assert!(!h.won && !h.lost);
+        // a rewrite re-arms the threshold race
+        s.set(b"k", b"v2", 0, 100).unwrap();
+        cell.store(5_000_000 + 80 + 90, Ordering::Relaxed);
+        let h = s.meta_get(b"k", &r30, |_, h| h).unwrap().unwrap();
+        assert!(h.won, "rewrite re-armed the recache win");
     }
 
     #[test]

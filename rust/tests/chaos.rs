@@ -337,14 +337,10 @@ fn autotune_pass_panic_is_supervised_and_next_pass_runs() {
     st.check_integrity().unwrap();
 }
 
-#[test]
-fn accept_emfile_relief_keeps_accepting() {
-    let _g = serial();
-    let st = store(16 << 20, PAGE_SIZE, 2);
-    let h = server(&st);
-    // every 4th accept pretends the process is out of fds; the relief
-    // path (reserve fd + reap) may sacrifice a connection, so clients
-    // retry — what must hold is that service recovers every time
+/// Every 4th accept pretends the process is out of fds; the relief
+/// path (reserve fd + reap) may sacrifice a connection, so clients
+/// retry — what must hold is that service recovers every time.
+fn emfile_storm(h: &ServerHandle, st: &Arc<ShardedStore>) {
     let _fp = failpoint::armed("accept.emfile", "1in4").unwrap();
     let mut ok = 0u32;
     for i in 0..30 {
@@ -371,6 +367,44 @@ fn accept_emfile_relief_keeps_accepting() {
     let mut c = Client::connect(h.addr()).unwrap();
     c.set("after", b"ok", 0, 0).unwrap();
     st.check_integrity().unwrap();
+}
+
+#[test]
+fn accept_emfile_relief_keeps_accepting() {
+    let _g = serial();
+    let st = store(16 << 20, PAGE_SIZE, 2);
+    let h = server(&st);
+    emfile_storm(&h, &st);
+    h.shutdown();
+}
+
+/// The per-reactor relief path: each SO_REUSEPORT reactor owns its own
+/// reserve fd and reaps its own idle slab when the fd limit bites.
+#[cfg(target_os = "linux")]
+#[test]
+fn reuseport_reactor_emfile_relief_keeps_accepting() {
+    let _g = serial();
+    let st = store(16 << 20, PAGE_SIZE, 2);
+    let h = Server::new(st.clone())
+        .reactor_threads(2)
+        .start("127.0.0.1:0")
+        .unwrap();
+    assert!(h.reuseport(), "event mode must default to reuseport");
+    emfile_storm(&h, &st);
+    h.shutdown();
+}
+
+/// The single-listener fallback (accept thread) keeps its own relief.
+#[test]
+fn fallback_accept_thread_emfile_relief_keeps_accepting() {
+    let _g = serial();
+    let st = store(16 << 20, PAGE_SIZE, 2);
+    let h = Server::new(st.clone())
+        .reuseport(false)
+        .start("127.0.0.1:0")
+        .unwrap();
+    assert!(!h.reuseport());
+    emfile_storm(&h, &st);
     h.shutdown();
 }
 

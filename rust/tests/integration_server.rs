@@ -595,6 +595,254 @@ fn meta_cas_delete_and_arith_over_tcp() {
     handle.shutdown();
 }
 
+/// Minimal memcached-UDP client: one request datagram per call,
+/// response fragments reassembled by sequence number (they may arrive
+/// out of order).
+#[cfg(target_os = "linux")]
+struct UdpClient {
+    sock: std::net::UdpSocket,
+    next_id: u16,
+}
+
+#[cfg(target_os = "linux")]
+impl UdpClient {
+    fn connect(addr: std::net::SocketAddr) -> UdpClient {
+        let sock = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+        sock.connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        UdpClient { sock, next_id: 1 }
+    }
+
+    fn exchange(&mut self, body: &[u8]) -> Vec<u8> {
+        use slabforge::server::udp::{encode_header, parse_header, HEADER_LEN};
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        let mut d = vec![0u8; HEADER_LEN];
+        encode_header(&mut d, id, 0, 1);
+        d.extend_from_slice(body);
+        self.sock.send(&d).unwrap();
+        let mut frags: Vec<Option<Vec<u8>>> = Vec::new();
+        let mut got = 0usize;
+        let mut buf = [0u8; 2048];
+        loop {
+            let n = self.sock.recv(&mut buf).unwrap();
+            let h = parse_header(&buf[..n]).unwrap();
+            if h.request_id != id {
+                continue; // stray fragment from an earlier exchange
+            }
+            if frags.is_empty() {
+                frags.resize(h.total as usize, None);
+            }
+            assert_eq!(h.total as usize, frags.len(), "total changed mid-response");
+            if frags[h.seq as usize]
+                .replace(buf[HEADER_LEN..n].to_vec())
+                .is_none()
+            {
+                got += 1;
+            }
+            if got == frags.len() {
+                return frags.into_iter().flatten().flatten().collect();
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn udp_capable_server() -> (ServerHandle, Arc<ShardedStore>) {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let handle = Server::new(store.clone())
+        .udp(true)
+        .start("127.0.0.1:0")
+        .unwrap();
+    (handle, store)
+}
+
+#[cfg(target_os = "linux")]
+fn seed_value(addr: std::net::SocketAddr, key: &str, val: &[u8]) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut req = format!("set {key} 0 0 {}\r\n", val.len()).into_bytes();
+    req.extend_from_slice(val);
+    req.extend_from_slice(b"\r\n");
+    s.write_all(&req).unwrap();
+    let mut buf = [0u8; 64];
+    let n = s.read(&mut buf).unwrap();
+    assert!(String::from_utf8_lossy(&buf[..n]).starts_with("STORED"));
+}
+
+/// Tentpole acceptance: the UDP front-end runs the *same* Request IR —
+/// an identical command script (classic + meta, including a
+/// multi-fragment value and an invalidation) must produce byte-identical
+/// transcripts over both transports.
+#[cfg(target_os = "linux")]
+#[test]
+fn udp_and_tcp_answer_the_same_script_identically() {
+    let big: Vec<u8> = (0..4000).map(|i| b'a' + (i % 26) as u8).collect();
+    let steps: Vec<&[u8]> = vec![
+        b"set a 0 0 5\r\nhello\r\n",
+        b"get a\r\nmg a v f s\r\n",
+        b"mg nosuch v k Onope\r\n",
+        b"md a I\r\n",
+        b"mg a v\r\n", // stale hit: first reader wins the recache (W X)
+        b"get big\r\n", // 3 UDP fragments
+        b"delete big\r\n",
+        b"version\r\n",
+    ];
+
+    let tcp_bytes = {
+        use std::io::{Read, Write};
+        let (handle, _st) = udp_capable_server();
+        seed_value(handle.addr(), "big", &big);
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        let mut script: Vec<u8> = steps.concat();
+        script.extend_from_slice(b"quit\r\n");
+        s.write_all(&script).unwrap();
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        handle.shutdown();
+        got
+    };
+
+    let udp_bytes = {
+        let (handle, _st) = udp_capable_server();
+        seed_value(handle.addr(), "big", &big);
+        let mut c = UdpClient::connect(handle.addr());
+        let mut got = Vec::new();
+        for step in &steps {
+            got.extend_from_slice(&c.exchange(step));
+        }
+        let rx = handle.metrics.udp_datagrams_rx.load(Ordering::Relaxed);
+        let tx = handle.metrics.udp_datagrams_tx.load(Ordering::Relaxed);
+        assert!(rx >= steps.len() as u64, "rx {rx}");
+        assert!(tx > steps.len() as u64, "the big get must fragment: tx {tx}");
+        handle.shutdown();
+        got
+    };
+
+    assert!(!tcp_bytes.is_empty());
+    assert_eq!(
+        tcp_bytes,
+        udp_bytes,
+        "transports diverged:\nTCP: {}\nUDP: {}",
+        String::from_utf8_lossy(&tcp_bytes),
+        String::from_utf8_lossy(&udp_bytes)
+    );
+}
+
+/// A response spanning more than [`MAX_RESPONSE_FRAGS`] datagrams is
+/// replaced by a single diagnosable `SERVER_ERROR` frame, and the
+/// socket keeps serving.
+#[cfg(target_os = "linux")]
+#[test]
+fn udp_oversized_response_is_replaced_by_server_error() {
+    let (handle, _st) = udp_capable_server();
+    seed_value(handle.addr(), "huge", &vec![b'h'; 100_000]);
+    let mut c = UdpClient::connect(handle.addr());
+    let reply = c.exchange(b"get huge\r\n");
+    assert_eq!(
+        String::from_utf8_lossy(&reply),
+        "SERVER_ERROR response too large for udp\r\n"
+    );
+    assert_eq!(
+        handle.metrics.udp_oversized_drops.load(Ordering::Relaxed),
+        1
+    );
+    let reply = c.exchange(b"version\r\n");
+    assert!(String::from_utf8_lossy(&reply).starts_with("VERSION"));
+    handle.shutdown();
+}
+
+/// Tentpole acceptance: with per-reactor `SO_REUSEPORT` listeners the
+/// *kernel* distributes accepts — across 64 flows more than one reactor
+/// must end up owning sockets, with no accept thread in the path.
+#[test]
+fn reuseport_distributes_accepts_across_reactors() {
+    use std::io::{Read, Write};
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let handle = Server::new(store)
+        .reactor_threads(4)
+        .start("127.0.0.1:0")
+        .unwrap();
+    if !handle.reuseport() {
+        // kernel without SO_REUSEPORT (or threaded fallback): the
+        // single-listener path is covered elsewhere
+        handle.shutdown();
+        return;
+    }
+    let mut socks = Vec::new();
+    for i in 0..64 {
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(format!("set rp{i:02} 0 0 1\r\nx\r\n").as_bytes())
+            .unwrap();
+        let mut buf = [0u8; 32];
+        let n = s.read(&mut buf).unwrap();
+        assert!(
+            String::from_utf8_lossy(&buf[..n]).starts_with("STORED"),
+            "socket {i}"
+        );
+        socks.push(s);
+    }
+    let counts = handle.accept_counts();
+    assert_eq!(counts.len(), 4);
+    assert_eq!(counts.iter().sum::<u64>(), 64, "{counts:?}");
+    let active = counts.iter().filter(|&&c| c > 0).count();
+    assert!(active >= 2, "kernel never spread accepts: {counts:?}");
+    drop(socks);
+    handle.shutdown();
+}
+
+/// Meta invalidation (`md I`) and the recache win race (`mg R<ttl>`)
+/// over the wire: exactly one reader gets `W`, later readers get `Z`,
+/// stale reads carry `X`, and a rewrite re-arms everything.
+#[test]
+fn meta_invalidate_and_recache_over_tcp() {
+    let (handle, _) = full_server(u64::MAX);
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.ms("rk", b"v", &["T50"]).unwrap();
+    // remaining ttl (~50s) is under the R100 threshold: the first
+    // reader wins the recache race, the second is told to wait
+    let r = c.mg("rk", &["v", "R100"]).unwrap();
+    assert!(r.flags.iter().any(|f| f == "W"), "{r:?}");
+    assert!(!r.flags.iter().any(|f| f == "X"), "not stale, just cold: {r:?}");
+    let r = c.mg("rk", &["v", "R100"]).unwrap();
+    assert!(r.flags.iter().any(|f| f == "Z"), "{r:?}");
+    // a threshold below the remaining ttl marks nothing
+    let r = c.mg("rk", &["v", "R10"]).unwrap();
+    assert!(!r.flags.iter().any(|f| f == "W" || f == "Z"), "{r:?}");
+    // rewrite re-arms; `md I` marks stale instead of deleting
+    c.ms("rk", b"v2", &[]).unwrap();
+    let r = c.md("rk", &["I"]).unwrap();
+    assert_eq!(r.code, "HD");
+    let r = c.mg("rk", &["v"]).unwrap();
+    assert_eq!(r.data.as_deref(), Some(&b"v2"[..]), "stale data still served");
+    assert!(r.flags.iter().any(|f| f == "W"), "{r:?}");
+    assert!(r.flags.iter().any(|f| f == "X"), "{r:?}");
+    let r = c.mg("rk", &["v"]).unwrap();
+    assert!(r.flags.iter().any(|f| f == "Z"), "{r:?}");
+    assert!(r.flags.iter().any(|f| f == "X"), "{r:?}");
+    handle.shutdown();
+}
+
 #[test]
 fn concurrent_traffic_during_optimization() {
     let (handle, _, tuner) = full_server_with_tuner(500);

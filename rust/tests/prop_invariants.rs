@@ -528,3 +528,53 @@ fn prop_rng_streams_independent() {
         assert_ne!(a, b, "adjacent seeds must diverge");
     });
 }
+
+// ------------------------------------------------------------- udp frames
+
+#[test]
+fn prop_torn_datagrams_never_poison_the_conn() {
+    use slabforge::server::udp::{encode_header, handle_datagram, HEADER_LEN};
+    use slabforge::server::{Conn, NoControl};
+    use slabforge::store::sharded::ShardedStore;
+    use std::sync::Arc;
+
+    check("torn udp datagrams", 20, |rng| {
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                1 << 20,
+                16 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let mut conn = Conn::new(store, Arc::new(NoControl));
+        let mut reply = Vec::new();
+        for _ in 0..200 {
+            // random lengths, often shorter than the 8-byte header;
+            // random bytes, so the header fields and any command text
+            // are garbage too — must never panic and never wedge
+            let len = rng.gen_range(64) as usize;
+            let mut d = vec![0u8; len];
+            for b in d.iter_mut() {
+                *b = rng.gen_range(256) as u8;
+            }
+            reply.clear();
+            let _ = handle_datagram(&mut conn, &d, &mut reply);
+        }
+        // the same conn, same parser, still answers a clean pipeline
+        let mut d = vec![0u8; HEADER_LEN];
+        encode_header(&mut d, 7, 0, 1);
+        d.extend_from_slice(b"set pk 0 0 2\r\nok\r\nget pk\r\nversion\r\n");
+        reply.clear();
+        let id = handle_datagram(&mut conn, &d, &mut reply);
+        assert_eq!(id, Some(7));
+        let text = String::from_utf8_lossy(&reply);
+        assert!(
+            text.starts_with("STORED\r\nVALUE pk 0 2\r\nok\r\nEND\r\nVERSION"),
+            "conn poisoned by garbage datagrams: {text}"
+        );
+    });
+}
