@@ -105,4 +105,16 @@ grep -q "udp_get_kops" "$root/BENCH_server.json" || {
     exit 1
 }
 
+echo "==> verify tenant_agg_hit_rate landed in BENCH_server.json"
+grep -q "tenant_agg_hit_rate" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the per-tenant learner hit-rate dim" >&2
+    exit 1
+}
+
+echo "==> verify tenant_hole_bytes landed in BENCH_server.json"
+grep -q "tenant_hole_bytes" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the per-tenant learner hole-bytes dim" >&2
+    exit 1
+}
+
 echo "CI OK"

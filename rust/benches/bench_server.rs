@@ -843,6 +843,149 @@ fn main() {
         udp_handle.shutdown();
     }
 
+    // ---- multi-tenant isolation: global vs per-tenant learner --------------
+    // Two tenants with sharply diverged size distributions share one
+    // memory-constrained server: tenant `a:` rewrites a small hot set of
+    // ~200 B items, tenant `b:` churns ~4 KiB items with mostly-recent
+    // reads. The phases run the identical end-to-end workload (full
+    // protocol path, so attribution happens in the connection layer);
+    // the only difference is whether tenants are defined — defined
+    // tenants get per-tenant histograms, the divergence-gated merged
+    // geometry, and need-based arbitration through the maintainer.
+    // `tenant_agg_hit_rate` / `tenant_hole_bytes` vs the baseline
+    // `global_*` dims are the headline comparison.
+    {
+        fn tenant_phase(n_rounds: usize, per_tenant: bool) -> (f64, u64, std::time::Duration, usize) {
+            let store = Arc::new(
+                ShardedStore::with(
+                    ChunkSizePolicy::default(),
+                    64 << 10, // small pages: every engaged class has some
+                    4 << 20,  // 4 MiB: tenant B's churn oversubscribes it
+                    true,
+                    2,
+                    Clock::System,
+                )
+                .unwrap(),
+            );
+            let collector = Arc::new(SizeCollector::default());
+            store.set_observer(collector.clone());
+            if per_tenant {
+                let reg = store.tenants();
+                reg.define("small", b"a:", None).unwrap();
+                reg.define("large", b"b:", None).unwrap();
+            }
+            let tuner = AutoTuner::new(
+                store.clone(),
+                collector,
+                OptimizerSettings {
+                    enabled: true,
+                    min_samples: 500,
+                    min_improvement: 0.0,
+                    algorithm: Algorithm::SteepestDescent,
+                    backend: Backend::Rust,
+                    ..Default::default()
+                },
+                64 << 10,
+            )
+            .unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let tuner_thread = tuner.spawn(stop.clone());
+            let maint_thread = spawn_maintainer(
+                store.clone(),
+                MaintainerConfig {
+                    // the tuner thread is the designated migration driver
+                    pump_migration: false,
+                    ..MaintainerConfig::default()
+                },
+                stop.clone(),
+            );
+            let handle = Server::with_control(store.clone(), tuner.clone())
+                .start("127.0.0.1:0")
+                .unwrap();
+            let mut c = Client::connect(handle.addr()).unwrap();
+
+            let mut rng = Pcg64::new(71);
+            let mut churn = 0u64;
+            let (mut gets, mut hits) = (0usize, 0usize);
+            let t0 = Instant::now();
+            for i in 0..n_rounds {
+                if i == n_rounds / 2 {
+                    // both phases learn mid-stream; the per-tenant phase's
+                    // pass sees diverged tenant histograms and may adopt
+                    // the merged geometry
+                    let msg = c.slabs_optimize().unwrap();
+                    assert!(msg.starts_with("OPTIMIZING"), "{msg}");
+                }
+                let measuring = i >= n_rounds / 2;
+                // tenant A: small hot set, continuously rewritten
+                let t = (rng.lognormal(210.0, 0.08).round() as usize).clamp(120, 400);
+                let ka = format!("a:h{:03}", rng.gen_range(256));
+                let _ = c.set(&ka, &vec![b'a'; value_len_for_total(t, true).unwrap()], 0, 0);
+                // tenant B: large churning values
+                let t = (rng.lognormal(4200.0, 0.12).round() as usize).clamp(2000, 8000);
+                churn += 1;
+                let kb = format!("b:c{churn:07}");
+                let _ = c.set(&kb, &vec![b'b'; value_len_for_total(t, true).unwrap()], 0, 0);
+                // reads: A hammers its hot set, B reads recent keys
+                for _ in 0..3 {
+                    let k = format!("a:h{:03}", rng.gen_range(256));
+                    let hit = c.get(&k).unwrap().is_some();
+                    if measuring {
+                        gets += 1;
+                        hits += usize::from(hit);
+                    }
+                }
+                let back = rng.gen_range(64).min(churn - 1);
+                let k = format!("b:c{:07}", churn - back);
+                let hit = c.get(&k).unwrap().is_some();
+                if measuring {
+                    gets += 1;
+                    hits += usize::from(hit);
+                }
+            }
+            let elapsed = t0.elapsed();
+            // settle: the pass must run and its drain must finish
+            // before holes reflect the learned geometry
+            let deadline = Instant::now() + std::time::Duration::from_secs(30);
+            loop {
+                let st = c.stats(Some("slabs")).unwrap();
+                if st["optimize_pending"] == "0"
+                    && st["optimize_runs"] != "0"
+                    && st["migration_active"] == "0"
+                {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "tenant-phase optimize never settled");
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            let holes = store.slab_stats().hole_bytes;
+            stop.store(true, Ordering::SeqCst);
+            tuner_thread.join().unwrap();
+            maint_thread.join().unwrap();
+            handle.shutdown();
+            (hits as f64 / gets.max(1) as f64, holes, elapsed, gets)
+        }
+
+        let n_rounds = if smoke() { 1_500 } else { 6_000 };
+        let (g_rate, g_holes, g_elapsed, g_ops) = tenant_phase(n_rounds, false);
+        let (t_rate, t_holes, t_elapsed, t_ops) = tenant_phase(n_rounds, true);
+        println!(
+            "tenant isolation: global learner hit rate {:.3} / {} hole bytes, \
+             per-tenant hit rate {:.3} / {} hole bytes",
+            g_rate, g_holes, t_rate, t_holes
+        );
+        rows.push(
+            Summary::from_samples("tenant mix global learner", vec![g_elapsed], g_ops as f64)
+                .with_dim("global_agg_hit_rate", g_rate)
+                .with_dim("global_hole_bytes", g_holes as f64),
+        );
+        rows.push(
+            Summary::from_samples("tenant mix per-tenant learner", vec![t_elapsed], t_ops as f64)
+                .with_dim("tenant_agg_hit_rate", t_rate)
+                .with_dim("tenant_hole_bytes", t_holes as f64),
+        );
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

@@ -427,6 +427,29 @@ impl Client {
         self.simple_command("slabs optimize\r\n")
     }
 
+    /// Extension: `tenants [list|define ...|token ...|quota ...]` —
+    /// multi-tenant registry control. Returns every response line:
+    /// `list` yields `TENANT ...` rows plus the closing `END`, the
+    /// mutating verbs yield a single `OK <id>` line.
+    pub fn tenants(&mut self, args: &str) -> Result<Vec<String>> {
+        let cmd = if args.is_empty() {
+            "tenants\r\n".to_string()
+        } else {
+            format!("tenants {args}\r\n")
+        };
+        self.writer.write_all(cmd.as_bytes())?;
+        let mut lines = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            Self::check_error(&line)?;
+            let done = line == "END" || !line.starts_with("TENANT ");
+            lines.push(line);
+            if done {
+                return Ok(lines);
+            }
+        }
+    }
+
     pub fn quit(mut self) {
         let _ = self.writer.write_all(b"quit\r\n");
     }

@@ -133,6 +133,21 @@ pub struct Settings {
     pub conn_buffer_budget: usize,
     pub policy: ChunkSizePolicy,
     pub optimizer: OptimizerSettings,
+    /// Tenants defined at startup (`--tenants name=prefix[:quota],...`
+    /// / `tenants.rules`); more can be added at runtime via the
+    /// `tenants` admin command. Empty = multi-tenancy inactive.
+    pub tenants: Vec<crate::tenant::TenantSpec>,
+    /// Maintainer passes between arbitration evaluations
+    /// (`tenants.arbitrate_every` / `--tenant-arbitrate-every`);
+    /// 0 disables arbitration.
+    pub tenant_arbitrate_every: u64,
+    /// Pairwise tenant size-histogram divergence (total-variation
+    /// distance, 0..1) above which the optimizer learns per-tenant
+    /// slab geometry (`tenants.divergence` / `--tenant-divergence`).
+    pub tenant_divergence: f64,
+    /// Per-shard item budget of one arbitration reclaim pass
+    /// (`tenants.reclaim_batch` / `--tenant-reclaim-batch`).
+    pub tenant_reclaim_batch: usize,
 }
 
 impl Default for Settings {
@@ -157,6 +172,10 @@ impl Default for Settings {
             conn_buffer_budget: 0,
             policy: ChunkSizePolicy::default(),
             optimizer: OptimizerSettings::default(),
+            tenants: Vec::new(),
+            tenant_arbitrate_every: crate::tenant::DEFAULT_ARBITRATE_EVERY,
+            tenant_divergence: crate::tenant::DEFAULT_DIVERGENCE,
+            tenant_reclaim_batch: crate::tenant::DEFAULT_RECLAIM_BATCH,
         }
     }
 }
@@ -310,6 +329,30 @@ impl Settings {
             o.seed = v.as_usize().ok_or_else(|| invalid("optimizer.seed"))? as u64;
         }
 
+        if let Some(v) = doc.get("tenants.rules") {
+            let raw = v.as_str().ok_or_else(|| invalid("tenants.rules"))?;
+            s.tenants = crate::tenant::TenantSpec::parse_list(raw)
+                .map_err(SettingsError::Invalid)?;
+        }
+        if let Some(v) = doc.get("tenants.arbitrate_every") {
+            s.tenant_arbitrate_every = v
+                .as_usize()
+                .ok_or_else(|| invalid("tenants.arbitrate_every"))?
+                as u64;
+        }
+        if let Some(v) = doc.get("tenants.divergence") {
+            s.tenant_divergence = v
+                .as_f64()
+                .filter(|d| (0.0..=1.0).contains(d))
+                .ok_or_else(|| invalid("tenants.divergence"))?;
+        }
+        if let Some(v) = doc.get("tenants.reclaim_batch") {
+            s.tenant_reclaim_batch = v
+                .as_usize()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| invalid("tenants.reclaim_batch"))?;
+        }
+
         s.validate()?;
         Ok(s)
     }
@@ -325,6 +368,15 @@ impl Settings {
         self.policy
             .materialize(self.page_size)
             .map_err(|e| SettingsError::Invalid(e.to_string()))?;
+        // dry-run the tenant specs against a throwaway registry so
+        // `ShardedStore::new` can apply them infallibly
+        crate::tenant::TenantRegistry::with_settings(
+            self.page_size,
+            &self.tenants,
+            self.tenant_divergence,
+            self.tenant_reclaim_batch,
+        )
+        .map_err(SettingsError::Invalid)?;
         Ok(())
     }
 
@@ -463,6 +515,31 @@ artifacts_dir = "artifacts"
         assert_eq!(s.threads, 2);
         assert!(Settings::from_toml("max_conns = 0\n").is_err());
         assert!(Settings::from_toml("event_loop = 3\n").is_err());
+    }
+
+    #[test]
+    fn tenant_keys_parse_with_inactive_default() {
+        let s = Settings::from_toml("").unwrap();
+        assert!(s.tenants.is_empty(), "multi-tenancy must default off");
+        assert_eq!(s.tenant_arbitrate_every, 10);
+        assert!((s.tenant_divergence - 0.25).abs() < 1e-9);
+        assert_eq!(s.tenant_reclaim_batch, 256);
+        let s = Settings::from_toml(
+            "[tenants]\nrules = \"app=app_:64,img=img_\"\narbitrate_every = 5\ndivergence = 0.4\nreclaim_batch = 128\n",
+        )
+        .unwrap();
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].name, "app");
+        assert_eq!(s.tenants[0].quota_pages, 64);
+        assert_eq!(s.tenant_arbitrate_every, 5);
+        assert_eq!(s.tenant_reclaim_batch, 128);
+        assert!(Settings::from_toml("[tenants]\nrules = \"broken\"\n").is_err());
+        assert!(Settings::from_toml("[tenants]\ndivergence = 1.5\n").is_err());
+        assert!(Settings::from_toml("[tenants]\nreclaim_batch = 0\n").is_err());
+        // a spec list that overflows the tenant id space fails validate
+        let many: Vec<String> = (0..20).map(|i| format!("t{i}=p{i}_")).collect();
+        let toml = format!("[tenants]\nrules = \"{}\"\n", many.join(","));
+        assert!(Settings::from_toml(&toml).is_err());
     }
 
     #[test]

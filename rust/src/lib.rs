@@ -28,6 +28,9 @@
 //! * [`optimizer`] — the paper's Algorithm 1 plus batched steepest
 //!   descent and an exact DP lower bound; online histogram collection
 //!   and the auto-retuning coordinator
+//! * [`tenant`] — multi-tenant layer: request attribution (key prefix /
+//!   meta `O` token), per-tenant stats + size histograms, soft quotas
+//!   and Memshare-style need-based memory arbitration
 //! * [`runtime`] — PJRT engine loading the AOT `artifacts/*.hlo.txt`
 //! * [`config`] — TOML-subset config + CLI
 //! * [`benchkit`] — measurement harness used by `rust/benches/*`
@@ -42,6 +45,7 @@ pub mod runtime;
 pub mod server;
 pub mod slab;
 pub mod store;
+pub mod tenant;
 pub mod testutil;
 pub mod util;
 pub mod workload;

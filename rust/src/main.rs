@@ -11,6 +11,9 @@
 //!                    [--idle-timeout SECS] [--migrate-batch N]
 //!                    [--maintainer true|false] [--maintainer-interval-ms N]
 //!                    [--maintainer-batch N] [--conn-buffer-budget BYTES]
+//!                    [--tenants name=prefix[:quota],...]
+//!                    [--tenant-arbitrate-every N] [--tenant-divergence F]
+//!                    [--tenant-reclaim-batch N]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -159,6 +162,33 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
     {
         s.conn_buffer_budget = n;
     }
+    if let Some(list) = args.flag("tenants") {
+        s.tenants = slabforge::tenant::TenantSpec::parse_list(list)?;
+    }
+    if let Some(n) = args
+        .flag_parse::<u64>("tenant-arbitrate-every")
+        .map_err(|e| e.to_string())?
+    {
+        s.tenant_arbitrate_every = n;
+    }
+    if let Some(f) = args
+        .flag_parse::<f64>("tenant-divergence")
+        .map_err(|e| e.to_string())?
+    {
+        if !(0.0..=1.0).contains(&f) {
+            return Err("--tenant-divergence must be within 0..=1".into());
+        }
+        s.tenant_divergence = f;
+    }
+    if let Some(n) = args
+        .flag_parse::<usize>("tenant-reclaim-batch")
+        .map_err(|e| e.to_string())?
+    {
+        if n == 0 {
+            return Err("--tenant-reclaim-batch must be at least 1".into());
+        }
+        s.tenant_reclaim_batch = n;
+    }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {
             chunk_min: 96,
@@ -236,12 +266,22 @@ fn cmd_serve(args: &Args) -> i32 {
                 // migration driver; two pumpers would double write-lock
                 // pressure on every shard during a drain
                 pump_migration: !settings.optimizer.enabled,
+                arbitrate_every: settings.tenant_arbitrate_every,
             },
             shutdown.clone(),
         ))
     } else {
         None
     };
+    if !settings.tenants.is_empty() {
+        eprintln!(
+            "tenants: {} defined (arbitrate every {} passes, divergence {}, reclaim batch {})",
+            settings.tenants.len(),
+            settings.tenant_arbitrate_every,
+            settings.tenant_divergence,
+            settings.tenant_reclaim_batch
+        );
+    }
 
     let mode = if settings.event_loop {
         slabforge::server::ServeMode::Event

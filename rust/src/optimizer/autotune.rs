@@ -4,13 +4,15 @@
 //! `-o slab_sizes`) turned into a background feature.
 
 use super::collector::SizeCollector;
-use super::engine::{optimize, OptimizeReport, OptimizerParams, RustBackend};
+use super::engine::{optimize, OptimizeReport, OptimizerParams, RustBackend, WasteBackend};
 use super::waste::WasteMap;
 use crate::config::settings::{Backend, OptimizerSettings};
 use crate::runtime::{XlaService, XlaWasteBackend};
 use crate::server::conn::{Control, OptimizeGauges};
 use crate::slab::policy::{validate_sizes, ChunkSizePolicy};
+use crate::slab::MAX_CLASSES;
 use crate::store::sharded::ShardedStore;
+use crate::tenant::histogram_divergence;
 use crate::util::histogram::SizeHistogram;
 use crate::util::{failpoint, supervisor};
 use std::path::Path;
@@ -111,6 +113,7 @@ impl AutoTuner {
         let hist = self.collector.snapshot();
         let current = self.store.chunk_sizes();
         let report = self.optimize_against(&hist, &current);
+        let report = self.per_tenant_refine(&hist, &current, report);
         let recovery = report.recovery();
         self.history
             .lock()
@@ -136,6 +139,97 @@ impl AutoTuner {
             g.applied += 1;
         }
         g.last_recovery_bp = (recovery.max(0.0) * 10_000.0) as u64;
+    }
+
+    /// Per-tenant geometry: when tenants' observed size distributions
+    /// have drifted apart (pairwise total-variation distance above the
+    /// registry's threshold), a single global optimum splits the
+    /// difference and serves nobody well. Optimize each diverged
+    /// tenant's histogram separately, merge the per-tenant optima into
+    /// one class table (union, near-duplicates pruned), and keep the
+    /// merged table only if it scores **better than the global optimum
+    /// on the global histogram** — the learner can only improve on the
+    /// baseline, never regress it.
+    fn per_tenant_refine(
+        &self,
+        global: &SizeHistogram,
+        current: &[usize],
+        report: OptimizeReport,
+    ) -> OptimizeReport {
+        let reg = self.store.tenants();
+        if !reg.active() {
+            return report;
+        }
+        // each tenant needs enough of its own samples to learn from;
+        // half the global gate keeps a 50/50 split eligible
+        let hists = reg.tenant_histograms((self.settings.min_samples / 2).max(1));
+        if hists.len() < 2 {
+            return report;
+        }
+        let mut max_div = 0.0f64;
+        for i in 0..hists.len() {
+            for j in i + 1..hists.len() {
+                max_div = max_div.max(histogram_divergence(&hists[i].1, &hists[j].1));
+            }
+        }
+        if max_div < reg.divergence_threshold() {
+            return report;
+        }
+        let mut union: Vec<u32> = Vec::new();
+        for (_, h) in &hists {
+            union.extend(self.optimize_against(h, current).new_config);
+        }
+        union.sort_unstable();
+        union.dedup();
+        // prune near-equal sizes (an item that fits the smaller of two
+        // classes 3% apart wastes almost nothing in the larger one),
+        // widening the band until the table fits MAX_CLASSES
+        let mut slack = 1.03f64;
+        let mut merged = loop {
+            let mut m: Vec<u32> = Vec::new();
+            for &s in &union {
+                if m.last().is_none_or(|&l| s as f64 > l as f64 * slack) {
+                    m.push(s);
+                }
+            }
+            if m.len() <= MAX_CLASSES {
+                break m;
+            }
+            slack *= 1.05;
+        };
+        if merged.is_empty() {
+            return report;
+        }
+        // the Explicit policy auto-appends a page-size top class when
+        // it's missing; pin it here so that append can never push the
+        // table past MAX_CLASSES
+        let page = self.page_size as u32;
+        if merged.last().is_some_and(|&l| l < page) {
+            if merged.len() < MAX_CLASSES {
+                merged.push(page);
+            } else {
+                *merged.last_mut().unwrap() = page;
+            }
+        }
+        let merged_waste = self.eval_config(global, &merged);
+        if merged_waste < report.new_waste {
+            OptimizeReport {
+                new_config: merged.clone(),
+                new_span: merged,
+                new_waste: merged_waste,
+                ..report
+            }
+        } else {
+            report
+        }
+    }
+
+    /// Score one fixed configuration against a histogram (no search).
+    fn eval_config(&self, hist: &SizeHistogram, config: &[u32]) -> u64 {
+        match &self.engine {
+            Some(engine) => XlaWasteBackend::new(engine, hist).eval_one(config),
+            None => RustBackend::new(WasteMap::from_histogram(hist)).eval_one(config),
+        }
     }
 
     fn optimize_against(&self, hist: &SizeHistogram, current: &[usize]) -> OptimizeReport {
@@ -271,6 +365,7 @@ impl Control for AutoTuner {
         let mut g = *self.opt_gauges.lock().unwrap_or_else(PoisonError::into_inner);
         g.pending = self.optimize_pending.load(Ordering::SeqCst)
             || self.optimize_running.load(Ordering::SeqCst);
+        g.collector_overflow = self.collector.overflow_count();
         g
     }
 }
@@ -444,6 +539,50 @@ mod tests {
         drive_lognormal(&store, 100, 5);
         let h = tuner.sizes_histogram().unwrap();
         assert_eq!(h.total_items(), 100);
+    }
+
+    #[test]
+    fn per_tenant_refine_never_regresses_and_covers_both_modes() {
+        let (store, collector, tuner) = setup(100);
+        let reg = store.tenants().clone();
+        reg.define("small", b"a:", None).unwrap();
+        reg.define("large", b"b:", None).unwrap();
+        // two sharply divergent unimodal tenants (TV distance 1.0)
+        for _ in 0..500 {
+            reg.collector(1).record(200);
+            reg.collector(2).record(5000);
+            collector.record(200);
+            collector.record(5000);
+        }
+        let current = store.chunk_sizes();
+        let hist = collector.snapshot();
+        let report = tuner.optimize_against(&hist, &current);
+        let refined = tuner.per_tenant_refine(&hist, &current, report.clone());
+        // adopt-only-if-better: the merged table can never score worse
+        assert!(
+            refined.new_waste <= report.new_waste,
+            "merged {} > global {}",
+            refined.new_waste,
+            report.new_waste
+        );
+        // the refined table still admits both tenants' modes
+        assert!(refined.new_config.iter().any(|&c| c >= 200));
+        assert!(refined.new_config.iter().any(|&c| c >= 5000));
+    }
+
+    #[test]
+    fn per_tenant_refine_is_inert_without_tenants() {
+        let (store, collector, tuner) = setup(100);
+        for _ in 0..500 {
+            collector.record(300);
+        }
+        let current = store.chunk_sizes();
+        let hist = collector.snapshot();
+        let report = tuner.optimize_against(&hist, &current);
+        let refined = tuner.per_tenant_refine(&hist, &current, report.clone());
+        assert_eq!(refined.new_config, report.new_config);
+        assert_eq!(refined.new_waste, report.new_waste);
+        let _ = store;
     }
 
     #[test]

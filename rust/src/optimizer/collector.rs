@@ -18,6 +18,12 @@ pub struct SizeCollector {
     counts: Vec<AtomicU64>,
     /// Sizes above the head.
     overflow: Mutex<BTreeMap<usize, u64>>,
+    /// Samples that landed above the byte-granular head. The mutexed
+    /// tail keeps the exact sizes, but downstream `bucketize` clamps
+    /// anything past its span into the last bucket — biasing the
+    /// learned top class downward. This counter makes that loss of
+    /// fidelity visible (`collector_overflow` in `stats slabs`).
+    overflow_count: AtomicU64,
     total: AtomicU64,
     max_size: AtomicUsize,
 }
@@ -27,6 +33,7 @@ impl SizeCollector {
         SizeCollector {
             counts: (0..cap).map(|_| AtomicU64::new(0)).collect(),
             overflow: Mutex::new(BTreeMap::new()),
+            overflow_count: AtomicU64::new(0),
             total: AtomicU64::new(0),
             max_size: AtomicUsize::new(0),
         }
@@ -40,6 +47,7 @@ impl SizeCollector {
             self.counts[size - 1].fetch_add(1, Ordering::Relaxed);
         } else {
             *self.overflow.lock().unwrap().entry(size).or_insert(0) += 1;
+            self.overflow_count.fetch_add(1, Ordering::Relaxed);
         }
         self.total.fetch_add(1, Ordering::Relaxed);
         self.max_size.fetch_max(size, Ordering::Relaxed);
@@ -52,6 +60,13 @@ impl SizeCollector {
 
     pub fn max_size(&self) -> usize {
         self.max_size.load(Ordering::Relaxed)
+    }
+
+    /// Samples recorded above the exact head cap since construction /
+    /// last reset. Non-zero means the bucketized optimizer input is
+    /// clamping real sizes into its last bucket.
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow_count.load(Ordering::Relaxed)
     }
 
     /// Consistent-enough snapshot for optimization (counters may lag by
@@ -76,6 +91,7 @@ impl SizeCollector {
             c.store(0, Ordering::Relaxed);
         }
         self.overflow.lock().unwrap().clear();
+        self.overflow_count.store(0, Ordering::Relaxed);
         self.total.store(0, Ordering::Relaxed);
         self.max_size.store(0, Ordering::Relaxed);
     }
@@ -111,6 +127,19 @@ mod tests {
         assert_eq!(h.count(50_000), 1);
         assert_eq!(c.total(), 4);
         assert_eq!(c.max_size(), 50_000);
+        assert_eq!(c.overflow_count(), 1);
+    }
+
+    #[test]
+    fn overflow_counter_tracks_above_cap_only() {
+        let c = SizeCollector::new(128);
+        c.record(128); // at cap: exact head
+        c.record(129);
+        c.record(129);
+        c.record(4096);
+        assert_eq!(c.overflow_count(), 3);
+        c.reset();
+        assert_eq!(c.overflow_count(), 0);
     }
 
     #[test]

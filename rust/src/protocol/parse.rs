@@ -247,6 +247,15 @@ pub fn parse_classic(line: &[u8]) -> Result<Request<'_>, ParseError> {
             }
             Ok(r)
         }
+        b"tenants" => {
+            // raw tail again: prefixes/tokens may hold any non-space
+            // bytes, so the executor owns the grammar
+            let mut r = Request::classic(Opcode::Tenants);
+            if let Some(first) = toks.get(1) {
+                r.key = tail_from(line, first);
+            }
+            Ok(r)
+        }
         _ => Err(ParseError::UnknownCommand),
     }
 }
@@ -355,6 +364,17 @@ mod tests {
         assert_eq!(r.key, b"set a=1in5,b=once");
         let r = parse_command(b"failpoints clear a").unwrap();
         assert_eq!(r.key, b"clear a");
+    }
+
+    #[test]
+    fn tenants_lines_keep_the_raw_tail() {
+        let r = parse_command(b"tenants").unwrap();
+        assert_eq!((r.op, r.key), (Opcode::Tenants, b"".as_slice()));
+        let r = parse_command(b"tenants define acme user: 64").unwrap();
+        assert_eq!(r.op, Opcode::Tenants);
+        assert_eq!(r.key, b"define acme user: 64");
+        let r = parse_command(b"tenants list").unwrap();
+        assert_eq!(r.key, b"list");
     }
 
     #[test]

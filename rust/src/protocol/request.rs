@@ -60,6 +60,11 @@ pub enum Opcode {
     /// runtime control of the fault-injection registry
     /// (`util::failpoint`). The raw argument tail rides in `key`.
     Failpoints,
+    /// Extension: `tenants [list|define ...|token ...|quota ...]` —
+    /// runtime control of the multi-tenant registry
+    /// (`tenant::TenantRegistry`). The raw argument tail rides in
+    /// `key`, like [`Opcode::Failpoints`].
+    Tenants,
 }
 
 /// Response-echo flags a request may ask for (meta `v f c t s k O`).

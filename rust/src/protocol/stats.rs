@@ -13,6 +13,7 @@ use crate::server::metrics::ConnCounters;
 use crate::slab::SlabStats;
 use crate::store::migrate::MigrationGauges;
 use crate::store::store::StoreStats;
+use crate::tenant::TenantStat;
 use crate::util::histogram::SizeHistogram;
 
 /// Render plain `stats`.
@@ -112,6 +113,29 @@ pub fn render_slabs(
     stat(out, "optimize_runs", opt.runs);
     stat(out, "optimize_applied", opt.applied);
     stat(out, "optimize_last_recovery_bp", opt.last_recovery_bp);
+    stat(out, "collector_overflow", opt.collector_overflow);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Render `stats tenants` — one `STAT <id>:<field>` row group per
+/// defined tenant (id 0 is the default tenant), mirroring the
+/// `stats slabs` per-class layout so existing stat scrapers parse it.
+pub fn render_tenants(out: &mut Vec<u8>, tenants: &[TenantStat]) {
+    for t in tenants {
+        let id = t.id;
+        stat(out, &format!("{id}:name"), &t.name);
+        stat(out, &format!("{id}:get_hits"), t.hits);
+        stat(out, &format!("{id}:get_misses"), t.misses);
+        stat(out, &format!("{id}:cmd_get"), t.gets);
+        stat(out, &format!("{id}:cmd_set"), t.sets);
+        stat(out, &format!("{id}:bytes"), t.bytes_live);
+        stat(out, &format!("{id}:curr_items"), t.items_live);
+        stat(out, &format!("{id}:bytes_written"), t.bytes_written);
+        stat(out, &format!("{id}:evictions"), t.evictions);
+        stat(out, &format!("{id}:quota_evictions"), t.quota_evictions);
+        stat(out, &format!("{id}:quota_pages"), t.quota_pages);
+        stat(out, &format!("{id}:used_pages"), t.used_pages);
+    }
     out.extend_from_slice(b"END\r\n");
 }
 
@@ -227,6 +251,7 @@ mod tests {
             runs: 4,
             applied: 2,
             last_recovery_bp: 3100,
+            collector_overflow: 17,
         };
         render_slabs(&mut out, &slab_stats_with_items(), &mig, &opt);
         let t = text(&out);
@@ -241,6 +266,47 @@ mod tests {
         assert!(t.contains("STAT optimize_runs 4"), "{t}");
         assert!(t.contains("STAT optimize_applied 2"), "{t}");
         assert!(t.contains("STAT optimize_last_recovery_bp 3100"), "{t}");
+        assert!(t.contains("STAT collector_overflow 17"), "{t}");
+    }
+
+    #[test]
+    fn tenants_stats_rows() {
+        let mut out = Vec::new();
+        let rows = vec![
+            TenantStat {
+                id: 0,
+                name: "default".into(),
+                gets: 10,
+                hits: 7,
+                misses: 3,
+                sets: 4,
+                bytes_live: 4096,
+                items_live: 2,
+                bytes_written: 9000,
+                evictions: 1,
+                quota_evictions: 0,
+                quota_pages: 0,
+                used_pages: 0,
+            },
+            TenantStat {
+                id: 1,
+                name: "acme".into(),
+                quota_pages: 8,
+                quota_evictions: 5,
+                ..TenantStat::default()
+            },
+        ];
+        render_tenants(&mut out, &rows);
+        let t = text(&out);
+        assert!(t.contains("STAT 0:name default"), "{t}");
+        assert!(t.contains("STAT 0:get_hits 7"), "{t}");
+        assert!(t.contains("STAT 0:get_misses 3"), "{t}");
+        assert!(t.contains("STAT 0:cmd_set 4"), "{t}");
+        assert!(t.contains("STAT 0:bytes 4096"), "{t}");
+        assert!(t.contains("STAT 1:name acme"), "{t}");
+        assert!(t.contains("STAT 1:quota_pages 8"), "{t}");
+        assert!(t.contains("STAT 1:quota_evictions 5"), "{t}");
+        assert!(t.ends_with("END\r\n"));
     }
 
     #[test]

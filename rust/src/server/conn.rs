@@ -76,6 +76,12 @@ pub struct OptimizeGauges {
     /// Predicted waste recovery of the most recent pass, in basis
     /// points (10000 = all waste recovered).
     pub last_recovery_bp: u64,
+    /// Item sizes recorded above the collector's tracking cap
+    /// ([`SizeCollector::overflow_count`]
+    /// (crate::optimizer::collector::SizeCollector::overflow_count)) —
+    /// when non-zero, the learned geometry's top class is biased low
+    /// because `bucketize` clamps these into its last bucket.
+    pub collector_overflow: u64,
 }
 
 /// Hook for the admin extensions; implemented by the optimizer
@@ -516,6 +522,8 @@ impl Exec<'_> {
             }
             Opcode::Arith => {
                 let mut w = ResponseWriter::for_request(sink, req);
+                let reg = self.store.tenants();
+                let tenant = reg.attribute(req.key, req.opaque);
                 let opts = ArithOpts {
                     delta: req.delta,
                     incr: req.incr,
@@ -524,9 +532,15 @@ impl Exec<'_> {
                     new_ttl: req.touch_ttl,
                     cas_set: req.cas_set,
                     binary_key: req.b64_key,
+                    tenant,
                 };
                 match self.store.arith(req.key, &opts) {
-                    Ok(ArithOutcome::Value { value, ttl, cas }) => w.number(value, ttl, cas),
+                    Ok(ArithOutcome::Value { value, ttl, cas }) => {
+                        if reg.active() {
+                            reg.record_set(tenant);
+                        }
+                        w.number(value, ttl, cas)
+                    }
                     Ok(ArithOutcome::NotFound) => w.not_found(),
                     Ok(ArithOutcome::Exists) => w.exists(),
                     Err(e) => w.store_error(&e),
@@ -563,6 +577,7 @@ impl Exec<'_> {
                 ResponseWriter::for_request(sink, req).line(&msg);
             }
             Opcode::Failpoints => self.run_failpoints(req, sink),
+            Opcode::Tenants => self.run_tenants(req, sink),
         }
     }
 
@@ -605,6 +620,89 @@ impl Exec<'_> {
         }
     }
 
+    /// `tenants list` / `tenants define <name> <prefix> [quota_pages]` /
+    /// `tenants token <name> <token>` / `tenants quota <name> <pages>` —
+    /// runtime control of the multi-tenant registry. `list` renders one
+    /// `TENANT <id> <name> prefixes=<p,..> tokens=<n> quota=<pages>`
+    /// line per defined tenant, then `END`. Rules added at runtime only
+    /// affect attribution of new traffic; resident items keep their
+    /// stamped owner until rewritten.
+    fn run_tenants<S: RespSink>(&mut self, req: &Request<'_>, sink: &mut S) {
+        const USAGE: &str =
+            "usage: tenants [list|define name prefix [quota]|token name tok|quota name pages]";
+        let mut w = ResponseWriter::for_request(sink, req);
+        let reg = self.store.tenants();
+        let mut toks = req.key.split(|&b| b == b' ').filter(|t| !t.is_empty());
+        let sub = toks.next().unwrap_or(&b"list"[..]);
+        match sub {
+            b"list" => {
+                for r in reg.rules_snapshot() {
+                    let prefixes = r
+                        .prefixes
+                        .iter()
+                        .map(|p| String::from_utf8_lossy(p).into_owned())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    w.line(&format!(
+                        "TENANT {} {} prefixes={} tokens={} quota={}",
+                        r.id,
+                        r.name,
+                        if prefixes.is_empty() { "-" } else { prefixes.as_str() },
+                        r.tokens.len(),
+                        r.quota_pages,
+                    ));
+                }
+                w.line("END");
+            }
+            b"define" => {
+                let (Some(name), Some(prefix)) = (toks.next(), toks.next()) else {
+                    w.client_error(USAGE);
+                    return;
+                };
+                let quota = match toks.next() {
+                    None => None,
+                    Some(q) => match std::str::from_utf8(q).ok().and_then(|s| s.parse().ok()) {
+                        Some(q) => Some(q),
+                        None => {
+                            w.client_error("quota must be a page count");
+                            return;
+                        }
+                    },
+                };
+                match reg.define(&String::from_utf8_lossy(name), prefix, quota) {
+                    Ok(id) => w.line(&format!("OK {id}")),
+                    Err(e) => w.client_error(&e),
+                }
+            }
+            b"token" => {
+                let (Some(name), Some(token)) = (toks.next(), toks.next()) else {
+                    w.client_error(USAGE);
+                    return;
+                };
+                match reg.set_token(&String::from_utf8_lossy(name), token) {
+                    Ok(id) => w.line(&format!("OK {id}")),
+                    Err(e) => w.client_error(&e),
+                }
+            }
+            b"quota" => {
+                let (Some(name), Some(pages)) = (toks.next(), toks.next()) else {
+                    w.client_error(USAGE);
+                    return;
+                };
+                let Some(pages) = std::str::from_utf8(pages).ok().and_then(|s| s.parse().ok())
+                else {
+                    w.client_error("quota must be a page count");
+                    return;
+                };
+                match reg.set_quota(&String::from_utf8_lossy(name), pages) {
+                    Ok(id) => w.line(&format!("OK {id}")),
+                    Err(e) => w.client_error(&e),
+                }
+            }
+            _ => w.client_error(USAGE),
+        }
+    }
+
     fn run_stats<S: RespSink>(&mut self, arg: Option<&[u8]>, sink: &mut S) {
         let out = sink.buf();
         match arg {
@@ -618,6 +716,9 @@ impl Exec<'_> {
                 Some(h) => stats::render_sizes(out, &h),
                 None => stats::render_sizes(out, &SizeHistogram::new(1)),
             },
+            Some(b"tenants") => {
+                stats::render_tenants(out, &self.store.tenants().stats_snapshot())
+            }
             Some(b"reset") => {
                 self.store.reset_stats();
                 if let Some(m) = self.metrics {
@@ -671,7 +772,7 @@ fn do_get<S: RespSink>(
         // back to the mark). Only expired/oversized items and exhausted
         // seqlock retries pay a lock.
         let mark = sink.buf().len();
-        match store.get_optimistic(
+        let hit = match store.get_optimistic(
             first,
             sink,
             |s: &mut S| s.buf().truncate(mark),
@@ -679,10 +780,15 @@ fn do_get<S: RespSink>(
                 s.value(first, v, with_cas);
             },
         ) {
-            ReadAttempt::Hit(()) | ReadAttempt::Miss => {}
-            ReadAttempt::Fallback => {
-                store.get_with(first, |v| sink.value(first, v, with_cas));
-            }
+            ReadAttempt::Hit(()) => true,
+            ReadAttempt::Miss => false,
+            ReadAttempt::Fallback => store
+                .get_with(first, |v| sink.value(first, v, with_cas))
+                .is_some(),
+        };
+        let reg = store.tenants();
+        if reg.active() {
+            reg.record_get(reg.attribute(first, b""), hit);
         }
         response::end(sink.buf());
         return;
@@ -736,6 +842,20 @@ fn do_get<S: RespSink>(
     if !spans.windows(2).all(|w| w[0].0 <= w[1].0) {
         spans.sort_unstable_by_key(|s| s.0);
     }
+    // per-tenant counting: after the sort each key's hit is a span with
+    // its index, so one merge-walk attributes the whole batch (skipped
+    // entirely — one relaxed load — on a single-tenant server)
+    let reg = store.tenants();
+    if reg.active() {
+        let mut si = 0usize;
+        for (idx, k) in keys.iter().enumerate() {
+            let hit = spans.get(si).is_some_and(|&(i, _, _)| i as usize == idx);
+            if hit {
+                si += 1;
+            }
+            reg.record_get(reg.attribute(k, b""), hit);
+        }
+    }
     let out = sink.buf();
     out.reserve(scratch.len() + 5);
     for &(_, s, e) in spans.iter() {
@@ -765,9 +885,13 @@ fn do_gat<S: RespSink>(
         touch: Some(exptime),
         ..MetaGetOpts::default()
     };
+    let reg = store.tenants();
     for key in get_keys(tail) {
         // the touch path never inserts, so no error can surface here
-        let _ = store.meta_get(key, &opts, |v, _| sink.value(key, v, with_cas));
+        let r = store.meta_get(key, &opts, |v, _| sink.value(key, v, with_cas));
+        if reg.active() {
+            reg.record_get(reg.attribute(key, b""), matches!(r, Ok(Some(_))));
+        }
     }
     response::end(sink.buf());
 }
@@ -782,6 +906,8 @@ fn do_gat<S: RespSink>(
 /// [`ShardedStore::meta_get`].
 fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
     let mut w = ResponseWriter::for_request(sink, req);
+    let reg = store.tenants();
+    let tenant = reg.attribute(req.key, req.opaque);
     let opts = MetaGetOpts {
         touch: req.touch_ttl,
         vivify: req.vivify,
@@ -790,6 +916,7 @@ fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut 
         no_bump: req.no_bump,
         wants_hit_before: req.want & crate::protocol::request::want::HIT != 0,
         recache: req.recache,
+        tenant,
     };
     let key = req.key;
     let mark = w.buf().len();
@@ -802,14 +929,26 @@ fn do_meta_get<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut 
             w.value(key, v, hit);
         },
     ) {
-        ReadAttempt::Hit(()) => return,
+        ReadAttempt::Hit(()) => {
+            if reg.active() {
+                reg.record_get(tenant, true);
+            }
+            return;
+        }
         ReadAttempt::Miss => {
+            if reg.active() {
+                reg.record_get(tenant, false);
+            }
             w.miss();
             return;
         }
         ReadAttempt::Fallback => {}
     }
-    match store.meta_get(key, &opts, |v, hit| w.value(key, v, hit)) {
+    let r = store.meta_get(key, &opts, |v, hit| w.value(key, v, hit));
+    if reg.active() {
+        reg.record_get(tenant, matches!(r, Ok(Some(_))));
+    }
+    match r {
         Ok(Some(_)) => {}
         Ok(None) => w.miss(),
         Err(e) => w.store_error(&e),
@@ -850,6 +989,11 @@ fn do_me<S: RespSink>(store: &ShardedStore, req: &Request<'_>, sink: &mut S) {
 /// [`ShardedStore::meta_set`]; the writer renders the outcome.
 fn execute_data<S: RespSink>(store: &ShardedStore, req: &DataRequest, data: &[u8], sink: &mut S) {
     let mut w = ResponseWriter::for_data(sink, req);
+    let reg = store.tenants();
+    let tenant = reg.attribute(&req.key, &req.opaque);
+    if reg.active() {
+        reg.record_set(tenant);
+    }
     let opts = MetaSetOpts {
         mode: req.mode,
         flags: req.set_flags,
@@ -858,6 +1002,7 @@ fn execute_data<S: RespSink>(store: &ShardedStore, req: &DataRequest, data: &[u8
         cas_set: req.cas_set,
         binary_key: req.b64_key,
         invalidate: req.invalidate,
+        tenant,
     };
     match store.meta_set(&req.key, data, &opts) {
         Ok(SetOutcome::Stored { cas }) => w.stored(cas),

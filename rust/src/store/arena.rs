@@ -103,6 +103,10 @@ pub struct ItemMeta {
     pub gen: u8,
     /// True while the record is live (guards against stale ids).
     pub live: bool,
+    /// Owning tenant (attribution stamp; 0 = default tenant). Travels
+    /// with the item through migration moves, so per-tenant byte
+    /// accounting survives geometry changes.
+    pub tenant: u8,
 }
 
 impl ItemMeta {
@@ -132,6 +136,7 @@ impl ItemMeta {
             win_sent: false,
             gen: 0,
             live: false,
+            tenant: 0,
         }
     }
 }

@@ -317,6 +317,7 @@ mod tests {
             win_sent: false,
             gen: 0,
             live: true,
+            tenant: 0,
         }
     }
 

@@ -285,6 +285,7 @@ mod tests {
             win_sent: false,
             gen: 0,
             live: true,
+            tenant: 0,
         }
     }
 

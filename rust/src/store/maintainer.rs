@@ -60,6 +60,12 @@ pub struct MaintainerConfig {
     /// that keeps drains bounded-pause. Default `true` (standalone
     /// stores with no autotune thread).
     pub pump_migration: bool,
+    /// Evaluate tenant memory arbitration every this many maintenance
+    /// passes (`tenants.arbitrate_every` / `--tenant-arbitrate-every`;
+    /// 0 disables). Enforcement reclaims bounded cold-tail batches
+    /// through the same short write leases as demotion — never a
+    /// stop-the-world repartition.
+    pub arbitrate_every: u64,
 }
 
 impl Default for MaintainerConfig {
@@ -68,6 +74,7 @@ impl Default for MaintainerConfig {
             interval_ms: DEFAULT_MAINTAINER_INTERVAL_MS,
             batch: DEFAULT_MAINTAINER_BATCH,
             pump_migration: true,
+            arbitrate_every: crate::tenant::DEFAULT_ARBITRATE_EVERY,
         }
     }
 }
@@ -92,6 +99,7 @@ pub fn spawn_maintainer(
         .name("slabforge-maintainer".into())
         .spawn(move || {
             let interval = Duration::from_millis(cfg.interval_ms.max(1));
+            let mut passes: u64 = 0;
             supervisor::supervise("maintainer", &shutdown, || {
                 failpoint::fired("maintainer.pass.pause");
                 failpoint::maybe_panic("maintainer.pass.panic");
@@ -106,6 +114,14 @@ pub fn spawn_maintainer(
                     return;
                 }
                 store.maintain_all(cfg.batch);
+                passes = passes.wrapping_add(1);
+                if cfg.arbitrate_every > 0 && passes % cfg.arbitrate_every == 0 {
+                    let reg = store.tenants();
+                    let mask = reg.arbitration_mask();
+                    if mask != 0 {
+                        store.reclaim_tenants(mask, reg.reclaim_batch());
+                    }
+                }
                 std::thread::sleep(interval);
             });
         })
@@ -183,6 +199,52 @@ mod tests {
         }
         assert_eq!(s.migration_gauges().moved, 3000);
         assert_eq!(s.get(b"k00000").unwrap().value.len(), 455);
+        stop.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn thread_enforces_tenant_quota_incrementally() {
+        use crate::store::store::MetaSetOpts;
+        let s = store();
+        let reg = s.tenants().clone();
+        reg.define("hog", b"a:", Some(1)).unwrap();
+        let opts = MetaSetOpts {
+            tenant: 1,
+            ..MetaSetOpts::set(0, 0)
+        };
+        for i in 0..3000u32 {
+            s.meta_set(format!("a:{i:05}").as_bytes(), &vec![b'x'; 1000], &opts)
+                .unwrap();
+        }
+        let over = reg.stats_snapshot()[1].used_pages;
+        assert!(over > 1, "setup must exceed the 1-page quota (used={over})");
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_maintainer(
+            s.clone(),
+            MaintainerConfig {
+                interval_ms: 1,
+                arbitrate_every: 2,
+                ..MaintainerConfig::default()
+            },
+            stop.clone(),
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let used = reg.stats_snapshot()[1].used_pages;
+            if used <= 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "arbitration never reclaimed (used_pages={used})"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            reg.stats_snapshot()[1].quota_evictions > 0,
+            "reclaim must be counted as quota evictions"
+        );
         stop.store(true, Ordering::SeqCst);
         h.join().unwrap();
     }

@@ -176,7 +176,7 @@ impl KvStore {
             let Some((class, id)) = self.next_drain_victim() else {
                 break;
             };
-            let (handle, klen, vlen, total, hash, expired) = {
+            let (handle, klen, vlen, total, hash, expired, tenant) = {
                 let m = self.arena.get(id);
                 (
                     m.handle,
@@ -185,6 +185,7 @@ impl KvStore {
                     m.total as usize,
                     m.hash,
                     self.is_expired(m),
+                    m.tenant,
                 )
             };
             if expired {
@@ -234,6 +235,9 @@ impl KvStore {
                         self.arena.remove(id);
                     }
                     self.alloc.free_old(handle, total);
+                    // a drop leaves residency — moves keep the stamp
+                    // and change no totals, so only this branch reports
+                    self.tenant_on_free(tenant, total);
                     let mig = self.migration.as_mut().expect("active migration");
                     mig.dropped += 1;
                     mig.old_items -= 1;

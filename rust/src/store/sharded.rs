@@ -333,6 +333,10 @@ pub struct ShardedStore {
     /// Items a migration step may move per shard while holding the
     /// shard write lock (the `migrate_batch` setting).
     migrate_batch: AtomicUsize,
+    /// Tenant registry: always present, inactive (and free) until a
+    /// tenant is defined. Also attached to every shard as its
+    /// `TenantSink`, so per-tenant byte gauges track every store/free.
+    tenants: Arc<crate::tenant::TenantRegistry>,
 }
 
 /// splitmix64 finalizer: a multiplicative fold in which every input
@@ -360,6 +364,15 @@ impl ShardedStore {
             Clock::System,
         )?;
         store.set_migrate_batch(settings.migrate_batch);
+        store
+            .tenants
+            .set_tuning(settings.tenant_divergence, settings.tenant_reclaim_batch);
+        for spec in &settings.tenants {
+            store
+                .tenants
+                .define(&spec.name, &spec.prefix, Some(spec.quota_pages))
+                .expect("tenant specs are validated by Settings::validate");
+        }
         Ok(store)
     }
 
@@ -380,11 +393,39 @@ impl ShardedStore {
                     .map(Shard::new)
             })
             .collect();
-        Ok(ShardedStore {
+        let tenants = Arc::new(crate::tenant::TenantRegistry::new(page_size));
+        let store = ShardedStore {
             shards: stores?,
             page_size,
             migrate_batch: AtomicUsize::new(DEFAULT_MIGRATE_BATCH),
-        })
+            tenants,
+        };
+        let sink: Arc<dyn crate::store::store::TenantSink> = store.tenants.clone();
+        for s in &store.shards {
+            s.write().set_tenant_sink(sink.clone());
+        }
+        Ok(store)
+    }
+
+    /// The store's tenant registry (attribution, per-tenant stats,
+    /// arbitration). Inactive — and effectively free — until a tenant
+    /// is defined via config or the `tenants` admin command.
+    pub fn tenants(&self) -> &Arc<crate::tenant::TenantRegistry> {
+        &self.tenants
+    }
+
+    /// Arbitration enforcement across shards: evict up to
+    /// `max_per_shard` cold items of the masked tenants from each
+    /// shard, one short write lease at a time (see
+    /// [`KvStore::reclaim_tenants`]). Returns total items reclaimed.
+    pub fn reclaim_tenants(&self, mask: u64, max_per_shard: usize) -> usize {
+        if mask == 0 {
+            return 0;
+        }
+        self.shards
+            .iter()
+            .map(|s| s.write().reclaim_tenants(mask, max_per_shard))
+            .sum()
     }
 
     /// Per-step item budget for incremental migration.
@@ -1066,6 +1107,9 @@ impl ShardedStore {
             s.read_misses.store(0, Ordering::Relaxed);
             s.lanes.reset();
         }
+        // per-tenant cumulative counters reset too; registry rules and
+        // the live byte/item gauges survive (they mirror residency)
+        self.tenants.reset_counters();
     }
 
     /// Current chunk-size table (identical across shards —

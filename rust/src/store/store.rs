@@ -28,6 +28,22 @@ pub trait SizeObserver: Send + Sync {
     fn observe(&self, total_size: usize);
 }
 
+/// Per-tenant accounting hooks — implemented by
+/// [`TenantRegistry`](crate::tenant::TenantRegistry). Every item
+/// carries its owner's stamp (`ItemMeta::tenant`); the store reports
+/// each resident-byte transition so the registry's live gauges stay
+/// exact across overwrites, evictions, expiry, flushes, and migration
+/// drops (migration *moves* keep the stamp and change no totals).
+pub trait TenantSink: Send + Sync {
+    /// `total` item bytes became resident, owned by `tenant`.
+    fn on_store(&self, tenant: u8, total: usize);
+    /// `total` item bytes left residency.
+    fn on_free(&self, tenant: u8, total: usize);
+    /// An item of `tenant` was evicted (`quota` = arbitration reclaim
+    /// rather than allocation pressure).
+    fn on_evict(&self, tenant: u8, quota: bool);
+}
+
 /// Wall clock with a manual override for deterministic expiry tests.
 #[derive(Clone)]
 pub enum Clock {
@@ -137,6 +153,9 @@ pub struct MetaSetOpts {
     /// leaving it untouched — the writer knows the data it lost to is
     /// newer than what the cache holds.
     pub invalidate: bool,
+    /// Owning tenant stamped onto the stored item (attribution happens
+    /// at the connection layer; 0 = default tenant).
+    pub tenant: u8,
 }
 
 impl MetaSetOpts {
@@ -150,6 +169,7 @@ impl MetaSetOpts {
             cas_set: None,
             binary_key: false,
             invalidate: false,
+            tenant: 0,
         }
     }
 }
@@ -194,6 +214,8 @@ pub struct ArithOpts {
     /// The key arrived base64-encoded (meta `b`): a vivify may insert
     /// it even when it violates the text-protocol character rules.
     pub binary_key: bool,
+    /// Owning tenant for the rewritten/vivified item (0 = default).
+    pub tenant: u8,
 }
 
 impl ArithOpts {
@@ -207,6 +229,7 @@ impl ArithOpts {
             new_ttl: None,
             cas_set: None,
             binary_key: false,
+            tenant: 0,
         }
     }
 }
@@ -250,6 +273,8 @@ pub struct MetaGetOpts {
     /// `Z`. Stale items (see [`MetaSetOpts::invalidate`]) always run
     /// the same win race regardless of TTL.
     pub recache: Option<u32>,
+    /// Owning tenant for a vivified insert (0 = default).
+    pub tenant: u8,
 }
 
 /// Per-hit metadata the meta read path hands its visitor alongside the
@@ -424,6 +449,8 @@ pub struct KvStore {
     cas_counter: u64,
     pub(crate) stats: StoreStats,
     observer: Option<Arc<dyn SizeObserver>>,
+    /// Per-tenant accounting sink (the tenant registry).
+    tenants: Option<Arc<dyn TenantSink>>,
     pub(crate) policy: ChunkSizePolicy,
     /// Current slab-geometry generation; items tagged with an older
     /// generation still live in the allocator's draining class table.
@@ -465,6 +492,7 @@ impl KvStore {
             cas_counter: 0,
             stats: StoreStats::default(),
             observer: None,
+            tenants: None,
             policy,
             gen: 0,
             migration: None,
@@ -477,6 +505,32 @@ impl KvStore {
     /// Attach a per-set size observer (the optimizer's collector).
     pub fn set_observer(&mut self, obs: Arc<dyn SizeObserver>) {
         self.observer = Some(obs);
+    }
+
+    /// Attach the per-tenant accounting sink (the tenant registry).
+    pub fn set_tenant_sink(&mut self, sink: Arc<dyn TenantSink>) {
+        self.tenants = Some(sink);
+    }
+
+    #[inline]
+    fn tenant_on_store(&self, tenant: u8, total: usize) {
+        if let Some(s) = &self.tenants {
+            s.on_store(tenant, total);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn tenant_on_free(&self, tenant: u8, total: usize) {
+        if let Some(s) = &self.tenants {
+            s.on_free(tenant, total);
+        }
+    }
+
+    #[inline]
+    fn tenant_on_evict(&self, tenant: u8, quota: bool) {
+        if let Some(s) = &self.tenants {
+            s.on_evict(tenant, quota);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -686,10 +740,12 @@ impl KvStore {
             mig.old_items -= 1;
             let meta = self.arena.remove(id);
             self.alloc.free_old(meta.handle, meta.total as usize);
+            self.tenant_on_free(meta.tenant, meta.total as usize);
         } else {
             self.lrus[class].remove(id, &mut self.arena);
             let meta = self.arena.remove(id);
             self.alloc.free(meta.handle, meta.total as usize);
+            self.tenant_on_free(meta.tenant, meta.total as usize);
         }
     }
 
@@ -714,9 +770,13 @@ impl KvStore {
                     let victim = self.lrus[class as usize].eviction_candidate();
                     match victim {
                         Some(id) => {
-                            let hash = self.arena.get(id).hash;
+                            let (hash, victim_tenant) = {
+                                let m = self.arena.get(id);
+                                (m.hash, m.tenant)
+                            };
                             self.unlink_and_free(id, hash);
                             self.stats.evictions += 1;
+                            self.tenant_on_evict(victim_tenant, false);
                         }
                         None if self.migration.is_some() => {
                             if !self.force_drain_old_page() {
@@ -762,6 +822,7 @@ impl KvStore {
         flags: u32,
         exptime_abs: u32,
         cas_override: Option<u64>,
+        tenant: u8,
     ) -> Result<u64, StoreError> {
         let total = total_item_size(key.len(), value.len(), self.use_cas);
         // allocation (and any evictions it performs — those guard their
@@ -799,6 +860,7 @@ impl KvStore {
             win_sent: false,
             gen: self.gen,
             live: true,
+            tenant,
         });
         self.table.insert(id, hash, &mut self.arena);
         self.lrus[handle.class as usize].insert(id, &mut self.arena);
@@ -806,6 +868,7 @@ impl KvStore {
         if let Some(obs) = &self.observer {
             obs.observe(total);
         }
+        self.tenant_on_store(tenant, total);
         Ok(cas)
     }
 
@@ -820,10 +883,18 @@ impl KvStore {
         id: u32,
         new_value: &[u8],
         cas_override: Option<u64>,
+        tenant: u8,
     ) -> Result<u64, StoreError> {
-        let (handle, klen, old_total, item_gen, hash) = {
+        let (handle, klen, old_total, item_gen, hash, old_tenant) = {
             let m = self.arena.get(id);
-            (m.handle, m.klen as usize, m.total as usize, m.gen, m.hash)
+            (
+                m.handle,
+                m.klen as usize,
+                m.total as usize,
+                m.gen,
+                m.hash,
+                m.tenant,
+            )
         };
         let new_total = total_item_size(klen, new_value.len(), self.use_cas);
         // one stripe window over the whole rewrite: readers must never
@@ -918,9 +989,13 @@ impl KvStore {
         // spent the moment fresh bytes land
         m.stale = false;
         m.win_sent = false;
+        // a rewrite re-attributes the item to the writing tenant
+        m.tenant = tenant;
         if let Some(obs) = &self.observer {
             obs.observe(new_total);
         }
+        self.tenant_on_free(old_tenant, old_total);
+        self.tenant_on_store(tenant, new_total);
         Ok(cas)
     }
 
@@ -977,7 +1052,7 @@ impl KvStore {
                     merged.extend_from_slice(value);
                     merged.extend_from_slice(&old);
                 }
-                let cas = self.replace_value_bytes(id, &merged, opts.cas_set)?;
+                let cas = self.replace_value_bytes(id, &merged, opts.cas_set, opts.tenant)?;
                 return Ok(SetOutcome::Stored { cas });
             }
             StoreMode::Set => {}
@@ -1011,7 +1086,7 @@ impl KvStore {
         if let Some(id) = existing {
             self.unlink_and_free(id, hash);
         }
-        let cas = self.insert_new(key, hash, value, opts.flags, exptime, opts.cas_set)?;
+        let cas = self.insert_new(key, hash, value, opts.flags, exptime, opts.cas_set, opts.tenant)?;
         Ok(SetOutcome::Stored { cas })
     }
 
@@ -1335,7 +1410,7 @@ impl KvStore {
         }
         let exp = self.normalize_exptime(ttl);
         self.stats.cmd_set += 1;
-        self.insert_new(key, hash, b"", 0, exp, opts.vivify_cas)?;
+        self.insert_new(key, hash, b"", 0, exp, opts.vivify_cas, opts.tenant)?;
         // an absolute-past vivify TTL creates an already-expired item;
         // find_live reclaims it and the request reports a plain miss
         let Some(id) = self.find_live(key, hash) else {
@@ -1416,8 +1491,15 @@ impl KvStore {
                     let exp = self.normalize_exptime(ttl);
                     self.stats.cmd_set += 1;
                     let repr = init.to_string();
-                    let cas =
-                        self.insert_new(key, hash, repr.as_bytes(), 0, exp, opts.cas_set)?;
+                    let cas = self.insert_new(
+                        key,
+                        hash,
+                        repr.as_bytes(),
+                        0,
+                        exp,
+                        opts.cas_set,
+                        opts.tenant,
+                    )?;
                     if opts.incr {
                         self.stats.incr_hits += 1;
                     } else {
@@ -1456,7 +1538,7 @@ impl KvStore {
             current.saturating_sub(opts.delta)
         };
         let repr = next.to_string();
-        let cas = self.replace_value_bytes(id, repr.as_bytes(), opts.cas_set)?;
+        let cas = self.replace_value_bytes(id, repr.as_bytes(), opts.cas_set, opts.tenant)?;
         if let Some(t) = opts.new_ttl {
             let exp = self.normalize_exptime(t);
             self.arena.get_mut(id).exptime = exp;
@@ -1711,6 +1793,54 @@ impl KvStore {
         }
         // flushing everything also empties the draining generation
         self.maybe_finish_migration();
+    }
+
+    /// Arbitration enforcement: evict up to `max_items` of the coldest
+    /// items owned by tenants in `mask` (bit *i* = tenant *i*) — the
+    /// mechanism behind soft quotas and need-based reallocation
+    /// (`TenantRegistry::arbitration_mask`). Walks each class's
+    /// COLD→WARM→HOT tails backward under a bounded scan budget so a
+    /// single call stays a short write-lock lease; repeated maintainer
+    /// passes converge instead of one stop-the-world sweep. Freed
+    /// chunks drain pages back into the allocator's free-page pool,
+    /// where needier tenants' writes (or the in-flight incremental
+    /// migration) re-carve them. Returns the number evicted.
+    pub fn reclaim_tenants(&mut self, mask: u64, max_items: usize) -> usize {
+        if mask == 0 || max_items == 0 {
+            return 0;
+        }
+        let mut victims: Vec<(u32, u64, u8)> = Vec::new();
+        let scan_budget = max_items.saturating_mul(8).max(64);
+        let mut scanned = 0usize;
+        'outer: for class in 0..self.lrus.len() {
+            let tails = [
+                self.lrus[class].cold.tail(),
+                self.lrus[class].warm.tail(),
+                self.lrus[class].hot.tail(),
+            ];
+            for tail in tails {
+                let mut cur = tail;
+                while let Some(id) = cur {
+                    if victims.len() >= max_items || scanned >= scan_budget {
+                        break 'outer;
+                    }
+                    scanned += 1;
+                    let m = self.arena.get(id);
+                    let prev = m.prev;
+                    if mask & (1u64 << (m.tenant & 63)) != 0 {
+                        victims.push((id, m.hash, m.tenant));
+                    }
+                    cur = (prev != NIL).then_some(prev);
+                }
+            }
+        }
+        let n = victims.len();
+        for (id, hash, tenant) in victims {
+            self.unlink_and_free(id, hash);
+            self.stats.evictions += 1;
+            self.tenant_on_evict(tenant, true);
+        }
+        n
     }
 
     /// Visit `(key, meta_total_size)` for every live item.

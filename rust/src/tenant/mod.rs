@@ -1,0 +1,704 @@
+//! Multi-tenant cache layer: request attribution, per-tenant
+//! accounting, and Memshare-style memory arbitration.
+//!
+//! Real deployments multiplex many applications with divergent size
+//! distributions onto one cache; a single global learner's classes are
+//! a compromise that serves no tenant well (PAPERS.md: *Memshare*,
+//! arxiv 1610.08129). This module supplies the three primitives the
+//! rest of the system composes:
+//!
+//! * **Attribution** — every request maps to a tenant id via key-prefix
+//!   rules (longest match wins) and/or an exact meta `O` opaque-token
+//!   rule. An explicit token outranks a prefix; unmatched traffic falls
+//!   to the built-in default tenant (id 0). Attribution is allocation-
+//!   free: one relaxed atomic load when no tenants are defined, one
+//!   rules read-lock + prefix compare when they are — the get hit path
+//!   stays zero-alloc (`tests/hotpath_alloc.rs`).
+//! * **Accounting** — per-tenant hit/miss/set counters, live byte and
+//!   item gauges maintained by the store through the
+//!   [`TenantSink`](crate::store::store::TenantSink) hooks (every
+//!   insert/free path reports the stamped owner), and a per-tenant
+//!   [`SizeCollector`] fed from the write path so the optimizer can
+//!   learn per-tenant geometry.
+//! * **Arbitration** — soft page quotas plus "need"-based reallocation:
+//!   tenants over quota, and the lowest-need tenant when another
+//!   tenant's marginal need (window miss rate per live byte) dwarfs
+//!   it, are marked for bounded cold-tail reclaim
+//!   (`KvStore::reclaim_tenants`), driven from the background
+//!   maintainer — never stop-the-world. Freed chunks and pages return
+//!   through the allocator's normal free-page pool, where the needy
+//!   tenant's writes (and any in-flight incremental migration) pick
+//!   them up.
+
+use crate::optimizer::collector::SizeCollector;
+use crate::store::store::TenantSink;
+use crate::util::histogram::SizeHistogram;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Hard cap on tenants (ids fit a `u8` stamp in `ItemMeta` and a `u64`
+/// arbitration bitmask; 16 keeps the per-tenant collector memory
+/// bounded).
+pub const MAX_TENANTS: usize = 16;
+
+/// The built-in tenant for unmatched traffic.
+pub const DEFAULT_TENANT: u8 = 0;
+
+/// Default maintainer passes between arbitration evaluations.
+pub const DEFAULT_ARBITRATE_EVERY: u64 = 10;
+
+/// Default per-shard item budget of one arbitration reclaim.
+pub const DEFAULT_RECLAIM_BATCH: usize = 256;
+
+/// Default per-tenant histogram divergence (total-variation distance)
+/// above which the optimizer learns per-tenant geometry.
+pub const DEFAULT_DIVERGENCE: f64 = 0.25;
+
+/// Need ratio (max tenant need / min tenant need) above which the
+/// low-need tenant donates pages even without quota overage.
+const NEED_RATIO: f64 = 8.0;
+
+/// One configured tenant: name, key-prefix rule, soft page quota
+/// (0 = unlimited).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub prefix: Vec<u8>,
+    pub quota_pages: u64,
+}
+
+impl TenantSpec {
+    /// Parse a CLI/TOML tenant list: `name=prefix[:quota_pages]`,
+    /// comma-separated (`app=app_:64,img=img_`). Prefixes may not
+    /// contain `,`, `=`, or `:` in this compact form — use the runtime
+    /// `tenants define` command for exotic prefixes.
+    pub fn parse_list(s: &str) -> Result<Vec<TenantSpec>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, rest) = part
+                .split_once('=')
+                .ok_or_else(|| format!("tenant '{part}': expected name=prefix[:quota]"))?;
+            let (prefix, quota) = match rest.split_once(':') {
+                Some((p, q)) => (
+                    p,
+                    q.parse::<u64>()
+                        .map_err(|_| format!("tenant '{name}': bad quota '{q}'"))?,
+                ),
+                None => (rest, 0),
+            };
+            if name.is_empty() || prefix.is_empty() {
+                return Err(format!("tenant '{part}': empty name or prefix"));
+            }
+            out.push(TenantSpec {
+                name: name.to_string(),
+                prefix: prefix.as_bytes().to_vec(),
+                quota_pages: quota,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Mutable rule state behind the registry's `RwLock`.
+struct Rules {
+    /// Tenant names; index = tenant id. `[0]` is the default tenant.
+    names: Vec<String>,
+    /// Key-prefix rules, sorted longest-prefix-first so the first
+    /// match is the most specific.
+    prefixes: Vec<(Vec<u8>, u8)>,
+    /// Meta `O` opaque-token rules (exact match; outrank prefixes).
+    tokens: Vec<(Vec<u8>, u8)>,
+    /// Soft page quotas, parallel to `names` (0 = unlimited).
+    quotas: Vec<u64>,
+}
+
+/// Per-tenant atomic counters. Cumulative counters reset with
+/// `stats reset`; the live gauges (`bytes_live`, `items_live`) do not —
+/// they mirror what is resident in the slabs right now.
+#[derive(Default)]
+struct TenantCounters {
+    gets: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    sets: AtomicU64,
+    bytes_live: AtomicU64,
+    items_live: AtomicU64,
+    bytes_written: AtomicU64,
+    evictions: AtomicU64,
+    quota_evictions: AtomicU64,
+    /// Arbitration-window baselines (cumulative values at the last
+    /// `arbitration_mask` evaluation).
+    win_gets: AtomicU64,
+    win_misses: AtomicU64,
+}
+
+/// Snapshot row for `stats tenants`.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStat {
+    pub id: u8,
+    pub name: String,
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub sets: u64,
+    pub bytes_live: u64,
+    pub items_live: u64,
+    pub bytes_written: u64,
+    pub evictions: u64,
+    pub quota_evictions: u64,
+    pub quota_pages: u64,
+    pub used_pages: u64,
+}
+
+/// Snapshot row for the `tenants list` admin command.
+#[derive(Clone, Debug)]
+pub struct TenantRule {
+    pub id: u8,
+    pub name: String,
+    pub prefixes: Vec<Vec<u8>>,
+    pub tokens: Vec<Vec<u8>>,
+    pub quota_pages: u64,
+}
+
+/// The tenant registry: rules + counters + per-tenant size collectors.
+/// One per [`ShardedStore`](crate::store::sharded::ShardedStore); also
+/// the store's [`TenantSink`], so byte accounting flows from the same
+/// insert/free paths that keep the slab stats honest.
+pub struct TenantRegistry {
+    /// False until a non-default tenant is defined: attribution and
+    /// per-request counting short-circuit to one relaxed load, so a
+    /// single-tenant server pays nothing for this layer.
+    active: AtomicBool,
+    page_size: usize,
+    /// f64 bits (atomics keep the tuning knobs settable after the
+    /// registry is shared).
+    divergence_threshold: AtomicU64,
+    reclaim_batch: AtomicUsize,
+    rules: RwLock<Rules>,
+    counters: Vec<TenantCounters>,
+    collectors: Vec<Arc<SizeCollector>>,
+}
+
+impl TenantRegistry {
+    /// An inactive registry (default tenant only).
+    pub fn new(page_size: usize) -> Self {
+        Self::with_settings(page_size, &[], DEFAULT_DIVERGENCE, DEFAULT_RECLAIM_BATCH)
+            .expect("empty spec list is always valid")
+    }
+
+    /// Build from configured specs plus the arbitration knobs.
+    pub fn with_settings(
+        page_size: usize,
+        specs: &[TenantSpec],
+        divergence_threshold: f64,
+        reclaim_batch: usize,
+    ) -> Result<Self, String> {
+        let reg = TenantRegistry {
+            active: AtomicBool::new(false),
+            page_size: page_size.max(1),
+            divergence_threshold: AtomicU64::new(divergence_threshold.to_bits()),
+            reclaim_batch: AtomicUsize::new(reclaim_batch.max(1)),
+            rules: RwLock::new(Rules {
+                names: vec!["default".to_string()],
+                prefixes: Vec::new(),
+                tokens: Vec::new(),
+                quotas: vec![0],
+            }),
+            counters: (0..MAX_TENANTS).map(|_| TenantCounters::default()).collect(),
+            collectors: (0..MAX_TENANTS)
+                .map(|_| Arc::new(SizeCollector::default()))
+                .collect(),
+        };
+        for s in specs {
+            reg.define(&s.name, &s.prefix, Some(s.quota_pages))?;
+        }
+        Ok(reg)
+    }
+
+    /// True once any non-default tenant exists.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn divergence_threshold(&self) -> f64 {
+        f64::from_bits(self.divergence_threshold.load(Ordering::Relaxed))
+    }
+
+    /// Per-shard item budget for one arbitration reclaim pass.
+    pub fn reclaim_batch(&self) -> usize {
+        self.reclaim_batch.load(Ordering::Relaxed)
+    }
+
+    /// Adjust the tuning knobs (config wiring after construction).
+    pub fn set_tuning(&self, divergence_threshold: f64, reclaim_batch: usize) {
+        self.divergence_threshold
+            .store(divergence_threshold.to_bits(), Ordering::Relaxed);
+        self.reclaim_batch
+            .store(reclaim_batch.max(1), Ordering::Relaxed);
+    }
+
+    fn id_of(rules: &Rules, name: &str) -> Option<u8> {
+        rules.names.iter().position(|n| n == name).map(|i| i as u8)
+    }
+
+    /// Define (or update) a tenant with a key-prefix rule and an
+    /// optional quota. Returns the tenant id. Existing traffic keeps
+    /// its stamped owner — a rule only affects attribution of **new**
+    /// requests.
+    pub fn define(
+        &self,
+        name: &str,
+        prefix: &[u8],
+        quota_pages: Option<u64>,
+    ) -> Result<u8, String> {
+        if name.is_empty() || name == "default" {
+            return Err("tenant name must be non-empty and not 'default'".into());
+        }
+        if prefix.is_empty() {
+            return Err("tenant prefix must be non-empty".into());
+        }
+        let mut r = self.rules.write().unwrap();
+        let id = match Self::id_of(&r, name) {
+            Some(id) => id,
+            None => {
+                if r.names.len() >= MAX_TENANTS {
+                    return Err(format!("tenant limit reached ({MAX_TENANTS})"));
+                }
+                r.names.push(name.to_string());
+                r.quotas.push(0);
+                (r.names.len() - 1) as u8
+            }
+        };
+        r.prefixes.retain(|(p, _)| p != prefix);
+        r.prefixes.push((prefix.to_vec(), id));
+        r.prefixes.sort_by(|a, b| b.0.len().cmp(&a.0.len()));
+        if let Some(q) = quota_pages {
+            r.quotas[id as usize] = q;
+        }
+        self.active.store(true, Ordering::Release);
+        Ok(id)
+    }
+
+    /// Bind a meta `O` opaque token to an existing tenant (exact match;
+    /// outranks any prefix rule).
+    pub fn set_token(&self, name: &str, token: &[u8]) -> Result<u8, String> {
+        if token.is_empty() {
+            return Err("token must be non-empty".into());
+        }
+        let mut r = self.rules.write().unwrap();
+        let id = Self::id_of(&r, name).ok_or_else(|| format!("unknown tenant '{name}'"))?;
+        r.tokens.retain(|(t, _)| t != token);
+        r.tokens.push((token.to_vec(), id));
+        Ok(id)
+    }
+
+    /// Set a tenant's soft quota in pages (0 = unlimited).
+    pub fn set_quota(&self, name: &str, pages: u64) -> Result<u8, String> {
+        let mut r = self.rules.write().unwrap();
+        let id = Self::id_of(&r, name).ok_or_else(|| format!("unknown tenant '{name}'"))?;
+        r.quotas[id as usize] = pages;
+        Ok(id)
+    }
+
+    /// Attribute a request: explicit meta `O` token first, then the
+    /// longest matching key prefix, else the default tenant.
+    /// Allocation-free; `opaque` is empty for classic-protocol
+    /// requests.
+    #[inline]
+    pub fn attribute(&self, key: &[u8], opaque: &[u8]) -> u8 {
+        if !self.active() {
+            return DEFAULT_TENANT;
+        }
+        let r = self.rules.read().unwrap();
+        if !opaque.is_empty() {
+            for (tok, id) in &r.tokens {
+                if tok.as_slice() == opaque {
+                    return *id;
+                }
+            }
+        }
+        for (p, id) in &r.prefixes {
+            if key.starts_with(p) {
+                return *id;
+            }
+        }
+        DEFAULT_TENANT
+    }
+
+    /// Count one get (hit or miss) against a tenant.
+    #[inline]
+    pub fn record_get(&self, tenant: u8, hit: bool) {
+        let c = &self.counters[tenant as usize % MAX_TENANTS];
+        c.gets.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            c.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            c.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one storage command against a tenant.
+    #[inline]
+    pub fn record_set(&self, tenant: u8) {
+        self.counters[tenant as usize % MAX_TENANTS]
+            .sets
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The per-tenant size histogram collector (the optimizer's
+    /// per-tenant learning input).
+    pub fn collector(&self, tenant: u8) -> &Arc<SizeCollector> {
+        &self.collectors[tenant as usize % MAX_TENANTS]
+    }
+
+    /// Per-tenant histograms with at least `min_total` samples, for
+    /// the per-tenant geometry pass. Only defined tenants are reported.
+    pub fn tenant_histograms(&self, min_total: u64) -> Vec<(u8, SizeHistogram)> {
+        let n = self.rules.read().unwrap().names.len();
+        (0..n)
+            .filter(|&i| self.collectors[i].total() >= min_total.max(1))
+            .map(|i| (i as u8, self.collectors[i].snapshot()))
+            .collect()
+    }
+
+    fn used_pages(&self, id: usize) -> u64 {
+        self.counters[id].bytes_live.load(Ordering::Relaxed) / self.page_size as u64
+    }
+
+    /// Evaluate arbitration: a bitmask of tenants to reclaim from.
+    ///
+    /// Two triggers, Memshare-style:
+    /// 1. **Quota**: any tenant whose live bytes exceed its soft page
+    ///    quota.
+    /// 2. **Need**: need = window misses per live byte — the marginal
+    ///    benefit proxy (a tenant missing a lot relative to its
+    ///    footprint gains the most from extra memory; one holding many
+    ///    bytes it rarely misses on gains the least). When the neediest
+    ///    tenant's need exceeds `NEED_RATIO`× the least needy holder's,
+    ///    the low-need tenant donates from its cold tail.
+    ///
+    /// Also advances the per-tenant need window. Returns 0 when
+    /// inactive or nothing should move.
+    pub fn arbitration_mask(&self) -> u64 {
+        if !self.active() {
+            return 0;
+        }
+        let (n, quotas) = {
+            let r = self.rules.read().unwrap();
+            (r.names.len(), r.quotas.clone())
+        };
+        let mut mask = 0u64;
+        let mut needs: Vec<(usize, f64, u64)> = Vec::with_capacity(n);
+        for id in 0..n {
+            let c = &self.counters[id];
+            if quotas[id] > 0 && self.used_pages(id) > quotas[id] {
+                mask |= 1 << id;
+            }
+            let gets = c.gets.load(Ordering::Relaxed);
+            let misses = c.misses.load(Ordering::Relaxed);
+            let wgets = c.win_gets.swap(gets, Ordering::Relaxed);
+            let wmiss = c.win_misses.swap(misses, Ordering::Relaxed);
+            let dgets = gets.saturating_sub(wgets);
+            let dmiss = misses.saturating_sub(wmiss);
+            let bytes = c.bytes_live.load(Ordering::Relaxed);
+            if dgets > 0 {
+                needs.push((id, dmiss as f64 / bytes.max(1) as f64, bytes));
+            }
+        }
+        // need-based donation: only tenants holding at least one page
+        // can donate, and only when the spread is decisive
+        if needs.len() >= 2 {
+            let (max_id, max_need, _) = *needs
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let donors: Vec<&(usize, f64, u64)> = needs
+                .iter()
+                .filter(|&&(id, _, bytes)| id != max_id && bytes >= self.page_size as u64)
+                .collect();
+            if let Some(&&(min_id, min_need, _)) = donors
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            {
+                if max_need > NEED_RATIO * (min_need + 1e-12) {
+                    mask |= 1 << min_id;
+                }
+            }
+        }
+        mask
+    }
+
+    /// Snapshot for `stats tenants` (defined tenants only, id order).
+    pub fn stats_snapshot(&self) -> Vec<TenantStat> {
+        let r = self.rules.read().unwrap();
+        (0..r.names.len())
+            .map(|id| {
+                let c = &self.counters[id];
+                TenantStat {
+                    id: id as u8,
+                    name: r.names[id].clone(),
+                    gets: c.gets.load(Ordering::Relaxed),
+                    hits: c.hits.load(Ordering::Relaxed),
+                    misses: c.misses.load(Ordering::Relaxed),
+                    sets: c.sets.load(Ordering::Relaxed),
+                    bytes_live: c.bytes_live.load(Ordering::Relaxed),
+                    items_live: c.items_live.load(Ordering::Relaxed),
+                    bytes_written: c.bytes_written.load(Ordering::Relaxed),
+                    evictions: c.evictions.load(Ordering::Relaxed),
+                    quota_evictions: c.quota_evictions.load(Ordering::Relaxed),
+                    quota_pages: r.quotas[id],
+                    used_pages: c.bytes_live.load(Ordering::Relaxed) / self.page_size as u64,
+                }
+            })
+            .collect()
+    }
+
+    /// Snapshot of the rule tables for `tenants list`.
+    pub fn rules_snapshot(&self) -> Vec<TenantRule> {
+        let r = self.rules.read().unwrap();
+        (0..r.names.len())
+            .map(|id| TenantRule {
+                id: id as u8,
+                name: r.names[id].clone(),
+                prefixes: r
+                    .prefixes
+                    .iter()
+                    .filter(|(_, t)| *t as usize == id)
+                    .map(|(p, _)| p.clone())
+                    .collect(),
+                tokens: r
+                    .tokens
+                    .iter()
+                    .filter(|(_, t)| *t as usize == id)
+                    .map(|(t, _)| t.clone())
+                    .collect(),
+                quota_pages: r.quotas[id],
+            })
+            .collect()
+    }
+
+    /// `stats reset`: zero the cumulative counters and size histograms
+    /// **without dropping rules** and without touching the live gauges
+    /// (`bytes_live`/`items_live` mirror resident memory, not history).
+    pub fn reset_counters(&self) {
+        for c in &self.counters {
+            c.gets.store(0, Ordering::Relaxed);
+            c.hits.store(0, Ordering::Relaxed);
+            c.misses.store(0, Ordering::Relaxed);
+            c.sets.store(0, Ordering::Relaxed);
+            c.bytes_written.store(0, Ordering::Relaxed);
+            c.evictions.store(0, Ordering::Relaxed);
+            c.quota_evictions.store(0, Ordering::Relaxed);
+            c.win_gets.store(0, Ordering::Relaxed);
+            c.win_misses.store(0, Ordering::Relaxed);
+        }
+        for col in &self.collectors {
+            col.reset();
+        }
+    }
+}
+
+impl TenantSink for TenantRegistry {
+    fn on_store(&self, tenant: u8, total: usize) {
+        let c = &self.counters[tenant as usize % MAX_TENANTS];
+        c.bytes_live.fetch_add(total as u64, Ordering::Relaxed);
+        c.items_live.fetch_add(1, Ordering::Relaxed);
+        c.bytes_written.fetch_add(total as u64, Ordering::Relaxed);
+        if self.active() {
+            self.collectors[tenant as usize % MAX_TENANTS].record(total);
+        }
+    }
+
+    fn on_free(&self, tenant: u8, total: usize) {
+        let c = &self.counters[tenant as usize % MAX_TENANTS];
+        c.bytes_live.fetch_sub(total as u64, Ordering::Relaxed);
+        c.items_live.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn on_evict(&self, tenant: u8, quota: bool) {
+        let c = &self.counters[tenant as usize % MAX_TENANTS];
+        c.evictions.fetch_add(1, Ordering::Relaxed);
+        if quota {
+            c.quota_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Total-variation distance between two size distributions, over 64
+/// coarse 256-byte buckets. 0 = identical, 1 = disjoint. The
+/// per-tenant geometry pass runs when the max pairwise divergence
+/// clears the registry threshold.
+pub fn histogram_divergence(a: &SizeHistogram, b: &SizeHistogram) -> f64 {
+    let (ta, tb) = (a.total_items(), b.total_items());
+    if ta == 0 || tb == 0 {
+        return 0.0;
+    }
+    let mut pa = [0f64; 64];
+    let mut pb = [0f64; 64];
+    for (s, c) in a.iter() {
+        pa[(s / 256).min(63)] += c as f64 / ta as f64;
+    }
+    for (s, c) in b.iter() {
+        pb[(s / 256).min(63)] += c as f64 / tb as f64;
+    }
+    0.5 * pa.iter().zip(pb.iter()).map(|(x, y)| (x - y).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> TenantRegistry {
+        TenantRegistry::new(1 << 20)
+    }
+
+    #[test]
+    fn inactive_registry_attributes_everything_to_default() {
+        let r = reg();
+        assert!(!r.active());
+        assert_eq!(r.attribute(b"app_k1", b""), DEFAULT_TENANT);
+        assert_eq!(r.attribute(b"anything", b"tok"), DEFAULT_TENANT);
+        assert_eq!(r.arbitration_mask(), 0);
+    }
+
+    #[test]
+    fn longest_prefix_wins() {
+        let r = reg();
+        let a = r.define("app", b"app_", None).unwrap();
+        let ab = r.define("app-big", b"app_big_", None).unwrap();
+        assert!(r.active());
+        assert_eq!(r.attribute(b"app_k", b""), a);
+        assert_eq!(r.attribute(b"app_big_k", b""), ab);
+        assert_eq!(r.attribute(b"other", b""), DEFAULT_TENANT);
+    }
+
+    #[test]
+    fn opaque_token_outranks_prefix() {
+        let r = reg();
+        let a = r.define("app", b"app_", None).unwrap();
+        let b = r.define("batch", b"batch_", None).unwrap();
+        r.set_token("batch", b"BATCHTOK").unwrap();
+        // key matches app's prefix, but the token says batch
+        assert_eq!(r.attribute(b"app_k", b"BATCHTOK"), b);
+        // unknown token falls back to the prefix
+        assert_eq!(r.attribute(b"app_k", b"WHO"), a);
+    }
+
+    #[test]
+    fn define_updates_in_place_and_caps_at_max() {
+        let r = reg();
+        let id = r.define("app", b"app_", Some(4)).unwrap();
+        assert_eq!(r.define("app", b"app2_", None).unwrap(), id);
+        let rules = r.rules_snapshot();
+        let app = &rules[id as usize];
+        assert_eq!(app.prefixes.len(), 2);
+        assert_eq!(app.quota_pages, 4);
+        for i in 0..MAX_TENANTS - 2 {
+            r.define(&format!("t{i}"), format!("t{i}_").as_bytes(), None)
+                .unwrap();
+        }
+        assert!(r.define("overflow", b"x_", None).is_err());
+        assert!(r.define("default", b"d_", None).is_err());
+    }
+
+    #[test]
+    fn sink_accounting_balances() {
+        let r = reg();
+        let a = r.define("app", b"app_", None).unwrap();
+        r.on_store(a, 600);
+        r.on_store(a, 400);
+        r.on_free(a, 600);
+        let s = &r.stats_snapshot()[a as usize];
+        assert_eq!(s.bytes_live, 400);
+        assert_eq!(s.items_live, 1);
+        assert_eq!(s.bytes_written, 1000);
+        assert_eq!(r.collector(a).total(), 2, "collector fed from writes");
+    }
+
+    #[test]
+    fn reset_clears_counters_keeps_rules_and_gauges() {
+        let r = reg();
+        let a = r.define("app", b"app_", Some(2)).unwrap();
+        r.record_get(a, true);
+        r.record_get(a, false);
+        r.record_set(a);
+        r.on_store(a, 512);
+        r.on_evict(a, true);
+        r.reset_counters();
+        let s = &r.stats_snapshot()[a as usize];
+        assert_eq!((s.gets, s.hits, s.misses, s.sets), (0, 0, 0, 0));
+        assert_eq!((s.evictions, s.quota_evictions, s.bytes_written), (0, 0, 0));
+        assert_eq!(s.bytes_live, 512, "live gauge survives reset");
+        assert_eq!(s.items_live, 1);
+        assert_eq!(s.quota_pages, 2, "rules survive reset");
+        assert_eq!(r.attribute(b"app_k", b""), a, "attribution survives reset");
+        assert_eq!(r.collector(a).total(), 0, "histogram resets");
+    }
+
+    #[test]
+    fn quota_overage_sets_mask_bit() {
+        let r = TenantRegistry::new(1024);
+        let a = r.define("app", b"app_", Some(2)).unwrap();
+        r.on_store(a, 4096); // 4 pages live > 2-page quota
+        assert_eq!(r.arbitration_mask() & (1 << a), 1 << a);
+        r.on_free(a, 4096);
+        r.on_store(a, 1024);
+        assert_eq!(r.arbitration_mask() & (1 << a), 0);
+    }
+
+    #[test]
+    fn need_spread_marks_low_need_holder() {
+        let r = TenantRegistry::new(1024);
+        let a = r.define("needy", b"a_", None).unwrap();
+        let b = r.define("hoarder", b"b_", None).unwrap();
+        // hoarder: lots of bytes, no misses; needy: few bytes, misses
+        r.on_store(b, 64 * 1024);
+        r.on_store(a, 512);
+        r.arbitration_mask(); // open the window
+        for _ in 0..100 {
+            r.record_get(a, false);
+        }
+        for _ in 0..100 {
+            r.record_get(b, true);
+        }
+        let mask = r.arbitration_mask();
+        assert_eq!(mask & (1 << b), 1 << b, "hoarder donates");
+        assert_eq!(mask & (1 << a), 0, "needy keeps its memory");
+    }
+
+    #[test]
+    fn spec_list_parses() {
+        let specs = TenantSpec::parse_list("app=app_:64, img=img_ ,").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "app");
+        assert_eq!(specs[0].prefix, b"app_");
+        assert_eq!(specs[0].quota_pages, 64);
+        assert_eq!(specs[1].quota_pages, 0);
+        assert!(TenantSpec::parse_list("noequals").is_err());
+        assert!(TenantSpec::parse_list("a=p:zzz").is_err());
+        assert!(TenantSpec::parse_list("=p").is_err());
+    }
+
+    #[test]
+    fn divergence_detects_disjoint_and_identical() {
+        let mut a = SizeHistogram::new(16384);
+        let mut b = SizeHistogram::new(16384);
+        for _ in 0..1000 {
+            a.record(120);
+            b.record(9000);
+        }
+        assert!(histogram_divergence(&a, &b) > 0.9, "disjoint sizes");
+        assert!(histogram_divergence(&a, &a) < 1e-9, "identical");
+        let empty = SizeHistogram::new(64);
+        assert_eq!(histogram_divergence(&a, &empty), 0.0);
+    }
+}

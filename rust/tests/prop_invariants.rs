@@ -510,6 +510,115 @@ fn prop_meta_ms_tokens_roundtrip() {
     });
 }
 
+// ----------------------------------------------------------------- tenants
+
+#[test]
+fn prop_tenant_attribution_matches_model() {
+    use slabforge::tenant::TenantRegistry;
+    check("tenant attribution", 30, |rng| {
+        let reg = TenantRegistry::new(1 << 20);
+        // random rules over a tiny alphabet so prefixes nest and shadow
+        let mut model: Vec<(Vec<u8>, u8)> = Vec::new();
+        let n = 1 + rng.gen_range(6) as usize;
+        for i in 0..n {
+            let plen = 1 + rng.gen_range(4) as usize;
+            let p: Vec<u8> = (0..plen).map(|_| b'a' + rng.gen_range(3) as u8).collect();
+            let id = reg.define(&format!("t{i}"), &p, None).unwrap();
+            model.retain(|(q, _)| q != &p);
+            model.push((p, id));
+        }
+        let tok: Vec<u8> = (0..6).map(|_| b'A' + rng.gen_range(26) as u8).collect();
+        let tid = reg.set_token("t1", &tok).unwrap();
+        for _ in 0..200 {
+            let klen = rng.gen_range(8) as usize;
+            let k: Vec<u8> = (0..klen).map(|_| b'a' + rng.gen_range(3) as u8).collect();
+            // an exact opaque-token match outranks any prefix
+            assert_eq!(reg.attribute(&k, &tok), tid, "token must win");
+            // otherwise: longest matching prefix, else the default
+            // (equal-length matching prefixes are impossible — `define`
+            // deduplicates — so the model is unambiguous)
+            let expect = model
+                .iter()
+                .filter(|(p, _)| k.starts_with(p))
+                .max_by_key(|(p, _)| p.len())
+                .map_or(0, |(_, id)| *id);
+            assert_eq!(reg.attribute(&k, b""), expect, "key {k:?}");
+            // an unknown token falls through to the prefix rules
+            assert_eq!(reg.attribute(&k, b"\xffnope"), expect, "key {k:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_tenant_bytes_conserved_under_churn() {
+    use slabforge::store::sharded::ShardedStore;
+    use slabforge::store::store::MetaSetOpts;
+    use std::sync::Arc;
+    check("tenant byte conservation", 8, |rng| {
+        // small pages + small memory: eviction, quota reclaim, and
+        // overwrite re-stamping all fire
+        let store = Arc::new(
+            ShardedStore::with(
+                ChunkSizePolicy::default(),
+                64 << 10,
+                4 << 20,
+                true,
+                2,
+                Clock::System,
+            )
+            .unwrap(),
+        );
+        let reg = store.tenants().clone();
+        reg.define("t1", b"a:", None).unwrap();
+        reg.define("t2", b"b:", Some(1)).unwrap(); // 1-page soft quota
+        let mut live: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..600 {
+            match rng.gen_range(10) {
+                0..=5 => {
+                    let pre: &[u8] = [&b"a:"[..], b"b:", b"c:"][rng.gen_range(3) as usize];
+                    let mut key = pre.to_vec();
+                    key.extend_from_slice(&gen::key(rng, 10));
+                    let vlen = 1 + rng.gen_range(3000) as usize;
+                    let opts = MetaSetOpts {
+                        tenant: reg.attribute(&key, b""),
+                        ..MetaSetOpts::set(0, 0)
+                    };
+                    if store.meta_set(&key, &vec![b'v'; vlen], &opts).is_ok() {
+                        live.push(key);
+                    }
+                }
+                6 | 7 => {
+                    if !live.is_empty() {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        let key = live.swap_remove(i);
+                        store.delete(&key);
+                        live.retain(|k| k != &key);
+                    }
+                }
+                8 => {
+                    store.maintain_all(64);
+                }
+                _ => {
+                    // quota/need arbitration exactly as the maintainer
+                    // runs it
+                    let mask = reg.arbitration_mask();
+                    if mask != 0 {
+                        store.reclaim_tenants(mask, 1 + rng.gen_range(64) as usize);
+                    }
+                }
+            }
+        }
+        // conservation: per-tenant residency gauges sum to exactly what
+        // the allocator carries, across eviction/reclaim/overwrite
+        let stats = reg.stats_snapshot();
+        let tenant_bytes: u64 = stats.iter().map(|t| t.bytes_live).sum();
+        let tenant_items: u64 = stats.iter().map(|t| t.items_live).sum();
+        let slab = store.slab_stats();
+        assert_eq!(tenant_bytes, slab.requested_bytes, "byte conservation");
+        assert_eq!(tenant_items, store.len() as u64, "item conservation");
+    });
+}
+
 // ------------------------------------------------------------ rng sanity
 
 #[test]

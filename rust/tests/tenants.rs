@@ -1,0 +1,198 @@
+//! Multi-tenant attribution over the wire: the `tenants` admin
+//! command, per-tenant `stats tenants` counters, and the attribution
+//! edge cases — meta `O` token vs key prefix precedence, binary
+//! (base64) keys, the default tenant, runtime rule addition, and
+//! `stats reset` semantics.
+
+use slabforge::client::Client;
+use slabforge::server::{Server, ServerHandle};
+use slabforge::slab::policy::ChunkSizePolicy;
+use slabforge::slab::PAGE_SIZE;
+use slabforge::store::sharded::ShardedStore;
+use slabforge::store::store::Clock;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn server() -> (ServerHandle, Arc<ShardedStore>) {
+    let store = Arc::new(
+        ShardedStore::with(
+            ChunkSizePolicy::default(),
+            PAGE_SIZE,
+            64 << 20,
+            true,
+            2,
+            Clock::System,
+        )
+        .unwrap(),
+    );
+    let handle = Server::new(store.clone()).start("127.0.0.1:0").unwrap();
+    (handle, store)
+}
+
+/// `stats tenants` field for one tenant id, parsed as u64.
+fn tstat(m: &BTreeMap<String, String>, id: u8, field: &str) -> u64 {
+    m[&format!("{id}:{field}")].parse().unwrap()
+}
+
+#[test]
+fn admin_command_defines_lists_and_rejects() {
+    let (handle, _store) = server();
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    // a fresh server knows only the default tenant; bare `tenants`
+    // defaults to `list`
+    let rows = c.tenants("").unwrap();
+    assert_eq!(
+        rows,
+        vec!["TENANT 0 default prefixes=- tokens=0 quota=0", "END"]
+    );
+
+    assert_eq!(c.tenants("define acme a: 4").unwrap(), vec!["OK 1"]);
+    assert_eq!(c.tenants("token acme tokA").unwrap(), vec!["OK 1"]);
+    assert_eq!(c.tenants("quota acme 8").unwrap(), vec!["OK 1"]);
+    let rows = c.tenants("list").unwrap();
+    assert_eq!(
+        rows,
+        vec![
+            "TENANT 0 default prefixes=- tokens=0 quota=0",
+            "TENANT 1 acme prefixes=a: tokens=1 quota=8",
+            "END"
+        ]
+    );
+
+    // malformed control lines answer CLIENT_ERROR, not silence
+    assert!(c.tenants("define onlyname").is_err());
+    assert!(c.tenants("define bad2 p: notanumber").is_err());
+    assert!(c.tenants("quota ghost 3").is_err(), "unknown tenant");
+    assert!(c.tenants("bogus").is_err());
+    // the connection survives the errors
+    assert_eq!(c.tenants("define beta b:").unwrap(), vec!["OK 2"]);
+    handle.shutdown();
+}
+
+#[test]
+fn meta_token_outranks_prefix_and_unmatched_falls_to_default() {
+    let (handle, _store) = server();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.tenants("define pref x:").unwrap(); // id 1
+    c.tenants("define tok zz:").unwrap(); // id 2
+    c.tenants("token tok T1").unwrap();
+
+    // key matches tenant 1's prefix, but the meta `O` token wins
+    assert_eq!(c.ms("x:key", b"v1", &["OT1"]).unwrap().code, "HD");
+    // same key without the token: the prefix rule attributes it
+    assert_eq!(c.ms("x:key", b"v2", &[]).unwrap().code, "HD");
+    // no rule matches: default tenant absorbs it
+    c.set("plain", b"v3", 0, 0).unwrap();
+
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(m["0:name"], "default");
+    assert_eq!(m["1:name"], "pref");
+    assert_eq!(m["2:name"], "tok");
+    assert_eq!(tstat(&m, 2, "cmd_set"), 1, "token beats prefix");
+    assert_eq!(tstat(&m, 1, "cmd_set"), 1);
+    assert_eq!(tstat(&m, 0, "cmd_set"), 1);
+
+    // reads attribute the same way, and hits/misses both count
+    assert_eq!(c.mg("x:key", &["v", "OT1"]).unwrap().code, "VA");
+    assert!(c.get("x:key").unwrap().is_some());
+    assert!(c.get("x:gone").unwrap().is_none());
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(
+        (tstat(&m, 2, "cmd_get"), tstat(&m, 2, "get_hits")),
+        (1, 1)
+    );
+    assert_eq!(
+        (tstat(&m, 1, "cmd_get"), tstat(&m, 1, "get_hits"), tstat(&m, 1, "get_misses")),
+        (2, 1, 1)
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn binary_keys_attribute_through_b64() {
+    let (handle, store) = server();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    // a prefix with bytes the text protocol forbids can only be
+    // defined through the API (the wire grammar is token-based)
+    store.tenants().define("bin", b"\xffp:", None).unwrap();
+
+    // b64("\xffp:a") — the store sees the decoded binary key, and so
+    // must attribution
+    let k = "/3A6YQ==";
+    assert_eq!(c.ms(k, b"v", &["b"]).unwrap().code, "HD");
+    assert_eq!(c.mg(k, &["v", "b"]).unwrap().code, "VA");
+
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(tstat(&m, 1, "cmd_set"), 1);
+    assert_eq!(tstat(&m, 1, "get_hits"), 1);
+    assert!(tstat(&m, 1, "bytes") > 0);
+    assert_eq!(tstat(&m, 0, "cmd_set"), 0, "nothing leaked to default");
+    handle.shutdown();
+}
+
+#[test]
+fn runtime_rules_apply_to_new_traffic_only() {
+    let (handle, _store) = server();
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    // stored before the rule exists: owned by the default tenant
+    c.set("a:old", b"before", 0, 0).unwrap();
+    c.tenants("define acme a:").unwrap();
+    c.set("a:new", b"after", 0, 0).unwrap();
+
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(
+        tstat(&m, 1, "curr_items"),
+        1,
+        "only post-rule residency belongs to the new tenant"
+    );
+    assert_eq!(
+        tstat(&m, 0, "curr_items"),
+        1,
+        "pre-rule items keep their default-tenant stamp"
+    );
+    // *requests* follow the current rules, whoever owns the item
+    assert!(c.get("a:old").unwrap().is_some());
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(tstat(&m, 1, "cmd_get"), 1);
+
+    // overwriting the old key re-stamps it under the new rule
+    c.set("a:old", b"rewritten", 0, 0).unwrap();
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(tstat(&m, 1, "curr_items"), 2);
+    assert_eq!(tstat(&m, 0, "curr_items"), 0);
+    handle.shutdown();
+}
+
+#[test]
+fn stats_reset_clears_counters_but_keeps_rules_and_gauges() {
+    let (handle, _store) = server();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    c.tenants("define acme a: 4").unwrap();
+    c.set("a:k", b"payload", 0, 0).unwrap();
+    assert!(c.get("a:k").unwrap().is_some());
+
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(tstat(&m, 1, "cmd_set"), 1);
+    assert_eq!(tstat(&m, 1, "cmd_get"), 1);
+    let live = tstat(&m, 1, "bytes");
+    assert!(live > 0);
+
+    c.stats_reset().unwrap();
+
+    let m = c.stats(Some("tenants")).unwrap();
+    assert_eq!(tstat(&m, 1, "cmd_set"), 0, "cumulative counters reset");
+    assert_eq!(tstat(&m, 1, "cmd_get"), 0);
+    assert_eq!(tstat(&m, 1, "bytes_written"), 0);
+    assert_eq!(tstat(&m, 1, "bytes"), live, "residency gauges survive");
+    assert_eq!(tstat(&m, 1, "curr_items"), 1);
+    assert_eq!(tstat(&m, 1, "quota_pages"), 4, "quotas survive");
+    // and the rules themselves are untouched
+    assert_eq!(
+        c.tenants("list").unwrap()[1],
+        "TENANT 1 acme prefixes=a: tokens=0 quota=4"
+    );
+    assert!(c.get("a:k").unwrap().is_some(), "data untouched by reset");
+    handle.shutdown();
+}
