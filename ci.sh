@@ -30,6 +30,12 @@ SLABFORGE_CHAOS_SEED="$chaos_seed" \
     exit 1
 }
 
+echo "==> warm-restart chaos (subprocess SIGTERM/kill-9/corruption matrix)"
+cargo test -q --test chaos warm_restart_roundtrip_over_tcp
+cargo test -q --test chaos kill_nine_forces_cold_restart
+cargo test -q --test chaos manifest_corruption_and_geometry_mismatch_force_cold
+cargo test -q --test chaos manifest_write_failure_in_subprocess_degrades_next_boot_to_cold
+
 echo "==> torn-read stress, fixed seed (deterministic reproduction baseline)"
 cargo test -q --test torn_read_stress
 
@@ -114,6 +120,18 @@ grep -q "tenant_agg_hit_rate" "$root/BENCH_server.json" || {
 echo "==> verify tenant_hole_bytes landed in BENCH_server.json"
 grep -q "tenant_hole_bytes" "$root/BENCH_server.json" || {
     echo "error: BENCH_server.json is missing the per-tenant learner hole-bytes dim" >&2
+    exit 1
+}
+
+echo "==> verify restart_warm_ms landed in BENCH_server.json"
+grep -q "restart_warm_ms" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the warm-restart recovery row" >&2
+    exit 1
+}
+
+echo "==> verify restart_items_recovered landed in BENCH_server.json"
+grep -q "restart_items_recovered" "$root/BENCH_server.json" || {
+    echo "error: BENCH_server.json is missing the warm-restart recovered-items dim" >&2
     exit 1
 }
 

@@ -986,6 +986,66 @@ fn main() {
         );
     }
 
+    // ---- warm restart (mmap memory file + manifest recovery) ---------------
+    // Fill a persistence-enabled store, write the shutdown manifest, drop
+    // it, and time the next boot's metadata-only recovery. `restart_warm_ms`
+    // is the full open_or_cold wall time (manifest parse, integrity walk,
+    // page adoption, item re-link) — zero value bytes are copied.
+    #[cfg(unix)]
+    {
+        use slabforge::config::settings::Settings;
+        let n_items = if smoke() { 5_000usize } else { 50_000 };
+        let path = std::env::temp_dir().join(format!(
+            "slabforge-bench-restart-{}.mem",
+            std::process::id()
+        ));
+        let cleanup = |p: &std::path::Path| {
+            for suffix in ["", ".meta", ".dirty"] {
+                let mut f = p.as_os_str().to_os_string();
+                f.push(suffix);
+                let _ = std::fs::remove_file(std::path::PathBuf::from(f));
+            }
+        };
+        cleanup(&path);
+        let settings = Settings {
+            memory_file: Some(path.display().to_string()),
+            mem_limit: if smoke() { 32 << 20 } else { 256 << 20 },
+            shards: 4,
+            ..Settings::default()
+        };
+        let (cold_store, report) = slabforge::store::open_or_cold(&settings).unwrap();
+        assert_eq!(report.state, "cold", "fresh memory file boots cold");
+        let mut rng = Pcg64::new(81);
+        for i in 0..n_items {
+            let t = (rng.lognormal(518.0, 0.126).round() as usize).clamp(70, 16_000);
+            let v = vec![b'r'; value_len_for_total(t, true).unwrap()];
+            cold_store
+                .set(format!("r{i:07}").as_bytes(), &v, 0, 0)
+                .unwrap();
+        }
+        slabforge::store::write_manifest(&cold_store, &settings).unwrap();
+        drop(cold_store);
+        let t0 = Instant::now();
+        let (warm_store, report) = slabforge::store::open_or_cold(&settings).unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(report.state, "warm", "{}", report.reason);
+        assert_eq!(report.items_recovered, n_items as u64);
+        assert!(warm_store.get(b"r0000000").is_some(), "recovered data must serve");
+        println!(
+            "warm restart: {} items recovered in {} ({} discarded)",
+            report.items_recovered,
+            human_duration(elapsed),
+            report.items_discarded
+        );
+        rows.push(
+            Summary::from_samples("warm restart recovery", vec![elapsed], n_items as f64)
+                .with_dim("restart_warm_ms", elapsed.as_secs_f64() * 1e3)
+                .with_dim("restart_items_recovered", report.items_recovered as f64),
+        );
+        drop(warm_store);
+        cleanup(&path);
+    }
+
     println!(
         "server saw {} commands total, {} items resident",
         handle.metrics.snapshot().commands,

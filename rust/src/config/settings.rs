@@ -131,6 +131,10 @@ pub struct Settings {
     /// connections are shed and accepting pauses. 0 = unlimited
     /// (`memory.conn_buffer_budget` / `--conn-buffer-budget`).
     pub conn_buffer_budget: usize,
+    /// Path of the mmap-backed slab file enabling crash-consistent warm
+    /// restart (`memory.file` / `--memory-file`). `None` (the default)
+    /// keeps the cache purely in anonymous heap memory.
+    pub memory_file: Option<String>,
     pub policy: ChunkSizePolicy,
     pub optimizer: OptimizerSettings,
     /// Tenants defined at startup (`--tenants name=prefix[:quota],...`
@@ -170,6 +174,7 @@ impl Default for Settings {
             maintainer_interval_ms: DEFAULT_MAINTAINER_INTERVAL_MS,
             maintainer_batch: DEFAULT_MAINTAINER_BATCH,
             conn_buffer_budget: 0,
+            memory_file: None,
             policy: ChunkSizePolicy::default(),
             optimizer: OptimizerSettings::default(),
             tenants: Vec::new(),
@@ -281,6 +286,13 @@ impl Settings {
             s.conn_buffer_budget = v
                 .as_usize()
                 .ok_or_else(|| invalid("memory.conn_buffer_budget"))?;
+        }
+        if let Some(v) = doc.get("memory.file") {
+            let path = v.as_str().ok_or_else(|| invalid("memory.file"))?;
+            if path.is_empty() {
+                return Err(invalid("memory.file"));
+            }
+            s.memory_file = Some(path.to_string());
         }
 
         // slab policy: explicit sizes win over growth factor
@@ -540,6 +552,16 @@ artifacts_dir = "artifacts"
         let many: Vec<String> = (0..20).map(|i| format!("t{i}=p{i}_")).collect();
         let toml = format!("[tenants]\nrules = \"{}\"\n", many.join(","));
         assert!(Settings::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn memory_file_parses_with_off_by_default() {
+        let s = Settings::from_toml("").unwrap();
+        assert!(s.memory_file.is_none(), "warm restart must default off");
+        let s = Settings::from_toml("[memory]\nfile = \"/var/cache/slabforge.mem\"\n").unwrap();
+        assert_eq!(s.memory_file.as_deref(), Some("/var/cache/slabforge.mem"));
+        assert!(Settings::from_toml("[memory]\nfile = \"\"\n").is_err());
+        assert!(Settings::from_toml("[memory]\nfile = 7\n").is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!                    [--maintainer-batch N] [--conn-buffer-budget BYTES]
 //!                    [--tenants name=prefix[:quota],...]
 //!                    [--tenant-arbitrate-every N] [--tenant-divergence F]
-//!                    [--tenant-reclaim-batch N]
+//!                    [--tenant-reclaim-batch N] [--memory-file PATH]
 //! slabforge optimize --histogram sizes.csv [--k N] [--algorithm ...]
 //!                    [--backend rust|xla] [--seed N]
 //!                    # offline: emit a learned `-o slab_sizes` list
@@ -189,6 +189,12 @@ fn settings_from(args: &Args) -> Result<Settings, String> {
         }
         s.tenant_reclaim_batch = n;
     }
+    if let Some(path) = args.flag("memory-file") {
+        if path.is_empty() {
+            return Err("--memory-file needs a path".into());
+        }
+        s.memory_file = Some(path.to_string());
+    }
     if let Some(f) = args.flag_parse::<f64>("growth-factor").map_err(|e| e.to_string())? {
         s.policy = ChunkSizePolicy::Geometric {
             chunk_min: 96,
@@ -221,15 +227,25 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(s) => s,
         Err(e) => return fail(e),
     };
-    let store = match ShardedStore::new(&settings) {
-        Ok(s) => Arc::new(s),
+    // Warm-restart aware construction: recovers from --memory-file when
+    // the manifest validates, degrades loudly to cold otherwise.
+    let (store, restart) = match slabforge::store::open_or_cold(&settings) {
+        Ok((s, r)) => (Arc::new(s), r),
         Err(e) => return fail(e),
     };
+    match restart.state {
+        "warm" => eprintln!(
+            "restart: warm ({} items recovered, {} expired discarded, {} ms)",
+            restart.items_recovered, restart.items_discarded, restart.duration_ms
+        ),
+        "cold" => eprintln!("restart: cold ({})", restart.reason),
+        _ => {}
+    }
     let shutdown = Arc::new(AtomicBool::new(false));
     let collector = Arc::new(SizeCollector::default());
     store.set_observer(collector.clone());
 
-    let (control, _tuner_thread): (Arc<dyn slabforge::server::Control>, _) =
+    let (control, tuner_thread): (Arc<dyn slabforge::server::Control>, _) =
         if settings.optimizer.enabled {
             let tuner = match AutoTuner::new(
                 store.clone(),
@@ -252,7 +268,7 @@ fn cmd_serve(args: &Args) -> i32 {
             (Arc::new(NoControl), None)
         };
 
-    let _maintainer_thread = if settings.maintainer {
+    let maintainer_thread = if settings.maintainer {
         eprintln!(
             "maintainer: enabled (every {}ms, batch {})",
             settings.maintainer_interval_ms, settings.maintainer_batch
@@ -327,14 +343,27 @@ fn cmd_serve(args: &Args) -> i32 {
         settings.max_conns,
     );
 
-    serve_until_signal(handle, &shutdown)
+    serve_until_signal(
+        handle,
+        &shutdown,
+        &store,
+        &settings,
+        tuner_thread,
+        maintainer_thread,
+    )
 }
 
-/// Park until SIGTERM/SIGINT, then drain connections and exit cleanly.
+/// Park until SIGTERM/SIGINT, then drain connections, stop the
+/// background mutators, persist the warm-restart manifest (when
+/// `--memory-file` is active), and exit.
 #[cfg(target_os = "linux")]
 fn serve_until_signal(
     handle: slabforge::server::ServerHandle,
     tuner_shutdown: &AtomicBool,
+    store: &Arc<ShardedStore>,
+    settings: &Settings,
+    tuner_thread: Option<std::thread::JoinHandle<()>>,
+    maintainer_thread: Option<std::thread::JoinHandle<()>>,
 ) -> i32 {
     let term = slabforge::server::sys::install_term_flag();
     while !term.load(std::sync::atomic::Ordering::SeqCst) {
@@ -343,13 +372,38 @@ fn serve_until_signal(
     eprintln!("slabforge: signal received, draining connections");
     tuner_shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
     handle.shutdown();
-    0
+    // Join every background mutator before the export: a tuner kicking
+    // off a retune mid-manifest would split the snapshot across chunk
+    // generations (the writer detects that and degrades cold, but a
+    // clean join preserves the warm restart).
+    for (name, t) in [("optimizer", tuner_thread), ("maintainer", maintainer_thread)] {
+        if let Some(t) = t {
+            if t.join().is_err() {
+                eprintln!("slabforge: {name} thread panicked during shutdown");
+            }
+        }
+    }
+    match slabforge::store::write_manifest(store, settings) {
+        Ok(()) if store.region().is_some() => {
+            eprintln!("slabforge: warm-restart manifest written");
+            0
+        }
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("slabforge: manifest write failed ({e}); next start will be cold");
+            1
+        }
+    }
 }
 
 #[cfg(not(target_os = "linux"))]
 fn serve_until_signal(
     _handle: slabforge::server::ServerHandle,
     _tuner_shutdown: &AtomicBool,
+    _store: &Arc<ShardedStore>,
+    _settings: &Settings,
+    _tuner_thread: Option<std::thread::JoinHandle<()>>,
+    _maintainer_thread: Option<std::thread::JoinHandle<()>>,
 ) -> i32 {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

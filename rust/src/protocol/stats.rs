@@ -12,6 +12,7 @@ use crate::server::conn::OptimizeGauges;
 use crate::server::metrics::ConnCounters;
 use crate::slab::SlabStats;
 use crate::store::migrate::MigrationGauges;
+use crate::store::sharded::RestartSnapshot;
 use crate::store::store::StoreStats;
 use crate::tenant::TenantStat;
 use crate::util::histogram::SizeHistogram;
@@ -24,6 +25,7 @@ pub fn render_general(
     items: usize,
     uptime_secs: u64,
     conns: &ConnCounters,
+    restart: &RestartSnapshot,
 ) {
     stat(out, "uptime", uptime_secs);
     stat(out, "curr_connections", conns.curr);
@@ -70,6 +72,16 @@ pub fn render_general(
     stat(out, "bytes_wasted", slabs.hole_bytes);
     stat(out, "limit_maxbytes", slabs.page_budget * slabs.page_size);
     stat(out, "total_pages", slabs.pages_allocated);
+    // Warm-restart gauges are boot-scoped: they describe how THIS process
+    // came up and survive `stats reset` (window counters above restart at
+    // zero after a warm boot — recovery is not traffic).
+    stat(out, "restart_state", restart.state);
+    if !restart.reason.is_empty() {
+        stat(out, "restart_reason", &restart.reason);
+    }
+    stat(out, "restart_items_recovered", restart.items_recovered);
+    stat(out, "restart_items_discarded", restart.items_discarded);
+    stat(out, "restart_duration_ms", restart.duration_ms);
     out.extend_from_slice(b"END\r\n");
 }
 
@@ -197,6 +209,7 @@ mod tests {
             2,
             5,
             &conns,
+            &RestartSnapshot::default(),
         );
         let t = text(&out);
         assert!(t.contains("STAT curr_items 2"));
@@ -325,6 +338,7 @@ mod tests {
             0,
             0,
             &ConnCounters::default(),
+            &RestartSnapshot::default(),
         );
         let t = text(&out);
         assert!(t.contains("STAT maintainer_runs 12"), "{t}");
@@ -350,6 +364,7 @@ mod tests {
             0,
             0,
             &ConnCounters::default(),
+            &RestartSnapshot::default(),
         );
         let t = text(&out);
         assert!(t.contains("STAT seqlock_retries 7"), "{t}");
@@ -377,6 +392,7 @@ mod tests {
             0,
             0,
             &conns,
+            &RestartSnapshot::default(),
         );
         let t = text(&out);
         assert!(t.contains("STAT reactor_cross_shard 11"), "{t}");
@@ -384,6 +400,52 @@ mod tests {
         assert!(t.contains("STAT udp_datagrams_tx 150"), "{t}");
         assert!(t.contains("STAT udp_oversized_drops 2"), "{t}");
         assert!(t.contains("STAT udp_bad_frames 5"), "{t}");
+    }
+
+    #[test]
+    fn general_stats_contain_restart_gauges() {
+        let mut out = Vec::new();
+        let restart = RestartSnapshot {
+            state: "warm",
+            reason: String::new(),
+            items_recovered: 499,
+            items_discarded: 1,
+            duration_ms: 12,
+        };
+        render_general(
+            &mut out,
+            &StoreStats::default(),
+            &slab_stats_with_items(),
+            0,
+            0,
+            &ConnCounters::default(),
+            &restart,
+        );
+        let t = text(&out);
+        assert!(t.contains("STAT restart_state warm"), "{t}");
+        assert!(!t.contains("restart_reason"), "{t}");
+        assert!(t.contains("STAT restart_items_recovered 499"), "{t}");
+        assert!(t.contains("STAT restart_items_discarded 1"), "{t}");
+        assert!(t.contains("STAT restart_duration_ms 12"), "{t}");
+
+        let mut out = Vec::new();
+        let restart = RestartSnapshot {
+            state: "cold",
+            reason: "dirty-shutdown marker present".into(),
+            ..RestartSnapshot::default()
+        };
+        render_general(
+            &mut out,
+            &StoreStats::default(),
+            &slab_stats_with_items(),
+            0,
+            0,
+            &ConnCounters::default(),
+            &restart,
+        );
+        let t = text(&out);
+        assert!(t.contains("STAT restart_state cold"), "{t}");
+        assert!(t.contains("STAT restart_reason dirty-shutdown marker present"), "{t}");
     }
 
     #[test]

@@ -734,7 +734,15 @@ impl Exec<'_> {
                     .metrics
                     .map(|m| m.conn_counters())
                     .unwrap_or_default();
-                stats::render_general(out, &ops, &slabs, self.store.len(), uptime, &conns);
+                stats::render_general(
+                    out,
+                    &ops,
+                    &slabs,
+                    self.store.len(),
+                    uptime,
+                    &conns,
+                    &self.store.restart_snapshot(),
+                );
             }
         }
     }

@@ -8,6 +8,16 @@
 //! `extern "C"` against the system libc that `std` already links.
 //! Everything is wrapped in safe RAII types;
 //! `std::io::Error::last_os_error()` reads `errno` for us.
+//!
+//! **unwrap() audit (warm-restart PR).** Every `unwrap()`/`expect()` in
+//! this module lives under `#[cfg(test)]` — the production wrappers all
+//! return `io::Result` and let the caller decide (the reactor logs and
+//! degrades; startup fails loudly). The two non-Result paths are
+//! deliberate: `WakeFd::wake`/`drain` ignore errors because they run on
+//! the async wakeup path where the only recovery is "try again on the
+//! next wakeup", and `Epoll::drop` logs a failed `close(2)` instead of
+//! panicking — a double-close during shutdown teardown must never turn
+//! a clean drain into an abort.
 
 #![cfg(target_os = "linux")]
 
@@ -144,8 +154,13 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
-        unsafe {
-            close(self.fd);
+        let rc = unsafe { close(self.fd) };
+        if rc < 0 {
+            eprintln!(
+                "slabforge: close(epoll fd {}) failed during teardown: {}",
+                self.fd,
+                io::Error::last_os_error()
+            );
         }
     }
 }

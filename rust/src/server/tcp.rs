@@ -123,7 +123,11 @@ impl ServerHandle {
             // reuseport reactors need no poke — the eventfd wake above
             // already reached every event loop
             let _ = TcpStream::connect(self.addr);
-            let _ = t.join();
+            if t.join().is_err() {
+                // a panicked accept thread must not be silent: the warm
+                // shutdown path that follows relies on a quiesced server
+                eprintln!("slabforge: accept thread panicked during shutdown");
+            }
         }
         #[cfg(target_os = "linux")]
         if let Some(pool) = self.pool.take() {

@@ -13,6 +13,7 @@
 //! [`MIGRATION_PAGE_SLACK`] pages — not the 2× of a shadow copy.
 
 use super::class::{ChunkLoc, ClassStats, SlabClass};
+use super::mapfile::{PageBuf, SlabRegion};
 use super::policy::{ChunkSizePolicy, PolicyError};
 use std::fmt;
 
@@ -112,7 +113,10 @@ pub struct SlabAllocator {
     chunk_sizes: Vec<usize>,
     old: Option<OldGen>,
     /// Recycled page buffers (from drained old pages) awaiting reuse.
-    free_pages: Vec<Box<[u8]>>,
+    free_pages: Vec<PageBuf>,
+    /// Durable page source (warm restart). When attached, fresh pages
+    /// are extents of the mmap-backed file, never anonymous heap.
+    region: Option<SlabRegion>,
     page_size: usize,
     /// Carved pages across both generations (excludes `free_pages`).
     pages_allocated: usize,
@@ -126,8 +130,12 @@ pub struct SlabAllocator {
     /// microseconds before touching the bytes) has closed.
     ///
     /// [`drain_limbo`]: SlabAllocator::drain_limbo
-    limbo_fresh: Vec<Box<[u8]>>,
-    limbo_aged: Vec<Box<[u8]>>,
+    ///
+    /// Mapped buffers take the same route; dropping one returns its
+    /// extent to the region's free list (the bytes stay mapped, so the
+    /// optimistic-reader guarantee holds identically).
+    limbo_fresh: Vec<PageBuf>,
+    limbo_aged: Vec<PageBuf>,
 }
 
 impl SlabAllocator {
@@ -138,6 +146,17 @@ impl SlabAllocator {
         page_size: usize,
         mem_limit: usize,
     ) -> Result<Self, SlabError> {
+        SlabAllocator::with_region(policy, page_size, mem_limit, None)
+    }
+
+    /// Like [`SlabAllocator::new`], but carving pages from an
+    /// mmap-backed region when one is attached (warm restart).
+    pub fn with_region(
+        policy: &ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+        region: Option<SlabRegion>,
+    ) -> Result<Self, SlabError> {
         let chunk_sizes = policy.materialize(page_size)?;
         let classes = chunk_sizes.iter().map(|&s| SlabClass::new(s)).collect();
         Ok(SlabAllocator {
@@ -145,6 +164,7 @@ impl SlabAllocator {
             chunk_sizes,
             old: None,
             free_pages: Vec::new(),
+            region,
             page_size,
             pages_allocated: 0,
             page_budget: (mem_limit / page_size).max(1),
@@ -157,7 +177,7 @@ impl SlabAllocator {
     /// the field docs): it survives at least one [`drain_limbo`] call.
     ///
     /// [`drain_limbo`]: SlabAllocator::drain_limbo
-    fn condemn(&mut self, buf: Box<[u8]>) {
+    fn condemn(&mut self, buf: PageBuf) {
         self.limbo_fresh.push(buf);
     }
 
@@ -270,7 +290,7 @@ impl SlabAllocator {
     /// Obtain a page buffer: recycled first, fresh while under budget.
     /// Failpoint `slab.page_alloc` simulates exhaustion: the caller
     /// sees `NeedEviction` exactly as if the budget were spent.
-    fn take_page(&mut self) -> Option<Box<[u8]>> {
+    fn take_page(&mut self) -> Option<PageBuf> {
         if crate::util::failpoint::fired("slab.page_alloc") {
             return None;
         }
@@ -278,7 +298,13 @@ impl SlabAllocator {
             return Some(buf);
         }
         if self.pages_allocated < self.effective_budget() {
-            Some(vec![0u8; self.page_size].into_boxed_slice())
+            match &self.region {
+                // Region-backed: every page is a durable extent; an
+                // exhausted region reads as budget exhaustion (the
+                // region is sized for budget + migration slack).
+                Some(region) => region.take(),
+                None => Some(PageBuf::from(vec![0u8; self.page_size].into_boxed_slice())),
+            }
         } else {
             None
         }
@@ -290,7 +316,7 @@ impl SlabAllocator {
     /// full-budget drain recycles pages through the pool instead of
     /// paying a free + zeroed-realloc per page; `finish_migration`
     /// trims the pool back under the strict budget.
-    fn retire_page(&mut self, buf: Box<[u8]>) {
+    fn retire_page(&mut self, buf: PageBuf) {
         if self.pages_allocated + self.free_pages.len() < self.effective_budget() {
             self.free_pages.push(buf);
         } else {
@@ -366,6 +392,52 @@ impl SlabAllocator {
     #[inline]
     pub fn chunk_mut(&mut self, handle: ChunkHandle) -> &mut [u8] {
         self.classes[handle.class as usize].chunk_mut(handle.loc)
+    }
+
+    // ---------------------------------------------------- warm restart
+
+    /// The attached durable region, if any.
+    #[inline]
+    pub fn region(&self) -> Option<&SlabRegion> {
+        self.region.as_ref()
+    }
+
+    /// Adopt a recovered page at an exact `(class, slot)` with the
+    /// given live-chunk set (warm-restart recovery). Counts against the
+    /// page budget like any carved page.
+    pub fn restore_page(
+        &mut self,
+        class: u16,
+        slot: u32,
+        buf: PageBuf,
+        used: &[u32],
+    ) -> Result<(), String> {
+        let ci = class as usize;
+        if ci >= self.classes.len() {
+            return Err(format!("class {class} out of range"));
+        }
+        if buf.len() != self.page_size {
+            return Err(format!("page buffer is {} B, expected {}", buf.len(), self.page_size));
+        }
+        self.classes[ci].restore_page(slot, buf, used)?;
+        self.pages_allocated += 1;
+        Ok(())
+    }
+
+    /// `(class, page_slot, region_offset)` for every current-generation
+    /// page still holding items — the warm-restart manifest's page map.
+    /// Only meaningful once a migration has fully drained (the manifest
+    /// writer forces that first).
+    pub fn page_map(&self) -> Vec<(u16, u32, u64)> {
+        self.classes
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, c)| {
+                c.page_map()
+                    .into_iter()
+                    .map(move |(slot, off)| (ci as u16, slot, off))
+            })
+            .collect()
     }
 
     // ------------------------------------------------------- migration

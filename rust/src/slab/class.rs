@@ -7,6 +7,7 @@
 //! and the slot reused later — the building block of incremental slab
 //! migration, where old-geometry classes drain page by page.
 
+use super::mapfile::PageBuf;
 use super::page::Page;
 
 /// Location of a chunk within its class: (page slot, chunk index).
@@ -93,7 +94,7 @@ impl SlabClass {
 
     /// Grow the class by one page carved from `buf`; its chunks join
     /// the free list. Released slots are reused before new ones.
-    pub fn add_page(&mut self, buf: Box<[u8]>) {
+    pub fn add_page(&mut self, buf: impl Into<PageBuf>) {
         let page = Page::from_buf(buf, self.chunk_size);
         let slot = match self.vacant.pop() {
             Some(s) => s,
@@ -143,10 +144,69 @@ impl SlabClass {
         self.requested_bytes = self.requested_bytes - old_requested as u64 + new_requested as u64;
     }
 
+    /// Adopt a recovered page at an exact slot (warm-restart recovery).
+    /// `used` lists the chunk indexes holding live items; every other
+    /// chunk joins the free list. Slots between the current end and
+    /// `slot` are created vacant so `ChunkLoc::page` indexes from the
+    /// manifest stay valid verbatim. Requested-byte accounting arrives
+    /// later, per item, via [`SlabClass::reaccount`] as the store
+    /// re-links each resident.
+    pub fn restore_page(&mut self, slot: u32, buf: PageBuf, used: &[u32]) -> Result<(), String> {
+        let s = slot as usize;
+        while self.pages.len() <= s {
+            self.pages.push(None);
+            self.page_used.push(0);
+            self.item_head.push(super::NIL_ITEM);
+            self.vacant.push((self.pages.len() - 1) as u32);
+        }
+        if self.pages[s].is_some() {
+            return Err(format!("page slot {slot} restored twice"));
+        }
+        self.vacant.retain(|&v| v != slot);
+        let page = Page::from_buf(buf, self.chunk_size);
+        let count = page.chunk_count() as u32;
+        let mut is_used = vec![false; count as usize];
+        for &c in used {
+            if c >= count {
+                return Err(format!("chunk {c} out of range for page slot {slot}"));
+            }
+            if std::mem::replace(&mut is_used[c as usize], true) {
+                return Err(format!("chunk {c} on page slot {slot} restored twice"));
+            }
+        }
+        // Reverse order so the lowest offsets are handed out first.
+        for chunk in (0..count).rev() {
+            if !is_used[chunk as usize] {
+                self.free.push(ChunkLoc { page: slot, chunk });
+            }
+        }
+        self.pages[s] = Some(page);
+        self.page_used[s] = used.len() as u32;
+        self.item_head[s] = super::NIL_ITEM;
+        self.used_chunks += used.len();
+        Ok(())
+    }
+
+    /// `(slot, region_offset)` for every page still holding items — the
+    /// warm-restart manifest's page map. Heap-backed pages yield no
+    /// entry (persistence only makes sense with a mapped region).
+    pub fn page_map(&self) -> Vec<(u32, u64)> {
+        self.pages
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| p.is_some() && self.page_used[*i] > 0)
+            .filter_map(|(i, p)| {
+                p.as_ref()
+                    .and_then(Page::region_offset)
+                    .map(|off| (i as u32, off))
+            })
+            .collect()
+    }
+
     /// Release every fully drained page: their chunks leave the free
     /// list, their slots become reusable, and the raw buffers are
     /// handed back (for the allocator's free-page pool).
-    pub fn release_drained_pages(&mut self) -> Vec<Box<[u8]>> {
+    pub fn release_drained_pages(&mut self) -> Vec<PageBuf> {
         let mut drained = vec![false; self.pages.len()];
         let mut any = false;
         for (i, p) in self.pages.iter().enumerate() {
@@ -343,6 +403,28 @@ mod tests {
         assert_eq!(a.page, 0, "released slot comes back first");
         // nothing is drained now: slot 0 and slot 1 both hold items
         assert!(c.release_drained_pages().is_empty());
+    }
+
+    #[test]
+    fn restore_page_adopts_exact_slot_and_occupancy() {
+        let mut c = SlabClass::new(100);
+        // restore at slot 2: slots 0 and 1 materialise vacant so the
+        // manifest's ChunkLoc::page indexes stay valid verbatim
+        c.restore_page(2, PageBuf::from(buf(1000)), &[0, 3]).unwrap();
+        assert_eq!(c.pages(), 1);
+        assert_eq!(c.used_chunks(), 2);
+        assert_eq!(c.stats().free_chunks, 8);
+        // chunk 0 and 3 are live: a fresh alloc must not collide
+        let a = c.alloc(10).unwrap();
+        assert!(!(a.page == 2 && (a.chunk == 0 || a.chunk == 3)), "{a:?}");
+        // duplicate slot, out-of-range chunk, duplicate chunk: rejected
+        assert!(c.restore_page(2, PageBuf::from(buf(1000)), &[]).is_err());
+        assert!(c.restore_page(3, PageBuf::from(buf(1000)), &[10]).is_err());
+        assert!(c.restore_page(4, PageBuf::from(buf(1000)), &[1, 1]).is_err());
+        // a later add_page reuses the vacant low slots
+        c.add_page(buf(1000));
+        let b = c.alloc(1).unwrap();
+        assert!(b.page == 0 || b.page == 1, "{b:?}");
     }
 
     #[test]

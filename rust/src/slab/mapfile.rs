@@ -1,0 +1,434 @@
+//! mmap-backed slab region — the durable page arena behind `--memory-file`.
+//!
+//! When warm restart is enabled every slab page lives inside one large
+//! file-backed `MAP_SHARED` mapping instead of an anonymous heap
+//! allocation. Pages are carved from the region in `page_size` extents;
+//! a dropped extent returns to the region's in-process free list (the
+//! bytes stay mapped for the life of the process, so optimistic readers
+//! can never observe an unmapped page — the same guarantee the limbo
+//! list gives heap pages). At clean shutdown the region is `msync`ed
+//! and the metadata manifest (`store::restart`) records which extent
+//! every class/page-slot occupies, so the next process can re-mmap the
+//! file and adopt the pages in place — zero value-byte copies.
+//!
+//! Follows the repo's zero-crate FFI idiom (`server/sys.rs`): raw
+//! `extern "C"` prototypes, `io::Error::last_os_error()` on failure,
+//! and logged-never-panicking cleanup paths (a failed `munmap` during
+//! drain must not abort the process mid-shutdown).
+
+use crate::util::failpoint;
+use std::io;
+use std::ops::{Deref, DerefMut};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A page-sized buffer: either an anonymous heap allocation (the
+/// default) or an extent of the mmap-backed region (warm restart).
+/// Everything downstream (`Page`, `SlabClass`, the free-page pool)
+/// works on `PageBuf` and never cares which variant it holds.
+pub enum PageBuf {
+    Heap(Box<[u8]>),
+    Mapped(MappedPage),
+}
+
+impl PageBuf {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            PageBuf::Heap(b) => b.len(),
+            PageBuf::Mapped(m) => m.len,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Byte offset of this buffer inside its region, `None` for heap
+    /// buffers. The manifest's page map persists this.
+    #[inline]
+    pub fn region_offset(&self) -> Option<u64> {
+        match self {
+            PageBuf::Heap(_) => None,
+            PageBuf::Mapped(m) => Some(m.offset),
+        }
+    }
+}
+
+impl Deref for PageBuf {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        match self {
+            PageBuf::Heap(b) => b,
+            PageBuf::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+impl DerefMut for PageBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [u8] {
+        match self {
+            PageBuf::Heap(b) => b,
+            PageBuf::Mapped(m) => m.as_mut_slice(),
+        }
+    }
+}
+
+impl From<Box<[u8]>> for PageBuf {
+    fn from(b: Box<[u8]>) -> PageBuf {
+        PageBuf::Heap(b)
+    }
+}
+
+impl std::fmt::Debug for PageBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageBuf::Heap(b) => write!(f, "PageBuf::Heap({} B)", b.len()),
+            PageBuf::Mapped(m) => write!(f, "PageBuf::Mapped({} B @ {})", m.len, m.offset),
+        }
+    }
+}
+
+/// One `page_size` extent of the mapped region. Dropping it returns the
+/// extent to the region's free list; the mapping itself stays alive (and
+/// readable) until the region is dropped at process exit.
+pub struct MappedPage {
+    ptr: *mut u8,
+    len: usize,
+    offset: u64,
+    region: Arc<RegionInner>,
+}
+
+// The extent is exclusively owned by whoever holds the MappedPage, and
+// the backing mapping outlives it (kept alive by the Arc).
+unsafe impl Send for MappedPage {}
+unsafe impl Sync for MappedPage {}
+
+impl MappedPage {
+    #[inline]
+    fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl Drop for MappedPage {
+    fn drop(&mut self) {
+        // Return the extent for reuse; never unmaps (readers may still
+        // be probing these bytes under the seqlock).
+        if let Ok(mut free) = self.region.free.lock() {
+            free.push(self.offset);
+        }
+    }
+}
+
+struct RegionInner {
+    base: *mut u8,
+    len: usize,
+    page_size: usize,
+    path: PathBuf,
+    /// Free extent offsets, LIFO; initialised high→low so the lowest
+    /// offsets are handed out first (mirrors the chunk free lists).
+    free: Mutex<Vec<u64>>,
+}
+
+unsafe impl Send for RegionInner {}
+unsafe impl Sync for RegionInner {}
+
+impl Drop for RegionInner {
+    fn drop(&mut self) {
+        if let Err(e) = unmap(self.base, self.len) {
+            // Shutdown path: log, never panic (a poisoned drain would
+            // forfeit the manifest write).
+            eprintln!(
+                "slabforge: munmap of memory file {} failed: {e}",
+                self.path.display()
+            );
+        }
+    }
+}
+
+/// Handle to the mmap-backed slab arena; cheap to clone (all shards of
+/// a store carve pages from the same region).
+#[derive(Clone)]
+pub struct SlabRegion {
+    inner: Arc<RegionInner>,
+}
+
+impl SlabRegion {
+    /// Create (or truncate) `path` sized for `pages` extents of
+    /// `page_size` bytes and map it shared.
+    pub fn create(path: &Path, page_size: usize, pages: usize) -> io::Result<SlabRegion> {
+        SlabRegion::map(path, page_size, pages, true)
+    }
+
+    /// Map an existing memory file; its size must match exactly
+    /// (geometry drift between runs invalidates the pair).
+    pub fn open(path: &Path, page_size: usize, pages: usize) -> io::Result<SlabRegion> {
+        SlabRegion::map(path, page_size, pages, false)
+    }
+
+    fn map(path: &Path, page_size: usize, pages: usize, create: bool) -> io::Result<SlabRegion> {
+        assert!(page_size > 0 && pages > 0);
+        if failpoint::fired("restart.mmap.fail") {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                "failpoint restart.mmap.fail",
+            ));
+        }
+        let len = page_size * pages;
+        let base = map_file(path, len, create)?;
+        // High→low so `take()` pops offset 0 first.
+        let free: Vec<u64> = (0..pages as u64).rev().map(|i| i * page_size as u64).collect();
+        Ok(SlabRegion {
+            inner: Arc::new(RegionInner {
+                base,
+                len,
+                page_size,
+                path: path.to_path_buf(),
+                free: Mutex::new(free),
+            }),
+        })
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> usize {
+        self.inner.page_size
+    }
+
+    #[inline]
+    pub fn capacity_pages(&self) -> usize {
+        self.inner.len / self.inner.page_size
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Carve the next free extent; `None` when the region is exhausted
+    /// (the allocator treats it like heap OOM: evict or reject).
+    pub fn take(&self) -> Option<PageBuf> {
+        let offset = self.inner.free.lock().ok()?.pop()?;
+        Some(PageBuf::Mapped(self.page_at(offset)))
+    }
+
+    /// Claim a specific extent (warm-restart recovery adopting the
+    /// persisted page map). Errors on a misaligned, out-of-range, or
+    /// already-claimed offset — all symptoms of a corrupt manifest.
+    pub fn claim(&self, offset: u64) -> io::Result<PageBuf> {
+        let ps = self.inner.page_size as u64;
+        if offset % ps != 0 || offset + ps > self.inner.len as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("page offset {offset} invalid for region of {} B", self.inner.len),
+            ));
+        }
+        let mut free = self
+            .inner
+            .free
+            .lock()
+            .map_err(|_| io::Error::new(io::ErrorKind::Other, "region free list poisoned"))?;
+        match free.iter().position(|&o| o == offset) {
+            Some(i) => {
+                free.swap_remove(i);
+                Ok(PageBuf::Mapped(self.page_at(offset)))
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("page offset {offset} claimed twice (corrupt page map)"),
+            )),
+        }
+    }
+
+    fn page_at(&self, offset: u64) -> MappedPage {
+        MappedPage {
+            ptr: unsafe { self.inner.base.add(offset as usize) },
+            len: self.inner.page_size,
+            offset,
+            region: self.inner.clone(),
+        }
+    }
+
+    /// Flush the whole region to its file (`msync(MS_SYNC)`) — called
+    /// before the manifest is written so the file contents the manifest
+    /// describes are durable first.
+    pub fn sync(&self) -> io::Result<()> {
+        sync_map(self.inner.base, self.inner.len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw mmap FFI (unix); non-unix builds degrade to an error so the
+// `--memory-file` feature is simply unavailable there.
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod ffi {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+    pub const MS_SYNC: c_int = 4;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+    }
+}
+
+#[cfg(unix)]
+fn map_file(path: &Path, len: usize, create: bool) -> io::Result<*mut u8> {
+    use std::os::unix::io::AsRawFd;
+    let file = if create {
+        std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?
+    } else {
+        std::fs::OpenOptions::new().read(true).write(true).open(path)?
+    };
+    if create {
+        file.set_len(len as u64)?;
+    } else {
+        let got = file.metadata()?.len();
+        if got != len as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("memory file is {got} B, expected {len} B"),
+            ));
+        }
+    }
+    let ptr = unsafe {
+        ffi::mmap(
+            std::ptr::null_mut(),
+            len,
+            ffi::PROT_READ | ffi::PROT_WRITE,
+            ffi::MAP_SHARED,
+            file.as_raw_fd(),
+            0,
+        )
+    };
+    if ptr as isize == -1 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(ptr as *mut u8)
+    // `file` closes here; the mapping persists independently.
+}
+
+#[cfg(unix)]
+fn unmap(base: *mut u8, len: usize) -> io::Result<()> {
+    if unsafe { ffi::munmap(base as *mut _, len) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(unix)]
+fn sync_map(base: *mut u8, len: usize) -> io::Result<()> {
+    if unsafe { ffi::msync(base as *mut _, len, ffi::MS_SYNC) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn map_file(_path: &Path, _len: usize, _create: bool) -> io::Result<*mut u8> {
+    Err(io::Error::new(
+        io::ErrorKind::Other,
+        "--memory-file requires a unix platform",
+    ))
+}
+
+#[cfg(not(unix))]
+fn unmap(_base: *mut u8, _len: usize) -> io::Result<()> {
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn sync_map(_base: *mut u8, _len: usize) -> io::Result<()> {
+    Ok(())
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("slabforge-mapfile-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn create_take_write_reopen_claim() {
+        let path = tmp("roundtrip");
+        {
+            let r = SlabRegion::create(&path, 4096, 4).unwrap();
+            assert_eq!(r.capacity_pages(), 4);
+            let mut p0 = r.take().unwrap();
+            assert_eq!(p0.region_offset(), Some(0), "lowest extent first");
+            p0[..4].copy_from_slice(b"warm");
+            let p1 = r.take().unwrap();
+            assert_eq!(p1.region_offset(), Some(4096));
+            r.sync().unwrap();
+            std::mem::forget((p0, p1)); // keep extents out of the free list
+        }
+        {
+            let r = SlabRegion::open(&path, 4096, 4).unwrap();
+            let p0 = r.claim(0).unwrap();
+            assert_eq!(&p0[..4], b"warm", "bytes survive the remap");
+            assert!(r.claim(0).is_err(), "double claim rejected");
+            assert!(r.claim(123).is_err(), "misaligned claim rejected");
+            assert!(r.claim(1 << 40).is_err(), "out-of-range claim rejected");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dropped_extent_returns_to_pool() {
+        let path = tmp("pool");
+        let r = SlabRegion::create(&path, 4096, 1).unwrap();
+        let p = r.take().unwrap();
+        assert!(r.take().is_none(), "region exhausted");
+        drop(p);
+        assert!(r.take().is_some(), "extent recycled after drop");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn size_mismatch_rejected_on_open() {
+        let path = tmp("mismatch");
+        drop(SlabRegion::create(&path, 4096, 2).unwrap());
+        assert!(SlabRegion::open(&path, 4096, 3).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_failpoint_degrades() {
+        let path = tmp("failpoint");
+        let _g = failpoint::armed("restart.mmap.fail", "once").unwrap();
+        assert!(SlabRegion::create(&path, 4096, 1).is_err());
+        // next attempt succeeds (failpoint consumed)
+        assert!(SlabRegion::create(&path, 4096, 1).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

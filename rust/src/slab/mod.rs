@@ -13,14 +13,18 @@
 //!   explicit `-o slab_sizes`-style lists, learned configurations).
 //! * [`page`] / [`class`] — pages, chunk carving, per-class free lists.
 //! * [`allocator`] — the allocator facade + hole accounting.
+//! * [`mapfile`] — the mmap-backed page region behind `--memory-file`
+//!   (warm restart): pages carved from a durable file instead of heap.
 
 pub mod allocator;
 pub mod class;
 pub mod geometry;
+pub mod mapfile;
 pub mod page;
 pub mod policy;
 
 pub use allocator::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
+pub use mapfile::{PageBuf, SlabRegion};
 pub use geometry::default_slab_sizes;
 pub use policy::ChunkSizePolicy;
 

@@ -13,14 +13,18 @@
 //! old chunk geometry to the new one without ever holding two full
 //! copies of the cache.
 
-/// One page of cache memory, owned by a single slab class.
+use super::mapfile::PageBuf;
+
+/// One page of cache memory, owned by a single slab class. The backing
+/// buffer is a [`PageBuf`]: anonymous heap memory by default, or an
+/// extent of the mmap-backed region when warm restart is enabled.
 pub struct Page {
-    data: Box<[u8]>,
+    data: PageBuf,
     chunk_size: usize,
 }
 
 impl Page {
-    /// Allocate a zeroed page carved into `chunk_size` chunks.
+    /// Allocate a zeroed heap page carved into `chunk_size` chunks.
     pub fn new(page_size: usize, chunk_size: usize) -> Self {
         Page::from_buf(vec![0u8; page_size].into_boxed_slice(), chunk_size)
     }
@@ -28,15 +32,23 @@ impl Page {
     /// Carve an existing buffer (a recycled page) into `chunk_size`
     /// chunks. The buffer is not zeroed: every chunk is fully
     /// overwritten up to the item length before any read.
-    pub fn from_buf(data: Box<[u8]>, chunk_size: usize) -> Self {
+    pub fn from_buf(data: impl Into<PageBuf>, chunk_size: usize) -> Self {
+        let data = data.into();
         assert!(chunk_size > 0 && chunk_size <= data.len());
         Page { data, chunk_size }
     }
 
     /// Dissolve the page back into its raw buffer (for the free-page
     /// pool). Only legal once no live chunk references it.
-    pub fn into_buf(self) -> Box<[u8]> {
+    pub fn into_buf(self) -> PageBuf {
         self.data
+    }
+
+    /// Offset of the backing buffer inside the mapped region (`None`
+    /// for heap pages) — what the warm-restart page map persists.
+    #[inline]
+    pub fn region_offset(&self) -> Option<u64> {
+        self.data.region_offset()
     }
 
     /// Number of chunks this page holds.

@@ -11,6 +11,7 @@ pub mod lru;
 pub mod maintainer;
 pub mod migrate;
 pub mod optimistic;
+pub mod restart;
 pub mod sharded;
 #[allow(clippy::module_inception)]
 pub mod store;
@@ -18,5 +19,6 @@ pub mod store;
 pub use item::{total_item_size, ITEM_HEADER, TAIL_CRLF};
 pub use maintainer::{spawn_maintainer, MaintainerConfig};
 pub use migrate::MigrationGauges;
-pub use sharded::ShardedStore;
+pub use restart::{open_or_cold, write_manifest, RestartReport};
+pub use sharded::{RestartSnapshot, ShardedStore};
 pub use store::{KvStore, MigrationReport, StoreError, StoreStats, Value};

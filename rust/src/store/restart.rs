@@ -1,0 +1,1169 @@
+//! Crash-consistent warm restart (`--memory-file`).
+//!
+//! When enabled, every slab page lives in one mmap-backed file
+//! ([`SlabRegion`]) and a clean shutdown writes a versioned **metadata
+//! manifest** next to it (`<file>.meta`): slab-class geometry (including
+//! learned / auto-tuned chunk sizes), the per-page class+occupancy map,
+//! every live item's index entry (location, sizes, flags, expiry, CAS,
+//! LRU tier — **not** its bytes), the tenant registry, per-shard CAS
+//! high-water marks, and the absolute-time epoch of the shutdown. The
+//! next start re-mmaps the file, revalidates everything, and rebuilds
+//! the hash table and LRU chains from the manifest in bounded batches —
+//! recovery is metadata-only and never copies a value byte.
+//!
+//! ## Invalidation: degrade loudly, never serve garbage
+//!
+//! *Any* of the following forces a cold start (fresh, empty cache) with
+//! the reason exported via `stats` (`restart_state cold`, `restart_reason
+//! ...`) and logged at startup:
+//!
+//! * dirty-shutdown marker present (`<file>.dirty` — created at every
+//!   start, removed only by a clean manifest write, so kill-9 leaves it)
+//! * manifest missing, truncated, wrong magic/version, or checksum
+//!   mismatch
+//! * geometry drift: page size, shard count, per-shard page budget, or
+//!   CAS mode differ from the running configuration; memory-file size
+//!   mismatch
+//! * wall-clock regression past the persisted epoch (expired items
+//!   could otherwise resurrect)
+//! * page-map / item-index integrity walk failure (misaligned,
+//!   out-of-range, or double-claimed page offsets; items pointing at
+//!   unmapped pages, out-of-range chunks, impossible key/value sizes,
+//!   duplicate chunks)
+//! * tenant-registry restore failure, or a post-restore
+//!   `check_integrity` failure on any shard
+//!
+//! Items whose TTL lapsed while the server was down are discarded
+//! during the walk (counted in `restart_items_discarded`) — expiry is
+//! revalidated against the persisted epoch and the current clock, so a
+//! warm restart can never resurrect an expired item.
+//!
+//! On a warm start the persisted (possibly learned) chunk-size table
+//! **wins over the configured policy**: the store boots with exactly
+//! the geometry the items were carved into, and the auto-tuner resumes
+//! from it. Delete the memory file (or its manifest) to re-apply a
+//! changed `--slab-sizes`/growth-factor configuration. Likewise the
+//! persisted tenant registry wins; configured tenant specs are only
+//! applied for names the manifest does not already define.
+//!
+//! A manifest is consumed (deleted) by the start that reads it, and an
+//! in-progress slab migration is force-completed before export, so the
+//! manifest always describes a single consistent generation.
+
+use crate::config::Settings;
+use crate::slab::allocator::MIGRATION_PAGE_SLACK;
+use crate::slab::policy::ChunkSizePolicy;
+use crate::slab::SlabRegion;
+use crate::store::sharded::ShardedStore;
+use crate::store::store::Clock;
+use crate::util::failpoint;
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Manifest magic + format version. Bump the version on any layout
+/// change: an old manifest then degrades to a cold start instead of
+/// being misparsed.
+const MAGIC: &[u8; 8] = b"SLABWARM";
+const VERSION: u32 = 1;
+
+/// Items restored per shard write-lock lease — recovery holds no lock
+/// longer than one bounded batch, mirroring the migration discipline.
+const RESTORE_BATCH: usize = 4096;
+
+/// One persisted item-index entry. Everything needed to rebuild the
+/// item's arena record; key and value bytes stay in the mapped chunk.
+#[derive(Clone, Debug)]
+pub(crate) struct ItemRecord {
+    pub class: u16,
+    pub page: u32,
+    pub chunk: u32,
+    pub klen: u8,
+    pub vlen: u32,
+    pub flags: u32,
+    pub exptime: u32,
+    pub time: u32,
+    pub cas: u64,
+    pub total: u32,
+    pub tier: u8,
+    pub fetched: bool,
+    pub tenant: u8,
+}
+
+/// How a boot obtained its contents — the startup banner / stats row.
+#[derive(Clone, Debug)]
+pub struct RestartReport {
+    /// `"disabled"`, `"warm"`, or `"cold"`.
+    pub state: &'static str,
+    /// Why a cold start degraded (empty otherwise).
+    pub reason: String,
+    pub items_recovered: u64,
+    pub items_discarded: u64,
+    pub duration_ms: u64,
+}
+
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(suffix);
+    PathBuf::from(s)
+}
+
+pub fn manifest_path(memory_file: &Path) -> PathBuf {
+    sibling(memory_file, ".meta")
+}
+
+pub fn dirty_path(memory_file: &Path) -> PathBuf {
+    sibling(memory_file, ".dirty")
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Per-shard page budget in pages (must match the allocator's own
+/// `(mem_limit / shards).max(page_size) / page_size` computation).
+fn per_shard_pages(settings: &Settings) -> usize {
+    ((settings.mem_limit / settings.shards).max(settings.page_size) / settings.page_size).max(1)
+}
+
+/// Region capacity: every shard's budget plus its migration slack, so
+/// `take()` can never fail before the allocator's own budget does.
+fn region_pages(settings: &Settings) -> usize {
+    settings.shards * (per_shard_pages(settings) + MIGRATION_PAGE_SLACK)
+}
+
+// ---------------------------------------------------------------------------
+// serialization primitives (little-endian, length-prefixed)
+// ---------------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    assert!(b.len() <= u16::MAX as usize);
+    put_u16(out, b.len() as u16);
+    out.extend_from_slice(b);
+}
+
+/// FNV-1a 64 over the manifest body (same hash family as the key hash —
+/// not cryptographic, but catches truncation and torn writes).
+fn checksum(body: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in body {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader over the manifest body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| format!("manifest truncated at byte {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.u16()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parsed manifest
+// ---------------------------------------------------------------------------
+
+struct TenantEntry {
+    name: String,
+    prefixes: Vec<Vec<u8>>,
+    tokens: Vec<Vec<u8>>,
+    quota_pages: u64,
+}
+
+struct ShardEntry {
+    cas_high: u64,
+    /// `(class, page_slot, region_offset)` of every occupied page.
+    page_map: Vec<(u16, u32, u64)>,
+    /// LRU-ordered (hot → warm → cold, most → least recent per tier).
+    items: Vec<ItemRecord>,
+}
+
+struct Manifest {
+    epoch: u64,
+    page_size: u64,
+    per_shard_pages: u64,
+    shards: u32,
+    use_cas: bool,
+    tenants: Vec<TenantEntry>,
+    chunk_sizes: Vec<usize>,
+    shard_entries: Vec<ShardEntry>,
+}
+
+impl Manifest {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64 * 1024);
+        put_u64(&mut b, self.epoch);
+        put_u64(&mut b, self.page_size);
+        put_u64(&mut b, self.per_shard_pages);
+        put_u32(&mut b, self.shards);
+        put_u8(&mut b, self.use_cas as u8);
+        put_u8(&mut b, self.tenants.len() as u8);
+        for t in &self.tenants {
+            put_bytes(&mut b, t.name.as_bytes());
+            put_u64(&mut b, t.quota_pages);
+            put_u16(&mut b, t.prefixes.len() as u16);
+            for p in &t.prefixes {
+                put_bytes(&mut b, p);
+            }
+            put_u16(&mut b, t.tokens.len() as u16);
+            for tok in &t.tokens {
+                put_bytes(&mut b, tok);
+            }
+        }
+        put_u16(&mut b, self.chunk_sizes.len() as u16);
+        for &c in &self.chunk_sizes {
+            put_u64(&mut b, c as u64);
+        }
+        for s in &self.shard_entries {
+            put_u64(&mut b, s.cas_high);
+            put_u32(&mut b, s.page_map.len() as u32);
+            for &(class, slot, offset) in &s.page_map {
+                put_u16(&mut b, class);
+                put_u32(&mut b, slot);
+                put_u64(&mut b, offset);
+            }
+            put_u64(&mut b, s.items.len() as u64);
+            for it in &s.items {
+                put_u16(&mut b, it.class);
+                put_u32(&mut b, it.page);
+                put_u32(&mut b, it.chunk);
+                put_u8(&mut b, it.klen);
+                put_u32(&mut b, it.vlen);
+                put_u32(&mut b, it.flags);
+                put_u32(&mut b, it.exptime);
+                put_u32(&mut b, it.time);
+                put_u64(&mut b, it.cas);
+                put_u32(&mut b, it.total);
+                put_u8(&mut b, it.tier);
+                put_u8(&mut b, it.fetched as u8);
+                put_u8(&mut b, it.tenant);
+            }
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Manifest, String> {
+        let mut r = Reader::new(body);
+        let epoch = r.u64()?;
+        let page_size = r.u64()?;
+        let per_shard_pages = r.u64()?;
+        let shards = r.u32()?;
+        if shards == 0 || shards > 4096 {
+            return Err(format!("implausible shard count {shards}"));
+        }
+        let use_cas = r.u8()? != 0;
+        let ntenants = r.u8()? as usize;
+        let mut tenants = Vec::with_capacity(ntenants);
+        for _ in 0..ntenants {
+            let name = String::from_utf8(r.bytes()?)
+                .map_err(|_| "tenant name is not utf-8".to_string())?;
+            let quota_pages = r.u64()?;
+            let nprefix = r.u16()? as usize;
+            let mut prefixes = Vec::with_capacity(nprefix);
+            for _ in 0..nprefix {
+                prefixes.push(r.bytes()?);
+            }
+            let ntok = r.u16()? as usize;
+            let mut tokens = Vec::with_capacity(ntok);
+            for _ in 0..ntok {
+                tokens.push(r.bytes()?);
+            }
+            tenants.push(TenantEntry {
+                name,
+                prefixes,
+                tokens,
+                quota_pages,
+            });
+        }
+        let nsizes = r.u16()? as usize;
+        let mut chunk_sizes = Vec::with_capacity(nsizes);
+        for _ in 0..nsizes {
+            chunk_sizes.push(r.u64()? as usize);
+        }
+        let mut shard_entries = Vec::with_capacity(shards as usize);
+        for _ in 0..shards {
+            let cas_high = r.u64()?;
+            let npages = r.u32()? as usize;
+            let mut page_map = Vec::with_capacity(npages);
+            for _ in 0..npages {
+                let class = r.u16()?;
+                let slot = r.u32()?;
+                let offset = r.u64()?;
+                page_map.push((class, slot, offset));
+            }
+            let nitems = r.u64()? as usize;
+            let mut items = Vec::with_capacity(nitems.min(1 << 20));
+            for _ in 0..nitems {
+                items.push(ItemRecord {
+                    class: r.u16()?,
+                    page: r.u32()?,
+                    chunk: r.u32()?,
+                    klen: r.u8()?,
+                    vlen: r.u32()?,
+                    flags: r.u32()?,
+                    exptime: r.u32()?,
+                    time: r.u32()?,
+                    cas: r.u64()?,
+                    total: r.u32()?,
+                    tier: r.u8()?,
+                    fetched: r.u8()? != 0,
+                    tenant: r.u8()?,
+                });
+            }
+            shard_entries.push(ShardEntry {
+                cas_high,
+                page_map,
+                items,
+            });
+        }
+        if !r.done() {
+            return Err("trailing bytes after manifest body".to_string());
+        }
+        Ok(Manifest {
+            epoch,
+            page_size,
+            per_shard_pages,
+            shards,
+            use_cas,
+            tenants,
+            chunk_sizes,
+            shard_entries,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest write (clean shutdown)
+// ---------------------------------------------------------------------------
+
+/// Persist the cache metadata for the next boot. Call **after** the
+/// listeners have drained (no concurrent mutators). No-op when
+/// persistence is off. On success the dirty marker is removed — the
+/// one and only "shutdown was clean" signal the next boot trusts.
+pub fn write_manifest(store: &ShardedStore, settings: &Settings) -> Result<(), String> {
+    let Some(region) = store.region() else {
+        return Ok(());
+    };
+    if failpoint::fired("restart.manifest.write_fail") {
+        return Err("failpoint restart.manifest.write_fail".to_string());
+    }
+    // A manifest describes exactly one chunk geometry: force any
+    // in-flight migration to a single consistent generation first.
+    while store.migration_step_all() {}
+
+    // Slab bytes must be durable before the metadata that points into
+    // them.
+    region
+        .sync()
+        .map_err(|e| format!("msync of memory file failed: {e}"))?;
+
+    let chunk_sizes = store.chunk_sizes();
+    let shards = store.shard_count();
+    let mut shard_entries = Vec::with_capacity(shards);
+    let mut use_cas = true;
+    for i in 0..shards {
+        let g = store.shard_read(i);
+        if g.migration_active() {
+            return Err(format!("shard {i} started a new migration mid-export"));
+        }
+        if g.chunk_sizes() != chunk_sizes.as_slice() {
+            return Err(format!("shard {i} geometry diverged post-drain"));
+        }
+        if i == 0 {
+            use_cas = g.cas_enabled();
+        }
+        shard_entries.push(ShardEntry {
+            cas_high: g.cas_high_water(),
+            page_map: g.export_page_map(),
+            items: g.export_items(),
+        });
+    }
+
+    let tenants = store
+        .tenants()
+        .rules_snapshot()
+        .into_iter()
+        .filter(|r| r.id != 0) // the default tenant is implicit
+        .map(|r| TenantEntry {
+            name: r.name,
+            prefixes: r.prefixes,
+            tokens: r.tokens,
+            quota_pages: r.quota_pages,
+        })
+        .collect();
+
+    let manifest = Manifest {
+        epoch: unix_now(),
+        page_size: store.page_size() as u64,
+        per_shard_pages: per_shard_pages(settings) as u64,
+        shards: shards as u32,
+        use_cas,
+        tenants,
+        chunk_sizes,
+        shard_entries,
+    };
+
+    let body = manifest.encode();
+    let mut file = Vec::with_capacity(body.len() + 28);
+    file.extend_from_slice(MAGIC);
+    file.extend_from_slice(&VERSION.to_le_bytes());
+    file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    file.extend_from_slice(&checksum(&body).to_le_bytes());
+    file.extend_from_slice(&body);
+
+    let meta = manifest_path(region.path());
+    let tmp = sibling(region.path(), ".meta.tmp");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("cannot create {}: {e}", tmp.display()))?;
+        f.write_all(&file)
+            .map_err(|e| format!("manifest write failed: {e}"))?;
+        f.sync_all().map_err(|e| format!("manifest fsync failed: {e}"))?;
+    }
+    std::fs::rename(&tmp, &meta)
+        .map_err(|e| format!("manifest rename failed: {e}"))?;
+    // Only now is the shutdown provably clean.
+    std::fs::remove_file(dirty_path(region.path()))
+        .map_err(|e| format!("cannot clear dirty marker: {e}"))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// startup (warm or cold)
+// ---------------------------------------------------------------------------
+
+/// Build the store for this boot: warm from the memory file + manifest
+/// when both validate end-to-end, else a loud cold start; plain heap
+/// store when `--memory-file` is off. Always returns a serving store —
+/// the report says how it was obtained.
+pub fn open_or_cold(settings: &Settings) -> Result<(ShardedStore, RestartReport), String> {
+    let Some(path) = settings.memory_file.clone() else {
+        let store = ShardedStore::new(settings).map_err(|e| e.to_string())?;
+        store.set_restart(0, "", 0, 0, 0);
+        return Ok((
+            store,
+            RestartReport {
+                state: "disabled",
+                reason: String::new(),
+                items_recovered: 0,
+                items_discarded: 0,
+                duration_ms: 0,
+            },
+        ));
+    };
+    let path = PathBuf::from(path);
+    let started = Instant::now();
+    match try_warm(settings, &path) {
+        Ok((store, recovered, discarded)) => {
+            // The manifest is consumed by the boot that used it; the
+            // dirty marker stands until the next clean shutdown.
+            let _ = std::fs::remove_file(manifest_path(&path));
+            if let Err(e) = std::fs::write(dirty_path(&path), b"booted\n") {
+                return Err(format!("cannot write dirty marker: {e}"));
+            }
+            let duration_ms = started.elapsed().as_millis() as u64;
+            store.set_restart(1, "", recovered, discarded, duration_ms);
+            Ok((
+                store,
+                RestartReport {
+                    state: "warm",
+                    reason: String::new(),
+                    items_recovered: recovered,
+                    items_discarded: discarded,
+                    duration_ms,
+                },
+            ))
+        }
+        Err(reason) => {
+            let (store, reason) = build_cold(settings, &path, reason)?;
+            let duration_ms = started.elapsed().as_millis() as u64;
+            store.set_restart(2, &reason, 0, 0, duration_ms);
+            Ok((
+                store,
+                RestartReport {
+                    state: "cold",
+                    reason,
+                    items_recovered: 0,
+                    items_discarded: 0,
+                    duration_ms,
+                },
+            ))
+        }
+    }
+}
+
+/// Cold start with persistence still desired: recreate the region
+/// (truncating whatever was in the file), drop any stale manifest, and
+/// plant the dirty marker. If even the region cannot be mapped, fall
+/// back to a heap-only store — the cache must come up regardless.
+fn build_cold(
+    settings: &Settings,
+    path: &Path,
+    mut reason: String,
+) -> Result<(ShardedStore, String), String> {
+    let _ = std::fs::remove_file(manifest_path(path));
+    let region = match SlabRegion::create(path, settings.page_size, region_pages(settings)) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            reason = format!("{reason}; memory file unusable ({e}), persistence off this boot");
+            None
+        }
+    };
+    if region.is_some() {
+        if let Err(e) = std::fs::write(dirty_path(path), b"booted\n") {
+            return Err(format!("cannot write dirty marker: {e}"));
+        }
+    }
+    let store = ShardedStore::with_region(
+        settings.policy.clone(),
+        settings.page_size,
+        settings.mem_limit,
+        settings.use_cas,
+        settings.shards,
+        Clock::System,
+        region,
+    )
+    .map_err(|e| e.to_string())?;
+    apply_runtime_settings(&store, settings);
+    for spec in &settings.tenants {
+        store
+            .tenants()
+            .define(&spec.name, &spec.prefix, Some(spec.quota_pages))
+            .map_err(|e| format!("tenant spec '{}': {e}", spec.name))?;
+    }
+    Ok((store, reason))
+}
+
+/// Knobs `ShardedStore::new` would have applied.
+fn apply_runtime_settings(store: &ShardedStore, settings: &Settings) {
+    store.set_migrate_batch(settings.migrate_batch);
+    store
+        .tenants()
+        .set_tuning(settings.tenant_divergence, settings.tenant_reclaim_batch);
+}
+
+/// The whole warm path; any `Err` is a cold-start reason.
+fn try_warm(settings: &Settings, path: &Path) -> Result<(ShardedStore, u64, u64), String> {
+    if dirty_path(path).exists() {
+        return Err("dirty shutdown marker present (previous run did not exit cleanly)".into());
+    }
+    let meta = manifest_path(path);
+    let raw = std::fs::read(&meta)
+        .map_err(|e| format!("cannot read manifest {}: {e}", meta.display()))?;
+
+    // header
+    if raw.len() < 28 || &raw[..8] != MAGIC {
+        return Err("manifest magic mismatch".into());
+    }
+    let version = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("manifest version {version}, expected {VERSION}"));
+    }
+    let body_len = u64::from_le_bytes(raw[12..20].try_into().unwrap()) as usize;
+    let stored_sum = u64::from_le_bytes(raw[20..28].try_into().unwrap());
+    let body = raw
+        .get(28..28 + body_len)
+        .filter(|b| raw.len() == 28 + b.len())
+        .ok_or("manifest length mismatch")?;
+    if checksum(body) != stored_sum {
+        return Err("manifest checksum mismatch".into());
+    }
+    let manifest = Manifest::decode(body)?;
+
+    // geometry must match the running configuration exactly
+    if manifest.page_size != settings.page_size as u64 {
+        return Err(format!(
+            "page size changed ({} persisted, {} configured)",
+            manifest.page_size, settings.page_size
+        ));
+    }
+    if manifest.shards != settings.shards as u32 {
+        return Err(format!(
+            "shard count changed ({} persisted, {} configured)",
+            manifest.shards, settings.shards
+        ));
+    }
+    if manifest.per_shard_pages != per_shard_pages(settings) as u64 {
+        return Err(format!(
+            "memory budget changed ({} persisted pages/shard, {} configured)",
+            manifest.per_shard_pages,
+            per_shard_pages(settings)
+        ));
+    }
+    if manifest.use_cas != settings.use_cas {
+        return Err("CAS mode changed".into());
+    }
+    let now = unix_now();
+    if now < manifest.epoch {
+        return Err(format!(
+            "clock regressed past shutdown epoch ({now} < {})",
+            manifest.epoch
+        ));
+    }
+
+    // the persisted (possibly learned) geometry becomes the boot policy
+    let policy = ChunkSizePolicy::Explicit(manifest.chunk_sizes.clone());
+    let classes = policy
+        .materialize(settings.page_size)
+        .map_err(|e| format!("persisted chunk sizes invalid: {e}"))?;
+    drop(classes);
+
+    let region = SlabRegion::open(path, settings.page_size, region_pages(settings))
+        .map_err(|e| format!("cannot map memory file: {e}"))?;
+
+    // ------------------------------------------------- integrity walk
+    // Validate every page and item reference before touching a store,
+    // and split item records into keep / expired. `used` lists per
+    // (shard, class, slot) are derived from *kept* items only, so an
+    // expired item's chunk returns straight to the free list.
+    let now32 = now as u32;
+    let mut discarded = 0u64;
+    let mut seen_offsets: HashSet<u64> = HashSet::new();
+    // per shard: (class, slot) -> chunk capacity of that page
+    let mut plans: Vec<RestorePlan> = Vec::with_capacity(manifest.shards as usize);
+    for (si, shard) in manifest.shard_entries.iter().enumerate() {
+        if failpoint::fired("restart.recover.torn_page") {
+            return Err("failpoint restart.recover.torn_page".into());
+        }
+        if shard.page_map.len() > per_shard_pages(settings) + MIGRATION_PAGE_SLACK {
+            return Err(format!(
+                "shard {si} page map exceeds its budget ({} pages)",
+                shard.page_map.len()
+            ));
+        }
+        let mut pages: HashMap<(u16, u32), PagePlan> = HashMap::new();
+        for &(class, slot, offset) in &shard.page_map {
+            let chunk_size = *manifest
+                .chunk_sizes
+                .get(class as usize)
+                .ok_or_else(|| format!("shard {si} page in unknown class {class}"))?;
+            if offset % settings.page_size as u64 != 0 {
+                return Err(format!("shard {si} page offset {offset} misaligned"));
+            }
+            if !seen_offsets.insert(offset) {
+                return Err(format!("page offset {offset} claimed twice"));
+            }
+            let capacity = (settings.page_size / chunk_size) as u32;
+            if pages
+                .insert((class, slot), PagePlan {
+                    offset,
+                    capacity,
+                    chunk_size,
+                    used: Vec::new(),
+                })
+                .is_some()
+            {
+                return Err(format!("shard {si} page slot ({class},{slot}) duplicated"));
+            }
+        }
+        let mut kept: Vec<ItemRecord> = Vec::with_capacity(shard.items.len());
+        let mut seen_chunks: HashSet<(u16, u32, u32)> = HashSet::new();
+        for rec in &shard.items {
+            let plan = pages.get_mut(&(rec.class, rec.page)).ok_or_else(|| {
+                format!(
+                    "shard {si} item points at unmapped page ({},{})",
+                    rec.class, rec.page
+                )
+            })?;
+            let klen = rec.klen as usize;
+            if rec.chunk >= plan.capacity
+                || rec.tier > 2
+                || rec.tenant as usize >= crate::tenant::MAX_TENANTS
+                || !(1..=crate::store::item::MAX_KEY_LEN).contains(&klen)
+                || klen + rec.vlen as usize > plan.chunk_size
+                || rec.total as usize > plan.chunk_size
+            {
+                return Err(format!(
+                    "shard {si} item record corrupt (class {} page {} chunk {})",
+                    rec.class, rec.page, rec.chunk
+                ));
+            }
+            if !seen_chunks.insert((rec.class, rec.page, rec.chunk)) {
+                return Err(format!(
+                    "shard {si} chunk ({},{},{}) referenced twice",
+                    rec.class, rec.page, rec.chunk
+                ));
+            }
+            if rec.exptime != 0 && rec.exptime <= now32 {
+                discarded += 1; // TTL lapsed while we were down
+                continue;
+            }
+            plan.used.push(rec.chunk);
+            kept.push(rec.clone());
+        }
+        plans.push(RestorePlan {
+            cas_high: shard.cas_high,
+            pages,
+            items: kept,
+        });
+    }
+
+    // ------------------------------------------------- build + restore
+    let store = ShardedStore::with_region(
+        policy,
+        settings.page_size,
+        settings.mem_limit,
+        settings.use_cas,
+        settings.shards,
+        Clock::System,
+        Some(region.clone()),
+    )
+    .map_err(|e| format!("store construction failed: {e}"))?;
+    apply_runtime_settings(&store, settings);
+    restore_tenants(&store, &manifest.tenants)?;
+    // configured specs fill in only names the manifest didn't define
+    let persisted: HashSet<String> = store
+        .tenants()
+        .rules_snapshot()
+        .into_iter()
+        .map(|r| r.name)
+        .collect();
+    for spec in &settings.tenants {
+        if !persisted.contains(&spec.name) {
+            store
+                .tenants()
+                .define(&spec.name, &spec.prefix, Some(spec.quota_pages))
+                .map_err(|e| format!("tenant spec '{}': {e}", spec.name))?;
+        }
+    }
+
+    let mut recovered = 0u64;
+    for (si, plan) in plans.into_iter().enumerate() {
+        recovered += restore_shard(&store, &region, si, plan)
+            .map_err(|e| format!("shard {si}: {e}"))?;
+        store
+            .shard_read(si)
+            .check_integrity()
+            .map_err(|e| format!("shard {si} failed post-restore integrity check: {e}"))?;
+    }
+    Ok((store, recovered, discarded))
+}
+
+struct PagePlan {
+    offset: u64,
+    capacity: u32,
+    chunk_size: usize,
+    /// Chunk indices of surviving items (free list = the complement).
+    used: Vec<u32>,
+}
+
+struct RestorePlan {
+    cas_high: u64,
+    pages: HashMap<(u16, u32), PagePlan>,
+    items: Vec<ItemRecord>,
+}
+
+/// Restore one shard: adopt its pages at their persisted slots, then
+/// re-link items tier by tier in bounded batches (one write-lock lease
+/// per [`RESTORE_BATCH`] items). Within a tier the manifest order is
+/// head → tail, so each tier is replayed in reverse through
+/// `push_head` to land in the exact persisted recency order.
+fn restore_shard(
+    store: &ShardedStore,
+    region: &SlabRegion,
+    si: usize,
+    plan: RestorePlan,
+) -> Result<u64, String> {
+    {
+        let mut g = store.shard_write(si);
+        let mut slots: Vec<(&(u16, u32), &PagePlan)> = plan.pages.iter().collect();
+        slots.sort_by_key(|(k, _)| **k);
+        for (&(class, slot), page) in slots {
+            let buf = region
+                .claim(page.offset)
+                .map_err(|e| format!("page ({class},{slot}): {e}"))?;
+            g.restore_page(class, slot, buf, &page.used)
+                .map_err(|e| format!("page ({class},{slot}): {e}"))?;
+        }
+        g.set_cas_floor(plan.cas_high);
+    }
+    let mut batches: Vec<&ItemRecord> = Vec::with_capacity(plan.items.len());
+    for tier in 0u8..3 {
+        batches.extend(plan.items.iter().filter(|r| r.tier == tier).rev());
+    }
+    let mut restored = 0u64;
+    for batch in batches.chunks(RESTORE_BATCH) {
+        let mut g = store.shard_write(si);
+        for rec in batch {
+            g.restore_item(rec)?;
+            restored += 1;
+        }
+        // lock released between batches: recovery never holds a shard
+        // longer than one bounded lease
+    }
+    Ok(restored)
+}
+
+/// Rebuild the tenant registry exactly as persisted. Ids must come out
+/// identical — items carry stamped tenant ids, so a drifted registry
+/// would mis-attribute every recovered byte.
+fn restore_tenants(store: &ShardedStore, tenants: &[TenantEntry]) -> Result<(), String> {
+    for (i, t) in tenants.iter().enumerate() {
+        let expect = (i + 1) as u8; // manifest skips the implicit default (id 0)
+        let first = t
+            .prefixes
+            .first()
+            .ok_or_else(|| format!("tenant '{}' has no prefix rule", t.name))?;
+        let id = store
+            .tenants()
+            .define(&t.name, first, Some(t.quota_pages))
+            .map_err(|e| format!("tenant '{}': {e}", t.name))?;
+        if id != expect {
+            return Err(format!(
+                "tenant '{}' restored as id {id}, expected {expect}",
+                t.name
+            ));
+        }
+        for p in &t.prefixes[1..] {
+            store
+                .tenants()
+                .define(&t.name, p, None)
+                .map_err(|e| format!("tenant '{}': {e}", t.name))?;
+        }
+        for tok in &t.tokens {
+            store
+                .tenants()
+                .set_token(&t.name, tok)
+                .map_err(|e| format!("tenant '{}': {e}", t.name))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, OnceLock};
+
+    /// Failpoint registry and temp files are process-global; serialize.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static M: OnceLock<Mutex<()>> = OnceLock::new();
+        M.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn settings(path: &Path) -> Settings {
+        Settings {
+            memory_file: Some(path.display().to_string()),
+            page_size: 1 << 16,
+            mem_limit: 1 << 22, // 64 pages over 2 shards
+            shards: 2,
+            ..Settings::default()
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "slabforge-restart-{}-{name}.mem",
+            std::process::id()
+        ));
+        cleanup(&p);
+        p
+    }
+
+    fn cleanup(p: &Path) {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(manifest_path(p));
+        let _ = std::fs::remove_file(dirty_path(p));
+    }
+
+    #[test]
+    fn roundtrip_recovers_values_geometry_and_cas() {
+        let _s = serial();
+        let path = tmp("roundtrip");
+        let s = settings(&path);
+        {
+            let (store, report) = open_or_cold(&s).unwrap();
+            assert_eq!(report.state, "cold", "first boot has nothing to recover");
+            for i in 0..500u32 {
+                let k = format!("key-{i}");
+                let v = vec![(i % 251) as u8; 40 + (i as usize % 300)];
+                store.set(k.as_bytes(), &v, i, 0).unwrap();
+            }
+            store.delete(b"key-7");
+            store
+                .tenants()
+                .define("acme", b"key-1", Some(4))
+                .unwrap();
+            store.tenants().set_token("acme", b"tok-acme").unwrap();
+            write_manifest(&store, &s).unwrap();
+        }
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "warm", "clean shutdown must restart warm");
+        assert_eq!(report.items_recovered, 499);
+        assert_eq!(store.len(), 499);
+        for i in 0..500u32 {
+            let k = format!("key-{i}");
+            let got = store.get(k.as_bytes());
+            if i == 7 {
+                assert!(got.is_none(), "deleted key must stay deleted");
+                continue;
+            }
+            let v = got.unwrap_or_else(|| panic!("{k} lost across restart"));
+            assert_eq!(v.flags, i);
+            assert_eq!(v.data, vec![(i % 251) as u8; 40 + (i as usize % 300)]);
+        }
+        // CAS must stay monotonic per key (the high-water mark is
+        // per-shard, and a key always routes to the same shard):
+        // overwriting any recovered key yields a strictly larger CAS
+        for i in [0u32, 123, 499] {
+            let k = format!("key-{i}");
+            let old = store.get(k.as_bytes()).unwrap().cas;
+            store.set(k.as_bytes(), b"rewritten", 0, 0).unwrap();
+            let new = store.get(k.as_bytes()).unwrap().cas;
+            assert!(new > old, "CAS regressed for {k}: {old} -> {new}");
+        }
+        // tenant registry restored
+        let rules = store.tenants().rules_snapshot();
+        let acme = rules.iter().find(|r| r.name == "acme").unwrap();
+        assert_eq!(acme.quota_pages, 4);
+        assert_eq!(acme.tokens, vec![b"tok-acme".to_vec()]);
+        store.check_integrity().unwrap();
+        cleanup(&path);
+    }
+
+    #[test]
+    fn learned_geometry_survives_restart() {
+        let _s = serial();
+        let path = tmp("geometry");
+        let s = settings(&path);
+        let learned = vec![200usize, 333, 480, 1024, 1 << 16];
+        {
+            let (store, _) = open_or_cold(&s).unwrap();
+            store.set(b"pin", b"v", 0, 0).unwrap();
+            store
+                .reconfigure(ChunkSizePolicy::Explicit(learned.clone()))
+                .unwrap();
+            write_manifest(&store, &s).unwrap();
+        }
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "warm");
+        assert_eq!(
+            store.chunk_sizes(),
+            learned,
+            "learned classes must be the boot geometry, not the configured policy"
+        );
+        assert_eq!(store.get(b"pin").unwrap().data, b"v");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn dirty_marker_and_mismatches_force_cold() {
+        let _s = serial();
+        let path = tmp("invalidate");
+        let s = settings(&path);
+        let populate = |s: &Settings| {
+            let (store, _) = open_or_cold(s).unwrap();
+            store.set(b"k", b"v", 0, 0).unwrap();
+            write_manifest(&store, s).unwrap();
+        };
+
+        // kill-9: dirty marker never cleared
+        populate(&s);
+        std::fs::write(dirty_path(&path), b"crash").unwrap();
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(report.reason.contains("dirty"), "{}", report.reason);
+        assert!(store.get(b"k").is_none(), "cold start must be empty");
+        assert_eq!(store.restart_snapshot().state, "cold");
+        drop(store);
+
+        // checksum: flip one body byte
+        populate(&s);
+        let meta = manifest_path(&path);
+        let mut raw = std::fs::read(&meta).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        std::fs::write(&meta, &raw).unwrap();
+        let (_, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(report.reason.contains("checksum"), "{}", report.reason);
+
+        // geometry: shard count changed between runs
+        populate(&s);
+        let mut s4 = s.clone();
+        s4.shards = 4;
+        let (_, report) = open_or_cold(&s4).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(report.reason.contains("shard count"), "{}", report.reason);
+
+        // version: future manifest
+        populate(&s);
+        let mut raw = std::fs::read(&meta).unwrap();
+        raw[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&meta, &raw).unwrap();
+        let (_, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(report.reason.contains("version"), "{}", report.reason);
+
+        // missing manifest entirely
+        populate(&s);
+        std::fs::remove_file(&meta).unwrap();
+        let (_, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn expired_items_never_resurrect() {
+        let _s = serial();
+        let path = tmp("expiry");
+        let s = settings(&path);
+        {
+            let (store, _) = open_or_cold(&s).unwrap();
+            store.set(b"keeper", b"v", 0, 0).unwrap();
+            // absolute exptime 1 second in the past at shutdown: dead on
+            // arrival at any later boot
+            let past = unix_now() as u32 - 1;
+            store.set(b"ghost", b"v", 0, past).unwrap();
+            write_manifest(&store, &s).unwrap();
+        }
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "warm");
+        assert_eq!(report.items_discarded, 1);
+        assert!(store.get(b"ghost").is_none(), "expired item resurrected");
+        assert_eq!(store.get(b"keeper").unwrap().data, b"v");
+        store.check_integrity().unwrap();
+        cleanup(&path);
+    }
+
+    #[test]
+    fn manifest_write_failpoint_leaves_dirty_marker() {
+        let _s = serial();
+        let path = tmp("fp-write");
+        let s = settings(&path);
+        {
+            let (store, _) = open_or_cold(&s).unwrap();
+            store.set(b"k", b"v", 0, 0).unwrap();
+            let _g = failpoint::armed("restart.manifest.write_fail", "once").unwrap();
+            assert!(write_manifest(&store, &s).is_err());
+        }
+        assert!(dirty_path(&path).exists(), "failed write must not clear dirty");
+        let (_, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold", "aborted manifest ⇒ cold start");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn torn_page_failpoint_degrades_to_cold() {
+        let _s = serial();
+        let path = tmp("fp-torn");
+        let s = settings(&path);
+        {
+            let (store, _) = open_or_cold(&s).unwrap();
+            store.set(b"k", b"v", 0, 0).unwrap();
+            write_manifest(&store, &s).unwrap();
+        }
+        let _g = failpoint::armed("restart.recover.torn_page", "once").unwrap();
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(report.reason.contains("torn_page"), "{}", report.reason);
+        assert!(store.get(b"k").is_none());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn mmap_failpoint_degrades_to_heap_only_cold() {
+        let _s = serial();
+        let path = tmp("fp-mmap");
+        let s = settings(&path);
+        let _g = failpoint::armed("restart.mmap.fail", "always").unwrap();
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "cold");
+        assert!(
+            report.reason.contains("persistence off"),
+            "{}",
+            report.reason
+        );
+        assert!(store.region().is_none(), "heap fallback expected");
+        // still a fully working cache
+        store.set(b"k", b"v", 0, 0).unwrap();
+        assert_eq!(store.get(b"k").unwrap().data, b"v");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn stats_reset_and_flush_contract() {
+        let _s = serial();
+        let path = tmp("contract");
+        let s = settings(&path);
+        {
+            let (store, _) = open_or_cold(&s).unwrap();
+            store.set(b"k", b"v", 0, 0).unwrap();
+            write_manifest(&store, &s).unwrap();
+        }
+        let (store, _) = open_or_cold(&s).unwrap();
+        // recovery gauges are boot-scoped: `stats reset` zeroes window
+        // counters but leaves restart_* standing
+        store.get(b"k").unwrap();
+        store.reset_stats();
+        let snap = store.restart_snapshot();
+        assert_eq!(snap.state, "warm");
+        assert_eq!(snap.items_recovered, 1);
+        assert_eq!(store.stats().cmd_get, 0, "window counters reset");
+        // flush_all empties the cache; a following clean shutdown
+        // persists the emptiness (no stale items reappear)
+        store.flush_all();
+        write_manifest(&store, &s).unwrap();
+        let (store, report) = open_or_cold(&s).unwrap();
+        assert_eq!(report.state, "warm");
+        assert_eq!(report.items_recovered, 0, "flushed items must stay gone");
+        assert!(store.get(b"k").is_none());
+        cleanup(&path);
+    }
+}

@@ -82,10 +82,10 @@ use super::store::{
 use crate::config::Settings;
 use crate::slab::class::ClassStats;
 use crate::slab::policy::ChunkSizePolicy;
-use crate::slab::{SlabError, SlabStats};
+use crate::slab::{SlabError, SlabRegion, SlabStats};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Keys routed on the stack per multiget batch; longer batches spill
 /// to one transient allocation.
@@ -337,6 +337,50 @@ pub struct ShardedStore {
     /// tenant is defined. Also attached to every shard as its
     /// `TenantSink`, so per-tenant byte gauges track every store/free.
     tenants: Arc<crate::tenant::TenantRegistry>,
+    /// The mmap-backed page region behind `--memory-file` (`None` when
+    /// persistence is off). Shared by every shard's allocator; kept
+    /// here so shutdown can msync it and locate the manifest path.
+    region: Option<SlabRegion>,
+    /// Boot-scoped warm-restart gauges (`stats`: `restart_*` rows).
+    restart: RestartGauges,
+}
+
+/// How the current boot obtained its contents. Boot-scoped: set once
+/// during startup and deliberately **not** cleared by `stats reset`
+/// (an operator diagnosing a cold start must still see why after a
+/// monitoring agent resets the counters).
+struct RestartGauges {
+    /// 0 = persistence disabled, 1 = warm, 2 = cold.
+    state: AtomicU8,
+    items_recovered: AtomicU64,
+    items_discarded: AtomicU64,
+    duration_ms: AtomicU64,
+    /// Why a cold start degraded (empty for warm/disabled).
+    reason: Mutex<String>,
+}
+
+impl Default for RestartGauges {
+    fn default() -> Self {
+        RestartGauges {
+            state: AtomicU8::new(0),
+            items_recovered: AtomicU64::new(0),
+            items_discarded: AtomicU64::new(0),
+            duration_ms: AtomicU64::new(0),
+            reason: Mutex::new(String::new()),
+        }
+    }
+}
+
+/// Snapshot of the warm-restart gauges for the stats renderer.
+#[derive(Clone, Debug, Default)]
+pub struct RestartSnapshot {
+    /// `"disabled"`, `"warm"`, or `"cold"`.
+    pub state: &'static str,
+    /// Degradation reason (empty unless `state == "cold"`).
+    pub reason: String,
+    pub items_recovered: u64,
+    pub items_discarded: u64,
+    pub duration_ms: u64,
 }
 
 /// splitmix64 finalizer: a multiplicative fold in which every input
@@ -385,12 +429,37 @@ impl ShardedStore {
         shards: usize,
         clock: Clock,
     ) -> Result<Self, SlabError> {
+        Self::with_region(policy, page_size, mem_limit, use_cas, shards, clock, None)
+    }
+
+    /// [`ShardedStore::with`], with every shard's allocator drawing its
+    /// pages from a shared mmap-backed [`SlabRegion`] instead of the
+    /// heap (the `--memory-file` warm-restart substrate). The region's
+    /// free-extent list is shared, so its capacity must cover the sum
+    /// of per-shard page budgets (plus migration slack) — the restart
+    /// module sizes it.
+    pub(crate) fn with_region(
+        policy: ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+        use_cas: bool,
+        shards: usize,
+        clock: Clock,
+        region: Option<SlabRegion>,
+    ) -> Result<Self, SlabError> {
         assert!(shards > 0);
         let per_shard = (mem_limit / shards).max(page_size);
         let stores: Result<Vec<_>, SlabError> = (0..shards)
             .map(|_| {
-                KvStore::new(policy.clone(), page_size, per_shard, use_cas, clock.clone())
-                    .map(Shard::new)
+                KvStore::with_region(
+                    policy.clone(),
+                    page_size,
+                    per_shard,
+                    use_cas,
+                    clock.clone(),
+                    region.clone(),
+                )
+                .map(Shard::new)
             })
             .collect();
         let tenants = Arc::new(crate::tenant::TenantRegistry::new(page_size));
@@ -399,6 +468,8 @@ impl ShardedStore {
             page_size,
             migrate_batch: AtomicUsize::new(DEFAULT_MIGRATE_BATCH),
             tenants,
+            region,
+            restart: RestartGauges::default(),
         };
         let sink: Arc<dyn crate::store::store::TenantSink> = store.tenants.clone();
         for s in &store.shards {
@@ -1118,6 +1189,78 @@ impl ShardedStore {
     /// [`begin_reconfigure`]: ShardedStore::begin_reconfigure
     pub fn chunk_sizes(&self) -> Vec<usize> {
         self.shards[0].read().chunk_sizes().to_vec()
+    }
+
+    // ---------------------------------------------------- warm restart
+
+    /// The page size every shard's allocator carves (a construction
+    /// constant; the manifest persists it as part of the geometry).
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// The mmap-backed page region, when `--memory-file` is active.
+    pub fn region(&self) -> Option<&SlabRegion> {
+        self.region.as_ref()
+    }
+
+    /// Write guard on shard `i` — the restart module's door into each
+    /// shard for manifest export and recovery restore.
+    pub(crate) fn shard_write(&self, i: usize) -> RwLockWriteGuard<'_, KvStore> {
+        self.shards[i].write()
+    }
+
+    /// Read guard on shard `i` (manifest export).
+    pub(crate) fn shard_read(&self, i: usize) -> RwLockReadGuard<'_, KvStore> {
+        self.shards[i].read()
+    }
+
+    /// Record how this boot obtained its contents (set once by the
+    /// restart module during startup).
+    pub(crate) fn set_restart(
+        &self,
+        state: u8,
+        reason: &str,
+        items_recovered: u64,
+        items_discarded: u64,
+        duration_ms: u64,
+    ) {
+        self.restart.state.store(state, Ordering::Relaxed);
+        self.restart
+            .items_recovered
+            .store(items_recovered, Ordering::Relaxed);
+        self.restart
+            .items_discarded
+            .store(items_discarded, Ordering::Relaxed);
+        self.restart
+            .duration_ms
+            .store(duration_ms, Ordering::Relaxed);
+        if let Ok(mut r) = self.restart.reason.lock() {
+            r.clear();
+            r.push_str(reason);
+        }
+    }
+
+    /// The `restart_*` gauge block for `stats`. Boot-scoped: survives
+    /// `stats reset` and `flush_all` by design (see module docs on the
+    /// recovery-counter contract).
+    pub fn restart_snapshot(&self) -> RestartSnapshot {
+        RestartSnapshot {
+            state: match self.restart.state.load(Ordering::Relaxed) {
+                1 => "warm",
+                2 => "cold",
+                _ => "disabled",
+            },
+            reason: self
+                .restart
+                .reason
+                .lock()
+                .map(|r| r.clone())
+                .unwrap_or_default(),
+            items_recovered: self.restart.items_recovered.load(Ordering::Relaxed),
+            items_discarded: self.restart.items_discarded.load(Ordering::Relaxed),
+            duration_ms: self.restart.duration_ms.load(Ordering::Relaxed),
+        }
     }
 
     // ------------------------------------------- live reconfiguration

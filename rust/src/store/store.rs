@@ -8,8 +8,9 @@ use super::item::{hash_key, key_ok, total_item_size};
 use super::lru::ClassLru;
 use super::migrate::{MigrationGauges, MigrationState};
 use super::optimistic::{ArenaPub, BumpEvent, SeqStripes, TablePub};
+use crate::slab::class::ChunkLoc;
 use crate::slab::policy::ChunkSizePolicy;
-use crate::slab::{ChunkHandle, SlabAllocator, SlabError, SlabStats};
+use crate::slab::{ChunkHandle, PageBuf, SlabAllocator, SlabError, SlabRegion, SlabStats};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -476,7 +477,20 @@ impl KvStore {
         use_cas: bool,
         clock: Clock,
     ) -> Result<Self, SlabError> {
-        let alloc = SlabAllocator::new(&policy, page_size, mem_limit)?;
+        KvStore::with_region(policy, page_size, mem_limit, use_cas, clock, None)
+    }
+
+    /// Like [`KvStore::new`], but carving slab pages from an
+    /// mmap-backed region when one is attached (warm restart).
+    pub(crate) fn with_region(
+        policy: ChunkSizePolicy,
+        page_size: usize,
+        mem_limit: usize,
+        use_cas: bool,
+        clock: Clock,
+        region: Option<SlabRegion>,
+    ) -> Result<Self, SlabError> {
+        let alloc = SlabAllocator::with_region(&policy, page_size, mem_limit, region)?;
         let lrus = (0..alloc.chunk_sizes().len())
             .map(|_| ClassLru::new())
             .collect();
@@ -1850,6 +1864,150 @@ impl KvStore {
             let chunk = self.item_chunk(m);
             f(&chunk[..m.klen as usize], m.total as usize);
         }
+    }
+
+    // ---------------------------------------------------------- warm restart
+
+    /// This shard's CAS high-water mark (the manifest persists it so a
+    /// warm restart never re-issues a CAS an old client already saw).
+    pub(crate) fn cas_high_water(&self) -> u64 {
+        self.cas_counter
+    }
+
+    /// Seed the CAS counter from a persisted high-water mark.
+    pub(crate) fn set_cas_floor(&mut self, floor: u64) {
+        self.cas_counter = self.cas_counter.max(floor);
+    }
+
+    #[inline]
+    pub(crate) fn cas_enabled(&self) -> bool {
+        self.use_cas
+    }
+
+    /// Export every live item as a manifest record, in LRU order per
+    /// class (hot → warm → cold, most → least recent within each tier)
+    /// so recovery can rebuild identical recency chains. Keys and
+    /// values are *not* copied: they already live in the mapped chunks
+    /// the records point into. Requires a fully drained migration (the
+    /// manifest writer forces one first).
+    pub(crate) fn export_items(&self) -> Vec<super::restart::ItemRecord> {
+        debug_assert!(self.migration.is_none(), "export during migration");
+        let mut out = Vec::with_capacity(self.arena.len());
+        for lru in &self.lrus {
+            for id in lru.iter_all(&self.arena) {
+                let m = self.arena.get(id);
+                out.push(super::restart::ItemRecord {
+                    class: m.handle.class,
+                    page: m.handle.loc.page,
+                    chunk: m.handle.loc.chunk,
+                    klen: m.klen,
+                    vlen: m.vlen,
+                    flags: m.flags,
+                    exptime: m.exptime,
+                    time: m.time,
+                    cas: m.cas,
+                    total: m.total,
+                    tier: m.tier,
+                    fetched: m.fetched,
+                    tenant: m.tenant,
+                });
+            }
+        }
+        out
+    }
+
+    /// `(class, page_slot, region_offset)` of every occupied page — the
+    /// manifest's page map.
+    pub(crate) fn export_page_map(&self) -> Vec<(u16, u32, u64)> {
+        self.alloc.page_map()
+    }
+
+    /// Adopt a recovered page at its persisted `(class, slot)`.
+    pub(crate) fn restore_page(
+        &mut self,
+        class: u16,
+        slot: u32,
+        buf: PageBuf,
+        used: &[u32],
+    ) -> Result<(), String> {
+        self.alloc.restore_page(class, slot, buf, used)
+    }
+
+    /// Re-link one recovered item: the chunk bytes are already in place
+    /// (adopted with the page), so this rebuilds metadata only — arena
+    /// record, hash-chain entry, LRU link at its persisted tier, page
+    /// chain, hole accounting, tenant gauges. The caller has validated
+    /// the record against the page map and discarded expired items; the
+    /// key is re-read from the chunk and re-hashed. The size observer is
+    /// deliberately *not* fed: learner windows restart at zero (the
+    /// documented `stats reset` contract for recovery).
+    pub(crate) fn restore_item(&mut self, rec: &super::restart::ItemRecord) -> Result<(), String> {
+        let class = rec.class as usize;
+        if class >= self.lrus.len() {
+            return Err(format!("item in class {} of {}", rec.class, self.lrus.len()));
+        }
+        let chunk_size = self.alloc.chunk_size_of(rec.class);
+        let klen = rec.klen as usize;
+        if !(1..=super::item::MAX_KEY_LEN).contains(&klen)
+            || klen + rec.vlen as usize > chunk_size
+            || rec.total as usize > chunk_size
+        {
+            return Err(format!(
+                "item geometry corrupt (klen {klen}, vlen {}, total {}, chunk {chunk_size})",
+                rec.vlen, rec.total
+            ));
+        }
+        let handle = ChunkHandle {
+            class: rec.class,
+            loc: ChunkLoc {
+                page: rec.page,
+                chunk: rec.chunk,
+            },
+        };
+        let (hash, chunk_addr) = {
+            let chunk = self.alloc.chunk(handle);
+            (hash_key(&chunk[..klen]), chunk.as_ptr() as usize)
+        };
+        let seq = self.seq.clone();
+        let _g = seq.guard(hash);
+        let id = self.arena.insert(ItemMeta {
+            hash,
+            handle,
+            chunk_addr,
+            klen: rec.klen,
+            vlen: rec.vlen,
+            flags: rec.flags,
+            exptime: rec.exptime,
+            time: rec.time,
+            cas: rec.cas,
+            total: rec.total,
+            hnext: NIL,
+            prev: NIL,
+            next: NIL,
+            pg_prev: NIL,
+            pg_next: NIL,
+            tier: rec.tier,
+            fetched: rec.fetched,
+            stale: false,
+            win_sent: false,
+            gen: self.gen,
+            live: true,
+            tenant: rec.tenant,
+        });
+        self.table.insert(id, hash, &mut self.arena);
+        // records arrive reversed per tier, so push_head rebuilds the
+        // persisted order exactly; the tier tag is already on the item
+        match Tier::from_u8(rec.tier) {
+            Tier::Hot => self.lrus[class].hot.push_head(id, &mut self.arena),
+            Tier::Warm => self.lrus[class].warm.push_head(id, &mut self.arena),
+            Tier::Cold => self.lrus[class].cold.push_head(id, &mut self.arena),
+        }
+        self.page_link(id);
+        // the chunk was marked used by restore_page with zero requested
+        // bytes; account the item's true size so the hole identity holds
+        self.alloc.reaccount(handle, 0, rec.total as usize);
+        self.tenant_on_store(rec.tenant, rec.total as usize);
+        Ok(())
     }
 
     // ------------------------------------------------- live reconfiguration

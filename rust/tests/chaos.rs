@@ -611,3 +611,302 @@ fn shutdown_drains_within_bound_under_pathological_clients() {
     assert!(st.get(b"part").is_none(), "partial upload must be dropped");
     st.check_integrity().unwrap();
 }
+
+// ------------------------------------------------ warm-restart chaos
+//
+// These drive the real binary end-to-end: boot with `--memory-file`,
+// talk the memcached protocol over TCP, deliver real signals, and
+// assert on the next boot's `restart_*` stats. Each test owns a unique
+// temp directory and its own server processes, so — unlike the
+// failpoint schedules above — they need no [`serial`] guard.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+struct ServerProc {
+    child: Child,
+    addr: std::net::SocketAddr,
+    /// Startup stderr up to (and including) the listening line — the
+    /// `restart:` banner lives here.
+    banner: Vec<String>,
+}
+
+fn restart_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "slabforge-chaos-restart-{test}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spawn_server(memfile: &Path, extra_args: &[&str], envs: &[(&str, &str)]) -> ServerProc {
+    use std::io::BufRead;
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_slabforge"));
+    cmd.args([
+        "serve",
+        "--listen",
+        "127.0.0.1:0",
+        "--mem-limit",
+        "8388608",
+        "--shards",
+        "2",
+        "--memory-file",
+        memfile.to_str().unwrap(),
+    ])
+    .args(extra_args)
+    .stdin(Stdio::null())
+    .stdout(Stdio::null())
+    .stderr(Stdio::piped());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().unwrap();
+    let mut lines = std::io::BufReader::new(child.stderr.take().unwrap());
+    let mut banner = Vec::new();
+    let addr = loop {
+        let mut line = String::new();
+        if lines.read_line(&mut line).unwrap() == 0 {
+            let status = child.wait().unwrap();
+            panic!("server exited ({status}) before listening; stderr: {banner:#?}");
+        }
+        let line = line.trim_end().to_string();
+        let listening = line.strip_prefix("slabforge listening on ").map(|rest| {
+            rest.split_whitespace()
+                .next()
+                .unwrap()
+                .parse::<std::net::SocketAddr>()
+                .unwrap()
+        });
+        banner.push(line);
+        if let Some(addr) = listening {
+            break addr;
+        }
+    };
+    // keep draining so shutdown logging can never block the child on a
+    // full pipe; the assertions below use exit codes + the next boot
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        while matches!(lines.read_line(&mut line), Ok(n) if n > 0) {
+            line.clear();
+        }
+    });
+    ServerProc { child, addr, banner }
+}
+
+impl ServerProc {
+    fn client(&self) -> Client {
+        for _ in 0..200 {
+            if let Ok(c) = Client::connect(self.addr) {
+                return c;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("cannot connect to {}", self.addr);
+    }
+
+    fn booted(&self, how: &str) -> bool {
+        let prefix = format!("restart: {how}");
+        self.banner.iter().any(|l| l.starts_with(prefix.as_str()))
+    }
+
+    fn sigterm(&self) {
+        let st = Command::new("kill")
+            .args(["-TERM", &self.child.id().to_string()])
+            .status()
+            .unwrap();
+        assert!(st.success(), "kill -TERM failed");
+    }
+
+    /// Bounded wait for exit; SIGKILLs and panics past the deadline.
+    fn wait_exit(mut self) -> i32 {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(st) = self.child.try_wait().unwrap() {
+                return st.code().unwrap_or(-1);
+            }
+            if Instant::now() > deadline {
+                let _ = self.child.kill();
+                panic!("server did not exit within 30s");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// kill-9: no drain, no manifest — the dirty marker stays behind.
+    fn kill9(mut self) {
+        self.child.kill().unwrap();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn warm_restart_roundtrip_over_tcp() {
+    let dir = restart_dir("roundtrip");
+    let mem = dir.join("cache.mem");
+
+    // boot 1: explicit ("learned") geometry + a tenant, all via flags
+    let s1 = spawn_server(
+        &mem,
+        &["--slab-sizes", "200,333,480,1024,65536", "--tenants", "acme=acme"],
+        &[],
+    );
+    assert!(s1.booted("cold"), "fresh file must boot cold: {:?}", s1.banner);
+    let mut c = s1.client();
+    let mut want: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..200u32 {
+        // two keys land in the acme namespace; values cover every byte
+        let key = if i < 2 { format!("acme:k{i:03}") } else { format!("k{i:03}") };
+        let len = (17 + i as usize * 7) % 700 + 1;
+        let val: Vec<u8> = (0..len).map(|j| ((i as usize + j) % 256) as u8).collect();
+        c.set(&key, &val, i, 0).unwrap();
+        want.push((key, val));
+    }
+    let cas1 = c.gets("k010").unwrap().unwrap().cas.unwrap();
+    drop(c);
+    s1.sigterm();
+    assert_eq!(s1.wait_exit(), 0, "clean shutdown must persist the manifest");
+
+    // boot 2: NO --slab-sizes, NO --tenants — geometry, tenant rules,
+    // and every byte must come back from the memory file + manifest
+    let s2 = spawn_server(&mem, &[], &[]);
+    assert!(s2.booted("warm"), "{:?}", s2.banner);
+    let mut c = s2.client();
+    let stats = c.stats(None).unwrap();
+    assert_eq!(stats["restart_state"], "warm");
+    assert_eq!(stats["restart_items_recovered"], "200");
+    assert_eq!(stats["restart_items_discarded"], "0");
+    assert!(stats.contains_key("restart_duration_ms"), "{stats:?}");
+    for (key, val) in &want {
+        let got = c.get(key).unwrap().unwrap_or_else(|| panic!("{key} lost across restart"));
+        assert_eq!(&got.value, val, "{key} corrupted across restart");
+    }
+    // flags are part of the manifest
+    assert_eq!(c.get("k010").unwrap().unwrap().flags, 10);
+    // per-key CAS monotonicity across the restart
+    c.set("k010", b"overwritten", 0, 0).unwrap();
+    let cas2 = c.gets("k010").unwrap().unwrap().cas.unwrap();
+    assert!(cas2 > cas1, "CAS regressed across restart: {cas1} -> {cas2}");
+    // learned geometry came back: a fresh ~250 B value lands in the 333
+    // class that only the persisted explicit policy has
+    c.set("geom", &vec![b'g'; 250], 0, 0).unwrap();
+    let slabs = c.stats(Some("slabs")).unwrap();
+    assert!(
+        slabs.iter().any(|(k, v)| k.ends_with(":chunk_size") && v == "333"),
+        "persisted geometry missing from stats slabs: {slabs:?}"
+    );
+    // tenant registry restored without --tenants
+    let tenants = c.stats(Some("tenants")).unwrap();
+    assert!(
+        tenants.iter().any(|(k, v)| k.ends_with(":name") && v == "acme"),
+        "tenant registry not restored: {tenants:?}"
+    );
+    drop(c);
+    s2.sigterm();
+    assert_eq!(s2.wait_exit(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_nine_forces_cold_restart() {
+    let dir = restart_dir("kill9");
+    let mem = dir.join("cache.mem");
+    let s1 = spawn_server(&mem, &[], &[]);
+    let mut c = s1.client();
+    c.set("doomed", b"value", 0, 0).unwrap();
+    drop(c);
+    s1.kill9();
+    let s2 = spawn_server(&mem, &[], &[]);
+    assert!(s2.booted("cold"), "{:?}", s2.banner);
+    let mut c = s2.client();
+    let stats = c.stats(None).unwrap();
+    assert_eq!(stats["restart_state"], "cold");
+    assert!(stats["restart_reason"].contains("dirty"), "{stats:?}");
+    assert_eq!(stats["restart_items_recovered"], "0");
+    assert!(
+        c.get("doomed").unwrap().is_none(),
+        "a crashed run's data must never be served"
+    );
+    drop(c);
+    s2.sigterm();
+    assert_eq!(s2.wait_exit(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_corruption_and_geometry_mismatch_force_cold() {
+    let dir = restart_dir("invalidate");
+    let mem = dir.join("cache.mem");
+    let meta = {
+        let mut m = mem.clone().into_os_string();
+        m.push(".meta");
+        PathBuf::from(m)
+    };
+    let cycle = |args: &[&str]| {
+        let s = spawn_server(&mem, args, &[]);
+        let mut c = s.client();
+        c.set("k", b"v", 0, 0).unwrap();
+        drop(c);
+        s.sigterm();
+        assert_eq!(s.wait_exit(), 0);
+    };
+
+    // flip one manifest body byte: checksum must reject it
+    cycle(&[]);
+    let mut raw = std::fs::read(&meta).unwrap();
+    let last = raw.len() - 1;
+    raw[last] ^= 0xFF;
+    std::fs::write(&meta, &raw).unwrap();
+    let s = spawn_server(&mem, &[], &[]);
+    assert!(s.booted("cold"), "{:?}", s.banner);
+    let mut c = s.client();
+    let stats = c.stats(None).unwrap();
+    assert_eq!(stats["restart_state"], "cold");
+    assert!(stats["restart_reason"].contains("checksum"), "{stats:?}");
+    assert!(c.get("k").unwrap().is_none());
+    drop(c);
+    s.sigterm();
+    assert_eq!(s.wait_exit(), 0);
+
+    // shard count changed between runs: geometry check must refuse
+    cycle(&[]);
+    let s = spawn_server(&mem, &["--shards", "4"], &[]);
+    assert!(s.booted("cold"), "{:?}", s.banner);
+    let mut c = s.client();
+    let stats = c.stats(None).unwrap();
+    assert_eq!(stats["restart_state"], "cold");
+    assert!(stats["restart_reason"].contains("shard count"), "{stats:?}");
+    drop(c);
+    s.sigterm();
+    assert_eq!(s.wait_exit(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_write_failure_in_subprocess_degrades_next_boot_to_cold() {
+    let dir = restart_dir("fp-write");
+    let mem = dir.join("cache.mem");
+    // the failpoint rides the documented env var into the subprocess
+    let s1 = spawn_server(
+        &mem,
+        &[],
+        &[("SLABFORGE_FAILPOINTS", "restart.manifest.write_fail=always")],
+    );
+    let mut c = s1.client();
+    c.set("k", b"v", 0, 0).unwrap();
+    drop(c);
+    s1.sigterm();
+    assert_eq!(s1.wait_exit(), 1, "failed manifest write must exit nonzero");
+    let s2 = spawn_server(&mem, &[], &[]);
+    assert!(s2.booted("cold"), "{:?}", s2.banner);
+    let mut c = s2.client();
+    let stats = c.stats(None).unwrap();
+    assert_eq!(stats["restart_state"], "cold");
+    assert!(stats["restart_reason"].contains("dirty"), "{stats:?}");
+    assert!(c.get("k").unwrap().is_none());
+    drop(c);
+    s2.sigterm();
+    assert_eq!(s2.wait_exit(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

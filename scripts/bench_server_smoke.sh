@@ -3,8 +3,9 @@
 # JSON artifact at the repo root so successive PRs have a throughput
 # trajectory to diff (BENCH_server.json rows carry ops_per_sec per
 # workload: pipelined sets, roundtrip gets, pipelined gets, multigets,
-# connection scaling, and the 256-connection reactor sweep — rows that
-# sweep socket counts also carry a "connections" dimension).
+# connection scaling, the 256-connection reactor sweep, and the
+# warm-restart recovery row (restart_warm_ms / restart_items_recovered) —
+# rows that sweep socket counts also carry a "connections" dimension).
 #
 # Usage: bench_server_smoke.sh [--smoke]
 #   --smoke   shrink the workload (SLABFORGE_BENCH_SMOKE=1) so the full
